@@ -1,0 +1,62 @@
+//! Fig 8: router resource utilization (registers, BRAM/LUTRAM, LUTs) for
+//! 3-/4-port, buffered/bufferless routers, width 32..256.
+
+use fpga_mt::bench_support::{bench, check, header};
+use fpga_mt::estimate::{router_resources, RouterConfig};
+use fpga_mt::util::table::Table;
+
+fn main() {
+    header(
+        "Fig 8 — router resource utilization",
+        "3-port saves ~40% FFs / ~50% LUTs vs 4-port; buffered adds LUT/FF + BRAM/LUTRAM",
+    );
+    let mut t = Table::new(vec!["config", "width", "LUT", "LUTRAM", "FF", "BRAM"]);
+    for &buffered in &[false, true] {
+        for ports in [3u32, 4] {
+            for w in [32u32, 64, 128, 256] {
+                let cfg = if buffered {
+                    RouterConfig::buffered(ports, w)
+                } else {
+                    RouterConfig::bufferless(ports, w)
+                };
+                let r = router_resources(&cfg);
+                t.row(vec![
+                    format!("{}p {}", ports, if buffered { "buf" } else { "nobuf" }),
+                    w.to_string(),
+                    r.lut.to_string(),
+                    r.lutram.to_string(),
+                    r.ff.to_string(),
+                    r.bram.to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // Shape checks against the paper's claims.
+    let l3 = router_resources(&RouterConfig::bufferless(3, 32));
+    let l4 = router_resources(&RouterConfig::bufferless(4, 32));
+    check("anchor: 3-port 32b = 305 LUTs", l3.lut == 305);
+    check("anchor: 4-port 32b ~= 491 LUTs", (l4.lut as i64 - 491).abs() <= 1);
+    let mut lut_ok = true;
+    let mut ff_ok = true;
+    for w in [32u32, 64, 128, 256] {
+        let a = router_resources(&RouterConfig::bufferless(3, w));
+        let b = router_resources(&RouterConfig::bufferless(4, w));
+        lut_ok &= (0.35..=0.55).contains(&(1.0 - a.lut as f64 / b.lut as f64));
+        ff_ok &= (0.3..=0.52).contains(&(1.0 - a.ff as f64 / b.ff as f64));
+    }
+    check("3-port saves ~50% LUTs across widths", lut_ok);
+    check("3-port saves ~40% FFs across widths", ff_ok);
+
+    bench("estimate::router_resources full sweep", 10, 100, || {
+        for &b in &[false, true] {
+            for p in [3u32, 4] {
+                for w in [32u32, 64, 128, 256] {
+                    let cfg = if b { RouterConfig::buffered(p, w) } else { RouterConfig::bufferless(p, w) };
+                    std::hint::black_box(router_resources(&cfg));
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,52 @@
+//! Fig 9: router power (logic / signal / clock / BRAM) across configs.
+
+use fpga_mt::bench_support::{check, header};
+use fpga_mt::estimate::{router_power_mw, RouterConfig};
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Fig 9 — power consumption",
+        "4-port bufferless up to 2.7x of 3-port; buffered up to 3.11x of bufferless (led by logic)",
+    );
+    let mut t = Table::new(vec!["config", "width", "logic", "signal", "clock", "bram", "total mW"]);
+    for &buffered in &[false, true] {
+        for ports in [3u32, 4] {
+            for w in [32u32, 64, 128, 256] {
+                let cfg = if buffered {
+                    RouterConfig::buffered(ports, w)
+                } else {
+                    RouterConfig::bufferless(ports, w)
+                };
+                let p = router_power_mw(&cfg);
+                t.row(vec![
+                    format!("{}p {}", ports, if buffered { "buf" } else { "nobuf" }),
+                    w.to_string(),
+                    fnum(p.logic_mw),
+                    fnum(p.signal_mw),
+                    fnum(p.clock_mw),
+                    fnum(p.bram_mw),
+                    fnum(p.total_mw()),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    let mut max43: f64 = 0.0;
+    let mut maxbuf: f64 = 0.0;
+    for w in [32u32, 64, 128, 256] {
+        let p3 = router_power_mw(&RouterConfig::bufferless(3, w)).total_mw();
+        let p4 = router_power_mw(&RouterConfig::bufferless(4, w)).total_mw();
+        max43 = max43.max(p4 / p3);
+        for p in [3u32, 4] {
+            let b = router_power_mw(&RouterConfig::buffered(p, w)).total_mw();
+            let nb = router_power_mw(&RouterConfig::bufferless(p, w)).total_mw();
+            maxbuf = maxbuf.max(b / nb);
+        }
+    }
+    println!("\nmax 4-port/3-port ratio: {max43:.2} (paper: up to 2.7x)");
+    println!("max buffered/bufferless ratio: {maxbuf:.2} (paper: up to 3.11x)");
+    check("4p/3p ratio in (1.5, 2.75]", max43 > 1.5 && max43 <= 2.75);
+    check("buffered ratio in (2.0, 3.2]", maxbuf > 2.0 && maxbuf <= 3.2);
+}

@@ -1,0 +1,52 @@
+//! Fig 10: maximum frequency vs data width, ours vs buffered vs LinkBlaze
+//! Fast/Flex (+ CONNECT/Hoplite published points).
+
+use fpga_mt::bench_support::{check, header};
+use fpga_mt::device::Device;
+use fpga_mt::estimate::{router_fmax_mhz, RouterConfig, BASELINES};
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Fig 10 — router Fmax vs data width",
+        "1.5 GHz (3-port) / 1.0 GHz (4-port) at 32b; ~1 GHz for 64-256b; ~2x the state of the art",
+    );
+    let dev = Device::vu9p();
+    let mut t = Table::new(vec!["design", "32b", "64b", "128b", "256b"]);
+    for ports in [3u32, 4] {
+        for &buffered in &[false, true] {
+            let cells: Vec<String> = [32u32, 64, 128, 256]
+                .iter()
+                .map(|&w| {
+                    let cfg = if buffered {
+                        RouterConfig::buffered(ports, w)
+                    } else {
+                        RouterConfig::bufferless(ports, w)
+                    };
+                    fnum(router_fmax_mhz(&cfg, &dev))
+                })
+                .collect();
+            let mut row = vec![format!("{}p {}", ports, if buffered { "buf" } else { "nobuf" })];
+            row.extend(cells);
+            t.row(row);
+        }
+    }
+    for b in BASELINES {
+        let mut row = vec![b.name.to_string()];
+        row.extend([32u32, 64, 128, 256].iter().map(|&w| fnum(b.fmax_at_width(w))));
+        t.row(row);
+    }
+    t.print();
+
+    let f3 = router_fmax_mhz(&RouterConfig::bufferless(3, 32), &dev);
+    let f4 = router_fmax_mhz(&RouterConfig::bufferless(4, 32), &dev);
+    check("3-port anchor ~1.5 GHz", (f3 - 1500.0).abs() < 10.0);
+    check("4-port anchor ~1.0 GHz", (f4 - 1000.0).abs() < 10.0);
+    check("~2x Hoplite (638 MHz)", f3 / 638.0 > 2.0);
+    check(">4x CONNECT (313 MHz)", f3 / 313.0 > 4.0);
+    let ok_band = [64u32, 128, 256].iter().all(|&w| {
+        let f = router_fmax_mhz(&RouterConfig::bufferless(4, w), &dev);
+        (750.0..1500.0).contains(&f)
+    });
+    check("'about 1 GHz' for 64-256b", ok_band);
+}

@@ -1,0 +1,53 @@
+//! Fig 11: bandwidth per wire and per LUT vs CONNECT / Hoplite / LinkBlaze.
+
+use fpga_mt::bench_support::{check, header};
+use fpga_mt::device::Device;
+use fpga_mt::estimate::{bw_per_lut_mbps, bw_per_wire_mbps, link_bandwidth_gbps, RouterConfig, BASELINES};
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Fig 11 — bandwidth comparison (32-bit routers)",
+        "bw/wire: 6.3x CONNECT, 2.57x Hoplite & LB-Flex, 1.65x LB-Fast; bw/LUT: Hoplite & LB-Fast win",
+    );
+    let dev = Device::vu9p();
+    let mut t = Table::new(vec!["design", "bw/wire Mb/s", "bw/LUT Mb/s"]);
+    for ports in [3u32, 4] {
+        let cfg = RouterConfig::bufferless(ports, 32);
+        t.row(vec![
+            format!("ours {ports}-port"),
+            fnum(bw_per_wire_mbps(&cfg, &dev)),
+            fnum(bw_per_lut_mbps(&cfg, &dev)),
+        ]);
+    }
+    for b in BASELINES {
+        t.row(vec![b.name.to_string(), fnum(b.bw_per_wire_mbps()), fnum(b.bw_per_lut_mbps())]);
+    }
+    t.print();
+
+    let cfg = RouterConfig::bufferless(3, 32);
+    let ours_w = bw_per_wire_mbps(&cfg, &dev);
+    let ours_l = bw_per_lut_mbps(&cfg, &dev);
+    let r = |name: &str| {
+        BASELINES.iter().find(|b| b.name == name).unwrap()
+    };
+    check(
+        "6.3x CONNECT bw/wire",
+        (ours_w / r("CONNECT").bw_per_wire_mbps() - 6.3).abs() < 0.35,
+    );
+    check(
+        "2.57x Hoplite bw/wire",
+        (ours_w / r("Hoplite").bw_per_wire_mbps() - 2.57).abs() < 0.2,
+    );
+    check(
+        "1.65x LinkBlaze Fast bw/wire",
+        (ours_w / r("LinkBlaze Fast").bw_per_wire_mbps() - 1.65).abs() < 0.15,
+    );
+    check("Hoplite wins bw/LUT", r("Hoplite").bw_per_lut_mbps() > ours_l);
+    check("LB-Fast wins bw/LUT", r("LinkBlaze Fast").bw_per_lut_mbps() > ours_l);
+    println!(
+        "\ndeployed NoC link bandwidth: {} Gbps (paper §V-D1: 25.6 Gbps)",
+        link_bandwidth_gbps(32, 800.0)
+    );
+    check("25.6 Gbps headline", (link_bandwidth_gbps(32, 800.0) - 25.6).abs() < 1e-9);
+}

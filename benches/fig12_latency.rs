@@ -1,0 +1,47 @@
+//! Fig 12: average latency (a) and waiting time (b) per injection rate on
+//! the 3-port router, with and without collision — cycle-accurate sim.
+
+use fpga_mt::bench_support::{bench, check, header};
+use fpga_mt::noc::traffic::{fig12_sweep, sweep_no_collision};
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Fig 12 — latency & waiting vs injection rate (3-port router)",
+        "@0.6 no-collision: latency 3 cyc, waiting 1.66 cyc; collision waiting ~2x (stable band)",
+    );
+    let cycles = 60_000;
+    let rates = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+    let (nc, coll) = fig12_sweep(&rates, cycles, 42);
+    let mut t = Table::new(vec!["rate", "lat nc", "wait nc", "lat coll", "wait coll"]);
+    for (a, b) in nc.iter().zip(&coll) {
+        let sat = if b.injection_rate >= 0.5 { " (sat)" } else { "" };
+        t.row(vec![
+            format!("{:.1}", a.injection_rate),
+            fnum(a.avg_latency),
+            fnum(a.avg_waiting),
+            format!("{}{}", fnum(b.avg_latency), sat),
+            format!("{}{}", fnum(b.avg_waiting), sat),
+        ]);
+    }
+    t.print();
+
+    let p06 = nc.iter().find(|p| (p.injection_rate - 0.6).abs() < 1e-9).unwrap();
+    check("latency @0.6 ~ 3 cycles", (p06.avg_latency - 3.0).abs() < 0.5);
+    check("waiting @0.6 ~ 1.66 cycles", (p06.avg_waiting - 1.66).abs() < 0.5);
+    let ratios: Vec<f64> = nc
+        .iter()
+        .zip(&coll)
+        .filter(|(a, _)| a.injection_rate >= 0.3 && a.injection_rate <= 0.45)
+        .map(|(a, b)| b.avg_waiting / a.avg_waiting)
+        .collect();
+    let avg_ratio = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+    println!("\ncollision/no-collision waiting ratio (stable band): {avg_ratio:.2}");
+    check("collision waiting ~2x", (1.4..=3.5).contains(&avg_ratio));
+    let monotone = nc.windows(2).all(|w| w[1].avg_waiting >= w[0].avg_waiting - 0.05);
+    check("waiting grows with injection rate", monotone);
+
+    bench("noc sim: 60k cycles @0.6 no-collision", 1, 10, || {
+        std::hint::black_box(sweep_no_collision(0.6, cycles, 7));
+    });
+}

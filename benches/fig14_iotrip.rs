@@ -1,0 +1,41 @@
+//! Fig 14: IO trip time per accelerator, multi-tenant vs directIO.
+
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::bench_support::{bench, check, header};
+use fpga_mt::cloud::{fig14_io_trips, IoConfig};
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Fig 14 — IO trip comparison",
+        "no significant difference: e.g. AES 31 µs multi-tenant vs 29 µs single-tenant; penalty = a few µs",
+    );
+    let accels: Vec<(&str, u32)> =
+        CASE_STUDY.iter().map(|a| (a.display, (a.vr / 2 + 1) as u32)).collect();
+    let cfg = IoConfig::default();
+    let rows = fig14_io_trips(&accels, 20_000, &cfg, 7);
+    let mut t = Table::new(vec!["accelerator", "directIO µs", "multi-tenant µs", "penalty µs"]);
+    for r in &rows {
+        t.row(vec![
+            r.accel.clone(),
+            fnum(r.direct_us),
+            fnum(r.multi_us),
+            fnum(r.multi_us - r.direct_us),
+        ]);
+    }
+    t.print();
+
+    let all_close = rows.iter().all(|r| {
+        (26.0..33.0).contains(&r.direct_us)
+            && (28.0..36.0).contains(&r.multi_us)
+            && r.multi_us - r.direct_us < 6.0
+    });
+    check("both schemes ~28-32 µs, penalty single-digit µs", all_close);
+    let avg_penalty =
+        rows.iter().map(|r| r.multi_us - r.direct_us).sum::<f64>() / rows.len() as f64;
+    println!("\naverage multi-tenant penalty: {avg_penalty:.1} µs for 6x device utilization");
+
+    bench("fig14 model: 6 accels x 20k trips", 1, 5, || {
+        std::hint::black_box(fig14_io_trips(&accels, 20_000, &cfg, 7));
+    });
+}

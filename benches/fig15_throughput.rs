@@ -1,0 +1,39 @@
+//! Fig 15: streaming throughput, VIs colocated with the FPGA host (a) and
+//! remote over Ethernet (b), payloads 100-400 KB.
+
+use fpga_mt::bench_support::{check, header};
+use fpga_mt::cloud::{IoConfig, Link, Scheme};
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Fig 15 — throughput study",
+        "local: up to ~7 Gb/s at 400 KB (2x the [27] baseline); remote: up to 3x lower (Ethernet-bound)",
+    );
+    let cfg = IoConfig::default();
+    let mut t = Table::new(vec!["payload KB", "local Gb/s", "remote Gb/s", "loss x"]);
+    let mut local400 = 0.0;
+    let mut remote400 = 0.0;
+    for kb in [100u64, 150, 200, 250, 300, 350, 400] {
+        let bytes = kb * 1024;
+        let l = cfg.stream_gbps(Scheme::MultiTenant, bytes, &Link::local());
+        let r = cfg.stream_gbps(Scheme::MultiTenant, bytes, &Link::testbed_ethernet());
+        if kb == 400 {
+            local400 = l;
+            remote400 = r;
+        }
+        t.row(vec![kb.to_string(), fnum(l), fnum(r), fnum(l / r)]);
+    }
+    t.print();
+
+    check("local reaches ~7 Gb/s at 400 KB", (6.5..8.0).contains(&local400));
+    check("remote loses up to ~3x", (2.2..4.2).contains(&(local400 / remote400)));
+    check(
+        "2x the sw<->hw throughput reported in [27] (~3.5 Gb/s)",
+        local400 / 3.5 > 1.8 && local400 / 3.5 < 2.4,
+    );
+    println!(
+        "\nnote: the paper quotes a 100 Mb/s Ethernet spec yet reports only ~3x loss from ~7 Gb/s;\n\
+         we model the observed behaviour (~3 Gb/s effective link). See EXPERIMENTS.md."
+    );
+}

@@ -1,0 +1,53 @@
+//! Table I + Fig 13: VR allocation, per-accelerator resource utilization,
+//! and the case-study placement, with the §V-D1 utilization headlines.
+
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::bench_support::{check, header};
+use fpga_mt::device::{Device, Resources};
+use fpga_mt::placer;
+use fpga_mt::util::table::Table;
+
+fn main() {
+    header(
+        "Table I / Fig 13 — case study: 6 accelerators from 5 VIs on one device",
+        "NoC+apps ~1.71% of CLB area; VR5-sized jobs: ~5 on a 7-series, hundreds on a VU9P; 6x utilization",
+    );
+    let mut t = Table::new(vec!["accel (VR->VI)", "LUT", "LUTRAM", "FF", "DSP", "BRAM"]);
+    for a in &CASE_STUDY {
+        t.row(vec![
+            format!("{} (VR{}->VI{})", a.display, a.vr + 1, a.vi),
+            a.resources.lut.to_string(),
+            a.resources.lutram.to_string(),
+            a.resources.ff.to_string(),
+            a.resources.dsp.to_string(),
+            a.resources.bram.to_string(),
+        ]);
+    }
+    t.print();
+
+    let device = Device::vu9p();
+    let (_, fp) = placer::case_study_floorplan(&device).unwrap();
+    let labels: Vec<(usize, String)> =
+        CASE_STUDY.iter().map(|a| (a.vr, format!("{} (VI{})", a.display, a.vi))).collect();
+    println!("\n{}", placer::ascii::render(&device, &fp, &labels));
+
+    // §V-D1 claims.
+    let vr5 = fp.pblocks.get(fp.vr_pb[4]);
+    check("VR pblock = 1121 CLBs = 8968 LUTs", vr5.rect.clbs() == 1121 && vr5.capacity().lut == 8968);
+    check("NoC < 1% of chip", fp.noc_clb_fraction(&device) < 0.01);
+
+    let total_used: Resources =
+        CASE_STUDY.iter().fold(Resources::ZERO, |acc, a| acc + a.resources);
+    let noc_luts = 2 * 305 + 491; // two 3-port + one 4-port router
+    let frac = (total_used.lut + noc_luts) as f64 / device.capacity.lut as f64;
+    println!("NoC + applications LUT share: {:.2}% (paper: 1.71% of CLB area)", frac * 100.0);
+    check("NoC+apps ~1-2% of device", (0.005..0.025).contains(&frac));
+
+    let vr5_job = Resources::new(8968, 0, 0, 0, 0);
+    let on_small = Device::artix7_class().max_instances(&vr5_job);
+    let on_vu9p = device.max_instances(&vr5_job);
+    println!("VR5-sized instances: 7-series-class {on_small}, VU9P {on_vu9p}");
+    check("7-series fits ~5", (3..=8).contains(&on_small));
+    check("VU9P fits >100", on_vu9p > 100);
+    check("6 workloads / 5 tenants on one device (6x utilization)", CASE_STUDY.len() == 6);
+}

@@ -1,0 +1,35 @@
+//! Table II: cloud-FPGA architecture comparison (capabilities + IO trip).
+
+use fpga_mt::bench_support::{check, header};
+use fpga_mt::cloud::compare::table2;
+use fpga_mt::cloud::IoConfig;
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() {
+    header(
+        "Table II — cloud FPGA architecture comparison",
+        "ours: the only scheme with realloc + elasticity + on-chip com at ~30 µs (best tradeoff)",
+    );
+    let rows = table2(&IoConfig::default(), 3);
+    let mut t = Table::new(vec!["scheme", "realloc", "elasticity", "on-chip", "IO trip µs"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.to_string(),
+            if r.runtime_realloc { "Yes" } else { "No" }.to_string(),
+            if r.hw_elasticity { "Yes" } else { "No" }.to_string(),
+            if r.on_chip_com { "Yes" } else { "No" }.to_string(),
+            r.io_trip_us.map(fnum).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+
+    let ours = rows.iter().find(|r| r.name == "Our Work").unwrap();
+    check("ours has all three capabilities", ours.runtime_realloc && ours.hw_elasticity && ours.on_chip_com);
+    check("ours ~30 µs", (28.0..34.0).contains(&ours.io_trip_us.unwrap()));
+    check(
+        "orders of magnitude under PR-manager schemes [28]/[29]",
+        rows.iter()
+            .filter(|r| r.name.contains("[28]") || r.name.contains("[29]"))
+            .all(|r| r.io_trip_us.unwrap() / ours.io_trip_us.unwrap() > 100.0),
+    );
+}

@@ -1,0 +1,96 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the paper's §V-D case study on
+//! the full stack — 5 VIs, 6 VRs, 6 real accelerators (AOT-compiled HLO via
+//! PJRT), concurrent tenants through the threaded engine, IO-trip and
+//! throughput measurements, and the Fig 13 placement map.
+//!
+//! Run: `make artifacts && cargo run --release --example multi_tenant_case_study`
+
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::cloud::{fig14_io_trips, IoConfig, Link, Scheme};
+use fpga_mt::coordinator::{server::Engine, System};
+use fpga_mt::device::Device;
+use fpga_mt::placer;
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // ---- Fig 13: placement of the 6 jobs ----
+    let device = Device::vu9p();
+    let (_, fp) = placer::case_study_floorplan(&device)?;
+    let labels: Vec<(usize, String)> =
+        CASE_STUDY.iter().map(|a| (a.vr, format!("{} (VI{})", a.display, a.vi))).collect();
+    println!("{}", placer::ascii::render(&device, &fp, &labels));
+    println!(
+        "NoC share: {:.2}% of CLBs; NoC+jobs envelope: {:.2}%\n",
+        fp.noc_clb_fraction(&device) * 100.0,
+        fp.total_clb_fraction(&device) * 100.0
+    );
+
+    // ---- concurrent multi-tenant serving (real compute) ----
+    let dir2 = dir.clone();
+    let engine = Engine::start(move || System::case_study(&dir2))?;
+    let mut joins = Vec::new();
+    let rounds = 12;
+    for spec in CASE_STUDY.iter() {
+        let h = engine.handle();
+        let (vi, vr, name) = (spec.vi, spec.vr, spec.name);
+        joins.push(std::thread::spawn(move || {
+            let payload: Vec<u8> = (0..256u32).map(|i| (i * 31 % 256) as u8).collect();
+            let mut compute_us = 0.0;
+            let mut io_us = 0.0;
+            let t0 = std::time::Instant::now();
+            for _ in 0..rounds {
+                let resp = h.call(vi, vr, payload.clone()).expect(name);
+                compute_us += resp.timing.compute_us;
+                io_us += resp.timing.io_us;
+            }
+            (name, io_us / rounds as f64, compute_us / rounds as f64, t0.elapsed())
+        }));
+    }
+    let mut t = Table::new(vec!["accel", "mean io µs (model)", "mean compute µs (real)", "wall ms"]);
+    for j in joins {
+        let (name, io, comp, wall) = j.join().unwrap();
+        t.row(vec![
+            name.to_string(),
+            fnum(io),
+            fnum(comp),
+            fnum(wall.as_secs_f64() * 1e3),
+        ]);
+    }
+    let metrics = engine.stop();
+    t.print();
+    println!(
+        "\nengine: {} requests, mean total {:.1} µs (model), ingress {:.2} Gb/s (model)\n",
+        metrics.requests,
+        metrics.total_us.mean(),
+        metrics.throughput_gbps()
+    );
+
+    // ---- Fig 14: IO trip multi-tenant vs directIO ----
+    let accels: Vec<(&str, u32)> =
+        CASE_STUDY.iter().map(|a| (a.display, (a.vr / 2 + 1) as u32)).collect();
+    let rows = fig14_io_trips(&accels, 4000, &IoConfig::default(), 7);
+    let mut t = Table::new(vec!["accelerator", "directIO µs", "multi-tenant µs"]);
+    for r in &rows {
+        t.row(vec![r.accel.clone(), fnum(r.direct_us), fnum(r.multi_us)]);
+    }
+    t.print();
+    println!(
+        "-> 6 workloads share one device (6x utilization) for ~{:.1} µs extra per trip\n",
+        rows.iter().map(|r| r.multi_us - r.direct_us).sum::<f64>() / rows.len() as f64
+    );
+
+    // ---- Fig 15: streaming throughput ----
+    let cfg = IoConfig::default();
+    let mut t = Table::new(vec!["payload KB", "local Gb/s", "remote Gb/s"]);
+    for kb in [100u64, 200, 300, 400] {
+        t.row(vec![
+            kb.to_string(),
+            fnum(cfg.stream_gbps(Scheme::MultiTenant, kb * 1024, &Link::local())),
+            fnum(cfg.stream_gbps(Scheme::MultiTenant, kb * 1024, &Link::testbed_ethernet())),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

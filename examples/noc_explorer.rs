@@ -1,0 +1,82 @@
+//! NoC design-space explorer: sweep topology flavor, router count, data
+//! width and injection rate; print latency/waiting/area/Fmax for each
+//! point. The tool a cloud provider would use to size the shell (§IV-A:
+//! "the size and shape of each VR is left to the cloud provider's choice").
+//!
+//! Run: `cargo run --release --example noc_explorer [--cycles 40000]`
+
+use fpga_mt::device::Device;
+use fpga_mt::estimate::{router_fmax_mhz, router_resources, RouterConfig};
+use fpga_mt::noc::{traffic, NocSim, Topology};
+use fpga_mt::util::cli::Args;
+use fpga_mt::util::table::{fnum, Table};
+use fpga_mt::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cycles = args.get_u64("cycles", 40_000);
+    let device = Device::vu9p();
+
+    // ---- single-router microbench across widths (Fig 10/12 combined) ----
+    println!("== router design points ==");
+    let mut t = Table::new(vec!["ports", "width", "LUT", "Fmax MHz", "lat@0.3", "lat@0.6"]);
+    for ports in [3u32, 4] {
+        for width in [32u32, 64, 128, 256] {
+            let cfg = RouterConfig::bufferless(ports, width);
+            let l3 = traffic::sweep_no_collision(0.3, cycles, 5).avg_latency;
+            let l6 = traffic::sweep_no_collision(0.6, cycles, 5).avg_latency;
+            t.row(vec![
+                ports.to_string(),
+                width.to_string(),
+                router_resources(&cfg).lut.to_string(),
+                fnum(router_fmax_mhz(&cfg, &device)),
+                fnum(l3),
+                fnum(l6),
+            ]);
+        }
+    }
+    t.print();
+
+    // ---- network-level sweep: flavor x routers, uniform random traffic ----
+    println!("\n== network sweep (uniform random traffic, rate 0.2/VR) ==");
+    let mut t = Table::new(vec!["flavor", "routers", "VRs", "mean lat", "p-like max", "delivered"]);
+    for (name, topo) in [
+        ("single-column 3", Topology::single_column(3)),
+        ("single-column 6", Topology::single_column(6)),
+        ("double-column 6", Topology::double_column(6)),
+        ("double-column 12", Topology::double_column(12)),
+        ("multi-column 12x3", Topology::multi_column(12, 3)),
+    ] {
+        let n_vrs = topo.n_vrs();
+        let n_routers = topo.n_routers();
+        let mut sim = NocSim::new(topo);
+        for vr in 0..n_vrs {
+            sim.assign_vr(vr, 42);
+        }
+        let mut rng = Rng::new(7);
+        for _ in 0..cycles / 4 {
+            for src in 0..n_vrs {
+                if rng.chance(0.2) {
+                    let mut dst = rng.index(n_vrs);
+                    if dst == src {
+                        dst = (dst + 1) % n_vrs;
+                    }
+                    let h = sim.header_for(42, dst);
+                    sim.send(src, h, vec![], 0);
+                }
+            }
+            sim.step();
+        }
+        sim.drain(cycles);
+        t.row(vec![
+            name.to_string(),
+            n_routers.to_string(),
+            n_vrs.to_string(),
+            fnum(sim.stats.latency.mean()),
+            fnum(sim.stats.latency.max()),
+            sim.stats.delivered.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

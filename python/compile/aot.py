@@ -1,0 +1,58 @@
+"""AOT compiler: lower every Layer-2 model to HLO *text* artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the Rust `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only name]
+Writes  <out-dir>/<name>.hlo.txt and <out-dir>/manifest.txt.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)  # print_large_constants: the 0.5.1 text parser reads elided constants as zeros
+
+
+def lower_model(name: str) -> str:
+    fn, specs = MODELS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single model")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else sorted(MODELS)
+    manifest = []
+    for name in names:
+        text = lower_model(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, specs = MODELS[name]
+        shapes = ";".join("x".join(map(str, s.shape)) or "scalar" for s in specs)
+        manifest.append(f"{name} inputs={len(specs)} shapes={shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (+ plain-jnp AES/Huffman stages).
+
+Every kernel here is the compute hot-spot of one of the paper's six
+case-study accelerators (Table I), authored for TPU idioms but lowered with
+``interpret=True`` so the AOT HLO runs on the CPU PJRT client (see
+DESIGN.md section on hardware adaptation). ``ref.py`` holds the pure-numpy
+oracles.
+"""
+
+from . import aes, canny, fft, fir, fpu, huffman, ref  # noqa: F401

@@ -1,0 +1,77 @@
+"""FFT accelerator (Table I: "FFT — heavily used in signal processing").
+
+Hardware adaptation: an RTL FFT is a butterfly pipeline; the TPU-idiomatic
+equivalent for fixed small transform sizes is a DFT-by-matmul against
+precomputed twiddle matrices, which maps straight onto the MXU systolic
+array (bf16/f32 matmul), exactly the kind of rethinking DESIGN.md's
+hardware-adaptation section calls for. The Pallas kernel is a classic
+VMEM-tiled matmul with a grid over (M, N, K) blocks and accumulation in
+the output tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile accumulating over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 8, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Tiled Pallas matmul: f32[m,k] @ f32[k,n] -> f32[m,n].
+
+    Block sizes follow MXU-friendly multiples; dims must divide evenly
+    (the AOT models use power-of-two shapes).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.lru_cache(maxsize=8)
+def _twiddles(n: int):
+    """DFT matrix split into real/imag parts, transposed for x @ W^T."""
+    j, k = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    ang = -2.0 * np.pi * j * k / n
+    w_re = np.cos(ang).astype(np.float32)
+    w_im = np.sin(ang).astype(np.float32)
+    # W is symmetric (W^T = W), but keep the transpose explicit for clarity.
+    return jnp.asarray(w_re.T), jnp.asarray(w_im.T)
+
+
+def dft(x_re: jax.Array, x_im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched DFT: f32[b,n] x 2 -> (X_re, X_im), X = x @ W^T.
+
+    X_re = x_re @ Wre - x_im @ (-Wim)... concretely:
+    X = (x_re + i x_im) (W_re + i W_im) with W = exp(-2 pi i jk/n).
+    """
+    n = x_re.shape[-1]
+    w_re, w_im = _twiddles(n)
+    X_re = matmul(x_re, w_re) - matmul(x_im, w_im)
+    X_im = matmul(x_re, w_im) + matmul(x_im, w_re)
+    return X_re, X_im

@@ -1,0 +1,41 @@
+"""FIR filter accelerator (Table I: "FIR — a commonly used filter in
+signal processing").
+
+Hardware adaptation: an RTL FIR is a systolic MAC chain; on TPU the same
+computation is a sliding-window dot product that the VPU vectorizes. The
+Pallas kernel unrolls the (static) tap loop so each tap becomes one fused
+multiply-add over the whole signal vector held in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fir_kernel(x_ref, h_ref, o_ref, *, taps: int, n: int):
+    """o[i] = sum_k h[k] * x[i + taps - 1 - k]  (x is left-padded)."""
+    x = x_ref[...]
+    h = h_ref[...]
+    acc = jnp.zeros((n,), jnp.float32)
+    for k in range(taps):  # static unroll: one VPU FMA per tap
+        window = jax.lax.dynamic_slice(x, (taps - 1 - k,), (n,))
+        acc = acc + h[k] * window
+    o_ref[...] = acc
+
+
+def fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Causal FIR: y[i] = sum_k h[k] * x[i-k], zero prehistory.
+
+    x: f32[n], h: f32[taps] -> f32[n].
+    """
+    n = x.shape[0]
+    taps = h.shape[0]
+    xp = jnp.pad(x, (taps - 1, 0))
+    import functools
+
+    kernel = functools.partial(_fir_kernel, taps=taps, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(xp, h)

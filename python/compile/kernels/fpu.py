@@ -1,0 +1,35 @@
+"""FPU accelerator (Table I: "FPU — it implements a single precision
+floating point unit").
+
+The OpenCores FPU exposes add/sub/mul/div/sqrt over IEEE-754 single
+precision. The streaming equivalent here is a vector micro-program
+exercising all five operations per element — a VPU-shaped elementwise
+Pallas kernel (no MXU involvement, the point is FLOP coverage, not
+matmul).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fpu_kernel(a_ref, b_ref, c_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    s = a + b                       # add
+    d = a - b                       # sub
+    m = a * b                       # mul
+    q = m / (jnp.abs(c) + 1.0)      # div (guarded)
+    r = jnp.sqrt(jnp.abs(s * d))    # sqrt(|a^2 - b^2|)
+    o_ref[...] = q + r + c
+
+
+def fpu(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """f32[n] x 3 -> f32[n]: q + r + c as computed above."""
+    n = a.shape[0]
+    return pl.pallas_call(
+        _fpu_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,28 @@
+"""Huffman-decoder accelerator, tensor stage (Table I: "Huffman Decoder
+that is typically used in streaming applications").
+
+Substitution note (DESIGN.md): bit-serial variable-length decoding is
+data-dependent control flow — hostile to XLA and to the MXU/VPU. The real
+canonical decoder therefore lives on the Rust side (`accel::huffman`);
+the tensor stage compiled here is the *symbol expansion*: decoded symbol
+indices are mapped through the reconstruction table (gather) and scaled —
+the part of a streaming decoder that is a tensor op and benefits from the
+accelerator at all.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expand(symbols_f32: jax.Array, table_f32: jax.Array) -> jax.Array:
+    """out[i] = table[symbols[i]]. symbols: f32[n] (integer-valued),
+    table: f32[t].
+
+    Implemented as a one-hot matmul rather than a gather: the xla 0.5.1
+    HLO-text parser mis-parses `gather` (see DESIGN.md), and on TPU a
+    [n,t] one-hot times [t] table is MXU work anyway.
+    """
+    t = table_f32.shape[0]
+    idx = jnp.clip(symbols_f32.astype(jnp.int32), 0, t - 1)
+    onehot = (idx[:, None] == jnp.arange(t, dtype=jnp.int32)[None, :]).astype(jnp.float32)
+    return onehot @ table_f32

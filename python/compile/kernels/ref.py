@@ -1,0 +1,128 @@
+"""Pure-numpy oracles for every kernel — the CORE correctness signal.
+
+Each reference is implemented independently of its kernel (different
+algorithm or library call) so agreement is meaningful:
+- fir_ref: np.convolve;
+- dft_ref: np.fft.fft;
+- conv2d_ref: explicit python loops;
+- fpu_ref: numpy elementwise;
+- aes_ref: textbook list-based AES (no jnp, own key schedule);
+- huffman_expand_ref: fancy indexing.
+"""
+
+import numpy as np
+
+
+def fir_ref(x: np.ndarray, h: np.ndarray) -> np.ndarray:
+    return np.convolve(x, h)[: x.shape[0]].astype(np.float32)
+
+
+def dft_ref(x_re: np.ndarray, x_im: np.ndarray):
+    X = np.fft.fft(x_re + 1j * x_im, axis=-1)
+    return X.real.astype(np.float32), X.imag.astype(np.float32)
+
+
+def conv2d_ref(img: np.ndarray, kernel: np.ndarray) -> np.ndarray:
+    kh, kw = kernel.shape
+    h, w = img.shape
+    ph, pw = kh // 2, kw // 2
+    padded = np.pad(img, ((ph, kh - 1 - ph), (pw, kw - 1 - pw)))
+    out = np.zeros((h, w), dtype=np.float64)
+    for y in range(h):
+        for x in range(w):
+            out[y, x] = float((padded[y : y + kh, x : x + kw] * kernel).sum())
+    return out.astype(np.float32)
+
+
+def canny_ref(img: np.ndarray) -> np.ndarray:
+    from .canny import GAUSS5, SOBEL_X, SOBEL_Y
+
+    blurred = conv2d_ref(img, GAUSS5)
+    gx = conv2d_ref(blurred, SOBEL_X)
+    gy = conv2d_ref(blurred, SOBEL_Y)
+    return np.sqrt(gx * gx + gy * gy).astype(np.float32)
+
+
+def fpu_ref(a: np.ndarray, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+    s = a + b
+    d = a - b
+    m = a * b
+    q = m / (np.abs(c) + 1.0)
+    r = np.sqrt(np.abs(s * d))
+    return (q + r + c).astype(np.float32)
+
+
+# ---------------------------------------------------------------- AES ----
+
+_SBOX_HEX = (
+    "637c777bf26b6fc53001672bfed7ab76"
+    "ca82c97dfa5947f0add4a2af9ca472c0"
+    "b7fd9326363ff7cc34a5e5f171d83115"
+    "04c723c31896059a071280e2eb27b275"
+    "09832c1a1b6e5aa0523bd6b329e32f84"
+    "53d100ed20fcb15b6acbbe394a4c58cf"
+    "d0efaafb434d338545f9027f503c9fa8"
+    "51a3408f929d38f5bcb6da2110fff3d2"
+    "cd0c13ec5f974417c4a77e3d645d1973"
+    "60814fdc222a908846eeb814de5e0bdb"
+    "e0323a0a4906245cc2d3ac629195e479"
+    "e7c8376d8dd54ea96c56f4ea657aae08"
+    "ba78252e1ca6b4c6e8dd741f4bbd8b8a"
+    "703eb5664803f60e613557b986c11d9e"
+    "e1f8981169d98e949b1e87e9ce5528df"
+    "8ca1890dbfe6426841992d0fb054bb16"
+)
+_SBOX = [int(_SBOX_HEX[i : i + 2], 16) for i in range(0, 512, 2)]
+
+
+def _xt(a: int) -> int:
+    a <<= 1
+    if a & 0x100:
+        a ^= 0x11B
+    return a & 0xFF
+
+
+def _key_expand_ref(key: list) -> list:
+    rcon = 1
+    w = [key[4 * i : 4 * i + 4] for i in range(4)]
+    for i in range(4, 44):
+        t = list(w[i - 1])
+        if i % 4 == 0:
+            t = t[1:] + t[:1]
+            t = [_SBOX[b] for b in t]
+            t[0] ^= rcon
+            rcon = _xt(rcon)
+        w.append([a ^ b for a, b in zip(w[i - 4], t)])
+    return [sum(w[4 * r : 4 * r + 4], []) for r in range(11)]
+
+
+def aes_ref(blocks: np.ndarray, key16: np.ndarray) -> np.ndarray:
+    """Textbook AES-128 ECB over uint8[b,16] blocks; key is 16 raw bytes
+    (the reference runs its own key schedule)."""
+    rks = _key_expand_ref([int(b) for b in key16])
+    out = []
+    for blk in blocks:
+        s = [int(b) ^ rks[0][i] for i, b in enumerate(blk)]
+        for rnd in range(1, 10):
+            s = [_SBOX[b] for b in s]
+            s = [s[(i % 4) + 4 * (((i // 4) + (i % 4)) % 4)] for i in range(16)]
+            ns = []
+            for c in range(4):
+                a = s[4 * c : 4 * c + 4]
+                ns += [
+                    _xt(a[0]) ^ _xt(a[1]) ^ a[1] ^ a[2] ^ a[3],
+                    a[0] ^ _xt(a[1]) ^ _xt(a[2]) ^ a[2] ^ a[3],
+                    a[0] ^ a[1] ^ _xt(a[2]) ^ _xt(a[3]) ^ a[3],
+                    _xt(a[0]) ^ a[0] ^ a[1] ^ a[2] ^ _xt(a[3]),
+                ]
+            s = [b ^ rks[rnd][i] for i, b in enumerate(ns)]
+        s = [_SBOX[b] for b in s]
+        s = [s[(i % 4) + 4 * (((i // 4) + (i % 4)) % 4)] for i in range(16)]
+        s = [b ^ rks[10][i] for i, b in enumerate(s)]
+        out.append(s)
+    return np.array(out, dtype=np.uint8)
+
+
+def huffman_expand_ref(symbols: np.ndarray, table: np.ndarray) -> np.ndarray:
+    idx = np.clip(symbols.astype(np.int64), 0, table.shape[0] - 1)
+    return table[idx].astype(np.float32)

@@ -1,0 +1,59 @@
+"""Layer-2 model registry: each of the paper's six accelerators as a
+jittable compute graph calling the Layer-1 kernels.
+
+Shapes are fixed per artifact (PJRT executables are shape-specialized, as
+the paper's bitstreams are region-specialized). `MODELS` maps an
+accelerator name to (fn, example_specs); `aot.py` lowers each entry to
+`artifacts/<name>.hlo.txt`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aes, canny, fft, fir, fpu, huffman
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def model_fir(x, h):
+    """FIR: signal f32[1024], taps f32[16] -> f32[1024]."""
+    return (fir.fir(x, h),)
+
+
+def model_fft(x_re, x_im):
+    """DFT: f32[8,256] x 2 -> (X_re, X_im)."""
+    return fft.dft(x_re, x_im)
+
+
+def model_canny(img):
+    """Edge magnitude: f32[128,128] -> f32[128,128]."""
+    return (canny.canny_magnitude(img),)
+
+
+def model_fpu(a, b, c):
+    """FPU micro-program: f32[4096] x 3 -> f32[4096]."""
+    return (fpu.fpu(a, b, c),)
+
+
+def model_aes(blocks, round_keys):
+    """AES-128 ECB: blocks f32[16,16] (byte-valued), rks f32[11,16]."""
+    return (aes.aes128_encrypt(blocks, round_keys),)
+
+
+def model_huffman(symbols, table):
+    """Symbol expansion: f32[2048] indices + f32[256] table."""
+    return (huffman.expand(symbols, table),)
+
+
+MODELS = {
+    "fir": (model_fir, (spec(1024), spec(16))),
+    "fft": (model_fft, (spec(8, 256), spec(8, 256))),
+    "canny": (model_canny, (spec(128, 128),)),
+    "fpu": (model_fpu, (spec(4096), spec(4096), spec(4096))),
+    "aes": (model_aes, (spec(16, 16), spec(11, 16))),
+    "huffman": (model_huffman, (spec(2048), spec(256))),
+}

@@ -1,0 +1,205 @@
+"""Kernel-vs-oracle correctness: each Pallas/jnp kernel against its
+independent numpy reference, fixed shapes + hypothesis sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aes, canny, fft, fir, fpu, huffman, ref
+
+RNG = np.random.default_rng(42)
+
+
+def f32(*shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ------------------------------------------------------------------ FIR --
+
+def test_fir_matches_convolve():
+    x, h = f32(1024), f32(16)
+    got = np.asarray(fir.fir(x, h))
+    np.testing.assert_allclose(got, ref.fir_ref(x, h), rtol=1e-5, atol=1e-5)
+
+
+def test_fir_impulse_recovers_taps():
+    h = f32(8)
+    x = np.zeros(64, np.float32)
+    x[0] = 1.0
+    got = np.asarray(fir.fir(x, h))
+    np.testing.assert_allclose(got[:8], h, rtol=1e-6)
+    np.testing.assert_allclose(got[8:], 0.0, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 256), taps=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_fir_hypothesis_shapes(n, taps, seed):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal(n).astype(np.float32)
+    h = r.standard_normal(taps).astype(np.float32)
+    got = np.asarray(fir.fir(x, h))
+    np.testing.assert_allclose(got, ref.fir_ref(x, h), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ FFT --
+
+def test_matmul_matches_numpy():
+    a, b = f32(8, 256), f32(256, 256)
+    got = np.asarray(fft.matmul(a, b))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-3)
+
+
+def test_dft_matches_npfft():
+    xr, xi = f32(8, 256), f32(8, 256)
+    gr, gi = fft.dft(xr, xi)
+    er, ei = ref.dft_ref(xr, xi)
+    np.testing.assert_allclose(np.asarray(gr), er, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(gi), ei, rtol=1e-3, atol=1e-2)
+
+
+def test_dft_real_signal_symmetry():
+    xr = f32(2, 64)
+    xi = np.zeros_like(xr)
+    gr, gi = fft.dft(xr, xi)
+    gr, gi = np.asarray(gr), np.asarray(gi)
+    # X[k] = conj(X[N-k]) for real signals.
+    np.testing.assert_allclose(gr[:, 1:], gr[:, :0:-1], rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(gi[:, 1:], -gi[:, :0:-1], rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8]),
+    n=st.sampled_from([16, 32, 64]),
+    k=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_hypothesis_shapes(m, n, k, seed):
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((m, k)).astype(np.float32)
+    b = r.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(fft.matmul(a, b))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------- Canny --
+
+def test_conv2d_matches_loops():
+    img = f32(32, 32)
+    got = np.asarray(canny.conv2d_same(img, canny.SOBEL_X))
+    np.testing.assert_allclose(got, ref.conv2d_ref(img, canny.SOBEL_X), rtol=1e-4, atol=1e-4)
+
+
+def test_canny_magnitude_matches_ref():
+    img = np.abs(f32(48, 48, scale=64.0))
+    got = np.asarray(canny.canny_magnitude(img))
+    np.testing.assert_allclose(got, ref.canny_ref(img), rtol=1e-3, atol=1e-2)
+
+
+def test_canny_flat_image_has_no_edges():
+    img = np.full((32, 32), 7.0, np.float32)
+    got = np.asarray(canny.canny_magnitude(img))
+    # Interior (away from zero-padding halo) must be edge-free.
+    np.testing.assert_allclose(got[6:-6, 6:-6], 0.0, atol=1e-4)
+
+
+def test_canny_step_edge_detected():
+    img = np.zeros((32, 32), np.float32)
+    img[:, 16:] = 100.0
+    got = np.asarray(canny.canny_magnitude(img))
+    assert got[16, 16] > 50.0          # strong response on the edge
+    assert got[16, 4] < 1.0            # none in the flat region
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(8, 48), w=st.integers(8, 48), seed=st.integers(0, 2**31))
+def test_conv2d_hypothesis_shapes(h, w, seed):
+    r = np.random.default_rng(seed)
+    img = r.standard_normal((h, w)).astype(np.float32)
+    got = np.asarray(canny.conv2d_same(img, canny.GAUSS5))
+    np.testing.assert_allclose(got, ref.conv2d_ref(img, canny.GAUSS5), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ FPU --
+
+def test_fpu_matches_ref():
+    a, b, c = f32(4096), f32(4096), f32(4096)
+    got = np.asarray(fpu.fpu(a, b, c))
+    np.testing.assert_allclose(got, ref.fpu_ref(a, b, c), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 1024), seed=st.integers(0, 2**31), scale=st.sampled_from([0.1, 1.0, 100.0]))
+def test_fpu_hypothesis(n, seed, scale):
+    r = np.random.default_rng(seed)
+    a = (r.standard_normal(n) * scale).astype(np.float32)
+    b = (r.standard_normal(n) * scale).astype(np.float32)
+    c = (r.standard_normal(n) * scale).astype(np.float32)
+    got = np.asarray(fpu.fpu(a, b, c))
+    np.testing.assert_allclose(got, ref.fpu_ref(a, b, c), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ AES --
+
+FIPS_KEY = np.arange(16, dtype=np.uint8)
+FIPS_PT = np.frombuffer(bytes.fromhex("00112233445566778899aabbccddeeff"), np.uint8)
+FIPS_CT = bytes.fromhex("69c4e0d86a7b0430d8cdb78070b4c55a")
+
+
+def test_aes_ref_fips_vector():
+    ct = ref.aes_ref(FIPS_PT.reshape(1, 16), FIPS_KEY)
+    assert bytes(ct[0].tolist()) == FIPS_CT
+
+
+def test_aes_jnp_fips_vector():
+    rks = aes.key_expand(FIPS_KEY)
+    out = aes.aes128_encrypt(
+        FIPS_PT.reshape(1, 16).astype(np.float32), rks.astype(np.float32)
+    )
+    assert bytes(np.asarray(out, np.uint8)[0].tolist()) == FIPS_CT
+
+
+def test_aes_batch_matches_ref():
+    blocks = RNG.integers(0, 256, (16, 16), dtype=np.uint8)
+    key = RNG.integers(0, 256, 16, dtype=np.uint8)
+    rks = aes.key_expand(key)
+    got = np.asarray(
+        aes.aes128_encrypt(blocks.astype(np.float32), rks.astype(np.float32)), np.uint8
+    )
+    np.testing.assert_array_equal(got, ref.aes_ref(blocks, key))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31), b=st.integers(1, 8))
+def test_aes_hypothesis(seed, b):
+    r = np.random.default_rng(seed)
+    blocks = r.integers(0, 256, (b, 16), dtype=np.uint8)
+    key = r.integers(0, 256, 16, dtype=np.uint8)
+    rks = aes.key_expand(key)
+    got = np.asarray(
+        aes.aes128_encrypt(blocks.astype(np.float32), rks.astype(np.float32)), np.uint8
+    )
+    np.testing.assert_array_equal(got, ref.aes_ref(blocks, key))
+
+
+def test_aes_key_schedule_matches_ref():
+    key = RNG.integers(0, 256, 16, dtype=np.uint8)
+    ours = aes.key_expand(key)
+    theirs = np.array(ref._key_expand_ref([int(x) for x in key]), dtype=np.uint8)
+    np.testing.assert_array_equal(ours, theirs)
+
+
+# -------------------------------------------------------------- Huffman --
+
+def test_huffman_expand_matches_ref():
+    sym = RNG.integers(0, 256, 2048).astype(np.float32)
+    table = f32(256)
+    got = np.asarray(huffman.expand(sym, table))
+    np.testing.assert_allclose(got, ref.huffman_expand_ref(sym, table))
+
+
+def test_huffman_expand_clips_out_of_range():
+    table = np.arange(4, dtype=np.float32)
+    sym = np.array([-3.0, 0.0, 3.0, 99.0], np.float32)
+    got = np.asarray(huffman.expand(sym, table))
+    np.testing.assert_allclose(got, [0.0, 0.0, 3.0, 3.0])

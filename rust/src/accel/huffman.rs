@@ -1,0 +1,237 @@
+//! Canonical Huffman codec — the control-flow half of the Huffman-decoder
+//! accelerator (Table I, VR1).
+//!
+//! Substitution (DESIGN.md): bit-serial variable-length decode is
+//! data-dependent control flow, so it runs here on the coordinator; the
+//! tensor half (symbol expansion through the reconstruction table) is the
+//! compiled `huffman` artifact. Together they form the streaming decoder
+//! the paper deploys in VR1.
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// A canonical Huffman code over byte symbols.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    /// Code length per symbol (0 = unused symbol), max 15.
+    pub lengths: [u8; 256],
+    /// Canonical code value per symbol.
+    codes: [u16; 256],
+}
+
+impl Codebook {
+    /// Build from symbol frequencies (package-merge-free simple Huffman:
+    /// binary heap over (weight, node)), then canonicalize.
+    pub fn from_frequencies(freq: &[u64; 256]) -> Result<Codebook> {
+        let symbols: Vec<usize> = (0..256).filter(|&s| freq[s] > 0).collect();
+        if symbols.is_empty() {
+            bail!("empty frequency table");
+        }
+        let mut lengths = [0u8; 256];
+        if symbols.len() == 1 {
+            lengths[symbols[0]] = 1;
+            return Ok(Self::from_lengths(lengths));
+        }
+        // Huffman tree via two-queue method over sorted leaves.
+        let mut leaves: Vec<(u64, Vec<usize>)> =
+            symbols.iter().map(|&s| (freq[s], vec![s])).collect();
+        leaves.sort_by_key(|(w, _)| *w);
+        let mut q1: VecDeque<(u64, Vec<usize>)> = leaves.into();
+        let mut q2: VecDeque<(u64, Vec<usize>)> = VecDeque::new();
+        let mut depth = [0u8; 256];
+        let pop_min = |q1: &mut VecDeque<(u64, Vec<usize>)>,
+                       q2: &mut VecDeque<(u64, Vec<usize>)>| {
+            match (q1.front(), q2.front()) {
+                (Some(a), Some(b)) => {
+                    if a.0 <= b.0 { q1.pop_front().unwrap() } else { q2.pop_front().unwrap() }
+                }
+                (Some(_), None) => q1.pop_front().unwrap(),
+                (None, Some(_)) => q2.pop_front().unwrap(),
+                (None, None) => unreachable!(),
+            }
+        };
+        while q1.len() + q2.len() > 1 {
+            let a = pop_min(&mut q1, &mut q2);
+            let b = pop_min(&mut q1, &mut q2);
+            for &s in a.1.iter().chain(b.1.iter()) {
+                depth[s] += 1;
+            }
+            let mut merged = a.1;
+            merged.extend(b.1);
+            q2.push_back((a.0 + b.0, merged));
+        }
+        for &s in &symbols {
+            lengths[s] = depth[s].min(15).max(1);
+        }
+        Ok(Self::from_lengths(lengths))
+    }
+
+    /// Canonical code assignment from lengths (RFC-1951 style).
+    pub fn from_lengths(lengths: [u8; 256]) -> Codebook {
+        let max_len = lengths.iter().copied().max().unwrap_or(0) as usize;
+        let mut bl_count = vec![0u16; max_len + 1];
+        for &l in lengths.iter() {
+            if l > 0 {
+                bl_count[l as usize] += 1;
+            }
+        }
+        let mut next_code = vec![0u16; max_len + 2];
+        let mut code = 0u16;
+        for bits in 1..=max_len {
+            code = (code + bl_count[bits - 1]) << 1;
+            next_code[bits] = code;
+        }
+        let mut codes = [0u16; 256];
+        for s in 0..256 {
+            let l = lengths[s] as usize;
+            if l > 0 {
+                codes[s] = next_code[l];
+                next_code[l] += 1;
+            }
+        }
+        Codebook { lengths, codes }
+    }
+
+    /// Encode bytes to a bitstream (MSB-first), returning (bits, bit_len).
+    pub fn encode(&self, data: &[u8]) -> Result<(Vec<u8>, usize)> {
+        let mut out = Vec::new();
+        let mut acc = 0u32;
+        let mut nbits = 0u32;
+        let mut total = 0usize;
+        for &b in data {
+            let l = self.lengths[b as usize] as u32;
+            if l == 0 {
+                bail!("symbol {b} not in codebook");
+            }
+            acc = (acc << l) | self.codes[b as usize] as u32;
+            nbits += l;
+            total += l as usize;
+            while nbits >= 8 {
+                out.push((acc >> (nbits - 8)) as u8);
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            out.push((acc << (8 - nbits)) as u8);
+        }
+        Ok((out, total))
+    }
+
+    /// Decode `bit_len` bits back to symbols (bit-serial tree walk — the
+    /// data-dependent loop that stays on the CPU).
+    pub fn decode(&self, bits: &[u8], bit_len: usize) -> Result<Vec<u8>> {
+        // Build (length, code) -> symbol lookup.
+        let mut table = std::collections::HashMap::new();
+        for s in 0..256 {
+            if self.lengths[s] > 0 {
+                table.insert((self.lengths[s], self.codes[s]), s as u8);
+            }
+        }
+        let mut out = Vec::new();
+        let mut code: u16 = 0;
+        let mut len: u8 = 0;
+        for i in 0..bit_len {
+            let byte = bits[i / 8];
+            let bit = (byte >> (7 - (i % 8))) & 1;
+            code = (code << 1) | bit as u16;
+            len += 1;
+            if let Some(&sym) = table.get(&(len, code)) {
+                out.push(sym);
+                code = 0;
+                len = 0;
+            } else if len >= 15 {
+                bail!("invalid bitstream at bit {i}");
+            }
+        }
+        if len != 0 {
+            bail!("trailing bits do not form a symbol");
+        }
+        Ok(out)
+    }
+}
+
+/// Frequency table of a byte slice.
+pub fn frequencies(data: &[u8]) -> [u64; 256] {
+    let mut f = [0u64; 256];
+    for &b in data {
+        f[b as usize] += 1;
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn roundtrip_simple() {
+        let data = b"abracadabra abracadabra";
+        let cb = Codebook::from_frequencies(&frequencies(data)).unwrap();
+        let (bits, n) = cb.encode(data).unwrap();
+        assert_eq!(cb.decode(&bits, n).unwrap(), data);
+        // Compression: frequent symbols get short codes.
+        assert!(n < data.len() * 8, "no compression: {n} bits");
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let data = vec![7u8; 100];
+        let cb = Codebook::from_frequencies(&frequencies(&data)).unwrap();
+        let (bits, n) = cb.encode(&data).unwrap();
+        assert_eq!(n, 100); // 1 bit per symbol
+        assert_eq!(cb.decode(&bits, n).unwrap(), data);
+    }
+
+    #[test]
+    fn unknown_symbol_rejected() {
+        let cb = Codebook::from_frequencies(&frequencies(b"aaabbb")).unwrap();
+        assert!(cb.encode(b"xyz").is_err());
+    }
+
+    #[test]
+    fn empty_frequency_table_rejected() {
+        assert!(Codebook::from_frequencies(&[0u64; 256]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_detected() {
+        let data = b"hello world hello";
+        let cb = Codebook::from_frequencies(&frequencies(data)).unwrap();
+        let (bits, n) = cb.encode(data).unwrap();
+        // Chop a few bits: must not silently decode.
+        assert!(cb.decode(&bits, n - 3).is_err() || cb.decode(&bits, n - 3).unwrap() != data);
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        // Property: canonical code lengths always satisfy Kraft <= 1 — the
+        // decodability invariant.
+        forall("kraft inequality", 64, |rng| {
+            let n = 2 + rng.below(200) as usize;
+            let mut data = Vec::with_capacity(n);
+            let alphabet = 2 + rng.below(40) as u8;
+            for _ in 0..n {
+                data.push(rng.below(alphabet as u64) as u8);
+            }
+            let cb = Codebook::from_frequencies(&frequencies(&data)).unwrap();
+            let kraft: f64 = (0..256)
+                .filter(|&s| cb.lengths[s] > 0)
+                .map(|s| 2f64.powi(-(cb.lengths[s] as i32)))
+                .sum();
+            assert!(kraft <= 1.0 + 1e-9, "kraft={kraft}");
+        });
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall("huffman roundtrip", 64, |rng| {
+            let n = 1 + rng.below(500) as usize;
+            let alphabet = 1 + rng.below(64) as u64;
+            let data: Vec<u8> = (0..n).map(|_| rng.below(alphabet) as u8).collect();
+            let cb = Codebook::from_frequencies(&frequencies(&data)).unwrap();
+            let (bits, blen) = cb.encode(&data).unwrap();
+            assert_eq!(cb.decode(&bits, blen).unwrap(), data);
+        });
+    }
+}

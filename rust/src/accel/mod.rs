@@ -1,0 +1,99 @@
+//! Accelerator layer: Table I specs, the Rust-side Huffman codec, native
+//! oracles for end-to-end validation, and the payload codec that turns NoC
+//! byte payloads into model inputs (the VR "well-defined interfaces" of
+//! §IV-C).
+
+pub mod huffman;
+pub mod native;
+pub mod spec;
+
+pub use spec::{by_name, AccelSpec, CASE_STUDY};
+
+use crate::runtime::Tensor;
+use anyhow::{bail, Result};
+
+/// Build the runtime input tensors for accelerator `name` from a raw byte
+/// payload (the decoded NoC message / host DMA buffer). Each accelerator
+/// defines its wire format here — the software twin of the paper's
+/// "well-defined interfaces" provided to developers.
+pub fn inputs_from_payload(name: &str, payload: &[u8]) -> Result<Vec<Tensor>> {
+    match name {
+        // FIR: payload = 1024 signal bytes; taps fixed low-pass (16).
+        "fir" => {
+            let x = resize_f32(payload, 1024, |b| b as f32 / 255.0);
+            let h = vec![1.0 / 16.0; 16];
+            Ok(vec![Tensor::vec1(x), Tensor::vec1(h)])
+        }
+        // FFT: payload -> batch of 8 x 256 real samples, zero imaginary.
+        "fft" => {
+            let re = resize_f32(payload, 8 * 256, |b| b as f32 / 128.0 - 1.0);
+            Ok(vec![
+                Tensor::new(vec![8, 256], re),
+                Tensor::new(vec![8, 256], vec![0.0; 8 * 256]),
+            ])
+        }
+        // Canny: payload = 128x128 grayscale bytes.
+        "canny" => {
+            let img = resize_f32(payload, 128 * 128, |b| b as f32);
+            Ok(vec![Tensor::new(vec![128, 128], img)])
+        }
+        // FPU: payload split into three operand vectors of 4096.
+        "fpu" => {
+            let n = 4096;
+            let a = resize_f32(payload, n, |b| b as f32 / 32.0);
+            let b = resize_f32(&payload.iter().map(|x| x.wrapping_add(85)).collect::<Vec<_>>(), n, |b| b as f32 / 32.0 - 2.0);
+            let c = resize_f32(&payload.iter().map(|x| x.wrapping_mul(3)).collect::<Vec<_>>(), n, |b| b as f32 / 64.0);
+            Ok(vec![Tensor::vec1(a), Tensor::vec1(b), Tensor::vec1(c)])
+        }
+        // AES: payload = up to 256 bytes -> 16 blocks; fixed demo key.
+        "aes" => {
+            let blocks = resize_f32(payload, 16 * 16, |b| b as f32);
+            let rks = native::aes_key_expand(&DEMO_KEY);
+            let rk_f: Vec<f32> = rks.iter().flatten().map(|&b| b as f32).collect();
+            Ok(vec![Tensor::new(vec![16, 16], blocks), Tensor::new(vec![11, 16], rk_f)])
+        }
+        // Huffman: payload = symbol indices; table = identity ramp.
+        "huffman" => {
+            let sym = resize_f32(payload, 2048, |b| b as f32);
+            let table: Vec<f32> = (0..256).map(|i| i as f32).collect();
+            Ok(vec![Tensor::vec1(sym), Tensor::vec1(table)])
+        }
+        other => bail!("no payload codec for accelerator '{other}'"),
+    }
+}
+
+/// The demo AES key used by the case study (FIPS-197 example key).
+pub const DEMO_KEY: [u8; 16] = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15];
+
+/// Map payload bytes into exactly `n` f32s (truncate or cycle-repeat).
+fn resize_f32(payload: &[u8], n: usize, f: impl Fn(u8) -> f32) -> Vec<f32> {
+    if payload.is_empty() {
+        return vec![0.0; n];
+    }
+    (0..n).map(|i| f(payload[i % payload.len()])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_case_study_accel_has_a_codec() {
+        for a in &CASE_STUDY {
+            let ins = inputs_from_payload(a.name, &[1, 2, 3, 4]).unwrap();
+            assert_eq!(ins.len(), a.n_inputs, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn unknown_accel_rejected() {
+        assert!(inputs_from_payload("bogus", &[]).is_err());
+    }
+
+    #[test]
+    fn resize_handles_all_lengths() {
+        assert_eq!(resize_f32(&[], 4, |b| b as f32), vec![0.0; 4]);
+        assert_eq!(resize_f32(&[1, 2], 4, |b| b as f32), vec![1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(resize_f32(&[9; 10], 2, |b| b as f32), vec![9.0, 9.0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Rust-native oracles for every accelerator — a *third* implementation
+//! (independent of both the Pallas kernels and the numpy refs) used by the
+//! integration tests to validate PJRT outputs end to end.
+
+/// Causal FIR: y[i] = sum_k h[k] * x[i-k].
+pub fn fir(x: &[f32], h: &[f32]) -> Vec<f32> {
+    (0..x.len())
+        .map(|i| {
+            h.iter()
+                .enumerate()
+                .filter(|(k, _)| *k <= i)
+                .map(|(k, &hk)| hk as f64 * x[i - k] as f64)
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+/// Naive DFT of one row: X[j] = sum_k x[k] e^{-2 pi i jk / n}.
+pub fn dft_row(x_re: &[f32], x_im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = x_re.len();
+    let mut out_re = vec![0f32; n];
+    let mut out_im = vec![0f32; n];
+    for j in 0..n {
+        let (mut sr, mut si) = (0f64, 0f64);
+        for k in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (j * k) as f64 / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            sr += x_re[k] as f64 * c - x_im[k] as f64 * s;
+            si += x_re[k] as f64 * s + x_im[k] as f64 * c;
+        }
+        out_re[j] = sr as f32;
+        out_im[j] = si as f32;
+    }
+    (out_re, out_im)
+}
+
+/// The FPU micro-program (must match `kernels/fpu.py`).
+pub fn fpu(a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+    a.iter()
+        .zip(b)
+        .zip(c)
+        .map(|((&a, &b), &c)| {
+            let s = a + b;
+            let d = a - b;
+            let m = a * b;
+            let q = m / (c.abs() + 1.0);
+            let r = (s * d).abs().sqrt();
+            q + r + c
+        })
+        .collect()
+}
+
+/// 'same' 2-D correlation with zero padding.
+pub fn conv2d_same(img: &[f32], h: usize, w: usize, k: &[f32], kh: usize, kw: usize) -> Vec<f32> {
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = vec![0f32; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0f64;
+            for dy in 0..kh {
+                for dx in 0..kw {
+                    let sy = y as isize + dy as isize - ph as isize;
+                    let sx = x as isize + dx as isize - pw as isize;
+                    if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                        acc += img[sy as usize * w + sx as usize] as f64
+                            * k[dy * kw + dx] as f64;
+                    }
+                }
+            }
+            out[y * w + x] = acc as f32;
+        }
+    }
+    out
+}
+
+pub const GAUSS5: [f32; 25] = {
+    let raw = [
+        2.0, 4.0, 5.0, 4.0, 2.0, 4.0, 9.0, 12.0, 9.0, 4.0, 5.0, 12.0, 15.0, 12.0, 5.0, 4.0, 9.0,
+        12.0, 9.0, 4.0, 2.0, 4.0, 5.0, 4.0, 2.0,
+    ];
+    let mut out = [0f32; 25];
+    let mut i = 0;
+    while i < 25 {
+        out[i] = raw[i] / 159.0;
+        i += 1;
+    }
+    out
+};
+pub const SOBEL_X: [f32; 9] = [-1.0, 0.0, 1.0, -2.0, 0.0, 2.0, -1.0, 0.0, 1.0];
+pub const SOBEL_Y: [f32; 9] = [-1.0, -2.0, -1.0, 0.0, 0.0, 0.0, 1.0, 2.0, 1.0];
+
+/// Gaussian blur -> Sobel -> magnitude (matches `kernels/canny.py`).
+pub fn canny_magnitude(img: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let blurred = conv2d_same(img, h, w, &GAUSS5, 5, 5);
+    let gx = conv2d_same(&blurred, h, w, &SOBEL_X, 3, 3);
+    let gy = conv2d_same(&blurred, h, w, &SOBEL_Y, 3, 3);
+    gx.iter().zip(&gy).map(|(&x, &y)| (x * x + y * y).sqrt()).collect()
+}
+
+// ----------------------------------------------------------------- AES --
+
+const SBOX: [u8; 256] = [
+    0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b, 0xfe, 0xd7, 0xab,
+    0x76, 0xca, 0x82, 0xc9, 0x7d, 0xfa, 0x59, 0x47, 0xf0, 0xad, 0xd4, 0xa2, 0xaf, 0x9c, 0xa4,
+    0x72, 0xc0, 0xb7, 0xfd, 0x93, 0x26, 0x36, 0x3f, 0xf7, 0xcc, 0x34, 0xa5, 0xe5, 0xf1, 0x71,
+    0xd8, 0x31, 0x15, 0x04, 0xc7, 0x23, 0xc3, 0x18, 0x96, 0x05, 0x9a, 0x07, 0x12, 0x80, 0xe2,
+    0xeb, 0x27, 0xb2, 0x75, 0x09, 0x83, 0x2c, 0x1a, 0x1b, 0x6e, 0x5a, 0xa0, 0x52, 0x3b, 0xd6,
+    0xb3, 0x29, 0xe3, 0x2f, 0x84, 0x53, 0xd1, 0x00, 0xed, 0x20, 0xfc, 0xb1, 0x5b, 0x6a, 0xcb,
+    0xbe, 0x39, 0x4a, 0x4c, 0x58, 0xcf, 0xd0, 0xef, 0xaa, 0xfb, 0x43, 0x4d, 0x33, 0x85, 0x45,
+    0xf9, 0x02, 0x7f, 0x50, 0x3c, 0x9f, 0xa8, 0x51, 0xa3, 0x40, 0x8f, 0x92, 0x9d, 0x38, 0xf5,
+    0xbc, 0xb6, 0xda, 0x21, 0x10, 0xff, 0xf3, 0xd2, 0xcd, 0x0c, 0x13, 0xec, 0x5f, 0x97, 0x44,
+    0x17, 0xc4, 0xa7, 0x7e, 0x3d, 0x64, 0x5d, 0x19, 0x73, 0x60, 0x81, 0x4f, 0xdc, 0x22, 0x2a,
+    0x90, 0x88, 0x46, 0xee, 0xb8, 0x14, 0xde, 0x5e, 0x0b, 0xdb, 0xe0, 0x32, 0x3a, 0x0a, 0x49,
+    0x06, 0x24, 0x5c, 0xc2, 0xd3, 0xac, 0x62, 0x91, 0x95, 0xe4, 0x79, 0xe7, 0xc8, 0x37, 0x6d,
+    0x8d, 0xd5, 0x4e, 0xa9, 0x6c, 0x56, 0xf4, 0xea, 0x65, 0x7a, 0xae, 0x08, 0xba, 0x78, 0x25,
+    0x2e, 0x1c, 0xa6, 0xb4, 0xc6, 0xe8, 0xdd, 0x74, 0x1f, 0x4b, 0xbd, 0x8b, 0x8a, 0x70, 0x3e,
+    0xb5, 0x66, 0x48, 0x03, 0xf6, 0x0e, 0x61, 0x35, 0x57, 0xb9, 0x86, 0xc1, 0x1d, 0x9e, 0xe1,
+    0xf8, 0x98, 0x11, 0x69, 0xd9, 0x8e, 0x94, 0x9b, 0x1e, 0x87, 0xe9, 0xce, 0x55, 0x28, 0xdf,
+    0x8c, 0xa1, 0x89, 0x0d, 0xbf, 0xe6, 0x42, 0x68, 0x41, 0x99, 0x2d, 0x0f, 0xb0, 0x54, 0xbb,
+    0x16,
+];
+
+fn xt(a: u8) -> u8 {
+    (a << 1) ^ if a & 0x80 != 0 { 0x1b } else { 0 }
+}
+
+/// AES-128 key schedule: 16 bytes -> 11 round keys.
+pub fn aes_key_expand(key: &[u8; 16]) -> [[u8; 16]; 11] {
+    let mut w = [[0u8; 4]; 44];
+    for i in 0..4 {
+        w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+    }
+    let mut rcon: u8 = 1;
+    for i in 4..44 {
+        let mut t = w[i - 1];
+        if i % 4 == 0 {
+            t.rotate_left(1);
+            for b in t.iter_mut() {
+                *b = SBOX[*b as usize];
+            }
+            t[0] ^= rcon;
+            rcon = xt(rcon);
+        }
+        for j in 0..4 {
+            w[i][j] = w[i - 4][j] ^ t[j];
+        }
+    }
+    let mut rks = [[0u8; 16]; 11];
+    for r in 0..11 {
+        for c in 0..4 {
+            rks[r][4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+        }
+    }
+    rks
+}
+
+/// AES-128 ECB encrypt one 16-byte block.
+pub fn aes_encrypt_block(block: &[u8; 16], rks: &[[u8; 16]; 11]) -> [u8; 16] {
+    let mut s = *block;
+    for i in 0..16 {
+        s[i] ^= rks[0][i];
+    }
+    let shift = |s: &[u8; 16]| {
+        let mut o = [0u8; 16];
+        for i in 0..16 {
+            o[i] = s[(i % 4) + 4 * (((i / 4) + (i % 4)) % 4)];
+        }
+        o
+    };
+    for rnd in 1..10 {
+        for b in s.iter_mut() {
+            *b = SBOX[*b as usize];
+        }
+        s = shift(&s);
+        let mut ns = [0u8; 16];
+        for c in 0..4 {
+            let a = &s[4 * c..4 * c + 4];
+            ns[4 * c] = xt(a[0]) ^ xt(a[1]) ^ a[1] ^ a[2] ^ a[3];
+            ns[4 * c + 1] = a[0] ^ xt(a[1]) ^ xt(a[2]) ^ a[2] ^ a[3];
+            ns[4 * c + 2] = a[0] ^ a[1] ^ xt(a[2]) ^ xt(a[3]) ^ a[3];
+            ns[4 * c + 3] = xt(a[0]) ^ a[0] ^ a[1] ^ a[2] ^ xt(a[3]);
+        }
+        for i in 0..16 {
+            s[i] = ns[i] ^ rks[rnd][i];
+        }
+    }
+    for b in s.iter_mut() {
+        *b = SBOX[*b as usize];
+    }
+    s = shift(&s);
+    for i in 0..16 {
+        s[i] ^= rks[10][i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aes_fips197_vector() {
+        let key: [u8; 16] = core::array::from_fn(|i| i as u8);
+        let pt: [u8; 16] = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc, 0xdd,
+            0xee, 0xff,
+        ];
+        let ct = aes_encrypt_block(&pt, &aes_key_expand(&key));
+        let expect: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        assert_eq!(ct, expect);
+    }
+
+    #[test]
+    fn fir_identity_filter() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = fir(&x, &[1.0]);
+        assert_eq!(y, x.to_vec());
+    }
+
+    #[test]
+    fn fir_moving_average() {
+        let x = [1.0f32, 1.0, 1.0, 1.0];
+        let y = fir(&x, &[0.5, 0.5]);
+        assert_eq!(y, vec![0.5, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn dft_of_constant_is_dc_only() {
+        let x = vec![1.0f32; 8];
+        let z = vec![0.0f32; 8];
+        let (re, im) = dft_row(&x, &z);
+        assert!((re[0] - 8.0).abs() < 1e-4);
+        for j in 1..8 {
+            assert!(re[j].abs() < 1e-4 && im[j].abs() < 1e-4, "bin {j}");
+        }
+    }
+
+    #[test]
+    fn dft_parseval() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let z = vec![0.0f32; 16];
+        let (re, im) = dft_row(&x, &z);
+        let t: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let f: f64 =
+            re.iter().zip(&im).map(|(&r, &i)| (r as f64).powi(2) + (i as f64).powi(2)).sum();
+        assert!((f / 16.0 - t).abs() < 1e-3, "parseval {f} vs {t}");
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let img: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut k = vec![0f32; 9];
+        k[4] = 1.0;
+        let out = conv2d_same(&img, 4, 4, &k, 3, 3);
+        assert_eq!(out, img);
+    }
+
+    #[test]
+    fn canny_flat_is_zero_inside() {
+        let img = vec![5.0f32; 20 * 20];
+        let out = canny_magnitude(&img, 20, 20);
+        for y in 6..14 {
+            for x in 6..14 {
+                assert!(out[y * 20 + x].abs() < 1e-3);
+            }
+        }
+    }
+}

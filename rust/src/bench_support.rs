@@ -1,0 +1,43 @@
+//! Criterion-lite timing harness for the `benches/` targets (the offline
+//! build has no criterion crate).
+//!
+//! Each bench target is a `harness = false` binary that (a) regenerates a
+//! paper table/figure's rows and (b) reports wall-time statistics for the
+//! code paths involved.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// Time `f` with warmup, report mean/std per iteration.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    println!(
+        "bench {name:<40} {:>10.1} µs/iter (±{:.1}, n={}, min {:.1}, max {:.1})",
+        s.mean(),
+        s.std_dev(),
+        s.count(),
+        s.min(),
+        s.max()
+    );
+    s
+}
+
+/// Print the standard bench header for a paper experiment.
+pub fn header(experiment: &str, claim: &str) {
+    println!("\n=== {experiment} ===");
+    println!("paper: {claim}\n");
+}
+
+/// Simple shape check with console verdict (bench-level assertions should
+/// not panic the whole harness run).
+pub fn check(what: &str, ok: bool) {
+    println!("[{}] {}", if ok { "OK " } else { "FAIL" }, what);
+}

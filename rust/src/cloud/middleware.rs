@@ -1,0 +1,106 @@
+//! Cloud-management-software model (OpenStack path of the testbed).
+//!
+//! §V-D2: "An IO access time penalty is however recorded when requests
+//! arrive simultaneously from different tenants at the entry point of the
+//! shared device. Such requests are queued in the cloud management
+//! software and the IO access delays observed are only in the order of a
+//! few microseconds." — a single FIFO entry point with a small service
+//! time, fed by all tenants.
+
+use crate::util::{Rng, Summary};
+
+/// Service time of the shared entry point per request (µs): header
+/// inspection + dispatch to the shell.
+pub const ENTRY_SERVICE_US: f64 = 2.0;
+
+/// FIFO entry-point queue simulator (continuous time).
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    /// Time the server becomes free.
+    free_at: f64,
+    pub wait: Summary,
+}
+
+impl EntryPoint {
+    pub fn new() -> Self {
+        EntryPoint { free_at: 0.0, wait: Summary::new() }
+    }
+
+    /// A request arrives at absolute time `t_us`; returns the time it has
+    /// passed the entry point.
+    pub fn admit(&mut self, t_us: f64) -> f64 {
+        let start = self.free_at.max(t_us);
+        self.wait.add(start - t_us);
+        self.free_at = start + ENTRY_SERVICE_US;
+        self.free_at
+    }
+}
+
+impl Default for EntryPoint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sample the queueing penalty for `n_tenants` issuing requests with
+/// exponential inter-arrival of mean `mean_gap_us` for `horizon_us`.
+pub fn queueing_penalty_us(
+    n_tenants: usize,
+    mean_gap_us: f64,
+    horizon_us: f64,
+    seed: u64,
+) -> Summary {
+    let mut rng = Rng::new(seed);
+    let mut arrivals: Vec<f64> = Vec::new();
+    for _ in 0..n_tenants {
+        let mut t = rng.exponential(mean_gap_us);
+        while t < horizon_us {
+            arrivals.push(t);
+            t += rng.exponential(mean_gap_us);
+        }
+    }
+    arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut ep = EntryPoint::new();
+    for &t in &arrivals {
+        ep.admit(t);
+    }
+    ep.wait
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_system_has_no_wait() {
+        let mut ep = EntryPoint::new();
+        assert_eq!(ep.admit(100.0), 100.0 + ENTRY_SERVICE_US);
+        assert_eq!(ep.wait.mean(), 0.0);
+    }
+
+    #[test]
+    fn simultaneous_arrivals_queue() {
+        let mut ep = EntryPoint::new();
+        ep.admit(0.0);
+        ep.admit(0.0);
+        ep.admit(0.0);
+        // Third request waits 2 service times.
+        assert_eq!(ep.wait.max(), 2.0 * ENTRY_SERVICE_US);
+    }
+
+    #[test]
+    fn six_tenant_penalty_is_a_few_microseconds() {
+        // The paper's observation: penalty "in the order of a few
+        // microseconds" for the 6-application case study.
+        let w = queueing_penalty_us(6, 60.0, 1_000_000.0, 5);
+        assert!(w.mean() < 5.0, "mean wait {:.2}", w.mean());
+        assert!(w.mean() > 0.0);
+    }
+
+    #[test]
+    fn more_tenants_wait_longer() {
+        let w2 = queueing_penalty_us(2, 60.0, 500_000.0, 5).mean();
+        let w12 = queueing_penalty_us(12, 60.0, 500_000.0, 5).mean();
+        assert!(w12 > w2, "{w12} <= {w2}");
+    }
+}

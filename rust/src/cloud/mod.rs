@@ -1,0 +1,11 @@
+//! Cloud substrate: the OpenStack-like management path, host network, and
+//! IO-path timing models for the paper's evaluation (§V-A testbed, Fig 14,
+//! Fig 15, Table II).
+
+pub mod compare;
+pub mod iopath;
+pub mod middleware;
+pub mod network;
+
+pub use iopath::{fig14_io_trips, IoConfig, IoTripRow, Scheme};
+pub use network::Link;

@@ -1,0 +1,82 @@
+//! Request-path metrics.
+
+use crate::util::Summary;
+
+/// Timing of one completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTiming {
+    /// Modeled host->FPGA IO trip (µs), per the Fig 14 path model.
+    pub io_us: f64,
+    /// NoC cycles spent on inter-VR streaming (0 if no stream hop).
+    pub noc_cycles: u64,
+    /// Measured PJRT compute wall time (µs).
+    pub compute_us: f64,
+    /// Bytes in / out.
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+}
+
+impl RequestTiming {
+    /// Modeled end-to-end time: IO model + NoC cycles at the system clock
+    /// + real compute.
+    pub fn total_us(&self, noc_clock_mhz: f64) -> f64 {
+        self.io_us + self.noc_cycles as f64 / noc_clock_mhz + self.compute_us
+    }
+}
+
+/// Aggregate metrics for a run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub rejected: u64,
+    pub io_us: Summary,
+    pub compute_us: Summary,
+    pub total_us: Summary,
+    pub noc_cycles: Summary,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, t: &RequestTiming, noc_clock_mhz: f64) {
+        self.requests += 1;
+        self.io_us.add(t.io_us);
+        self.compute_us.add(t.compute_us);
+        self.total_us.add(t.total_us(noc_clock_mhz));
+        self.noc_cycles.add(t.noc_cycles as f64);
+        self.bytes_in += t.bytes_in as u64;
+        self.bytes_out += t.bytes_out as u64;
+    }
+
+    /// Modeled ingress throughput in Gb/s.
+    pub fn throughput_gbps(&self) -> f64 {
+        let total_us = self.total_us.mean() * self.requests as f64;
+        if total_us == 0.0 {
+            return 0.0;
+        }
+        self.bytes_in as f64 * 8.0 / (total_us * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_compose() {
+        let t = RequestTiming {
+            io_us: 30.0,
+            noc_cycles: 800,
+            compute_us: 100.0,
+            bytes_in: 1000,
+            bytes_out: 500,
+        };
+        // 800 cycles at 800 MHz = 1 µs.
+        assert!((t.total_us(800.0) - 131.0).abs() < 1e-9);
+        let mut m = Metrics::default();
+        m.record(&t, 800.0);
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.bytes_in, 1000);
+        assert!(m.throughput_gbps() > 0.0);
+    }
+}

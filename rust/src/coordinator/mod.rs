@@ -1,0 +1,283 @@
+//! Layer-3 coordinator: the deployed multi-tenant cloud-FPGA system.
+//!
+//! Assembles device + floorplan + hypervisor + NoC + PJRT runtime into the
+//! paper's case-study deployment and owns the request path:
+//!
+//! ```text
+//! VI client -> middleware entry point (modeled µs) -> VR USER REGION
+//!   (real PJRT compute) -> [Wrapper registers point elsewhere?] ->
+//!   NoC flits (cycle-simulated) -> dest VR compute -> response
+//! ```
+//!
+//! The IO trip uses the Fig 14 calibrated model; on-chip streaming runs
+//! through the cycle-accurate NoC; accelerator outputs are real numbers
+//! from the compiled artifacts. See `server` for the threaded engine.
+
+pub mod metrics;
+pub mod server;
+
+use crate::accel::{self, CASE_STUDY};
+use crate::cloud::{middleware::EntryPoint, IoConfig, Scheme};
+use crate::device::Device;
+use crate::hypervisor::{Hypervisor, Policy, VrStatus};
+use crate::noc::{hop_count, segment_message, NocSim, Topology};
+use crate::placer::{case_study_floorplan, Floorplan};
+use crate::runtime::{Runtime, Tensor};
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use metrics::{Metrics, RequestTiming};
+
+/// Bytes carried per 32-bit flit.
+pub const FLIT_PAYLOAD_BYTES: usize = 4;
+
+/// A deployed system.
+pub struct System {
+    pub device: Device,
+    pub hv: Hypervisor,
+    pub noc: NocSim,
+    pub runtime: Runtime,
+    pub io_cfg: IoConfig,
+    pub metrics: Metrics,
+    entry: EntryPoint,
+    clock_us: f64,
+    rng: Rng,
+}
+
+/// Response of one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Output tensors of the (final) accelerator in the chain.
+    pub outputs: Vec<Tensor>,
+    /// Which accelerator(s) ran.
+    pub path: Vec<String>,
+    pub timing: RequestTiming,
+}
+
+impl System {
+    /// Build the paper's case-study deployment: 5 VIs, 6 VRs, 6 compiled
+    /// accelerators per Table I, FPU streaming into AES over a direct link.
+    pub fn case_study(artifacts_dir: &str) -> Result<System> {
+        let device = Device::vu9p();
+        let (topo, fp) = case_study_floorplan(&device)?;
+        Self::build(device, topo, fp, artifacts_dir)
+    }
+
+    fn build(
+        device: Device,
+        topo: Topology,
+        fp: Floorplan,
+        artifacts_dir: &str,
+    ) -> Result<System> {
+        let mut noc = NocSim::new(topo.clone());
+        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        let runtime = Runtime::load_dir(artifacts_dir)?;
+
+        // Recreate the paper's tenancy: 5 VIs; VI3 grows elastically.
+        let mut vi_ids = std::collections::HashMap::new();
+        for spec in &CASE_STUDY {
+            let vi = *vi_ids
+                .entry(spec.vi)
+                .or_insert_with(|| hv.create_vi(&format!("VI{}", spec.vi)));
+            let vr = hv.allocate_vr(vi, &mut noc)?;
+            assert_eq!(vr, spec.vr, "allocation must reproduce Table I order");
+            // Commit the Table I footprint into the floorplan pblock.
+            let pb = hv.floorplan.vr_pb[vr];
+            hv.floorplan.pblocks.get_mut(pb).commit(&spec.resources)?;
+        }
+        // Program designs; FPU's Wrapper registers point at AES (index 3).
+        for spec in &CASE_STUDY {
+            let vi = vi_ids[&spec.vi];
+            let dest = if spec.name == "fpu" { Some(3) } else { None };
+            hv.program_vr(vi, spec.vr, spec.name, dest)?;
+        }
+        // Elastic streaming link FPU (paper VR3, index 2) -> AES (paper
+        // VR4, index 3): both hang off router 1, so a direct link is wired.
+        noc.wire_direct(2, 3)?;
+
+        Ok(System {
+            device,
+            hv,
+            noc,
+            runtime,
+            io_cfg: IoConfig::default(),
+            metrics: Metrics::default(),
+            entry: EntryPoint::new(),
+            clock_us: 0.0,
+            rng: Rng::new(0xF00D),
+        })
+    }
+
+    /// The design programmed in a VR, if any.
+    pub fn design_of(&self, vr: usize) -> Option<&str> {
+        match &self.hv.vrs[vr].status {
+            VrStatus::Programmed { design, .. } => Some(design),
+            _ => None,
+        }
+    }
+
+    /// Submit one request: `vi` writes `payload` to its VR `vr`, reads the
+    /// result. If the VR's Wrapper registers point at another VR, the
+    /// output streams on-chip and the destination accelerator runs too.
+    pub fn submit(&mut self, vi: u16, vr: usize, payload: &[u8]) -> Result<Response> {
+        let Some(design) = self.design_of(vr).map(String::from) else {
+            bail!("VR{vr} has no programmed design");
+        };
+        match &self.hv.vrs[vr].status {
+            VrStatus::Programmed { vi: owner, .. } if *owner == vi => {}
+            _ => {
+                self.metrics.rejected += 1;
+                bail!("VI{vi} does not own VR{vr} (access monitor)");
+            }
+        }
+
+        // --- modeled host->FPGA IO trip (Fig 14 path) ---
+        self.clock_us += self.rng.exponential(40.0); // inter-arrival
+        let admitted = self.entry.admit(self.clock_us);
+        let queue_wait = admitted - self.clock_us;
+        let hops = hop_count(&self.noc.header_for(vi, vr), 0);
+        let io_us = self.io_cfg.io_trip_us(Scheme::MultiTenant, hops, queue_wait, &mut self.rng);
+
+        // --- real compute on the VR's accelerator ---
+        let t0 = std::time::Instant::now();
+        let inputs = accel::inputs_from_payload(&design, payload)?;
+        let mut outputs = self.runtime.execute(&design, &inputs)?;
+        let mut path = vec![design.clone()];
+        let mut noc_cycles = 0u64;
+
+        // --- optional on-chip streaming hop (elasticity) ---
+        let dest_vr = self.hv.vrs[vr]
+            .stream_dest
+            .filter(|&d| d != vr && self.design_of(d).is_some());
+        if let Some(dst) = dest_vr {
+            let stream_bytes = outputs[0].to_bytes();
+            noc_cycles = self.stream(vi, vr, dst, &stream_bytes)?;
+            let dst_design = self.design_of(dst).unwrap().to_string();
+            let received = self.collect_delivered(dst);
+            let ins = accel::inputs_from_payload(&dst_design, &received)?;
+            outputs = self.runtime.execute(&dst_design, &ins)?;
+            path.push(dst_design);
+        }
+        let compute_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let bytes_out = outputs.iter().map(|t| t.data.len() * 4).sum();
+        let timing = RequestTiming {
+            io_us,
+            noc_cycles,
+            compute_us,
+            bytes_in: payload.len(),
+            bytes_out,
+        };
+        self.metrics.record(&timing, self.io_cfg.noc_clock_mhz);
+        self.clock_us += timing.total_us(self.io_cfg.noc_clock_mhz);
+        Ok(Response { outputs, path, timing })
+    }
+
+    /// Stream `bytes` from `src` VR to `dst` VR over the NoC (direct link
+    /// if wired, else routed flits). Returns cycles taken.
+    fn stream(&mut self, vi: u16, src: usize, dst: usize, bytes: &[u8]) -> Result<u64> {
+        let header = self.noc.header_for(vi, dst);
+        let flits = segment_message(header, bytes, FLIT_PAYLOAD_BYTES, 0);
+        let start = self.noc.cycle();
+        let direct = self.noc.topo.vrs_adjacent(src, dst) && self.has_direct(src);
+        for f in &flits {
+            if direct {
+                self.noc.send_direct(src, header, f.payload.clone(), f.seq);
+            } else {
+                self.noc.send(src, header, f.payload.clone(), f.seq);
+            }
+        }
+        if !self.noc.drain(1_000_000) {
+            bail!("NoC failed to drain while streaming {src}->{dst}");
+        }
+        Ok(self.noc.cycle() - start)
+    }
+
+    fn has_direct(&self, _src: usize) -> bool {
+        // The only direct link in the case study is FPU->AES; the NocSim
+        // itself validates adjacency on wiring, so streaming just tries it.
+        true
+    }
+
+    /// Pop all delivered payload bytes at a VR (in order).
+    fn collect_delivered(&mut self, vr: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        while let Some(f) = self.noc.vrs[vr].delivered.pop_front() {
+            out.extend_from_slice(&f.payload);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir).join("fir.hlo.txt").exists().then(|| dir.to_string())
+    }
+
+    #[test]
+    fn case_study_boots_and_serves_all_six() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut sys = System::case_study(&dir).unwrap();
+        assert_eq!(sys.hv.vr_utilization(), 1.0);
+        let payload: Vec<u8> = (0..=255).collect();
+        for spec in &CASE_STUDY {
+            let resp = sys.submit(spec.vi, spec.vr, &payload).unwrap();
+            assert!(!resp.outputs.is_empty(), "{}", spec.name);
+            assert!(resp.outputs[0].data.iter().all(|v| v.is_finite()), "{}", spec.name);
+            assert_eq!(resp.path[0], spec.name);
+        }
+        assert_eq!(sys.metrics.requests, 6);
+    }
+
+    #[test]
+    fn fpu_streams_into_aes_on_chip() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut sys = System::case_study(&dir).unwrap();
+        let resp = sys.submit(3, 2, &[7u8; 64]).unwrap();
+        // VI3's FPU (VR2... Table I: FPU is VR3 in paper numbering = index 2)
+        assert_eq!(resp.path, vec!["fpu".to_string(), "aes".to_string()]);
+        assert!(resp.timing.noc_cycles > 0, "stream must use the NoC");
+        // AES output: 16 blocks of 16 bytes.
+        assert_eq!(resp.outputs[0].shape, vec![16, 16]);
+    }
+
+    #[test]
+    fn foreign_vi_rejected_by_access_monitor() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut sys = System::case_study(&dir).unwrap();
+        assert!(sys.submit(1, 5, &[0u8; 8]).is_err());
+        assert_eq!(sys.metrics.rejected, 1);
+    }
+
+    #[test]
+    fn aes_output_matches_native_oracle() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut sys = System::case_study(&dir).unwrap();
+        let payload: Vec<u8> = (0..=255).collect();
+        // AES is VR4 in the paper (index 3), owned by VI3.
+        let resp = sys.submit(3, 3, &payload).unwrap();
+        let got = resp.outputs[0].to_bytes();
+        let rks = crate::accel::native::aes_key_expand(&crate::accel::DEMO_KEY);
+        for blk in 0..16 {
+            let mut b = [0u8; 16];
+            b.copy_from_slice(&payload[blk * 16..blk * 16 + 16]);
+            let expect = crate::accel::native::aes_encrypt_block(&b, &rks);
+            assert_eq!(&got[blk * 16..blk * 16 + 16], &expect, "block {blk}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Threaded serving engine (vLLM-router shape, std threads: the offline
+//! build has no tokio).
+//!
+//! One executor thread owns the [`System`] (PJRT executables are not
+//! `Sync`); VI client threads submit requests over an mpsc channel and
+//! receive responses on per-request channels. The executor drains the
+//! queue in batches, amortizing dispatch — the paper's VIs "continuously
+//! write, then read from the accelerators" concurrently.
+
+use super::{metrics::Metrics, Response, System};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A request from a VI client.
+pub struct Request {
+    pub vi: u16,
+    pub vr: usize,
+    pub payload: Vec<u8>,
+    pub reply: mpsc::Sender<Result<Response>>,
+}
+
+/// Channel message: a request or an orderly shutdown.
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle used by clients to talk to the engine.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl EngineHandle {
+    /// Submit and wait for the response.
+    pub fn call(&self, vi: u16, vr: usize, payload: Vec<u8>) -> Result<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request { vi, vr, payload, reply }))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?
+    }
+}
+
+/// The engine: executor thread + handle factory.
+///
+/// PJRT handles are not `Send`, so the [`System`] is *constructed inside*
+/// the executor thread from a builder closure and never crosses threads;
+/// `stop` hands back only the (Send) metrics.
+pub struct Engine {
+    handle: EngineHandle,
+    worker: Option<JoinHandle<Metrics>>,
+}
+
+impl Engine {
+    /// Maximum requests drained per executor iteration (dispatch batch).
+    pub const BATCH: usize = 8;
+
+    pub fn start<F>(builder: F) -> Result<Engine>
+    where
+        F: FnOnce() -> Result<System> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::spawn(move || {
+            let mut system = match builder() {
+                Ok(s) => {
+                    let _ = boot_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = boot_tx.send(Err(e));
+                    return Metrics::default();
+                }
+            };
+            // Drain-loop: block for one message, then opportunistically
+            // batch whatever else is queued.
+            'outer: while let Ok(first) = rx.recv() {
+                let Msg::Req(first) = first else { break };
+                let mut batch = vec![first];
+                while batch.len() < Self::BATCH {
+                    match rx.try_recv() {
+                        Ok(Msg::Req(r)) => batch.push(r),
+                        Ok(Msg::Shutdown) => {
+                            for req in batch {
+                                let resp = system.submit(req.vi, req.vr, &req.payload);
+                                let _ = req.reply.send(resp);
+                            }
+                            break 'outer;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for req in batch {
+                    let resp = system.submit(req.vi, req.vr, &req.payload);
+                    let _ = req.reply.send(resp);
+                }
+            }
+            system.metrics.clone()
+        });
+        boot_rx.recv().map_err(|_| anyhow::anyhow!("engine boot channel died"))??;
+        Ok(Engine { handle: EngineHandle { tx }, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the engine, returning the accumulated request metrics.
+    /// Outstanding handles error on subsequent calls.
+    pub fn stop(mut self) -> Metrics {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        drop(self.handle);
+        self.worker.take().unwrap().join().expect("executor panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CASE_STUDY;
+
+    fn artifacts() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir).join("fir.hlo.txt").exists().then(|| dir.to_string())
+    }
+
+    #[test]
+    fn concurrent_tenants_all_served() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::start(move || System::case_study(&dir)).unwrap();
+        let mut joins = Vec::new();
+        for spec in CASE_STUDY.iter().filter(|s| s.name != "fpu") {
+            let h = engine.handle();
+            let (vi, vr) = (spec.vi, spec.vr);
+            joins.push(std::thread::spawn(move || {
+                let payload: Vec<u8> = (0..128u32).map(|i| (i * 7 % 256) as u8).collect();
+                for _ in 0..5 {
+                    let resp = h.call(vi, vr, payload.clone()).unwrap();
+                    assert!(!resp.outputs.is_empty());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 25);
+    }
+
+    #[test]
+    fn engine_rejects_foreign_access_without_dying() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::start(move || System::case_study(&dir)).unwrap();
+        let h = engine.handle();
+        assert!(h.call(1, 3, vec![0; 16]).is_err()); // VI1 does not own VR3
+        assert!(h.call(2, 1, vec![0; 16]).is_ok()); // VI2 owns VR1 (fft)
+        engine.stop();
+    }
+}

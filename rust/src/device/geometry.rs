@@ -1,0 +1,183 @@
+//! Die geometry: CLB grid, clock regions, long-wire fabric.
+//!
+//! UltraScale+ facts used by the paper and encoded here:
+//! - a CLB holds eight 6-LUTs and sixteen flip-flops;
+//! - clock regions are 60 CLBs tall, arranged column-and-grid;
+//! - long wires span 16 CLBs and are abundant at the die edges (LinkBlaze's
+//!   observation, reused for the double-column NoC flavor).
+
+use super::resources::Resources;
+
+/// LUTs per CLB on UltraScale+.
+pub const LUTS_PER_CLB: u64 = 8;
+/// Flip-flops per CLB on UltraScale+.
+pub const FFS_PER_CLB: u64 = 16;
+/// Clock-region height in CLB rows.
+pub const CLOCK_REGION_ROWS: usize = 60;
+/// Long-wire span in CLBs.
+pub const LONG_WIRE_SPAN: usize = 16;
+
+/// Axis-aligned rectangle of CLBs, `[x0, x1) x [y0, y1)` — the unit of
+/// floorplanning (a Vivado pblock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub x0: usize,
+    pub y0: usize,
+    pub x1: usize,
+    pub y1: usize,
+}
+
+impl Rect {
+    pub fn new(x0: usize, y0: usize, x1: usize, y1: usize) -> Self {
+        assert!(x1 > x0 && y1 > y0, "degenerate rect {x0},{y0},{x1},{y1}");
+        Rect { x0, y0, x1, y1 }
+    }
+
+    pub fn width(&self) -> usize {
+        self.x1 - self.x0
+    }
+    pub fn height(&self) -> usize {
+        self.y1 - self.y0
+    }
+    pub fn clbs(&self) -> usize {
+        self.width() * self.height()
+    }
+
+    pub fn intersects(&self, o: &Rect) -> bool {
+        self.x0 < o.x1 && o.x0 < self.x1 && self.y0 < o.y1 && o.y0 < self.y1
+    }
+
+    pub fn contains(&self, o: &Rect) -> bool {
+        self.x0 <= o.x0 && self.y0 <= o.y0 && self.x1 >= o.x1 && self.y1 >= o.y1
+    }
+
+    /// CLB-resource capacity of this rectangle (logic fabric only; BRAM/DSP
+    /// columns are modeled as a device-level pool, see [`super::Device`]).
+    pub fn clb_capacity(&self) -> Resources {
+        Resources {
+            lut: self.clbs() as u64 * LUTS_PER_CLB,
+            lutram: self.clbs() as u64 * LUTS_PER_CLB / 2, // half the LUTs are SLICEM-capable
+            ff: self.clbs() as u64 * FFS_PER_CLB,
+            dsp: 0,
+            bram: 0,
+        }
+    }
+
+    /// Manhattan distance between rect centers, in CLBs — the wire-length
+    /// proxy used by the Fmax estimator.
+    pub fn center_distance(&self, o: &Rect) -> usize {
+        let cx = |r: &Rect| (r.x0 + r.x1) / 2;
+        let cy = |r: &Rect| (r.y0 + r.y1) / 2;
+        cx(self).abs_diff(cx(o)) + cy(self).abs_diff(cy(o))
+    }
+}
+
+/// Die geometry: a `cols x rows` CLB grid partitioned into clock regions.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub clb_cols: usize,
+    pub clb_rows: usize,
+    /// Clock-region grid (columns x rows of regions).
+    pub cr_cols: usize,
+    pub cr_rows: usize,
+}
+
+impl Geometry {
+    pub fn new(clb_cols: usize, clb_rows: usize, cr_cols: usize) -> Self {
+        assert!(clb_rows % CLOCK_REGION_ROWS == 0, "rows must be a multiple of 60");
+        Geometry { clb_cols, clb_rows, cr_cols, cr_rows: clb_rows / CLOCK_REGION_ROWS }
+    }
+
+    pub fn total_clbs(&self) -> usize {
+        self.clb_cols * self.clb_rows
+    }
+
+    pub fn die_rect(&self) -> Rect {
+        Rect::new(0, 0, self.clb_cols, self.clb_rows)
+    }
+
+    /// Clock region containing CLB (x, y).
+    pub fn clock_region_of(&self, x: usize, y: usize) -> (usize, usize) {
+        let cr_w = self.clb_cols.div_ceil(self.cr_cols);
+        (x / cr_w, y / CLOCK_REGION_ROWS)
+    }
+
+    /// Is column `x` in the die-edge band where under-utilized long wires
+    /// live (outermost clock-region column on each side)?
+    pub fn is_edge_column(&self, x: usize) -> bool {
+        let cr_w = self.clb_cols.div_ceil(self.cr_cols);
+        x < cr_w || x >= self.clb_cols.saturating_sub(cr_w)
+    }
+
+    /// Number of long-wire hops needed to cover `clb_distance` CLBs.
+    pub fn long_wire_hops(&self, clb_distance: usize) -> usize {
+        clb_distance.div_ceil(LONG_WIRE_SPAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry::new(164, 900, 6)
+    }
+
+    #[test]
+    fn rect_basics() {
+        let r = Rect::new(0, 0, 10, 20);
+        assert_eq!(r.clbs(), 200);
+        assert_eq!(r.clb_capacity().lut, 1600);
+        assert_eq!(r.clb_capacity().ff, 3200);
+    }
+
+    #[test]
+    fn rect_intersection() {
+        let a = Rect::new(0, 0, 10, 10);
+        let b = Rect::new(5, 5, 15, 15);
+        let c = Rect::new(10, 0, 20, 10);
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c)); // half-open: touching is not overlap
+        assert!(a.contains(&Rect::new(1, 1, 9, 9)));
+        assert!(!a.contains(&b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_rect_panics() {
+        Rect::new(5, 5, 5, 10);
+    }
+
+    #[test]
+    fn clock_regions() {
+        let g = geom();
+        assert_eq!(g.cr_rows, 15);
+        assert_eq!(g.clock_region_of(0, 0), (0, 0));
+        assert_eq!(g.clock_region_of(0, 60), (0, 1));
+        assert_eq!(g.clock_region_of(163, 899), (5, 14));
+    }
+
+    #[test]
+    fn edge_columns() {
+        let g = geom();
+        assert!(g.is_edge_column(0));
+        assert!(g.is_edge_column(163));
+        assert!(!g.is_edge_column(82));
+    }
+
+    #[test]
+    fn long_wire_hops() {
+        let g = geom();
+        assert_eq!(g.long_wire_hops(0), 0);
+        assert_eq!(g.long_wire_hops(16), 1);
+        assert_eq!(g.long_wire_hops(17), 2);
+        assert_eq!(g.long_wire_hops(160), 10);
+    }
+
+    #[test]
+    fn center_distance() {
+        let a = Rect::new(0, 0, 10, 10);
+        let b = Rect::new(20, 0, 30, 10);
+        assert_eq!(a.center_distance(&b), 20);
+    }
+}

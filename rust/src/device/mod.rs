@@ -1,0 +1,118 @@
+//! FPGA device model — the silicon substrate the paper prototyped on.
+//!
+//! The paper targets a Xilinx Virtex UltraScale+ VU9P (xcvu9p-flgb2104-2-i).
+//! We model the device as a CLB grid with clock regions, a device-level
+//! BRAM/DSP pool, and pblock (rectangle) accounting, so that the placer and
+//! hypervisor can reproduce the paper's area/utilization numbers (Fig 13,
+//! Table I) without Vivado.
+
+pub mod geometry;
+pub mod pblock;
+pub mod resources;
+
+pub use geometry::{Geometry, Rect, CLOCK_REGION_ROWS, FFS_PER_CLB, LUTS_PER_CLB};
+pub use pblock::{Pblock, PblockSet};
+pub use resources::Resources;
+
+/// A concrete FPGA part: geometry plus total resource inventory.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    pub geometry: Geometry,
+    pub capacity: Resources,
+    /// Device base clock specification ceiling (MHz) — UltraScale+ fabric
+    /// FFs/BUFG spec limit; routers cannot beat this.
+    pub spec_fmax_mhz: f64,
+}
+
+impl Device {
+    /// The VU9P as deployed in AWS F1 and used in the paper: ~1.18 M LUTs,
+    /// 2.36 M FFs, 6840 DSP slices, 75.9 Mb of BRAM (2160 BRAM36 tiles).
+    /// Grid: 164 x 900 CLBs (147.6k CLBs ~= 1.18 M LUTs / 8), six
+    /// clock-region columns, fifteen 60-CLB clock-region rows.
+    pub fn vu9p() -> Self {
+        let geometry = Geometry::new(164, 900, 6);
+        let clbs = geometry.total_clbs() as u64;
+        Device {
+            name: "xcvu9p-flgb2104-2-i".to_string(),
+            geometry,
+            capacity: Resources {
+                lut: clbs * LUTS_PER_CLB,        // 1,180,800
+                lutram: clbs * LUTS_PER_CLB / 2, // SLICEM share
+                ff: clbs * FFS_PER_CLB,          // 2,361,600
+                dsp: 6840,
+                bram: 2160,
+            },
+            spec_fmax_mhz: 1600.0, // UltraScale+ -2 speed grade FF toggle spec
+        }
+    }
+
+    /// A small 7-series-class device (Artix-7 50T/75T scale: ~40k LUTs) for
+    /// the paper's §V-D1 comparison: "the pblock defining VR5 ... 8968 LUTs
+    /// ... represents about 20% of some FPGAs from the 7-series", i.e. ~5
+    /// VR5-sized instances fit such a part.
+    pub fn artix7_class() -> Self {
+        let geometry = Geometry::new(28, 180, 2);
+        let clbs = geometry.total_clbs() as u64;
+        Device {
+            name: "7-series-class".to_string(),
+            geometry,
+            capacity: Resources {
+                lut: clbs * LUTS_PER_CLB, // 40,320
+                lutram: clbs * LUTS_PER_CLB / 2,
+                ff: clbs * FFS_PER_CLB,
+                dsp: 120,
+                bram: 75,
+            },
+            spec_fmax_mhz: 741.0,
+        }
+    }
+
+    /// How many instances of a job needing `r` resources fit on this device
+    /// (the paper's "455 instances of VR5 on a VU9P" estimate).
+    pub fn max_instances(&self, r: &Resources) -> u64 {
+        let per_axis = |cap: u64, need: u64| if need == 0 { u64::MAX } else { cap / need };
+        per_axis(self.capacity.lut, r.lut)
+            .min(per_axis(self.capacity.lutram, r.lutram))
+            .min(per_axis(self.capacity.ff, r.ff))
+            .min(per_axis(self.capacity.dsp, r.dsp))
+            .min(per_axis(self.capacity.bram, r.bram))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vu9p_inventory_matches_paper_scale() {
+        let d = Device::vu9p();
+        // ~1.18M LUTs / ~2.36M FFs / 6840 DSP as the paper quotes for VU9P.
+        assert_eq!(d.capacity.lut, 1_180_800);
+        assert_eq!(d.capacity.ff, 2_361_600);
+        assert_eq!(d.capacity.dsp, 6840);
+        assert_eq!(d.geometry.total_clbs(), 147_600);
+    }
+
+    #[test]
+    fn paper_vr5_instance_count_shape() {
+        // Paper: a VR5-sized job (1121 CLBs = 8968 LUTs) fits ~5x in a
+        // 7-series part but on the order of 100+ on a VU9P.
+        let d = Device::vu9p();
+        let small = Device::artix7_class();
+        let vr5 = Resources::new(8968, 0, 0, 0, 0);
+        let on_vu9p = d.max_instances(&vr5);
+        let on_small = small.max_instances(&vr5);
+        assert!(on_vu9p >= 100, "vu9p fits {on_vu9p}");
+        assert!(on_small <= 20, "7-series fits {on_small}");
+        assert!(on_vu9p / on_small.max(1) >= 8);
+    }
+
+    #[test]
+    fn max_instances_zero_need_is_unbounded_axis() {
+        let d = Device::vu9p();
+        // Only LUTs constrain.
+        let r = Resources::new(d.capacity.lut, 0, 0, 0, 0);
+        assert_eq!(d.max_instances(&r), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Pblocks: named, non-overlapping placement rectangles with resource
+//! accounting — the floorplanning primitive for VRs and NoC columns.
+
+use super::geometry::Rect;
+use super::resources::Resources;
+use anyhow::{bail, Result};
+
+/// A placement block: rectangle + the resources currently committed into it.
+#[derive(Debug, Clone)]
+pub struct Pblock {
+    pub name: String,
+    pub rect: Rect,
+    pub used: Resources,
+    /// DSP/BRAM capacity apportioned to this pblock from the device pool
+    /// (CLB columns carry LUT/FF; hard-block columns are pooled).
+    pub hard_cap: Resources,
+}
+
+impl Pblock {
+    pub fn new(name: impl Into<String>, rect: Rect) -> Self {
+        Pblock { name: name.into(), rect, used: Resources::ZERO, hard_cap: Resources::ZERO }
+    }
+
+    pub fn with_hard_blocks(mut self, dsp: u64, bram: u64) -> Self {
+        self.hard_cap = Resources { dsp, bram, ..Resources::ZERO };
+        self
+    }
+
+    /// Total capacity: CLB fabric of the rectangle + apportioned hard blocks.
+    pub fn capacity(&self) -> Resources {
+        self.rect.clb_capacity() + self.hard_cap
+    }
+
+    pub fn free(&self) -> Resources {
+        self.capacity().saturating_sub(&self.used)
+    }
+
+    /// Commit a design into the pblock; errors if it does not fit.
+    pub fn commit(&mut self, r: &Resources) -> Result<()> {
+        if !(self.used + *r).fits_in(&self.capacity()) {
+            bail!(
+                "design ({r}) does not fit in pblock '{}' (free {})",
+                self.name,
+                self.free()
+            );
+        }
+        self.used += *r;
+        Ok(())
+    }
+
+    /// Release previously committed resources (partial-reconfiguration
+    /// clears the region).
+    pub fn release(&mut self, r: &Resources) {
+        self.used = self.used.saturating_sub(r);
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used.lut_fraction_of(&self.capacity())
+    }
+}
+
+/// A set of pblocks with non-overlap enforcement (Vivado pblock semantics).
+#[derive(Debug, Clone, Default)]
+pub struct PblockSet {
+    blocks: Vec<Pblock>,
+}
+
+impl PblockSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, pb: Pblock) -> Result<usize> {
+        for existing in &self.blocks {
+            if existing.rect.intersects(&pb.rect) {
+                bail!("pblock '{}' overlaps '{}'", pb.name, existing.name);
+            }
+        }
+        self.blocks.push(pb);
+        Ok(self.blocks.len() - 1)
+    }
+
+    pub fn get(&self, idx: usize) -> &Pblock {
+        &self.blocks[idx]
+    }
+    pub fn get_mut(&mut self, idx: usize) -> &mut Pblock {
+        &mut self.blocks[idx]
+    }
+    pub fn by_name(&self, name: &str) -> Option<&Pblock> {
+        self.blocks.iter().find(|b| b.name == name)
+    }
+    pub fn iter(&self) -> impl Iterator<Item = &Pblock> {
+        self.blocks.iter()
+    }
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Total CLBs covered by all pblocks.
+    pub fn total_clbs(&self) -> usize {
+        self.blocks.iter().map(|b| b.rect.clbs()).sum()
+    }
+
+    /// Aggregate committed resources.
+    pub fn total_used(&self) -> Resources {
+        self.blocks.iter().fold(Resources::ZERO, |acc, b| acc + b.used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_and_release() {
+        let mut pb = Pblock::new("vr1", Rect::new(0, 0, 10, 60));
+        let cap = pb.capacity();
+        assert_eq!(cap.lut, 10 * 60 * 8);
+        let r = Resources::new(100, 0, 200, 0, 0);
+        pb.commit(&r).unwrap();
+        assert_eq!(pb.used, r);
+        pb.release(&r);
+        assert!(pb.used.is_zero());
+    }
+
+    #[test]
+    fn overcommit_fails() {
+        let mut pb = Pblock::new("tiny", Rect::new(0, 0, 1, 60)); // 480 LUTs
+        let r = Resources::new(481, 0, 0, 0, 0);
+        assert!(pb.commit(&r).is_err());
+    }
+
+    #[test]
+    fn hard_blocks_extend_capacity() {
+        let mut pb = Pblock::new("vr", Rect::new(0, 0, 4, 60)).with_hard_blocks(8, 20);
+        let r = Resources::new(100, 0, 100, 4, 18);
+        pb.commit(&r).unwrap();
+        assert!(pb.commit(&Resources::new(0, 0, 0, 5, 0)).is_err()); // dsp over
+    }
+
+    #[test]
+    fn overlapping_pblocks_rejected() {
+        let mut set = PblockSet::new();
+        set.add(Pblock::new("a", Rect::new(0, 0, 10, 60))).unwrap();
+        assert!(set.add(Pblock::new("b", Rect::new(5, 0, 15, 60))).is_err());
+        set.add(Pblock::new("c", Rect::new(10, 0, 20, 60))).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.total_clbs(), 1200);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let mut set = PblockSet::new();
+        set.add(Pblock::new("vr3", Rect::new(0, 0, 2, 60))).unwrap();
+        assert!(set.by_name("vr3").is_some());
+        assert!(set.by_name("vr9").is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! FPGA resource vectors: the unit of accounting for routers, shells,
+//! accelerators and virtual regions.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A bundle of FPGA primitive resources (post-synthesis utilization view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub lut: u64,
+    pub lutram: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram: u64, // BRAM36 tiles
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { lut: 0, lutram: 0, ff: 0, dsp: 0, bram: 0 };
+
+    pub fn new(lut: u64, lutram: u64, ff: u64, dsp: u64, bram: u64) -> Self {
+        Resources { lut, lutram, ff, dsp, bram }
+    }
+
+    /// True if `self` fits within `capacity` on every axis.
+    pub fn fits_in(&self, capacity: &Resources) -> bool {
+        self.lut <= capacity.lut
+            && self.lutram <= capacity.lutram
+            && self.ff <= capacity.ff
+            && self.dsp <= capacity.dsp
+            && self.bram <= capacity.bram
+    }
+
+    /// Saturating subtraction on every axis.
+    pub fn saturating_sub(&self, other: &Resources) -> Resources {
+        Resources {
+            lut: self.lut.saturating_sub(other.lut),
+            lutram: self.lutram.saturating_sub(other.lutram),
+            ff: self.ff.saturating_sub(other.ff),
+            dsp: self.dsp.saturating_sub(other.dsp),
+            bram: self.bram.saturating_sub(other.bram),
+        }
+    }
+
+    /// Fraction of `capacity`'s LUTs this bundle uses (the paper's primary
+    /// utilization metric).
+    pub fn lut_fraction_of(&self, capacity: &Resources) -> f64 {
+        if capacity.lut == 0 { 0.0 } else { self.lut as f64 / capacity.lut as f64 }
+    }
+
+    pub fn scale(&self, k: u64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            lutram: self.lutram * k,
+            ff: self.ff * k,
+            dsp: self.dsp * k,
+            bram: self.bram * k,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Resources::ZERO
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            lutram: self.lutram + o.lutram,
+            ff: self.ff + o.ff,
+            dsp: self.dsp + o.dsp,
+            bram: self.bram + o.bram,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Resources {
+    type Output = Resources;
+    fn sub(self, o: Resources) -> Resources {
+        self.saturating_sub(&o)
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LUT={} LUTRAM={} FF={} DSP={} BRAM={}",
+            self.lut, self.lutram, self.ff, self.dsp, self.bram
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_all_axes() {
+        let small = Resources::new(10, 0, 20, 1, 0);
+        let big = Resources::new(100, 10, 200, 10, 10);
+        assert!(small.fits_in(&big));
+        assert!(!big.fits_in(&small));
+        // one axis over capacity -> does not fit
+        let dsp_heavy = Resources::new(1, 0, 1, 11, 0);
+        assert!(!dsp_heavy.fits_in(&big));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(10, 1, 20, 2, 3);
+        let b = Resources::new(5, 1, 10, 1, 1);
+        assert_eq!(a + b, Resources::new(15, 2, 30, 3, 4));
+        assert_eq!(a - b, Resources::new(5, 0, 10, 1, 2));
+        // saturating
+        assert_eq!(b - a, Resources::ZERO);
+        assert_eq!(b.scale(3), Resources::new(15, 3, 30, 3, 3));
+    }
+
+    #[test]
+    fn lut_fraction() {
+        let a = Resources::new(25, 0, 0, 0, 0);
+        let cap = Resources::new(100, 0, 0, 0, 0);
+        assert!((a.lut_fraction_of(&cap) - 0.25).abs() < 1e-12);
+        assert_eq!(a.lut_fraction_of(&Resources::ZERO), 0.0);
+    }
+}

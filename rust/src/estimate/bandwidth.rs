@@ -1,0 +1,92 @@
+//! Link bandwidth metrics (Fig 11 + the 25.6 Gbps headline).
+//!
+//! Our links carry one payload bit per wire per cycle with no flow-control
+//! overhead wires (the EMPTY/RD_EN handshake rides on two control wires
+//! amortized over the whole bus and accounted in `OUR_WIRE_OVERHEAD`).
+//! Bandwidth-per-wire therefore approaches raw Fmax, while CONNECT pays
+//! for VC/credit wires and Hoplite for deflection valid bits — reproducing
+//! the 6.3x / 2.57x / 1.65x ratios of Fig 11. Per-LUT bandwidth inverts the
+//! picture: Hoplite and LinkBlaze Fast are ~5x leaner, so they win that
+//! metric, exactly as the paper concedes.
+
+use super::area::router_resources;
+use super::fmax::router_fmax_mhz;
+use super::RouterConfig;
+use crate::device::Device;
+
+/// Handshake wires amortized over the payload bus (2 control wires / 32
+/// payload wires at the 32-bit point -> 1.0625, folded into 1.0 because the
+/// paper counts payload wires only for its own design).
+pub const OUR_WIRE_OVERHEAD: f64 = 1.0;
+
+/// Payload bandwidth of one link in Gb/s: width x operating clock.
+/// The paper's deployed NoC runs the 32-bit datapath at the 800 MHz system
+/// clock -> 25.6 Gbps (§V-D1).
+pub fn link_bandwidth_gbps(width_bits: u32, clock_mhz: f64) -> f64 {
+    width_bits as f64 * clock_mhz * 1e6 / 1e9
+}
+
+/// Bandwidth per wire (Mb/s/wire) for one of our routers at its Fmax.
+pub fn bw_per_wire_mbps(cfg: &RouterConfig, device: &Device) -> f64 {
+    router_fmax_mhz(cfg, device) / OUR_WIRE_OVERHEAD
+}
+
+/// Bandwidth per router LUT (Mb/s/LUT) for one of our routers at its Fmax.
+pub fn bw_per_lut_mbps(cfg: &RouterConfig, device: &Device) -> f64 {
+    let f = router_fmax_mhz(cfg, device);
+    f * cfg.width_bits as f64 / router_resources(cfg).lut as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baselines::{CONNECT, HOPLITE, LINKBLAZE_FAST, LINKBLAZE_FLEX};
+    use super::*;
+
+    fn ours_32b() -> (RouterConfig, Device) {
+        (RouterConfig::bufferless(3, 32), Device::vu9p())
+    }
+
+    #[test]
+    fn headline_25_6_gbps() {
+        // §V-D1: "The on-chip communication offers a bandwidth of 25.6 Gbps"
+        // = 32-bit datapath at the 800 MHz deployed system clock.
+        assert!((link_bandwidth_gbps(32, 800.0) - 25.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig11_bw_per_wire_ratios() {
+        let (cfg, dev) = ours_32b();
+        let ours = bw_per_wire_mbps(&cfg, &dev);
+        // Paper: 6.3x CONNECT, 2.57x Hoplite and LB-Flex, 1.65x LB-Fast.
+        let r_connect = ours / CONNECT.bw_per_wire_mbps();
+        let r_hoplite = ours / HOPLITE.bw_per_wire_mbps();
+        let r_flex = ours / LINKBLAZE_FLEX.bw_per_wire_mbps();
+        let r_fast = ours / LINKBLAZE_FAST.bw_per_wire_mbps();
+        assert!((r_connect - 6.3).abs() < 0.35, "connect ratio {r_connect:.2}");
+        assert!((r_hoplite - 2.57).abs() < 0.2, "hoplite ratio {r_hoplite:.2}");
+        assert!((r_flex - 2.57).abs() < 0.2, "flex ratio {r_flex:.2}");
+        assert!((r_fast - 1.65).abs() < 0.15, "fast ratio {r_fast:.2}");
+    }
+
+    #[test]
+    fn fig11_bw_per_lut_inverts() {
+        // "The bandwidth per LUT nevertheless draws a different picture.
+        // Hoplite and LinkBlaze Fast perform better than our routers."
+        let (cfg, dev) = ours_32b();
+        let ours = bw_per_lut_mbps(&cfg, &dev);
+        assert!(HOPLITE.bw_per_lut_mbps() > ours);
+        assert!(LINKBLAZE_FAST.bw_per_lut_mbps() > ours);
+        // ... but CONNECT and LB-Flex do not.
+        assert!(CONNECT.bw_per_lut_mbps() < ours);
+        assert!(LINKBLAZE_FLEX.bw_per_lut_mbps() < ours);
+    }
+
+    #[test]
+    fn four_port_similar_observations() {
+        // "Similar observations can be made for the 4-port router."
+        let dev = Device::vu9p();
+        let ours = bw_per_wire_mbps(&RouterConfig::bufferless(4, 32), &dev);
+        assert!(ours / CONNECT.bw_per_wire_mbps() > 3.5);
+        assert!(ours / HOPLITE.bw_per_wire_mbps() > 1.5);
+    }
+}

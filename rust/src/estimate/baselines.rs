@@ -1,0 +1,120 @@
+//! Published baseline NoCs the paper compares against (Fig 10, Fig 11).
+//!
+//! Numbers come from the paper's own citations of measurements on
+//! comparable UltraScale+ parts: CONNECT at 313 MHz and Hoplite at 638 MHz
+//! (§V-C2, quoting [23]), LinkBlaze Fast/Flex from [23]. `wire_overhead`
+//! captures non-payload wires per link (virtual-channel ids, credits,
+//! valid/deflection bits), which is what makes bandwidth-per-wire differ
+//! from raw Fmax; `luts_32b` is the 32-bit router cost used for
+//! bandwidth-per-LUT (Hoplite and LinkBlaze Fast are ~5x leaner than our
+//! routers, §V-C2).
+
+/// One comparison design.
+#[derive(Debug, Clone, Copy)]
+pub struct Baseline {
+    pub name: &'static str,
+    /// Achieved Fmax on a VU9P-class part at 32-bit width (MHz).
+    pub fmax_mhz: f64,
+    /// Link wires per payload bit (>= 1.0; extra = flow-control overhead).
+    pub wire_overhead: f64,
+    /// 32-bit router LUT cost.
+    pub luts_32b: u64,
+    /// Fmax degradation per width doubling beyond 32 bits (MHz), for the
+    /// Fig 10 curves of LinkBlaze Fast/Flex.
+    pub fmax_slope_per_doubling: f64,
+}
+
+impl Baseline {
+    /// Fmax at a given width (only LinkBlaze curves extend across widths in
+    /// Fig 10; CONNECT/Hoplite are single published points at 32 bits).
+    pub fn fmax_at_width(&self, width_bits: u32) -> f64 {
+        let doublings = (width_bits as f64 / 32.0).log2().max(0.0);
+        (self.fmax_mhz - self.fmax_slope_per_doubling * doublings).max(50.0)
+    }
+
+    /// Payload bandwidth per physical link wire (Mb/s/wire) at 32 bits.
+    pub fn bw_per_wire_mbps(&self) -> f64 {
+        self.fmax_mhz / self.wire_overhead
+    }
+
+    /// Payload bandwidth per router LUT (Mb/s/LUT) at 32 bits.
+    pub fn bw_per_lut_mbps(&self) -> f64 {
+        self.fmax_mhz * 32.0 / self.luts_32b as f64
+    }
+}
+
+/// CONNECT: flexible generator, VCs + credit-based flow control — low Fmax,
+/// high area, highest wire overhead.
+pub const CONNECT: Baseline = Baseline {
+    name: "CONNECT",
+    fmax_mhz: 313.0,
+    wire_overhead: 1.31,
+    luts_32b: 1520,
+    fmax_slope_per_doubling: 40.0,
+};
+
+/// Hoplite: austere deflection-routed unidirectional torus — tiny and fast
+/// but single-flit and deflecting.
+pub const HOPLITE: Baseline = Baseline {
+    name: "Hoplite",
+    fmax_mhz: 638.0,
+    wire_overhead: 1.093,
+    luts_32b: 60,
+    fmax_slope_per_doubling: 55.0,
+};
+
+/// LinkBlaze Flex: long-wire-based, flexible variant.
+pub const LINKBLAZE_FLEX: Baseline = Baseline {
+    name: "LinkBlaze Flex",
+    fmax_mhz: 610.0,
+    wire_overhead: 1.045,
+    luts_32b: 240,
+    fmax_slope_per_doubling: 60.0,
+};
+
+/// LinkBlaze Fast: 2-input/1-output reduced router, near-spec speed.
+pub const LINKBLAZE_FAST: Baseline = Baseline {
+    name: "LinkBlaze Fast",
+    fmax_mhz: 950.0,
+    wire_overhead: 1.045,
+    luts_32b: 62,
+    fmax_slope_per_doubling: 70.0,
+};
+
+pub const BASELINES: [&Baseline; 4] = [&CONNECT, &HOPLITE, &LINKBLAZE_FLEX, &LINKBLAZE_FAST];
+
+pub fn baseline(name: &str) -> Option<&'static Baseline> {
+    BASELINES.iter().copied().find(|b| b.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_fmax_points() {
+        // §V-C2: "CONNECT and Hoplite achieved 313MHz and 638MHz on a
+        // Virtex UltraScale+".
+        assert_eq!(CONNECT.fmax_mhz, 313.0);
+        assert_eq!(HOPLITE.fmax_mhz, 638.0);
+    }
+
+    #[test]
+    fn fmax_at_width_degrades_but_floors() {
+        assert!(LINKBLAZE_FAST.fmax_at_width(256) < LINKBLAZE_FAST.fmax_at_width(32));
+        assert!(CONNECT.fmax_at_width(1024) >= 50.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(baseline("hoplite").is_some());
+        assert!(baseline("Bogus").is_none());
+    }
+
+    #[test]
+    fn hoplite_and_lbfast_are_about_5x_leaner() {
+        // §V-C2: "they use about 5x less LUTs than our routers" (305 LUTs).
+        assert!((305.0 / HOPLITE.luts_32b as f64) > 4.0);
+        assert!((305.0 / LINKBLAZE_FAST.luts_32b as f64) > 4.0);
+    }
+}

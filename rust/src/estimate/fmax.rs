@@ -1,0 +1,130 @@
+//! Router timing model (Fig 10 of the paper).
+//!
+//! The critical path of the bufferless router is allocator-grant ->
+//! one-hot output mux -> output register. Its delay is modeled as
+//!
+//!   delay(ps) = d0(ports, buffered) + dw * log2(width/32)
+//!
+//! - `d0` is the logic depth at the 32-bit anchor: the 3-port router's
+//!   2-branch mux fits one LUT level ahead of the register (667 ps ->
+//!   1.5 GHz); the 4-port router adds a level of arbitration fanin
+//!   (1000 ps -> 1.0 GHz). Both anchors are the paper's measured numbers.
+//! - `dw` captures net-delay growth from wider buses: more loads on the
+//!   grant nets and longer fabric spans. Widening is logarithmic, not
+//!   linear, because UltraScale+ column routing adds wire in parallel and
+//!   only select fanout deepens — this matches the paper's claim of
+//!   "about 1 GHz for data width between 64 and 256 bits".
+//! - Buffered routers insert the FIFO occupancy mux + almost-full logic in
+//!   the same path (+400 ps), which is why Fig 10's buffered curves sit
+//!   far below the bufferless ones.
+//!
+//! Fmax is clamped to the device specification ceiling.
+
+use super::RouterConfig;
+use crate::device::Device;
+
+/// Anchor delay (ps) at 32-bit width.
+fn d0_ps(cfg: &RouterConfig) -> f64 {
+    let base = match cfg.ports {
+        3 => 667.0,  // 1.5 GHz anchor (paper §V-C2)
+        4 => 1000.0, // 1.0 GHz anchor (paper §V-C2)
+        _ => unreachable!(),
+    };
+    if cfg.buffered { base + 400.0 } else { base }
+}
+
+/// Width-scaling net delay (ps per doubling beyond 32 bits).
+fn dw_ps(cfg: &RouterConfig) -> f64 {
+    // Buffered routers also widen the FIFO data mux, scaling a bit worse.
+    if cfg.buffered { 120.0 } else { 94.0 }
+}
+
+/// Critical-path delay estimate in picoseconds.
+pub fn critical_path_ps(cfg: &RouterConfig) -> f64 {
+    let doublings = (cfg.width_bits as f64 / 32.0).log2().max(0.0);
+    d0_ps(cfg) + dw_ps(cfg) * doublings
+}
+
+/// Maximum operating frequency in MHz on `device` (clamped to device spec).
+pub fn router_fmax_mhz(cfg: &RouterConfig, device: &Device) -> f64 {
+    let f = 1.0e6 / critical_path_ps(cfg);
+    f.min(device.spec_fmax_mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vu9p() -> Device {
+        Device::vu9p()
+    }
+
+    #[test]
+    fn anchors_match_paper() {
+        let d = vu9p();
+        let f3 = router_fmax_mhz(&RouterConfig::bufferless(3, 32), &d);
+        let f4 = router_fmax_mhz(&RouterConfig::bufferless(4, 32), &d);
+        // "1.5GHz and 1GHz ... achieved respectively by our 3-port and
+        // 4-port routers" (§V-C2).
+        assert!((f3 - 1500.0).abs() < 5.0, "f3={f3}");
+        assert!((f4 - 1000.0).abs() < 5.0, "f4={f4}");
+    }
+
+    #[test]
+    fn about_1ghz_between_64_and_256_bits() {
+        // Abstract/§I: "move data at about 1GHz for data width between 64
+        // and 256 bits" — both router flavors stay in the 0.78-1.45 GHz band.
+        let d = vu9p();
+        for ports in [3u32, 4] {
+            for w in [64u32, 128, 256] {
+                let f = router_fmax_mhz(&RouterConfig::bufferless(ports, w), &d);
+                assert!((750.0..=1500.0).contains(&f), "ports={ports} w={w} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn fmax_decreases_with_width() {
+        // Fig 10: "maximum frequency tends to decrease when the data width
+        // increases".
+        let d = vu9p();
+        for ports in [3u32, 4] {
+            let mut prev = f64::INFINITY;
+            for w in [32u32, 64, 128, 256] {
+                let f = router_fmax_mhz(&RouterConfig::bufferless(ports, w), &d);
+                assert!(f < prev || f == d.spec_fmax_mhz);
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn buffered_is_slower() {
+        let d = vu9p();
+        for ports in [3u32, 4] {
+            for w in [32u32, 64, 128, 256] {
+                let fb = router_fmax_mhz(&RouterConfig::buffered(ports, w), &d);
+                let fnb = router_fmax_mhz(&RouterConfig::bufferless(ports, w), &d);
+                assert!(fb < fnb, "ports={ports} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn beats_connect_and_hoplite_by_about_2x() {
+        // Abstract: "our NoC interconnect achieved about 2x higher maximum
+        // frequency than the state-of-the-art" (Hoplite 638 MHz).
+        let d = vu9p();
+        let f3 = router_fmax_mhz(&RouterConfig::bufferless(3, 32), &d);
+        assert!(f3 / 638.0 > 2.0);
+        assert!(f3 / 313.0 > 4.0);
+    }
+
+    #[test]
+    fn clamped_to_device_spec() {
+        let mut d = vu9p();
+        d.spec_fmax_mhz = 800.0;
+        let f = router_fmax_mhz(&RouterConfig::bufferless(3, 32), &d);
+        assert_eq!(f, 800.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Analytical implementation-cost models (area, Fmax, power, bandwidth).
+//!
+//! The paper's evaluation (§V-C) reports post-place-and-route numbers from
+//! Vivado 2018.2 on a VU9P. Vivado is not available in this environment, so
+//! these models play its role: structural resource/timing/power estimators
+//! calibrated to the two anchor points the paper gives — the 32-bit 3-port
+//! router at 305 LUTs / 1.5 GHz and the 32-bit 4-port router at 491 LUTs /
+//! 1.0 GHz — plus published baseline numbers (CONNECT 313 MHz, Hoplite
+//! 638 MHz on the same device class). Every relation the paper's figures
+//! draw (3- vs 4-port savings, buffered overhead, width scaling, bandwidth
+//! ratios) is reproduced by construction of the *structural* terms, not by
+//! hard-coding per-figure outputs.
+
+pub mod area;
+pub mod bandwidth;
+pub mod baselines;
+pub mod fmax;
+pub mod power;
+
+pub use area::router_resources;
+pub use bandwidth::{bw_per_lut_mbps, bw_per_wire_mbps, link_bandwidth_gbps};
+pub use baselines::{baseline, Baseline, BASELINES};
+pub use fmax::router_fmax_mhz;
+pub use power::{router_power_mw, PowerBreakdown};
+
+/// Static description of a router implementation point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterConfig {
+    /// Number of ports (radix): 3 for column-end routers, 4 for interior.
+    pub ports: u32,
+    /// Datapath width in bits (the paper sweeps 32..256).
+    pub width_bits: u32,
+    /// Input-buffered (the baseline the paper argues against) or bufferless.
+    pub buffered: bool,
+}
+
+impl RouterConfig {
+    pub fn bufferless(ports: u32, width_bits: u32) -> Self {
+        assert!((3..=4).contains(&ports), "paper's routers have 3 or 4 ports");
+        assert!(width_bits.is_power_of_two() && (32..=1024).contains(&width_bits));
+        RouterConfig { ports, width_bits, buffered: false }
+    }
+
+    pub fn buffered(ports: u32, width_bits: u32) -> Self {
+        RouterConfig { buffered: true, ..Self::bufferless(ports, width_bits) }
+    }
+
+    /// Crossbar data wires: each of the `m` output lines multiplexes
+    /// `n - 1` inputs (no self-loop, §IV-B1), each `width` bits wide.
+    pub fn crossbar_wires(&self) -> u64 {
+        (self.ports as u64) * (self.ports as u64 - 1) * self.width_bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossbar_has_no_self_loop() {
+        // (n-1) x m switches, paper §IV-B1.
+        assert_eq!(RouterConfig::bufferless(4, 32).crossbar_wires(), 4 * 3 * 32);
+        assert_eq!(RouterConfig::bufferless(3, 32).crossbar_wires(), 3 * 2 * 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn radix_out_of_range_panics() {
+        RouterConfig::bufferless(5, 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_must_be_pow2() {
+        RouterConfig::bufferless(3, 48);
+    }
+}

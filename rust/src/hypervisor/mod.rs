@@ -1,0 +1,358 @@
+//! The hypervisor: VI/VR lifecycle, allocation, elasticity, access control.
+//!
+//! Implements the cloud model of §III-B: VIs request units of FPGA
+//! virtualization (VRs); the hypervisor selects a suitable VR, programs the
+//! user design into its USER REGION (partial reconfiguration), and edits
+//! the VR registers (`ROUTER_ID`, `VR_ID`, `VI_ID`) that the Wrapper uses
+//! to build packet headers. Elasticity (§III-A) assigns *additional* VRs to
+//! already-deployed tasks at run-time, preferring placements adjacent to
+//! the tenant's existing regions so the direct VR-to-VR links of Fig 3b
+//! can stream between sub-functions.
+
+pub mod reconfig;
+
+use crate::noc::{NocSim, Topology};
+use crate::placer::Floorplan;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Allocation policy for picking a free VR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Lowest-index free VR.
+    FirstFit,
+    /// Free VR adjacent to one of the tenant's existing VRs if possible
+    /// (enables direct-link streaming), else first fit.
+    AdjacentFirst,
+}
+
+/// State of one virtual region.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VrStatus {
+    Free,
+    /// Allocated to a VI but not yet programmed.
+    Allocated { vi: u16 },
+    /// Programmed with a named accelerator design.
+    Programmed { vi: u16, design: String },
+}
+
+/// The destination registers the hypervisor writes at configuration time
+/// (§IV-C): where this VR's Wrapper sends its output packets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct VrRegisters {
+    pub dest_router_id: u8,
+    pub dest_vr_east: bool,
+    pub vi_id: u16,
+}
+
+#[derive(Debug, Clone)]
+pub struct VrRecord {
+    pub status: VrStatus,
+    pub registers: VrRegisters,
+    /// VR this region streams its output to (None = results return to the
+    /// host). Set when `program_vr` is given a destination; the register
+    /// fields mirror it in wire format.
+    pub stream_dest: Option<usize>,
+}
+
+/// A tenant's virtual instance.
+#[derive(Debug, Clone)]
+pub struct ViRecord {
+    pub id: u16,
+    pub name: String,
+    pub vrs: Vec<usize>,
+}
+
+/// Events the hypervisor reports (for logs/metrics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    ViCreated { vi: u16 },
+    VrAllocated { vi: u16, vr: usize },
+    VrProgrammed { vi: u16, vr: usize, design: String, time_us: f64 },
+    DirectLinkWired { src: usize, dst: usize },
+    VrReleased { vi: u16, vr: usize },
+    ViDestroyed { vi: u16 },
+}
+
+/// The hypervisor proper.
+pub struct Hypervisor {
+    pub topo: Topology,
+    pub floorplan: Floorplan,
+    pub vrs: Vec<VrRecord>,
+    pub vis: HashMap<u16, ViRecord>,
+    pub policy: Policy,
+    pub events: Vec<Event>,
+    next_vi: u16,
+}
+
+impl Hypervisor {
+    pub fn new(topo: Topology, floorplan: Floorplan, policy: Policy) -> Self {
+        let n = topo.n_vrs();
+        Hypervisor {
+            topo,
+            floorplan,
+            vrs: vec![
+                VrRecord {
+                    status: VrStatus::Free,
+                    registers: VrRegisters::default(),
+                    stream_dest: None,
+                };
+                n
+            ],
+            vis: HashMap::new(),
+            policy,
+            events: Vec::new(),
+            next_vi: 1,
+        }
+    }
+
+    /// §III-B step 1-3: create a VI (no FPGA resources yet).
+    pub fn create_vi(&mut self, name: &str) -> u16 {
+        let vi = self.next_vi;
+        self.next_vi += 1;
+        self.vis.insert(vi, ViRecord { id: vi, name: name.to_string(), vrs: Vec::new() });
+        self.events.push(Event::ViCreated { vi });
+        vi
+    }
+
+    pub fn free_vrs(&self) -> usize {
+        self.vrs.iter().filter(|v| v.status == VrStatus::Free).count()
+    }
+
+    /// Pick a free VR for `vi` according to the policy.
+    fn pick_vr(&self, vi: u16) -> Option<usize> {
+        let free = |i: &usize| self.vrs[*i].status == VrStatus::Free;
+        let all_free: Vec<usize> = (0..self.vrs.len()).filter(free).collect();
+        if all_free.is_empty() {
+            return None;
+        }
+        if self.policy == Policy::AdjacentFirst {
+            if let Some(rec) = self.vis.get(&vi) {
+                for &mine in &rec.vrs {
+                    if let Some(&adj) =
+                        all_free.iter().find(|&&c| self.topo.vrs_adjacent(mine, c))
+                    {
+                        return Some(adj);
+                    }
+                }
+            }
+        }
+        all_free.first().copied()
+    }
+
+    /// Allocate one VR to a VI ("select FPGA unit of virtualization").
+    /// Configures the NoC access monitor for that region.
+    pub fn allocate_vr(&mut self, vi: u16, sim: &mut NocSim) -> Result<usize> {
+        if !self.vis.contains_key(&vi) {
+            bail!("unknown VI {vi}");
+        }
+        let Some(vr) = self.pick_vr(vi) else {
+            bail!("no free VR for VI {vi} (resource pool exhausted)");
+        };
+        self.vrs[vr].status = VrStatus::Allocated { vi };
+        self.vrs[vr].registers.vi_id = vi;
+        self.vis.get_mut(&vi).unwrap().vrs.push(vr);
+        sim.assign_vr(vr, vi);
+        self.events.push(Event::VrAllocated { vi, vr });
+        Ok(vr)
+    }
+
+    /// Program a design into an allocated VR (partial reconfiguration) and
+    /// point its Wrapper registers at `dest_vr` (if the design streams to
+    /// another region).
+    pub fn program_vr(
+        &mut self,
+        vi: u16,
+        vr: usize,
+        design: &str,
+        dest_vr: Option<usize>,
+    ) -> Result<f64> {
+        match self.vrs[vr].status {
+            VrStatus::Allocated { vi: owner } | VrStatus::Programmed { vi: owner, .. }
+                if owner == vi => {}
+            _ => bail!("VR{vr} is not allocated to VI {vi}"),
+        }
+        let rect = self.floorplan.pblocks.get(self.floorplan.vr_pb[vr]).rect;
+        let time_us = reconfig::reconfig_time_us(&rect);
+        if let Some(dst) = dest_vr {
+            self.vrs[vr].registers.dest_router_id = self.topo.router_of_vr(dst);
+            self.vrs[vr].registers.dest_vr_east = dst % 2 == 1;
+        }
+        self.vrs[vr].stream_dest = dest_vr;
+        self.vrs[vr].status = VrStatus::Programmed { vi, design: design.to_string() };
+        self.events.push(Event::VrProgrammed {
+            vi,
+            vr,
+            design: design.to_string(),
+            time_us,
+        });
+        Ok(time_us)
+    }
+
+    /// Elastic growth (§III-A): allocate an additional VR to a running VI,
+    /// wiring a direct link from `stream_src` if the new VR is adjacent.
+    pub fn grow(
+        &mut self,
+        vi: u16,
+        stream_src: Option<usize>,
+        sim: &mut NocSim,
+    ) -> Result<usize> {
+        let vr = self.allocate_vr(vi, sim)?;
+        if let Some(src) = stream_src {
+            if self.topo.vrs_adjacent(src, vr) {
+                sim.wire_direct(src, vr)?;
+                self.events.push(Event::DirectLinkWired { src, dst: vr });
+            }
+        }
+        Ok(vr)
+    }
+
+    /// Release a VR back to the pool (rapid elasticity: resources are
+    /// "provisioned and released").
+    pub fn release_vr(&mut self, vi: u16, vr: usize, sim: &mut NocSim) -> Result<()> {
+        match &self.vrs[vr].status {
+            VrStatus::Allocated { vi: o } | VrStatus::Programmed { vi: o, .. } if *o == vi => {}
+            _ => bail!("VR{vr} is not held by VI {vi}"),
+        }
+        self.vrs[vr] = VrRecord {
+            status: VrStatus::Free,
+            registers: VrRegisters::default(),
+            stream_dest: None,
+        };
+        if let Some(rec) = self.vis.get_mut(&vi) {
+            rec.vrs.retain(|&x| x != vr);
+        }
+        sim.release_vr(vr);
+        self.events.push(Event::VrReleased { vi, vr });
+        Ok(())
+    }
+
+    /// Tear down a VI, releasing all its VRs.
+    pub fn destroy_vi(&mut self, vi: u16, sim: &mut NocSim) -> Result<()> {
+        let Some(rec) = self.vis.remove(&vi) else { bail!("unknown VI {vi}") };
+        for vr in rec.vrs {
+            self.vrs[vr] = VrRecord {
+                status: VrStatus::Free,
+                registers: VrRegisters::default(),
+                stream_dest: None,
+            };
+            sim.release_vr(vr);
+        }
+        self.events.push(Event::ViDestroyed { vi });
+        Ok(())
+    }
+
+    /// Device utilization: programmed VRs / total VRs.
+    pub fn vr_utilization(&self) -> f64 {
+        let used = self
+            .vrs
+            .iter()
+            .filter(|v| matches!(v.status, VrStatus::Programmed { .. }))
+            .count();
+        used as f64 / self.vrs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::placer::case_study_floorplan;
+
+    fn setup(policy: Policy) -> (Hypervisor, NocSim) {
+        let device = Device::vu9p();
+        let (topo, fp) = case_study_floorplan(&device).unwrap();
+        let sim = NocSim::new(topo.clone());
+        (Hypervisor::new(topo, fp, policy), sim)
+    }
+
+    #[test]
+    fn vi_lifecycle() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let vi = h.create_vi("tenant-a");
+        let vr = h.allocate_vr(vi, &mut sim).unwrap();
+        assert_eq!(h.vrs[vr].status, VrStatus::Allocated { vi });
+        assert_eq!(sim.vrs[vr].owner_vi, Some(vi));
+        let t = h.program_vr(vi, vr, "fir", None).unwrap();
+        assert!(t > 0.0);
+        h.destroy_vi(vi, &mut sim).unwrap();
+        assert_eq!(h.free_vrs(), 6);
+        assert_eq!(sim.vrs[vr].owner_vi, None);
+    }
+
+    #[test]
+    fn cannot_program_foreign_vr() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let a = h.create_vi("a");
+        let b = h.create_vi("b");
+        let vr = h.allocate_vr(a, &mut sim).unwrap();
+        assert!(h.program_vr(b, vr, "aes", None).is_err());
+    }
+
+    #[test]
+    fn pool_exhaustion_errors() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let vi = h.create_vi("greedy");
+        for _ in 0..6 {
+            h.allocate_vr(vi, &mut sim).unwrap();
+        }
+        assert!(h.allocate_vr(vi, &mut sim).is_err());
+    }
+
+    #[test]
+    fn adjacent_first_enables_direct_link() {
+        // The paper's elasticity story: VI3's FPU (VR3) grows and gets VR4
+        // ... in our indexing, growth lands adjacent so FPU->AES streams
+        // over a direct link.
+        let (mut h, mut sim) = setup(Policy::AdjacentFirst);
+        let vi = h.create_vi("vi3");
+        let first = h.allocate_vr(vi, &mut sim).unwrap();
+        let second = h.grow(vi, Some(first), &mut sim).unwrap();
+        assert!(h.topo.vrs_adjacent(first, second));
+        assert!(h
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::DirectLinkWired { .. })));
+    }
+
+    #[test]
+    fn first_fit_is_lowest_index() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let a = h.create_vi("a");
+        assert_eq!(h.allocate_vr(a, &mut sim).unwrap(), 0);
+        assert_eq!(h.allocate_vr(a, &mut sim).unwrap(), 1);
+    }
+
+    #[test]
+    fn release_then_reallocate() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let a = h.create_vi("a");
+        let vr = h.allocate_vr(a, &mut sim).unwrap();
+        h.release_vr(a, vr, &mut sim).unwrap();
+        assert_eq!(h.free_vrs(), 6);
+        let b = h.create_vi("b");
+        assert_eq!(h.allocate_vr(b, &mut sim).unwrap(), vr);
+    }
+
+    #[test]
+    fn wrapper_registers_written_on_program() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let vi = h.create_vi("s");
+        let src = h.allocate_vr(vi, &mut sim).unwrap();
+        let dst = h.allocate_vr(vi, &mut sim).unwrap();
+        h.program_vr(vi, src, "fpu", Some(dst)).unwrap();
+        let regs = h.vrs[src].registers;
+        assert_eq!(regs.dest_router_id, h.topo.router_of_vr(dst));
+        assert_eq!(regs.vi_id, vi);
+    }
+
+    #[test]
+    fn utilization_counts_programmed_only() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let vi = h.create_vi("u");
+        let vr = h.allocate_vr(vi, &mut sim).unwrap();
+        assert_eq!(h.vr_utilization(), 0.0);
+        h.program_vr(vi, vr, "fft", None).unwrap();
+        assert!((h.vr_utilization() - 1.0 / 6.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,48 @@
+//! Partial-reconfiguration timing model (§IV-C: "implements the partial
+//! reconfiguration paradigm"; §III-B: users program VRs at run-time).
+//!
+//! Programming a VR loads a partial bitstream whose size scales with the
+//! region's CLB count; the ICAP/PCAP port moves it at a fixed rate. These
+//! numbers follow UltraScale+ configuration architecture: ~212 bytes of
+//! frame data per CLB and an 800 MB/s ICAP (32-bit @ 200 MHz).
+
+use crate::device::Rect;
+
+/// Configuration frame bytes per CLB (UltraScale+ ballpark).
+pub const BYTES_PER_CLB: u64 = 212;
+/// ICAP throughput in bytes/second.
+pub const ICAP_BYTES_PER_SEC: u64 = 800_000_000;
+/// Fixed software cost of a reconfiguration request (driver + handshake).
+pub const RECONFIG_SW_OVERHEAD_US: f64 = 150.0;
+
+/// Partial bitstream size for a region.
+pub fn bitstream_bytes(rect: &Rect) -> u64 {
+    rect.clbs() as u64 * BYTES_PER_CLB
+}
+
+/// Time to program a region, in microseconds.
+pub fn reconfig_time_us(rect: &Rect) -> f64 {
+    RECONFIG_SW_OVERHEAD_US + bitstream_bytes(rect) as f64 / ICAP_BYTES_PER_SEC as f64 * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_study_vr_programs_in_sub_ms() {
+        // A 1121-CLB VR (the paper's VR5) -> ~238 KB bitstream, ~450 us.
+        let r = Rect::new(0, 0, 19, 59);
+        let bytes = bitstream_bytes(&r);
+        assert!((200_000..300_000).contains(&bytes), "bytes={bytes}");
+        let t = reconfig_time_us(&r);
+        assert!((300.0..800.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn bigger_regions_take_longer() {
+        let small = Rect::new(0, 0, 5, 60);
+        let big = Rect::new(0, 0, 20, 120);
+        assert!(reconfig_time_us(&big) > reconfig_time_us(&small));
+    }
+}

@@ -1,0 +1,16 @@
+//! fpga-mt: reproduction of "Architecture Support for FPGA Multi-tenancy in
+//! the Cloud" (Mbongue et al., 2020) as a simulation + real-compute stack.
+//!
+//! See DESIGN.md for the layer map and the per-experiment index.
+
+pub mod accel;
+pub mod bench_support;
+pub mod cloud;
+pub mod coordinator;
+pub mod device;
+pub mod hypervisor;
+pub mod noc;
+pub mod placer;
+pub mod runtime;
+pub mod estimate;
+pub mod util;

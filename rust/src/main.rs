@@ -1,0 +1,256 @@
+//! fpga-mt CLI: drive the multi-tenant cloud-FPGA stack.
+//!
+//! Subcommands map to the paper's experiments; `benches/` wraps the same
+//! entry points for the per-figure reproductions.
+
+use anyhow::Result;
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::cloud::{compare, fig14_io_trips, IoConfig, Link, Scheme};
+use fpga_mt::coordinator::System;
+use fpga_mt::device::Device;
+use fpga_mt::estimate::{
+    self, router_fmax_mhz, router_power_mw, router_resources, RouterConfig, BASELINES,
+};
+use fpga_mt::noc::traffic;
+use fpga_mt::placer;
+use fpga_mt::util::cli::Args;
+use fpga_mt::util::table::{fnum, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("resources") => cmd_resources(),
+        Some("fmax") => cmd_fmax(),
+        Some("power") => cmd_power(),
+        Some("bandwidth") => cmd_bandwidth(),
+        Some("latency") => cmd_latency(&args),
+        Some("io-trip") => cmd_io_trip(),
+        Some("throughput") => cmd_throughput(),
+        Some("compare") => cmd_compare(),
+        Some("placement") => cmd_placement(),
+        Some("case-study") => cmd_case_study(&args),
+        _ => {
+            eprintln!(
+                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study> [--...]\n\
+                 \n  resources   Fig 8  router area sweep\
+                 \n  power       Fig 9  router power sweep\
+                 \n  fmax        Fig 10 max frequency sweep\
+                 \n  bandwidth   Fig 11 bandwidth per wire / per LUT\
+                 \n  latency     Fig 12 latency & waiting vs injection rate\
+                 \n  placement   Fig 13 case-study floorplan (ASCII)\
+                 \n  io-trip     Fig 14 IO trip multi-tenant vs directIO\
+                 \n  throughput  Fig 15 streaming throughput local/remote\
+                 \n  compare     Table II scheme comparison\
+                 \n  case-study  Table I end-to-end deployment (needs artifacts/)"
+            );
+            Ok(())
+        }
+    }
+}
+
+const WIDTHS: [u32; 4] = [32, 64, 128, 256];
+
+fn cmd_resources() -> Result<()> {
+    let mut t = Table::new(vec!["config", "width", "LUT", "LUTRAM", "FF", "BRAM"]);
+    for &buffered in &[false, true] {
+        for ports in [3u32, 4] {
+            for w in WIDTHS {
+                let cfg = if buffered {
+                    RouterConfig::buffered(ports, w)
+                } else {
+                    RouterConfig::bufferless(ports, w)
+                };
+                let r = router_resources(&cfg);
+                t.row(vec![
+                    format!("{}-port {}", ports, if buffered { "buffered" } else { "bufferless" }),
+                    w.to_string(),
+                    r.lut.to_string(),
+                    r.lutram.to_string(),
+                    r.ff.to_string(),
+                    r.bram.to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fmax() -> Result<()> {
+    let dev = Device::vu9p();
+    let mut t = Table::new(vec!["design", "width", "Fmax (MHz)"]);
+    for ports in [3u32, 4] {
+        for w in WIDTHS {
+            let f = router_fmax_mhz(&RouterConfig::bufferless(ports, w), &dev);
+            t.row(vec![format!("{ports}-port bufferless"), w.to_string(), fnum(f)]);
+            let fb = router_fmax_mhz(&RouterConfig::buffered(ports, w), &dev);
+            t.row(vec![format!("{ports}-port buffered"), w.to_string(), fnum(fb)]);
+        }
+    }
+    for b in BASELINES {
+        for w in WIDTHS {
+            t.row(vec![b.name.to_string(), w.to_string(), fnum(b.fmax_at_width(w))]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_power() -> Result<()> {
+    let mut t = Table::new(vec!["config", "width", "logic", "signal", "clock", "bram", "total mW"]);
+    for &buffered in &[false, true] {
+        for ports in [3u32, 4] {
+            for w in WIDTHS {
+                let cfg = if buffered {
+                    RouterConfig::buffered(ports, w)
+                } else {
+                    RouterConfig::bufferless(ports, w)
+                };
+                let p = router_power_mw(&cfg);
+                t.row(vec![
+                    format!("{}-port {}", ports, if buffered { "buffered" } else { "bufferless" }),
+                    w.to_string(),
+                    fnum(p.logic_mw),
+                    fnum(p.signal_mw),
+                    fnum(p.clock_mw),
+                    fnum(p.bram_mw),
+                    fnum(p.total_mw()),
+                ]);
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_bandwidth() -> Result<()> {
+    let dev = Device::vu9p();
+    let mut t = Table::new(vec!["design", "bw/wire (Mb/s)", "bw/LUT (Mb/s)"]);
+    for ports in [3u32, 4] {
+        let cfg = RouterConfig::bufferless(ports, 32);
+        t.row(vec![
+            format!("ours {ports}-port"),
+            fnum(estimate::bw_per_wire_mbps(&cfg, &dev)),
+            fnum(estimate::bw_per_lut_mbps(&cfg, &dev)),
+        ]);
+    }
+    for b in BASELINES {
+        t.row(vec![b.name.to_string(), fnum(b.bw_per_wire_mbps()), fnum(b.bw_per_lut_mbps())]);
+    }
+    t.print();
+    println!(
+        "deployed NoC link: {} Gbps (32-bit @ 800 MHz)",
+        estimate::link_bandwidth_gbps(32, 800.0)
+    );
+    Ok(())
+}
+
+fn cmd_latency(args: &Args) -> Result<()> {
+    let cycles = args.get_u64("cycles", 60_000);
+    let seed = args.get_u64("seed", 42);
+    let rates = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+    let (nc, coll) = traffic::fig12_sweep(&rates, cycles, seed);
+    let mut t = Table::new(vec!["rate", "lat (nc)", "wait (nc)", "lat (coll)", "wait (coll)"]);
+    for (a, b) in nc.iter().zip(&coll) {
+        let stable = b.injection_rate < 0.5;
+        t.row(vec![
+            format!("{:.1}", a.injection_rate),
+            fnum(a.avg_latency),
+            fnum(a.avg_waiting),
+            if stable { fnum(b.avg_latency) } else { format!("{} (sat)", fnum(b.avg_latency)) },
+            if stable { fnum(b.avg_waiting) } else { format!("{} (sat)", fnum(b.avg_waiting)) },
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_io_trip() -> Result<()> {
+    let accels: Vec<(&str, u32)> =
+        CASE_STUDY.iter().map(|a| (a.display, (a.vr / 2 + 1) as u32)).collect();
+    let rows = fig14_io_trips(&accels, 4000, &IoConfig::default(), 7);
+    let mut t = Table::new(vec!["accelerator", "directIO (µs)", "multi-tenant (µs)"]);
+    for r in rows {
+        t.row(vec![r.accel, fnum(r.direct_us), fnum(r.multi_us)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_throughput() -> Result<()> {
+    let cfg = IoConfig::default();
+    let mut t = Table::new(vec!["payload KB", "local Gb/s", "remote Gb/s"]);
+    for kb in [100u64, 200, 300, 400] {
+        let bytes = kb * 1024;
+        t.row(vec![
+            kb.to_string(),
+            fnum(cfg.stream_gbps(Scheme::MultiTenant, bytes, &Link::local())),
+            fnum(cfg.stream_gbps(Scheme::MultiTenant, bytes, &Link::testbed_ethernet())),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare() -> Result<()> {
+    let rows = compare::table2(&IoConfig::default(), 3);
+    let mut t = Table::new(vec!["scheme", "realloc", "elasticity", "on-chip com", "IO trip (µs)"]);
+    for r in rows {
+        t.row(vec![
+            r.name.to_string(),
+            if r.runtime_realloc { "Yes" } else { "No" }.to_string(),
+            if r.hw_elasticity { "Yes" } else { "No" }.to_string(),
+            if r.on_chip_com { "Yes" } else { "No" }.to_string(),
+            r.io_trip_us.map(fnum).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_placement() -> Result<()> {
+    let device = Device::vu9p();
+    let (_, fp) = placer::case_study_floorplan(&device)?;
+    let labels: Vec<(usize, String)> =
+        CASE_STUDY.iter().map(|a| (a.vr, format!("{} (VI{})", a.display, a.vi))).collect();
+    println!("{}", placer::ascii::render(&device, &fp, &labels));
+    println!("NoC CLB share: {:.3}%", fp.noc_clb_fraction(&device) * 100.0);
+    Ok(())
+}
+
+fn cmd_case_study(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let iters = args.get_u64("iters", 4);
+    let mut sys = System::case_study(dir)?;
+    println!(
+        "deployed: {} VRs, utilization {:.0}%",
+        sys.hv.vrs.len(),
+        sys.hv.vr_utilization() * 100.0
+    );
+    let payload: Vec<u8> = (0..=255).collect();
+    let mut t = Table::new(vec!["accel", "VI", "VR", "path", "io µs", "compute µs", "noc cycles"]);
+    for spec in &CASE_STUDY {
+        let mut last = None;
+        for _ in 0..iters {
+            last = Some(sys.submit(spec.vi, spec.vr, &payload)?);
+        }
+        let resp = last.unwrap();
+        t.row(vec![
+            spec.display.to_string(),
+            format!("VI{}", spec.vi),
+            format!("VR{}", spec.vr + 1),
+            resp.path.join("->"),
+            fnum(resp.timing.io_us),
+            fnum(resp.timing.compute_us),
+            resp.timing.noc_cycles.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "requests={} mean_io={:.1}µs mean_total={:.1}µs",
+        sys.metrics.requests,
+        sys.metrics.io_us.mean(),
+        sys.metrics.total_us.mean()
+    );
+    Ok(())
+}

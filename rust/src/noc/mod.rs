@@ -1,0 +1,15 @@
+//! The paper's soft NoC (§IV): packet format, bufferless reduced-radix
+//! routers, column topologies, Algorithm-1 routing, a cycle-accurate
+//! network simulator, and traffic patterns for the evaluation.
+
+pub mod packet;
+pub mod router;
+pub mod routing;
+pub mod sim;
+pub mod topology;
+pub mod traffic;
+
+pub use packet::{segment_message, Flit, Header, VrSide};
+pub use routing::{hop_count, route, OutPort};
+pub use sim::{NocSim, NocStats, VrState};
+pub use topology::{Flavor, Topology};

@@ -1,0 +1,355 @@
+//! Single-router cycle model (§IV-B, Fig 2b/4/5/6).
+//!
+//! This is the microarchitecture testbench used for the paper's router
+//! evaluation (Fig 6 mutual-exclusion schedule, Fig 12 latency/waiting
+//! study): one bufferless router with injector queues attached to each
+//! input port and sinks on each output port.
+//!
+//! Microarchitecture: per-output *allocator* implements the 3-way
+//! handshake — (1) source signals EMPTY=0, (2) allocator asserts RD_EN,
+//! pulling the flit into the crossbar pipeline register, (3) next cycle the
+//! flit crosses into the output register and is consumed the cycle after.
+//! A flit therefore needs **two cycles** to traverse the router, and
+//! back-to-back flits stream at **one per cycle** (Fig 6). Mutual
+//! exclusion: each output grants a single input per cycle, round-robin
+//! among contenders (the Fig 4/5 encoder).
+
+use std::collections::VecDeque;
+
+use crate::util::{Rng, Summary};
+
+/// A queued item in the single-router testbench.
+#[derive(Debug, Clone, Copy)]
+struct TbFlit {
+    enqueued_at: u64,
+    out_port: usize,
+    id: u64,
+}
+
+/// Pipeline slot: flit + cycle of its last move (a flit moves at most one
+/// stage per cycle — the register abstraction).
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    flit: TbFlit,
+    moved_at: u64,
+}
+
+/// Delivered-flit record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Delivery {
+    pub id: u64,
+    pub in_port: usize,
+    pub out_port: usize,
+    pub enqueued_at: u64,
+    pub granted_at: u64,
+    pub delivered_at: u64,
+}
+
+impl Delivery {
+    /// Waiting time: cycles from arrival in the source queue until the flit
+    /// has been loaded into the crossbar, inclusive of the grant cycle.
+    pub fn waiting(&self) -> u64 {
+        self.granted_at + 1 - self.enqueued_at
+    }
+    /// End-to-end router latency: arrival in queue to delivery at the sink.
+    pub fn latency(&self) -> u64 {
+        self.delivered_at - self.enqueued_at
+    }
+}
+
+/// One bufferless router with per-port injector queues and sinks.
+pub struct SingleRouter {
+    ports: usize,
+    /// Source queue per input port (the "data stays in the VR" of §IV-B1).
+    queues: Vec<VecDeque<TbFlit>>,
+    /// Grant cycle per in-flight flit (keyed implicitly by pipeline slots).
+    stage1: Vec<Option<(Slot, usize, u64)>>, // (slot, in_port, granted_at)
+    out_reg: Vec<Option<(Slot, usize, u64)>>,
+    rr: Vec<usize>,
+    cycle: u64,
+    next_id: u64,
+    pub deliveries: Vec<Delivery>,
+}
+
+impl SingleRouter {
+    pub fn new(ports: usize) -> Self {
+        assert!((2..=4).contains(&ports));
+        SingleRouter {
+            ports,
+            queues: vec![VecDeque::new(); ports],
+            stage1: vec![None; ports],
+            out_reg: vec![None; ports],
+            rr: vec![0; ports],
+            cycle: 0,
+            next_id: 0,
+            deliveries: Vec::new(),
+        }
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Inject a flit into `in_port`'s queue, destined for `out_port`.
+    pub fn inject(&mut self, in_port: usize, out_port: usize) -> u64 {
+        assert!(in_port < self.ports && out_port < self.ports);
+        assert_ne!(in_port, out_port, "crossbar has no self-loop");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queues[in_port].push_back(TbFlit { enqueued_at: self.cycle, out_port, id });
+        id
+    }
+
+    pub fn queue_len(&self, port: usize) -> usize {
+        self.queues[port].len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.stage1.iter().chain(self.out_reg.iter()).filter(|s| s.is_some()).count()
+            + self.queues.iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    /// Advance one clock cycle.
+    pub fn step(&mut self) {
+        let now = self.cycle;
+
+        // Phase 1 — sinks consume output registers (1 flit/cycle/port).
+        for p in 0..self.ports {
+            if let Some((slot, in_port, granted_at)) = self.out_reg[p] {
+                if slot.moved_at < now {
+                    self.out_reg[p] = None;
+                    self.deliveries.push(Delivery {
+                        id: slot.flit.id,
+                        in_port,
+                        out_port: p,
+                        enqueued_at: slot.flit.enqueued_at,
+                        granted_at,
+                        delivered_at: now,
+                    });
+                }
+            }
+        }
+
+        // Phase 2 — crossbar pipeline register advances into output register.
+        for p in 0..self.ports {
+            if self.out_reg[p].is_none() {
+                if let Some((slot, in_port, granted_at)) = self.stage1[p] {
+                    if slot.moved_at < now {
+                        self.stage1[p] = None;
+                        self.out_reg[p] =
+                            Some((Slot { flit: slot.flit, moved_at: now }, in_port, granted_at));
+                    }
+                }
+            }
+        }
+
+        // Phase 3 — allocators grant one input per free output channel,
+        // round-robin among requesting inputs (Fig 4/5).
+        for p in 0..self.ports {
+            if self.stage1[p].is_some() {
+                continue;
+            }
+            let mut granted = None;
+            for k in 0..self.ports {
+                let in_port = (self.rr[p] + k) % self.ports;
+                if in_port == p {
+                    continue; // (n-1) x m crossbar: no self switch
+                }
+                if let Some(head) = self.queues[in_port].front() {
+                    if head.out_port == p && head.enqueued_at <= now {
+                        granted = Some(in_port);
+                        break;
+                    }
+                }
+            }
+            if let Some(in_port) = granted {
+                let flit = self.queues[in_port].pop_front().unwrap();
+                self.stage1[p] = Some((Slot { flit, moved_at: now }, in_port, now));
+                self.rr[p] = (in_port + 1) % self.ports; // fairness rotation
+            }
+        }
+
+        self.cycle += 1;
+    }
+
+    pub fn run(&mut self, cycles: u64) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
+    /// Drain: step until no flit is in flight (bounded).
+    pub fn drain(&mut self, max_cycles: u64) {
+        let mut left = max_cycles;
+        while self.in_flight() > 0 && left > 0 {
+            self.step();
+            left -= 1;
+        }
+    }
+
+    /// Summaries of waiting time and latency over all deliveries.
+    pub fn stats(&self) -> (Summary, Summary) {
+        let mut waiting = Summary::new();
+        let mut latency = Summary::new();
+        for d in &self.deliveries {
+            waiting.add(d.waiting() as f64);
+            latency.add(d.latency() as f64);
+        }
+        (waiting, latency)
+    }
+}
+
+/// Packet-burst injector: each cycle, with probability `rate/mean_burst`, a
+/// whole multi-flit packet (geometric length, mean `mean_burst`) lands in
+/// the source queue at once — the VR's Wrapper segments a message into flits
+/// that all become ready together (§IV-C). Batch arrivals are what create
+/// the queueing the paper measures in Fig 12; the average injection rate is
+/// exactly `rate` flits/cycle.
+pub struct BurstInjector {
+    pub rate: f64,
+    pub mean_burst: f64,
+}
+
+impl BurstInjector {
+    pub fn new(rate: f64, mean_burst: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(mean_burst >= 1.0);
+        BurstInjector { rate, mean_burst }
+    }
+
+    /// Number of flits arriving this cycle (0 or a whole packet).
+    pub fn tick(&mut self, rng: &mut Rng) -> u64 {
+        if rng.chance(self.rate / self.mean_burst) {
+            // Geometric packet length with mean `mean_burst` (truncated).
+            let p = 1.0 / self.mean_burst;
+            let mut len = 1u64;
+            while !rng.chance(p) && len < 64 {
+                len += 1;
+            }
+            len
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 6: three inputs target port 3 of a 4-port router simultaneously.
+    /// The allocator loads one per cycle; outputs appear pipelined, one per
+    /// cycle from the third cycle on.
+    #[test]
+    fn fig6_mutual_exclusion_schedule() {
+        let mut r = SingleRouter::new(4);
+        r.inject(0, 3);
+        r.inject(1, 3);
+        r.inject(2, 3);
+        r.drain(32);
+        let mut ds: Vec<_> = r.deliveries.clone();
+        ds.sort_by_key(|d| d.delivered_at);
+        assert_eq!(ds.len(), 3);
+        // grants on cycles 0,1,2; deliveries on 2,3,4 — one per cycle.
+        assert_eq!(ds.iter().map(|d| d.granted_at).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(ds.iter().map(|d| d.delivered_at).collect::<Vec<_>>(), vec![2, 3, 4]);
+        // all three inputs served exactly once (fairness).
+        let mut ins: Vec<_> = ds.iter().map(|d| d.in_port).collect();
+        ins.sort_unstable();
+        assert_eq!(ins, vec![0, 1, 2]);
+    }
+
+    /// "an incoming flit needs two clock cycles to traverse a router".
+    #[test]
+    fn uncontended_traversal_is_two_cycles() {
+        let mut r = SingleRouter::new(3);
+        r.inject(0, 1);
+        r.drain(16);
+        assert_eq!(r.deliveries.len(), 1);
+        assert_eq!(r.deliveries[0].latency(), 2);
+        assert_eq!(r.deliveries[0].waiting(), 1);
+    }
+
+    /// "when the inputs are pipelined, only the first one will take two
+    /// cycles. The following packets will be available ... after each cycle."
+    #[test]
+    fn pipelined_stream_sustains_one_per_cycle() {
+        let mut r = SingleRouter::new(3);
+        for _ in 0..10 {
+            r.inject(0, 1);
+        }
+        r.drain(64);
+        let mut ds = r.deliveries.clone();
+        ds.sort_by_key(|d| d.delivered_at);
+        assert_eq!(ds.len(), 10);
+        for w in ds.windows(2) {
+            assert_eq!(w[1].delivered_at - w[0].delivered_at, 1);
+        }
+        assert_eq!(ds[0].latency(), 2);
+    }
+
+    /// Round-robin keeps contending inputs within one grant of each other.
+    #[test]
+    fn round_robin_fairness_under_saturation() {
+        let mut r = SingleRouter::new(4);
+        for _ in 0..60 {
+            r.inject(0, 3);
+            r.inject(1, 3);
+            r.inject(2, 3);
+        }
+        r.run(100);
+        let mut counts = [0u64; 4];
+        for d in &r.deliveries {
+            counts[d.in_port] += 1;
+        }
+        let served: Vec<u64> = counts[..3].to_vec();
+        let max = *served.iter().max().unwrap();
+        let min = *served.iter().min().unwrap();
+        assert!(max - min <= 1, "unfair: {served:?}");
+    }
+
+    /// No collision: distinct outputs never block each other.
+    #[test]
+    fn parallel_streams_do_not_interfere() {
+        let mut r = SingleRouter::new(3);
+        for _ in 0..20 {
+            r.inject(0, 1);
+            r.inject(1, 2);
+            r.inject(2, 0);
+        }
+        r.drain(128);
+        assert_eq!(r.deliveries.len(), 60);
+        // Per-stream delivery is still 1/cycle after fill.
+        let last = r.deliveries.iter().map(|d| d.delivered_at).max().unwrap();
+        assert!(last <= 2 + 20, "streams interfered: last={last}");
+    }
+
+    #[test]
+    fn per_input_fifo_order_is_preserved() {
+        let mut r = SingleRouter::new(3);
+        let ids: Vec<u64> = (0..8).map(|_| r.inject(0, 2)).collect();
+        r.drain(64);
+        let mut ds = r.deliveries.clone();
+        ds.sort_by_key(|d| d.delivered_at);
+        assert_eq!(ds.iter().map(|d| d.id).collect::<Vec<_>>(), ids);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_injection_panics() {
+        let mut r = SingleRouter::new(3);
+        r.inject(1, 1);
+    }
+
+    #[test]
+    fn burst_injector_hits_target_rate() {
+        let mut rng = Rng::new(9);
+        for &rate in &[0.2, 0.5, 0.8] {
+            let mut inj = BurstInjector::new(rate, 2.0);
+            let n = 200_000u64;
+            let flits: u64 = (0..n).map(|_| inj.tick(&mut rng)).sum();
+            let got = flits as f64 / n as f64;
+            assert!((got - rate).abs() < 0.02, "rate={rate} got={got}");
+        }
+    }
+}

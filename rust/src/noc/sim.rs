@@ -1,0 +1,641 @@
+//! Network-level cycle-accurate NoC simulator.
+//!
+//! Composes routers (the §IV-B microarchitecture) along a [`Topology`] with
+//! virtual regions on their west/east ports, access monitors at VR ingress
+//! (§IV-C), fold-link relay registers for double/multi-column flavors, and
+//! the direct VR-to-VR streaming links of Fig 3b.
+//!
+//! Movement rules are identical to [`super::router::SingleRouter`]: a flit
+//! moves at most one pipeline stage per cycle, traversal of a router takes
+//! 2 cycles, back-to-back flits stream at 1/cycle, allocators grant one
+//! input per output per cycle round-robin. Movement phases iterate to a
+//! fixpoint each cycle, which realizes the hardware's simultaneous shift
+//! across the whole column (the slot graph is acyclic because routing is
+//! monotonic along the column).
+
+use std::collections::VecDeque;
+
+use super::packet::{Flit, Header, VrSide};
+use super::routing::{route, OutPort};
+use super::topology::Topology;
+use crate::util::Summary;
+
+const NPORTS: usize = 4;
+
+fn port_idx(p: OutPort) -> usize {
+    match p {
+        OutPort::North => 0,
+        OutPort::South => 1,
+        OutPort::West => 2,
+        OutPort::East => 3,
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    flit: Flit,
+    moved_at: u64,
+    granted_at: u64,
+}
+
+#[derive(Debug, Clone)]
+struct RouterState {
+    id: u8,
+    stage1: [Option<Slot>; NPORTS],
+    out_reg: [Option<Slot>; NPORTS],
+    rr: [usize; NPORTS],
+}
+
+/// A virtual region endpoint: output queue toward its router, delivered
+/// packets after the access monitor, and optional direct links.
+#[derive(Debug, Clone, Default)]
+pub struct VrState {
+    /// Flits waiting to enter the NoC ("data stays within VRs until the
+    /// router is ready", §IV-B1).
+    pub out_queue: VecDeque<Flit>,
+    /// Payloads delivered to the USER REGION (header already stripped by
+    /// the access monitor; we keep the flit for bookkeeping).
+    pub delivered: VecDeque<Flit>,
+    /// Access monitor: the VI this region belongs to. `None` = unassigned
+    /// region, rejects everything.
+    pub owner_vi: Option<u16>,
+    /// Packets dropped by the access monitor (foreign VI_ID, §IV-C).
+    pub rejected: u64,
+    /// Direct-link output queue (Fig 3b VR-to-VR streaming), if wired.
+    pub direct_out: VecDeque<Flit>,
+}
+
+/// Aggregated simulator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct NocStats {
+    pub delivered: u64,
+    pub rejected: u64,
+    pub direct_delivered: u64,
+    pub latency: Summary,
+    pub waiting: Summary,
+}
+
+/// The network simulator.
+pub struct NocSim {
+    pub topo: Topology,
+    routers: Vec<RouterState>,
+    pub vrs: Vec<VrState>,
+    /// Relay registers on the north link of router i (fold links).
+    relays_n: Vec<Vec<Option<Slot>>>,
+    relays_s: Vec<Vec<Option<Slot>>>,
+    /// Direct VR->VR links: `direct[src] = Some(dst)`.
+    direct: Vec<Option<usize>>,
+    /// Sources that have a direct link (iteration shortcut).
+    direct_srcs: Vec<usize>,
+    /// Scratch: one-flit-per-cycle guard for direct links.
+    direct_fired: Vec<bool>,
+    /// Flits currently inside the network (queues + pipeline slots).
+    active: usize,
+    /// Debug/perf: total fixpoint passes executed (see benches/noc_hotpath).
+    pub passes: u64,
+    cycle: u64,
+    next_flit_id: u64,
+    pub stats: NocStats,
+}
+
+impl NocSim {
+    pub fn new(topo: Topology) -> Self {
+        let n = topo.n_routers();
+        let routers = (0..n)
+            .map(|i| RouterState {
+                id: i as u8,
+                stage1: Default::default(),
+                out_reg: Default::default(),
+                rr: [0; NPORTS],
+            })
+            .collect();
+        let relays_n: Vec<Vec<Option<Slot>>> = (0..n.saturating_sub(1))
+            .map(|i| vec![None; topo.link_relay[i] as usize])
+            .collect();
+        let relays_s = relays_n.clone();
+        let n_vrs = topo.n_vrs();
+        NocSim {
+            topo,
+            routers,
+            vrs: vec![VrState::default(); n_vrs],
+            relays_n,
+            relays_s,
+            direct: vec![None; n_vrs],
+            direct_srcs: Vec::new(),
+            direct_fired: vec![false; n_vrs],
+            active: 0,
+            passes: 0,
+            cycle: 0,
+            next_flit_id: 0,
+            stats: NocStats::default(),
+        }
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Assign a VR to a VI (configures its access monitor).
+    pub fn assign_vr(&mut self, vr: usize, vi: u16) {
+        self.vrs[vr].owner_vi = Some(vi);
+    }
+
+    pub fn release_vr(&mut self, vr: usize) {
+        self.vrs[vr].owner_vi = None;
+    }
+
+    /// Wire a direct VR->VR streaming link (must be physically adjacent).
+    pub fn wire_direct(&mut self, src: usize, dst: usize) -> anyhow::Result<()> {
+        if !self.topo.vrs_adjacent(src, dst) {
+            anyhow::bail!("VR{src} and VR{dst} are not adjacent; cannot wire a direct link");
+        }
+        self.direct[src] = Some(dst);
+        if !self.direct_srcs.contains(&src) {
+            self.direct_srcs.push(src);
+        }
+        Ok(())
+    }
+
+    /// Header addressing a VR in this topology.
+    pub fn header_for(&self, vi: u16, dst_vr: usize) -> Header {
+        Header::new(vi, self.topo.router_of_vr(dst_vr), self.topo.side_of_vr(dst_vr))
+    }
+
+    /// Enqueue a flit from `src_vr` into the NoC. Returns the flit id.
+    pub fn send(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+        let id = self.next_flit_id;
+        self.next_flit_id += 1;
+        self.active += 1;
+        self.vrs[src_vr].out_queue.push_back(Flit {
+            header,
+            seq,
+            payload,
+            enqueued_at: self.cycle,
+            id,
+        });
+        id
+    }
+
+    /// Enqueue a flit on `src_vr`'s direct link.
+    pub fn send_direct(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+        assert!(self.direct[src_vr].is_some(), "VR{src_vr} has no direct link");
+        let id = self.next_flit_id;
+        self.next_flit_id += 1;
+        self.active += 1;
+        self.vrs[src_vr].direct_out.push_back(Flit {
+            header,
+            seq,
+            payload,
+            enqueued_at: self.cycle,
+            id,
+        });
+        id
+    }
+
+    /// Flits currently inside the network (O(1): maintained counter).
+    pub fn in_flight(&self) -> usize {
+        self.active
+    }
+
+    /// Deliver a flit into a VR through its access monitor.
+    fn deliver(
+        vr: &mut VrState,
+        stats: &mut NocStats,
+        slot: Slot,
+        now: u64,
+    ) {
+        if vr.owner_vi == Some(slot.flit.header.vi_id) {
+            stats.delivered += 1;
+            stats.latency.add((now - slot.flit.enqueued_at) as f64);
+            stats.waiting.add((slot.granted_at + 1 - slot.flit.enqueued_at) as f64);
+            vr.delivered.push_back(slot.flit);
+        } else {
+            stats.rejected += 1;
+            vr.rejected += 1;
+        }
+    }
+
+    /// One clock cycle.
+    pub fn step(&mut self) {
+        let now = self.cycle;
+        if self.active == 0 {
+            // Nothing in flight: the cycle is a pure clock tick.
+            self.cycle += 1;
+            return;
+        }
+        // Direct links move exactly one flit per cycle; guard against the
+        // fixpoint loop re-firing them within the same cycle.
+        for s in self.direct_srcs.iter() {
+            self.direct_fired[*s] = false;
+        }
+        // Iterate movement phases to fixpoint: each flit moves at most one
+        // stage per cycle (moved_at stamp), but slots freed within the
+        // cycle can refill, realizing the hardware's simultaneous shift.
+        // Passes alternate router iteration direction so that both north-
+        // and southbound chains complete in few passes under load.
+        let mut pass = 0u32;
+        loop {
+            self.passes += 1;
+            let descending = pass % 2 == 0;
+            pass += 1;
+            let mut moved = false;
+
+            // (1-4) per-router fused update, iterated in alternating
+            // column order so directional chains complete in few passes:
+            // relay fill first, then for each router deliver -> advance ->
+            // allocate (all stamp-guarded, so order affects only how many
+            // passes the fixpoint needs, not the final state).
+            for l in 0..self.relays_n.len() {
+                if !self.relays_n[l].is_empty() {
+                    if self.relays_n[l][0].is_none() {
+                        let reg = &mut self.routers[l].out_reg[port_idx(OutPort::North)];
+                        if reg.as_ref().map(|s| s.moved_at < now).unwrap_or(false) {
+                            let mut slot = reg.take().unwrap();
+                            slot.moved_at = now;
+                            self.relays_n[l][0] = Some(slot);
+                            moved = true;
+                        }
+                    }
+                    if self.relays_s[l][0].is_none() {
+                        let reg = &mut self.routers[l + 1].out_reg[port_idx(OutPort::South)];
+                        if reg.as_ref().map(|s| s.moved_at < now).unwrap_or(false) {
+                            let mut slot = reg.take().unwrap();
+                            slot.moved_at = now;
+                            self.relays_s[l][0] = Some(slot);
+                            moved = true;
+                        }
+                    }
+                }
+            }
+            let n_r = self.routers.len();
+            for i in 0..n_r {
+                let r = if descending { n_r - 1 - i } else { i };
+                // deliver W/E out_regs into the attached VRs
+                for (port, side) in [(port_idx(OutPort::West), VrSide::West),
+                                     (port_idx(OutPort::East), VrSide::East)] {
+                    let movable = self.routers[r].out_reg[port]
+                        .as_ref()
+                        .map(|s| s.moved_at < now)
+                        .unwrap_or(false);
+                    if movable {
+                        let slot = self.routers[r].out_reg[port].take().unwrap();
+                        let vr = match side {
+                            VrSide::West => self.topo.west_vr(r as u8),
+                            VrSide::East => self.topo.east_vr(r as u8),
+                        };
+                        Self::deliver(&mut self.vrs[vr], &mut self.stats, slot, now);
+                        self.active -= 1;
+                        moved = true;
+                    }
+                }
+                // advance stage1 -> out_reg
+                {
+                    let rt = &mut self.routers[r];
+                    for p in 0..NPORTS {
+                        if rt.out_reg[p].is_none() {
+                            let movable =
+                                rt.stage1[p].as_ref().map(|s| s.moved_at < now).unwrap_or(false);
+                            if movable {
+                                let mut slot = rt.stage1[p].take().unwrap();
+                                slot.moved_at = now;
+                                rt.out_reg[p] = Some(slot);
+                                moved = true;
+                            }
+                        }
+                    }
+                }
+                // allocate free stage1 slots
+                moved |= self.allocate(r, now);
+            }
+
+            // (5) direct VR->VR links: 1 flit/cycle, 1-cycle latency.
+            for k in 0..self.direct_srcs.len() {
+                let src = self.direct_srcs[k];
+                {
+                    let dst = self.direct[src].unwrap();
+                    if self.direct_fired[src] {
+                        continue;
+                    }
+                    let ready = self.vrs[src]
+                        .direct_out
+                        .front()
+                        .map(|f| f.enqueued_at < now)
+                        .unwrap_or(false);
+                    if ready {
+                        self.direct_fired[src] = true;
+                        let flit = self.vrs[src].direct_out.pop_front().unwrap();
+                        let slot = Slot { granted_at: now, moved_at: now, flit };
+                        self.stats.direct_delivered += 1;
+                        self.active -= 1;
+                        let vr = &mut self.vrs[dst];
+                        if vr.owner_vi == Some(slot.flit.header.vi_id) {
+                            vr.delivered.push_back(slot.flit);
+                        } else {
+                            vr.rejected += 1;
+                            self.stats.rejected += 1;
+                        }
+                        moved = true;
+                    }
+                }
+            }
+
+            if !moved {
+                break;
+            }
+        }
+        self.cycle += 1;
+    }
+
+    /// Allocation for router `r`: for each free output channel, grant one
+    /// requesting input (round-robin). Inputs: north neighbor's south
+    /// out_reg (or relay), south neighbor's north out_reg (or relay), and
+    /// the two VR out queues. Each input's head is peeked once per call.
+    fn allocate(&mut self, r: usize, now: u64) -> bool {
+        let rid = self.routers[r].id;
+        // requested[inp] = output port the head flit on input `inp` wants.
+        let mut requested = [usize::MAX; NPORTS];
+        let mut any = false;
+        for (inp, req) in requested.iter_mut().enumerate() {
+            if let Some(h) = self.peek_head(r, inp, now) {
+                *req = port_idx(route(&h, rid));
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        let mut moved = false;
+        for p in 0..NPORTS {
+            if self.routers[r].stage1[p].is_some() {
+                continue;
+            }
+            // Candidate input ports, in round-robin order starting after
+            // the last-granted one.
+            let start = self.routers[r].rr[p];
+            let mut grant: Option<usize> = None;
+            for k in 0..NPORTS {
+                let inp = (start + k) % NPORTS;
+                if inp == p {
+                    continue; // (n-1) x m crossbar
+                }
+                if requested[inp] == p {
+                    grant = Some(inp);
+                    break;
+                }
+            }
+            if let Some(inp) = grant {
+                requested[inp] = usize::MAX; // consumed
+                let (flit, granted_at) = self.pop_head(r, inp, now);
+                self.routers[r].stage1[p] =
+                    Some(Slot { flit, moved_at: now, granted_at });
+                self.routers[r].rr[p] = (inp + 1) % NPORTS;
+                moved = true;
+            }
+        }
+        moved
+    }
+
+    /// Peek the head flit header available on input `inp` of router `r`.
+    fn peek_head(&self, r: usize, inp: usize, now: u64) -> Option<Header> {
+        match inp {
+            // Input "from north": flits moving south out of router r+1.
+            0 => self.upstream_slot(r, true).and_then(|s| {
+                if s.moved_at < now { Some(s.flit.header) } else { None }
+            }),
+            // Input "from south": flits moving north out of router r-1.
+            1 => self.upstream_slot(r, false).and_then(|s| {
+                if s.moved_at < now { Some(s.flit.header) } else { None }
+            }),
+            2 => self.vrs[self.topo.west_vr(r as u8)]
+                .out_queue
+                .front()
+                .filter(|f| f.enqueued_at <= now)
+                .map(|f| f.header),
+            3 => self.vrs[self.topo.east_vr(r as u8)]
+                .out_queue
+                .front()
+                .filter(|f| f.enqueued_at <= now)
+                .map(|f| f.header),
+            _ => unreachable!(),
+        }
+    }
+
+    /// The upstream register feeding router `r` from the north (southbound
+    /// flits) or from the south (northbound flits): the fold relay if the
+    /// link has one, otherwise the neighbor's out_reg.
+    fn upstream_slot(&self, r: usize, from_north: bool) -> Option<&Slot> {
+        if from_north {
+            if r + 1 >= self.routers.len() {
+                return None;
+            }
+            if !self.relays_s[r].is_empty() {
+                self.relays_s[r][0].as_ref()
+            } else {
+                self.routers[r + 1].out_reg[port_idx(OutPort::South)].as_ref()
+            }
+        } else {
+            if r == 0 {
+                return None;
+            }
+            let l = r - 1;
+            if !self.relays_n[l].is_empty() {
+                self.relays_n[l][0].as_ref()
+            } else {
+                self.routers[l].out_reg[port_idx(OutPort::North)].as_ref()
+            }
+        }
+    }
+
+    fn pop_head(&mut self, r: usize, inp: usize, now: u64) -> (Flit, u64) {
+        match inp {
+            0 => {
+                let slot = if !self.relays_s[r].is_empty() {
+                    self.relays_s[r][0].take().unwrap()
+                } else {
+                    self.routers[r + 1].out_reg[port_idx(OutPort::South)].take().unwrap()
+                };
+                (slot.flit, slot.granted_at)
+            }
+            1 => {
+                let l = r - 1;
+                let slot = if !self.relays_n[l].is_empty() {
+                    self.relays_n[l][0].take().unwrap()
+                } else {
+                    self.routers[l].out_reg[port_idx(OutPort::North)].take().unwrap()
+                };
+                (slot.flit, slot.granted_at)
+            }
+            2 => {
+                let vr = self.topo.west_vr(r as u8);
+                (self.vrs[vr].out_queue.pop_front().unwrap(), now)
+            }
+            3 => {
+                let vr = self.topo.east_vr(r as u8);
+                (self.vrs[vr].out_queue.pop_front().unwrap(), now)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn run(&mut self, cycles: u64) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
+    /// Step until the network is empty (bounded by `max_cycles`).
+    pub fn drain(&mut self, max_cycles: u64) -> bool {
+        let mut left = max_cycles;
+        while self.in_flight() > 0 && left > 0 {
+            self.step();
+            left -= 1;
+        }
+        self.in_flight() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::packet::VrSide;
+
+    fn sim3() -> NocSim {
+        // Case-study shape: 3 routers, 6 VRs.
+        let mut s = NocSim::new(Topology::single_column(3));
+        for vr in 0..6 {
+            s.assign_vr(vr, vr as u16); // VR i owned by VI i for simplicity
+        }
+        s
+    }
+
+    #[test]
+    fn same_router_delivery_two_cycles() {
+        let mut s = sim3();
+        let h = s.header_for(1, 1); // to VR1 (east of router 0), VI 1
+        s.send(0, h, vec![0xAB], 0);
+        s.drain(32);
+        assert_eq!(s.stats.delivered, 1);
+        assert_eq!(s.stats.latency.mean(), 2.0);
+        assert_eq!(s.vrs[1].delivered.len(), 1);
+        assert_eq!(s.vrs[1].delivered[0].payload, vec![0xAB]);
+    }
+
+    #[test]
+    fn multi_hop_adds_two_cycles_per_router() {
+        let mut s = sim3();
+        // VR0 (router 0) -> VR5 (east of router 2): 3 routers = 2 + 2*2.
+        let h = s.header_for(5, 5);
+        s.send(0, h, vec![1], 0);
+        s.drain(64);
+        assert_eq!(s.stats.delivered, 1);
+        assert_eq!(s.stats.latency.mean(), 6.0);
+    }
+
+    #[test]
+    fn southbound_works_too() {
+        let mut s = sim3();
+        let h = s.header_for(0, 0);
+        s.send(5, h, vec![2], 0);
+        s.drain(64);
+        assert_eq!(s.stats.delivered, 1);
+        assert_eq!(s.stats.latency.mean(), 6.0);
+    }
+
+    #[test]
+    fn access_monitor_drops_foreign_vi() {
+        let mut s = sim3();
+        // Packet claims VI 3 but VR1 belongs to VI 1.
+        let h = Header::new(3, 0, VrSide::East);
+        s.send(0, h, vec![9], 0);
+        s.drain(32);
+        assert_eq!(s.stats.delivered, 0);
+        assert_eq!(s.stats.rejected, 1);
+        assert_eq!(s.vrs[1].rejected, 1);
+        assert!(s.vrs[1].delivered.is_empty());
+    }
+
+    #[test]
+    fn pipelined_throughput_one_per_cycle() {
+        let mut s = sim3();
+        let h = s.header_for(1, 1);
+        for i in 0..50 {
+            s.send(0, h, vec![], i);
+        }
+        let start = s.cycle();
+        s.drain(256);
+        assert_eq!(s.stats.delivered, 50);
+        // 2 cycles pipe fill + 50 deliveries at 1/cycle.
+        assert!(s.cycle() - start <= 53, "took {}", s.cycle() - start);
+    }
+
+    #[test]
+    fn direct_link_streams_with_one_cycle_latency() {
+        let mut s = sim3();
+        // VR2 and VR3 hang off router 1: adjacent, can be wired directly.
+        s.wire_direct(2, 3).unwrap();
+        let h = s.header_for(3, 3);
+        let start = s.cycle();
+        for i in 0..10 {
+            s.send_direct(2, h, vec![i as u8], i);
+        }
+        s.drain(32);
+        assert_eq!(s.stats.direct_delivered, 10);
+        assert_eq!(s.vrs[3].delivered.len(), 10);
+        // One flit per cycle: 10 flits need >= 10 cycles (plus eligibility).
+        let took = s.cycle() - start;
+        assert!((10..=12).contains(&took), "took {took}");
+    }
+
+    #[test]
+    fn direct_link_requires_adjacency() {
+        let mut s = sim3();
+        assert!(s.wire_direct(0, 5).is_err());
+    }
+
+    #[test]
+    fn fold_relay_adds_one_cycle() {
+        // Two columns of 1 router each: link 0-1 is a fold.
+        let mut s = NocSim::new(Topology::double_column(2));
+        for vr in 0..4 {
+            s.assign_vr(vr, 7);
+        }
+        let h = s.header_for(7, 2); // router 1 west VR
+        s.send(0, h, vec![], 0);
+        s.drain(64);
+        assert_eq!(s.stats.delivered, 1);
+        // 2 routers (4 cycles) + 1 relay stage = 5.
+        assert_eq!(s.stats.latency.mean(), 5.0);
+    }
+
+    #[test]
+    fn bidirectional_cross_traffic_all_delivered() {
+        let mut s = sim3();
+        for i in 0..20 {
+            let h_up = s.header_for(5, 5);
+            let h_down = s.header_for(0, 0);
+            s.send(0, h_up, vec![], i);
+            s.send(5, h_down, vec![], i);
+        }
+        assert!(s.drain(512));
+        assert_eq!(s.stats.delivered, 40);
+        assert_eq!(s.stats.rejected, 0);
+    }
+
+    #[test]
+    fn contention_for_one_output_serializes_fairly() {
+        let mut s = sim3();
+        // VR0 (west of r0) and VR2/VR4 all target VR1 (east of r0):
+        // VR0 via local W->E, VR2/VR4 arrive from the north.
+        let h = s.header_for(1, 1);
+        for i in 0..15 {
+            s.send(0, h, vec![], i);
+            s.send(2, h, vec![], i);
+            s.send(4, h, vec![], i);
+        }
+        assert!(s.drain(1024));
+        assert_eq!(s.stats.delivered, 45);
+        // Output E of router 0 delivers 1/cycle when saturated: 45 flits
+        // need >= 45 cycles; check it's not wildly worse (fair progress).
+        assert!(s.stats.latency.max() < 120.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! NoC topologies (§IV-A, Fig 3b).
+//!
+//! Routers form a logical column (1-D routing, Algorithm 1) with at most
+//! two VRs per router (west/east). Physical deployment comes in three
+//! flavors:
+//! - **single-column**: routers lined up on a few CLB columns;
+//! - **double-column**: two physical columns folded into one logical line,
+//!   joined by under-utilized long wires at the die edge (the LinkBlaze
+//!   trick); the fold link crosses the die and carries one extra pipeline
+//!   register;
+//! - **multi-column**: the same folding repeated for wider devices.
+//!
+//! Column-end routers have 3 ports (no dangling N/S interface, §IV-B1);
+//! interior routers have 4.
+
+use super::packet::MAX_ROUTERS;
+
+/// One router position in the topology.
+#[derive(Debug, Clone)]
+pub struct RouterNode {
+    pub id: u8,
+    /// Physical column index (for the placer and fold-link computation).
+    pub column: usize,
+    /// Row within the physical column.
+    pub row: usize,
+}
+
+/// Physical flavor of the deployment (§IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    SingleColumn,
+    DoubleColumn,
+    MultiColumn(usize),
+}
+
+/// A deployed topology: a logical line of routers with physical placement.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub flavor: Flavor,
+    pub routers: Vec<RouterNode>,
+    /// Extra pipeline stages on the link between router `i` and `i+1`
+    /// (1 for edge long-wire folds, 0 otherwise).
+    pub link_relay: Vec<u8>,
+}
+
+impl Topology {
+    fn build(flavor: Flavor, n_routers: usize, columns: usize) -> Self {
+        assert!(n_routers >= 1 && n_routers <= MAX_ROUTERS as usize);
+        assert!(columns >= 1 && columns <= n_routers);
+        let per_col = n_routers.div_ceil(columns);
+        let mut routers = Vec::with_capacity(n_routers);
+        for id in 0..n_routers {
+            let column = id / per_col;
+            // Boustrophedon rows so the logical line snakes physically:
+            // even columns go bottom-up, odd ones top-down.
+            let idx = id % per_col;
+            let row = if column % 2 == 0 { idx } else { per_col - 1 - idx };
+            routers.push(RouterNode { id: id as u8, column, row });
+        }
+        let link_relay = (0..n_routers.saturating_sub(1))
+            .map(|i| u8::from(routers[i].column != routers[i + 1].column))
+            .collect();
+        Topology { flavor, routers, link_relay }
+    }
+
+    pub fn single_column(n_routers: usize) -> Self {
+        Self::build(Flavor::SingleColumn, n_routers, 1)
+    }
+
+    pub fn double_column(n_routers: usize) -> Self {
+        Self::build(Flavor::DoubleColumn, n_routers, 2)
+    }
+
+    pub fn multi_column(n_routers: usize, columns: usize) -> Self {
+        Self::build(Flavor::MultiColumn(columns), n_routers, columns)
+    }
+
+    pub fn n_routers(&self) -> usize {
+        self.routers.len()
+    }
+
+    /// VRs: two per router, west = 2*id, east = 2*id + 1.
+    pub fn n_vrs(&self) -> usize {
+        self.routers.len() * 2
+    }
+
+    /// Port count of a router: 3 at the ends of the logical line, 4 inside
+    /// (§IV-B1: "the first and last routers only need three interfaces").
+    pub fn ports_of(&self, id: u8) -> u32 {
+        let last = (self.routers.len() - 1) as u8;
+        if (id == 0 || id == last) && self.routers.len() > 1 {
+            3
+        } else if self.routers.len() == 1 {
+            2 // lone router: just its two VR ports
+        } else {
+            4
+        }
+    }
+
+    pub fn has_north(&self, id: u8) -> bool {
+        (id as usize) + 1 < self.routers.len()
+    }
+
+    pub fn has_south(&self, id: u8) -> bool {
+        id > 0
+    }
+
+    /// Extra relay stages on the link north of router `id`.
+    pub fn relay_north(&self, id: u8) -> u8 {
+        self.link_relay.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// VR index helpers.
+    pub fn west_vr(&self, id: u8) -> usize {
+        id as usize * 2
+    }
+    pub fn east_vr(&self, id: u8) -> usize {
+        id as usize * 2 + 1
+    }
+    pub fn router_of_vr(&self, vr: usize) -> u8 {
+        (vr / 2) as u8
+    }
+    pub fn side_of_vr(&self, vr: usize) -> super::packet::VrSide {
+        if vr % 2 == 0 { super::packet::VrSide::West } else { super::packet::VrSide::East }
+    }
+
+    /// Are two VRs physically adjacent (same router, or vertically adjacent
+    /// on the same side of the same column)? Those pairs can be wired with
+    /// the direct VR-to-VR streaming links of Fig 3b.
+    pub fn vrs_adjacent(&self, a: usize, b: usize) -> bool {
+        if a == b {
+            return false;
+        }
+        let (ra, rb) = (self.router_of_vr(a), self.router_of_vr(b));
+        if ra == rb {
+            return true; // west/east of the same router
+        }
+        let (na, nb) = (&self.routers[ra as usize], &self.routers[rb as usize]);
+        na.column == nb.column
+            && na.row.abs_diff(nb.row) == 1
+            && self.side_of_vr(a) == self.side_of_vr(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_study_shape() {
+        // §V-D1: "Since we have 6 VRs, we will only need 3 routers (two
+        // 3-port routers and one 4-port router)".
+        let t = Topology::single_column(3);
+        assert_eq!(t.n_vrs(), 6);
+        assert_eq!(t.ports_of(0), 3);
+        assert_eq!(t.ports_of(1), 4);
+        assert_eq!(t.ports_of(2), 3);
+        assert!(t.link_relay.iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    fn double_column_has_one_fold() {
+        let t = Topology::double_column(6);
+        assert_eq!(t.link_relay.iter().filter(|&&r| r == 1).count(), 1);
+        assert_eq!(t.relay_north(2), 1); // between id 2 (col 0) and 3 (col 1)
+        // Fold joins the *tops* of both columns (boustrophedon).
+        assert_eq!(t.routers[2].row, 2);
+        assert_eq!(t.routers[3].row, 2);
+    }
+
+    #[test]
+    fn multi_column_folds() {
+        let t = Topology::multi_column(9, 3);
+        assert_eq!(t.link_relay.iter().filter(|&&r| r == 1).count(), 2);
+        assert_eq!(t.n_vrs(), 18);
+    }
+
+    #[test]
+    fn vr_indexing_roundtrip() {
+        let t = Topology::single_column(4);
+        for vr in 0..t.n_vrs() {
+            let r = t.router_of_vr(vr);
+            let side = t.side_of_vr(vr);
+            let back = match side {
+                super::super::packet::VrSide::West => t.west_vr(r),
+                super::super::packet::VrSide::East => t.east_vr(r),
+            };
+            assert_eq!(back, vr);
+        }
+    }
+
+    #[test]
+    fn adjacency_rules() {
+        let t = Topology::single_column(3);
+        assert!(t.vrs_adjacent(0, 1)); // west/east of router 0
+        assert!(t.vrs_adjacent(0, 2)); // west VRs of routers 0 and 1
+        assert!(!t.vrs_adjacent(0, 3)); // diagonal
+        assert!(!t.vrs_adjacent(0, 4)); // two rows apart
+        assert!(!t.vrs_adjacent(2, 2));
+    }
+
+    #[test]
+    fn lone_router_has_two_ports() {
+        let t = Topology::single_column(1);
+        assert_eq!(t.ports_of(0), 2);
+        assert!(!t.has_north(0));
+        assert!(!t.has_south(0));
+    }
+}

@@ -1,0 +1,79 @@
+//! ASCII rendering of a floorplan — the textual equivalent of the paper's
+//! Fig 13 placement screenshot.
+
+use super::Floorplan;
+use crate::device::Device;
+
+/// Render the die as a downsampled character grid. Router pblocks print
+/// as `#`, VR `i` as its hex digit, free fabric as `.`. Labels may be
+/// provided per VR (e.g. the accelerator placed there).
+pub fn render(device: &Device, fp: &Floorplan, labels: &[(usize, String)]) -> String {
+    let g = &device.geometry;
+    let cols = 80usize.min(g.clb_cols);
+    let rows = 40usize.min(g.clb_rows);
+    let sx = g.clb_cols as f64 / cols as f64;
+    let sy = g.clb_rows as f64 / rows as f64;
+    let mut grid = vec![vec!['.'; cols]; rows];
+
+    let mut paint = |x0: usize, y0: usize, x1: usize, y1: usize, ch: char| {
+        let cx0 = (x0 as f64 / sx) as usize;
+        let cx1 = ((x1 as f64 / sx).ceil() as usize).min(cols);
+        let cy0 = (y0 as f64 / sy) as usize;
+        let cy1 = ((y1 as f64 / sy).ceil() as usize).min(rows);
+        for y in cy0..cy1.max(cy0 + 1) {
+            for x in cx0..cx1.max(cx0 + 1) {
+                if y < rows && x < cols {
+                    grid[y][x] = ch;
+                }
+            }
+        }
+    };
+
+    for (vr, &pbi) in fp.vr_pb.iter().enumerate() {
+        let r = fp.pblocks.get(pbi).rect;
+        let ch = char::from_digit(vr as u32, 16).unwrap_or('?');
+        paint(r.x0, r.y0, r.x1, r.y1, ch);
+    }
+    for &pbi in &fp.router_pb {
+        let r = fp.pblocks.get(pbi).rect;
+        paint(r.x0, r.y0, r.x1, r.y1, '#');
+    }
+
+    // Die rows print top-down (row 0 = bottom of the die).
+    let mut out = String::new();
+    out.push_str(&format!("+{}+\n", "-".repeat(cols)));
+    for y in (0..rows).rev() {
+        out.push('|');
+        out.extend(grid[y].iter());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!("+{}+\n", "-".repeat(cols)));
+    for (vr, label) in labels {
+        out.push_str(&format!(
+            "  VR{vr} ({}): {label}\n",
+            char::from_digit(*vr as u32, 16).unwrap_or('?')
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placer::case_study_floorplan;
+
+    #[test]
+    fn renders_all_vrs_and_routers() {
+        let device = Device::vu9p();
+        let (_, fp) = case_study_floorplan(&device).unwrap();
+        let s = render(&device, &fp, &[(0, "Huffman".into())]);
+        for ch in ['0', '1', '2', '3', '4', '5', '#'] {
+            assert!(s.contains(ch), "missing {ch} in map");
+        }
+        assert!(s.contains("VR0 (0): Huffman"));
+        // Mostly free fabric (the 6-job case study uses ~2% of the die).
+        let free = s.chars().filter(|&c| c == '.').count();
+        let used = s.chars().filter(|c| c.is_ascii_hexdigit() || *c == '#').count();
+        assert!(free > used, "free={free} used={used}");
+    }
+}

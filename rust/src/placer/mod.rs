@@ -1,0 +1,192 @@
+//! Floorplanner: lays the NoC column(s) and the VR pblocks onto the device
+//! (§IV-A placement constraints, Fig 13).
+//!
+//! The NoC routers are packed onto a few CLB columns ("<1% of the chip")
+//! with placement constraints; VRs are rectangles west and east of each
+//! router column. The double/multi-column flavors use the die-edge columns
+//! to exploit under-utilized long wires (§IV-A flavor 2/3).
+
+pub mod ascii;
+
+use crate::device::{Device, Pblock, PblockSet, Rect};
+use crate::noc::Topology;
+use anyhow::Result;
+
+/// Width (CLB columns) reserved for one NoC router column.
+pub const NOC_COL_W: usize = 2;
+
+/// A placed deployment: NoC pblocks + VR pblocks, indexed like the topology.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    pub pblocks: PblockSet,
+    /// pblock index of each router.
+    pub router_pb: Vec<usize>,
+    /// pblock index of each VR (2 per router: west, east).
+    pub vr_pb: Vec<usize>,
+    /// Height (CLB rows) of each VR.
+    pub vr_rows: usize,
+    /// Width (CLB columns) of each VR.
+    pub vr_cols: usize,
+}
+
+impl Floorplan {
+    /// CLB share of the NoC (the paper's "<1% of the chip" check).
+    pub fn noc_clb_fraction(&self, device: &Device) -> f64 {
+        let noc: usize = self.router_pb.iter().map(|&i| self.pblocks.get(i).rect.clbs()).sum();
+        noc as f64 / device.geometry.total_clbs() as f64
+    }
+
+    /// CLB share of NoC + all VRs.
+    pub fn total_clb_fraction(&self, device: &Device) -> f64 {
+        self.pblocks.total_clbs() as f64 / device.geometry.total_clbs() as f64
+    }
+}
+
+/// Place `topo` on `device` with VRs of `vr_cols x vr_rows` CLBs.
+///
+/// Physical columns are laid out left-to-right; column 0 sits at the west
+/// die edge and the last column at the east edge (long-wire folds join
+/// column tops/bottoms per the boustrophedon order of [`Topology`]).
+pub fn place(device: &Device, topo: &Topology, vr_cols: usize, vr_rows: usize) -> Result<Floorplan> {
+    let g = &device.geometry;
+    let n_cols = topo.routers.iter().map(|r| r.column).max().unwrap_or(0) + 1;
+    let col_width = vr_cols + NOC_COL_W + vr_cols; // west VR | routers | east VR
+    anyhow::ensure!(
+        n_cols * col_width <= g.clb_cols,
+        "{} physical columns of width {} exceed device width {}",
+        n_cols,
+        col_width,
+        g.clb_cols
+    );
+    let rows_needed = topo
+        .routers
+        .iter()
+        .map(|r| (r.row + 1) * vr_rows)
+        .max()
+        .unwrap_or(0);
+    anyhow::ensure!(
+        rows_needed <= g.clb_rows,
+        "{rows_needed} CLB rows needed exceed device height {}",
+        g.clb_rows
+    );
+
+    // Spread physical columns: first at the west edge, last at the east
+    // edge (flavor 2/3 exploit edge long wires), extras evenly between.
+    let col_x = |c: usize| -> usize {
+        if n_cols == 1 {
+            (g.clb_cols - col_width) / 2
+        } else {
+            c * (g.clb_cols - col_width) / (n_cols - 1)
+        }
+    };
+
+    let mut pblocks = PblockSet::new();
+    let mut router_pb = Vec::with_capacity(topo.n_routers());
+    let mut vr_pb = vec![usize::MAX; topo.n_vrs()];
+
+    for node in &topo.routers {
+        let x = col_x(node.column);
+        let y0 = node.row * vr_rows;
+        let y1 = y0 + vr_rows;
+        // Router pblock: a thin strip in the middle of its slice. Routers
+        // need only a handful of CLBs; constrain them to NOC_COL_W x 8.
+        let rx = x + vr_cols;
+        let r_idx = pblocks.add(Pblock::new(
+            format!("noc_r{}", node.id),
+            Rect::new(rx, y0, rx + NOC_COL_W, y0 + 8.min(vr_rows)),
+        ))?;
+        router_pb.push(r_idx);
+        // West and east VR pblocks, with a share of the device hard blocks
+        // (DSP/BRAM columns are interleaved with fabric on UltraScale+).
+        let dsp_share = device.capacity.dsp / (topo.n_vrs() as u64 * 2);
+        let bram_share = device.capacity.bram / (topo.n_vrs() as u64 * 2);
+        let w_idx = pblocks.add(
+            Pblock::new(
+                format!("vr{}", topo.west_vr(node.id)),
+                Rect::new(x, y0, x + vr_cols, y1),
+            )
+            .with_hard_blocks(dsp_share, bram_share),
+        )?;
+        vr_pb[topo.west_vr(node.id)] = w_idx;
+        let e_idx = pblocks.add(
+            Pblock::new(
+                format!("vr{}", topo.east_vr(node.id)),
+                Rect::new(rx + NOC_COL_W, y0, rx + NOC_COL_W + vr_cols, y1),
+            )
+            .with_hard_blocks(dsp_share, bram_share),
+        )?;
+        vr_pb[topo.east_vr(node.id)] = e_idx;
+    }
+
+    Ok(Floorplan { pblocks, router_pb, vr_pb, vr_rows, vr_cols })
+}
+
+/// The paper's case-study floorplan: single column, 3 routers, 6 VRs whose
+/// pblocks are ~1121 CLBs each (VR5 in §V-D1: 1121 CLBs = 8968 LUTs).
+pub fn case_study_floorplan(device: &Device) -> Result<(Topology, Floorplan)> {
+    let topo = Topology::single_column(3);
+    // 19 x 59 = 1121 CLBs per VR, matching the paper's VR5 pblock.
+    let fp = place(device, &topo, 19, 59)?;
+    Ok((topo, fp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_study_matches_paper_areas() {
+        let device = Device::vu9p();
+        let (topo, fp) = case_study_floorplan(&device).unwrap();
+        assert_eq!(topo.n_vrs(), 6);
+        // VR pblock = 1121 CLBs = 8968 LUTs (§V-D1).
+        let vr5 = fp.pblocks.get(fp.vr_pb[5]);
+        assert_eq!(vr5.rect.clbs(), 1121);
+        assert_eq!(vr5.capacity().lut, 8968);
+        // NoC covers <1% of the chip (§IV-A).
+        assert!(fp.noc_clb_fraction(&device) < 0.01);
+    }
+
+    #[test]
+    fn fig13_total_area_under_2_percent() {
+        // §V-D1: "The NoC and applications ... only used 1.71% of the CLB
+        // area" — the *pblock* envelope is the upper bound; committed
+        // designs use less. Envelope must stay in single digits %.
+        let device = Device::vu9p();
+        let (_, fp) = case_study_floorplan(&device).unwrap();
+        let frac = fp.total_clb_fraction(&device);
+        assert!(frac < 0.06, "envelope fraction {frac:.3}");
+    }
+
+    #[test]
+    fn no_overlaps_by_construction() {
+        // PblockSet rejects overlaps; placing any topology must succeed.
+        let device = Device::vu9p();
+        for topo in [Topology::single_column(5), Topology::double_column(8)] {
+            let fp = place(&device, &topo, 10, 60).unwrap();
+            assert_eq!(fp.vr_pb.len(), topo.n_vrs());
+            assert!(fp.vr_pb.iter().all(|&i| i != usize::MAX));
+        }
+    }
+
+    #[test]
+    fn double_column_uses_die_edges() {
+        let device = Device::vu9p();
+        let topo = Topology::double_column(6);
+        let fp = place(&device, &topo, 12, 60).unwrap();
+        // First column's west VR starts at x=0 (west edge).
+        let west = fp.pblocks.get(fp.vr_pb[0]);
+        assert_eq!(west.rect.x0, 0);
+        // Last router's east VR ends at the east edge.
+        let last_vr = fp.pblocks.get(fp.vr_pb[topo.n_vrs() - 1]);
+        assert_eq!(last_vr.rect.x1, device.geometry.clb_cols);
+    }
+
+    #[test]
+    fn oversized_request_errors() {
+        let device = Device::vu9p();
+        let topo = Topology::single_column(3);
+        assert!(place(&device, &topo, 90, 60).is_err()); // too wide
+        assert!(place(&device, &topo, 10, 400).is_err()); // too tall
+    }
+}

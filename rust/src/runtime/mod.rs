@@ -1,0 +1,160 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the request path.
+//!
+//! This is the USER REGION compute of §IV-C realized in software: each VR's
+//! programmed design is a PJRT executable produced by `python/compile/aot.py`
+//! (HLO *text* — see that file for the proto-id compatibility note). Python
+//! never runs here; the Rust binary is self-contained once `artifacts/`
+//! exists.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A tensor value crossing the runtime boundary (f32 only: the accelerator
+/// models standardize on f32 I/O — byte data is carried as 0..255 floats).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<i64>, data: Vec<f32>) -> Self {
+        let n: i64 = shape.iter().product();
+        assert_eq!(n as usize, data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len() as i64], data }
+    }
+
+    pub fn from_bytes(shape: Vec<i64>, bytes: &[u8]) -> Self {
+        Tensor::new(shape, bytes.iter().map(|&b| b as f32).collect())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.data.iter().map(|&v| v.clamp(0.0, 255.0) as u8).collect()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data).reshape(&self.shape)?)
+    }
+}
+
+/// One compiled accelerator.
+struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_inputs: usize,
+}
+
+/// The PJRT CPU runtime holding all compiled accelerators.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load every `*.hlo.txt` in `dir`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts`)"))?;
+        for entry in entries {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or_default();
+            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
+            let text = std::fs::read_to_string(&path)?;
+            let n_inputs = entry_parameter_count(&text);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            models.insert(stem.to_string(), LoadedModel { exe, n_inputs });
+        }
+        if models.is_empty() {
+            bail!("no *.hlo.txt artifacts found in {dir:?}");
+        }
+        Ok(Runtime { client, models, artifacts_dir: dir.to_path_buf() })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    pub fn n_inputs(&self, name: &str) -> Option<usize> {
+        self.models.get(name).map(|m| m.n_inputs)
+    }
+
+    /// Execute a model. All models are lowered with `return_tuple=True`, so
+    /// the single result literal decomposes into the output list.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let model = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have {:?})", self.model_names()))?;
+        if inputs.len() != model.n_inputs {
+            bail!("model '{name}' expects {} inputs, got {}", model.n_inputs, inputs.len());
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit.to_vec::<f32>()?;
+                Ok(Tensor { shape: dims, data })
+            })
+            .collect()
+    }
+}
+
+/// Number of `parameter(..)` instructions in the ENTRY computation of an
+/// HLO text module (fusion sub-computations also carry parameters, so the
+/// count is restricted to the ENTRY section, which jax emits last).
+fn entry_parameter_count(hlo_text: &str) -> usize {
+    let entry_start = hlo_text.find("\nENTRY ").map(|i| i + 1).unwrap_or(0);
+    hlo_text[entry_start..].matches("parameter(").count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_parameter_count_ignores_subcomputations() {
+        let hlo = "HloModule m\n\
+                   fused_computation {\n  p0 = f32[2]{0} parameter(0)\n}\n\
+                   ENTRY main {\n  a = f32[2]{0} parameter(0)\n  b = f32[2]{0} parameter(1)\n}\n";
+        assert_eq!(entry_parameter_count(hlo), 2);
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let b = Tensor::from_bytes(vec![4], &[1, 2, 3, 255]);
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0, 255.0]);
+        assert_eq!(b.to_bytes(), vec![1, 2, 3, 255]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

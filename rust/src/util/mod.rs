@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic PRNG, streaming statistics, CLI parsing,
+//! table rendering, and a tiny property-test driver.
+//!
+//! The offline build has no access to `rand`/`clap`/`proptest`; these are
+//! purpose-built replacements sized for this project.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::{Histogram, Percentiles, Summary};

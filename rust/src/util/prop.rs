@@ -1,0 +1,59 @@
+//! Miniature property-based testing driver (offline substitute for proptest).
+//!
+//! A property is a closure over a [`Rng`]; the driver runs it for a number of
+//! seeds and reports the first failing seed so failures are reproducible:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath in this env)
+//! use fpga_mt::util::prop::forall;
+//! forall("addition commutes", 256, |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `property` for `cases` deterministic seeds; panic with the failing
+/// seed on the first failure.
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, property: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0xF0F0_0000 ^ seed);
+            property(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("u64 below bound", 64, |rng| {
+            assert!(rng.below(10) < 10);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 8, |_rng| panic!("boom"));
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("seed 0"), "got: {msg}");
+    }
+}

@@ -1,0 +1,227 @@
+//! System-level property tests and failure injection.
+//!
+//! Invariants checked under randomized workloads:
+//! - flit conservation: every sent flit is delivered or rejected, never
+//!   duplicated or lost, on every topology flavor;
+//! - per-source FIFO ordering survives arbitrary cross traffic;
+//! - the access monitor never leaks a foreign-VI packet;
+//! - hypervisor allocation never double-books a VR and always recovers
+//!   after exhaustion/release churn;
+//! - estimate models are monotone in width and radix.
+
+use fpga_mt::device::Device;
+use fpga_mt::estimate::{router_fmax_mhz, router_power_mw, router_resources, RouterConfig};
+use fpga_mt::hypervisor::{Hypervisor, Policy, VrStatus};
+use fpga_mt::noc::{NocSim, Topology};
+use fpga_mt::placer;
+use fpga_mt::util::prop::forall;
+use fpga_mt::util::Rng;
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    match rng.below(3) {
+        0 => Topology::single_column(1 + rng.below(8) as usize),
+        1 => Topology::double_column(2 + rng.below(10) as usize),
+        _ => {
+            let n = 3 + rng.below(9) as usize;
+            Topology::multi_column(n, 1 + rng.below(3.min(n as u64) ) as usize)
+        }
+    }
+}
+
+#[test]
+fn flit_conservation_on_random_topologies() {
+    forall("flit conservation", 48, |rng| {
+        let topo = random_topology(rng);
+        let n_vrs = topo.n_vrs();
+        let mut sim = NocSim::new(topo);
+        // Random ownership: a few VIs spread over the VRs.
+        let n_vis = 1 + rng.below(4) as u16;
+        for vr in 0..n_vrs {
+            sim.assign_vr(vr, rng.below(n_vis as u64) as u16);
+        }
+        let mut sent = 0u64;
+        for _ in 0..rng.range_u64(1, 300) {
+            let src = rng.index(n_vrs);
+            let dst = rng.index(n_vrs);
+            if dst == src {
+                continue;
+            }
+            // Random claimed VI: sometimes foreign (must be rejected).
+            let vi = rng.below(n_vis as u64) as u16;
+            let h = sim.header_for(vi, dst);
+            sim.send(src, h, vec![rng.below(256) as u8], 0);
+            sent += 1;
+        }
+        assert!(sim.drain(100_000), "network failed to drain");
+        assert_eq!(
+            sim.stats.delivered + sim.stats.rejected,
+            sent,
+            "lost or duplicated flits"
+        );
+        assert_eq!(sim.in_flight(), 0);
+    });
+}
+
+#[test]
+fn access_monitor_never_leaks_foreign_packets() {
+    forall("access monitor soundness", 48, |rng| {
+        let topo = random_topology(rng);
+        let n_vrs = topo.n_vrs();
+        let mut sim = NocSim::new(topo);
+        for vr in 0..n_vrs {
+            sim.assign_vr(vr, (vr % 3) as u16);
+        }
+        for _ in 0..rng.range_u64(1, 200) {
+            let src = rng.index(n_vrs);
+            let dst = rng.index(n_vrs);
+            if dst == src {
+                continue;
+            }
+            let vi = rng.below(4) as u16;
+            let h = sim.header_for(vi, dst);
+            sim.send(src, h, vec![], 0);
+        }
+        sim.drain(100_000);
+        // Every delivered flit's VI must match its VR's owner.
+        for (vr, state) in sim.vrs.iter().enumerate() {
+            for f in &state.delivered {
+                assert_eq!(
+                    Some(f.header.vi_id),
+                    state.owner_vi,
+                    "VR{vr} accepted a foreign packet"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn per_source_fifo_order_survives_cross_traffic() {
+    forall("fifo order", 32, |rng| {
+        let topo = Topology::single_column(3);
+        let mut sim = NocSim::new(topo);
+        for vr in 0..6 {
+            sim.assign_vr(vr, 1);
+        }
+        // Tracked stream: VR0 -> VR5 with sequence numbers.
+        let n = 1 + rng.below(40) as u32;
+        let h = sim.header_for(1, 5);
+        for seq in 0..n {
+            sim.send(0, h, vec![], seq);
+            // Random cross traffic every cycle.
+            for _ in 0..rng.below(3) {
+                let src = 1 + rng.index(4);
+                let dst = rng.index(6);
+                if dst != src && dst != 5 {
+                    let hh = sim.header_for(1, dst);
+                    sim.send(src, hh, vec![], 0);
+                }
+            }
+            sim.step();
+        }
+        sim.drain(100_000);
+        let seqs: Vec<u32> = sim.vrs[5].delivered.iter().map(|f| f.seq).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "stream reordered");
+        assert_eq!(seqs.len(), n as usize);
+    });
+}
+
+#[test]
+fn hypervisor_never_double_books_under_churn() {
+    forall("allocation churn", 32, |rng| {
+        let device = Device::vu9p();
+        let (topo, fp) = placer::case_study_floorplan(&device).unwrap();
+        let mut sim = NocSim::new(topo.clone());
+        let policy = if rng.chance(0.5) { Policy::FirstFit } else { Policy::AdjacentFirst };
+        let mut hv = Hypervisor::new(topo, fp, policy);
+        let vis: Vec<u16> = (0..3).map(|i| hv.create_vi(&format!("t{i}"))).collect();
+        for _ in 0..rng.range_u64(10, 120) {
+            let vi = vis[rng.index(vis.len())];
+            if rng.chance(0.6) {
+                let _ = hv.allocate_vr(vi, &mut sim);
+            } else {
+                let held: Vec<usize> = hv.vis[&vi].vrs.clone();
+                if !held.is_empty() {
+                    let vr = held[rng.index(held.len())];
+                    hv.release_vr(vi, vr, &mut sim).unwrap();
+                }
+            }
+            // Invariant: each allocated VR appears in exactly one VI's list.
+            let mut owners = vec![0u32; hv.vrs.len()];
+            for v in &vis {
+                for &vr in &hv.vis[v].vrs {
+                    owners[vr] += 1;
+                }
+            }
+            for (vr, &count) in owners.iter().enumerate() {
+                let allocated = hv.vrs[vr].status != VrStatus::Free;
+                assert_eq!(count, u32::from(allocated), "VR{vr} ownership corrupt");
+                // NoC access monitor mirrors hypervisor state.
+                assert_eq!(sim.vrs[vr].owner_vi.is_some(), allocated);
+            }
+        }
+    });
+}
+
+#[test]
+fn exhaustion_recovers_after_release() {
+    let device = Device::vu9p();
+    let (topo, fp) = placer::case_study_floorplan(&device).unwrap();
+    let mut sim = NocSim::new(topo.clone());
+    let mut hv = Hypervisor::new(topo, fp, Policy::FirstFit);
+    let vi = hv.create_vi("hog");
+    let held: Vec<usize> = (0..6).map(|_| hv.allocate_vr(vi, &mut sim).unwrap()).collect();
+    assert!(hv.allocate_vr(vi, &mut sim).is_err()); // injected exhaustion
+    hv.release_vr(vi, held[3], &mut sim).unwrap();
+    assert_eq!(hv.allocate_vr(vi, &mut sim).unwrap(), held[3]); // recovered
+}
+
+#[test]
+fn estimate_models_are_monotone() {
+    forall("model monotonicity", 16, |rng| {
+        let dev = Device::vu9p();
+        let w = [32u32, 64, 128][rng.index(3)];
+        let w2 = w * 2;
+        for ports in [3u32, 4] {
+            let a = RouterConfig::bufferless(ports, w);
+            let b = RouterConfig::bufferless(ports, w2);
+            assert!(router_resources(&b).lut > router_resources(&a).lut);
+            assert!(router_resources(&b).ff > router_resources(&a).ff);
+            assert!(router_power_mw(&b).total_mw() > router_power_mw(&a).total_mw());
+            assert!(router_fmax_mhz(&b, &dev) <= router_fmax_mhz(&a, &dev));
+        }
+        // Radix monotonicity at fixed width.
+        let r3 = RouterConfig::bufferless(3, w);
+        let r4 = RouterConfig::bufferless(4, w);
+        assert!(router_resources(&r4).lut > router_resources(&r3).lut);
+        assert!(router_fmax_mhz(&r4, &dev) < router_fmax_mhz(&r3, &dev));
+    });
+}
+
+#[test]
+fn saturated_network_still_conserves_and_drains() {
+    // Failure injection: overload far beyond capacity, then stop injecting.
+    let topo = Topology::single_column(4);
+    let n_vrs = topo.n_vrs();
+    let mut sim = NocSim::new(topo);
+    for vr in 0..n_vrs {
+        sim.assign_vr(vr, 1);
+    }
+    let mut rng = Rng::new(99);
+    let mut sent = 0u64;
+    for _ in 0..2000 {
+        for src in 0..n_vrs {
+            let dst = rng.index(n_vrs);
+            if dst != src {
+                let h = sim.header_for(1, dst);
+                sim.send(src, h, vec![], 0);
+                sent += 1;
+            }
+        }
+        sim.step();
+    }
+    assert!(sim.drain(1_000_000), "saturated network must drain once injection stops");
+    assert_eq!(sim.stats.delivered + sim.stats.rejected, sent);
+}
