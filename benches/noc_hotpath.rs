@@ -1,111 +1,172 @@
-//! Perf bench for the L3 hot paths: NoC cycle engine throughput
-//! (router-cycles/s) and end-to-end PJRT dispatch. This is the target of
-//! EXPERIMENTS.md §Perf, not a paper figure.
+//! Perf bench for the L3 hot paths: NoC cycle-engine throughput
+//! (router-cycles/s) and end-to-end accelerator dispatch. This is the
+//! target of EXPERIMENTS.md §Perf, not a paper figure.
+//!
+//! The NoC section is an A/B harness: the same workload runs on the
+//! retained reference engine ([`FixpointSim`]) and the batched engine
+//! ([`NocSim`]); the two must agree on every statistic **and** on the
+//! fixpoint pass count (cycle-for-cycle identity), and the batched engine
+//! must be measurably faster.
 
-use fpga_mt::bench_support::{bench, header};
-use fpga_mt::noc::{NocSim, Topology};
+use fpga_mt::bench_support::{bench, check, header, speedup};
+use fpga_mt::noc::{FixpointSim, NocSim, NocStats, Topology};
 use fpga_mt::runtime::{Runtime, Tensor};
 use fpga_mt::util::Rng;
 
+const CYCLES_PER_ITER: u64 = 20_000;
+
+/// Drive one engine through the standard uniform-load workload; both
+/// engines expose the same send/step API so the closure bodies stay in
+/// lockstep by construction.
+fn drive_reference(topo: &Topology, rate: f64, seed: u64) -> (NocStats, u64, u64) {
+    let n_vrs = topo.n_vrs();
+    let mut sim = FixpointSim::new(topo.clone());
+    for vr in 0..n_vrs {
+        sim.assign_vr(vr, 1);
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..CYCLES_PER_ITER {
+        for src in 0..n_vrs {
+            if rng.chance(rate) {
+                let mut dst = rng.index(n_vrs);
+                if dst == src {
+                    dst = (dst + 1) % n_vrs;
+                }
+                let h = sim.header_for(1, dst);
+                sim.send(src, h, vec![], 0);
+            }
+        }
+        sim.step();
+    }
+    sim.drain(CYCLES_PER_ITER * 16);
+    (sim.stats.clone(), sim.passes, sim.cycle())
+}
+
+fn drive_batched(topo: &Topology, rate: f64, seed: u64) -> (NocStats, u64, u64) {
+    let n_vrs = topo.n_vrs();
+    let mut sim = NocSim::new(topo.clone());
+    for vr in 0..n_vrs {
+        sim.assign_vr(vr, 1);
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..CYCLES_PER_ITER {
+        for src in 0..n_vrs {
+            if rng.chance(rate) {
+                let mut dst = rng.index(n_vrs);
+                if dst == src {
+                    dst = (dst + 1) % n_vrs;
+                }
+                let h = sim.header_for(1, dst);
+                sim.send(src, h, vec![], 0);
+            }
+        }
+        sim.step();
+    }
+    sim.drain(CYCLES_PER_ITER * 16);
+    (sim.stats.clone(), sim.passes, sim.cycle())
+}
+
 fn main() {
     header(
-        "Perf — NoC cycle engine & PJRT dispatch hot paths",
-        "engine target: >= 10M router-cycles/s; dispatch: PJRT execute dominates coordinator overhead",
+        "Perf — NoC cycle engine & accelerator dispatch hot paths",
+        "engine target: >= 10M router-cycles/s; batched engine must match the reference cycle-for-cycle",
     );
 
-    // NoC engine: 12-router double column under uniform load.
+    // ---- A/B identity: batched engine vs retained reference engine ----
     let topo = Topology::double_column(12);
-    let n_vrs = topo.n_vrs();
-    let cycles_per_iter = 20_000u64;
-    let s = bench("noc engine: 12 routers, rate 0.3/VR, 20k cycles", 2, 10, || {
-        let mut sim = NocSim::new(topo.clone());
-        for vr in 0..n_vrs {
-            sim.assign_vr(vr, 1);
-        }
-        let mut rng = Rng::new(3);
-        for _ in 0..cycles_per_iter {
-            for src in 0..n_vrs {
-                if rng.chance(0.3) {
-                    let mut dst = rng.index(n_vrs);
-                    if dst == src {
-                        dst = (dst + 1) % n_vrs;
-                    }
-                    let h = sim.header_for(1, dst);
-                    sim.send(src, h, vec![], 0);
-                }
-            }
-            sim.step();
-        }
-        std::hint::black_box(sim.stats.delivered);
-    });
-    let router_cycles = cycles_per_iter as f64 * topo.n_routers() as f64;
-    println!(
-        "-> {:.1}M router-cycles/s\n",
-        router_cycles / s.mean() // cycles per µs = M cycles per s
+    let (ref_stats, ref_passes, ref_cycle) = drive_reference(&topo, 0.3, 3);
+    let (new_stats, new_passes, new_cycle) = drive_batched(&topo, 0.3, 3);
+    check(
+        "delivered identical",
+        ref_stats.delivered == new_stats.delivered,
     );
+    check("rejected identical", ref_stats.rejected == new_stats.rejected);
+    check(
+        "latency distribution identical",
+        ref_stats.latency.mean() == new_stats.latency.mean()
+            && ref_stats.latency.max() == new_stats.latency.max()
+            && ref_stats.latency.count() == new_stats.latency.count(),
+    );
+    check(
+        "waiting distribution identical",
+        ref_stats.waiting.mean() == new_stats.waiting.mean(),
+    );
+    check("fixpoint pass count identical", ref_passes == new_passes);
+    check("drain cycle identical", ref_cycle == new_cycle);
+
+    // ---- throughput: 12-router double column under uniform load ----
+    let s_ref = bench("reference engine: 12 routers, rate 0.3/VR, 20k cycles", 2, 10, || {
+        std::hint::black_box(drive_reference(&topo, 0.3, 3));
+    });
+    let s_new = bench("batched engine:   12 routers, rate 0.3/VR, 20k cycles", 2, 10, || {
+        std::hint::black_box(drive_batched(&topo, 0.3, 3));
+    });
+    let router_cycles = CYCLES_PER_ITER as f64 * topo.n_routers() as f64;
+    println!(
+        "-> reference {:.1}M router-cycles/s, batched {:.1}M router-cycles/s",
+        router_cycles / s_ref.mean(), // cycles per µs = M cycles per s
+        router_cycles / s_new.mean(),
+    );
+    let ratio = speedup("batched vs reference (loaded)", &s_ref, &s_new);
+    check("batched engine is faster under load", ratio > 1.0);
 
     // Idle engine (no traffic): pure stepping cost.
-    bench("noc engine idle: 20k cycles", 2, 10, || {
+    bench("batched engine idle: 20k cycles", 2, 10, || {
         let mut sim = NocSim::new(topo.clone());
-        for _ in 0..cycles_per_iter {
+        for _ in 0..CYCLES_PER_ITER {
             sim.step();
         }
         std::hint::black_box(sim.cycle());
     });
 
-    // PJRT dispatch, if artifacts exist.
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if std::path::Path::new(dir).join("fir.hlo.txt").exists() {
-        let rt = Runtime::load_dir(dir).unwrap();
-        let x: Vec<f32> = (0..1024).map(|i| i as f32 * 0.01).collect();
-        let h = vec![0.0625f32; 16];
-        bench("pjrt execute: fir (1024, 16 taps)", 5, 50, || {
-            std::hint::black_box(
-                rt.execute("fir", &[Tensor::vec1(x.clone()), Tensor::vec1(h.clone())]).unwrap(),
-            );
-        });
-        let a: Vec<f32> = (0..4096).map(|i| (i % 7) as f32).collect();
-        bench("pjrt execute: fpu (4096 x3)", 5, 50, || {
-            std::hint::black_box(
-                rt.execute(
-                    "fpu",
-                    &[Tensor::vec1(a.clone()), Tensor::vec1(a.clone()), Tensor::vec1(a.clone())],
-                )
-                .unwrap(),
-            );
-        });
-        let img: Vec<f32> = (0..128 * 128).map(|i| (i % 255) as f32).collect();
-        bench("pjrt execute: canny (128x128)", 3, 20, || {
-            std::hint::black_box(
-                rt.execute("canny", &[Tensor::new(vec![128, 128], img.clone())]).unwrap(),
-            );
-        });
-        let re: Vec<f32> = (0..2048).map(|i| (i % 17) as f32).collect();
-        bench("pjrt execute: fft (8x256)", 3, 20, || {
-            std::hint::black_box(
-                rt.execute(
-                    "fft",
-                    &[Tensor::new(vec![8, 256], re.clone()), Tensor::new(vec![8, 256], re.clone())],
-                )
-                .unwrap(),
-            );
-        });
-        let blocks: Vec<f32> = (0..256).map(|i| i as f32).collect();
-        let rks = fpga_mt::accel::native::aes_key_expand(&fpga_mt::accel::DEMO_KEY);
-        let rk_f: Vec<f32> = rks.iter().flatten().map(|&b| b as f32).collect();
-        bench("pjrt execute: aes (16 blocks)", 3, 20, || {
-            std::hint::black_box(
-                rt.execute(
-                    "aes",
-                    &[
-                        Tensor::new(vec![16, 16], blocks.clone()),
-                        Tensor::new(vec![11, 16], rk_f.clone()),
-                    ],
-                )
-                .unwrap(),
-            );
-        });
-    } else {
-        println!("(artifacts/ missing: skipping PJRT dispatch benches)");
-    }
+    // ---- accelerator dispatch (native runtime backend) ----
+    let rt = Runtime::load_dir("artifacts").unwrap();
+    let x: Vec<f32> = (0..1024).map(|i| i as f32 * 0.01).collect();
+    let h = vec![0.0625f32; 16];
+    bench("runtime execute: fir (1024, 16 taps)", 5, 50, || {
+        std::hint::black_box(
+            rt.execute("fir", &[Tensor::vec1(x.clone()), Tensor::vec1(h.clone())]).unwrap(),
+        );
+    });
+    let a: Vec<f32> = (0..4096).map(|i| (i % 7) as f32).collect();
+    bench("runtime execute: fpu (4096 x3)", 5, 50, || {
+        std::hint::black_box(
+            rt.execute(
+                "fpu",
+                &[Tensor::vec1(a.clone()), Tensor::vec1(a.clone()), Tensor::vec1(a.clone())],
+            )
+            .unwrap(),
+        );
+    });
+    let img: Vec<f32> = (0..128 * 128).map(|i| (i % 255) as f32).collect();
+    bench("runtime execute: canny (128x128)", 3, 20, || {
+        std::hint::black_box(
+            rt.execute("canny", &[Tensor::new(vec![128, 128], img.clone())]).unwrap(),
+        );
+    });
+    let re: Vec<f32> = (0..2048).map(|i| (i % 17) as f32).collect();
+    bench("runtime execute: fft (8x256)", 3, 20, || {
+        std::hint::black_box(
+            rt.execute(
+                "fft",
+                &[Tensor::new(vec![8, 256], re.clone()), Tensor::new(vec![8, 256], re.clone())],
+            )
+            .unwrap(),
+        );
+    });
+    let blocks: Vec<f32> = (0..256).map(|i| i as f32).collect();
+    let rks = fpga_mt::accel::native::aes_key_expand(&fpga_mt::accel::DEMO_KEY);
+    let rk_f: Vec<f32> = rks.iter().flatten().map(|&b| b as f32).collect();
+    bench("runtime execute: aes (16 blocks)", 3, 20, || {
+        std::hint::black_box(
+            rt.execute(
+                "aes",
+                &[
+                    Tensor::new(vec![16, 16], blocks.clone()),
+                    Tensor::new(vec![11, 16], rk_f.clone()),
+                ],
+            )
+            .unwrap(),
+        );
+    });
 }

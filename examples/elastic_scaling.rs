@@ -4,7 +4,7 @@
 //! compute at both ends and a comparison against the middleware-copy
 //! alternative the paper argues against.
 //!
-//! Run: `make artifacts && cargo run --release --example elastic_scaling`
+//! Run: `cargo run --release --example elastic_scaling`
 
 use fpga_mt::cloud::IoConfig;
 use fpga_mt::coordinator::System;

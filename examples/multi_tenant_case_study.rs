@@ -1,9 +1,9 @@
 //! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the paper's §V-D case study on
-//! the full stack — 5 VIs, 6 VRs, 6 real accelerators (AOT-compiled HLO via
-//! PJRT), concurrent tenants through the threaded engine, IO-trip and
+//! the full stack — 5 VIs, 6 VRs, 6 real accelerators (native runtime
+//! backend), concurrent tenants through the threaded engine, IO-trip and
 //! throughput measurements, and the Fig 13 placement map.
 //!
-//! Run: `make artifacts && cargo run --release --example multi_tenant_case_study`
+//! Run: `cargo run --release --example multi_tenant_case_study`
 
 use fpga_mt::accel::CASE_STUDY;
 use fpga_mt::cloud::{fig14_io_trips, IoConfig, Link, Scheme};

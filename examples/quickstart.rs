@@ -1,7 +1,7 @@
 //! Quickstart: bring up a small multi-tenant deployment, send packets over
-//! the NoC, and run one real accelerator through the PJRT runtime.
+//! the NoC, and run one real accelerator through the runtime.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
 use fpga_mt::device::Device;
 use fpga_mt::hypervisor::{Hypervisor, Policy};
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         noc.stats.delivered, noc.stats.rejected
     );
 
-    // 4. Real compute: run alice's FIR accelerator via PJRT.
+    // 4. Real compute: run alice's FIR accelerator through the runtime.
     let rt = Runtime::load_dir("artifacts")?;
     let signal: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.1).sin()).collect();
     let taps = vec![1.0 / 8.0; 8];

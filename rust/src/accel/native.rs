@@ -73,6 +73,7 @@ pub fn conv2d_same(img: &[f32], h: usize, w: usize, k: &[f32], kh: usize, kw: us
     out
 }
 
+/// 5x5 Gaussian blur kernel (normalized), as used by the Canny front-end.
 pub const GAUSS5: [f32; 25] = {
     let raw = [
         2.0, 4.0, 5.0, 4.0, 2.0, 4.0, 9.0, 12.0, 9.0, 4.0, 5.0, 12.0, 15.0, 12.0, 5.0, 4.0, 9.0,
@@ -86,7 +87,9 @@ pub const GAUSS5: [f32; 25] = {
     }
     out
 };
+/// Horizontal Sobel kernel.
 pub const SOBEL_X: [f32; 9] = [-1.0, 0.0, 1.0, -2.0, 0.0, 2.0, -1.0, 0.0, 1.0];
+/// Vertical Sobel kernel.
 pub const SOBEL_Y: [f32; 9] = [-1.0, -2.0, -1.0, 0.0, 0.0, 0.0, 1.0, 2.0, 1.0];
 
 /// Gaussian blur -> Sobel -> magnitude (matches `kernels/canny.py`).

@@ -72,6 +72,7 @@ pub const CASE_STUDY: [AccelSpec; 6] = [
     },
 ];
 
+/// Look a case-study accelerator up by registry name.
 pub fn by_name(name: &str) -> Option<&'static AccelSpec> {
     CASE_STUDY.iter().find(|a| a.name == name)
 }

@@ -41,3 +41,17 @@ pub fn header(experiment: &str, claim: &str) {
 pub fn check(what: &str, ok: bool) {
     println!("[{}] {}", if ok { "OK " } else { "FAIL" }, what);
 }
+
+/// Report a measured speedup of `new` over `old` (both per-iteration
+/// Summaries from [`bench`]) and return the ratio. Used by the engine A/B
+/// benches (`benches/noc_hotpath.rs`) to quantify a refactor against the
+/// retained reference implementation.
+pub fn speedup(what: &str, old: &Summary, new: &Summary) -> f64 {
+    let ratio = if new.mean() > 0.0 { old.mean() / new.mean() } else { f64::INFINITY };
+    println!(
+        "speedup {what:<38} {ratio:>6.2}x ({:.1} µs -> {:.1} µs)",
+        old.mean(),
+        new.mean()
+    );
+    ratio
+}

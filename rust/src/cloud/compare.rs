@@ -9,9 +9,13 @@ use super::iopath::{fig14_io_trips, IoConfig, Scheme};
 /// One row of Table II.
 #[derive(Debug, Clone)]
 pub struct SchemeRow {
+    /// Scheme name as printed in the paper.
     pub name: &'static str,
+    /// Supports run-time reallocation of FPGA resources.
     pub runtime_realloc: bool,
+    /// Supports hardware elasticity (growing a running tenant).
     pub hw_elasticity: bool,
+    /// Supports on-chip communication between tenant regions.
     pub on_chip_com: bool,
     /// IO trip cost in µs (None = not reported).
     pub io_trip_us: Option<f64>,

@@ -91,8 +91,11 @@ impl IoConfig {
 /// A Fig 14 experiment: average IO trip per accelerator in both schemes.
 #[derive(Debug, Clone)]
 pub struct IoTripRow {
+    /// Accelerator display name.
     pub accel: String,
+    /// Mean directIO round trip (µs).
     pub direct_us: f64,
+    /// Mean multi-tenant round trip (µs).
     pub multi_us: f64,
 }
 

@@ -18,10 +18,12 @@ pub const ENTRY_SERVICE_US: f64 = 2.0;
 pub struct EntryPoint {
     /// Time the server becomes free.
     free_at: f64,
+    /// Distribution of per-request waiting times (µs).
     pub wait: Summary,
 }
 
 impl EntryPoint {
+    /// Idle entry point.
     pub fn new() -> Self {
         EntryPoint { free_at: 0.0, wait: Summary::new() }
     }

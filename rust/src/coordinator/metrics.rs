@@ -11,8 +11,9 @@ pub struct RequestTiming {
     pub noc_cycles: u64,
     /// Measured PJRT compute wall time (µs).
     pub compute_us: f64,
-    /// Bytes in / out.
+    /// Request payload bytes in.
     pub bytes_in: usize,
+    /// Response bytes out.
     pub bytes_out: usize,
 }
 
@@ -27,17 +28,26 @@ impl RequestTiming {
 /// Aggregate metrics for a run.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Completed requests.
     pub requests: u64,
+    /// Requests rejected by access control.
     pub rejected: u64,
+    /// IO-trip time distribution (µs).
     pub io_us: Summary,
+    /// Compute time distribution (µs).
     pub compute_us: Summary,
+    /// End-to-end time distribution (µs).
     pub total_us: Summary,
+    /// NoC streaming cycles distribution.
     pub noc_cycles: Summary,
+    /// Total payload bytes in.
     pub bytes_in: u64,
+    /// Total response bytes out.
     pub bytes_out: u64,
 }
 
 impl Metrics {
+    /// Fold one completed request into the aggregates.
     pub fn record(&mut self, t: &RequestTiming, noc_clock_mhz: f64) {
         self.requests += 1;
         self.io_us.add(t.io_us);

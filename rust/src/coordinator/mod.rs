@@ -1,17 +1,18 @@
 //! Layer-3 coordinator: the deployed multi-tenant cloud-FPGA system.
 //!
-//! Assembles device + floorplan + hypervisor + NoC + PJRT runtime into the
-//! paper's case-study deployment and owns the request path:
+//! Assembles device + floorplan + hypervisor + NoC + accelerator runtime
+//! into the paper's case-study deployment and owns the request path:
 //!
 //! ```text
 //! VI client -> middleware entry point (modeled µs) -> VR USER REGION
-//!   (real PJRT compute) -> [Wrapper registers point elsewhere?] ->
+//!   (real accelerator compute) -> [Wrapper registers point elsewhere?] ->
 //!   NoC flits (cycle-simulated) -> dest VR compute -> response
 //! ```
 //!
 //! The IO trip uses the Fig 14 calibrated model; on-chip streaming runs
 //! through the cycle-accurate NoC; accelerator outputs are real numbers
-//! from the compiled artifacts. See `server` for the threaded engine.
+//! from the runtime's model implementations (see `runtime` for the
+//! backend). See `server` for the threaded engine.
 
 pub mod metrics;
 pub mod server;
@@ -32,11 +33,17 @@ pub const FLIT_PAYLOAD_BYTES: usize = 4;
 
 /// A deployed system.
 pub struct System {
+    /// Physical device the deployment targets.
     pub device: Device,
+    /// Hypervisor managing VI/VR lifecycle.
     pub hv: Hypervisor,
+    /// Cycle-accurate NoC simulator.
     pub noc: NocSim,
+    /// Accelerator execution runtime.
     pub runtime: Runtime,
+    /// IO-path timing model configuration.
     pub io_cfg: IoConfig,
+    /// Aggregated request metrics.
     pub metrics: Metrics,
     entry: EntryPoint,
     clock_us: f64,
@@ -50,6 +57,7 @@ pub struct Response {
     pub outputs: Vec<Tensor>,
     /// Which accelerator(s) ran.
     pub path: Vec<String>,
+    /// Per-phase timing of the request.
     pub timing: RequestTiming,
 }
 
@@ -212,18 +220,9 @@ impl System {
 mod tests {
     use super::*;
 
-    fn artifacts() -> Option<String> {
-        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-        std::path::Path::new(dir).join("fir.hlo.txt").exists().then(|| dir.to_string())
-    }
-
     #[test]
     fn case_study_boots_and_serves_all_six() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let mut sys = System::case_study(&dir).unwrap();
+        let mut sys = System::case_study("artifacts").unwrap();
         assert_eq!(sys.hv.vr_utilization(), 1.0);
         let payload: Vec<u8> = (0..=255).collect();
         for spec in &CASE_STUDY {
@@ -237,11 +236,7 @@ mod tests {
 
     #[test]
     fn fpu_streams_into_aes_on_chip() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let mut sys = System::case_study(&dir).unwrap();
+        let mut sys = System::case_study("artifacts").unwrap();
         let resp = sys.submit(3, 2, &[7u8; 64]).unwrap();
         // VI3's FPU (VR2... Table I: FPU is VR3 in paper numbering = index 2)
         assert_eq!(resp.path, vec!["fpu".to_string(), "aes".to_string()]);
@@ -252,22 +247,14 @@ mod tests {
 
     #[test]
     fn foreign_vi_rejected_by_access_monitor() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let mut sys = System::case_study(&dir).unwrap();
+        let mut sys = System::case_study("artifacts").unwrap();
         assert!(sys.submit(1, 5, &[0u8; 8]).is_err());
         assert_eq!(sys.metrics.rejected, 1);
     }
 
     #[test]
     fn aes_output_matches_native_oracle() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let mut sys = System::case_study(&dir).unwrap();
+        let mut sys = System::case_study("artifacts").unwrap();
         let payload: Vec<u8> = (0..=255).collect();
         // AES is VR4 in the paper (index 3), owned by VI3.
         let resp = sys.submit(3, 3, &payload).unwrap();

@@ -1,7 +1,8 @@
 //! Threaded serving engine (vLLM-router shape, std threads: the offline
 //! build has no tokio).
 //!
-//! One executor thread owns the [`System`] (PJRT executables are not
+//! One executor thread owns the [`System`] (the request path mutates the
+//! NoC and the metrics, and a PJRT backend's executables would not be
 //! `Sync`); VI client threads submit requests over an mpsc channel and
 //! receive responses on per-request channels. The executor drains the
 //! queue in batches, amortizing dispatch — the paper's VIs "continuously
@@ -14,9 +15,13 @@ use std::thread::JoinHandle;
 
 /// A request from a VI client.
 pub struct Request {
+    /// Requesting virtual instance.
     pub vi: u16,
+    /// Target VR index.
     pub vr: usize,
+    /// Raw request payload.
     pub payload: Vec<u8>,
+    /// Channel the response is sent back on.
     pub reply: mpsc::Sender<Result<Response>>,
 }
 
@@ -45,9 +50,9 @@ impl EngineHandle {
 
 /// The engine: executor thread + handle factory.
 ///
-/// PJRT handles are not `Send`, so the [`System`] is *constructed inside*
-/// the executor thread from a builder closure and never crosses threads;
-/// `stop` hands back only the (Send) metrics.
+/// The [`System`] is *constructed inside* the executor thread from a
+/// builder closure and never crosses threads (a PJRT backend's handles
+/// would not be `Send`); `stop` hands back only the (Send) metrics.
 pub struct Engine {
     handle: EngineHandle,
     worker: Option<JoinHandle<Metrics>>,
@@ -57,6 +62,8 @@ impl Engine {
     /// Maximum requests drained per executor iteration (dispatch batch).
     pub const BATCH: usize = 8;
 
+    /// Boot the executor thread; blocks until the [`System`] is built (or
+    /// fails to build).
     pub fn start<F>(builder: F) -> Result<Engine>
     where
         F: FnOnce() -> Result<System> + Send + 'static,
@@ -103,6 +110,7 @@ impl Engine {
         Ok(Engine { handle: EngineHandle { tx }, worker: Some(worker) })
     }
 
+    /// A new client handle onto the engine.
     pub fn handle(&self) -> EngineHandle {
         self.handle.clone()
     }
@@ -121,18 +129,9 @@ mod tests {
     use super::*;
     use crate::accel::CASE_STUDY;
 
-    fn artifacts() -> Option<String> {
-        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-        std::path::Path::new(dir).join("fir.hlo.txt").exists().then(|| dir.to_string())
-    }
-
     #[test]
     fn concurrent_tenants_all_served() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let engine = Engine::start(move || System::case_study(&dir)).unwrap();
+        let engine = Engine::start(|| System::case_study("artifacts")).unwrap();
         let mut joins = Vec::new();
         for spec in CASE_STUDY.iter().filter(|s| s.name != "fpu") {
             let h = engine.handle();
@@ -154,11 +153,7 @@ mod tests {
 
     #[test]
     fn engine_rejects_foreign_access_without_dying() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let engine = Engine::start(move || System::case_study(&dir)).unwrap();
+        let engine = Engine::start(|| System::case_study("artifacts")).unwrap();
         let h = engine.handle();
         assert!(h.call(1, 3, vec![0; 16]).is_err()); // VI1 does not own VR3
         assert!(h.call(2, 1, vec![0; 16]).is_ok()); // VI2 owns VR1 (fft)

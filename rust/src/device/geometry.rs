@@ -20,6 +20,7 @@ pub const LONG_WIRE_SPAN: usize = 16;
 /// Axis-aligned rectangle of CLBs, `[x0, x1) x [y0, y1)` — the unit of
 /// floorplanning (a Vivado pblock).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)] // the four corner coordinates speak for themselves
 pub struct Rect {
     pub x0: usize,
     pub y0: usize,
@@ -28,25 +29,32 @@ pub struct Rect {
 }
 
 impl Rect {
+    /// Build a rectangle; panics on zero-area rects.
     pub fn new(x0: usize, y0: usize, x1: usize, y1: usize) -> Self {
         assert!(x1 > x0 && y1 > y0, "degenerate rect {x0},{y0},{x1},{y1}");
         Rect { x0, y0, x1, y1 }
     }
 
+    /// Width in CLB columns.
     pub fn width(&self) -> usize {
         self.x1 - self.x0
     }
+    /// Height in CLB rows.
     pub fn height(&self) -> usize {
         self.y1 - self.y0
     }
+    /// Area in CLBs.
     pub fn clbs(&self) -> usize {
         self.width() * self.height()
     }
 
+    /// Whether the two rectangles overlap (half-open: touching is not
+    /// overlap).
     pub fn intersects(&self, o: &Rect) -> bool {
         self.x0 < o.x1 && o.x0 < self.x1 && self.y0 < o.y1 && o.y0 < self.y1
     }
 
+    /// Whether `o` lies entirely within this rectangle.
     pub fn contains(&self, o: &Rect) -> bool {
         self.x0 <= o.x0 && self.y0 <= o.y0 && self.x1 >= o.x1 && self.y1 >= o.y1
     }
@@ -75,23 +83,30 @@ impl Rect {
 /// Die geometry: a `cols x rows` CLB grid partitioned into clock regions.
 #[derive(Debug, Clone)]
 pub struct Geometry {
+    /// CLB columns across the die.
     pub clb_cols: usize,
+    /// CLB rows down the die.
     pub clb_rows: usize,
-    /// Clock-region grid (columns x rows of regions).
+    /// Clock-region grid columns.
     pub cr_cols: usize,
+    /// Clock-region grid rows.
     pub cr_rows: usize,
 }
 
 impl Geometry {
+    /// Die of `clb_cols x clb_rows` CLBs with `cr_cols` clock-region
+    /// columns; rows must be a multiple of the clock-region height.
     pub fn new(clb_cols: usize, clb_rows: usize, cr_cols: usize) -> Self {
         assert!(clb_rows % CLOCK_REGION_ROWS == 0, "rows must be a multiple of 60");
         Geometry { clb_cols, clb_rows, cr_cols, cr_rows: clb_rows / CLOCK_REGION_ROWS }
     }
 
+    /// Total CLB count of the die.
     pub fn total_clbs(&self) -> usize {
         self.clb_cols * self.clb_rows
     }
 
+    /// The whole die as a rectangle.
     pub fn die_rect(&self) -> Rect {
         Rect::new(0, 0, self.clb_cols, self.clb_rows)
     }

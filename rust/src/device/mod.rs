@@ -17,8 +17,11 @@ pub use resources::Resources;
 /// A concrete FPGA part: geometry plus total resource inventory.
 #[derive(Debug, Clone)]
 pub struct Device {
+    /// Vendor part name.
     pub name: String,
+    /// CLB grid / clock-region layout.
     pub geometry: Geometry,
+    /// Total device resource inventory.
     pub capacity: Resources,
     /// Device base clock specification ceiling (MHz) — UltraScale+ fabric
     /// FFs/BUFG spec limit; routers cannot beat this.

@@ -8,8 +8,11 @@ use anyhow::{bail, Result};
 /// A placement block: rectangle + the resources currently committed into it.
 #[derive(Debug, Clone)]
 pub struct Pblock {
+    /// Pblock name (Vivado-style constraint name).
     pub name: String,
+    /// Placement rectangle in CLB coordinates.
     pub rect: Rect,
+    /// Resources currently committed into the pblock.
     pub used: Resources,
     /// DSP/BRAM capacity apportioned to this pblock from the device pool
     /// (CLB columns carry LUT/FF; hard-block columns are pooled).
@@ -17,10 +20,12 @@ pub struct Pblock {
 }
 
 impl Pblock {
+    /// Empty pblock over `rect`.
     pub fn new(name: impl Into<String>, rect: Rect) -> Self {
         Pblock { name: name.into(), rect, used: Resources::ZERO, hard_cap: Resources::ZERO }
     }
 
+    /// Apportion DSP/BRAM capacity from the device pool to this pblock.
     pub fn with_hard_blocks(mut self, dsp: u64, bram: u64) -> Self {
         self.hard_cap = Resources { dsp, bram, ..Resources::ZERO };
         self
@@ -31,6 +36,7 @@ impl Pblock {
         self.rect.clb_capacity() + self.hard_cap
     }
 
+    /// Capacity not yet committed.
     pub fn free(&self) -> Resources {
         self.capacity().saturating_sub(&self.used)
     }
@@ -54,6 +60,7 @@ impl Pblock {
         self.used = self.used.saturating_sub(r);
     }
 
+    /// Committed LUT fraction of this pblock's capacity.
     pub fn utilization(&self) -> f64 {
         self.used.lut_fraction_of(&self.capacity())
     }
@@ -66,10 +73,13 @@ pub struct PblockSet {
 }
 
 impl PblockSet {
+    /// Empty set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add a pblock, rejecting any overlap with an existing one. Returns
+    /// the new pblock's index.
     pub fn add(&mut self, pb: Pblock) -> Result<usize> {
         for existing in &self.blocks {
             if existing.rect.intersects(&pb.rect) {
@@ -80,21 +90,27 @@ impl PblockSet {
         Ok(self.blocks.len() - 1)
     }
 
+    /// Pblock at `idx`.
     pub fn get(&self, idx: usize) -> &Pblock {
         &self.blocks[idx]
     }
+    /// Mutable pblock at `idx`.
     pub fn get_mut(&mut self, idx: usize) -> &mut Pblock {
         &mut self.blocks[idx]
     }
+    /// Look a pblock up by name.
     pub fn by_name(&self, name: &str) -> Option<&Pblock> {
         self.blocks.iter().find(|b| b.name == name)
     }
+    /// Iterate all pblocks in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = &Pblock> {
         self.blocks.iter()
     }
+    /// Number of pblocks in the set.
     pub fn len(&self) -> usize {
         self.blocks.len()
     }
+    /// Whether the set is empty.
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty()
     }

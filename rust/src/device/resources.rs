@@ -7,16 +7,23 @@ use std::ops::{Add, AddAssign, Sub};
 /// A bundle of FPGA primitive resources (post-synthesis utilization view).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Resources {
+    /// 6-input LUTs.
     pub lut: u64,
+    /// SLICEM LUTs used as distributed RAM.
     pub lutram: u64,
+    /// Flip-flops.
     pub ff: u64,
+    /// DSP slices.
     pub dsp: u64,
-    pub bram: u64, // BRAM36 tiles
+    /// BRAM36 tiles.
+    pub bram: u64,
 }
 
 impl Resources {
+    /// The all-zero bundle.
     pub const ZERO: Resources = Resources { lut: 0, lutram: 0, ff: 0, dsp: 0, bram: 0 };
 
+    /// Bundle from explicit per-primitive counts.
     pub fn new(lut: u64, lutram: u64, ff: u64, dsp: u64, bram: u64) -> Self {
         Resources { lut, lutram, ff, dsp, bram }
     }
@@ -47,6 +54,7 @@ impl Resources {
         if capacity.lut == 0 { 0.0 } else { self.lut as f64 / capacity.lut as f64 }
     }
 
+    /// Multiply every axis by `k`.
     pub fn scale(&self, k: u64) -> Resources {
         Resources {
             lut: self.lut * k,
@@ -57,6 +65,7 @@ impl Resources {
         }
     }
 
+    /// Whether every axis is zero.
     pub fn is_zero(&self) -> bool {
         *self == Resources::ZERO
     }

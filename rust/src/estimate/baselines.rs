@@ -12,6 +12,7 @@
 /// One comparison design.
 #[derive(Debug, Clone, Copy)]
 pub struct Baseline {
+    /// Design name as printed in the paper's figures.
     pub name: &'static str,
     /// Achieved Fmax on a VU9P-class part at 32-bit width (MHz).
     pub fmax_mhz: f64,
@@ -81,8 +82,10 @@ pub const LINKBLAZE_FAST: Baseline = Baseline {
     fmax_slope_per_doubling: 70.0,
 };
 
+/// All published baselines the paper's figures compare against.
 pub const BASELINES: [&Baseline; 4] = [&CONNECT, &HOPLITE, &LINKBLAZE_FLEX, &LINKBLAZE_FAST];
 
+/// Look a baseline up by (case-insensitive) name.
 pub fn baseline(name: &str) -> Option<&'static Baseline> {
     BASELINES.iter().copied().find(|b| b.name.eq_ignore_ascii_case(name))
 }

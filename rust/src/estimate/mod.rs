@@ -35,12 +35,14 @@ pub struct RouterConfig {
 }
 
 impl RouterConfig {
+    /// A bufferless router design point (the paper's architecture).
     pub fn bufferless(ports: u32, width_bits: u32) -> Self {
         assert!((3..=4).contains(&ports), "paper's routers have 3 or 4 ports");
         assert!(width_bits.is_power_of_two() && (32..=1024).contains(&width_bits));
         RouterConfig { ports, width_bits, buffered: false }
     }
 
+    /// An input-buffered router design point (the baseline argued against).
     pub fn buffered(ports: u32, width_bits: u32) -> Self {
         RouterConfig { buffered: true, ..Self::bufferless(ports, width_bits) }
     }

@@ -29,13 +29,18 @@ pub const POWER_EVAL_CLOCK_MHZ: f64 = 250.0;
 /// Per-component dynamic power (mW).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PowerBreakdown {
+    /// LUT toggling power.
     pub logic_mw: f64,
+    /// Net (signal) switching power.
     pub signal_mw: f64,
+    /// Clock-tree power (scales with flip-flop count).
     pub clock_mw: f64,
+    /// BRAM/LUTRAM power (buffered baseline only).
     pub bram_mw: f64,
 }
 
 impl PowerBreakdown {
+    /// Sum of all components.
     pub fn total_mw(&self) -> f64 {
         self.logic_mw + self.signal_mw + self.clock_mw + self.bram_mw
     }

@@ -29,25 +29,40 @@ pub enum Policy {
 /// State of one virtual region.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum VrStatus {
+    /// In the free pool, available for allocation.
     Free,
     /// Allocated to a VI but not yet programmed.
-    Allocated { vi: u16 },
+    Allocated {
+        /// Owning virtual instance.
+        vi: u16,
+    },
     /// Programmed with a named accelerator design.
-    Programmed { vi: u16, design: String },
+    Programmed {
+        /// Owning virtual instance.
+        vi: u16,
+        /// Name of the deployed design (accelerator registry name).
+        design: String,
+    },
 }
 
 /// The destination registers the hypervisor writes at configuration time
 /// (§IV-C): where this VR's Wrapper sends its output packets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct VrRegisters {
+    /// ROUTER_ID the Wrapper writes into outgoing packet headers.
     pub dest_router_id: u8,
+    /// VR_ID bit: whether the destination VR is the east one.
     pub dest_vr_east: bool,
+    /// VI_ID stamped on outgoing packets.
     pub vi_id: u16,
 }
 
+/// Full record the hypervisor keeps per virtual region.
 #[derive(Debug, Clone)]
 pub struct VrRecord {
+    /// Lifecycle state (free / allocated / programmed).
     pub status: VrStatus,
+    /// Wrapper destination registers (§IV-C).
     pub registers: VrRegisters,
     /// VR this region streams its output to (None = results return to the
     /// host). Set when `program_vr` is given a destination; the register
@@ -58,34 +73,51 @@ pub struct VrRecord {
 /// A tenant's virtual instance.
 #[derive(Debug, Clone)]
 pub struct ViRecord {
+    /// VI id (also the VI_ID checked by access monitors).
     pub id: u16,
+    /// Human-readable tenant name.
     pub name: String,
+    /// VRs currently held by this VI.
     pub vrs: Vec<usize>,
 }
 
 /// Events the hypervisor reports (for logs/metrics).
 #[derive(Debug, Clone, PartialEq)]
+#[allow(missing_docs)] // field meanings follow the variant names directly
 pub enum Event {
+    /// A virtual instance was created.
     ViCreated { vi: u16 },
+    /// A VR was allocated to a VI.
     VrAllocated { vi: u16, vr: usize },
+    /// A design was programmed into a VR (partial reconfiguration).
     VrProgrammed { vi: u16, vr: usize, design: String, time_us: f64 },
+    /// A direct VR-to-VR streaming link was wired.
     DirectLinkWired { src: usize, dst: usize },
+    /// A VR returned to the free pool.
     VrReleased { vi: u16, vr: usize },
+    /// A VI was torn down (all its VRs released).
     ViDestroyed { vi: u16 },
 }
 
 /// The hypervisor proper.
 pub struct Hypervisor {
+    /// NoC topology of the managed deployment.
     pub topo: Topology,
+    /// Physical floorplan (pblocks) of the deployment.
     pub floorplan: Floorplan,
+    /// Per-VR records, indexed like the topology's VRs.
     pub vrs: Vec<VrRecord>,
+    /// Live virtual instances by id.
     pub vis: HashMap<u16, ViRecord>,
+    /// Allocation policy in force.
     pub policy: Policy,
+    /// Event log, in occurrence order.
     pub events: Vec<Event>,
     next_vi: u16,
 }
 
 impl Hypervisor {
+    /// Hypervisor over a placed topology with all VRs free.
     pub fn new(topo: Topology, floorplan: Floorplan, policy: Policy) -> Self {
         let n = topo.n_vrs();
         Hypervisor {
@@ -115,6 +147,7 @@ impl Hypervisor {
         vi
     }
 
+    /// Number of VRs currently in the free pool.
     pub fn free_vrs(&self) -> usize {
         self.vrs.iter().filter(|v| v.status == VrStatus::Free).count()
     }

@@ -3,14 +3,16 @@
 //!
 //! See DESIGN.md for the layer map and the per-experiment index.
 
+#![warn(missing_docs)]
+
 pub mod accel;
 pub mod bench_support;
 pub mod cloud;
 pub mod coordinator;
 pub mod device;
+pub mod estimate;
 pub mod hypervisor;
 pub mod noc;
 pub mod placer;
 pub mod runtime;
-pub mod estimate;
 pub mod util;

@@ -41,7 +41,7 @@ fn main() -> Result<()> {
                  \n  io-trip     Fig 14 IO trip multi-tenant vs directIO\
                  \n  throughput  Fig 15 streaming throughput local/remote\
                  \n  compare     Table II scheme comparison\
-                 \n  case-study  Table I end-to-end deployment (needs artifacts/)"
+                 \n  case-study  Table I end-to-end deployment (native runtime)"
             );
             Ok(())
         }

@@ -1,0 +1,457 @@
+//! Reference NoC engine: the original per-cycle fixpoint simulator.
+//!
+//! This is the seed implementation of the network simulator, kept as the
+//! behavioral oracle for the batched engine in [`super::sim`]. It walks
+//! `Option`-array router state behind accessor methods and iterates
+//! movement phases to a fixpoint every cycle. The batched engine performs
+//! the exact same operations in the exact same order on flattened state,
+//! and `rust/tests/properties.rs` plus `benches/noc_hotpath.rs` hold the
+//! two cycle-for-cycle identical (including the `passes` counter).
+//!
+//! Keep this file boring: any behavioral change here must be mirrored in
+//! [`super::sim`] and vice versa.
+
+use super::packet::{Flit, Header, VrSide};
+use super::routing::{route, OutPort};
+use super::sim::{NocStats, VrState};
+use super::topology::Topology;
+
+const NPORTS: usize = 4;
+
+fn port_idx(p: OutPort) -> usize {
+    match p {
+        OutPort::North => 0,
+        OutPort::South => 1,
+        OutPort::West => 2,
+        OutPort::East => 3,
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    flit: Flit,
+    moved_at: u64,
+    granted_at: u64,
+}
+
+#[derive(Debug, Clone)]
+struct RouterState {
+    id: u8,
+    stage1: [Option<Slot>; NPORTS],
+    out_reg: [Option<Slot>; NPORTS],
+    rr: [usize; NPORTS],
+}
+
+/// The reference network simulator (per-cycle fixpoint iteration).
+pub struct FixpointSim {
+    /// Topology being simulated.
+    pub topo: Topology,
+    routers: Vec<RouterState>,
+    /// Per-VR endpoint state (same layout as [`super::sim::NocSim::vrs`]).
+    pub vrs: Vec<VrState>,
+    relays_n: Vec<Vec<Option<Slot>>>,
+    relays_s: Vec<Vec<Option<Slot>>>,
+    direct: Vec<Option<usize>>,
+    direct_srcs: Vec<usize>,
+    direct_fired: Vec<bool>,
+    active: usize,
+    /// Total movement passes executed (compared against the batched engine
+    /// in `benches/noc_hotpath.rs`).
+    pub passes: u64,
+    cycle: u64,
+    next_flit_id: u64,
+    /// Aggregated delivery/rejection/latency statistics.
+    pub stats: NocStats,
+}
+
+impl FixpointSim {
+    /// Build a simulator for `topo` with all VRs unassigned.
+    pub fn new(topo: Topology) -> Self {
+        let n = topo.n_routers();
+        let routers = (0..n)
+            .map(|i| RouterState {
+                id: i as u8,
+                stage1: Default::default(),
+                out_reg: Default::default(),
+                rr: [0; NPORTS],
+            })
+            .collect();
+        let relays_n: Vec<Vec<Option<Slot>>> = (0..n.saturating_sub(1))
+            .map(|i| vec![None; topo.link_relay[i] as usize])
+            .collect();
+        let relays_s = relays_n.clone();
+        let n_vrs = topo.n_vrs();
+        FixpointSim {
+            topo,
+            routers,
+            vrs: vec![VrState::default(); n_vrs],
+            relays_n,
+            relays_s,
+            direct: vec![None; n_vrs],
+            direct_srcs: Vec::new(),
+            direct_fired: vec![false; n_vrs],
+            active: 0,
+            passes: 0,
+            cycle: 0,
+            next_flit_id: 0,
+            stats: NocStats::default(),
+        }
+    }
+
+    /// Current simulation cycle.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Assign a VR to a VI (configures its access monitor).
+    pub fn assign_vr(&mut self, vr: usize, vi: u16) {
+        self.vrs[vr].owner_vi = Some(vi);
+    }
+
+    /// Release a VR (its access monitor rejects everything again).
+    pub fn release_vr(&mut self, vr: usize) {
+        self.vrs[vr].owner_vi = None;
+    }
+
+    /// Wire a direct VR->VR streaming link (must be physically adjacent).
+    pub fn wire_direct(&mut self, src: usize, dst: usize) -> anyhow::Result<()> {
+        if !self.topo.vrs_adjacent(src, dst) {
+            anyhow::bail!("VR{src} and VR{dst} are not adjacent; cannot wire a direct link");
+        }
+        self.direct[src] = Some(dst);
+        if !self.direct_srcs.contains(&src) {
+            self.direct_srcs.push(src);
+        }
+        Ok(())
+    }
+
+    /// Header addressing a VR in this topology.
+    pub fn header_for(&self, vi: u16, dst_vr: usize) -> Header {
+        Header::new(vi, self.topo.router_of_vr(dst_vr), self.topo.side_of_vr(dst_vr))
+    }
+
+    /// Enqueue a flit from `src_vr` into the NoC. Returns the flit id.
+    pub fn send(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+        let id = self.next_flit_id;
+        self.next_flit_id += 1;
+        self.active += 1;
+        self.vrs[src_vr].out_queue.push_back(Flit {
+            header,
+            seq,
+            payload,
+            enqueued_at: self.cycle,
+            id,
+        });
+        id
+    }
+
+    /// Enqueue a flit on `src_vr`'s direct link.
+    pub fn send_direct(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+        assert!(self.direct[src_vr].is_some(), "VR{src_vr} has no direct link");
+        let id = self.next_flit_id;
+        self.next_flit_id += 1;
+        self.active += 1;
+        self.vrs[src_vr].direct_out.push_back(Flit {
+            header,
+            seq,
+            payload,
+            enqueued_at: self.cycle,
+            id,
+        });
+        id
+    }
+
+    /// Flits currently inside the network (O(1): maintained counter).
+    pub fn in_flight(&self) -> usize {
+        self.active
+    }
+
+    /// Deliver a flit into a VR through its access monitor.
+    fn deliver(vr: &mut VrState, stats: &mut NocStats, slot: Slot, now: u64) {
+        if vr.owner_vi == Some(slot.flit.header.vi_id) {
+            stats.delivered += 1;
+            stats.latency.add((now - slot.flit.enqueued_at) as f64);
+            stats.waiting.add((slot.granted_at + 1 - slot.flit.enqueued_at) as f64);
+            vr.delivered.push_back(slot.flit);
+        } else {
+            stats.rejected += 1;
+            vr.rejected += 1;
+        }
+    }
+
+    /// One clock cycle: iterate movement phases to a fixpoint.
+    pub fn step(&mut self) {
+        let now = self.cycle;
+        if self.active == 0 {
+            self.cycle += 1;
+            return;
+        }
+        for s in self.direct_srcs.iter() {
+            self.direct_fired[*s] = false;
+        }
+        let mut pass = 0u32;
+        loop {
+            self.passes += 1;
+            let descending = pass % 2 == 0;
+            pass += 1;
+            let mut moved = false;
+
+            for l in 0..self.relays_n.len() {
+                if !self.relays_n[l].is_empty() {
+                    if self.relays_n[l][0].is_none() {
+                        let reg = &mut self.routers[l].out_reg[port_idx(OutPort::North)];
+                        if reg.as_ref().map(|s| s.moved_at < now).unwrap_or(false) {
+                            let mut slot = reg.take().unwrap();
+                            slot.moved_at = now;
+                            self.relays_n[l][0] = Some(slot);
+                            moved = true;
+                        }
+                    }
+                    if self.relays_s[l][0].is_none() {
+                        let reg = &mut self.routers[l + 1].out_reg[port_idx(OutPort::South)];
+                        if reg.as_ref().map(|s| s.moved_at < now).unwrap_or(false) {
+                            let mut slot = reg.take().unwrap();
+                            slot.moved_at = now;
+                            self.relays_s[l][0] = Some(slot);
+                            moved = true;
+                        }
+                    }
+                }
+            }
+            let n_r = self.routers.len();
+            for i in 0..n_r {
+                let r = if descending { n_r - 1 - i } else { i };
+                for (port, side) in [
+                    (port_idx(OutPort::West), VrSide::West),
+                    (port_idx(OutPort::East), VrSide::East),
+                ] {
+                    let movable = self.routers[r].out_reg[port]
+                        .as_ref()
+                        .map(|s| s.moved_at < now)
+                        .unwrap_or(false);
+                    if movable {
+                        let slot = self.routers[r].out_reg[port].take().unwrap();
+                        let vr = match side {
+                            VrSide::West => self.topo.west_vr(r as u8),
+                            VrSide::East => self.topo.east_vr(r as u8),
+                        };
+                        Self::deliver(&mut self.vrs[vr], &mut self.stats, slot, now);
+                        self.active -= 1;
+                        moved = true;
+                    }
+                }
+                {
+                    let rt = &mut self.routers[r];
+                    for p in 0..NPORTS {
+                        if rt.out_reg[p].is_none() {
+                            let movable =
+                                rt.stage1[p].as_ref().map(|s| s.moved_at < now).unwrap_or(false);
+                            if movable {
+                                let mut slot = rt.stage1[p].take().unwrap();
+                                slot.moved_at = now;
+                                rt.out_reg[p] = Some(slot);
+                                moved = true;
+                            }
+                        }
+                    }
+                }
+                moved |= self.allocate(r, now);
+            }
+
+            for k in 0..self.direct_srcs.len() {
+                let src = self.direct_srcs[k];
+                {
+                    let dst = self.direct[src].unwrap();
+                    if self.direct_fired[src] {
+                        continue;
+                    }
+                    let ready = self.vrs[src]
+                        .direct_out
+                        .front()
+                        .map(|f| f.enqueued_at < now)
+                        .unwrap_or(false);
+                    if ready {
+                        self.direct_fired[src] = true;
+                        let flit = self.vrs[src].direct_out.pop_front().unwrap();
+                        let slot = Slot { granted_at: now, moved_at: now, flit };
+                        self.stats.direct_delivered += 1;
+                        self.active -= 1;
+                        let vr = &mut self.vrs[dst];
+                        if vr.owner_vi == Some(slot.flit.header.vi_id) {
+                            vr.delivered.push_back(slot.flit);
+                        } else {
+                            vr.rejected += 1;
+                            self.stats.rejected += 1;
+                        }
+                        moved = true;
+                    }
+                }
+            }
+
+            if !moved {
+                break;
+            }
+        }
+        self.cycle += 1;
+    }
+
+    fn allocate(&mut self, r: usize, now: u64) -> bool {
+        let rid = self.routers[r].id;
+        let mut requested = [usize::MAX; NPORTS];
+        let mut any = false;
+        for (inp, req) in requested.iter_mut().enumerate() {
+            if let Some(h) = self.peek_head(r, inp, now) {
+                *req = port_idx(route(&h, rid));
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        let mut moved = false;
+        for p in 0..NPORTS {
+            if self.routers[r].stage1[p].is_some() {
+                continue;
+            }
+            let start = self.routers[r].rr[p];
+            let mut grant: Option<usize> = None;
+            for k in 0..NPORTS {
+                let inp = (start + k) % NPORTS;
+                if inp == p {
+                    continue;
+                }
+                if requested[inp] == p {
+                    grant = Some(inp);
+                    break;
+                }
+            }
+            if let Some(inp) = grant {
+                requested[inp] = usize::MAX;
+                let (flit, granted_at) = self.pop_head(r, inp, now);
+                self.routers[r].stage1[p] = Some(Slot { flit, moved_at: now, granted_at });
+                self.routers[r].rr[p] = (inp + 1) % NPORTS;
+                moved = true;
+            }
+        }
+        moved
+    }
+
+    fn peek_head(&self, r: usize, inp: usize, now: u64) -> Option<Header> {
+        match inp {
+            0 => self.upstream_slot(r, true).and_then(|s| {
+                if s.moved_at < now {
+                    Some(s.flit.header)
+                } else {
+                    None
+                }
+            }),
+            1 => self.upstream_slot(r, false).and_then(|s| {
+                if s.moved_at < now {
+                    Some(s.flit.header)
+                } else {
+                    None
+                }
+            }),
+            2 => self.vrs[self.topo.west_vr(r as u8)]
+                .out_queue
+                .front()
+                .filter(|f| f.enqueued_at <= now)
+                .map(|f| f.header),
+            3 => self.vrs[self.topo.east_vr(r as u8)]
+                .out_queue
+                .front()
+                .filter(|f| f.enqueued_at <= now)
+                .map(|f| f.header),
+            _ => unreachable!(),
+        }
+    }
+
+    fn upstream_slot(&self, r: usize, from_north: bool) -> Option<&Slot> {
+        if from_north {
+            if r + 1 >= self.routers.len() {
+                return None;
+            }
+            if !self.relays_s[r].is_empty() {
+                self.relays_s[r][0].as_ref()
+            } else {
+                self.routers[r + 1].out_reg[port_idx(OutPort::South)].as_ref()
+            }
+        } else {
+            if r == 0 {
+                return None;
+            }
+            let l = r - 1;
+            if !self.relays_n[l].is_empty() {
+                self.relays_n[l][0].as_ref()
+            } else {
+                self.routers[l].out_reg[port_idx(OutPort::North)].as_ref()
+            }
+        }
+    }
+
+    fn pop_head(&mut self, r: usize, inp: usize, now: u64) -> (Flit, u64) {
+        match inp {
+            0 => {
+                let slot = if !self.relays_s[r].is_empty() {
+                    self.relays_s[r][0].take().unwrap()
+                } else {
+                    self.routers[r + 1].out_reg[port_idx(OutPort::South)].take().unwrap()
+                };
+                (slot.flit, slot.granted_at)
+            }
+            1 => {
+                let l = r - 1;
+                let slot = if !self.relays_n[l].is_empty() {
+                    self.relays_n[l][0].take().unwrap()
+                } else {
+                    self.routers[l].out_reg[port_idx(OutPort::North)].take().unwrap()
+                };
+                (slot.flit, slot.granted_at)
+            }
+            2 => {
+                let vr = self.topo.west_vr(r as u8);
+                (self.vrs[vr].out_queue.pop_front().unwrap(), now)
+            }
+            3 => {
+                let vr = self.topo.east_vr(r as u8);
+                (self.vrs[vr].out_queue.pop_front().unwrap(), now)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Run `cycles` clock cycles.
+    pub fn run(&mut self, cycles: u64) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
+    /// Step until the network is empty (bounded by `max_cycles`).
+    pub fn drain(&mut self, max_cycles: u64) -> bool {
+        let mut left = max_cycles;
+        while self.in_flight() > 0 && left > 0 {
+            self.step();
+            left -= 1;
+        }
+        self.in_flight() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_engine_smoke() {
+        let mut s = FixpointSim::new(Topology::single_column(3));
+        for vr in 0..6 {
+            s.assign_vr(vr, vr as u16);
+        }
+        let h = s.header_for(5, 5);
+        s.send(0, h, vec![1], 0);
+        assert!(s.drain(64));
+        assert_eq!(s.stats.delivered, 1);
+        assert_eq!(s.stats.latency.mean(), 6.0);
+    }
+}

@@ -1,7 +1,14 @@
 //! The paper's soft NoC (§IV): packet format, bufferless reduced-radix
 //! routers, column topologies, Algorithm-1 routing, a cycle-accurate
 //! network simulator, and traffic patterns for the evaluation.
+//!
+//! Two interchangeable network engines live here: [`sim::NocSim`], the
+//! batched flat-state engine used everywhere, and
+//! [`fixpoint::FixpointSim`], the original fixpoint implementation kept as
+//! the behavioral oracle (see `benches/noc_hotpath.rs` and the
+//! engine-equivalence property tests).
 
+pub mod fixpoint;
 pub mod packet;
 pub mod router;
 pub mod routing;
@@ -9,6 +16,7 @@ pub mod sim;
 pub mod topology;
 pub mod traffic;
 
+pub use fixpoint::FixpointSim;
 pub use packet::{segment_message, Flit, Header, VrSide};
 pub use routing::{hop_count, route, OutPort};
 pub use sim::{NocSim, NocStats, VrState};

@@ -24,11 +24,14 @@ pub const MAX_ROUTERS: u8 = 32;
 /// Which side of a router a VR hangs off.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum VrSide {
+    /// West port of the router (VR_ID bit 0).
     West = 0,
+    /// East port of the router (VR_ID bit 1).
     East = 1,
 }
 
 impl VrSide {
+    /// Decode the VR_ID wire bit.
     pub fn from_bit(b: u16) -> VrSide {
         if b == 0 { VrSide::West } else { VrSide::East }
     }
@@ -37,12 +40,16 @@ impl VrSide {
 /// Decoded packet header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Header {
+    /// Owning virtual instance (checked by the destination access monitor).
     pub vi_id: u16,
+    /// Destination router in the logical column.
     pub router_id: u8,
+    /// Destination VR side on that router.
     pub vr_id: VrSide,
 }
 
 impl Header {
+    /// Build a header, asserting the fields fit their wire widths.
     pub fn new(vi_id: u16, router_id: u8, vr_id: VrSide) -> Self {
         assert!(vi_id < MAX_VIS, "VI_ID is 10 bits (got {vi_id})");
         assert!(router_id < MAX_ROUTERS, "ROUTER_ID is 5 bits (got {router_id})");
@@ -75,6 +82,7 @@ impl fmt::Display for Header {
 /// of payload, abstracted as a byte vector for the compute path.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Flit {
+    /// Full destination header (single-flit NoC: every flit carries it).
     pub header: Header,
     /// Sequence number within its parent message (for reassembly checks).
     pub seq: u32,

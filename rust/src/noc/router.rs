@@ -37,11 +37,17 @@ struct Slot {
 /// Delivered-flit record.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Delivery {
+    /// Globally unique flit id within this testbench.
     pub id: u64,
+    /// Input port the flit arrived on.
     pub in_port: usize,
+    /// Output port the flit left through.
     pub out_port: usize,
+    /// Cycle the flit entered its source queue.
     pub enqueued_at: u64,
+    /// Cycle the allocator granted it into the crossbar.
     pub granted_at: u64,
+    /// Cycle the sink consumed it.
     pub delivered_at: u64,
 }
 
@@ -68,10 +74,12 @@ pub struct SingleRouter {
     rr: Vec<usize>,
     cycle: u64,
     next_id: u64,
+    /// Every flit delivered so far, in consumption order per sink.
     pub deliveries: Vec<Delivery>,
 }
 
 impl SingleRouter {
+    /// Router testbench with `ports` ports (2..=4).
     pub fn new(ports: usize) -> Self {
         assert!((2..=4).contains(&ports));
         SingleRouter {
@@ -86,6 +94,7 @@ impl SingleRouter {
         }
     }
 
+    /// Current testbench cycle.
     pub fn cycle(&self) -> u64 {
         self.cycle
     }
@@ -100,10 +109,12 @@ impl SingleRouter {
         id
     }
 
+    /// Flits waiting in `port`'s source queue.
     pub fn queue_len(&self, port: usize) -> usize {
         self.queues[port].len()
     }
 
+    /// Flits anywhere in the testbench (queues + pipeline).
     pub fn in_flight(&self) -> usize {
         self.stage1.iter().chain(self.out_reg.iter()).filter(|s| s.is_some()).count()
             + self.queues.iter().map(|q| q.len()).sum::<usize>()
@@ -172,6 +183,7 @@ impl SingleRouter {
         self.cycle += 1;
     }
 
+    /// Run `cycles` clock cycles.
     pub fn run(&mut self, cycles: u64) {
         for _ in 0..cycles {
             self.step();
@@ -206,11 +218,14 @@ impl SingleRouter {
 /// the queueing the paper measures in Fig 12; the average injection rate is
 /// exactly `rate` flits/cycle.
 pub struct BurstInjector {
+    /// Average flits/cycle injected over time.
     pub rate: f64,
+    /// Mean packet (burst) length in flits.
     pub mean_burst: f64,
 }
 
 impl BurstInjector {
+    /// Injector with the given average rate and mean burst length.
     pub fn new(rate: f64, mean_burst: f64) -> Self {
         assert!((0.0..=1.0).contains(&rate));
         assert!(mean_burst >= 1.0);

@@ -12,12 +12,17 @@ use super::packet::{Header, VrSide};
 /// West/East inject into the two attached VRs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OutPort {
+    /// Toward the next router up the logical column.
     North,
+    /// Toward the next router down the logical column.
     South,
+    /// Into the west-attached VR.
     West,
+    /// Into the east-attached VR.
     East,
 }
 
+/// All four router output ports, in allocator order.
 pub const ALL_PORTS: [OutPort; 4] = [OutPort::North, OutPort::South, OutPort::West, OutPort::East];
 
 /// Algorithm 1, verbatim.

@@ -1,4 +1,4 @@
-//! Network-level cycle-accurate NoC simulator.
+//! Network-level cycle-accurate NoC simulator — the batched engine.
 //!
 //! Composes routers (the §IV-B microarchitecture) along a [`Topology`] with
 //! virtual regions on their west/east ports, access monitors at VR ingress
@@ -12,15 +12,47 @@
 //! fixpoint each cycle, which realizes the hardware's simultaneous shift
 //! across the whole column (the slot graph is acyclic because routing is
 //! monotonic along the column).
+//!
+//! # Batched layout
+//!
+//! This engine is the hot path of every latency/bandwidth/throughput
+//! figure, so the per-router `Option` arrays of the original implementation
+//! (kept as [`super::fixpoint::FixpointSim`], the behavioral oracle) are
+//! flattened into one contiguous slot buffer per column:
+//!
+//! - `slots[r*8 + p]` is stage-1 of port `p` of router `r`, and
+//!   `slots[r*8 + 4 + p]` its output register; fold-link relay registers
+//!   are appended after the router block. One allocation, one cache walk.
+//! - The acyclic slot-graph wiring is resolved **once per topology** at
+//!   construction: `up_from_north[r]` / `up_from_south[r]` hold the flat
+//!   index of the register feeding router `r` from each direction (the
+//!   relay if the link folds, the neighbor's output register otherwise),
+//!   and `relay_links` lists only the links that actually carry a relay.
+//!   The inner loop does zero topology queries and zero branching on
+//!   relay presence — it follows precomputed indices.
+//! - The ascending/descending traversal orders the fixpoint alternates
+//!   between are precomputed index tables (`order_asc` / `order_desc`).
+//! - Routers whose whole neighborhood is empty (no slot, no queued flit,
+//!   no upstream register content) are skipped per pass; every skipped
+//!   operation is provably a no-op, so behavior is unchanged.
+//!
+//! The pass structure, operation order, and round-robin bookkeeping are
+//! operation-for-operation those of the reference engine, so both produce
+//! identical statistics *and* identical `passes` counts; property tests and
+//! `benches/noc_hotpath.rs` assert exactly that.
 
 use std::collections::VecDeque;
 
-use super::packet::{Flit, Header, VrSide};
+use super::packet::{Flit, Header};
 use super::routing::{route, OutPort};
 use super::topology::Topology;
 use crate::util::Summary;
 
 const NPORTS: usize = 4;
+/// Slots per router in the flat buffer: 4 stage-1 + 4 output registers.
+const RSLOTS: usize = 2 * NPORTS;
+/// Sentinel for "no upstream register" (column ends).
+const NO_SLOT: usize = usize::MAX;
 
 fn port_idx(p: OutPort) -> usize {
     match p {
@@ -31,6 +63,7 @@ fn port_idx(p: OutPort) -> usize {
     }
 }
 
+/// A flit occupying a pipeline register, with movement bookkeeping.
 #[derive(Debug, Clone)]
 struct Slot {
     flit: Flit,
@@ -38,12 +71,18 @@ struct Slot {
     granted_at: u64,
 }
 
-#[derive(Debug, Clone)]
-struct RouterState {
-    id: u8,
-    stage1: [Option<Slot>; NPORTS],
-    out_reg: [Option<Slot>; NPORTS],
-    rr: [usize; NPORTS],
+/// One fold link's precomputed wiring: flat indices of the output
+/// registers feeding it and of its two relay registers.
+#[derive(Debug, Clone, Copy)]
+struct RelayLink {
+    /// Router `l`'s north output register (feeds the northbound relay).
+    out_n: usize,
+    /// Router `l+1`'s south output register (feeds the southbound relay).
+    out_s: usize,
+    /// Northbound relay register (flat slot index).
+    relay_n: usize,
+    /// Southbound relay register (flat slot index).
+    relay_s: usize,
 }
 
 /// A virtual region endpoint: output queue toward its router, delivered
@@ -68,21 +107,39 @@ pub struct VrState {
 /// Aggregated simulator metrics.
 #[derive(Debug, Clone, Default)]
 pub struct NocStats {
+    /// Flits accepted by their destination VR's access monitor.
     pub delivered: u64,
+    /// Flits dropped by an access monitor (foreign VI_ID).
     pub rejected: u64,
+    /// Flits delivered over direct VR-to-VR links.
     pub direct_delivered: u64,
+    /// End-to-end latency distribution (cycles, routed flits only).
     pub latency: Summary,
+    /// Source-queue waiting-time distribution (cycles).
     pub waiting: Summary,
 }
 
 /// The network simulator.
 pub struct NocSim {
+    /// Topology being simulated.
     pub topo: Topology,
-    routers: Vec<RouterState>,
+    /// Flat slot buffer: router `r` owns `slots[r*8 .. r*8+8]` (stage-1
+    /// then output registers), fold relays follow after `n_routers * 8`.
+    slots: Vec<Option<Slot>>,
+    /// Round-robin allocator state, `rr[r*4 + p]`.
+    rr: Vec<usize>,
+    /// Flat index of the register feeding router `r` from the north.
+    up_from_north: Vec<usize>,
+    /// Flat index of the register feeding router `r` from the south.
+    up_from_south: Vec<usize>,
+    /// Fold links only (precomputed; non-fold links never enter the loop).
+    relay_links: Vec<RelayLink>,
+    /// Precomputed ascending router traversal order.
+    order_asc: Vec<usize>,
+    /// Precomputed descending router traversal order.
+    order_desc: Vec<usize>,
+    /// Per-VR endpoint state.
     pub vrs: Vec<VrState>,
-    /// Relay registers on the north link of router i (fold links).
-    relays_n: Vec<Vec<Option<Slot>>>,
-    relays_s: Vec<Vec<Option<Slot>>>,
     /// Direct VR->VR links: `direct[src] = Some(dst)`.
     direct: Vec<Option<usize>>,
     /// Sources that have a direct link (iteration shortcut).
@@ -95,31 +152,73 @@ pub struct NocSim {
     pub passes: u64,
     cycle: u64,
     next_flit_id: u64,
+    /// Aggregated delivery/rejection/latency statistics.
     pub stats: NocStats,
 }
 
 impl NocSim {
+    /// Build a simulator for `topo`, resolving the slot-graph wiring once.
     pub fn new(topo: Topology) -> Self {
         let n = topo.n_routers();
-        let routers = (0..n)
-            .map(|i| RouterState {
-                id: i as u8,
-                stage1: Default::default(),
-                out_reg: Default::default(),
-                rr: [0; NPORTS],
+        let mut slots: Vec<Option<Slot>> = Vec::new();
+        slots.resize_with(n * RSLOTS, || None);
+
+        // Append relay registers for fold links and record their indices.
+        let mut relay_links = Vec::new();
+        let mut relay_s_of_link = vec![NO_SLOT; n.saturating_sub(1)];
+        let mut relay_n_of_link = vec![NO_SLOT; n.saturating_sub(1)];
+        for l in 0..n.saturating_sub(1) {
+            if topo.link_relay[l] > 0 {
+                let relay_n = slots.len();
+                slots.push(None);
+                let relay_s = slots.len();
+                slots.push(None);
+                relay_n_of_link[l] = relay_n;
+                relay_s_of_link[l] = relay_s;
+                relay_links.push(RelayLink {
+                    out_n: out_idx(l, port_idx(OutPort::North)),
+                    out_s: out_idx(l + 1, port_idx(OutPort::South)),
+                    relay_n,
+                    relay_s,
+                });
+            }
+        }
+
+        // Upstream feed of each router, per direction.
+        let up_from_north = (0..n)
+            .map(|r| {
+                if r + 1 >= n {
+                    NO_SLOT
+                } else if relay_s_of_link[r] != NO_SLOT {
+                    relay_s_of_link[r]
+                } else {
+                    out_idx(r + 1, port_idx(OutPort::South))
+                }
             })
             .collect();
-        let relays_n: Vec<Vec<Option<Slot>>> = (0..n.saturating_sub(1))
-            .map(|i| vec![None; topo.link_relay[i] as usize])
+        let up_from_south = (0..n)
+            .map(|r| {
+                if r == 0 {
+                    NO_SLOT
+                } else if relay_n_of_link[r - 1] != NO_SLOT {
+                    relay_n_of_link[r - 1]
+                } else {
+                    out_idx(r - 1, port_idx(OutPort::North))
+                }
+            })
             .collect();
-        let relays_s = relays_n.clone();
+
         let n_vrs = topo.n_vrs();
         NocSim {
             topo,
-            routers,
+            slots,
+            rr: vec![0; n * NPORTS],
+            up_from_north,
+            up_from_south,
+            relay_links,
+            order_asc: (0..n).collect(),
+            order_desc: (0..n).rev().collect(),
             vrs: vec![VrState::default(); n_vrs],
-            relays_n,
-            relays_s,
             direct: vec![None; n_vrs],
             direct_srcs: Vec::new(),
             direct_fired: vec![false; n_vrs],
@@ -131,6 +230,7 @@ impl NocSim {
         }
     }
 
+    /// Current simulation cycle.
     pub fn cycle(&self) -> u64 {
         self.cycle
     }
@@ -140,6 +240,7 @@ impl NocSim {
         self.vrs[vr].owner_vi = Some(vi);
     }
 
+    /// Release a VR (its access monitor rejects everything again).
     pub fn release_vr(&mut self, vr: usize) {
         self.vrs[vr].owner_vi = None;
     }
@@ -198,12 +299,7 @@ impl NocSim {
     }
 
     /// Deliver a flit into a VR through its access monitor.
-    fn deliver(
-        vr: &mut VrState,
-        stats: &mut NocStats,
-        slot: Slot,
-        now: u64,
-    ) {
+    fn deliver(vr: &mut VrState, stats: &mut NocStats, slot: Slot, now: u64) {
         if vr.owner_vi == Some(slot.flit.header.vi_id) {
             stats.delivered += 1;
             stats.latency.add((now - slot.flit.enqueued_at) as f64);
@@ -215,7 +311,32 @@ impl NocSim {
         }
     }
 
+    /// Is router `r`'s whole neighborhood empty this pass? If so, its
+    /// deliver/advance/allocate steps are all provably no-ops and the
+    /// router can be skipped without changing behavior.
+    #[inline]
+    fn router_idle(&self, r: usize) -> bool {
+        let base = r * RSLOTS;
+        self.slots[base..base + RSLOTS].iter().all(|s| s.is_none())
+            && self.vrs[2 * r].out_queue.is_empty()
+            && self.vrs[2 * r + 1].out_queue.is_empty()
+            && self.up_slot_empty(self.up_from_north[r])
+            && self.up_slot_empty(self.up_from_south[r])
+    }
+
+    #[inline]
+    fn up_slot_empty(&self, idx: usize) -> bool {
+        idx == NO_SLOT || self.slots[idx].is_none()
+    }
+
     /// One clock cycle.
+    ///
+    /// Iterates movement phases to a fixpoint: each flit moves at most one
+    /// stage per cycle (`moved_at` stamp), but slots freed within the cycle
+    /// can refill, realizing the hardware's simultaneous shift. Passes
+    /// alternate the precomputed traversal direction so both north- and
+    /// southbound chains complete in few passes under load. All ordering is
+    /// identical to [`super::fixpoint::FixpointSim::step`].
     pub fn step(&mut self) {
         let now = self.cycle;
         if self.active == 0 {
@@ -228,11 +349,7 @@ impl NocSim {
         for s in self.direct_srcs.iter() {
             self.direct_fired[*s] = false;
         }
-        // Iterate movement phases to fixpoint: each flit moves at most one
-        // stage per cycle (moved_at stamp), but slots freed within the
-        // cycle can refill, realizing the hardware's simultaneous shift.
-        // Passes alternate router iteration direction so that both north-
-        // and southbound chains complete in few passes under load.
+        let n_r = self.order_asc.len();
         let mut pass = 0u32;
         loop {
             self.passes += 1;
@@ -240,102 +357,84 @@ impl NocSim {
             pass += 1;
             let mut moved = false;
 
-            // (1-4) per-router fused update, iterated in alternating
-            // column order so directional chains complete in few passes:
-            // relay fill first, then for each router deliver -> advance ->
-            // allocate (all stamp-guarded, so order affects only how many
-            // passes the fixpoint needs, not the final state).
-            for l in 0..self.relays_n.len() {
-                if !self.relays_n[l].is_empty() {
-                    if self.relays_n[l][0].is_none() {
-                        let reg = &mut self.routers[l].out_reg[port_idx(OutPort::North)];
-                        if reg.as_ref().map(|s| s.moved_at < now).unwrap_or(false) {
-                            let mut slot = reg.take().unwrap();
-                            slot.moved_at = now;
-                            self.relays_n[l][0] = Some(slot);
-                            moved = true;
-                        }
-                    }
-                    if self.relays_s[l][0].is_none() {
-                        let reg = &mut self.routers[l + 1].out_reg[port_idx(OutPort::South)];
-                        if reg.as_ref().map(|s| s.moved_at < now).unwrap_or(false) {
-                            let mut slot = reg.take().unwrap();
-                            slot.moved_at = now;
-                            self.relays_s[l][0] = Some(slot);
-                            moved = true;
-                        }
-                    }
+            // (1) fold-relay fill: only actual fold links, ascending order.
+            for li in 0..self.relay_links.len() {
+                let lk = self.relay_links[li];
+                if self.slots[lk.relay_n].is_none() && self.slot_movable(lk.out_n, now) {
+                    let mut slot = self.slots[lk.out_n].take().unwrap();
+                    slot.moved_at = now;
+                    self.slots[lk.relay_n] = Some(slot);
+                    moved = true;
+                }
+                if self.slots[lk.relay_s].is_none() && self.slot_movable(lk.out_s, now) {
+                    let mut slot = self.slots[lk.out_s].take().unwrap();
+                    slot.moved_at = now;
+                    self.slots[lk.relay_s] = Some(slot);
+                    moved = true;
                 }
             }
-            let n_r = self.routers.len();
+
+            // (2-4) per-router fused update in the precomputed pass order:
+            // deliver -> advance -> allocate, all stamp-guarded.
             for i in 0..n_r {
-                let r = if descending { n_r - 1 - i } else { i };
-                // deliver W/E out_regs into the attached VRs
-                for (port, side) in [(port_idx(OutPort::West), VrSide::West),
-                                     (port_idx(OutPort::East), VrSide::East)] {
-                    let movable = self.routers[r].out_reg[port]
-                        .as_ref()
-                        .map(|s| s.moved_at < now)
-                        .unwrap_or(false);
-                    if movable {
-                        let slot = self.routers[r].out_reg[port].take().unwrap();
-                        let vr = match side {
-                            VrSide::West => self.topo.west_vr(r as u8),
-                            VrSide::East => self.topo.east_vr(r as u8),
-                        };
+                let r = if descending { self.order_desc[i] } else { self.order_asc[i] };
+                if self.router_idle(r) {
+                    continue;
+                }
+                // Deliver W/E output registers into the attached VRs.
+                for port in [port_idx(OutPort::West), port_idx(OutPort::East)] {
+                    let idx = out_idx(r, port);
+                    if self.slot_movable(idx, now) {
+                        let slot = self.slots[idx].take().unwrap();
+                        let vr = if port == port_idx(OutPort::West) { 2 * r } else { 2 * r + 1 };
                         Self::deliver(&mut self.vrs[vr], &mut self.stats, slot, now);
                         self.active -= 1;
                         moved = true;
                     }
                 }
-                // advance stage1 -> out_reg
-                {
-                    let rt = &mut self.routers[r];
-                    for p in 0..NPORTS {
-                        if rt.out_reg[p].is_none() {
-                            let movable =
-                                rt.stage1[p].as_ref().map(|s| s.moved_at < now).unwrap_or(false);
-                            if movable {
-                                let mut slot = rt.stage1[p].take().unwrap();
-                                slot.moved_at = now;
-                                rt.out_reg[p] = Some(slot);
-                                moved = true;
-                            }
+                // Advance stage-1 -> output register.
+                for p in 0..NPORTS {
+                    let oi = out_idx(r, p);
+                    if self.slots[oi].is_none() {
+                        let si = stage_idx(r, p);
+                        if self.slot_movable(si, now) {
+                            let mut slot = self.slots[si].take().unwrap();
+                            slot.moved_at = now;
+                            self.slots[oi] = Some(slot);
+                            moved = true;
                         }
                     }
                 }
-                // allocate free stage1 slots
+                // Allocate free stage-1 slots.
                 moved |= self.allocate(r, now);
             }
 
             // (5) direct VR->VR links: 1 flit/cycle, 1-cycle latency.
             for k in 0..self.direct_srcs.len() {
                 let src = self.direct_srcs[k];
-                {
-                    let dst = self.direct[src].unwrap();
-                    if self.direct_fired[src] {
-                        continue;
+                let dst = self.direct[src].unwrap();
+                if self.direct_fired[src] {
+                    continue;
+                }
+                let ready = self.vrs[src]
+                    .direct_out
+                    .front()
+                    .map(|f| f.enqueued_at < now)
+                    .unwrap_or(false);
+                if ready {
+                    self.direct_fired[src] = true;
+                    let flit = self.vrs[src].direct_out.pop_front().unwrap();
+                    let slot = Slot { granted_at: now, moved_at: now, flit };
+                    self.stats.direct_delivered += 1;
+                    self.active -= 1;
+                    let vr = &mut self.vrs[dst];
+                    if vr.owner_vi == Some(slot.flit.header.vi_id) {
+                        vr.delivered.push_back(slot.flit);
+                    } else {
+                        vr.rejected += 1;
+                        self.stats.rejected += 1;
                     }
-                    let ready = self.vrs[src]
-                        .direct_out
-                        .front()
-                        .map(|f| f.enqueued_at < now)
-                        .unwrap_or(false);
-                    if ready {
-                        self.direct_fired[src] = true;
-                        let flit = self.vrs[src].direct_out.pop_front().unwrap();
-                        let slot = Slot { granted_at: now, moved_at: now, flit };
-                        self.stats.direct_delivered += 1;
-                        self.active -= 1;
-                        let vr = &mut self.vrs[dst];
-                        if vr.owner_vi == Some(slot.flit.header.vi_id) {
-                            vr.delivered.push_back(slot.flit);
-                        } else {
-                            vr.rejected += 1;
-                            self.stats.rejected += 1;
-                        }
-                        moved = true;
-                    }
+                    moved = true;
                 }
             }
 
@@ -346,12 +445,18 @@ impl NocSim {
         self.cycle += 1;
     }
 
+    /// Does `slots[idx]` hold a flit eligible to move this cycle?
+    #[inline]
+    fn slot_movable(&self, idx: usize, now: u64) -> bool {
+        self.slots[idx].as_ref().map(|s| s.moved_at < now).unwrap_or(false)
+    }
+
     /// Allocation for router `r`: for each free output channel, grant one
-    /// requesting input (round-robin). Inputs: north neighbor's south
-    /// out_reg (or relay), south neighbor's north out_reg (or relay), and
-    /// the two VR out queues. Each input's head is peeked once per call.
+    /// requesting input (round-robin). Inputs: the precomputed upstream
+    /// registers from north/south and the two VR out queues. Each input's
+    /// head is peeked once per call.
     fn allocate(&mut self, r: usize, now: u64) -> bool {
-        let rid = self.routers[r].id;
+        let rid = r as u8;
         // requested[inp] = output port the head flit on input `inp` wants.
         let mut requested = [usize::MAX; NPORTS];
         let mut any = false;
@@ -366,12 +471,12 @@ impl NocSim {
         }
         let mut moved = false;
         for p in 0..NPORTS {
-            if self.routers[r].stage1[p].is_some() {
+            if self.slots[stage_idx(r, p)].is_some() {
                 continue;
             }
             // Candidate input ports, in round-robin order starting after
             // the last-granted one.
-            let start = self.routers[r].rr[p];
+            let start = self.rr[r * NPORTS + p];
             let mut grant: Option<usize> = None;
             for k in 0..NPORTS {
                 let inp = (start + k) % NPORTS;
@@ -386,9 +491,8 @@ impl NocSim {
             if let Some(inp) = grant {
                 requested[inp] = usize::MAX; // consumed
                 let (flit, granted_at) = self.pop_head(r, inp, now);
-                self.routers[r].stage1[p] =
-                    Some(Slot { flit, moved_at: now, granted_at });
-                self.routers[r].rr[p] = (inp + 1) % NPORTS;
+                self.slots[stage_idx(r, p)] = Some(Slot { flit, moved_at: now, granted_at });
+                self.rr[r * NPORTS + p] = (inp + 1) % NPORTS;
                 moved = true;
             }
         }
@@ -399,19 +503,15 @@ impl NocSim {
     fn peek_head(&self, r: usize, inp: usize, now: u64) -> Option<Header> {
         match inp {
             // Input "from north": flits moving south out of router r+1.
-            0 => self.upstream_slot(r, true).and_then(|s| {
-                if s.moved_at < now { Some(s.flit.header) } else { None }
-            }),
+            0 => self.peek_up(self.up_from_north[r], now),
             // Input "from south": flits moving north out of router r-1.
-            1 => self.upstream_slot(r, false).and_then(|s| {
-                if s.moved_at < now { Some(s.flit.header) } else { None }
-            }),
-            2 => self.vrs[self.topo.west_vr(r as u8)]
+            1 => self.peek_up(self.up_from_south[r], now),
+            2 => self.vrs[2 * r]
                 .out_queue
                 .front()
                 .filter(|f| f.enqueued_at <= now)
                 .map(|f| f.header),
-            3 => self.vrs[self.topo.east_vr(r as u8)]
+            3 => self.vrs[2 * r + 1]
                 .out_queue
                 .front()
                 .filter(|f| f.enqueued_at <= now)
@@ -420,63 +520,37 @@ impl NocSim {
         }
     }
 
-    /// The upstream register feeding router `r` from the north (southbound
-    /// flits) or from the south (northbound flits): the fold relay if the
-    /// link has one, otherwise the neighbor's out_reg.
-    fn upstream_slot(&self, r: usize, from_north: bool) -> Option<&Slot> {
-        if from_north {
-            if r + 1 >= self.routers.len() {
-                return None;
-            }
-            if !self.relays_s[r].is_empty() {
-                self.relays_s[r][0].as_ref()
-            } else {
-                self.routers[r + 1].out_reg[port_idx(OutPort::South)].as_ref()
-            }
-        } else {
-            if r == 0 {
-                return None;
-            }
-            let l = r - 1;
-            if !self.relays_n[l].is_empty() {
-                self.relays_n[l][0].as_ref()
-            } else {
-                self.routers[l].out_reg[port_idx(OutPort::North)].as_ref()
-            }
+    #[inline]
+    fn peek_up(&self, idx: usize, now: u64) -> Option<Header> {
+        if idx == NO_SLOT {
+            return None;
         }
+        self.slots[idx].as_ref().and_then(|s| {
+            if s.moved_at < now {
+                Some(s.flit.header)
+            } else {
+                None
+            }
+        })
     }
 
     fn pop_head(&mut self, r: usize, inp: usize, now: u64) -> (Flit, u64) {
         match inp {
             0 => {
-                let slot = if !self.relays_s[r].is_empty() {
-                    self.relays_s[r][0].take().unwrap()
-                } else {
-                    self.routers[r + 1].out_reg[port_idx(OutPort::South)].take().unwrap()
-                };
+                let slot = self.slots[self.up_from_north[r]].take().unwrap();
                 (slot.flit, slot.granted_at)
             }
             1 => {
-                let l = r - 1;
-                let slot = if !self.relays_n[l].is_empty() {
-                    self.relays_n[l][0].take().unwrap()
-                } else {
-                    self.routers[l].out_reg[port_idx(OutPort::North)].take().unwrap()
-                };
+                let slot = self.slots[self.up_from_south[r]].take().unwrap();
                 (slot.flit, slot.granted_at)
             }
-            2 => {
-                let vr = self.topo.west_vr(r as u8);
-                (self.vrs[vr].out_queue.pop_front().unwrap(), now)
-            }
-            3 => {
-                let vr = self.topo.east_vr(r as u8);
-                (self.vrs[vr].out_queue.pop_front().unwrap(), now)
-            }
+            2 => (self.vrs[2 * r].out_queue.pop_front().unwrap(), now),
+            3 => (self.vrs[2 * r + 1].out_queue.pop_front().unwrap(), now),
             _ => unreachable!(),
         }
     }
 
+    /// Run `cycles` clock cycles.
     pub fn run(&mut self, cycles: u64) {
         for _ in 0..cycles {
             self.step();
@@ -494,9 +568,22 @@ impl NocSim {
     }
 }
 
+/// Flat index of stage-1 slot `p` of router `r`.
+#[inline]
+fn stage_idx(r: usize, p: usize) -> usize {
+    r * RSLOTS + p
+}
+
+/// Flat index of output register `p` of router `r`.
+#[inline]
+fn out_idx(r: usize, p: usize) -> usize {
+    r * RSLOTS + NPORTS + p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::fixpoint::FixpointSim;
     use crate::noc::packet::VrSide;
 
     fn sim3() -> NocSim {
@@ -637,5 +724,34 @@ mod tests {
         // Output E of router 0 delivers 1/cycle when saturated: 45 flits
         // need >= 45 cycles; check it's not wildly worse (fair progress).
         assert!(s.stats.latency.max() < 120.0);
+    }
+
+    #[test]
+    fn matches_reference_engine_on_case_study_shape() {
+        // Drive both engines with the same 3-router workload and compare
+        // everything observable, including the pass counter.
+        let mut new = sim3();
+        let mut reference = FixpointSim::new(Topology::single_column(3));
+        for vr in 0..6 {
+            reference.assign_vr(vr, vr as u16);
+        }
+        let targets = [5usize, 0, 3, 1, 4, 2, 5, 5, 0, 2];
+        for (i, &dst) in targets.iter().enumerate() {
+            let src = (dst + 1 + i) % 6;
+            let h = new.header_for(dst as u16, dst);
+            new.send(src, h, vec![i as u8], i as u32);
+            reference.send(src, h, vec![i as u8], i as u32);
+            new.step();
+            reference.step();
+            assert_eq!(new.in_flight(), reference.in_flight(), "cycle {i}");
+        }
+        assert!(new.drain(1024));
+        assert!(reference.drain(1024));
+        assert_eq!(new.stats.delivered, reference.stats.delivered);
+        assert_eq!(new.stats.rejected, reference.stats.rejected);
+        assert_eq!(new.stats.latency.mean(), reference.stats.latency.mean());
+        assert_eq!(new.stats.waiting.mean(), reference.stats.waiting.mean());
+        assert_eq!(new.passes, reference.passes);
+        assert_eq!(new.cycle(), reference.cycle());
     }
 }

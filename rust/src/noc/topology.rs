@@ -18,6 +18,7 @@ use super::packet::MAX_ROUTERS;
 /// One router position in the topology.
 #[derive(Debug, Clone)]
 pub struct RouterNode {
+    /// Logical router id along the column (routing order).
     pub id: u8,
     /// Physical column index (for the placer and fold-link computation).
     pub column: usize,
@@ -28,15 +29,20 @@ pub struct RouterNode {
 /// Physical flavor of the deployment (§IV-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Flavor {
+    /// All routers on one physical CLB column.
     SingleColumn,
+    /// Two physical columns folded into one logical line.
     DoubleColumn,
+    /// `n` physical columns folded into one logical line.
     MultiColumn(usize),
 }
 
 /// A deployed topology: a logical line of routers with physical placement.
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// Physical deployment flavor.
     pub flavor: Flavor,
+    /// Routers in logical-column order.
     pub routers: Vec<RouterNode>,
     /// Extra pipeline stages on the link between router `i` and `i+1`
     /// (1 for edge long-wire folds, 0 otherwise).
@@ -63,18 +69,22 @@ impl Topology {
         Topology { flavor, routers, link_relay }
     }
 
+    /// Single-column deployment of `n_routers`.
     pub fn single_column(n_routers: usize) -> Self {
         Self::build(Flavor::SingleColumn, n_routers, 1)
     }
 
+    /// Double-column deployment (one fold at the die edge).
     pub fn double_column(n_routers: usize) -> Self {
         Self::build(Flavor::DoubleColumn, n_routers, 2)
     }
 
+    /// Multi-column deployment with `columns` physical columns.
     pub fn multi_column(n_routers: usize, columns: usize) -> Self {
         Self::build(Flavor::MultiColumn(columns), n_routers, columns)
     }
 
+    /// Number of routers on the logical line.
     pub fn n_routers(&self) -> usize {
         self.routers.len()
     }
@@ -97,10 +107,12 @@ impl Topology {
         }
     }
 
+    /// Whether router `id` has a northern neighbor.
     pub fn has_north(&self, id: u8) -> bool {
         (id as usize) + 1 < self.routers.len()
     }
 
+    /// Whether router `id` has a southern neighbor.
     pub fn has_south(&self, id: u8) -> bool {
         id > 0
     }
@@ -110,16 +122,19 @@ impl Topology {
         self.link_relay.get(id as usize).copied().unwrap_or(0)
     }
 
-    /// VR index helpers.
+    /// Index of router `id`'s west VR.
     pub fn west_vr(&self, id: u8) -> usize {
         id as usize * 2
     }
+    /// Index of router `id`'s east VR.
     pub fn east_vr(&self, id: u8) -> usize {
         id as usize * 2 + 1
     }
+    /// Router a VR hangs off.
     pub fn router_of_vr(&self, vr: usize) -> u8 {
         (vr / 2) as u8
     }
+    /// Side of its router a VR hangs off.
     pub fn side_of_vr(&self, vr: usize) -> super::packet::VrSide {
         if vr % 2 == 0 { super::packet::VrSide::West } else { super::packet::VrSide::East }
     }

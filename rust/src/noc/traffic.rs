@@ -9,6 +9,7 @@
 //! rates; we record average latency and waiting time per rate.
 
 use super::router::{BurstInjector, SingleRouter};
+use crate::runtime::SweepRunner;
 use crate::util::{Rng, Summary};
 
 /// Mean burst length used across experiments (calibrated so that the
@@ -18,9 +19,13 @@ pub const MEAN_BURST: f64 = 1.28;
 /// Result of one traffic-sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Average flits/cycle injected per port.
     pub injection_rate: f64,
+    /// Mean end-to-end latency in cycles.
     pub avg_latency: f64,
+    /// Mean source-queue waiting time in cycles.
     pub avg_waiting: f64,
+    /// Flits delivered during the sweep (including the drain tail).
     pub delivered: u64,
 }
 
@@ -74,10 +79,28 @@ pub fn sweep_collision(rate: f64, cycles: u64, seed: u64) -> SweepPoint {
 }
 
 /// Full injection-rate sweep for both configurations.
+///
+/// Each (rate, configuration) point is an independent simulation with its
+/// own deterministically-seeded RNG, so the points fan out across threads
+/// via [`SweepRunner`] — results are identical to a sequential run, in
+/// rate order, only wall-clock changes.
 pub fn fig12_sweep(rates: &[f64], cycles: u64, seed: u64) -> (Vec<SweepPoint>, Vec<SweepPoint>) {
-    let no_coll = rates.iter().map(|&r| sweep_no_collision(r, cycles, seed)).collect();
-    let coll = rates.iter().map(|&r| sweep_collision(r, cycles, seed ^ 0xC011)).collect();
-    (no_coll, coll)
+    let runner = SweepRunner::auto();
+    // One work item per (rate, config) so both curves share the pool.
+    let points: Vec<(f64, bool)> = rates
+        .iter()
+        .map(|&r| (r, false))
+        .chain(rates.iter().map(|&r| (r, true)))
+        .collect();
+    let mut results = runner.run(points, |(rate, collision)| {
+        if collision {
+            sweep_collision(rate, cycles, seed ^ 0xC011)
+        } else {
+            sweep_no_collision(rate, cycles, seed)
+        }
+    });
+    let coll = results.split_off(rates.len());
+    (results, coll)
 }
 
 #[cfg(test)]
@@ -135,6 +158,23 @@ mod tests {
                 c.avg_latency,
                 nc.avg_latency
             );
+        }
+    }
+
+    #[test]
+    fn fig12_sweep_parallel_matches_sequential_points() {
+        // The threaded sweep must be bit-identical to running each point
+        // by hand: per-point RNGs make parallelism observable only in
+        // wall-clock.
+        let rates = [0.2, 0.5];
+        let (nc, coll) = fig12_sweep(&rates, 5_000, 9);
+        for (i, &r) in rates.iter().enumerate() {
+            let seq_nc = sweep_no_collision(r, 5_000, 9);
+            let seq_c = sweep_collision(r, 5_000, 9 ^ 0xC011);
+            assert_eq!(nc[i].delivered, seq_nc.delivered);
+            assert_eq!(nc[i].avg_latency, seq_nc.avg_latency);
+            assert_eq!(coll[i].delivered, seq_c.delivered);
+            assert_eq!(coll[i].avg_waiting, seq_c.avg_waiting);
         }
     }
 

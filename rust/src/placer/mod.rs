@@ -18,6 +18,7 @@ pub const NOC_COL_W: usize = 2;
 /// A placed deployment: NoC pblocks + VR pblocks, indexed like the topology.
 #[derive(Debug, Clone)]
 pub struct Floorplan {
+    /// All placement rectangles (NoC strips + VRs), non-overlapping.
     pub pblocks: PblockSet,
     /// pblock index of each router.
     pub router_pb: Vec<usize>,

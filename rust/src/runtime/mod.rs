@@ -1,13 +1,21 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the request path.
+//! Accelerator execution runtime + the threaded sweep harness.
 //!
-//! This is the USER REGION compute of §IV-C realized in software: each VR's
-//! programmed design is a PJRT executable produced by `python/compile/aot.py`
-//! (HLO *text* — see that file for the proto-id compatibility note). Python
-//! never runs here; the Rust binary is self-contained once `artifacts/`
-//! exists.
+//! This is the USER REGION compute of §IV-C realized in software. The
+//! original prototype AOT-compiled each accelerator to an HLO-text artifact
+//! (`python/compile/aot.py`) and executed it through PJRT. The offline
+//! build has no XLA/PJRT toolchain, so the runtime ships a **native
+//! interpreter backend** instead (see DESIGN.md, "substitutions"): each of
+//! the six Table I models is evaluated by the independent Rust oracle in
+//! [`crate::accel::native`], which implements the same math as the
+//! `python/compile/kernels/*.py` definitions. The public API is unchanged,
+//! and the stack runs end to end from a clean checkout with no artifacts.
 
-use anyhow::{anyhow, bail, Context, Result};
+pub mod sweep;
+
+pub use sweep::SweepRunner;
+
+use crate::accel::native;
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -15,91 +23,95 @@ use std::path::{Path, PathBuf};
 /// models standardize on f32 I/O — byte data is carried as 0..255 floats).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, row-major.
     pub shape: Vec<i64>,
+    /// Flattened element data (`shape.iter().product()` values).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Build a tensor, asserting that `data` matches `shape`.
     pub fn new(shape: Vec<i64>, data: Vec<f32>) -> Self {
         let n: i64 = shape.iter().product();
         assert_eq!(n as usize, data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// Build a rank-1 tensor from a flat vector.
     pub fn vec1(data: Vec<f32>) -> Self {
         Tensor { shape: vec![data.len() as i64], data }
     }
 
+    /// Build a tensor from raw bytes (each byte becomes one f32).
     pub fn from_bytes(shape: Vec<i64>, bytes: &[u8]) -> Self {
         Tensor::new(shape, bytes.iter().map(|&b| b as f32).collect())
     }
 
+    /// Lower back to bytes, clamping each element into 0..=255.
     pub fn to_bytes(&self) -> Vec<u8> {
         self.data.iter().map(|&v| v.clamp(0.0, 255.0) as u8).collect()
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(&self.data).reshape(&self.shape)?)
-    }
 }
 
-/// One compiled accelerator.
-struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    pub n_inputs: usize,
+/// One registered accelerator model.
+struct Model {
+    n_inputs: usize,
 }
 
-/// The PJRT CPU runtime holding all compiled accelerators.
+/// The accelerator runtime holding all executable models.
+///
+/// With the native backend every Table I model (`aes`, `canny`, `fft`,
+/// `fir`, `fpu`, `huffman`) is always available; `load_dir` exists to keep
+/// the artifact-oriented API (and the `artifacts_dir` bookkeeping) stable
+/// for a future PJRT backend.
 pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    models: HashMap<String, LoadedModel>,
+    models: HashMap<String, Model>,
+    /// Directory the runtime was pointed at (kept for provenance; the
+    /// native backend does not read artifacts from it).
     pub artifacts_dir: PathBuf,
 }
 
+/// The models the native backend interprets, with their input arities.
+const NATIVE_MODELS: [(&str, usize); 6] = [
+    ("aes", 2),
+    ("canny", 1),
+    ("fft", 2),
+    ("fir", 2),
+    ("fpu", 3),
+    ("huffman", 2),
+];
+
 impl Runtime {
-    /// Create a CPU PJRT client and load every `*.hlo.txt` in `dir`.
+    /// Create a runtime rooted at `dir` with every native model registered.
+    ///
+    /// `dir` does not need to exist: the native backend evaluates models
+    /// in-process rather than loading compiled artifacts.
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let client = xla::PjRtClient::cpu()?;
-        let mut models = HashMap::new();
-        let entries = std::fs::read_dir(dir)
-            .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts`)"))?;
-        for entry in entries {
-            let path = entry?.path();
-            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or_default();
-            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
-            let text = std::fs::read_to_string(&path)?;
-            let n_inputs = entry_parameter_count(&text);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            models.insert(stem.to_string(), LoadedModel { exe, n_inputs });
-        }
-        if models.is_empty() {
-            bail!("no *.hlo.txt artifacts found in {dir:?}");
-        }
-        Ok(Runtime { client, models, artifacts_dir: dir.to_path_buf() })
+        let models = NATIVE_MODELS
+            .iter()
+            .map(|&(name, n_inputs)| (name.to_string(), Model { n_inputs }))
+            .collect();
+        Ok(Runtime { models, artifacts_dir: dir.as_ref().to_path_buf() })
     }
 
+    /// Names of all registered models, sorted.
     pub fn model_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.models.keys().cloned().collect();
         v.sort();
         v
     }
 
+    /// Whether `name` is a registered model.
     pub fn has_model(&self, name: &str) -> bool {
         self.models.contains_key(name)
     }
 
+    /// Input arity of model `name`, if registered.
     pub fn n_inputs(&self, name: &str) -> Option<usize> {
         self.models.get(name).map(|m| m.n_inputs)
     }
 
-    /// Execute a model. All models are lowered with `return_tuple=True`, so
-    /// the single result literal decomposes into the output list.
+    /// Execute a model on `inputs`, returning its output tensors.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let model = self
             .models
@@ -108,40 +120,112 @@ impl Runtime {
         if inputs.len() != model.n_inputs {
             bail!("model '{name}' expects {} inputs, got {}", model.n_inputs, inputs.len());
         }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        outs.into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape()?;
-                let dims: Vec<i64> = shape.dims().to_vec();
-                let data = lit.to_vec::<f32>()?;
-                Ok(Tensor { shape: dims, data })
-            })
-            .collect()
+        eval_native(name, inputs)
     }
 }
 
-/// Number of `parameter(..)` instructions in the ENTRY computation of an
-/// HLO text module (fusion sub-computations also carry parameters, so the
-/// count is restricted to the ENTRY section, which jax emits last).
-fn entry_parameter_count(hlo_text: &str) -> usize {
-    let entry_start = hlo_text.find("\nENTRY ").map(|i| i + 1).unwrap_or(0);
-    hlo_text[entry_start..].matches("parameter(").count()
+/// Evaluate one model via the Rust-native oracles. The per-model wire
+/// formats mirror `python/compile/kernels/*.py` and the payload codecs in
+/// [`crate::accel::inputs_from_payload`].
+fn eval_native(name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    match name {
+        // FIR: y = conv(x, h), causal, same length as x.
+        "fir" => Ok(vec![Tensor::vec1(native::fir(&inputs[0].data, &inputs[1].data))]),
+        // FFT: row-wise DFT of (re, im); outputs (re, im) with input shape.
+        "fft" => {
+            let (rows, cols) = rank2_dims(&inputs[0])?;
+            if inputs[1].data.len() != rows * cols {
+                bail!("fft: im input must match re input shape");
+            }
+            let mut out_re = Vec::with_capacity(rows * cols);
+            let mut out_im = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                let (re, im) = native::dft_row(
+                    &inputs[0].data[r * cols..(r + 1) * cols],
+                    &inputs[1].data[r * cols..(r + 1) * cols],
+                );
+                out_re.extend_from_slice(&re);
+                out_im.extend_from_slice(&im);
+            }
+            Ok(vec![
+                Tensor::new(inputs[0].shape.clone(), out_re),
+                Tensor::new(inputs[0].shape.clone(), out_im),
+            ])
+        }
+        // FPU: the element-wise micro-program over three operand vectors.
+        "fpu" => {
+            if inputs[0].data.len() != inputs[1].data.len()
+                || inputs[0].data.len() != inputs[2].data.len()
+            {
+                bail!("fpu: operand vectors must have equal length");
+            }
+            Ok(vec![Tensor::vec1(native::fpu(&inputs[0].data, &inputs[1].data, &inputs[2].data))])
+        }
+        // AES-128 ECB: blocks [n, 16] + round keys [11, 16], bytes as f32.
+        "aes" => {
+            let (n_blocks, block_w) = rank2_dims(&inputs[0])?;
+            if block_w != 16 {
+                bail!("aes: blocks must be 16 bytes wide, got {block_w}");
+            }
+            if inputs[1].data.len() != 11 * 16 {
+                bail!("aes: round keys must be 11 x 16 bytes");
+            }
+            let mut rks = [[0u8; 16]; 11];
+            for (r, rk) in rks.iter_mut().enumerate() {
+                for (c, b) in rk.iter_mut().enumerate() {
+                    *b = inputs[1].data[r * 16 + c].clamp(0.0, 255.0) as u8;
+                }
+            }
+            let mut out = Vec::with_capacity(n_blocks * 16);
+            for blk in 0..n_blocks {
+                let mut b = [0u8; 16];
+                for (i, byte) in b.iter_mut().enumerate() {
+                    *byte = inputs[0].data[blk * 16 + i].clamp(0.0, 255.0) as u8;
+                }
+                out.extend(native::aes_encrypt_block(&b, &rks).iter().map(|&v| v as f32));
+            }
+            Ok(vec![Tensor::new(inputs[0].shape.clone(), out)])
+        }
+        // Canny front-end: Gaussian blur -> Sobel -> gradient magnitude.
+        "canny" => {
+            let (h, w) = rank2_dims(&inputs[0])?;
+            Ok(vec![Tensor::new(
+                inputs[0].shape.clone(),
+                native::canny_magnitude(&inputs[0].data, h, w),
+            )])
+        }
+        // Huffman tensor half: expand symbol indices through the
+        // reconstruction table (the bit-serial half runs on the CPU, see
+        // accel::huffman and DESIGN.md).
+        "huffman" => {
+            let table = &inputs[1].data;
+            if table.is_empty() {
+                bail!("huffman: empty reconstruction table");
+            }
+            let out = inputs[0]
+                .data
+                .iter()
+                .map(|&s| table[(s.max(0.0) as usize).min(table.len() - 1)])
+                .collect();
+            Ok(vec![Tensor::new(inputs[0].shape.clone(), out)])
+        }
+        other => bail!("no native implementation for model '{other}'"),
+    }
+}
+
+/// Interpret a tensor as a rank-2 (rows, cols) array; rank-1 tensors are
+/// treated as a single row.
+fn rank2_dims(t: &Tensor) -> Result<(usize, usize)> {
+    match t.shape.len() {
+        1 => Ok((1, t.shape[0] as usize)),
+        2 => Ok((t.shape[0] as usize, t.shape[1] as usize)),
+        r => bail!("expected rank 1 or 2 tensor, got rank {r}"),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn entry_parameter_count_ignores_subcomputations() {
-        let hlo = "HloModule m\n\
-                   fused_computation {\n  p0 = f32[2]{0} parameter(0)\n}\n\
-                   ENTRY main {\n  a = f32[2]{0} parameter(0)\n  b = f32[2]{0} parameter(1)\n}\n";
-        assert_eq!(entry_parameter_count(hlo), 2);
-    }
 
     #[test]
     fn tensor_shape_checks() {
@@ -156,5 +240,71 @@ mod tests {
     #[should_panic]
     fn tensor_mismatch_panics() {
         Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn all_native_models_register() {
+        let rt = Runtime::load_dir("does-not-need-to-exist").unwrap();
+        for name in ["aes", "canny", "fft", "fir", "fpu", "huffman"] {
+            assert!(rt.has_model(name), "missing {name}");
+        }
+        assert_eq!(rt.model_names().len(), 6);
+        assert_eq!(rt.n_inputs("fpu"), Some(3));
+        assert_eq!(rt.n_inputs("bogus"), None);
+    }
+
+    #[test]
+    fn unknown_model_and_arity_errors() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        assert!(rt.execute("bogus", &[]).is_err());
+        assert!(rt.execute("fir", &[Tensor::vec1(vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn fir_executes_via_oracle() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let out = rt.execute("fir", &[Tensor::vec1(x.clone()), Tensor::vec1(vec![1.0])]).unwrap();
+        assert_eq!(out[0].data, x);
+    }
+
+    #[test]
+    fn fft_outputs_re_and_im() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let re = Tensor::new(vec![2, 8], vec![1.0; 16]);
+        let im = Tensor::new(vec![2, 8], vec![0.0; 16]);
+        let out = rt.execute("fft", &[re, im]).unwrap();
+        assert_eq!(out.len(), 2);
+        // DC bin of a constant row is the row sum.
+        assert!((out[0].data[0] - 8.0).abs() < 1e-4);
+        assert!((out[0].data[8] - 8.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn aes_matches_fips_vector() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let key: [u8; 16] = core::array::from_fn(|i| i as u8);
+        let rks = native::aes_key_expand(&key);
+        let rk_f: Vec<f32> = rks.iter().flatten().map(|&b| b as f32).collect();
+        let pt: [u8; 16] = [
+            0x00, 0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88, 0x99, 0xaa, 0xbb, 0xcc, 0xdd,
+            0xee, 0xff,
+        ];
+        let blocks = Tensor::from_bytes(vec![1, 16], &pt);
+        let out = rt.execute("aes", &[blocks, Tensor::new(vec![11, 16], rk_f)]).unwrap();
+        let expect: [u8; 16] = [
+            0x69, 0xc4, 0xe0, 0xd8, 0x6a, 0x7b, 0x04, 0x30, 0xd8, 0xcd, 0xb7, 0x80, 0x70, 0xb4,
+            0xc5, 0x5a,
+        ];
+        assert_eq!(out[0].to_bytes(), expect);
+    }
+
+    #[test]
+    fn huffman_expands_through_table() {
+        let rt = Runtime::load_dir("artifacts").unwrap();
+        let sym = Tensor::vec1(vec![0.0, 2.0, 1.0]);
+        let table = Tensor::vec1(vec![10.0, 20.0, 30.0]);
+        let out = rt.execute("huffman", &[sym, table]).unwrap();
+        assert_eq!(out[0].data, vec![10.0, 30.0, 20.0]);
     }
 }

@@ -1,0 +1,115 @@
+//! Threaded sweep harness for embarrassingly-parallel experiment points.
+//!
+//! The paper's figure sweeps (Fig 11 bandwidth points, Fig 12 injection
+//! rates, Fig 15 payload sizes) are independent simulations: each point
+//! owns its simulator and its deterministically-seeded [`crate::util::Rng`],
+//! so fanning them out across threads changes wall-clock only, never
+//! results. The runner is a work-queue over `std::thread::scope` — the
+//! offline build has no rayon.
+
+use std::num::NonZeroUsize;
+use std::sync::Mutex;
+
+/// Fans a list of independent sweep points out across OS threads and
+/// returns the results in input order.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl SweepRunner {
+    /// Runner with an explicit thread count (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    /// Runner sized to the machine (`std::thread::available_parallelism`).
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1))
+    }
+
+    /// Number of worker threads this runner uses.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `points`, running up to `threads` points concurrently.
+    ///
+    /// `f` receives each point by value and must be pure per point (no
+    /// shared mutable state) — which is exactly what a figure sweep is.
+    /// Results come back in the order of `points`, so parallel and
+    /// sequential runs are indistinguishable to the caller.
+    pub fn run<T, R, F>(&self, points: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            return points.into_iter().map(f).collect();
+        }
+        let queue: Mutex<Vec<(usize, T)>> =
+            Mutex::new(points.into_iter().enumerate().rev().collect());
+        let results: Mutex<Vec<Option<R>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let item = queue.lock().expect("sweep queue poisoned").pop();
+                    let Some((idx, point)) = item else { break };
+                    let out = f(point);
+                    results.lock().expect("sweep results poisoned")[idx] = Some(out);
+                });
+            }
+        });
+        results
+            .into_inner()
+            .expect("sweep results poisoned")
+            .into_iter()
+            .map(|r| r.expect("sweep point not computed"))
+            .collect()
+    }
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let points: Vec<u64> = (0..57).collect();
+        let out = SweepRunner::new(8).run(points.clone(), |x| x * 3);
+        assert_eq!(out, points.iter().map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_and_parallel_agree() {
+        let points: Vec<u64> = (0..23).collect();
+        let seq = SweepRunner::new(1).run(points.clone(), |x| x * x + 1);
+        let par = SweepRunner::new(4).run(points, |x| x * x + 1);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<u64> = SweepRunner::auto().run(Vec::<u64>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn auto_has_at_least_one_thread() {
+        assert!(SweepRunner::auto().threads() >= 1);
+        assert_eq!(SweepRunner::new(0).threads(), 1);
+    }
+}

@@ -5,6 +5,8 @@
 
 use std::collections::HashMap;
 
+/// Parsed command-line arguments: `--key value` options, bare `--flag`s,
+/// and positional arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     opts: HashMap<String, String>,
@@ -34,38 +36,47 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (excluding argv[0]).
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of option `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(String::as_str)
     }
 
+    /// Value of option `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `--key` parsed as u64, or `default` when absent/unparsable.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as usize, or `default` when absent/unparsable.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or `default` when absent/unparsable.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether boolean `--key` was passed (or `--key true`).
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key) || self.get(key) == Some("true")
     }
 
+    /// All positional (non `--`) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
 
+    /// First positional argument, used as the subcommand name.
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(String::as_str)
     }

@@ -3,8 +3,7 @@
 //! A property is a closure over a [`Rng`]; the driver runs it for a number of
 //! seeds and reports the first failing seed so failures are reproducible:
 //!
-//! ```no_run
-//! // (no_run: doctest binaries miss the xla_extension rpath in this env)
+//! ```
 //! use fpga_mt::util::prop::forall;
 //! forall("addition commutes", 256, |rng| {
 //!     let a = rng.below(1000) as i64;

@@ -11,10 +11,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample into the summary.
     #[inline]
     pub fn add(&mut self, x: f64) {
         self.n += 1;
@@ -29,6 +31,7 @@ impl Summary {
         }
     }
 
+    /// Fold another summary in (parallel-merge of Welford states).
     pub fn merge(&mut self, other: &Summary) {
         if other.n == 0 {
             return;
@@ -47,21 +50,27 @@ impl Summary {
         self.max = self.max.max(other.max);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.mean }
     }
+    /// Unbiased sample variance (0 when fewer than two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
+    /// Sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
+    /// Smallest sample seen (0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.min }
     }
+    /// Largest sample seen (0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
     }
@@ -76,18 +85,22 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Empty collector.
     pub fn new() -> Self {
         Percentiles { samples: Vec::new(), sorted: true }
     }
 
+    /// Record one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
         self.sorted = false;
     }
 
+    /// Number of samples recorded.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
+    /// Whether no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -109,10 +122,12 @@ impl Percentiles {
         self.samples[rank.min(self.samples.len() - 1)]
     }
 
+    /// Median (50th percentile).
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// Arithmetic mean of all samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             0.0
@@ -131,10 +146,12 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Histogram of `n_buckets` buckets, each `bucket_width` wide.
     pub fn new(bucket_width: f64, n_buckets: usize) -> Self {
         Histogram { bucket_width, buckets: vec![0; n_buckets], overflow: 0 }
     }
 
+    /// Count one sample into its bucket (or the overflow bin).
     pub fn add(&mut self, x: f64) {
         let idx = (x / self.bucket_width) as usize;
         if idx < self.buckets.len() {
@@ -144,12 +161,15 @@ impl Histogram {
         }
     }
 
+    /// Count in bucket `i`.
     pub fn bucket(&self, i: usize) -> u64 {
         self.buckets[i]
     }
+    /// Samples beyond the last bucket.
     pub fn overflow(&self) -> u64 {
         self.overflow
     }
+    /// Total samples recorded, overflow included.
     pub fn total(&self) -> u64 {
         self.buckets.iter().sum::<u64>() + self.overflow
     }

@@ -9,10 +9,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers and no rows.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append one row; panics if its width differs from the header.
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row width must match header");
@@ -20,6 +22,7 @@ impl Table {
         self
     }
 
+    /// Render the table as column-aligned text.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -50,6 +53,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -1,18 +1,14 @@
-//! Integration: every compiled artifact executed through the PJRT runtime
-//! must match the independent Rust-native oracle. This is the gate that
-//! catches HLO-text/parser semantic drift (e.g. the 0.5.1 gather bug the
-//! models had to be rewritten around — see DESIGN.md).
+//! Integration: every model executed through the runtime must match the
+//! independent Rust-native oracle. With the PJRT backend this gate caught
+//! HLO-text/parser semantic drift; with the native interpreter backend
+//! (see DESIGN.md, "substitutions") it pins the runtime's wire formats —
+//! shapes, output arity, byte round-trips — against the oracles.
 
 use fpga_mt::accel::native;
 use fpga_mt::runtime::{Runtime, Tensor};
 
-fn runtime() -> Option<Runtime> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(dir).join("fir.hlo.txt").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    Some(Runtime::load_dir(dir).expect("load artifacts"))
+fn runtime() -> Runtime {
+    Runtime::load_dir("artifacts").expect("runtime boots without artifacts")
 }
 
 fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
@@ -28,7 +24,7 @@ fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn all_models_load() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     for name in ["aes", "canny", "fft", "fir", "fpu", "huffman"] {
         assert!(rt.has_model(name), "missing {name}");
     }
@@ -36,7 +32,7 @@ fn all_models_load() {
 
 #[test]
 fn fir_artifact_matches_oracle() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let x: Vec<f32> = (0..1024).map(|i| ((i * 37 % 97) as f32) / 19.0 - 2.0).collect();
     let h: Vec<f32> = (0..16).map(|i| ((i as f32) - 7.5) / 16.0).collect();
     let out = rt
@@ -47,7 +43,7 @@ fn fir_artifact_matches_oracle() {
 
 #[test]
 fn fft_artifact_matches_oracle() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let re: Vec<f32> = (0..8 * 256).map(|i| ((i * 13 % 41) as f32) / 10.0 - 2.0).collect();
     let im: Vec<f32> = (0..8 * 256).map(|i| ((i * 7 % 29) as f32) / 10.0 - 1.4).collect();
     let out = rt
@@ -65,7 +61,7 @@ fn fft_artifact_matches_oracle() {
 
 #[test]
 fn fpu_artifact_matches_oracle() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let a: Vec<f32> = (0..4096).map(|i| ((i % 101) as f32) / 7.0 - 7.0).collect();
     let b: Vec<f32> = (0..4096).map(|i| ((i % 97) as f32) / 9.0 - 5.0).collect();
     let c: Vec<f32> = (0..4096).map(|i| ((i % 89) as f32) / 11.0 - 4.0).collect();
@@ -80,7 +76,7 @@ fn fpu_artifact_matches_oracle() {
 
 #[test]
 fn canny_artifact_matches_oracle() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let img: Vec<f32> = (0..128 * 128)
         .map(|i| {
             let (y, x) = (i / 128, i % 128);
@@ -93,7 +89,7 @@ fn canny_artifact_matches_oracle() {
 
 #[test]
 fn aes_artifact_matches_oracle_fips_key() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let blocks: Vec<f32> = (0..256).map(|i| i as f32).collect();
     let key: [u8; 16] = core::array::from_fn(|i| i as u8);
     let rks = native::aes_key_expand(&key);
@@ -114,7 +110,7 @@ fn aes_artifact_matches_oracle_fips_key() {
 
 #[test]
 fn aes_artifact_random_key() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let key: [u8; 16] = core::array::from_fn(|i| (i as u8).wrapping_mul(53).wrapping_add(11));
     let rks = native::aes_key_expand(&key);
     let rk_f: Vec<f32> = rks.iter().flatten().map(|&b| b as f32).collect();
@@ -134,7 +130,7 @@ fn aes_artifact_random_key() {
 
 #[test]
 fn huffman_artifact_expands_through_table() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let sym: Vec<f32> = (0..2048).map(|i| ((i * 31) % 256) as f32).collect();
     let table: Vec<f32> = (0..256).map(|i| (255 - i) as f32).collect();
     let out = rt
@@ -148,7 +144,7 @@ fn huffman_artifact_expands_through_table() {
 fn huffman_end_to_end_decode_pipeline() {
     // Rust canonical decode (control path) + artifact expansion (tensor
     // path) — the full substituted Huffman accelerator.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let text = b"the quick brown fox jumps over the lazy dog; the dog sleeps";
     let cb = fpga_mt::accel::huffman::Codebook::from_frequencies(
         &fpga_mt::accel::huffman::frequencies(text),
