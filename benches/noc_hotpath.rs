@@ -8,24 +8,22 @@
 //! fixpoint pass count (cycle-for-cycle identity), and the batched engine
 //! must be measurably faster.
 
-use fpga_mt::bench_support::{bench, check, header, speedup};
+use fpga_mt::bench_support::{bench, check, finish, header, smoke_mode, speedup};
 use fpga_mt::noc::{FixpointSim, NocSim, NocStats, Topology};
 use fpga_mt::runtime::{Runtime, Tensor};
 use fpga_mt::util::Rng;
 
-const CYCLES_PER_ITER: u64 = 20_000;
-
 /// Drive one engine through the standard uniform-load workload; both
 /// engines expose the same send/step API so the closure bodies stay in
 /// lockstep by construction.
-fn drive_reference(topo: &Topology, rate: f64, seed: u64) -> (NocStats, u64, u64) {
+fn drive_reference(topo: &Topology, cycles: u64, rate: f64, seed: u64) -> (NocStats, u64, u64) {
     let n_vrs = topo.n_vrs();
     let mut sim = FixpointSim::new(topo.clone());
     for vr in 0..n_vrs {
         sim.assign_vr(vr, 1);
     }
     let mut rng = Rng::new(seed);
-    for _ in 0..CYCLES_PER_ITER {
+    for _ in 0..cycles {
         for src in 0..n_vrs {
             if rng.chance(rate) {
                 let mut dst = rng.index(n_vrs);
@@ -38,18 +36,18 @@ fn drive_reference(topo: &Topology, rate: f64, seed: u64) -> (NocStats, u64, u64
         }
         sim.step();
     }
-    sim.drain(CYCLES_PER_ITER * 16);
+    sim.drain(cycles * 16);
     (sim.stats.clone(), sim.passes, sim.cycle())
 }
 
-fn drive_batched(topo: &Topology, rate: f64, seed: u64) -> (NocStats, u64, u64) {
+fn drive_batched(topo: &Topology, cycles: u64, rate: f64, seed: u64) -> (NocStats, u64, u64) {
     let n_vrs = topo.n_vrs();
     let mut sim = NocSim::new(topo.clone());
     for vr in 0..n_vrs {
         sim.assign_vr(vr, 1);
     }
     let mut rng = Rng::new(seed);
-    for _ in 0..CYCLES_PER_ITER {
+    for _ in 0..cycles {
         for src in 0..n_vrs {
             if rng.chance(rate) {
                 let mut dst = rng.index(n_vrs);
@@ -62,20 +60,24 @@ fn drive_batched(topo: &Topology, rate: f64, seed: u64) -> (NocStats, u64, u64) 
         }
         sim.step();
     }
-    sim.drain(CYCLES_PER_ITER * 16);
+    sim.drain(cycles * 16);
     (sim.stats.clone(), sim.passes, sim.cycle())
 }
 
 fn main() {
+    let smoke = smoke_mode();
     header(
         "Perf — NoC cycle engine & accelerator dispatch hot paths",
         "engine target: >= 10M router-cycles/s; batched engine must match the reference cycle-for-cycle",
     );
+    // Smoke mode (CI): short workload, equivalence checks still enforced.
+    let cycles: u64 = if smoke { 2_000 } else { 20_000 };
+    let (warm, iters) = if smoke { (1, 2) } else { (2, 10) };
 
     // ---- A/B identity: batched engine vs retained reference engine ----
     let topo = Topology::double_column(12);
-    let (ref_stats, ref_passes, ref_cycle) = drive_reference(&topo, 0.3, 3);
-    let (new_stats, new_passes, new_cycle) = drive_batched(&topo, 0.3, 3);
+    let (ref_stats, ref_passes, ref_cycle) = drive_reference(&topo, cycles, 0.3, 3);
+    let (new_stats, new_passes, new_cycle) = drive_batched(&topo, cycles, 0.3, 3);
     check(
         "delivered identical",
         ref_stats.delivered == new_stats.delivered,
@@ -95,31 +97,40 @@ fn main() {
     check("drain cycle identical", ref_cycle == new_cycle);
 
     // ---- throughput: 12-router double column under uniform load ----
-    let s_ref = bench("reference engine: 12 routers, rate 0.3/VR, 20k cycles", 2, 10, || {
-        std::hint::black_box(drive_reference(&topo, 0.3, 3));
+    let s_ref = bench("reference engine: 12 routers, rate 0.3/VR", warm, iters, || {
+        std::hint::black_box(drive_reference(&topo, cycles, 0.3, 3));
     });
-    let s_new = bench("batched engine:   12 routers, rate 0.3/VR, 20k cycles", 2, 10, || {
-        std::hint::black_box(drive_batched(&topo, 0.3, 3));
+    let s_new = bench("batched engine:   12 routers, rate 0.3/VR", warm, iters, || {
+        std::hint::black_box(drive_batched(&topo, cycles, 0.3, 3));
     });
-    let router_cycles = CYCLES_PER_ITER as f64 * topo.n_routers() as f64;
+    let router_cycles = cycles as f64 * topo.n_routers() as f64;
     println!(
         "-> reference {:.1}M router-cycles/s, batched {:.1}M router-cycles/s",
         router_cycles / s_ref.mean(), // cycles per µs = M cycles per s
         router_cycles / s_new.mean(),
     );
     let ratio = speedup("batched vs reference (loaded)", &s_ref, &s_new);
-    check("batched engine is faster under load", ratio > 1.0);
+    if smoke {
+        println!("(smoke mode: speedup gate skipped; timings too short to be stable)");
+    } else {
+        check("batched engine is faster under load", ratio > 1.0);
+    }
 
     // Idle engine (no traffic): pure stepping cost.
-    bench("batched engine idle: 20k cycles", 2, 10, || {
+    bench("batched engine idle", warm, iters, || {
         let mut sim = NocSim::new(topo.clone());
-        for _ in 0..CYCLES_PER_ITER {
+        for _ in 0..cycles {
             sim.step();
         }
         std::hint::black_box(sim.cycle());
     });
 
     // ---- accelerator dispatch (native runtime backend) ----
+    // Smoke mode stops here: the dispatch micro-benches carry no
+    // assertions, and CI only gates on the A/B equivalence checks above.
+    if smoke {
+        finish();
+    }
     let rt = Runtime::load_dir("artifacts").unwrap();
     let x: Vec<f32> = (0..1024).map(|i| i as f32 * 0.01).collect();
     let h = vec![0.0625f32; 16];
@@ -169,4 +180,5 @@ fn main() {
             .unwrap(),
         );
     });
+    finish();
 }

@@ -1,0 +1,185 @@
+//! Serving-engine A/B: the serial single-executor engine vs the sharded
+//! per-VR pipeline (the paper's space-sharing claim, measured in software).
+//!
+//! Three sections:
+//! 1. **Equivalence** — replays one deterministic trace through both
+//!    engines and checks byte-identical responses, identical modeled
+//!    timings, and identical merged metrics totals.
+//! 2. **Throughput** — all 5 VIs drive their VRs concurrently (one
+//!    closed-loop client thread per VI, fanned out with
+//!    `runtime::SweepRunner`) for a fixed time window against each engine;
+//!    reports aggregate requests/sec and the sharded-over-serial speedup.
+//!    This is the paper's utilization story: on the serial engine a fast
+//!    tenant queues behind every slow tenant's compute; on the sharded
+//!    engine each VR serves at its own pace. On a multi-core host the
+//!    sharded engine must reach >= 2x.
+//! 3. **Persistence** — writes the numbers to `BENCH_serving.json` so the
+//!    perf trajectory has data across PRs.
+//!
+//! `cargo bench --bench serving_throughput [-- --smoke]`: smoke mode runs
+//! CI-sized iteration counts and skips the speedup gate (CI runners may be
+//! 2-core), but still enforces every equivalence check.
+
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::bench_support::{check, finish, header, smoke_mode};
+use fpga_mt::coordinator::server::Engine;
+use fpga_mt::coordinator::{Response, ShardedEngine, System};
+use fpga_mt::runtime::SweepRunner;
+use fpga_mt::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deterministic replay trace across all six shards (no rejections, so
+/// every response can be compared field by field).
+fn replay_trace(n: usize, seed: u64) -> Vec<(u16, usize, Arc<[u8]>)> {
+    let mut rng = Rng::new(seed);
+    let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
+    (0..n)
+        .map(|_| {
+            let (vi, vr) = specs[rng.index(specs.len())];
+            let len = 32 + rng.index(224);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            (vi, vr, Arc::from(payload))
+        })
+        .collect()
+}
+
+fn equivalence_section(trace_len: usize) -> bool {
+    let t = replay_trace(trace_len, 0x5EED);
+
+    let serial = Engine::start(|| System::case_study("artifacts")).unwrap();
+    let sh = serial.handle();
+    let serial_resps: Vec<_> =
+        t.iter().map(|(vi, vr, p)| sh.call(*vi, *vr, Arc::clone(p)).unwrap()).collect();
+    let sm = serial.stop();
+
+    let sharded = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let h = sharded.handle();
+    let sharded_resps: Vec<_> =
+        t.iter().map(|(vi, vr, p)| h.call(*vi, *vr, Arc::clone(p)).unwrap()).collect();
+    let shm = sharded.stop();
+
+    let responses_identical = serial_resps.iter().zip(&sharded_resps).all(|(a, b)| {
+        a.path == b.path
+            && a.outputs.len() == b.outputs.len()
+            && a.outputs.iter().zip(&b.outputs).all(|(x, y)| x.shape == y.shape && x.data == y.data)
+            && a.timing.io_us == b.timing.io_us
+            && a.timing.noc_cycles == b.timing.noc_cycles
+    });
+    check("responses byte-identical (outputs, path, modeled timing)", responses_identical);
+    check("merged requests equal serial", sm.requests == shm.requests);
+    check("merged rejected equal serial", sm.rejected == shm.rejected);
+    check(
+        "merged byte counters equal serial",
+        sm.bytes_in == shm.bytes_in && sm.bytes_out == shm.bytes_out,
+    );
+    check(
+        "merged io_us distribution matches serial",
+        sm.io_us.count() == shm.io_us.count() && (sm.io_us.mean() - shm.io_us.mean()).abs() < 1e-9,
+    );
+    responses_identical
+        && sm.requests == shm.requests
+        && sm.bytes_in == shm.bytes_in
+        && sm.bytes_out == shm.bytes_out
+}
+
+/// Closed-loop clients (one handle per VI, fanned out on `SweepRunner`)
+/// hammer one engine for `secs`; returns total requests completed. The
+/// engines' handle types differ, so the caller supplies the handles and
+/// the call shim — the drive loop itself is shared, keeping the A/B fair
+/// by construction.
+fn drive_closed_loop<H: Send>(
+    handles: Vec<(H, u16, usize)>,
+    call: impl Fn(&H, u16, usize, Arc<[u8]>) -> anyhow::Result<Response> + Sync,
+    secs: f64,
+) -> u64 {
+    let payload: Arc<[u8]> = (0..=255u8).collect::<Vec<u8>>().into();
+    let deadline = Instant::now() + Duration::from_secs_f64(secs);
+    SweepRunner::new(handles.len())
+        .run(handles, |(h, vi, vr)| {
+            let mut n = 0u64;
+            while Instant::now() < deadline {
+                call(&h, vi, vr, Arc::clone(&payload)).unwrap();
+                n += 1;
+            }
+            n
+        })
+        .into_iter()
+        .sum()
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    header(
+        "Serving throughput — serial executor vs sharded per-VR pipeline",
+        "space-sharing: independent VRs serve independent tenants concurrently (6x utilization at single-tenant-comparable QoS)",
+    );
+    let (trace_len, window_secs) = if smoke { (36, 0.25) } else { (120, 1.5) };
+
+    // ---- 1. A/B equivalence on a replayed trace ----
+    let equivalent = equivalence_section(trace_len);
+
+    // ---- 2. concurrent throughput, all 5 VIs at once ----
+    // One VR per VI; VI3 drives its FPU chain so streaming is in the mix.
+    let clients: Vec<(u16, usize)> =
+        CASE_STUDY.iter().filter(|s| s.name != "aes").map(|s| (s.vi, s.vr)).collect();
+
+    let serial = Engine::start(|| System::case_study("artifacts")).unwrap();
+    let serial_handles = || clients.iter().map(|&(vi, vr)| (serial.handle(), vi, vr)).collect();
+    drive_closed_loop(serial_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs * 0.2);
+    let t0 = Instant::now();
+    let serial_requests =
+        drive_closed_loop(serial_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs);
+    let serial_rps = serial_requests as f64 / t0.elapsed().as_secs_f64();
+    let serial_metrics = serial.stop();
+
+    let sharded = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let sharded_handles =
+        || clients.iter().map(|&(vi, vr)| (sharded.handle(), vi, vr)).collect();
+    drive_closed_loop(sharded_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs * 0.2);
+    let t0 = Instant::now();
+    let sharded_requests =
+        drive_closed_loop(sharded_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs);
+    let sharded_rps = sharded_requests as f64 / t0.elapsed().as_secs_f64();
+    let sharded_metrics = sharded.stop();
+
+    let speedup = sharded_rps / serial_rps;
+    println!(
+        "\nconcurrent serving, {} VIs closed-loop for {window_secs:.2}s per engine:\n  serial   {serial_rps:>10.0} req/s ({serial_requests} served)\n  sharded  {sharded_rps:>10.0} req/s ({sharded_requests} served)\n  speedup  {speedup:>10.2}x",
+        clients.len(),
+    );
+    // Engine metrics also contain the warmup requests, hence `>=`.
+    check(
+        "no request lost or rejected under concurrent load",
+        serial_metrics.requests >= serial_requests
+            && sharded_metrics.requests >= sharded_requests
+            && serial_metrics.rejected == 0
+            && sharded_metrics.rejected == 0,
+    );
+    if smoke {
+        println!("(smoke mode: >=2x speedup gate skipped; CI runners may be 2-core)");
+    } else {
+        check("sharded engine >= 2x serial requests/sec on this host", speedup >= 2.0);
+    }
+
+    // ---- 3. persist the perf point ----
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let json = format!(
+        "{{\n  \"bench\": \"serving_throughput\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"vis\": {},\n  \"window_secs\": {window_secs},\n  \"serial_rps\": {serial_rps:.1},\n  \"sharded_rps\": {sharded_rps:.1},\n  \"speedup\": {speedup:.3},\n  \"equivalent\": {equivalent}\n}}\n",
+        clients.len(),
+    );
+    // `cargo bench` runs with cwd = the package dir (rust/); anchor the
+    // output at the workspace root, where README/DESIGN document it. A
+    // smoke run must not overwrite the real perf-trajectory measurement.
+    if smoke {
+        println!("\n(smoke mode: BENCH_serving.json not written)\n{json}");
+    } else {
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+        match std::fs::write(&out, &json) {
+            Ok(()) => println!("\nwrote {}:\n{json}", out.display()),
+            Err(e) => check(&format!("write {} ({e})", out.display()), false),
+        }
+    }
+
+    finish();
+}

@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // Elastic release: VI3 shrinks back, the VR returns to the pool.
     let before = sys.hv.free_vrs();
-    sys.hv.release_vr(3, 3, &mut sys.noc)?;
+    sys.hv.release_vr(3, 3, &mut sys.core.noc)?;
     println!("\nreleased VR4: free VRs {} -> {}", before, sys.hv.free_vrs());
     for e in sys.hv.events.iter().rev().take(1) {
         println!("  {e:?}");

@@ -7,7 +7,7 @@
 
 use fpga_mt::accel::CASE_STUDY;
 use fpga_mt::cloud::{fig14_io_trips, IoConfig, Link, Scheme};
-use fpga_mt::coordinator::{server::Engine, System};
+use fpga_mt::coordinator::{ShardedEngine, System};
 use fpga_mt::device::Device;
 use fpga_mt::placer;
 use fpga_mt::util::table::{fnum, Table};
@@ -28,15 +28,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- concurrent multi-tenant serving (real compute) ----
+    // Space-shared: the sharded engine runs every VR's compute on its own
+    // worker; requests to disjoint VRs never queue behind each other.
     let dir2 = dir.clone();
-    let engine = Engine::start(move || System::case_study(&dir2))?;
+    let engine = ShardedEngine::start(move || System::case_study(&dir2))?;
     let mut joins = Vec::new();
     let rounds = 12;
     for spec in CASE_STUDY.iter() {
         let h = engine.handle();
         let (vi, vr, name) = (spec.vi, spec.vr, spec.name);
         joins.push(std::thread::spawn(move || {
-            let payload: Vec<u8> = (0..256u32).map(|i| (i * 31 % 256) as u8).collect();
+            let payload: std::sync::Arc<[u8]> =
+                (0..256u32).map(|i| (i * 31 % 256) as u8).collect::<Vec<u8>>().into();
             let mut compute_us = 0.0;
             let mut io_us = 0.0;
             let t0 = std::time::Instant::now();

@@ -6,7 +6,11 @@
 //! code paths involved.
 
 use crate::util::Summary;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::Instant;
+
+/// Process-wide count of failed [`check`]s (so bench binaries can gate CI).
+static FAILURES: AtomicU32 = AtomicU32::new(0);
 
 /// Time `f` with warmup, report mean/std per iteration.
 pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Summary {
@@ -37,9 +41,35 @@ pub fn header(experiment: &str, claim: &str) {
 }
 
 /// Simple shape check with console verdict (bench-level assertions should
-/// not panic the whole harness run).
+/// not panic the whole harness run). Failures are counted; a bench that
+/// ends with [`finish`] turns them into a non-zero exit for CI.
 pub fn check(what: &str, ok: bool) {
+    if !ok {
+        FAILURES.fetch_add(1, Ordering::Relaxed);
+    }
     println!("[{}] {}", if ok { "OK " } else { "FAIL" }, what);
+}
+
+/// Number of failed [`check`]s so far in this process.
+pub fn failures() -> u32 {
+    FAILURES.load(Ordering::Relaxed)
+}
+
+/// Whether the bench binary was invoked in smoke mode (`-- --smoke`):
+/// CI-sized iteration counts, equivalence assertions still enforced.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// End a bench binary: exit non-zero if any [`check`] failed (the CI
+/// smoke step gates on the A/B equivalence assertions), zero otherwise.
+pub fn finish() -> ! {
+    let n = failures();
+    if n > 0 {
+        eprintln!("{n} bench check(s) FAILED");
+        std::process::exit(1);
+    }
+    std::process::exit(0);
 }
 
 /// Report a measured speedup of `new` over `old` (both per-iteration

@@ -30,10 +30,20 @@ impl EntryPoint {
 
     /// A request arrives at absolute time `t_us`; returns the time it has
     /// passed the entry point.
+    ///
+    /// The entry point is strictly FIFO in *call order*: the caller (the
+    /// coordinator's shared timing core) is responsible for invoking it in
+    /// a deterministic order when tenants are served concurrently.
     pub fn admit(&mut self, t_us: f64) -> f64 {
         let start = self.free_at.max(t_us);
         self.wait.add(start - t_us);
         self.free_at = start + ENTRY_SERVICE_US;
+        self.free_at
+    }
+
+    /// Absolute time (µs) the entry point stays busy until — the earliest
+    /// instant the next admitted request could start service.
+    pub fn busy_until(&self) -> f64 {
         self.free_at
     }
 }

@@ -9,7 +9,9 @@ pub struct RequestTiming {
     pub io_us: f64,
     /// NoC cycles spent on inter-VR streaming (0 if no stream hop).
     pub noc_cycles: u64,
-    /// Measured PJRT compute wall time (µs).
+    /// Measured accelerator-compute wall time (µs). Excludes time spent
+    /// in the shared core (NoC lock wait + cycle simulation), so the
+    /// metric means the same thing on the serial and sharded engines.
     pub compute_us: f64,
     /// Request payload bytes in.
     pub bytes_in: usize,
@@ -58,6 +60,21 @@ impl Metrics {
         self.bytes_out += t.bytes_out as u64;
     }
 
+    /// Fold another metrics accumulator in (the sharded engine merges its
+    /// per-shard accumulators at shutdown). Counter totals add exactly;
+    /// distributions merge via the Welford parallel-merge, so totals match
+    /// a serial engine that recorded the same requests.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.io_us.merge(&other.io_us);
+        self.compute_us.merge(&other.compute_us);
+        self.total_us.merge(&other.total_us);
+        self.noc_cycles.merge(&other.noc_cycles);
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+    }
+
     /// Modeled ingress throughput in Gb/s.
     pub fn throughput_gbps(&self) -> f64 {
         let total_us = self.total_us.mean() * self.requests as f64;
@@ -88,5 +105,43 @@ mod tests {
         assert_eq!(m.requests, 1);
         assert_eq!(m.bytes_in, 1000);
         assert!(m.throughput_gbps() > 0.0);
+    }
+
+    #[test]
+    fn sharded_merge_equals_serial_record() {
+        // The same 12 requests recorded serially vs split over 3 "shards"
+        // and merged: counters identical, distributions equal to fp noise.
+        let timings: Vec<RequestTiming> = (0..12)
+            .map(|i| RequestTiming {
+                io_us: 28.0 + i as f64 * 0.7,
+                noc_cycles: if i % 4 == 0 { 1024 } else { 0 },
+                compute_us: 50.0 + (i * i) as f64,
+                bytes_in: 100 + i,
+                bytes_out: 64 * i,
+            })
+            .collect();
+        let mut serial = Metrics::default();
+        for t in &timings {
+            serial.record(t, 800.0);
+        }
+        serial.rejected = 2;
+        let mut shards = vec![Metrics::default(), Metrics::default(), Metrics::default()];
+        for (i, t) in timings.iter().enumerate() {
+            shards[i % 3].record(t, 800.0);
+        }
+        let mut merged = Metrics::default();
+        merged.rejected = 2;
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.requests, serial.requests);
+        assert_eq!(merged.rejected, serial.rejected);
+        assert_eq!(merged.bytes_in, serial.bytes_in);
+        assert_eq!(merged.bytes_out, serial.bytes_out);
+        assert_eq!(merged.io_us.count(), serial.io_us.count());
+        assert!((merged.io_us.mean() - serial.io_us.mean()).abs() < 1e-9);
+        assert!((merged.total_us.mean() - serial.total_us.mean()).abs() < 1e-9);
+        assert!((merged.compute_us.std_dev() - serial.compute_us.std_dev()).abs() < 1e-6);
+        assert_eq!(merged.noc_cycles.max(), serial.noc_cycles.max());
     }
 }

@@ -12,42 +12,60 @@
 //! The IO trip uses the Fig 14 calibrated model; on-chip streaming runs
 //! through the cycle-accurate NoC; accelerator outputs are real numbers
 //! from the runtime's model implementations (see `runtime` for the
-//! backend). See `server` for the threaded engine.
+//! backend).
+//!
+//! The request path is **sharded by VR** (the paper's space-sharing):
+//! everything a VR needs to serve is a [`ShardPlan`] (`shard`), the only
+//! cross-VR state is the [`SharedCore`] (NoC + deterministic
+//! [`timing::TimingCore`]), and both the serial engine (`server`) and the
+//! parallel per-VR engine (`sharded`) execute the same
+//! [`shard::serve_admitted`] path against them.
 
 pub mod metrics;
 pub mod server;
+pub mod shard;
+pub mod sharded;
+pub mod timing;
 
-use crate::accel::{self, CASE_STUDY};
-use crate::cloud::{middleware::EntryPoint, IoConfig, Scheme};
+pub use shard::{CoreGate, ShardEnv, ShardPlan, ShardRequest, SharedCore};
+pub use sharded::{ShardedEngine, ShardedHandle};
+pub use timing::{Admission, TimingCore};
+
+use crate::accel::CASE_STUDY;
+use crate::cloud::IoConfig;
 use crate::device::Device;
 use crate::hypervisor::{Hypervisor, Policy, VrStatus};
-use crate::noc::{hop_count, segment_message, NocSim, Topology};
+use crate::noc::{NocSim, Topology};
 use crate::placer::{case_study_floorplan, Floorplan};
 use crate::runtime::{Runtime, Tensor};
-use crate::util::Rng;
 use anyhow::{bail, Result};
 use metrics::{Metrics, RequestTiming};
+use std::sync::Arc;
 
 /// Bytes carried per 32-bit flit.
 pub const FLIT_PAYLOAD_BYTES: usize = 4;
 
 /// A deployed system.
+///
+/// Serves requests serially through [`System::submit`]; hand it to
+/// [`sharded::ShardedEngine::start`] (via [`System::into_shards`]) to serve
+/// independent VRs in parallel.
 pub struct System {
     /// Physical device the deployment targets.
     pub device: Device,
     /// Hypervisor managing VI/VR lifecycle.
     pub hv: Hypervisor,
-    /// Cycle-accurate NoC simulator.
-    pub noc: NocSim,
-    /// Accelerator execution runtime.
-    pub runtime: Runtime,
+    /// Shared timing/NoC core — the narrow synchronized state of the
+    /// request path. Per-VR compute never touches it; only admission and
+    /// on-chip streaming hops do.
+    pub core: SharedCore,
+    /// Accelerator execution runtime (shared: stateless after load).
+    pub runtime: Arc<Runtime>,
     /// IO-path timing model configuration.
     pub io_cfg: IoConfig,
     /// Aggregated request metrics.
     pub metrics: Metrics,
-    entry: EntryPoint,
-    clock_us: f64,
-    rng: Rng,
+    next_rid: u64,
 }
 
 /// Response of one request.
@@ -59,6 +77,21 @@ pub struct Response {
     pub path: Vec<String>,
     /// Per-phase timing of the request.
     pub timing: RequestTiming,
+}
+
+/// A [`System`] split for sharded serving: one plan per VR plus the shared
+/// core and handles (see [`System::into_shards`]).
+pub struct ShardedParts {
+    /// One execution-shard plan per VR, indexed like the topology's VRs.
+    pub plans: Vec<ShardPlan>,
+    /// The shared timing/NoC core.
+    pub core: SharedCore,
+    /// Shared accelerator runtime.
+    pub runtime: Arc<Runtime>,
+    /// IO-path timing configuration (copied into each worker).
+    pub io_cfg: IoConfig,
+    /// Metrics accumulated before the split (usually empty).
+    pub metrics: Metrics,
 }
 
 impl System {
@@ -78,7 +111,7 @@ impl System {
     ) -> Result<System> {
         let mut noc = NocSim::new(topo.clone());
         let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
-        let runtime = Runtime::load_dir(artifacts_dir)?;
+        let runtime = Runtime::load_shared(artifacts_dir)?;
 
         // Recreate the paper's tenancy: 5 VIs; VI3 grows elastically.
         let mut vi_ids = std::collections::HashMap::new();
@@ -105,13 +138,11 @@ impl System {
         Ok(System {
             device,
             hv,
-            noc,
+            core: SharedCore { noc, timing: TimingCore::new(0xF00D) },
             runtime,
             io_cfg: IoConfig::default(),
             metrics: Metrics::default(),
-            entry: EntryPoint::new(),
-            clock_us: 0.0,
-            rng: Rng::new(0xF00D),
+            next_rid: 0,
         })
     }
 
@@ -126,93 +157,44 @@ impl System {
     /// Submit one request: `vi` writes `payload` to its VR `vr`, reads the
     /// result. If the VR's Wrapper registers point at another VR, the
     /// output streams on-chip and the destination accelerator runs too.
+    ///
+    /// Serial reference path: snapshots the VR's shard plan fresh (so
+    /// hypervisor changes between requests are honored) and runs the same
+    /// [`shard::serve_admitted`] implementation as the sharded engine.
     pub fn submit(&mut self, vi: u16, vr: usize, payload: &[u8]) -> Result<Response> {
-        let Some(design) = self.design_of(vr).map(String::from) else {
-            bail!("VR{vr} has no programmed design");
-        };
-        match &self.hv.vrs[vr].status {
-            VrStatus::Programmed { vi: owner, .. } if *owner == vi => {}
-            _ => {
-                self.metrics.rejected += 1;
-                bail!("VI{vi} does not own VR{vr} (access monitor)");
-            }
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        if vr >= self.hv.vrs.len() {
+            bail!("VR{vr} does not exist");
         }
-
-        // --- modeled host->FPGA IO trip (Fig 14 path) ---
-        self.clock_us += self.rng.exponential(40.0); // inter-arrival
-        let admitted = self.entry.admit(self.clock_us);
-        let queue_wait = admitted - self.clock_us;
-        let hops = hop_count(&self.noc.header_for(vi, vr), 0);
-        let io_us = self.io_cfg.io_trip_us(Scheme::MultiTenant, hops, queue_wait, &mut self.rng);
-
-        // --- real compute on the VR's accelerator ---
-        let t0 = std::time::Instant::now();
-        let inputs = accel::inputs_from_payload(&design, payload)?;
-        let mut outputs = self.runtime.execute(&design, &inputs)?;
-        let mut path = vec![design.clone()];
-        let mut noc_cycles = 0u64;
-
-        // --- optional on-chip streaming hop (elasticity) ---
-        let dest_vr = self.hv.vrs[vr]
-            .stream_dest
-            .filter(|&d| d != vr && self.design_of(d).is_some());
-        if let Some(dst) = dest_vr {
-            let stream_bytes = outputs[0].to_bytes();
-            noc_cycles = self.stream(vi, vr, dst, &stream_bytes)?;
-            let dst_design = self.design_of(dst).unwrap().to_string();
-            let received = self.collect_delivered(dst);
-            let ins = accel::inputs_from_payload(&dst_design, &received)?;
-            outputs = self.runtime.execute(&dst_design, &ins)?;
-            path.push(dst_design);
-        }
-        let compute_us = t0.elapsed().as_secs_f64() * 1e6;
-
-        let bytes_out = outputs.iter().map(|t| t.data.len() * 4).sum();
-        let timing = RequestTiming {
-            io_us,
-            noc_cycles,
-            compute_us,
-            bytes_in: payload.len(),
-            bytes_out,
-        };
-        self.metrics.record(&timing, self.io_cfg.noc_clock_mhz);
-        self.clock_us += timing.total_us(self.io_cfg.noc_clock_mhz);
-        Ok(Response { outputs, path, timing })
+        let plan = ShardPlan::snapshot(&self.hv, &self.core.noc, vr);
+        plan.check_access(vi, &mut self.metrics)?;
+        let adm = self.core.timing.admit(rid);
+        let env = ShardEnv { runtime: self.runtime.as_ref(), io_cfg: &self.io_cfg };
+        shard::serve_admitted(
+            ShardRequest { vi, payload, adm },
+            &plan,
+            &env,
+            &mut self.core,
+            &mut self.metrics,
+        )
     }
 
-    /// Stream `bytes` from `src` VR to `dst` VR over the NoC (direct link
-    /// if wired, else routed flits). Returns cycles taken.
-    fn stream(&mut self, vi: u16, src: usize, dst: usize, bytes: &[u8]) -> Result<u64> {
-        let header = self.noc.header_for(vi, dst);
-        let flits = segment_message(header, bytes, FLIT_PAYLOAD_BYTES, 0);
-        let start = self.noc.cycle();
-        let direct = self.noc.topo.vrs_adjacent(src, dst) && self.has_direct(src);
-        for f in &flits {
-            if direct {
-                self.noc.send_direct(src, header, f.payload.clone(), f.seq);
-            } else {
-                self.noc.send(src, header, f.payload.clone(), f.seq);
-            }
+    /// Split into the sharded engine's parts: one [`ShardPlan`] per VR
+    /// plus the shared core. The tenancy is frozen while the sharded
+    /// engine serves (no allocate/release mid-flight) — rebuild or re-split
+    /// after reconfiguration.
+    pub fn into_shards(self) -> ShardedParts {
+        let plans = (0..self.hv.vrs.len())
+            .map(|vr| ShardPlan::snapshot(&self.hv, &self.core.noc, vr))
+            .collect();
+        ShardedParts {
+            plans,
+            core: self.core,
+            runtime: self.runtime,
+            io_cfg: self.io_cfg,
+            metrics: self.metrics,
         }
-        if !self.noc.drain(1_000_000) {
-            bail!("NoC failed to drain while streaming {src}->{dst}");
-        }
-        Ok(self.noc.cycle() - start)
-    }
-
-    fn has_direct(&self, _src: usize) -> bool {
-        // The only direct link in the case study is FPU->AES; the NocSim
-        // itself validates adjacency on wiring, so streaming just tries it.
-        true
-    }
-
-    /// Pop all delivered payload bytes at a VR (in order).
-    fn collect_delivered(&mut self, vr: usize) -> Vec<u8> {
-        let mut out = Vec::new();
-        while let Some(f) = self.noc.vrs[vr].delivered.pop_front() {
-            out.extend_from_slice(&f.payload);
-        }
-        out
     }
 }
 
@@ -243,6 +225,9 @@ mod tests {
         assert!(resp.timing.noc_cycles > 0, "stream must use the NoC");
         // AES output: 16 blocks of 16 bytes.
         assert_eq!(resp.outputs[0].shape, vec![16, 16]);
+        // The FPU->AES link was wired, so the stream takes the direct path.
+        assert!(sys.core.noc.has_direct(2, 3));
+        assert!(sys.core.noc.stats.direct_delivered > 0, "stream must use the wired link");
     }
 
     #[test]
@@ -265,6 +250,34 @@ mod tests {
             b.copy_from_slice(&payload[blk * 16..blk * 16 + 16]);
             let expect = crate::accel::native::aes_encrypt_block(&b, &rks);
             assert_eq!(&got[blk * 16..blk * 16 + 16], &expect, "block {blk}");
+        }
+    }
+
+    #[test]
+    fn identical_traces_get_identical_modeled_timings() {
+        // The deterministic timing core: two fresh systems replaying the
+        // same trace see the same io_us per request (compute wall time is
+        // real and differs, so only the modeled parts are compared).
+        let trace: Vec<(u16, usize)> = vec![(1, 0), (2, 1), (3, 2), (4, 4), (5, 5), (3, 3)];
+        let payload = [5u8; 96];
+        let mut a = System::case_study("artifacts").unwrap();
+        let mut b = System::case_study("artifacts").unwrap();
+        for &(vi, vr) in &trace {
+            let ra = a.submit(vi, vr, &payload).unwrap();
+            let rb = b.submit(vi, vr, &payload).unwrap();
+            assert_eq!(ra.timing.io_us, rb.timing.io_us);
+            assert_eq!(ra.timing.noc_cycles, rb.timing.noc_cycles);
+        }
+    }
+
+    #[test]
+    fn into_shards_covers_every_vr() {
+        let parts = System::case_study("artifacts").unwrap().into_shards();
+        assert_eq!(parts.plans.len(), 6);
+        assert_eq!(parts.metrics.requests, 0);
+        for (vr, plan) in parts.plans.iter().enumerate() {
+            assert_eq!(plan.vr, vr);
+            assert!(plan.design.is_some(), "VR{vr} must be programmed in the case study");
         }
     }
 }

@@ -10,7 +10,7 @@
 
 use super::{metrics::Metrics, Response, System};
 use anyhow::Result;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 /// A request from a VI client.
@@ -19,30 +19,35 @@ pub struct Request {
     pub vi: u16,
     /// Target VR index.
     pub vr: usize,
-    /// Raw request payload.
-    pub payload: Vec<u8>,
+    /// Raw request payload, shared zero-copy with the client.
+    pub payload: Arc<[u8]>,
     /// Channel the response is sent back on.
     pub reply: mpsc::Sender<Result<Response>>,
 }
 
-/// Channel message: a request or an orderly shutdown.
-enum Msg {
+/// Channel message: a request or an orderly shutdown. Both serving
+/// engines (serial executor and sharded per-VR pipeline) speak this same
+/// client protocol, so one handle type serves both.
+pub(crate) enum Msg {
     Req(Request),
     Shutdown,
 }
 
-/// Handle used by clients to talk to the engine.
+/// Handle used by clients to talk to a serving engine (serial or
+/// sharded — both accept the same request envelope).
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<Msg>,
+    pub(crate) tx: mpsc::Sender<Msg>,
 }
 
 impl EngineHandle {
-    /// Submit and wait for the response.
-    pub fn call(&self, vi: u16, vr: usize, payload: Vec<u8>) -> Result<Response> {
+    /// Submit and wait for the response. The payload is shared with the
+    /// engine as an `Arc<[u8]>`: a `Vec<u8>` moves in without copying, and
+    /// clients reusing one buffer across calls pay only a refcount bump.
+    pub fn call(&self, vi: u16, vr: usize, payload: impl Into<Arc<[u8]>>) -> Result<Response> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Req(Request { vi, vr, payload, reply }))
+            .send(Msg::Req(Request { vi, vr, payload: payload.into(), reply }))
             .map_err(|_| anyhow::anyhow!("engine stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?
     }
@@ -156,6 +161,7 @@ mod tests {
         let engine = Engine::start(|| System::case_study("artifacts")).unwrap();
         let h = engine.handle();
         assert!(h.call(1, 3, vec![0; 16]).is_err()); // VI1 does not own VR3
+        assert!(h.call(1, 99, vec![0; 16]).is_err()); // VR99 does not exist
         assert!(h.call(2, 1, vec![0; 16]).is_ok()); // VI2 owns VR1 (fft)
         engine.stop();
     }

@@ -1,0 +1,351 @@
+//! Per-VR execution shards + the shared synchronized core.
+//!
+//! The paper's space-sharing claim is that independent VRs serve
+//! independent tenants *concurrently*. To make the software request path
+//! match that architecture, it is factored into:
+//!
+//! - [`ShardPlan`] — everything one VR needs to serve its own requests
+//!   (programmed design, owner VI for the access-monitor check, streaming
+//!   wiring, NoC hop count for the IO-trip model), snapshotted from the
+//!   hypervisor. Serving against a plan touches no shared state.
+//! - [`SharedCore`] — the only state requests from different VRs contend
+//!   on: the arrival clock + entry point ([`TimingCore`]) and the
+//!   cycle-accurate NoC. The two halves have disjoint users (admission
+//!   never touches the NoC; streaming never touches timing), so the
+//!   sharded engine keeps the timing core *unlocked* inside its single
+//!   dispatcher thread and guards only the NoC with a mutex.
+//! - [`CoreGate`] — how an engine hands the shared NoC to the request
+//!   path: the serial engine passes its `SharedCore` straight through,
+//!   the sharded engine's workers lock `Mutex<NocSim>` only inside the
+//!   gate (i.e. only for on-chip streaming hops, FPU -> AES in the case
+//!   study).
+//!
+//! [`serve_admitted`] is the single request-path implementation both the
+//! serial [`super::server::Engine`] and the sharded
+//! [`super::sharded::ShardedEngine`] execute, so the two engines differ
+//! only in dispatch — which is what lets the equivalence tests hold their
+//! responses and metrics identical on the same trace.
+
+use super::metrics::{Metrics, RequestTiming};
+use super::timing::{Admission, TimingCore};
+use super::{Response, FLIT_PAYLOAD_BYTES};
+use crate::accel;
+use crate::cloud::{IoConfig, Scheme};
+use crate::hypervisor::{Hypervisor, VrStatus};
+use crate::noc::{hop_count, segment_message, NocSim, Payload};
+use crate::runtime::Runtime;
+use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+/// The shared half of a serving engine: arrival clock + entry point + NoC.
+/// Everything else on the request path is per-shard and runs concurrently.
+/// The sharded engine splits the two halves (timing stays unlocked in its
+/// dispatcher; the NoC goes behind a mutex) since their users are disjoint.
+pub struct SharedCore {
+    /// Cycle-accurate NoC (entered only for on-chip streaming hops).
+    pub noc: NocSim,
+    /// Deterministic admission / arrival-clock accounting.
+    pub timing: TimingCore,
+}
+
+/// How the request path reaches the shared NoC for a streaming hop. The
+/// serial engine owns the [`SharedCore`] outright and passes its NoC
+/// through; the sharded engine's workers lock a `Mutex<NocSim>` only
+/// inside the gate.
+pub trait CoreGate {
+    /// Run `f` with exclusive access to the shared NoC.
+    fn with_noc<R, F: FnOnce(&mut NocSim) -> R>(&mut self, f: F) -> R;
+}
+
+impl CoreGate for SharedCore {
+    fn with_noc<R, F: FnOnce(&mut NocSim) -> R>(&mut self, f: F) -> R {
+        f(&mut self.noc)
+    }
+}
+
+impl CoreGate for &Mutex<NocSim> {
+    fn with_noc<R, F: FnOnce(&mut NocSim) -> R>(&mut self, f: F) -> R {
+        f(&mut self.lock().expect("shared NoC poisoned"))
+    }
+}
+
+/// Immutable description of one VR's serving shard, snapshotted from the
+/// hypervisor. A request served against a plan needs the shared core only
+/// for admission and streaming.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// VR index this shard serves.
+    pub vr: usize,
+    /// Programmed design, if any (`None` shards error on every request).
+    pub design: Option<String>,
+    /// Owning VI — the access-monitor check compares against this.
+    pub owner_vi: Option<u16>,
+    /// Streaming destination VR (present only if that VR is programmed).
+    pub stream_dest: Option<usize>,
+    /// Design programmed in the streaming destination.
+    pub dest_design: Option<String>,
+    /// NoC routers between the shell entry and this VR (IO-trip model).
+    pub hops: u32,
+}
+
+impl ShardPlan {
+    /// Snapshot VR `vr`'s shard from the hypervisor + NoC state.
+    pub fn snapshot(hv: &Hypervisor, noc: &NocSim, vr: usize) -> ShardPlan {
+        let design_of = |v: usize| match &hv.vrs[v].status {
+            VrStatus::Programmed { design, .. } => Some(design.clone()),
+            _ => None,
+        };
+        let owner_of = |v: usize| match &hv.vrs[v].status {
+            VrStatus::Programmed { vi, .. } => Some(*vi),
+            _ => None,
+        };
+        let owner_vi = owner_of(vr);
+        // Stream only to a programmed region of the *same tenant*: a
+        // stale `stream_dest` must never chain into a region that was
+        // released and re-allocated to someone else.
+        let stream_dest = hv.vrs[vr]
+            .stream_dest
+            .filter(|&d| d != vr && design_of(d).is_some() && owner_of(d) == owner_vi);
+        ShardPlan {
+            vr,
+            design: design_of(vr),
+            owner_vi,
+            stream_dest,
+            dest_design: stream_dest.and_then(design_of),
+            // Hop count depends only on the VR's router, not the VI.
+            hops: hop_count(&noc.header_for(0, vr), 0),
+        }
+    }
+
+    /// Access-monitor check, mirroring the monitor at VR ingress (§IV-C):
+    /// an unprogrammed VR errors without counting as a rejection; a foreign
+    /// VI is counted into `metrics.rejected` and refused.
+    pub fn check_access(&self, vi: u16, metrics: &mut Metrics) -> Result<()> {
+        if self.design.is_none() {
+            bail!("VR{} has no programmed design", self.vr);
+        }
+        if self.owner_vi != Some(vi) {
+            metrics.rejected += 1;
+            bail!("VI{vi} does not own VR{} (access monitor)", self.vr);
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed handles the request path executes against (shared by every
+/// shard; the runtime is stateless after construction).
+pub struct ShardEnv<'a> {
+    /// Accelerator execution runtime.
+    pub runtime: &'a Runtime,
+    /// IO-path timing model configuration.
+    pub io_cfg: &'a IoConfig,
+}
+
+/// An admitted request as handed to a shard.
+pub struct ShardRequest<'a> {
+    /// Requesting virtual instance.
+    pub vi: u16,
+    /// Raw payload bytes (zero-copy view of the client's shared buffer).
+    pub payload: &'a [u8],
+    /// Admission ticket from the shared timing core.
+    pub adm: Admission,
+}
+
+/// Serve an already access-checked, already admitted request on its shard.
+///
+/// Accelerator compute runs entirely outside the shared core; the gate is
+/// entered exactly once if (and only if) the shard streams on-chip to a
+/// destination VR. Timing and byte counters land in the caller's `metrics`
+/// (the serial engine passes the system aggregate, the sharded engine a
+/// per-shard accumulator merged at shutdown).
+pub fn serve_admitted<G: CoreGate>(
+    req: ShardRequest<'_>,
+    plan: &ShardPlan,
+    env: &ShardEnv<'_>,
+    gate: &mut G,
+    metrics: &mut Metrics,
+) -> Result<Response> {
+    let ShardRequest { vi, payload, mut adm } = req;
+    let Some(design) = plan.design.as_deref() else {
+        bail!("VR{} has no programmed design", plan.vr);
+    };
+
+    // --- modeled host->FPGA IO trip (Fig 14 path), per-request RNG ---
+    let io_us =
+        env.io_cfg.io_trip_us(Scheme::MultiTenant, plan.hops, adm.queue_wait_us, &mut adm.rng);
+
+    // --- real compute on the shard's accelerator ---
+    // `compute_us` times only accelerator execution: the gated section
+    // below (lock wait + NoC cycle simulation) is excluded, so the metric
+    // means the same thing on the serial and the sharded engine.
+    let t0 = std::time::Instant::now();
+    let inputs = accel::inputs_from_payload(design, payload)?;
+    let mut outputs = env.runtime.execute(design, &inputs)?;
+    let mut path = vec![design.to_string()];
+    let mut noc_cycles = 0u64;
+    let mut compute_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    // --- optional on-chip streaming hop (enters the shared NoC) ---
+    if let (Some(dst), Some(dst_design)) = (plan.stream_dest, plan.dest_design.as_deref()) {
+        let stream_bytes = Payload::from(outputs[0].to_bytes());
+        let (cycles, received) = gate.with_noc(|noc| -> Result<(u64, Vec<u8>)> {
+            let cycles = stream_hop(noc, vi, plan.vr, dst, &stream_bytes)?;
+            Ok((cycles, collect_delivered(noc, dst)))
+        })?;
+        noc_cycles = cycles;
+        let t1 = std::time::Instant::now();
+        let ins = accel::inputs_from_payload(dst_design, &received)?;
+        outputs = env.runtime.execute(dst_design, &ins)?;
+        path.push(dst_design.to_string());
+        compute_us += t1.elapsed().as_secs_f64() * 1e6;
+    }
+
+    let bytes_out = outputs.iter().map(|t| t.data.len() * 4).sum();
+    let timing = RequestTiming {
+        io_us,
+        noc_cycles,
+        compute_us,
+        bytes_in: payload.len(),
+        bytes_out,
+    };
+    metrics.record(&timing, env.io_cfg.noc_clock_mhz);
+    Ok(Response { outputs, path, timing })
+}
+
+/// Stream `bytes` from `src` VR to `dst` VR over the NoC: the direct link
+/// if one was actually wired via [`NocSim::wire_direct`], else routed
+/// flits. The flits are zero-copy windows into `bytes`. Returns cycles
+/// taken to drain.
+pub fn stream_hop(
+    noc: &mut NocSim,
+    vi: u16,
+    src: usize,
+    dst: usize,
+    bytes: &Payload,
+) -> Result<u64> {
+    let header = noc.header_for(vi, dst);
+    let flits = segment_message(header, bytes.clone(), FLIT_PAYLOAD_BYTES, 0);
+    let start = noc.cycle();
+    let direct = noc.has_direct(src, dst);
+    for f in flits {
+        if direct {
+            noc.send_direct(src, header, f.payload, f.seq);
+        } else {
+            noc.send(src, header, f.payload, f.seq);
+        }
+    }
+    if !noc.drain(1_000_000) {
+        bail!("NoC failed to drain while streaming {src}->{dst}");
+    }
+    Ok(noc.cycle() - start)
+}
+
+/// Pop all delivered payload bytes at a VR (in order).
+pub fn collect_delivered(noc: &mut NocSim, vr: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    while let Some(f) = noc.vrs[vr].delivered.pop_front() {
+        out.extend_from_slice(&f.payload);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::System;
+    use crate::noc::Topology;
+
+    #[test]
+    fn plans_snapshot_the_case_study() {
+        let sys = System::case_study("artifacts").unwrap();
+        let plans: Vec<ShardPlan> = (0..sys.hv.vrs.len())
+            .map(|vr| ShardPlan::snapshot(&sys.hv, &sys.core.noc, vr))
+            .collect();
+        assert_eq!(plans.len(), 6);
+        assert!(plans.iter().all(|p| p.design.is_some()));
+        // Only the FPU shard streams, into AES (index 3).
+        let streaming: Vec<&ShardPlan> =
+            plans.iter().filter(|p| p.stream_dest.is_some()).collect();
+        assert_eq!(streaming.len(), 1);
+        assert_eq!(streaming[0].design.as_deref(), Some("fpu"));
+        assert_eq!(streaming[0].stream_dest, Some(3));
+        assert_eq!(streaming[0].dest_design.as_deref(), Some("aes"));
+        // Hop counts grow along the column (router 0 is the shell entry).
+        assert!(plans[0].hops <= plans[5].hops);
+    }
+
+    #[test]
+    fn check_access_counts_only_foreign_rejections() {
+        let sys = System::case_study("artifacts").unwrap();
+        let plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 3); // AES, VI3
+        let mut m = Metrics::default();
+        assert!(plan.check_access(3, &mut m).is_ok());
+        assert_eq!(m.rejected, 0);
+        assert!(plan.check_access(1, &mut m).is_err());
+        assert_eq!(m.rejected, 1);
+        // Unprogrammed shard: error, but not an access-monitor rejection.
+        let empty = ShardPlan {
+            vr: 0,
+            design: None,
+            owner_vi: None,
+            stream_dest: None,
+            dest_design: None,
+            hops: 1,
+        };
+        assert!(empty.check_access(1, &mut m).is_err());
+        assert_eq!(m.rejected, 1);
+    }
+
+    #[test]
+    fn released_stream_dest_is_neither_planned_nor_wired() {
+        let mut sys = System::case_study("artifacts").unwrap();
+        // Tear down VI3's AES region: the FPU shard must stop chaining
+        // into VR3 even though its Wrapper registers still name it, and
+        // the direct link must be unwired so a future tenant in VR3 can
+        // never be streamed to.
+        sys.hv.release_vr(3, 3, &mut sys.core.noc).unwrap();
+        let plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 2);
+        assert_eq!(plan.stream_dest, None);
+        assert_eq!(plan.dest_design, None);
+        assert!(!sys.core.noc.has_direct(2, 3), "release must unwire the direct link");
+        let resp = sys.submit(3, 2, &[1u8; 32]).unwrap();
+        assert_eq!(resp.path, vec!["fpu".to_string()]);
+        assert_eq!(resp.timing.noc_cycles, 0);
+    }
+
+    #[test]
+    fn reallocated_stream_dest_of_another_tenant_is_not_chained() {
+        let mut sys = System::case_study("artifacts").unwrap();
+        sys.hv.release_vr(3, 3, &mut sys.core.noc).unwrap();
+        // A new tenant takes over the region (same physical VR index).
+        let intruder = sys.hv.create_vi("intruder");
+        let vr = sys.hv.allocate_vr(intruder, &mut sys.core.noc).unwrap();
+        assert_eq!(vr, 3, "free pool must hand back the released region");
+        sys.hv.program_vr(intruder, 3, "aes", None).unwrap();
+        // FPU's stale stream_dest points at a foreign owner: no chaining.
+        let plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 2);
+        assert_eq!(plan.stream_dest, None, "must not stream into a foreign VR");
+        let resp = sys.submit(3, 2, &[1u8; 32]).unwrap();
+        assert_eq!(resp.path, vec!["fpu".to_string()]);
+    }
+
+    #[test]
+    fn stream_hop_uses_wired_direct_link_only() {
+        // Two VRs on router 1 of a 3-router column; wire 2 -> 3 directly.
+        let mut noc = NocSim::new(Topology::single_column(3));
+        for vr in 0..6 {
+            noc.assign_vr(vr, 3);
+        }
+        noc.wire_direct(2, 3).unwrap();
+        let bytes = Payload::from(vec![7u8; 64]);
+        let direct_cycles = stream_hop(&mut noc, 3, 2, 3, &bytes).unwrap();
+        assert_eq!(collect_delivered(&mut noc, 3), vec![7u8; 64]);
+        assert_eq!(noc.stats.direct_delivered, 16); // 64 B / 4 B-per-flit
+        // The reverse direction is NOT wired: it must take the routed path.
+        let routed_cycles = stream_hop(&mut noc, 3, 3, 2, &bytes).unwrap();
+        assert_eq!(collect_delivered(&mut noc, 2), vec![7u8; 64]);
+        assert_eq!(noc.stats.direct_delivered, 16, "routed path must not use the link");
+        assert_eq!(noc.stats.delivered, 16, "reverse stream must take the routed path");
+        assert!(routed_cycles >= direct_cycles, "router traversal adds pipeline stages");
+    }
+}

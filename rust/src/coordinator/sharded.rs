@@ -1,0 +1,247 @@
+//! The sharded serving engine: a parallel per-VR request pipeline.
+//!
+//! This is the paper's space-sharing realized in the server. Where the
+//! serial [`super::server::Engine`] funnels every tenant through one
+//! executor thread that owns the whole system, this engine splits it:
+//!
+//! ```text
+//!  clients ──► dispatcher ──┬─► VR0 queue ─► worker 0 (compute) ─┐
+//!   (handles)  rid + access │   ...                              │ replies
+//!              + admission  └─► VR5 queue ─► worker 5 (compute) ─┘
+//!              (TimingCore,                      │
+//!               unlocked)      (streaming hops only)
+//!                                          Mutex<NocSim>
+//! ```
+//!
+//! - The **dispatcher** assigns request ids in arrival order, runs the
+//!   access-monitor check against the shard plans, and performs
+//!   deterministic admission (so queue waits reproduce the serial
+//!   engine's on the same trace) before forwarding to the target VR's
+//!   work queue. It *owns* the timing core — admission is single-threaded
+//!   by construction, so it takes no lock and never stalls behind a
+//!   worker's streaming hop.
+//! - One **worker per VR shard** (the `runtime::SweepRunner` work-queue
+//!   shape, pinned per shard because requests to one VR must stay FIFO)
+//!   runs accelerator compute concurrently with every other shard,
+//!   locking the shared NoC only for on-chip streaming hops.
+//! - Each worker accumulates its own [`Metrics`]; [`Metrics::merge`] folds
+//!   them (plus the dispatcher's rejection counts) at shutdown, so totals
+//!   equal the serial engine's on the same request trace
+//!   (`rust/tests/sharded_serving.rs` asserts exactly that).
+
+use super::metrics::Metrics;
+use super::server::{EngineHandle, Msg, Request};
+use super::shard::{serve_admitted, ShardEnv, ShardPlan, ShardRequest, SharedCore};
+use super::timing::Admission;
+use super::{Response, System};
+use crate::cloud::IoConfig;
+use crate::noc::NocSim;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A request bound for a shard worker, access-checked and admitted.
+struct Work {
+    vi: u16,
+    payload: Arc<[u8]>,
+    adm: Admission,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+/// Client handle onto the sharded engine: the exact same request
+/// envelope as the serial engine's, so A/B drivers and clients need no
+/// per-engine plumbing.
+pub type ShardedHandle = EngineHandle;
+
+/// The sharded engine: dispatcher thread + one worker thread per VR shard.
+pub struct ShardedEngine {
+    handle: ShardedHandle,
+    dispatcher: Option<JoinHandle<Metrics>>,
+}
+
+impl ShardedEngine {
+    /// Build the [`System`] via `builder`, split it into per-VR shards
+    /// ([`System::into_shards`]), and boot the dispatcher + worker pool.
+    ///
+    /// The tenancy is frozen while the engine serves; stop the engine and
+    /// rebuild to reconfigure VRs.
+    pub fn start<F>(builder: F) -> Result<ShardedEngine>
+    where
+        F: FnOnce() -> Result<System>,
+    {
+        let parts = builder()?.into_shards();
+        // Split the shared core: the dispatcher owns the timing half
+        // outright (admission is single-threaded); only the NoC — touched
+        // by whichever worker streams — needs a mutex.
+        let SharedCore { noc, mut timing } = parts.core;
+        let noc = Arc::new(Mutex::new(noc));
+        let io_cfg: IoConfig = parts.io_cfg;
+
+        // One FIFO work queue + worker thread per VR shard.
+        let mut shard_txs: Vec<mpsc::Sender<Work>> = Vec::with_capacity(parts.plans.len());
+        let mut workers: Vec<JoinHandle<Metrics>> = Vec::with_capacity(parts.plans.len());
+        for plan in &parts.plans {
+            let (wtx, wrx) = mpsc::channel::<Work>();
+            shard_txs.push(wtx);
+            workers.push(Self::spawn_worker(
+                plan.clone(),
+                wrx,
+                Arc::clone(&noc),
+                Arc::clone(&parts.runtime),
+                io_cfg,
+            ));
+        }
+
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let plans = parts.plans;
+        let mut metrics = parts.metrics;
+        let dispatcher = std::thread::spawn(move || {
+            let mut next_rid = 0u64;
+            while let Ok(msg) = rx.recv() {
+                let Msg::Req(Request { vi, vr, payload, reply }) = msg else { break };
+                // Request ids are consumed in arrival order (even by
+                // rejected requests), mirroring the serial engine, so both
+                // engines draw identical per-request timing on one trace.
+                let rid = next_rid;
+                next_rid += 1;
+                let Some(plan) = plans.get(vr) else {
+                    let _ = reply.send(Err(anyhow::anyhow!("VR{vr} does not exist")));
+                    continue;
+                };
+                if let Err(e) = plan.check_access(vi, &mut metrics) {
+                    let _ = reply.send(Err(e));
+                    continue;
+                }
+                let adm = timing.admit(rid);
+                let _ = shard_txs[vr].send(Work { vi, payload, adm, reply });
+            }
+            // Close the shard queues; workers drain what is already queued,
+            // then hand back their per-shard metrics for the merge. A
+            // worker panic must surface (via the dispatcher's own join in
+            // `stop`), never silently undercount the merged totals.
+            drop(shard_txs);
+            for w in workers {
+                metrics.merge(&w.join().expect("shard worker panicked"));
+            }
+            metrics
+        });
+
+        Ok(ShardedEngine { handle: EngineHandle { tx }, dispatcher: Some(dispatcher) })
+    }
+
+    /// One shard's worker loop: serve admitted requests FIFO, accumulate
+    /// per-shard metrics, return them when the queue closes.
+    fn spawn_worker(
+        plan: ShardPlan,
+        wrx: mpsc::Receiver<Work>,
+        noc: Arc<Mutex<NocSim>>,
+        runtime: Arc<Runtime>,
+        io_cfg: IoConfig,
+    ) -> JoinHandle<Metrics> {
+        std::thread::spawn(move || {
+            let mut metrics = Metrics::default();
+            let mut gate = &*noc;
+            let env = ShardEnv { runtime: runtime.as_ref(), io_cfg: &io_cfg };
+            while let Ok(w) = wrx.recv() {
+                let resp = serve_admitted(
+                    ShardRequest { vi: w.vi, payload: &w.payload, adm: w.adm },
+                    &plan,
+                    &env,
+                    &mut gate,
+                    &mut metrics,
+                );
+                let _ = w.reply.send(resp);
+            }
+            metrics
+        })
+    }
+
+    /// A new client handle onto the engine.
+    pub fn handle(&self) -> ShardedHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the engine: already-queued requests finish, workers join, and
+    /// the merged metrics (per-shard accumulators + dispatcher rejections)
+    /// come back. Outstanding handles error on subsequent calls.
+    pub fn stop(mut self) -> Metrics {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        drop(self.handle);
+        self.dispatcher.take().unwrap().join().expect("dispatcher panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::CASE_STUDY;
+
+    #[test]
+    fn concurrent_tenants_all_served_in_parallel() {
+        let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+        let mut joins = Vec::new();
+        let payload: Arc<[u8]> =
+            (0..128u32).map(|i| (i * 7 % 256) as u8).collect::<Vec<u8>>().into();
+        for spec in CASE_STUDY.iter().filter(|s| s.name != "fpu") {
+            let h = engine.handle();
+            let p = Arc::clone(&payload);
+            let (vi, vr) = (spec.vi, spec.vr);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let resp = h.call(vi, vr, Arc::clone(&p)).unwrap();
+                    assert!(!resp.outputs.is_empty());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 25);
+        assert_eq!(metrics.rejected, 0);
+        assert_eq!(metrics.bytes_in, 25 * 128);
+    }
+
+    #[test]
+    fn engine_rejects_foreign_access_without_dying() {
+        let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+        let h = engine.handle();
+        assert!(h.call(1, 3, vec![0; 16]).is_err()); // VI1 does not own VR3
+        assert!(h.call(1, 99, vec![0; 16]).is_err()); // VR99 does not exist
+        assert!(h.call(2, 1, vec![0; 16]).is_ok()); // VI2 owns VR1 (fft)
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 1);
+        assert_eq!(metrics.rejected, 1, "nonexistent VR is an error, not a rejection");
+    }
+
+    #[test]
+    fn streaming_shard_enters_shared_core_safely() {
+        // FPU (VR2) streams into AES (VR3) while AES serves its own tenant
+        // traffic concurrently: the gate must keep stream+collect atomic.
+        let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+        let fpu = engine.handle();
+        let aes = engine.handle();
+        let f = std::thread::spawn(move || {
+            (0..6).map(|_| fpu.call(3, 2, vec![9u8; 64]).unwrap()).collect::<Vec<_>>()
+        });
+        let a = std::thread::spawn(move || {
+            (0..6).map(|_| aes.call(3, 3, vec![1u8; 64]).unwrap()).collect::<Vec<_>>()
+        });
+        let fpu_resps = f.join().unwrap();
+        let aes_resps = a.join().unwrap();
+        for r in &fpu_resps {
+            assert_eq!(r.path, vec!["fpu".to_string(), "aes".to_string()]);
+            assert!(r.timing.noc_cycles > 0);
+            // Identical payloads must produce identical chained outputs
+            // regardless of interleaving with direct AES traffic.
+            assert_eq!(r.outputs[0].data, fpu_resps[0].outputs[0].data);
+        }
+        for r in &aes_resps {
+            assert_eq!(r.path, vec!["aes".to_string()]);
+            assert_eq!(r.outputs[0].data, aes_resps[0].outputs[0].data);
+        }
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 12);
+    }
+}

@@ -11,7 +11,7 @@
 //! Keep this file boring: any behavioral change here must be mirrored in
 //! [`super::sim`] and vice versa.
 
-use super::packet::{Flit, Header, VrSide};
+use super::packet::{Flit, Header, Payload, VrSide};
 use super::routing::{route, OutPort};
 use super::sim::{NocStats, VrState};
 use super::topology::Topology;
@@ -108,9 +108,23 @@ impl FixpointSim {
         self.vrs[vr].owner_vi = Some(vi);
     }
 
-    /// Release a VR (its access monitor rejects everything again).
+    /// Release a VR: access monitor closes and direct links from/into it
+    /// are unwired, dropping queued flits as rejected (mirrors
+    /// [`super::sim::NocSim::release_vr`]).
     pub fn release_vr(&mut self, vr: usize) {
         self.vrs[vr].owner_vi = None;
+        for src in 0..self.direct.len() {
+            let linked = src == vr || self.direct[src] == Some(vr);
+            if linked && self.direct[src].is_some() {
+                self.direct[src] = None;
+                while self.vrs[src].direct_out.pop_front().is_some() {
+                    self.active -= 1;
+                    self.stats.rejected += 1;
+                    self.vrs[src].rejected += 1;
+                }
+            }
+        }
+        self.direct_srcs.retain(|&s| self.direct[s].is_some());
     }
 
     /// Wire a direct VR->VR streaming link (must be physically adjacent).
@@ -130,15 +144,28 @@ impl FixpointSim {
         Header::new(vi, self.topo.router_of_vr(dst_vr), self.topo.side_of_vr(dst_vr))
     }
 
+    /// Whether a direct streaming link `src` -> `dst` has been wired (see
+    /// [`FixpointSim::wire_direct`]); same contract as the batched engine.
+    pub fn has_direct(&self, src: usize, dst: usize) -> bool {
+        self.direct.get(src).copied().flatten() == Some(dst)
+    }
+
     /// Enqueue a flit from `src_vr` into the NoC. Returns the flit id.
-    pub fn send(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+    /// Accepts anything convertible into a shared [`Payload`].
+    pub fn send(
+        &mut self,
+        src_vr: usize,
+        header: Header,
+        payload: impl Into<Payload>,
+        seq: u32,
+    ) -> u64 {
         let id = self.next_flit_id;
         self.next_flit_id += 1;
         self.active += 1;
         self.vrs[src_vr].out_queue.push_back(Flit {
             header,
             seq,
-            payload,
+            payload: payload.into(),
             enqueued_at: self.cycle,
             id,
         });
@@ -146,7 +173,13 @@ impl FixpointSim {
     }
 
     /// Enqueue a flit on `src_vr`'s direct link.
-    pub fn send_direct(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+    pub fn send_direct(
+        &mut self,
+        src_vr: usize,
+        header: Header,
+        payload: impl Into<Payload>,
+        seq: u32,
+    ) -> u64 {
         assert!(self.direct[src_vr].is_some(), "VR{src_vr} has no direct link");
         let id = self.next_flit_id;
         self.next_flit_id += 1;
@@ -154,7 +187,7 @@ impl FixpointSim {
         self.vrs[src_vr].direct_out.push_back(Flit {
             header,
             seq,
-            payload,
+            payload: payload.into(),
             enqueued_at: self.cycle,
             id,
         });

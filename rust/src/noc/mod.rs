@@ -17,7 +17,7 @@ pub mod topology;
 pub mod traffic;
 
 pub use fixpoint::FixpointSim;
-pub use packet::{segment_message, Flit, Header, VrSide};
+pub use packet::{segment_message, Flit, Header, Payload, VrSide};
 pub use routing::{hop_count, route, OutPort};
 pub use sim::{NocSim, NocStats, VrState};
 pub use topology::{Flavor, Topology};

@@ -11,8 +11,16 @@
 //! - `VI_ID` identifies the owning virtual instance (up to 1024 VIs). It is
 //!   not used for routing — only the destination VR's access monitor reads
 //!   it (§IV-C).
+//!
+//! The data plane is **zero-copy**: a message body lives once behind an
+//! `Arc`, and every flit carved from it by [`segment_message`] holds a
+//! [`Payload`] window into that shared buffer. Cloning a payload (which the
+//! engines and the serving shards do freely) bumps a refcount instead of
+//! copying bytes.
 
 use std::fmt;
+use std::ops::Deref;
+use std::sync::{Arc, OnceLock};
 
 /// Width of the fixed packet header in bits.
 pub const HEADER_BITS: u32 = 16;
@@ -77,17 +85,128 @@ impl fmt::Display for Header {
     }
 }
 
+/// The process-wide shared empty buffer (so empty payloads never allocate).
+fn empty_buf() -> Arc<[u8]> {
+    static EMPTY: OnceLock<Arc<[u8]>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::from(&[] as &[u8])).clone()
+}
+
+/// A shared, cheaply-cloneable window over payload bytes.
+///
+/// Backed by an `Arc<[u8]>` plus a `[start, end)` range: sub-slicing with
+/// [`Payload::slice`] and cloning are both O(1) and never copy the bytes.
+/// Dereferences to `&[u8]`, so all byte-level consumers read it like a
+/// plain slice.
+#[derive(Clone)]
+pub struct Payload {
+    buf: Arc<[u8]>,
+    start: usize,
+    end: usize,
+}
+
+impl Payload {
+    /// The empty payload (shared zero-length buffer; no allocation).
+    pub fn empty() -> Payload {
+        Payload { buf: empty_buf(), start: 0, end: 0 }
+    }
+
+    /// Full window over a shared buffer (refcount bump only).
+    pub fn new(buf: Arc<[u8]>) -> Payload {
+        let end = buf.len();
+        Payload { buf, start: 0, end }
+    }
+
+    /// Sub-window `[start, end)` of this payload, relative to this window.
+    /// Shares the backing buffer; panics if the range is out of bounds.
+    pub fn slice(&self, start: usize, end: usize) -> Payload {
+        assert!(start <= end, "payload slice inverted ({start} > {end})");
+        let abs_start = self.start + start;
+        let abs_end = self.start + end;
+        assert!(abs_end <= self.end, "payload slice out of bounds");
+        Payload { buf: Arc::clone(&self.buf), start: abs_start, end: abs_end }
+    }
+
+    /// The viewed bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.start..self.end]
+    }
+}
+
+impl Deref for Payload {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Self {
+        Payload::empty()
+    }
+}
+
+impl fmt::Debug for Payload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Payload({:?})", self.as_slice())
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Payload {}
+
+impl PartialEq<[u8]> for Payload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Payload {
+        if v.is_empty() {
+            return Payload::empty();
+        }
+        Payload::new(Arc::from(v))
+    }
+}
+
+impl From<Arc<[u8]>> for Payload {
+    fn from(buf: Arc<[u8]>) -> Payload {
+        Payload::new(buf)
+    }
+}
+
+impl From<&[u8]> for Payload {
+    fn from(bytes: &[u8]) -> Payload {
+        if bytes.is_empty() {
+            return Payload::empty();
+        }
+        Payload::new(Arc::from(bytes))
+    }
+}
+
 /// A single flit: the unit the routers move. Each flit carries the full
 /// header (single-flit NoC, like Hoplite) plus up to `payload_width` bits
-/// of payload, abstracted as a byte vector for the compute path.
+/// of payload, abstracted as a shared byte window for the compute path.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Flit {
     /// Full destination header (single-flit NoC: every flit carries it).
     pub header: Header,
     /// Sequence number within its parent message (for reassembly checks).
     pub seq: u32,
-    /// Payload bytes carried by this flit (<= payload width / 8).
-    pub payload: Vec<u8>,
+    /// Payload bytes carried by this flit (<= payload width / 8); a
+    /// zero-copy window into the parent message's shared buffer.
+    pub payload: Payload,
     /// Simulator bookkeeping: cycle the flit entered its source queue.
     pub enqueued_at: u64,
     /// Simulator bookkeeping: globally unique flit id.
@@ -95,25 +214,38 @@ pub struct Flit {
 }
 
 /// Split a message's bytes into flits of `payload_bytes` each, all carrying
-/// the same destination header (the Wrapper module's job in §IV-C).
+/// the same destination header (the Wrapper module's job in §IV-C). Every
+/// flit's payload is a window into the message's shared buffer — no bytes
+/// are copied.
 pub fn segment_message(
     header: Header,
-    data: &[u8],
+    data: impl Into<Payload>,
     payload_bytes: usize,
     first_id: u64,
 ) -> Vec<Flit> {
     assert!(payload_bytes > 0);
+    let data = data.into();
     if data.is_empty() {
-        return vec![Flit { header, seq: 0, payload: Vec::new(), enqueued_at: 0, id: first_id }];
-    }
-    data.chunks(payload_bytes)
-        .enumerate()
-        .map(|(i, chunk)| Flit {
+        return vec![Flit {
             header,
-            seq: i as u32,
-            payload: chunk.to_vec(),
+            seq: 0,
+            payload: Payload::empty(),
             enqueued_at: 0,
-            id: first_id + i as u64,
+            id: first_id,
+        }];
+    }
+    let n = data.len().div_ceil(payload_bytes);
+    (0..n)
+        .map(|i| {
+            let start = i * payload_bytes;
+            let end = (start + payload_bytes).min(data.len());
+            Flit {
+                header,
+                seq: i as u32,
+                payload: data.slice(start, end),
+                enqueued_at: 0,
+                id: first_id + i as u64,
+            }
         })
         .collect()
 }
@@ -174,10 +306,38 @@ mod tests {
     }
 
     #[test]
+    fn payload_windows_share_one_buffer() {
+        let p = Payload::from((0..32u8).collect::<Vec<u8>>());
+        let a = p.slice(0, 8);
+        let b = p.slice(8, 16);
+        assert_eq!(a.as_slice(), &(0..8u8).collect::<Vec<u8>>()[..]);
+        assert_eq!(b.as_slice(), &(8..16u8).collect::<Vec<u8>>()[..]);
+        // Sub-slicing a sub-slice stays relative.
+        assert_eq!(b.slice(2, 4).as_slice(), &[10, 11]);
+        // Clones are views, not copies: equality is by bytes.
+        assert_eq!(a.clone(), a);
+    }
+
+    #[test]
+    fn empty_payload_is_shared_and_allocation_free() {
+        let a = Payload::empty();
+        let b = Payload::from(Vec::new());
+        assert!(a.is_empty() && b.is_empty());
+        assert_eq!(a, b);
+        assert_eq!(Payload::default(), a);
+    }
+
+    #[test]
+    #[should_panic]
+    fn payload_slice_out_of_bounds_panics() {
+        Payload::from(vec![1, 2, 3]).slice(1, 5);
+    }
+
+    #[test]
     fn segmentation_roundtrip() {
         let h = Header::new(5, 2, VrSide::West);
         let data: Vec<u8> = (0..100).collect();
-        let flits = segment_message(h, &data, 8, 0);
+        let flits = segment_message(h, data.clone(), 8, 0);
         assert_eq!(flits.len(), 13); // ceil(100/8)
         assert!(flits.iter().all(|f| f.header == h));
         assert_eq!(reassemble(&flits), data);
@@ -186,7 +346,7 @@ mod tests {
     #[test]
     fn empty_message_is_one_flit() {
         let h = Header::new(1, 0, VrSide::East);
-        let flits = segment_message(h, &[], 8, 7);
+        let flits = segment_message(h, Vec::<u8>::new(), 8, 7);
         assert_eq!(flits.len(), 1);
         assert!(flits[0].payload.is_empty());
     }
@@ -198,7 +358,7 @@ mod tests {
             let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
             let payload = 1 + rng.below(32) as usize;
             let h = Header::new(3, 1, VrSide::West);
-            assert_eq!(reassemble(&segment_message(h, &data, payload, 0)), data);
+            assert_eq!(reassemble(&segment_message(h, data.clone(), payload, 0)), data);
         });
     }
 }

@@ -43,7 +43,7 @@
 
 use std::collections::VecDeque;
 
-use super::packet::{Flit, Header};
+use super::packet::{Flit, Header, Payload};
 use super::routing::{route, OutPort};
 use super::topology::Topology;
 use crate::util::Summary;
@@ -240,9 +240,25 @@ impl NocSim {
         self.vrs[vr].owner_vi = Some(vi);
     }
 
-    /// Release a VR (its access monitor rejects everything again).
+    /// Release a VR: its access monitor rejects everything again, and any
+    /// direct streaming link from or into it is unwired (the hypervisor
+    /// clears the Wrapper registers on release, so a later tenant in the
+    /// same region can never be streamed to over a stale link). Flits
+    /// still queued on an unwired link are dropped as rejected.
     pub fn release_vr(&mut self, vr: usize) {
         self.vrs[vr].owner_vi = None;
+        for src in 0..self.direct.len() {
+            let linked = src == vr || self.direct[src] == Some(vr);
+            if linked && self.direct[src].is_some() {
+                self.direct[src] = None;
+                while self.vrs[src].direct_out.pop_front().is_some() {
+                    self.active -= 1;
+                    self.stats.rejected += 1;
+                    self.vrs[src].rejected += 1;
+                }
+            }
+        }
+        self.direct_srcs.retain(|&s| self.direct[s].is_some());
     }
 
     /// Wire a direct VR->VR streaming link (must be physically adjacent).
@@ -262,15 +278,30 @@ impl NocSim {
         Header::new(vi, self.topo.router_of_vr(dst_vr), self.topo.side_of_vr(dst_vr))
     }
 
+    /// Whether a direct streaming link `src` -> `dst` has been wired (see
+    /// [`NocSim::wire_direct`]). The serving path derives its direct-vs-
+    /// routed decision from this, never from adjacency alone.
+    pub fn has_direct(&self, src: usize, dst: usize) -> bool {
+        self.direct.get(src).copied().flatten() == Some(dst)
+    }
+
     /// Enqueue a flit from `src_vr` into the NoC. Returns the flit id.
-    pub fn send(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+    /// Accepts anything convertible into a shared [`Payload`] (a `Vec<u8>`
+    /// moves in; a `Payload` window is a refcount bump).
+    pub fn send(
+        &mut self,
+        src_vr: usize,
+        header: Header,
+        payload: impl Into<Payload>,
+        seq: u32,
+    ) -> u64 {
         let id = self.next_flit_id;
         self.next_flit_id += 1;
         self.active += 1;
         self.vrs[src_vr].out_queue.push_back(Flit {
             header,
             seq,
-            payload,
+            payload: payload.into(),
             enqueued_at: self.cycle,
             id,
         });
@@ -278,7 +309,13 @@ impl NocSim {
     }
 
     /// Enqueue a flit on `src_vr`'s direct link.
-    pub fn send_direct(&mut self, src_vr: usize, header: Header, payload: Vec<u8>, seq: u32) -> u64 {
+    pub fn send_direct(
+        &mut self,
+        src_vr: usize,
+        header: Header,
+        payload: impl Into<Payload>,
+        seq: u32,
+    ) -> u64 {
         assert!(self.direct[src_vr].is_some(), "VR{src_vr} has no direct link");
         let id = self.next_flit_id;
         self.next_flit_id += 1;
@@ -286,7 +323,7 @@ impl NocSim {
         self.vrs[src_vr].direct_out.push_back(Flit {
             header,
             seq,
-            payload,
+            payload: payload.into(),
             enqueued_at: self.cycle,
             id,
         });
@@ -660,6 +697,9 @@ mod tests {
         let mut s = sim3();
         // VR2 and VR3 hang off router 1: adjacent, can be wired directly.
         s.wire_direct(2, 3).unwrap();
+        assert!(s.has_direct(2, 3));
+        assert!(!s.has_direct(3, 2), "direct links are unidirectional");
+        assert!(!s.has_direct(0, 1), "unwired pairs have no direct link");
         let h = s.header_for(3, 3);
         let start = s.cycle();
         for i in 0..10 {

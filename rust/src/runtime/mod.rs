@@ -18,6 +18,7 @@ use crate::accel::native;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// A tensor value crossing the runtime boundary (f32 only: the accelerator
 /// models standardize on f32 I/O — byte data is carried as 0..255 floats).
@@ -92,6 +93,14 @@ impl Runtime {
             .map(|&(name, n_inputs)| (name.to_string(), Model { n_inputs }))
             .collect();
         Ok(Runtime { models, artifacts_dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Create a runtime rooted at `dir` behind a shared handle. The
+    /// runtime is stateless after construction (`execute` takes `&self`),
+    /// so the sharded serving engine's workers all execute against one
+    /// instance concurrently.
+    pub fn load_shared(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self::load_dir(dir)?))
     }
 
     /// Names of all registered models, sorted.
@@ -251,6 +260,24 @@ mod tests {
         assert_eq!(rt.model_names().len(), 6);
         assert_eq!(rt.n_inputs("fpu"), Some(3));
         assert_eq!(rt.n_inputs("bogus"), None);
+    }
+
+    #[test]
+    fn shared_runtime_executes_from_many_threads() {
+        let rt = Runtime::load_shared("artifacts").unwrap();
+        let joins: Vec<_> = (0..4)
+            .map(|k| {
+                let rt = Arc::clone(&rt);
+                std::thread::spawn(move || {
+                    let x = vec![k as f32; 64];
+                    rt.execute("fir", &[Tensor::vec1(x), Tensor::vec1(vec![1.0])]).unwrap()
+                })
+            })
+            .collect();
+        for (k, j) in joins.into_iter().enumerate() {
+            let out = j.join().unwrap();
+            assert_eq!(out[0].data, vec![k as f32; 64]);
+        }
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Serial-vs-sharded serving equivalence and contention tests (the
+//! tentpole invariants of the per-VR request pipeline):
+//!
+//! - replaying an identical request trace through the serial engine and
+//!   the sharded engine yields identical per-request outputs, modeled
+//!   timings, and merged `Metrics` totals (requests, rejected, bytes);
+//! - >= 4 client threads per VI hammering the sharded engine concurrently
+//!   lose nothing: every request is served, counters conserve;
+//! - concurrent streaming (FPU -> AES) stays isolated from direct traffic
+//!   to the destination shard.
+
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::coordinator::server::Engine;
+use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::util::Rng;
+use std::sync::Arc;
+
+/// Deterministic request trace over the case-study tenancy:
+/// `(vi, vr, payload)` triples, optionally with foreign-VI requests mixed
+/// in (which both engines must reject identically).
+fn trace(n: usize, seed: u64, with_foreign: bool) -> Vec<(u16, usize, Arc<[u8]>)> {
+    let mut rng = Rng::new(seed);
+    let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
+    (0..n)
+        .map(|_| {
+            let (mut vi, vr) = specs[rng.index(specs.len())];
+            if with_foreign && rng.chance(0.25) {
+                vi = (vi % 5) + 1; // sometimes lands on a foreign VI
+            }
+            let len = 16 + rng.index(240);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            (vi, vr, Arc::from(payload))
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_engine_matches_serial_on_identical_trace() {
+    let t = trace(120, 0xA11CE, true);
+
+    let serial = Engine::start(|| System::case_study("artifacts")).unwrap();
+    let sh = serial.handle();
+    let serial_resps: Vec<_> =
+        t.iter().map(|(vi, vr, p)| sh.call(*vi, *vr, Arc::clone(p))).collect();
+    let serial_metrics = serial.stop();
+
+    let sharded = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let h = sharded.handle();
+    let sharded_resps: Vec<_> =
+        t.iter().map(|(vi, vr, p)| h.call(*vi, *vr, Arc::clone(p))).collect();
+    let sharded_metrics = sharded.stop();
+
+    let mut served = 0u64;
+    for (i, (a, b)) in serial_resps.iter().zip(&sharded_resps).enumerate() {
+        match (a, b) {
+            (Ok(a), Ok(b)) => {
+                served += 1;
+                assert_eq!(a.path, b.path, "request {i}: accelerator path");
+                assert_eq!(a.outputs.len(), b.outputs.len(), "request {i}");
+                for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
+                    assert_eq!(ta.shape, tb.shape, "request {i}: output shape");
+                    assert_eq!(ta.data, tb.data, "request {i}: outputs must be byte-identical");
+                }
+                // Modeled timings are deterministic per request id; real
+                // compute wall time is the only field allowed to differ.
+                assert_eq!(a.timing.io_us, b.timing.io_us, "request {i}: io model");
+                assert_eq!(a.timing.noc_cycles, b.timing.noc_cycles, "request {i}: noc");
+                assert_eq!(a.timing.bytes_in, b.timing.bytes_in, "request {i}");
+                assert_eq!(a.timing.bytes_out, b.timing.bytes_out, "request {i}");
+            }
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!(
+                "request {i}: engines disagree on acceptance (serial ok={}, sharded ok={})",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+    assert!(served > 0, "trace must contain served requests");
+    assert!(serial_metrics.rejected > 0, "trace must contain rejections");
+
+    // Merged metrics totals equal the serial trace exactly.
+    assert_eq!(serial_metrics.requests, sharded_metrics.requests);
+    assert_eq!(serial_metrics.rejected, sharded_metrics.rejected);
+    assert_eq!(serial_metrics.bytes_in, sharded_metrics.bytes_in);
+    assert_eq!(serial_metrics.bytes_out, sharded_metrics.bytes_out);
+    assert_eq!(serial_metrics.requests, served);
+    // Distributions: same sample count, same mean up to merge fp noise.
+    assert_eq!(serial_metrics.io_us.count(), sharded_metrics.io_us.count());
+    assert!((serial_metrics.io_us.mean() - sharded_metrics.io_us.mean()).abs() < 1e-9);
+    assert_eq!(serial_metrics.noc_cycles.max(), sharded_metrics.noc_cycles.max());
+}
+
+#[test]
+fn contention_four_clients_per_vi_conserves_all_requests() {
+    const CLIENTS_PER_VI: usize = 4;
+    const ROUNDS: usize = 3;
+    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let payload: Arc<[u8]> =
+        (0..128u32).map(|i| (i * 7 % 256) as u8).collect::<Vec<u8>>().into();
+    let mut joins = Vec::new();
+    // One spec per VI (skip fpu so VI3 uses its AES region): 5 VIs x 4
+    // clients x 3 rounds.
+    for spec in CASE_STUDY.iter().filter(|s| s.name != "fpu") {
+        for _client in 0..CLIENTS_PER_VI {
+            let h = engine.handle();
+            let p = Arc::clone(&payload);
+            let (vi, vr) = (spec.vi, spec.vr);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..ROUNDS {
+                    let resp = h.call(vi, vr, Arc::clone(&p)).unwrap();
+                    assert!(!resp.outputs.is_empty());
+                    assert!(resp.outputs[0].data.iter().all(|v| v.is_finite()));
+                }
+            }));
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = engine.stop();
+    let expect = (5 * CLIENTS_PER_VI * ROUNDS) as u64;
+    assert_eq!(m.requests, expect);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.bytes_in, expect * 128);
+    assert_eq!(m.io_us.count(), expect);
+}
+
+#[test]
+fn concurrent_streaming_responses_are_reproducible() {
+    // All six shards loaded at once, including the FPU -> AES streaming
+    // chain: per-payload outputs must not depend on scheduling.
+    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let mut joins = Vec::new();
+    for spec in CASE_STUDY.iter() {
+        let h = engine.handle();
+        let (vi, vr) = (spec.vi, spec.vr);
+        let payload: Arc<[u8]> = vec![vr as u8 + 1; 96].into();
+        joins.push(std::thread::spawn(move || {
+            let resps: Vec<_> =
+                (0..4).map(|_| h.call(vi, vr, Arc::clone(&payload)).unwrap()).collect();
+            for r in &resps {
+                assert_eq!(
+                    r.outputs[0].data, resps[0].outputs[0].data,
+                    "same payload to one shard must give one answer"
+                );
+            }
+            resps[0].path.clone()
+        }));
+    }
+    let paths: Vec<Vec<String>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert!(paths.iter().any(|p| p.len() == 2), "the FPU chain must have streamed");
+    let m = engine.stop();
+    assert_eq!(m.requests, 6 * 4);
+    assert_eq!(m.rejected, 0);
+}
