@@ -7,7 +7,7 @@
 use fpga_mt::bench_support::{check, header};
 use fpga_mt::estimate::{router_fmax_mhz, router_power_mw, router_resources, RouterConfig};
 use fpga_mt::device::Device;
-use fpga_mt::noc::{NocSim, Topology};
+use fpga_mt::noc::{NocSim, Payload, Topology};
 use fpga_mt::util::table::{fnum, Table};
 
 fn main() {
@@ -85,7 +85,7 @@ fn main() {
         }
         // End-to-end worst-case path: VR0 -> last VR.
         let h = sim.header_for(1, n - 1);
-        sim.send(0, h, vec![], 0);
+        sim.send(0, h, Payload::empty(), 0);
         sim.drain(10_000);
         println!("{name}: end-to-end latency {} cycles", sim.stats.latency.mean());
     }

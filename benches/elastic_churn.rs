@@ -1,0 +1,257 @@
+//! Elastic tenant churn vs a static allocation — the paper's utilization
+//! headline (§III-A / §V-D) measured on the live sharded engine.
+//!
+//! One seeded churn process (tenants arrive, deploy, grow, shrink,
+//! depart, and drive traffic — `coordinator::churn`) is replayed twice:
+//!
+//! 1. **Elastic**: the engine applies every lifecycle op live — regions
+//!    are reclaimed on departure and re-deployed to later arrivals
+//!    (hot-add / hot-drain of worker shards, reconfiguration windows
+//!    charged to admission).
+//! 2. **Static**: the same demand, but the allocation is fixed at each
+//!    tenant's first deployment — no growth, and no reclamation, so a
+//!    departed tenant's region stays stranded and later arrivals that
+//!    find the pool exhausted are turned away (their requests fail).
+//!
+//! Reported per run: mean *useful* utilization (programmed regions owned
+//! by a still-active tenant / total regions, sampled at every request
+//! instant of the demand trace), requests served, and requests/sec.
+//! The elastic run must beat the static baseline on both utilization and
+//! served requests — `--smoke` enforces the same checks at CI size and
+//! exits non-zero on failure.
+
+use fpga_mt::bench_support::{check, finish, header, smoke_mode};
+use fpga_mt::coordinator::churn::{self, ChurnConfig, ChurnEvent};
+use fpga_mt::coordinator::design_footprint;
+use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::device::Device;
+use fpga_mt::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
+use fpga_mt::noc::NocSim;
+use fpga_mt::placer::case_study_floorplan;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A shadow world: the same hypervisor/NoC state the engine holds,
+/// mirrored outside it so the bench can sample utilization per event.
+struct Shadow {
+    hv: Hypervisor,
+    noc: NocSim,
+}
+
+fn shadow() -> Shadow {
+    let device = Device::vu9p();
+    let (topo, fp) = case_study_floorplan(&device).expect("case-study floorplan");
+    let noc = NocSim::new(topo.clone());
+    Shadow { hv: Hypervisor::new(topo, fp, Policy::AdjacentFirst), noc }
+}
+
+/// Transform the elastic trace into its static-allocation counterpart,
+/// aligned 1:1 with the original (dropped ops become `None`):
+/// - `CreateVi` is kept (VI numbering must match the demand trace);
+/// - each tenant keeps only its FIRST allocate+program, re-resolved
+///   against a static shadow world (indices differ once reclamation is
+///   off); tenants that find the pool exhausted are turned away;
+/// - `Grow`/`Wire`/`Release` are dropped: a static allocation cannot
+///   resize, and never returns regions to the pool;
+/// - requests are redirected to the tenant's static region when it has
+///   one, else left aimed at the elastic-world target (where they fail —
+///   the turned-away tenant's traffic).
+fn static_baseline(events: &[ChurnEvent]) -> Vec<Option<ChurnEvent>> {
+    let mut world = shadow();
+    let mut static_vr: HashMap<u16, usize> = HashMap::new();
+    let mut programmed: HashSet<u16> = HashSet::new();
+    let mut denied: HashSet<u16> = HashSet::new();
+    events
+        .iter()
+        .map(|event| match event {
+            ChurnEvent::Op(op) => match op {
+                LifecycleOp::CreateVi { .. } => {
+                    let _ = world.hv.apply(op, &design_footprint, &mut world.noc);
+                    Some(event.clone())
+                }
+                LifecycleOp::Allocate { vi } => {
+                    if static_vr.contains_key(vi) || denied.contains(vi) {
+                        return None;
+                    }
+                    match world.hv.apply(op, &design_footprint, &mut world.noc) {
+                        Ok((LifecycleOutcome::Vr(vr), _)) => {
+                            static_vr.insert(*vi, vr);
+                            Some(ChurnEvent::Op(op.clone()))
+                        }
+                        _ => {
+                            denied.insert(*vi);
+                            None
+                        }
+                    }
+                }
+                LifecycleOp::Program { vi, design, .. } => {
+                    if programmed.contains(vi) {
+                        return None;
+                    }
+                    let Some(&vr) = static_vr.get(vi) else { return None };
+                    let op =
+                        LifecycleOp::Program { vi: *vi, vr, design: design.clone(), dest: None };
+                    let _ = world.hv.apply(&op, &design_footprint, &mut world.noc);
+                    programmed.insert(*vi);
+                    Some(ChurnEvent::Op(op))
+                }
+                _ => None, // Grow / Wire / Release: no elasticity
+            },
+            ChurnEvent::Request { vi, vr: _, payload } => match static_vr.get(vi) {
+                Some(&vr) if programmed.contains(vi) => {
+                    Some(ChurnEvent::Request { vi: *vi, vr, payload: Arc::clone(payload) })
+                }
+                _ => Some(event.clone()), // turned away: will be refused
+            },
+        })
+        .collect()
+}
+
+struct RunStats {
+    served: u64,
+    refused: u64,
+    mean_util: f64,
+    rps: f64,
+}
+
+/// Replay one aligned trace against a fresh sharded engine, sampling
+/// useful utilization at every request instant of the demand trace.
+/// "Useful" = programmed regions whose owner is still active in the
+/// *demand* world (a stranded region of a departed tenant counts as
+/// waste, which is exactly the cost of a static allocation).
+fn run_world(aligned: &[Option<ChurnEvent>], demand: &[ChurnEvent]) -> RunStats {
+    let engine = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+    let handle = engine.handle();
+    let mut world = shadow(); // mirrors THIS run's tenancy
+    let mut dem = shadow(); // mirrors demand (who is still active)
+    let mut served = 0u64;
+    let mut refused = 0u64;
+    let mut util_sum = 0.0f64;
+    let mut samples = 0u64;
+    let t0 = Instant::now();
+    for (i, demand_event) in demand.iter().enumerate() {
+        if let ChurnEvent::Op(op) = demand_event {
+            let _ = dem.hv.apply(op, &design_footprint, &mut dem.noc);
+        }
+        match &aligned[i] {
+            None => {}
+            Some(ChurnEvent::Op(op)) => {
+                let _ = handle.lifecycle(op.clone());
+                let _ = world.hv.apply(op, &design_footprint, &mut world.noc);
+            }
+            Some(ChurnEvent::Request { vi, vr, payload }) => {
+                match handle.call(*vi, *vr, Arc::clone(payload)) {
+                    Ok(_) => served += 1,
+                    Err(_) => refused += 1,
+                }
+                let active: HashSet<u16> = dem
+                    .hv
+                    .vis
+                    .iter()
+                    .filter(|(_, rec)| !rec.vrs.is_empty())
+                    .map(|(&vi, _)| vi)
+                    .collect();
+                let useful = world
+                    .hv
+                    .vrs
+                    .iter()
+                    .filter(|r| {
+                        matches!(&r.status, VrStatus::Programmed { vi, .. } if active.contains(vi))
+                    })
+                    .count();
+                util_sum += useful as f64 / world.hv.vrs.len() as f64;
+                samples += 1;
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    engine.stop();
+    RunStats {
+        served,
+        refused,
+        mean_util: if samples > 0 { util_sum / samples as f64 } else { 0.0 },
+        rps: served as f64 / secs.max(1e-9),
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    header(
+        "Elastic tenant churn vs static allocation — live VR lifecycle",
+        "elasticity (§III-A): run-time allocate/grow/release keeps regions busy — the 6x-utilization headline's mechanism",
+    );
+    let events_n = if smoke { 500 } else { 2000 };
+    let cfg = ChurnConfig { seed: 0xC11A05, events: events_n, foreign_probe: 0.0 };
+    let events = churn::generate(&cfg);
+    let requests_total =
+        events.iter().filter(|e| matches!(e, ChurnEvent::Request { .. })).count() as u64;
+    let elastic_aligned: Vec<Option<ChurnEvent>> = events.iter().cloned().map(Some).collect();
+    let static_aligned = static_baseline(&events);
+
+    println!(
+        "trace: {} events ({} requests, {} lifecycle ops), seed {:#x}\n",
+        events.len(),
+        requests_total,
+        events.len() as u64 - requests_total,
+        cfg.seed
+    );
+
+    let elastic = run_world(&elastic_aligned, &events);
+    let stat = run_world(&static_aligned, &events);
+
+    println!(
+        "elastic: util {:>5.1}%  served {:>6} ({:>5} refused)  {:>8.0} req/s",
+        elastic.mean_util * 100.0,
+        elastic.served,
+        elastic.refused,
+        elastic.rps
+    );
+    println!(
+        "static : util {:>5.1}%  served {:>6} ({:>5} refused)  {:>8.0} req/s",
+        stat.mean_util * 100.0,
+        stat.served,
+        stat.refused,
+        stat.rps
+    );
+    if stat.mean_util > 0.0 {
+        println!(
+            "-> elasticity gain: {:.2}x utilization, {:.2}x requests served\n",
+            elastic.mean_util / stat.mean_util,
+            elastic.served as f64 / stat.served.max(1) as f64
+        );
+    }
+
+    check(
+        "every request got exactly one reply in both runs",
+        elastic.served + elastic.refused == requests_total
+            && stat.served + stat.refused == requests_total,
+    );
+    check(
+        "elastic mean utilization exceeds the static allocation",
+        elastic.mean_util > stat.mean_util,
+    );
+    check("elastic serves more requests than the static allocation", elastic.served > stat.served);
+    check("static run turns tenants away (the stranding cost is real)", stat.refused > 0);
+
+    if smoke {
+        println!("(smoke mode: BENCH_churn.json not written)");
+    } else {
+        let json = format!(
+            "{{\n  \"bench\": \"elastic_churn\",\n  \"events\": {},\n  \"requests\": {requests_total},\n  \"elastic_util\": {:.4},\n  \"static_util\": {:.4},\n  \"elastic_served\": {},\n  \"static_served\": {},\n  \"elastic_rps\": {:.1},\n  \"static_rps\": {:.1}\n}}\n",
+            events.len(),
+            elastic.mean_util,
+            stat.mean_util,
+            elastic.served,
+            stat.served,
+            elastic.rps,
+            stat.rps
+        );
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_churn.json");
+        match std::fs::write(&out, &json) {
+            Ok(()) => println!("wrote {}:\n{json}", out.display()),
+            Err(e) => check(&format!("write {} ({e})", out.display()), false),
+        }
+    }
+    finish();
+}

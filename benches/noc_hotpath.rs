@@ -9,7 +9,7 @@
 //! must be measurably faster.
 
 use fpga_mt::bench_support::{bench, check, finish, header, smoke_mode, speedup};
-use fpga_mt::noc::{FixpointSim, NocSim, NocStats, Topology};
+use fpga_mt::noc::{FixpointSim, NocSim, NocStats, Payload, Topology};
 use fpga_mt::runtime::{Runtime, Tensor};
 use fpga_mt::util::Rng;
 
@@ -31,7 +31,7 @@ fn drive_reference(topo: &Topology, cycles: u64, rate: f64, seed: u64) -> (NocSt
                     dst = (dst + 1) % n_vrs;
                 }
                 let h = sim.header_for(1, dst);
-                sim.send(src, h, vec![], 0);
+                sim.send(src, h, Payload::empty(), 0);
             }
         }
         sim.step();
@@ -55,7 +55,7 @@ fn drive_batched(topo: &Topology, cycles: u64, rate: f64, seed: u64) -> (NocStat
                     dst = (dst + 1) % n_vrs;
                 }
                 let h = sim.header_for(1, dst);
-                sim.send(src, h, vec![], 0);
+                sim.send(src, h, Payload::empty(), 0);
             }
         }
         sim.step();

@@ -7,7 +7,7 @@
 
 use fpga_mt::device::Device;
 use fpga_mt::estimate::{router_fmax_mhz, router_resources, RouterConfig};
-use fpga_mt::noc::{traffic, NocSim, Topology};
+use fpga_mt::noc::{traffic, NocSim, Payload, Topology};
 use fpga_mt::util::cli::Args;
 use fpga_mt::util::table::{fnum, Table};
 use fpga_mt::util::Rng;
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
                         dst = (dst + 1) % n_vrs;
                     }
                     let h = sim.header_for(42, dst);
-                    sim.send(src, h, vec![], 0);
+                    sim.send(src, h, Payload::empty(), 0);
                 }
             }
             sim.step();

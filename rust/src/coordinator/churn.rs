@@ -1,0 +1,296 @@
+//! Seeded tenant-churn workload generator + trace replay.
+//!
+//! The paper's elasticity claim (§III-A, the 6x utilization headline) is
+//! about a *population* of tenants arriving, growing, shrinking, and
+//! departing while the device serves. This module generates that process
+//! as a deterministic trace of [`ChurnEvent`]s — lifecycle ops interleaved
+//! with serving requests — that any engine can replay:
+//!
+//! - the generator runs a **shadow hypervisor** (same floorplan, same
+//!   `AdjacentFirst` policy as [`System::empty`](super::System::empty)) so every op it records
+//!   carries the concrete VR index the replaying engine will allocate;
+//! - each `Program`/`Grow` is followed (usually) by a burst of requests
+//!   sized past [`RECONFIG_BACKLOG`](super::timing::RECONFIG_BACKLOG), so
+//!   traces exercise the reconfiguration window: queued admissions *and*
+//!   bounded-backpressure rejections;
+//! - with `foreign_probe > 0` some requests claim another tenant's VI,
+//!   exercising the access monitor under churn.
+//!
+//! The same seed always yields the same trace, and replaying one trace
+//! through the serial and the sharded engine must produce byte-identical
+//! responses and equal merged metrics (`rust/tests/elastic_churn.rs`).
+
+use super::server::EngineHandle;
+use super::{design_footprint, Response};
+use crate::device::Device;
+use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy};
+use crate::noc::NocSim;
+use crate::placer::case_study_floorplan;
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One event of a churn trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnEvent {
+    /// A tenant lifecycle operation (arrival, growth, departure, ...).
+    Op(LifecycleOp),
+    /// A serving request.
+    Request {
+        /// Requesting VI (possibly foreign, if probing isolation).
+        vi: u16,
+        /// Target VR.
+        vr: usize,
+        /// Request payload, shared zero-copy across replays.
+        payload: Arc<[u8]>,
+    },
+}
+
+/// Churn generator configuration.
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    /// RNG seed; the same seed always yields the same trace.
+    pub seed: u64,
+    /// Number of events to generate (ops + requests).
+    pub events: usize,
+    /// Probability that a request claims a different tenant's VI
+    /// (isolation probing; `0.0` for clean throughput runs).
+    pub foreign_probe: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig { seed: 0xC0FFEE, events: 400, foreign_probe: 0.0 }
+    }
+}
+
+/// Results of replaying a churn trace through an engine handle.
+pub struct Replay {
+    /// Result of each [`ChurnEvent::Request`], in trace order.
+    pub responses: Vec<Result<Response>>,
+    /// Result of each [`ChurnEvent::Op`], in trace order.
+    pub outcomes: Vec<Result<LifecycleOutcome>>,
+}
+
+/// The Table I design pool tenants deploy from.
+const DESIGNS: [&str; 6] = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
+
+/// Per-tenant bookkeeping inside the generator's shadow world.
+struct Tenant {
+    vi: u16,
+    /// Held regions in deployment order (`(vr, design)`).
+    regions: Vec<(usize, String)>,
+}
+
+/// Generate a seeded churn trace over the case-study floorplan. See the
+/// module docs for the process shape; the shadow hypervisor mirrors
+/// [`System::empty`](super::System::empty), so the recorded indices match
+/// what an engine replaying from the empty deployment allocates.
+pub fn generate(cfg: &ChurnConfig) -> Vec<ChurnEvent> {
+    let device = Device::vu9p();
+    let (topo, fp) = case_study_floorplan(&device).expect("case-study floorplan");
+    let mut noc = NocSim::new(topo.clone());
+    let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+    let mut rng = Rng::new(cfg.seed);
+    let mut events: Vec<ChurnEvent> = Vec::with_capacity(cfg.events + 16);
+    let mut tenants: Vec<Tenant> = Vec::new();
+    let mut arrivals = 0u64;
+
+    // Bounded loop: if the process wedges (it cannot — departures free
+    // regions — but never risk an infinite generator), return what we
+    // have.
+    let mut fuel = cfg.events * 10 + 100;
+    while events.len() < cfg.events && fuel > 0 {
+        fuel -= 1;
+        let roll = rng.next_f64();
+        if (tenants.is_empty() || roll < 0.18) && hv.free_vrs() > 0 {
+            // --- tenant arrival: create a VI and deploy one region ---
+            arrivals += 1;
+            let design = DESIGNS[rng.index(DESIGNS.len())].to_string();
+            let op = LifecycleOp::CreateVi { name: format!("tenant-{arrivals}") };
+            let vi = match hv.apply(&op, &design_footprint, &mut noc) {
+                Ok((LifecycleOutcome::Vi(vi), _)) => vi,
+                _ => unreachable!("CreateVi cannot fail"),
+            };
+            events.push(ChurnEvent::Op(op));
+            let op = LifecycleOp::Allocate { vi };
+            let vr = match hv.apply(&op, &design_footprint, &mut noc) {
+                Ok((LifecycleOutcome::Vr(vr), _)) => vr,
+                _ => unreachable!("free pool checked above"),
+            };
+            events.push(ChurnEvent::Op(op));
+            let op = LifecycleOp::Program { vi, vr, design: design.clone(), dest: None };
+            let _ = hv.apply(&op, &design_footprint, &mut noc);
+            events.push(ChurnEvent::Op(op));
+            tenants.push(Tenant { vi, regions: vec![(vr, design)] });
+            if rng.chance(0.75) {
+                // Land traffic inside the fresh reconfiguration window,
+                // past the backlog bound.
+                push_burst(&mut events, &mut rng, &tenants, vi, vr, 14 + rng.index(4), cfg);
+            }
+        } else if roll < 0.30 && !tenants.is_empty() && hv.free_vrs() > 0 {
+            // --- elastic growth, sometimes streaming from an existing
+            //     region (the paper's FPU -> AES story) ---
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            let design = DESIGNS[rng.index(DESIGNS.len())].to_string();
+            let stream_src =
+                if rng.chance(0.5) { Some(tenants[t].regions[0].0) } else { None };
+            let op = LifecycleOp::Grow { vi, stream_src, design: design.clone() };
+            let applied = hv.apply(&op, &design_footprint, &mut noc);
+            events.push(ChurnEvent::Op(op));
+            if let Ok((LifecycleOutcome::Vr(vr), _)) = applied {
+                tenants[t].regions.push((vr, design));
+                if rng.chance(0.75) {
+                    push_burst(&mut events, &mut rng, &tenants, vi, vr, 14 + rng.index(4), cfg);
+                }
+            }
+        } else if roll < 0.44 && !tenants.is_empty() {
+            // --- shrink or depart ---
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            if rng.chance(0.35) {
+                // Departure: release everything, newest first.
+                while let Some((vr, _)) = tenants[t].regions.pop() {
+                    let op = LifecycleOp::Release { vi, vr };
+                    let _ = hv.apply(&op, &design_footprint, &mut noc);
+                    events.push(ChurnEvent::Op(op));
+                }
+                tenants.remove(t);
+            } else {
+                // Shrink: release the most recent region.
+                let (vr, _) = tenants[t].regions.pop().expect("tenants hold >= 1 region");
+                let op = LifecycleOp::Release { vi, vr };
+                let _ = hv.apply(&op, &design_footprint, &mut noc);
+                events.push(ChurnEvent::Op(op));
+                if tenants[t].regions.is_empty() {
+                    tenants.remove(t);
+                }
+            }
+        } else if !tenants.is_empty() {
+            // --- serving burst to a random held region ---
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            let vr = tenants[t].regions[rng.index(tenants[t].regions.len())].0;
+            push_burst(&mut events, &mut rng, &tenants, vi, vr, 1 + rng.index(8), cfg);
+        }
+    }
+    events.truncate(cfg.events);
+    events
+}
+
+/// Emit `n` requests to `(vi, vr)`, occasionally swapping in a foreign VI
+/// when the config probes isolation.
+fn push_burst(
+    events: &mut Vec<ChurnEvent>,
+    rng: &mut Rng,
+    tenants: &[Tenant],
+    vi: u16,
+    vr: usize,
+    n: usize,
+    cfg: &ChurnConfig,
+) {
+    for _ in 0..n {
+        let mut req_vi = vi;
+        if cfg.foreign_probe > 0.0 && rng.chance(cfg.foreign_probe) {
+            req_vi = if tenants.len() > 1 {
+                tenants[rng.index(tenants.len())].vi
+            } else {
+                vi + 101 // nobody: guaranteed foreign
+            };
+        }
+        let len = 16 + rng.index(240);
+        let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        events.push(ChurnEvent::Request { vi: req_vi, vr, payload: Arc::from(payload) });
+    }
+}
+
+/// Replay a churn trace through an engine handle (serial or sharded — the
+/// envelope is shared), blocking per event so the engine observes the
+/// trace in exactly the generated order. Failed requests/ops come back as
+/// the engine's errors, never a panic.
+pub fn replay(handle: &EngineHandle, events: &[ChurnEvent]) -> Replay {
+    let mut responses = Vec::new();
+    let mut outcomes = Vec::new();
+    for event in events {
+        match event {
+            ChurnEvent::Op(op) => outcomes.push(handle.lifecycle(op.clone())),
+            ChurnEvent::Request { vi, vr, payload } => {
+                responses.push(handle.call(*vi, *vr, Arc::clone(payload)));
+            }
+        }
+    }
+    Replay { responses, outcomes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace() {
+        let cfg = ChurnConfig { seed: 42, events: 300, foreign_probe: 0.2 };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 300);
+        assert_eq!(a, b, "trace must be a pure function of the seed");
+        let c = generate(&ChurnConfig { seed: 43, ..cfg });
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn traces_cover_the_whole_lifecycle() {
+        let trace = generate(&ChurnConfig { seed: 7, events: 500, foreign_probe: 0.1 });
+        let mut arrivals = 0;
+        let mut grows = 0;
+        let mut releases = 0;
+        let mut requests = 0;
+        for e in &trace {
+            match e {
+                ChurnEvent::Op(LifecycleOp::CreateVi { .. }) => arrivals += 1,
+                ChurnEvent::Op(LifecycleOp::Grow { .. }) => grows += 1,
+                ChurnEvent::Op(LifecycleOp::Release { .. }) => releases += 1,
+                ChurnEvent::Request { .. } => requests += 1,
+                _ => {}
+            }
+        }
+        assert!(arrivals >= 3, "arrivals {arrivals}");
+        assert!(grows >= 1, "grows {grows}");
+        assert!(releases >= 3, "releases {releases}");
+        assert!(requests >= 100, "requests {requests}");
+    }
+
+    #[test]
+    fn requests_target_live_regions_of_the_shadow_world() {
+        // Replay the ops on a fresh shadow hypervisor (exactly what an
+        // engine replaying from `System::empty` holds): without foreign
+        // probes, every request must target a region that is programmed
+        // AND owned by the requesting VI at that point in the trace.
+        let trace = generate(&ChurnConfig { seed: 11, events: 400, foreign_probe: 0.0 });
+        let device = Device::vu9p();
+        let (topo, fp) = case_study_floorplan(&device).unwrap();
+        let mut noc = NocSim::new(topo.clone());
+        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        let mut requests = 0u64;
+        for event in &trace {
+            match event {
+                ChurnEvent::Op(op) => {
+                    hv.apply(op, &design_footprint, &mut noc)
+                        .unwrap_or_else(|e| panic!("trace op must be valid: {op:?}: {e}"));
+                }
+                ChurnEvent::Request { vi, vr, .. } => {
+                    requests += 1;
+                    assert!(
+                        matches!(
+                            &hv.vrs[*vr].status,
+                            crate::hypervisor::VrStatus::Programmed { vi: owner, .. }
+                                if owner == vi
+                        ),
+                        "request targets VR{vr}, which VI{vi} does not serve"
+                    );
+                }
+            }
+        }
+        assert!(requests > 100, "trace must carry traffic ({requests})");
+    }
+}

@@ -32,8 +32,12 @@ impl RequestTiming {
 pub struct Metrics {
     /// Completed requests.
     pub requests: u64,
-    /// Requests rejected by access control.
+    /// Requests rejected by access control (or by the stale-admission
+    /// guard at the shard ingress).
     pub rejected: u64,
+    /// Requests refused at admission because the target VR's
+    /// reconfiguration backlog was full (bounded backpressure).
+    pub backpressured: u64,
     /// IO-trip time distribution (µs).
     pub io_us: Summary,
     /// Compute time distribution (µs).
@@ -67,6 +71,7 @@ impl Metrics {
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
         self.rejected += other.rejected;
+        self.backpressured += other.backpressured;
         self.io_us.merge(&other.io_us);
         self.compute_us.merge(&other.compute_us);
         self.total_us.merge(&other.total_us);

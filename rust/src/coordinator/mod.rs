@@ -21,6 +21,7 @@
 //! parallel per-VR engine (`sharded`) execute the same
 //! [`shard::serve_admitted`] path against them.
 
+pub mod churn;
 pub mod metrics;
 pub mod server;
 pub mod shard;
@@ -29,18 +30,50 @@ pub mod timing;
 
 pub use shard::{CoreGate, ShardEnv, ShardPlan, ShardRequest, SharedCore};
 pub use sharded::{ShardedEngine, ShardedHandle};
-pub use timing::{Admission, TimingCore};
+pub use timing::{Admission, Gate, TimingCore};
 
 use crate::accel::CASE_STUDY;
 use crate::cloud::IoConfig;
-use crate::device::Device;
-use crate::hypervisor::{Hypervisor, Policy, VrStatus};
-use crate::noc::{NocSim, Topology};
-use crate::placer::{case_study_floorplan, Floorplan};
+use crate::device::{Device, Resources};
+use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
+use crate::noc::NocSim;
+use crate::placer::case_study_floorplan;
 use crate::runtime::{Runtime, Tensor};
 use anyhow::{bail, Result};
 use metrics::{Metrics, RequestTiming};
 use std::sync::Arc;
+
+/// Resolve a design name to the resource footprint lifecycle ops commit
+/// into the region's pblock (the Table I registry; unknown designs
+/// program with an empty footprint). Pass it to
+/// [`Hypervisor::apply`](crate::hypervisor::Hypervisor::apply) when
+/// driving the hypervisor directly — the engines wire it in themselves.
+pub fn design_footprint(design: &str) -> Option<Resources> {
+    crate::accel::by_name(design).map(|s| s.resources)
+}
+
+/// The control-plane core both engines run for a lifecycle op — runtime
+/// design validation, hypervisor apply (emitting the wiring delta), and
+/// charging any reconfiguration windows to admission. Keeping it in one
+/// place is what keeps the serial and sharded engines in lockstep under
+/// churn (the equivalence tests depend on identical accept/reject
+/// decisions and identical window charging).
+pub(crate) fn apply_lifecycle(
+    hv: &mut Hypervisor,
+    timing: &mut TimingCore,
+    runtime: &Runtime,
+    noc: &mut NocSim,
+    op: &LifecycleOp,
+) -> Result<(LifecycleOutcome, crate::hypervisor::Delta)> {
+    if let LifecycleOp::Program { design, .. } | LifecycleOp::Grow { design, .. } = op {
+        runtime.ensure_model(design)?;
+    }
+    let (outcome, delta) = hv.apply(op, &design_footprint, noc)?;
+    for &(vr, dur_us) in &delta.reconfig {
+        timing.begin_reconfig(vr, dur_us);
+    }
+    Ok((outcome, delta))
+}
 
 /// Bytes carried per 32-bit flit.
 pub const FLIT_PAYLOAD_BYTES: usize = 4;
@@ -80,12 +113,17 @@ pub struct Response {
 }
 
 /// A [`System`] split for sharded serving: one plan per VR plus the shared
-/// core and handles (see [`System::into_shards`]).
+/// core, the hypervisor (the sharded engine's dispatcher owns it so the
+/// tenancy stays mutable while serving), and handles (see
+/// [`System::into_shards`]).
 pub struct ShardedParts {
     /// One execution-shard plan per VR, indexed like the topology's VRs.
     pub plans: Vec<ShardPlan>,
     /// The shared timing/NoC core.
     pub core: SharedCore,
+    /// The hypervisor, handed to the engine's dispatcher for runtime
+    /// lifecycle ops.
+    pub hv: Hypervisor,
     /// Shared accelerator runtime.
     pub runtime: Arc<Runtime>,
     /// IO-path timing configuration (copied into each worker).
@@ -95,46 +133,16 @@ pub struct ShardedParts {
 }
 
 impl System {
-    /// Build the paper's case-study deployment: 5 VIs, 6 VRs, 6 compiled
-    /// accelerators per Table I, FPU streaming into AES over a direct link.
-    pub fn case_study(artifacts_dir: &str) -> Result<System> {
+    /// An empty deployment on the case-study floorplan: no tenants, every
+    /// VR free. The starting point for runtime lifecycle churn — tenants
+    /// arrive, grow, and depart via [`System::lifecycle`] while the
+    /// system serves.
+    pub fn empty(artifacts_dir: &str) -> Result<System> {
         let device = Device::vu9p();
         let (topo, fp) = case_study_floorplan(&device)?;
-        Self::build(device, topo, fp, artifacts_dir)
-    }
-
-    fn build(
-        device: Device,
-        topo: Topology,
-        fp: Floorplan,
-        artifacts_dir: &str,
-    ) -> Result<System> {
-        let mut noc = NocSim::new(topo.clone());
-        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        let noc = NocSim::new(topo.clone());
+        let hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
         let runtime = Runtime::load_shared(artifacts_dir)?;
-
-        // Recreate the paper's tenancy: 5 VIs; VI3 grows elastically.
-        let mut vi_ids = std::collections::HashMap::new();
-        for spec in &CASE_STUDY {
-            let vi = *vi_ids
-                .entry(spec.vi)
-                .or_insert_with(|| hv.create_vi(&format!("VI{}", spec.vi)));
-            let vr = hv.allocate_vr(vi, &mut noc)?;
-            assert_eq!(vr, spec.vr, "allocation must reproduce Table I order");
-            // Commit the Table I footprint into the floorplan pblock.
-            let pb = hv.floorplan.vr_pb[vr];
-            hv.floorplan.pblocks.get_mut(pb).commit(&spec.resources)?;
-        }
-        // Program designs; FPU's Wrapper registers point at AES (index 3).
-        for spec in &CASE_STUDY {
-            let vi = vi_ids[&spec.vi];
-            let dest = if spec.name == "fpu" { Some(3) } else { None };
-            hv.program_vr(vi, spec.vr, spec.name, dest)?;
-        }
-        // Elastic streaming link FPU (paper VR3, index 2) -> AES (paper
-        // VR4, index 3): both hang off router 1, so a direct link is wired.
-        noc.wire_direct(2, 3)?;
-
         Ok(System {
             device,
             hv,
@@ -144,6 +152,73 @@ impl System {
             metrics: Metrics::default(),
             next_rid: 0,
         })
+    }
+
+    /// Build the paper's case-study deployment: 5 VIs, 6 VRs, 6 compiled
+    /// accelerators per Table I, FPU streaming into AES over a direct
+    /// link. Assembled through the same lifecycle ops a live system
+    /// applies — but as boot-time deployment, so no reconfiguration
+    /// windows are charged (programming finishes before traffic starts).
+    pub fn case_study(artifacts_dir: &str) -> Result<System> {
+        let mut sys = Self::empty(artifacts_dir)?;
+        // Recreate the paper's tenancy: 5 VIs; VI3 grows elastically.
+        let mut vi_ids = std::collections::HashMap::new();
+        for spec in &CASE_STUDY {
+            let vi = *vi_ids
+                .entry(spec.vi)
+                .or_insert_with(|| sys.hv.create_vi(&format!("VI{}", spec.vi)));
+            let (outcome, _) = sys.hv.apply(
+                &LifecycleOp::Allocate { vi },
+                &design_footprint,
+                &mut sys.core.noc,
+            )?;
+            let LifecycleOutcome::Vr(vr) = outcome else { unreachable!("Allocate returns Vr") };
+            assert_eq!(vr, spec.vr, "allocation must reproduce Table I order");
+        }
+        // Program designs; FPU's Wrapper registers point at AES (index 3).
+        for spec in &CASE_STUDY {
+            let vi = vi_ids[&spec.vi];
+            let dest = if spec.name == "fpu" { Some(3) } else { None };
+            sys.hv.apply(
+                &LifecycleOp::Program {
+                    vi,
+                    vr: spec.vr,
+                    design: spec.name.to_string(),
+                    dest,
+                },
+                &design_footprint,
+                &mut sys.core.noc,
+            )?;
+        }
+        // Elastic streaming link FPU (paper VR3, index 2) -> AES (paper
+        // VR4, index 3): both hang off router 1, so a direct link is wired.
+        sys.hv.apply(
+            &LifecycleOp::Wire { vi: vi_ids[&3], src: 2, dst: 3 },
+            &design_footprint,
+            &mut sys.core.noc,
+        )?;
+        Ok(sys)
+    }
+
+    /// Apply a tenant lifecycle operation to the *serving* system. The
+    /// hypervisor emits a wiring delta; any partial reconfiguration it
+    /// started is charged to admission as a per-VR unavailability window
+    /// ([`TimingCore::begin_reconfig`]) during which requests queue with
+    /// bounded backpressure ([`timing::RECONFIG_BACKLOG`]) or reject.
+    ///
+    /// The serial request path re-snapshots its shard plan every request,
+    /// so the delta's `replan` set needs no further action here; the
+    /// sharded engine uses it to rebuild exactly the affected shards
+    /// ([`sharded::ShardedEngine`]).
+    pub fn lifecycle(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        apply_lifecycle(
+            &mut self.hv,
+            &mut self.core.timing,
+            &self.runtime,
+            &mut self.core.noc,
+            op,
+        )
+        .map(|(outcome, _)| outcome)
     }
 
     /// The design programmed in a VR, if any.
@@ -169,7 +244,13 @@ impl System {
         }
         let plan = ShardPlan::snapshot(&self.hv, &self.core.noc, vr);
         plan.check_access(vi, &mut self.metrics)?;
-        let adm = self.core.timing.admit(rid);
+        let adm = match self.core.timing.admit_vr(rid, vr, plan.epoch) {
+            Gate::Admitted(adm) => adm,
+            Gate::Busy { busy_for_us } => {
+                self.metrics.backpressured += 1;
+                bail!("VR{vr} is reconfiguring (backlog full, busy another {busy_for_us:.0} µs)");
+            }
+        };
         let env = ShardEnv { runtime: self.runtime.as_ref(), io_cfg: &self.io_cfg };
         shard::serve_admitted(
             ShardRequest { vi, payload, adm },
@@ -180,10 +261,11 @@ impl System {
         )
     }
 
-    /// Split into the sharded engine's parts: one [`ShardPlan`] per VR
-    /// plus the shared core. The tenancy is frozen while the sharded
-    /// engine serves (no allocate/release mid-flight) — rebuild or re-split
-    /// after reconfiguration.
+    /// Split into the sharded engine's parts: one [`ShardPlan`] per VR,
+    /// the shared core, and the hypervisor itself. The tenancy stays
+    /// **live**: the sharded engine's dispatcher owns the hypervisor and
+    /// applies [`LifecycleOp`]s while serving, hot-adding and hot-draining
+    /// worker shards as regions are programmed and released.
     pub fn into_shards(self) -> ShardedParts {
         let plans = (0..self.hv.vrs.len())
             .map(|vr| ShardPlan::snapshot(&self.hv, &self.core.noc, vr))
@@ -191,6 +273,7 @@ impl System {
         ShardedParts {
             plans,
             core: self.core,
+            hv: self.hv,
             runtime: self.runtime,
             io_cfg: self.io_cfg,
             metrics: self.metrics,
@@ -275,9 +358,97 @@ mod tests {
         let parts = System::case_study("artifacts").unwrap().into_shards();
         assert_eq!(parts.plans.len(), 6);
         assert_eq!(parts.metrics.requests, 0);
+        assert_eq!(parts.hv.vr_utilization(), 1.0, "the hypervisor rides along");
         for (vr, plan) in parts.plans.iter().enumerate() {
             assert_eq!(plan.vr, vr);
             assert!(plan.design.is_some(), "VR{vr} must be programmed in the case study");
+        }
+    }
+
+    #[test]
+    fn empty_system_deploys_and_serves_via_lifecycle() {
+        let mut sys = System::empty("artifacts").unwrap();
+        assert_eq!(sys.hv.vr_utilization(), 0.0);
+        let vi = match sys.lifecycle(&LifecycleOp::CreateVi { name: "t".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            other => panic!("expected Vi, got {other:?}"),
+        };
+        let vr = match sys.lifecycle(&LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            other => panic!("expected Vr, got {other:?}"),
+        };
+        assert!(sys.submit(vi, vr, &[1u8; 8]).is_err(), "unprogrammed region must not serve");
+        sys.lifecycle(&LifecycleOp::Program { vi, vr, design: "fir".into(), dest: None })
+            .unwrap();
+        assert!(sys.core.timing.reconfiguring(vr), "programming charges a window");
+        let resp = sys.submit(vi, vr, &[1u8; 64]).unwrap();
+        assert_eq!(resp.path, vec!["fir".to_string()]);
+        sys.lifecycle(&LifecycleOp::Release { vi, vr }).unwrap();
+        assert!(sys.submit(vi, vr, &[1u8; 8]).is_err(), "released region must stop serving");
+        assert_eq!(sys.hv.free_vrs(), 6);
+    }
+
+    #[test]
+    fn reconfiguration_window_queues_then_backpressures() {
+        let mut sys = System::empty("artifacts").unwrap();
+        let vi = match sys.lifecycle(&LifecycleOp::CreateVi { name: "t".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            _ => unreachable!(),
+        };
+        let vr = match sys.lifecycle(&LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            _ => unreachable!(),
+        };
+        sys.lifecycle(&LifecycleOp::Program { vi, vr, design: "fir".into(), dest: None })
+            .unwrap();
+        // Stretch the window far beyond any arrival draw so the backlog
+        // bound is exercised deterministically.
+        sys.core.timing.begin_reconfig(vr, 10_000_000.0);
+        let mut served = 0u64;
+        let mut busy = 0u64;
+        for _ in 0..(timing::RECONFIG_BACKLOG + 4) {
+            match sys.submit(vi, vr, &[7u8; 32]) {
+                Ok(resp) => {
+                    served += 1;
+                    assert!(
+                        resp.timing.io_us > 1_000_000.0,
+                        "queued request must wait out the window (io {})",
+                        resp.timing.io_us
+                    );
+                }
+                Err(_) => busy += 1,
+            }
+        }
+        assert_eq!(served, timing::RECONFIG_BACKLOG as u64);
+        assert_eq!(busy, 4);
+        assert_eq!(sys.metrics.backpressured, 4);
+        assert_eq!(sys.metrics.requests, served);
+        assert_eq!(sys.metrics.rejected, 0, "backpressure is not an access rejection");
+    }
+
+    #[test]
+    fn lifecycle_rejects_unknown_designs_at_the_control_plane() {
+        let mut sys = System::empty("artifacts").unwrap();
+        let vi = match sys.lifecycle(&LifecycleOp::CreateVi { name: "t".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            _ => unreachable!(),
+        };
+        let vr = match sys.lifecycle(&LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            _ => unreachable!(),
+        };
+        assert!(sys
+            .lifecycle(&LifecycleOp::Program { vi, vr, design: "bogus".into(), dest: None })
+            .is_err());
+        assert_eq!(sys.hv.vr_utilization(), 0.0, "nothing may be programmed");
+        assert!(!sys.core.timing.reconfiguring(vr), "no window for a refused program");
+    }
+
+    #[test]
+    fn case_study_charges_no_boot_time_windows() {
+        let sys = System::case_study("artifacts").unwrap();
+        for vr in 0..6 {
+            assert!(!sys.core.timing.reconfiguring(vr), "VR{vr}");
         }
     }
 }

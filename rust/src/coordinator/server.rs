@@ -9,6 +9,7 @@
 //! write, then read from the accelerators" concurrently.
 
 use super::{metrics::Metrics, Response, System};
+use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
 use anyhow::Result;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -25,11 +26,24 @@ pub struct Request {
     pub reply: mpsc::Sender<Result<Response>>,
 }
 
-/// Channel message: a request or an orderly shutdown. Both serving
-/// engines (serial executor and sharded per-VR pipeline) speak this same
-/// client protocol, so one handle type serves both.
+/// A tenant lifecycle operation in flight to an engine, with its reply
+/// channel (the cloud-management control plane, sharing the serving
+/// engines' message stream so ops land at a deterministic position in
+/// the request order).
+pub struct CtlRequest {
+    /// The lifecycle operation to apply.
+    pub op: LifecycleOp,
+    /// Channel the outcome is sent back on.
+    pub reply: mpsc::Sender<Result<LifecycleOutcome>>,
+}
+
+/// Channel message: a request, a lifecycle (control-plane) op, or an
+/// orderly shutdown. Both serving engines (serial executor and sharded
+/// per-VR pipeline) speak this same client protocol, so one handle type
+/// serves both.
 pub(crate) enum Msg {
     Req(Request),
+    Ctl(CtlRequest),
     Shutdown,
 }
 
@@ -50,6 +64,19 @@ impl EngineHandle {
             .send(Msg::Req(Request { vi, vr, payload: payload.into(), reply }))
             .map_err(|_| anyhow::anyhow!("engine stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?
+    }
+
+    /// Apply a tenant lifecycle operation on the live engine and wait for
+    /// its outcome. The op takes effect at its arrival position in the
+    /// engine's message order: requests sent before it complete against
+    /// the old tenancy, requests after it see the new one — on the serial
+    /// and the sharded engine alike.
+    pub fn lifecycle(&self, op: LifecycleOp) -> Result<LifecycleOutcome> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Ctl(CtlRequest { op, reply }))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped lifecycle op"))?
     }
 }
 
@@ -87,26 +114,41 @@ impl Engine {
                 }
             };
             // Drain-loop: block for one message, then opportunistically
-            // batch whatever else is queued.
-            'outer: while let Ok(first) = rx.recv() {
-                let Msg::Req(first) = first else { break };
-                let mut batch = vec![first];
-                while batch.len() < Self::BATCH {
-                    match rx.try_recv() {
-                        Ok(Msg::Req(r)) => batch.push(r),
-                        Ok(Msg::Shutdown) => {
-                            for req in batch {
-                                let resp = system.submit(req.vi, req.vr, &req.payload);
-                                let _ = req.reply.send(resp);
-                            }
-                            break 'outer;
-                        }
-                        Err(_) => break,
+            // batch whatever else is queued. Lifecycle ops are applied at
+            // their arrival position — a batch never reads past one, so
+            // requests before/after an op see the old/new tenancy exactly
+            // as the sharded dispatcher orders them.
+            let mut pending: Option<Msg> = None;
+            'outer: loop {
+                let msg = match pending.take() {
+                    Some(msg) => msg,
+                    None => match rx.recv() {
+                        Ok(msg) => msg,
+                        Err(_) => break 'outer,
+                    },
+                };
+                match msg {
+                    Msg::Shutdown => break 'outer,
+                    Msg::Ctl(ctl) => {
+                        let _ = ctl.reply.send(system.lifecycle(&ctl.op));
                     }
-                }
-                for req in batch {
-                    let resp = system.submit(req.vi, req.vr, &req.payload);
-                    let _ = req.reply.send(resp);
+                    Msg::Req(first) => {
+                        let mut batch = vec![first];
+                        while batch.len() < Self::BATCH {
+                            match rx.try_recv() {
+                                Ok(Msg::Req(r)) => batch.push(r),
+                                Ok(other) => {
+                                    pending = Some(other);
+                                    break;
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                        for req in batch {
+                            let resp = system.submit(req.vi, req.vr, &req.payload);
+                            let _ = req.reply.send(resp);
+                        }
+                    }
                 }
             }
             system.metrics.clone()
@@ -164,5 +206,30 @@ mod tests {
         assert!(h.call(1, 99, vec![0; 16]).is_err()); // VR99 does not exist
         assert!(h.call(2, 1, vec![0; 16]).is_ok()); // VI2 owns VR1 (fft)
         engine.stop();
+    }
+
+    #[test]
+    fn serial_engine_applies_lifecycle_ops_in_stream_order() {
+        use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
+        let engine = Engine::start(|| System::empty("artifacts")).unwrap();
+        let h = engine.handle();
+        let vi = match h.lifecycle(LifecycleOp::CreateVi { name: "tenant".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            other => panic!("expected Vi, got {other:?}"),
+        };
+        let vr = match h.lifecycle(LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            other => panic!("expected Vr, got {other:?}"),
+        };
+        assert!(h.call(vi, vr, vec![1u8; 16]).is_err(), "unprogrammed region");
+        h.lifecycle(LifecycleOp::Program { vi, vr, design: "fir".into(), dest: None }).unwrap();
+        let resp = h.call(vi, vr, vec![1u8; 64]).unwrap();
+        assert_eq!(resp.path, vec!["fir".to_string()]);
+        h.lifecycle(LifecycleOp::Release { vi, vr }).unwrap();
+        assert!(h.call(vi, vr, vec![1u8; 16]).is_err(), "released region");
+        // Invalid ops error without killing the engine.
+        assert!(h.lifecycle(LifecycleOp::Release { vi, vr: 99 }).is_err());
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 1);
     }
 }

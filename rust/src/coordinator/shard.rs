@@ -31,7 +31,7 @@ use super::timing::{Admission, TimingCore};
 use super::{Response, FLIT_PAYLOAD_BYTES};
 use crate::accel;
 use crate::cloud::{IoConfig, Scheme};
-use crate::hypervisor::{Hypervisor, VrStatus};
+use crate::hypervisor::{Delta, Hypervisor, VrStatus};
 use crate::noc::{hop_count, segment_message, NocSim, Payload};
 use crate::runtime::Runtime;
 use anyhow::{bail, Result};
@@ -71,8 +71,9 @@ impl CoreGate for &Mutex<NocSim> {
 
 /// Immutable description of one VR's serving shard, snapshotted from the
 /// hypervisor. A request served against a plan needs the shared core only
-/// for admission and streaming.
-#[derive(Debug, Clone)]
+/// for admission and streaming. Lifecycle churn rebuilds plans from the
+/// hypervisor's wiring deltas ([`ShardPlan::apply_delta`]).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardPlan {
     /// VR index this shard serves.
     pub vr: usize,
@@ -86,6 +87,11 @@ pub struct ShardPlan {
     pub dest_design: Option<String>,
     /// NoC routers between the shell entry and this VR (IO-trip model).
     pub hops: u32,
+    /// Lifecycle epoch of the VR at snapshot time. Admission tickets
+    /// carry the epoch they were minted against; serving rejects a
+    /// mismatch, so a ticket that predates a release can never execute
+    /// against the region's next owner.
+    pub epoch: u64,
 }
 
 impl ShardPlan {
@@ -105,7 +111,8 @@ impl ShardPlan {
         // released and re-allocated to someone else.
         let stream_dest = hv.vrs[vr]
             .stream_dest
-            .filter(|&d| d != vr && design_of(d).is_some() && owner_of(d) == owner_vi);
+            .filter(|&d| d != vr && d < hv.vrs.len())
+            .filter(|&d| design_of(d).is_some() && owner_of(d) == owner_vi);
         ShardPlan {
             vr,
             design: design_of(vr),
@@ -114,6 +121,18 @@ impl ShardPlan {
             dest_design: stream_dest.and_then(design_of),
             // Hop count depends only on the VR's router, not the VI.
             hops: hop_count(&noc.header_for(0, vr), 0),
+            epoch: hv.vrs[vr].epoch,
+        }
+    }
+
+    /// Rebuild the plan snapshots a lifecycle [`Delta`] marked stale, in
+    /// place. Out-of-range indices (a delta from an op that named a
+    /// nonexistent VR) are ignored.
+    pub fn apply_delta(plans: &mut [ShardPlan], delta: &Delta, hv: &Hypervisor, noc: &NocSim) {
+        for &vr in &delta.replan {
+            if vr < plans.len() {
+                plans[vr] = ShardPlan::snapshot(hv, noc, vr);
+            }
         }
     }
 
@@ -166,6 +185,18 @@ pub fn serve_admitted<G: CoreGate>(
     metrics: &mut Metrics,
 ) -> Result<Response> {
     let ShardRequest { vi, payload, mut adm } = req;
+    // Stale-admission guard: a ticket minted before a reconfiguration of
+    // this region (release, re-program, retarget) must never execute —
+    // the region may belong to a different tenant by now.
+    if adm.epoch != plan.epoch {
+        metrics.rejected += 1;
+        bail!(
+            "stale admission for VR{}: ticket epoch {} but region is at epoch {}",
+            plan.vr,
+            adm.epoch,
+            plan.epoch
+        );
+    }
     let Some(design) = plan.design.as_deref() else {
         bail!("VR{} has no programmed design", plan.vr);
     };
@@ -291,6 +322,7 @@ mod tests {
             stream_dest: None,
             dest_design: None,
             hops: 1,
+            epoch: 0,
         };
         assert!(empty.check_access(1, &mut m).is_err());
         assert_eq!(m.rejected, 1);

@@ -1,4 +1,5 @@
-//! The sharded serving engine: a parallel per-VR request pipeline.
+//! The sharded serving engine: a parallel per-VR request pipeline with a
+//! **live tenant lifecycle**.
 //!
 //! This is the paper's space-sharing realized in the server. Where the
 //! serial [`super::server::Engine`] funnels every tenant through one
@@ -8,8 +9,8 @@
 //!  clients ──► dispatcher ──┬─► VR0 queue ─► worker 0 (compute) ─┐
 //!   (handles)  rid + access │   ...                              │ replies
 //!              + admission  └─► VR5 queue ─► worker 5 (compute) ─┘
-//!              (TimingCore,                      │
-//!               unlocked)      (streaming hops only)
+//!   lifecycle  (TimingCore,                      │
+//!      ops ──►  Hypervisor)     (streaming hops only)
 //!                                          Mutex<NocSim>
 //! ```
 //!
@@ -17,24 +18,34 @@
 //!   access-monitor check against the shard plans, and performs
 //!   deterministic admission (so queue waits reproduce the serial
 //!   engine's on the same trace) before forwarding to the target VR's
-//!   work queue. It *owns* the timing core — admission is single-threaded
-//!   by construction, so it takes no lock and never stalls behind a
-//!   worker's streaming hop.
-//! - One **worker per VR shard** (the `runtime::SweepRunner` work-queue
-//!   shape, pinned per shard because requests to one VR must stay FIFO)
-//!   runs accelerator compute concurrently with every other shard,
-//!   locking the shared NoC only for on-chip streaming hops.
-//! - Each worker accumulates its own [`Metrics`]; [`Metrics::merge`] folds
-//!   them (plus the dispatcher's rejection counts) at shutdown, so totals
-//!   equal the serial engine's on the same request trace
-//!   (`rust/tests/sharded_serving.rs` asserts exactly that).
+//!   work queue. It *owns* the timing core **and the hypervisor** —
+//!   admission and lifecycle are single-threaded by construction, so
+//!   neither takes a lock and neither stalls behind a worker's streaming
+//!   hop.
+//! - One **worker per programmed VR shard** runs accelerator compute
+//!   concurrently with every other shard, locking the shared NoC only
+//!   for on-chip streaming hops. Workers are **hot-added** when a region
+//!   is programmed and **hot-drained** when it is released or
+//!   reconfigured: drain = stop admitting, close the shard queue, finish
+//!   in-flight work, merge the worker's [`Metrics`], free the region.
+//! - Lifecycle ops arrive on the same message stream as requests
+//!   ([`EngineHandle::lifecycle`]), so they apply at a deterministic
+//!   position in the admission order. Before an op mutates wiring, the
+//!   dispatcher drains exactly the shards whose serving behavior depends
+//!   on it ([`Hypervisor::quiesce_set`]); afterwards it rebuilds the
+//!   plans the emitted [`Delta`](crate::hypervisor::Delta) names
+//!   ([`ShardPlan::apply_delta`]) and reconciles the worker pool. The
+//!   serial engine gets the same ordering for free, which is what keeps
+//!   the two engines byte-identical under churn
+//!   (`rust/tests/elastic_churn.rs`).
 
 use super::metrics::Metrics;
-use super::server::{EngineHandle, Msg, Request};
+use super::server::{CtlRequest, EngineHandle, Msg, Request};
 use super::shard::{serve_admitted, ShardEnv, ShardPlan, ShardRequest, SharedCore};
-use super::timing::Admission;
+use super::timing::{Admission, Gate, TimingCore};
 use super::{Response, System};
 use crate::cloud::IoConfig;
+use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome};
 use crate::noc::NocSim;
 use crate::runtime::Runtime;
 use anyhow::Result;
@@ -54,18 +65,222 @@ struct Work {
 /// per-engine plumbing.
 pub type ShardedHandle = EngineHandle;
 
-/// The sharded engine: dispatcher thread + one worker thread per VR shard.
+/// The sharded engine: dispatcher thread + one worker thread per live
+/// (programmed) VR shard.
 pub struct ShardedEngine {
     handle: ShardedHandle,
     dispatcher: Option<JoinHandle<Metrics>>,
 }
 
+/// One shard's worker loop: serve admitted requests FIFO, accumulate
+/// per-shard metrics, return them when the queue closes (shutdown or
+/// hot-drain).
+fn spawn_worker(
+    plan: ShardPlan,
+    wrx: mpsc::Receiver<Work>,
+    noc: Arc<Mutex<NocSim>>,
+    runtime: Arc<Runtime>,
+    io_cfg: IoConfig,
+) -> JoinHandle<Metrics> {
+    std::thread::spawn(move || {
+        let mut metrics = Metrics::default();
+        let mut gate = &*noc;
+        let env = ShardEnv { runtime: runtime.as_ref(), io_cfg: &io_cfg };
+        while let Ok(w) = wrx.recv() {
+            let resp = serve_admitted(
+                ShardRequest { vi: w.vi, payload: &w.payload, adm: w.adm },
+                &plan,
+                &env,
+                &mut gate,
+                &mut metrics,
+            );
+            let _ = w.reply.send(resp);
+        }
+        metrics
+    })
+}
+
+/// Everything the dispatcher thread owns: the narrow synchronized state
+/// (timing core, hypervisor, shard plans) plus the worker pool it
+/// hot-adds/hot-drains as the tenancy changes.
+struct Dispatch {
+    hv: Hypervisor,
+    timing: TimingCore,
+    plans: Vec<ShardPlan>,
+    noc: Arc<Mutex<NocSim>>,
+    runtime: Arc<Runtime>,
+    io_cfg: IoConfig,
+    shard_txs: Vec<Option<mpsc::Sender<Work>>>,
+    workers: Vec<Option<JoinHandle<Metrics>>>,
+    metrics: Metrics,
+    next_rid: u64,
+}
+
+impl Dispatch {
+    /// Hot-add the worker for shard `vr` (its plan must be current).
+    fn spawn_shard(&mut self, vr: usize) {
+        debug_assert!(self.workers[vr].is_none(), "VR{vr} already has a worker");
+        let (wtx, wrx) = mpsc::channel::<Work>();
+        self.shard_txs[vr] = Some(wtx);
+        self.workers[vr] = Some(spawn_worker(
+            self.plans[vr].clone(),
+            wrx,
+            Arc::clone(&self.noc),
+            Arc::clone(&self.runtime),
+            self.io_cfg,
+        ));
+    }
+
+    /// Hot-drain shard `vr`: close its queue (stop admitting), let the
+    /// worker finish everything already forwarded, join it, and merge its
+    /// metrics. A worker panic must surface, never silently undercount
+    /// the merged totals. No-op if the shard has no worker.
+    fn drain_shard(&mut self, vr: usize) {
+        self.shard_txs[vr] = None;
+        if let Some(worker) = self.workers[vr].take() {
+            self.metrics.merge(&worker.join().expect("shard worker panicked"));
+        }
+    }
+
+    /// Spawn/drain workers so exactly the programmed shards are live.
+    fn reconcile_workers(&mut self) {
+        for vr in 0..self.plans.len() {
+            if self.plans[vr].design.is_some() && self.workers[vr].is_none() {
+                self.spawn_shard(vr);
+            } else if self.plans[vr].design.is_none() && self.workers[vr].is_some() {
+                self.drain_shard(vr);
+            }
+        }
+    }
+
+    /// Re-snapshot every plan (the recovery path after a failed op, whose
+    /// partial effects carry no delta), draining any live worker whose
+    /// plan changed under it.
+    fn resnapshot_all(&mut self) {
+        let fresh: Vec<ShardPlan> = {
+            let noc = self.noc.lock().expect("shared NoC poisoned");
+            (0..self.plans.len()).map(|vr| ShardPlan::snapshot(&self.hv, &noc, vr)).collect()
+        };
+        for (vr, plan) in fresh.into_iter().enumerate() {
+            if plan != self.plans[vr] && self.workers[vr].is_some() {
+                self.drain_shard(vr);
+            }
+            self.plans[vr] = plan;
+        }
+    }
+
+    /// One client request: rid assignment, access check, deterministic
+    /// (reconfiguration-aware) admission, then hand-off to the shard.
+    fn handle_req(&mut self, req: Request) {
+        let Request { vi, vr, payload, reply } = req;
+        // Request ids are consumed in arrival order (even by rejected
+        // requests), mirroring the serial engine, so both engines draw
+        // identical per-request timing on one trace.
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let Some(plan) = self.plans.get(vr) else {
+            let _ = reply.send(Err(anyhow::anyhow!("VR{vr} does not exist")));
+            return;
+        };
+        if let Err(e) = plan.check_access(vi, &mut self.metrics) {
+            let _ = reply.send(Err(e));
+            return;
+        }
+        let adm = match self.timing.admit_vr(rid, vr, plan.epoch) {
+            Gate::Admitted(adm) => adm,
+            Gate::Busy { busy_for_us } => {
+                self.metrics.backpressured += 1;
+                let _ = reply.send(Err(anyhow::anyhow!(
+                    "VR{vr} is reconfiguring (backlog full, busy another {busy_for_us:.0} µs)"
+                )));
+                return;
+            }
+        };
+        match &self.shard_txs[vr] {
+            Some(tx) => {
+                let _ = tx.send(Work { vi, payload, adm, reply });
+            }
+            // Unreachable while the access check requires a programmed
+            // design, but never panic the dispatcher on an inconsistency.
+            None => {
+                let _ = reply.send(Err(anyhow::anyhow!("VR{vr} has no live shard")));
+            }
+        }
+    }
+
+    /// One lifecycle op: quiesce the affected shards, apply the op to the
+    /// hypervisor (emitting its wiring delta), charge reconfiguration
+    /// windows to admission, rebuild the stale plans, and reconcile the
+    /// worker pool.
+    fn handle_ctl(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        // Reject invalid ops (unknown design, bad ownership/bounds,
+        // exhausted pool) *before* draining: an op that cannot apply must
+        // never disturb healthy serving shards. The checks are read-only
+        // and re-run inside `apply_lifecycle`, so the accept/reject
+        // decision is byte-for-byte the serial engine's.
+        if let LifecycleOp::Program { design, .. } | LifecycleOp::Grow { design, .. } = op {
+            self.runtime.ensure_model(design)?;
+        }
+        self.hv.precheck(op)?;
+        // In-flight work on affected shards must finish against the old
+        // wiring before the op mutates it (the serial engine gets this
+        // ordering for free from its single executor).
+        let quiesced = self.hv.quiesce_set(op);
+        for &vr in &quiesced {
+            self.drain_shard(vr);
+        }
+        let applied = {
+            let mut noc = self.noc.lock().expect("shared NoC poisoned");
+            super::apply_lifecycle(&mut self.hv, &mut self.timing, &self.runtime, &mut *noc, op)
+        };
+        let outcome = match applied {
+            Ok((outcome, delta)) => {
+                {
+                    let noc = self.noc.lock().expect("shared NoC poisoned");
+                    ShardPlan::apply_delta(&mut self.plans, &delta, &self.hv, &noc);
+                    // Quiesced-but-unlisted shards (e.g. a Wire op's
+                    // source) keep their plan; refresh them anyway so a
+                    // respawned worker never holds a stale snapshot.
+                    for &vr in &quiesced {
+                        if !delta.replan.contains(&vr) {
+                            self.plans[vr] = ShardPlan::snapshot(&self.hv, &noc, vr);
+                        }
+                    }
+                }
+                Ok(outcome)
+            }
+            Err(e) => {
+                // A failed op may still have partial effects (e.g. a grow
+                // that allocated before failing): resync everything.
+                self.resnapshot_all();
+                Err(e)
+            }
+        };
+        self.reconcile_workers();
+        outcome
+    }
+
+    /// Orderly shutdown: close every shard queue, join every worker, and
+    /// fold their per-shard metrics (plus the dispatcher's rejection and
+    /// backpressure counts) into the final totals.
+    fn shutdown(mut self) -> Metrics {
+        for tx in self.shard_txs.iter_mut() {
+            *tx = None;
+        }
+        for slot in self.workers.iter_mut() {
+            if let Some(worker) = slot.take() {
+                self.metrics.merge(&worker.join().expect("shard worker panicked"));
+            }
+        }
+        self.metrics
+    }
+}
+
 impl ShardedEngine {
     /// Build the [`System`] via `builder`, split it into per-VR shards
-    /// ([`System::into_shards`]), and boot the dispatcher + worker pool.
-    ///
-    /// The tenancy is frozen while the engine serves; stop the engine and
-    /// rebuild to reconfigure VRs.
+    /// ([`System::into_shards`]), and boot the dispatcher + worker pool
+    /// (one worker per *programmed* region; free regions get workers
+    /// hot-added when a tenant programs them).
     pub fn start<F>(builder: F) -> Result<ShardedEngine>
     where
         F: FnOnce() -> Result<System>,
@@ -74,87 +289,37 @@ impl ShardedEngine {
         // Split the shared core: the dispatcher owns the timing half
         // outright (admission is single-threaded); only the NoC — touched
         // by whichever worker streams — needs a mutex.
-        let SharedCore { noc, mut timing } = parts.core;
-        let noc = Arc::new(Mutex::new(noc));
-        let io_cfg: IoConfig = parts.io_cfg;
-
-        // One FIFO work queue + worker thread per VR shard.
-        let mut shard_txs: Vec<mpsc::Sender<Work>> = Vec::with_capacity(parts.plans.len());
-        let mut workers: Vec<JoinHandle<Metrics>> = Vec::with_capacity(parts.plans.len());
-        for plan in &parts.plans {
-            let (wtx, wrx) = mpsc::channel::<Work>();
-            shard_txs.push(wtx);
-            workers.push(Self::spawn_worker(
-                plan.clone(),
-                wrx,
-                Arc::clone(&noc),
-                Arc::clone(&parts.runtime),
-                io_cfg,
-            ));
-        }
+        let SharedCore { noc, timing } = parts.core;
+        let n = parts.plans.len();
+        let mut dispatch = Dispatch {
+            hv: parts.hv,
+            timing,
+            plans: parts.plans,
+            noc: Arc::new(Mutex::new(noc)),
+            runtime: parts.runtime,
+            io_cfg: parts.io_cfg,
+            shard_txs: (0..n).map(|_| None).collect(),
+            workers: (0..n).map(|_| None).collect(),
+            metrics: parts.metrics,
+            next_rid: 0,
+        };
+        dispatch.reconcile_workers();
 
         let (tx, rx) = mpsc::channel::<Msg>();
-        let plans = parts.plans;
-        let mut metrics = parts.metrics;
         let dispatcher = std::thread::spawn(move || {
-            let mut next_rid = 0u64;
             while let Ok(msg) = rx.recv() {
-                let Msg::Req(Request { vi, vr, payload, reply }) = msg else { break };
-                // Request ids are consumed in arrival order (even by
-                // rejected requests), mirroring the serial engine, so both
-                // engines draw identical per-request timing on one trace.
-                let rid = next_rid;
-                next_rid += 1;
-                let Some(plan) = plans.get(vr) else {
-                    let _ = reply.send(Err(anyhow::anyhow!("VR{vr} does not exist")));
-                    continue;
-                };
-                if let Err(e) = plan.check_access(vi, &mut metrics) {
-                    let _ = reply.send(Err(e));
-                    continue;
+                match msg {
+                    Msg::Shutdown => break,
+                    Msg::Req(req) => dispatch.handle_req(req),
+                    Msg::Ctl(CtlRequest { op, reply }) => {
+                        let _ = reply.send(dispatch.handle_ctl(&op));
+                    }
                 }
-                let adm = timing.admit(rid);
-                let _ = shard_txs[vr].send(Work { vi, payload, adm, reply });
             }
-            // Close the shard queues; workers drain what is already queued,
-            // then hand back their per-shard metrics for the merge. A
-            // worker panic must surface (via the dispatcher's own join in
-            // `stop`), never silently undercount the merged totals.
-            drop(shard_txs);
-            for w in workers {
-                metrics.merge(&w.join().expect("shard worker panicked"));
-            }
-            metrics
+            dispatch.shutdown()
         });
 
         Ok(ShardedEngine { handle: EngineHandle { tx }, dispatcher: Some(dispatcher) })
-    }
-
-    /// One shard's worker loop: serve admitted requests FIFO, accumulate
-    /// per-shard metrics, return them when the queue closes.
-    fn spawn_worker(
-        plan: ShardPlan,
-        wrx: mpsc::Receiver<Work>,
-        noc: Arc<Mutex<NocSim>>,
-        runtime: Arc<Runtime>,
-        io_cfg: IoConfig,
-    ) -> JoinHandle<Metrics> {
-        std::thread::spawn(move || {
-            let mut metrics = Metrics::default();
-            let mut gate = &*noc;
-            let env = ShardEnv { runtime: runtime.as_ref(), io_cfg: &io_cfg };
-            while let Ok(w) = wrx.recv() {
-                let resp = serve_admitted(
-                    ShardRequest { vi: w.vi, payload: &w.payload, adm: w.adm },
-                    &plan,
-                    &env,
-                    &mut gate,
-                    &mut metrics,
-                );
-                let _ = w.reply.send(resp);
-            }
-            metrics
-        })
     }
 
     /// A new client handle onto the engine.
@@ -243,5 +408,79 @@ mod tests {
         }
         let metrics = engine.stop();
         assert_eq!(metrics.requests, 12);
+    }
+
+    #[test]
+    fn hot_add_and_hot_drain_shards_via_handle() {
+        let engine = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+        let h = engine.handle();
+        let vi = match h.lifecycle(LifecycleOp::CreateVi { name: "tenant".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            other => panic!("expected Vi, got {other:?}"),
+        };
+        let vr = match h.lifecycle(LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            other => panic!("expected Vr, got {other:?}"),
+        };
+        assert!(h.call(vi, vr, vec![1u8; 16]).is_err(), "no shard before programming");
+        h.lifecycle(LifecycleOp::Program { vi, vr, design: "fir".into(), dest: None }).unwrap();
+        // The request lands inside the reconfiguration window: it queues
+        // (modeled) and still serves.
+        let resp = h.call(vi, vr, vec![1u8; 64]).unwrap();
+        assert_eq!(resp.path, vec!["fir".to_string()]);
+        h.lifecycle(LifecycleOp::Release { vi, vr }).unwrap();
+        assert!(h.call(vi, vr, vec![1u8; 16]).is_err(), "drained shard must stop serving");
+        // The freed region is immediately reusable by a new tenant.
+        let vi2 = match h.lifecycle(LifecycleOp::CreateVi { name: "next".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            _ => unreachable!(),
+        };
+        assert_eq!(
+            h.lifecycle(LifecycleOp::Allocate { vi: vi2 }).unwrap(),
+            LifecycleOutcome::Vr(vr),
+            "free pool must hand back the drained region"
+        );
+        h.lifecycle(LifecycleOp::Program { vi: vi2, vr, design: "aes".into(), dest: None })
+            .unwrap();
+        let resp = h.call(vi2, vr, vec![2u8; 32]).unwrap();
+        assert_eq!(resp.path, vec!["aes".to_string()]);
+        assert!(h.call(vi, vr, vec![1u8; 16]).is_err(), "old owner stays locked out");
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 2);
+        assert!(metrics.rejected >= 1, "old-owner probe is an access rejection");
+    }
+
+    #[test]
+    fn grow_streams_into_the_new_region_live() {
+        let engine = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+        let h = engine.handle();
+        let vi = match h.lifecycle(LifecycleOp::CreateVi { name: "vi3".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            _ => unreachable!(),
+        };
+        let src = match h.lifecycle(LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            _ => unreachable!(),
+        };
+        h.lifecycle(LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None })
+            .unwrap();
+        let solo = h.call(vi, src, vec![5u8; 64]).unwrap();
+        assert_eq!(solo.path, vec!["fpu".to_string()]);
+        // Elastic growth while serving: the FPU chain appears live.
+        let dst = match h
+            .lifecycle(LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() })
+            .unwrap()
+        {
+            LifecycleOutcome::Vr(vr) => vr,
+            other => panic!("expected Vr, got {other:?}"),
+        };
+        let chained = h.call(vi, src, vec![5u8; 64]).unwrap();
+        assert_eq!(chained.path, vec!["fpu".to_string(), "aes".to_string()]);
+        assert!(chained.timing.noc_cycles > 0, "the stream must cross the NoC");
+        // The grown region serves its own traffic too.
+        let direct = h.call(vi, dst, vec![3u8; 32]).unwrap();
+        assert_eq!(direct.path, vec!["aes".to_string()]);
+        let metrics = engine.stop();
+        assert_eq!(metrics.requests, 3);
     }
 }

@@ -10,24 +10,52 @@
 //! same trace in the same order now produces identical modeled timings,
 //! which is exactly what the serial-vs-sharded property tests assert
 //! (`rust/tests/sharded_serving.rs`).
+//!
+//! # Reconfiguration-aware admission
+//!
+//! Programming a region is not free: the ICAP streams a partial bitstream
+//! for `reconfig_time_us` while the region cannot serve. A lifecycle op
+//! charges that as a **per-VR unavailability window**
+//! ([`TimingCore::begin_reconfig`]); requests admitted inside the window
+//! queue behind it (their entry-point arrival is pushed to the window
+//! end), and once [`RECONFIG_BACKLOG`] requests are already waiting the
+//! gate rejects further arrivals ([`Gate::Busy`]) — bounded backpressure
+//! instead of an unbounded stall. Both behaviors are pure functions of
+//! (seed, rid, admission order, lifecycle trace position), so serial and
+//! sharded engines replaying one trace stay identical through churn.
 
 use crate::cloud::middleware::EntryPoint;
 use crate::util::Rng;
+use std::collections::HashMap;
 
 /// Mean inter-arrival gap of the modeled tenant workload (µs).
 pub const MEAN_GAP_US: f64 = 40.0;
+
+/// Bounded backpressure: how many requests may queue behind one VR's
+/// reconfiguration window before admission starts rejecting.
+pub const RECONFIG_BACKLOG: usize = 8;
 
 /// Odd multiplier decorrelating consecutive request ids before they seed
 /// the per-request RNG (SplitMix64's golden-gamma constant).
 const RID_GAMMA: u64 = 0x9E3779B97F4A7C15;
 
-/// Deterministic admission state shared by every shard: the arrival clock
-/// and the cloud middleware's FIFO entry point.
+/// One VR's reconfiguration window: closed to immediate service until
+/// `until_us`, with `queued` requests already waiting on it.
+#[derive(Debug, Clone, Copy)]
+struct Window {
+    until_us: f64,
+    queued: usize,
+}
+
+/// Deterministic admission state shared by every shard: the arrival clock,
+/// the cloud middleware's FIFO entry point, and the open per-VR
+/// reconfiguration windows.
 #[derive(Debug, Clone)]
 pub struct TimingCore {
     seed: u64,
     entry: EntryPoint,
     clock_us: f64,
+    windows: HashMap<usize, Window>,
 }
 
 /// What a request takes away from admission: its entry-point wait and a
@@ -36,29 +64,104 @@ pub struct TimingCore {
 /// how concurrent tenants interleave.
 #[derive(Debug, Clone)]
 pub struct Admission {
-    /// Time spent at the shared entry point (µs, queueing + service).
+    /// Time spent at the shared entry point (µs, queueing + service),
+    /// including any wait behind an open reconfiguration window.
     pub queue_wait_us: f64,
     /// Request-private RNG seeded from the request id.
     pub rng: Rng,
+    /// Lifecycle epoch of the target VR this ticket was minted against.
+    /// The serving path re-checks it, so a ticket that predates a
+    /// reconfiguration can never execute against the region's next owner.
+    pub epoch: u64,
+}
+
+/// Outcome of reconfiguration-aware admission ([`TimingCore::admit_vr`]).
+#[derive(Debug, Clone)]
+pub enum Gate {
+    /// The request is admitted (its wait includes any reconfiguration-
+    /// window delay).
+    Admitted(Admission),
+    /// Rejected: the VR's reconfiguration backlog is full (bounded
+    /// backpressure).
+    Busy {
+        /// µs until the VR's reconfiguration window closes.
+        busy_for_us: f64,
+    },
 }
 
 impl TimingCore {
     /// Core with an admission seed (all per-request draws derive from it).
     pub fn new(seed: u64) -> Self {
-        TimingCore { seed, entry: EntryPoint::new(), clock_us: 0.0 }
+        TimingCore { seed, entry: EntryPoint::new(), clock_us: 0.0, windows: HashMap::new() }
     }
 
-    /// Admit request `rid`: advance the arrival clock by the request's
-    /// deterministic inter-arrival draw and pass the FIFO entry point.
+    /// Start (or extend) VR `vr`'s reconfiguration window: for `dur_us`
+    /// of arrival-clock time the region is unavailable. Overlapping
+    /// reconfigurations extend the window and keep its backlog; an
+    /// expired window is replaced afresh.
+    pub fn begin_reconfig(&mut self, vr: usize, dur_us: f64) {
+        let until_us = self.clock_us + dur_us.max(0.0);
+        match self.windows.get_mut(&vr) {
+            Some(w) if w.until_us > self.clock_us => {
+                if w.until_us < until_us {
+                    w.until_us = until_us;
+                }
+            }
+            _ => {
+                self.windows.insert(vr, Window { until_us, queued: 0 });
+            }
+        }
+    }
+
+    /// Whether VR `vr` currently sits inside a reconfiguration window.
+    pub fn reconfiguring(&self, vr: usize) -> bool {
+        self.windows.get(&vr).is_some_and(|w| w.until_us > self.clock_us)
+    }
+
+    /// Admit request `rid` bound for VR `vr` (whose lifecycle epoch is
+    /// `epoch`): advance the arrival clock by the request's deterministic
+    /// inter-arrival draw, wait out any open reconfiguration window on
+    /// the VR (or reject once the window's backlog is full), and pass the
+    /// FIFO entry point.
     ///
     /// Callers must admit in a deterministic order for reproducible queue
     /// waits (both engines admit in submission order: the serial executor
     /// trivially, the sharded engine from its single dispatcher thread).
-    pub fn admit(&mut self, rid: u64) -> Admission {
+    pub fn admit_vr(&mut self, rid: u64, vr: usize, epoch: u64) -> Gate {
         let mut rng = Rng::new(self.seed ^ rid.wrapping_mul(RID_GAMMA));
         self.clock_us += rng.exponential(MEAN_GAP_US);
+        // The reconfiguration wait happens *at the region*, after the
+        // shared entry point: a queued request must not occupy the entry
+        // point until its window closes, or every other tenant would
+        // inherit the wait through the FIFO's `free_at`.
+        let mut region_ready_us = 0.0f64;
+        if let Some(w) = self.windows.get_mut(&vr) {
+            if w.until_us <= self.clock_us {
+                // The window closed before this arrival: clean it up.
+                self.windows.remove(&vr);
+            } else if w.queued >= RECONFIG_BACKLOG {
+                return Gate::Busy { busy_for_us: w.until_us - self.clock_us };
+            } else {
+                w.queued += 1;
+                region_ready_us = w.until_us;
+            }
+        }
         let admitted = self.entry.admit(self.clock_us);
-        Admission { queue_wait_us: admitted - self.clock_us, rng }
+        Gate::Admitted(Admission {
+            queue_wait_us: admitted.max(region_ready_us) - self.clock_us,
+            rng,
+            epoch,
+        })
+    }
+
+    /// Admit request `rid` with no VR gate (legacy shape kept for callers
+    /// that model arrival timing only). Draws are identical to
+    /// [`TimingCore::admit_vr`] on a VR with no open window.
+    pub fn admit(&mut self, rid: u64) -> Admission {
+        match self.admit_vr(rid, usize::MAX, 0) {
+            Gate::Admitted(adm) => adm,
+            Gate::Busy { .. } => unreachable!("no reconfiguration window gates the null VR"),
+        }
     }
 
     /// Current arrival-clock value (µs).
@@ -125,6 +228,98 @@ mod tests {
             core.admit(rid);
             assert!(core.clock_us() > last);
             last = core.clock_us();
+        }
+    }
+
+    #[test]
+    fn reconfig_window_delays_then_rejects() {
+        let mut core = TimingCore::new(5);
+        core.begin_reconfig(2, 1_000_000.0); // far beyond any arrival draw
+        assert!(core.reconfiguring(2));
+        let mut queued = 0;
+        let mut busy = 0;
+        for rid in 0..(RECONFIG_BACKLOG as u64 + 4) {
+            match core.admit_vr(rid, 2, 9) {
+                Gate::Admitted(adm) => {
+                    queued += 1;
+                    assert_eq!(adm.epoch, 9);
+                    // Wait spans the remaining window: far beyond any
+                    // plain entry-point backlog.
+                    assert!(adm.queue_wait_us > 100_000.0, "wait {}", adm.queue_wait_us);
+                }
+                Gate::Busy { busy_for_us } => {
+                    busy += 1;
+                    assert!(busy_for_us > 0.0);
+                }
+            }
+        }
+        assert_eq!(queued, RECONFIG_BACKLOG);
+        assert_eq!(busy, 4, "backlog overflow must reject");
+    }
+
+    #[test]
+    fn expired_window_readmits_normally() {
+        let mut core = TimingCore::new(6);
+        core.begin_reconfig(1, 0.0); // closes immediately
+        let Gate::Admitted(adm) = core.admit_vr(0, 1, 0) else { panic!("must admit") };
+        // No window wait: only the idle entry point's service time.
+        assert_eq!(adm.queue_wait_us, crate::cloud::middleware::ENTRY_SERVICE_US);
+        assert!(!core.reconfiguring(1));
+    }
+
+    #[test]
+    fn windows_gate_only_their_own_vr() {
+        let mut core = TimingCore::new(8);
+        core.begin_reconfig(0, 1_000_000.0);
+        let Gate::Admitted(adm) = core.admit_vr(0, 3, 0) else { panic!("must admit") };
+        assert!(adm.queue_wait_us < 1_000.0, "other VRs must not wait");
+    }
+
+    #[test]
+    fn window_wait_does_not_pollute_the_shared_entry_point() {
+        // A request queued behind VR0's window passes the entry point at
+        // its *arrival* time; the window wait happens at the region. The
+        // next request — a different tenant, a different VR — must see
+        // only the ordinary entry-point backlog, never the window.
+        let mut core = TimingCore::new(21);
+        core.begin_reconfig(0, 1_000_000.0);
+        let Gate::Admitted(queued) = core.admit_vr(0, 0, 0) else { panic!("must admit") };
+        assert!(queued.queue_wait_us > 900_000.0, "the gated VR waits out the window");
+        let Gate::Admitted(other) = core.admit_vr(1, 3, 0) else { panic!("must admit") };
+        assert!(
+            other.queue_wait_us < 1_000.0,
+            "other VRs must not inherit the window wait (got {})",
+            other.queue_wait_us
+        );
+    }
+
+    #[test]
+    fn overlapping_reconfigs_extend_the_window() {
+        let mut a = TimingCore::new(9);
+        a.begin_reconfig(4, 500.0);
+        a.begin_reconfig(4, 2_000.0);
+        a.begin_reconfig(4, 100.0); // shorter overlap must not shrink it
+        let mut b = TimingCore::new(9);
+        b.begin_reconfig(4, 2_000.0);
+        let (Gate::Admitted(x), Gate::Admitted(y)) = (a.admit_vr(0, 4, 0), b.admit_vr(0, 4, 0))
+        else {
+            panic!("must admit")
+        };
+        assert_eq!(x.queue_wait_us, y.queue_wait_us);
+    }
+
+    #[test]
+    fn gated_and_ungated_draws_are_identical_without_windows() {
+        // `admit` and `admit_vr` must stay in lockstep so mixing callers
+        // never perturbs the deterministic trace.
+        let mut a = TimingCore::new(12);
+        let mut b = TimingCore::new(12);
+        for rid in 0..20u64 {
+            let x = a.admit(rid);
+            let Gate::Admitted(y) = b.admit_vr(rid, 3, 7) else { panic!("must admit") };
+            assert_eq!(x.queue_wait_us, y.queue_wait_us);
+            let (mut rx, mut ry) = (x.rng, y.rng);
+            assert_eq!(rx.next_u64(), ry.next_u64());
         }
     }
 }

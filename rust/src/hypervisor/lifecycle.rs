@@ -1,0 +1,577 @@
+//! Runtime tenant-lifecycle API: ops a *serving* system applies live.
+//!
+//! §III-A's elasticity means allocate / program / resize / release happen
+//! while traffic flows. A quiesced rebuild (tear the engine down, re-split
+//! the system) would serialize every tenant behind every reconfiguration,
+//! so instead each operation **emits a [`Delta`]** describing exactly what
+//! it changed:
+//!
+//! - `replan` — VRs whose serving snapshot ([`ShardPlan`]) is stale and
+//!   must be rebuilt (the region itself plus any region whose Wrapper
+//!   registers stream into it);
+//! - `reconfig` — partial-reconfiguration windows started, charged to
+//!   admission as per-VR unavailability (`TimingCore::begin_reconfig`);
+//! - `wired` / `unwired` — direct VR-to-VR streaming links edited live.
+//!
+//! The serial engine applies a delta trivially (it re-snapshots per
+//! request); the sharded engine drains exactly the affected worker shards
+//! ([`Hypervisor::quiesce_set`]), applies the op, rebuilds the listed
+//! plans, and hot-adds/hot-drains workers. Because both engines apply the
+//! same ops at the same trace positions against the same deterministic
+//! admission clock, their responses stay byte-identical under churn
+//! (`rust/tests/elastic_churn.rs`).
+//!
+//! [`ShardPlan`]: crate::coordinator::ShardPlan
+
+use super::{Event, Hypervisor, VrStatus};
+use crate::device::Resources;
+use crate::noc::NocSim;
+use anyhow::{bail, Result};
+
+/// A tenant lifecycle operation, applicable to a live serving system.
+///
+/// Ops carry concrete VR indices; allocation outcomes are deterministic
+/// (policy over hypervisor state), so a trace generator that mirrors the
+/// hypervisor can pre-resolve the indices its later ops refer to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LifecycleOp {
+    /// Create a virtual instance (no FPGA resources yet).
+    CreateVi {
+        /// Human-readable tenant name.
+        name: String,
+    },
+    /// Allocate one VR to a VI under the policy in force.
+    Allocate {
+        /// Requesting VI.
+        vi: u16,
+    },
+    /// Program a design into an allocated VR (partial reconfiguration;
+    /// starts a reconfiguration window) and optionally point its Wrapper
+    /// registers at a stream destination.
+    Program {
+        /// Owning VI.
+        vi: u16,
+        /// Target VR.
+        vr: usize,
+        /// Design name (resolved against the accelerator registry).
+        design: String,
+        /// Stream destination VR, if the design chains on-chip.
+        dest: Option<usize>,
+    },
+    /// Elastic growth: allocate an additional VR, program `design` into
+    /// it, and (if `stream_src` is given) retarget that region's Wrapper
+    /// registers at the new VR — wiring a direct link when adjacent.
+    Grow {
+        /// Growing VI.
+        vi: u16,
+        /// Existing programmed region that will stream into the new VR.
+        stream_src: Option<usize>,
+        /// Design for the new region.
+        design: String,
+    },
+    /// Wire a direct streaming link between two regions of one tenant
+    /// (both must be physically adjacent).
+    Wire {
+        /// Owning VI (must hold both endpoints).
+        vi: u16,
+        /// Source VR.
+        src: usize,
+        /// Destination VR.
+        dst: usize,
+    },
+    /// Release a VR back to the free pool (the engine drains its shard
+    /// first; links are unwired and the footprint uncommitted).
+    Release {
+        /// Owning VI.
+        vi: u16,
+        /// VR to release.
+        vr: usize,
+    },
+}
+
+/// What a successfully applied [`LifecycleOp`] produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleOutcome {
+    /// A VI was created with this id.
+    Vi(u16),
+    /// A VR was allocated (or grown) at this index.
+    Vr(usize),
+    /// The op completed with nothing to return.
+    Done,
+}
+
+/// The observable serving-side changes of one lifecycle operation — what
+/// a live engine must do to keep serving correctly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Delta {
+    /// VRs whose [`ShardPlan`](crate::coordinator::ShardPlan) snapshots
+    /// must be rebuilt.
+    pub replan: Vec<usize>,
+    /// Reconfiguration windows started: `(vr, duration µs)` to charge as
+    /// admission unavailability.
+    pub reconfig: Vec<(usize, f64)>,
+    /// Direct streaming links newly wired.
+    pub wired: Vec<(usize, usize)>,
+    /// Direct streaming links unwired by this op.
+    pub unwired: Vec<(usize, usize)>,
+}
+
+impl Delta {
+    fn note_replan(&mut self, vr: usize) {
+        if !self.replan.contains(&vr) {
+            self.replan.push(vr);
+        }
+    }
+}
+
+impl Hypervisor {
+    /// VRs whose in-flight work must drain *before* `op` is applied to a
+    /// live engine: their serving behavior (design, stream chaining,
+    /// direct-link choice, destination access monitor) depends on state
+    /// the op mutates. The serial engine gets this ordering for free; the
+    /// sharded engine drains exactly these worker shards.
+    pub fn quiesce_set(&self, op: &LifecycleOp) -> Vec<usize> {
+        let mut set: Vec<usize> = match op {
+            LifecycleOp::Program { vr, .. } | LifecycleOp::Release { vr, .. } => {
+                let mut s = vec![*vr];
+                s.extend(self.streamers_into(*vr));
+                s
+            }
+            LifecycleOp::Grow { stream_src: Some(src), .. } => vec![*src],
+            LifecycleOp::Wire { src, .. } => vec![*src],
+            _ => Vec::new(),
+        };
+        set.retain(|&v| v < self.vrs.len());
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    /// Read-only validation of a lifecycle op against the current
+    /// tenancy: bounds, ownership, pool headroom, adjacency. [`apply`]
+    /// runs it first, and a live engine runs it *before* draining worker
+    /// shards so an invalid op never disturbs healthy tenants. The one
+    /// gate it cannot see is footprint fit (that needs the resolver);
+    /// [`apply`]'s grow path rolls back cleanly if that commit fails.
+    ///
+    /// [`apply`]: Hypervisor::apply
+    pub fn precheck(&self, op: &LifecycleOp) -> Result<()> {
+        let held_by = |vr: usize, vi: u16| -> Result<()> {
+            if vr >= self.vrs.len() {
+                bail!("VR{vr} does not exist");
+            }
+            match &self.vrs[vr].status {
+                VrStatus::Allocated { vi: o } | VrStatus::Programmed { vi: o, .. }
+                    if *o == vi => {}
+                _ => bail!("VR{vr} is not held by VI {vi}"),
+            }
+            Ok(())
+        };
+        match op {
+            LifecycleOp::CreateVi { .. } => Ok(()),
+            LifecycleOp::Allocate { vi } | LifecycleOp::Grow { vi, stream_src: None, .. } => {
+                if !self.vis.contains_key(vi) {
+                    bail!("unknown VI {vi}");
+                }
+                if self.free_vrs() == 0 {
+                    bail!("no free VR for VI {vi} (resource pool exhausted)");
+                }
+                Ok(())
+            }
+            LifecycleOp::Program { vi, vr, dest, .. } => {
+                held_by(*vr, *vi)?;
+                if let Some(d) = dest {
+                    if *d >= self.vrs.len() {
+                        bail!("stream destination VR{d} does not exist");
+                    }
+                }
+                Ok(())
+            }
+            LifecycleOp::Grow { vi, stream_src: Some(src), .. } => {
+                if !self.vis.contains_key(vi) {
+                    bail!("unknown VI {vi}");
+                }
+                if self.free_vrs() == 0 {
+                    bail!("no free VR for VI {vi} (resource pool exhausted)");
+                }
+                if *src >= self.vrs.len() {
+                    bail!("stream source VR{src} does not exist");
+                }
+                match &self.vrs[*src].status {
+                    VrStatus::Programmed { vi: o, .. } if o == vi => Ok(()),
+                    _ => bail!("stream source VR{src} is not a programmed region of VI {vi}"),
+                }
+            }
+            LifecycleOp::Wire { vi, src, dst } => {
+                held_by(*src, *vi)?;
+                held_by(*dst, *vi)?;
+                if !self.topo.vrs_adjacent(*src, *dst) {
+                    bail!("VR{src} and VR{dst} are not adjacent; cannot wire a direct link");
+                }
+                Ok(())
+            }
+            LifecycleOp::Release { vi, vr } => held_by(*vr, *vi),
+        }
+    }
+
+    /// Apply one lifecycle op, emitting the wiring [`Delta`] a live
+    /// engine needs. `footprint_of` resolves a design name to the
+    /// resource footprint committed into the region's pblock (the
+    /// coordinator wires in the Table I registry; `None` programs with an
+    /// empty footprint).
+    pub fn apply(
+        &mut self,
+        op: &LifecycleOp,
+        footprint_of: &dyn Fn(&str) -> Option<Resources>,
+        sim: &mut NocSim,
+    ) -> Result<(LifecycleOutcome, Delta)> {
+        self.precheck(op)?;
+        let mut delta = Delta::default();
+        match op {
+            LifecycleOp::CreateVi { name } => {
+                Ok((LifecycleOutcome::Vi(self.create_vi(name)), delta))
+            }
+            LifecycleOp::Allocate { vi } => {
+                let vr = self.allocate_vr(*vi, sim)?;
+                delta.note_replan(vr);
+                Ok((LifecycleOutcome::Vr(vr), delta))
+            }
+            LifecycleOp::Program { vi, vr, design, dest } => {
+                for s in self.streamers_into(*vr) {
+                    delta.note_replan(s);
+                }
+                let time_us =
+                    self.program_with_footprint(*vi, *vr, design, *dest, footprint_of)?;
+                delta.note_replan(*vr);
+                delta.reconfig.push((*vr, time_us));
+                Ok((LifecycleOutcome::Done, delta))
+            }
+            LifecycleOp::Grow { vi, stream_src, design } => {
+                // Source validity (bounds, ownership, programmed) was
+                // established by `precheck` above.
+                let vr = self.allocate_vr(*vi, sim)?;
+                // Program first: if the footprint does not fit, roll the
+                // allocation back so a failed grow never leaks a region
+                // (and never leaves src streaming at an unprogrammed VR).
+                let time_us = match self.program_with_footprint(*vi, vr, design, None, footprint_of)
+                {
+                    Ok(time_us) => time_us,
+                    Err(e) => {
+                        let _ = self.release_vr(*vi, vr, sim);
+                        return Err(e);
+                    }
+                };
+                delta.note_replan(vr);
+                delta.reconfig.push((vr, time_us));
+                if let Some(src) = stream_src {
+                    // The source now streams at the new region: any
+                    // previously wired direct link from it is stale and
+                    // must come down even when the new region is not
+                    // adjacent (same replace-semantics as `Wire`).
+                    if let Some(old) = sim.unwire_direct(*src) {
+                        delta.unwired.push((*src, old));
+                    }
+                    if self.topo.vrs_adjacent(*src, vr) {
+                        sim.wire_direct(*src, vr)?;
+                        self.events.push(Event::DirectLinkWired { src: *src, dst: vr });
+                        delta.wired.push((*src, vr));
+                    }
+                    self.retarget_stream(*vi, *src, Some(vr))?;
+                    delta.note_replan(*src);
+                }
+                Ok((LifecycleOutcome::Vr(vr), delta))
+            }
+            LifecycleOp::Wire { vi: _, src, dst } => {
+                // Ownership and adjacency were established by `precheck`,
+                // so a refused op never reaches the teardown below.
+                if let Some(old) = sim.unwire_direct(*src) {
+                    delta.unwired.push((*src, old));
+                }
+                sim.wire_direct(*src, *dst)?;
+                self.events.push(Event::DirectLinkWired { src: *src, dst: *dst });
+                delta.note_replan(*src);
+                delta.wired.push((*src, *dst));
+                Ok((LifecycleOutcome::Done, delta))
+            }
+            LifecycleOp::Release { vi, vr } => {
+                for s in self.streamers_into(*vr) {
+                    delta.note_replan(s);
+                }
+                delta.unwired = sim
+                    .direct_links()
+                    .into_iter()
+                    .filter(|&(s, d)| s == *vr || d == *vr)
+                    .collect();
+                self.release_vr(*vi, *vr, sim)?;
+                delta.note_replan(*vr);
+                Ok((LifecycleOutcome::Done, delta))
+            }
+        }
+    }
+
+    /// Program a design, swapping the region's committed footprint in the
+    /// floorplan pblock (old out, new in). Ownership is pre-checked so a
+    /// footprint swap can never happen on a foreign region.
+    fn program_with_footprint(
+        &mut self,
+        vi: u16,
+        vr: usize,
+        design: &str,
+        dest: Option<usize>,
+        footprint_of: &dyn Fn(&str) -> Option<Resources>,
+    ) -> Result<f64> {
+        if vr >= self.vrs.len() {
+            bail!("VR{vr} does not exist");
+        }
+        match &self.vrs[vr].status {
+            VrStatus::Allocated { vi: o } | VrStatus::Programmed { vi: o, .. } if *o == vi => {}
+            _ => bail!("VR{vr} is not allocated to VI {vi}"),
+        }
+        if let Some(r) = footprint_of(design) {
+            let prev = self.vrs[vr].footprint;
+            self.floorplan.uncommit_vr(vr, &prev);
+            if let Err(e) = self.floorplan.commit_vr(vr, &r) {
+                // Roll the old footprint back: the region keeps serving
+                // its previous design.
+                let _ = self.floorplan.commit_vr(vr, &prev);
+                return Err(e);
+            }
+            self.vrs[vr].footprint = r;
+        }
+        self.program_vr(vi, vr, design, dest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel;
+    use crate::device::Device;
+    use crate::hypervisor::Policy;
+    use crate::placer::case_study_floorplan;
+
+    fn setup() -> (Hypervisor, NocSim) {
+        let device = Device::vu9p();
+        let (topo, fp) = case_study_floorplan(&device).unwrap();
+        let sim = NocSim::new(topo.clone());
+        (Hypervisor::new(topo, fp, Policy::AdjacentFirst), sim)
+    }
+
+    fn footprint(design: &str) -> Option<Resources> {
+        accel::by_name(design).map(|s| s.resources)
+    }
+
+    #[test]
+    fn deploy_emits_replan_and_reconfig() {
+        let (mut hv, mut sim) = setup();
+        let (out, _) = hv
+            .apply(&LifecycleOp::CreateVi { name: "t".into() }, &footprint, &mut sim)
+            .unwrap();
+        let LifecycleOutcome::Vi(vi) = out else { panic!("expected Vi") };
+        let (out, delta) =
+            hv.apply(&LifecycleOp::Allocate { vi }, &footprint, &mut sim).unwrap();
+        let LifecycleOutcome::Vr(vr) = out else { panic!("expected Vr") };
+        assert_eq!(delta.replan, vec![vr]);
+        assert!(delta.reconfig.is_empty());
+        let (_, delta) = hv
+            .apply(
+                &LifecycleOp::Program { vi, vr, design: "fir".into(), dest: None },
+                &footprint,
+                &mut sim,
+            )
+            .unwrap();
+        assert!(delta.replan.contains(&vr));
+        assert_eq!(delta.reconfig.len(), 1);
+        assert_eq!(delta.reconfig[0].0, vr);
+        assert!(delta.reconfig[0].1 > 0.0, "reconfiguration must take time");
+        // Footprint landed in the pblock.
+        let fir = footprint("fir").unwrap();
+        assert_eq!(hv.vrs[vr].footprint, fir);
+        assert_eq!(hv.floorplan.pblocks.get(hv.floorplan.vr_pb[vr]).used, fir);
+    }
+
+    #[test]
+    fn reprogram_swaps_the_footprint_instead_of_accumulating() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let vr = hv.allocate_vr(vi, &mut sim).unwrap();
+        for _ in 0..20 {
+            hv.apply(
+                &LifecycleOp::Program { vi, vr, design: "fpu".into(), dest: None },
+                &footprint,
+                &mut sim,
+            )
+            .unwrap();
+        }
+        // 20 reprograms of a 4122-LUT design would overflow the 8968-LUT
+        // pblock if commits accumulated.
+        assert_eq!(hv.vrs[vr].footprint, footprint("fpu").unwrap());
+        assert_eq!(hv.floorplan.pblocks.get(hv.floorplan.vr_pb[vr]).used, footprint("fpu").unwrap());
+    }
+
+    #[test]
+    fn grow_wires_retargets_and_programs() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        let (out, delta) = hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() },
+                &footprint,
+                &mut sim,
+            )
+            .unwrap();
+        let LifecycleOutcome::Vr(vr) = out else { panic!("expected Vr") };
+        assert!(hv.topo.vrs_adjacent(src, vr), "AdjacentFirst must land next door");
+        assert!(sim.has_direct(src, vr), "adjacent growth wires the direct link");
+        assert_eq!(hv.vrs[src].stream_dest, Some(vr), "source registers retargeted");
+        assert!(delta.replan.contains(&src) && delta.replan.contains(&vr));
+        assert_eq!(delta.wired, vec![(src, vr)]);
+        assert_eq!(delta.reconfig.len(), 1);
+    }
+
+    #[test]
+    fn release_reports_unwired_links_and_stale_streamers() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        let (out, _) = hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() },
+                &footprint,
+                &mut sim,
+            )
+            .unwrap();
+        let LifecycleOutcome::Vr(dst) = out else { panic!("expected Vr") };
+        let (_, delta) =
+            hv.apply(&LifecycleOp::Release { vi, vr: dst }, &footprint, &mut sim).unwrap();
+        assert!(delta.unwired.contains(&(src, dst)), "release must unwire the link");
+        assert!(delta.replan.contains(&src), "the streamer's plan is stale");
+        assert!(delta.replan.contains(&dst));
+        assert_eq!(hv.vrs[dst].status, VrStatus::Free);
+        assert!(sim.direct_links().is_empty());
+        assert!(hv.vrs[dst].footprint.is_zero(), "footprint uncommitted on release");
+    }
+
+    #[test]
+    fn quiesce_set_covers_the_region_and_its_streamers() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        let dst = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: Some(dst) },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: dst, design: "aes".into(), dest: None },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        // Releasing the destination must quiesce the source too.
+        let q = hv.quiesce_set(&LifecycleOp::Release { vi, vr: dst });
+        assert_eq!(q, vec![src, dst]);
+        // Allocation quiesces nothing (the target is free, no shard runs).
+        assert!(hv.quiesce_set(&LifecycleOp::Allocate { vi }).is_empty());
+        // Wild indices never panic the dispatcher.
+        assert!(hv.quiesce_set(&LifecycleOp::Release { vi, vr: 999 }).is_empty());
+    }
+
+    #[test]
+    fn failed_grow_rolls_back_the_allocation() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        let old_dest = hv.vrs[src].stream_dest;
+        let free_before = hv.free_vrs();
+        // A resolver whose footprint can never fit a VR pblock: the
+        // commit fails *after* allocation, the hard rollback path.
+        let oversized = |_: &str| Some(Resources { lut: 1_000_000, ..Resources::ZERO });
+        assert!(hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() },
+                &oversized,
+                &mut sim,
+            )
+            .is_err());
+        assert_eq!(hv.free_vrs(), free_before, "failed grow must not leak a VR");
+        assert_eq!(hv.vrs[src].stream_dest, old_dest, "src must not be retargeted");
+        assert!(sim.direct_links().is_empty(), "no link may survive a failed grow");
+    }
+
+    #[test]
+    fn wire_replaces_an_existing_link_cleanly() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let a = hv.allocate_vr(vi, &mut sim).unwrap();
+        let b = hv.allocate_vr(vi, &mut sim).unwrap();
+        let c = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(&LifecycleOp::Wire { vi, src: a, dst: b }, &footprint, &mut sim).unwrap();
+        // Re-aiming the link must tear the old one down and report it.
+        let (_, delta) =
+            hv.apply(&LifecycleOp::Wire { vi, src: a, dst: c }, &footprint, &mut sim).unwrap();
+        assert_eq!(delta.unwired, vec![(a, b)]);
+        assert_eq!(delta.wired, vec![(a, c)]);
+        assert!(sim.has_direct(a, c));
+        assert!(!sim.has_direct(a, b));
+        // A refused wire (non-adjacent endpoints) mutates nothing — not
+        // even the existing link it would have replaced.
+        while hv.free_vrs() > 0 {
+            hv.allocate_vr(vi, &mut sim).unwrap();
+        }
+        let far = (0..hv.vrs.len()).find(|&v| !hv.topo.vrs_adjacent(a, v) && v != a).unwrap();
+        let before = sim.direct_links();
+        assert!(hv
+            .apply(&LifecycleOp::Wire { vi, src: a, dst: far }, &footprint, &mut sim)
+            .is_err());
+        assert_eq!(sim.direct_links(), before, "refused wire must not unwire anything");
+    }
+
+    #[test]
+    fn failed_ops_leave_no_partial_tenancy() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let intruder = hv.create_vi("x");
+        let vr = hv.allocate_vr(vi, &mut sim).unwrap();
+        // Foreign program refused, footprint untouched.
+        assert!(hv
+            .apply(
+                &LifecycleOp::Program { vi: intruder, vr, design: "fir".into(), dest: None },
+                &footprint,
+                &mut sim,
+            )
+            .is_err());
+        assert!(hv.vrs[vr].footprint.is_zero());
+        // Grow from a non-programmed source refused before allocating.
+        let free_before = hv.free_vrs();
+        assert!(hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(vr), design: "aes".into() },
+                &footprint,
+                &mut sim,
+            )
+            .is_err());
+        assert_eq!(hv.free_vrs(), free_before, "failed grow must not leak a VR");
+    }
+}

@@ -9,8 +9,12 @@
 //! the tenant's existing regions so the direct VR-to-VR links of Fig 3b
 //! can stream between sub-functions.
 
+pub mod lifecycle;
 pub mod reconfig;
 
+pub use lifecycle::{Delta, LifecycleOp, LifecycleOutcome};
+
+use crate::device::Resources;
 use crate::noc::{NocSim, Topology};
 use crate::placer::Floorplan;
 use anyhow::{bail, Result};
@@ -68,6 +72,15 @@ pub struct VrRecord {
     /// host). Set when `program_vr` is given a destination; the register
     /// fields mirror it in wire format.
     pub stream_dest: Option<usize>,
+    /// Monotonic lifecycle epoch: bumped on every allocate / program /
+    /// stream-retarget / release, and **never reset**. Admission tickets
+    /// record the epoch they were minted against, so a ticket that
+    /// predates a reconfiguration can never execute against the region's
+    /// next owner (the "stale rid" isolation guard).
+    pub epoch: u64,
+    /// Resource footprint currently committed into the VR's pblock (what
+    /// `release` uncommits so the region is truly reusable).
+    pub footprint: Resources,
 }
 
 /// A tenant's virtual instance.
@@ -93,6 +106,9 @@ pub enum Event {
     VrProgrammed { vi: u16, vr: usize, design: String, time_us: f64 },
     /// A direct VR-to-VR streaming link was wired.
     DirectLinkWired { src: usize, dst: usize },
+    /// A VR's Wrapper registers were retargeted at a new stream
+    /// destination (register edit, no partial reconfiguration).
+    StreamRetargeted { vi: u16, vr: usize, dest: Option<usize> },
     /// A VR returned to the free pool.
     VrReleased { vi: u16, vr: usize },
     /// A VI was torn down (all its VRs released).
@@ -128,6 +144,8 @@ impl Hypervisor {
                     status: VrStatus::Free,
                     registers: VrRegisters::default(),
                     stream_dest: None,
+                    epoch: 0,
+                    footprint: Resources::ZERO,
                 };
                 n
             ],
@@ -184,6 +202,7 @@ impl Hypervisor {
         };
         self.vrs[vr].status = VrStatus::Allocated { vi };
         self.vrs[vr].registers.vi_id = vi;
+        self.vrs[vr].epoch += 1;
         self.vis.get_mut(&vi).unwrap().vrs.push(vr);
         sim.assign_vr(vr, vi);
         self.events.push(Event::VrAllocated { vi, vr });
@@ -200,10 +219,18 @@ impl Hypervisor {
         design: &str,
         dest_vr: Option<usize>,
     ) -> Result<f64> {
+        if vr >= self.vrs.len() {
+            bail!("VR{vr} does not exist");
+        }
         match self.vrs[vr].status {
             VrStatus::Allocated { vi: owner } | VrStatus::Programmed { vi: owner, .. }
                 if owner == vi => {}
             _ => bail!("VR{vr} is not allocated to VI {vi}"),
+        }
+        if let Some(dst) = dest_vr {
+            if dst >= self.vrs.len() {
+                bail!("stream destination VR{dst} does not exist");
+            }
         }
         let rect = self.floorplan.pblocks.get(self.floorplan.vr_pb[vr]).rect;
         let time_us = reconfig::reconfig_time_us(&rect);
@@ -213,6 +240,7 @@ impl Hypervisor {
         }
         self.vrs[vr].stream_dest = dest_vr;
         self.vrs[vr].status = VrStatus::Programmed { vi, design: design.to_string() };
+        self.vrs[vr].epoch += 1;
         self.events.push(Event::VrProgrammed {
             vi,
             vr,
@@ -240,22 +268,37 @@ impl Hypervisor {
         Ok(vr)
     }
 
-    /// Release a VR back to the pool (rapid elasticity: resources are
-    /// "provisioned and released").
-    pub fn release_vr(&mut self, vi: u16, vr: usize, sim: &mut NocSim) -> Result<()> {
-        match &self.vrs[vr].status {
-            VrStatus::Allocated { vi: o } | VrStatus::Programmed { vi: o, .. } if *o == vi => {}
-            _ => bail!("VR{vr} is not held by VI {vi}"),
-        }
+    /// Reset one VR to the free pool: uncommit its footprint from the
+    /// floorplan, clear registers/stream wiring, bump the epoch (stale
+    /// admission tickets must stay detectable), and close the NoC access
+    /// monitor + unwire any direct links touching it.
+    fn free_vr(&mut self, vr: usize, sim: &mut NocSim) {
+        let footprint = self.vrs[vr].footprint;
+        self.floorplan.uncommit_vr(vr, &footprint);
         self.vrs[vr] = VrRecord {
             status: VrStatus::Free,
             registers: VrRegisters::default(),
             stream_dest: None,
+            epoch: self.vrs[vr].epoch + 1,
+            footprint: Resources::ZERO,
         };
+        sim.release_vr(vr);
+    }
+
+    /// Release a VR back to the pool (rapid elasticity: resources are
+    /// "provisioned and released").
+    pub fn release_vr(&mut self, vi: u16, vr: usize, sim: &mut NocSim) -> Result<()> {
+        if vr >= self.vrs.len() {
+            bail!("VR{vr} does not exist");
+        }
+        match &self.vrs[vr].status {
+            VrStatus::Allocated { vi: o } | VrStatus::Programmed { vi: o, .. } if *o == vi => {}
+            _ => bail!("VR{vr} is not held by VI {vi}"),
+        }
+        self.free_vr(vr, sim);
         if let Some(rec) = self.vis.get_mut(&vi) {
             rec.vrs.retain(|&x| x != vr);
         }
-        sim.release_vr(vr);
         self.events.push(Event::VrReleased { vi, vr });
         Ok(())
     }
@@ -264,14 +307,48 @@ impl Hypervisor {
     pub fn destroy_vi(&mut self, vi: u16, sim: &mut NocSim) -> Result<()> {
         let Some(rec) = self.vis.remove(&vi) else { bail!("unknown VI {vi}") };
         for vr in rec.vrs {
-            self.vrs[vr] = VrRecord {
-                status: VrStatus::Free,
-                registers: VrRegisters::default(),
-                stream_dest: None,
-            };
-            sim.release_vr(vr);
+            self.free_vr(vr, sim);
         }
         self.events.push(Event::ViDestroyed { vi });
+        Ok(())
+    }
+
+    /// Programmed VRs whose Wrapper registers currently stream into `vr`
+    /// (the shards whose plans change whenever `vr`'s contents do).
+    pub fn streamers_into(&self, vr: usize) -> Vec<usize> {
+        (0..self.vrs.len())
+            .filter(|&v| v != vr && self.vrs[v].stream_dest == Some(vr))
+            .collect()
+    }
+
+    /// Retarget VR `src`'s Wrapper registers at a new stream destination
+    /// (or back to the host with `None`). A register edit only — no
+    /// partial reconfiguration — but it changes the region's serving
+    /// behavior, so the epoch is bumped.
+    pub fn retarget_stream(&mut self, vi: u16, src: usize, dest: Option<usize>) -> Result<()> {
+        if src >= self.vrs.len() {
+            bail!("VR{src} does not exist");
+        }
+        match &self.vrs[src].status {
+            VrStatus::Allocated { vi: o } | VrStatus::Programmed { vi: o, .. } if *o == vi => {}
+            _ => bail!("VR{src} is not held by VI {vi}"),
+        }
+        match dest {
+            Some(d) => {
+                if d >= self.vrs.len() {
+                    bail!("stream destination VR{d} does not exist");
+                }
+                self.vrs[src].registers.dest_router_id = self.topo.router_of_vr(d);
+                self.vrs[src].registers.dest_vr_east = d % 2 == 1;
+            }
+            None => {
+                self.vrs[src].registers.dest_router_id = 0;
+                self.vrs[src].registers.dest_vr_east = false;
+            }
+        }
+        self.vrs[src].stream_dest = dest;
+        self.vrs[src].epoch += 1;
+        self.events.push(Event::StreamRetargeted { vi, vr: src, dest });
         Ok(())
     }
 
@@ -377,6 +454,54 @@ mod tests {
         let regs = h.vrs[src].registers;
         assert_eq!(regs.dest_router_id, h.topo.router_of_vr(dst));
         assert_eq!(regs.vi_id, vi);
+    }
+
+    #[test]
+    fn epochs_grow_monotonically_across_reuse() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let a = h.create_vi("a");
+        let vr = h.allocate_vr(a, &mut sim).unwrap();
+        let e0 = h.vrs[vr].epoch;
+        h.program_vr(a, vr, "fir", None).unwrap();
+        let e1 = h.vrs[vr].epoch;
+        h.release_vr(a, vr, &mut sim).unwrap();
+        let e2 = h.vrs[vr].epoch;
+        let b = h.create_vi("b");
+        assert_eq!(h.allocate_vr(b, &mut sim).unwrap(), vr);
+        let e3 = h.vrs[vr].epoch;
+        assert!(e0 < e1 && e1 < e2 && e2 < e3, "{e0} {e1} {e2} {e3}");
+    }
+
+    #[test]
+    fn retarget_stream_edits_registers_without_reprogramming() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let vi = h.create_vi("s");
+        let src = h.allocate_vr(vi, &mut sim).unwrap();
+        let d1 = h.allocate_vr(vi, &mut sim).unwrap();
+        let d2 = h.allocate_vr(vi, &mut sim).unwrap();
+        h.program_vr(vi, src, "fpu", Some(d1)).unwrap();
+        assert_eq!(h.vrs[src].stream_dest, Some(d1));
+        h.retarget_stream(vi, src, Some(d2)).unwrap();
+        assert_eq!(h.vrs[src].stream_dest, Some(d2));
+        assert_eq!(h.vrs[src].registers.dest_router_id, h.topo.router_of_vr(d2));
+        // Still programmed with the same design (no partial reconfig).
+        assert!(matches!(&h.vrs[src].status, VrStatus::Programmed { design, .. } if design == "fpu"));
+        h.retarget_stream(vi, src, None).unwrap();
+        assert_eq!(h.vrs[src].stream_dest, None);
+        // A foreign VI cannot edit the registers.
+        let other = h.create_vi("x");
+        assert!(h.retarget_stream(other, src, Some(d1)).is_err());
+    }
+
+    #[test]
+    fn streamers_into_tracks_wrapper_registers() {
+        let (mut h, mut sim) = setup(Policy::FirstFit);
+        let vi = h.create_vi("s");
+        let a = h.allocate_vr(vi, &mut sim).unwrap();
+        let b = h.allocate_vr(vi, &mut sim).unwrap();
+        h.program_vr(vi, a, "fpu", Some(b)).unwrap();
+        assert_eq!(h.streamers_into(b), vec![a]);
+        assert!(h.streamers_into(a).is_empty());
     }
 
     #[test]

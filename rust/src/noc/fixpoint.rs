@@ -113,18 +113,40 @@ impl FixpointSim {
     /// [`super::sim::NocSim::release_vr`]).
     pub fn release_vr(&mut self, vr: usize) {
         self.vrs[vr].owner_vi = None;
-        for src in 0..self.direct.len() {
-            let linked = src == vr || self.direct[src] == Some(vr);
-            if linked && self.direct[src].is_some() {
-                self.direct[src] = None;
-                while self.vrs[src].direct_out.pop_front().is_some() {
-                    self.active -= 1;
-                    self.stats.rejected += 1;
-                    self.vrs[src].rejected += 1;
-                }
-            }
+        let stale: Vec<usize> = (0..self.direct.len())
+            .filter(|&src| {
+                self.direct[src].is_some() && (src == vr || self.direct[src] == Some(vr))
+            })
+            .collect();
+        for src in stale {
+            self.unwire_direct(src);
         }
-        self.direct_srcs.retain(|&s| self.direct[s].is_some());
+    }
+
+    /// Unwire the direct link leaving `src`, dropping queued flits as
+    /// rejected (mirrors [`super::sim::NocSim::unwire_direct`]).
+    pub fn unwire_direct(&mut self, src: usize) -> Option<usize> {
+        let dst = self.direct.get(src).copied().flatten()?;
+        self.direct[src] = None;
+        while self.vrs[src].direct_out.pop_front().is_some() {
+            self.active -= 1;
+            self.stats.rejected += 1;
+            self.vrs[src].rejected += 1;
+        }
+        self.direct_srcs.retain(|&s| s != src);
+        Some(dst)
+    }
+
+    /// All currently wired direct VR->VR links, sorted `(src, dst)`
+    /// (mirrors [`super::sim::NocSim::direct_links`]).
+    pub fn direct_links(&self) -> Vec<(usize, usize)> {
+        let mut links: Vec<(usize, usize)> = self
+            .direct_srcs
+            .iter()
+            .filter_map(|&s| self.direct[s].map(|d| (s, d)))
+            .collect();
+        links.sort_unstable();
+        links
     }
 
     /// Wire a direct VR->VR streaming link (must be physically adjacent).

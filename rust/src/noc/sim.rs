@@ -247,18 +247,41 @@ impl NocSim {
     /// still queued on an unwired link are dropped as rejected.
     pub fn release_vr(&mut self, vr: usize) {
         self.vrs[vr].owner_vi = None;
-        for src in 0..self.direct.len() {
-            let linked = src == vr || self.direct[src] == Some(vr);
-            if linked && self.direct[src].is_some() {
-                self.direct[src] = None;
-                while self.vrs[src].direct_out.pop_front().is_some() {
-                    self.active -= 1;
-                    self.stats.rejected += 1;
-                    self.vrs[src].rejected += 1;
-                }
-            }
+        let stale: Vec<usize> = (0..self.direct.len())
+            .filter(|&src| {
+                self.direct[src].is_some() && (src == vr || self.direct[src] == Some(vr))
+            })
+            .collect();
+        for src in stale {
+            self.unwire_direct(src);
         }
-        self.direct_srcs.retain(|&s| self.direct[s].is_some());
+    }
+
+    /// Unwire the direct streaming link leaving `src` (live link teardown:
+    /// elastic retarget or release). Flits still queued on the link are
+    /// dropped as rejected. Returns the old destination, if a link was
+    /// wired.
+    pub fn unwire_direct(&mut self, src: usize) -> Option<usize> {
+        let dst = self.direct.get(src).copied().flatten()?;
+        self.direct[src] = None;
+        while self.vrs[src].direct_out.pop_front().is_some() {
+            self.active -= 1;
+            self.stats.rejected += 1;
+            self.vrs[src].rejected += 1;
+        }
+        self.direct_srcs.retain(|&s| s != src);
+        Some(dst)
+    }
+
+    /// All currently wired direct VR->VR links, sorted `(src, dst)`.
+    pub fn direct_links(&self) -> Vec<(usize, usize)> {
+        let mut links: Vec<(usize, usize)> = self
+            .direct_srcs
+            .iter()
+            .filter_map(|&s| self.direct[s].map(|d| (s, d)))
+            .collect();
+        links.sort_unstable();
+        links
     }
 
     /// Wire a direct VR->VR streaming link (must be physically adjacent).
@@ -683,7 +706,7 @@ mod tests {
         let mut s = sim3();
         let h = s.header_for(1, 1);
         for i in 0..50 {
-            s.send(0, h, vec![], i);
+            s.send(0, h, Payload::empty(), i);
         }
         let start = s.cycle();
         s.drain(256);
@@ -720,6 +743,23 @@ mod tests {
     }
 
     #[test]
+    fn unwire_direct_drops_queued_flits_and_reports_links() {
+        let mut s = sim3();
+        s.wire_direct(2, 3).unwrap();
+        s.wire_direct(4, 5).unwrap();
+        assert_eq!(s.direct_links(), vec![(2, 3), (4, 5)]);
+        let h = s.header_for(3, 3);
+        s.send_direct(2, h, vec![1u8], 0);
+        // Live teardown: the queued flit never crosses into the new epoch.
+        assert_eq!(s.unwire_direct(2), Some(3));
+        assert!(!s.has_direct(2, 3));
+        assert_eq!(s.in_flight(), 0, "queued flit must be dropped");
+        assert_eq!(s.stats.rejected, 1);
+        assert_eq!(s.unwire_direct(2), None, "second teardown is a no-op");
+        assert_eq!(s.direct_links(), vec![(4, 5)]);
+    }
+
+    #[test]
     fn fold_relay_adds_one_cycle() {
         // Two columns of 1 router each: link 0-1 is a fold.
         let mut s = NocSim::new(Topology::double_column(2));
@@ -727,7 +767,7 @@ mod tests {
             s.assign_vr(vr, 7);
         }
         let h = s.header_for(7, 2); // router 1 west VR
-        s.send(0, h, vec![], 0);
+        s.send(0, h, Payload::empty(), 0);
         s.drain(64);
         assert_eq!(s.stats.delivered, 1);
         // 2 routers (4 cycles) + 1 relay stage = 5.
@@ -740,8 +780,8 @@ mod tests {
         for i in 0..20 {
             let h_up = s.header_for(5, 5);
             let h_down = s.header_for(0, 0);
-            s.send(0, h_up, vec![], i);
-            s.send(5, h_down, vec![], i);
+            s.send(0, h_up, Payload::empty(), i);
+            s.send(5, h_down, Payload::empty(), i);
         }
         assert!(s.drain(512));
         assert_eq!(s.stats.delivered, 40);
@@ -755,9 +795,9 @@ mod tests {
         // VR0 via local W->E, VR2/VR4 arrive from the north.
         let h = s.header_for(1, 1);
         for i in 0..15 {
-            s.send(0, h, vec![], i);
-            s.send(2, h, vec![], i);
-            s.send(4, h, vec![], i);
+            s.send(0, h, Payload::empty(), i);
+            s.send(2, h, Payload::empty(), i);
+            s.send(4, h, Payload::empty(), i);
         }
         assert!(s.drain(1024));
         assert_eq!(s.stats.delivered, 45);

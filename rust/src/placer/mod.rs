@@ -8,7 +8,7 @@
 
 pub mod ascii;
 
-use crate::device::{Device, Pblock, PblockSet, Rect};
+use crate::device::{Device, Pblock, PblockSet, Rect, Resources};
 use crate::noc::Topology;
 use anyhow::Result;
 
@@ -40,6 +40,18 @@ impl Floorplan {
     /// CLB share of NoC + all VRs.
     pub fn total_clb_fraction(&self, device: &Device) -> f64 {
         self.pblocks.total_clbs() as f64 / device.geometry.total_clbs() as f64
+    }
+
+    /// Commit a design footprint into VR `vr`'s pblock; errors if it does
+    /// not fit the region (the run-time re-placement check on elastic
+    /// growth and reprogramming).
+    pub fn commit_vr(&mut self, vr: usize, r: &Resources) -> Result<()> {
+        self.pblocks.get_mut(self.vr_pb[vr]).commit(r)
+    }
+
+    /// Uncommit a footprint from VR `vr`'s pblock (release / reprogram).
+    pub fn uncommit_vr(&mut self, vr: usize, r: &Resources) {
+        self.pblocks.get_mut(self.vr_pb[vr]).release(r);
     }
 }
 

@@ -120,6 +120,17 @@ impl Runtime {
         self.models.get(name).map(|m| m.n_inputs)
     }
 
+    /// Error unless `name` is a registered model — the control-plane check
+    /// lifecycle ops run *before* programming a region, so a tenant's
+    /// typo fails at deploy time instead of on every request.
+    pub fn ensure_model(&self, name: &str) -> Result<()> {
+        if self.has_model(name) {
+            Ok(())
+        } else {
+            Err(anyhow!("unknown model '{name}' (have {:?})", self.model_names()))
+        }
+    }
+
     /// Execute a model on `inputs`, returning its output tensors.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let model = self
@@ -285,6 +296,8 @@ mod tests {
         let rt = Runtime::load_dir("artifacts").unwrap();
         assert!(rt.execute("bogus", &[]).is_err());
         assert!(rt.execute("fir", &[Tensor::vec1(vec![1.0])]).is_err());
+        assert!(rt.ensure_model("fir").is_ok());
+        assert!(rt.ensure_model("bogus").is_err());
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Elastic tenant churn under live load — the tentpole invariants:
+//!
+//! - **Churn equivalence**: replaying one seeded allocate/program/serve/
+//!   grow/release trace through the serial engine and the sharded engine
+//!   yields byte-identical responses, identical op outcomes (down to the
+//!   allocated VR indices), and equal merged `Metrics` — including
+//!   requests that land inside a reconfiguration window (queued *and*
+//!   backpressure-rejected ones).
+//! - **Isolation regression**: after a region is released and
+//!   re-allocated to a different tenant, the new owner is unreachable via
+//!   the old owner's stream wiring, the old owner is locked out at the
+//!   access monitor, and a stale admission ticket (minted before the
+//!   release) is rejected at the shard ingress.
+//! - **Liveness**: hot-drain under concurrent client load loses no
+//!   replies and never deadlocks.
+
+use fpga_mt::coordinator::churn::{self, ChurnConfig};
+use fpga_mt::coordinator::metrics::Metrics;
+use fpga_mt::coordinator::server::Engine;
+use fpga_mt::coordinator::shard::{serve_admitted, ShardEnv, ShardPlan, ShardRequest};
+use fpga_mt::coordinator::timing::Gate;
+use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::hypervisor::{LifecycleOp, LifecycleOutcome};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn assert_metrics_equal(serial: &Metrics, sharded: &Metrics) {
+    assert_eq!(serial.requests, sharded.requests, "requests");
+    assert_eq!(serial.rejected, sharded.rejected, "rejected");
+    assert_eq!(serial.backpressured, sharded.backpressured, "backpressured");
+    assert_eq!(serial.bytes_in, sharded.bytes_in, "bytes_in");
+    assert_eq!(serial.bytes_out, sharded.bytes_out, "bytes_out");
+    assert_eq!(serial.io_us.count(), sharded.io_us.count(), "io_us count");
+    assert!(
+        (serial.io_us.mean() - sharded.io_us.mean()).abs() < 1e-9,
+        "io_us mean {} vs {}",
+        serial.io_us.mean(),
+        sharded.io_us.mean()
+    );
+    assert_eq!(serial.noc_cycles.max(), sharded.noc_cycles.max(), "noc_cycles max");
+}
+
+#[test]
+fn churn_trace_serial_and_sharded_agree() {
+    let cfg = ChurnConfig { seed: 0xE1A57, events: 380, foreign_probe: 0.15 };
+    let events = churn::generate(&cfg);
+
+    let serial = Engine::start(|| System::empty("artifacts")).unwrap();
+    let serial_replay = churn::replay(&serial.handle(), &events);
+    let serial_metrics = serial.stop();
+
+    let sharded = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+    let sharded_replay = churn::replay(&sharded.handle(), &events);
+    let sharded_metrics = sharded.stop();
+
+    // Lifecycle outcomes identical, down to the allocated VR indices.
+    assert_eq!(serial_replay.outcomes.len(), sharded_replay.outcomes.len());
+    for (i, (a, b)) in
+        serial_replay.outcomes.iter().zip(&sharded_replay.outcomes).enumerate()
+    {
+        match (a, b) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "op {i}: outcomes diverged"),
+            (Err(_), Err(_)) => {}
+            _ => panic!(
+                "op {i}: engines disagree on success (serial ok={}, sharded ok={})",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+
+    // Responses byte-identical, including modeled timings.
+    assert_eq!(serial_replay.responses.len(), sharded_replay.responses.len());
+    let mut served = 0u64;
+    for (i, (a, b)) in
+        serial_replay.responses.iter().zip(&sharded_replay.responses).enumerate()
+    {
+        match (a, b) {
+            (Ok(a), Ok(b)) => {
+                served += 1;
+                assert_eq!(a.path, b.path, "request {i}: accelerator path");
+                assert_eq!(a.outputs.len(), b.outputs.len(), "request {i}");
+                for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
+                    assert_eq!(ta.shape, tb.shape, "request {i}: output shape");
+                    assert_eq!(ta.data, tb.data, "request {i}: outputs must be byte-identical");
+                }
+                assert_eq!(a.timing.io_us, b.timing.io_us, "request {i}: io model");
+                assert_eq!(a.timing.noc_cycles, b.timing.noc_cycles, "request {i}: noc");
+                assert_eq!(a.timing.bytes_in, b.timing.bytes_in, "request {i}");
+                assert_eq!(a.timing.bytes_out, b.timing.bytes_out, "request {i}");
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!(
+                "request {i}: engines disagree on acceptance (serial ok={}, sharded ok={})",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+
+    // The trace must actually exercise the interesting paths.
+    assert!(served > 50, "served only {served}");
+    assert_eq!(serial_metrics.requests, served);
+    assert!(serial_metrics.rejected > 0, "foreign probes must be rejected");
+    assert!(
+        serial_metrics.backpressured > 0,
+        "bursts past the backlog must hit reconfiguration backpressure"
+    );
+    assert_metrics_equal(&serial_metrics, &sharded_metrics);
+}
+
+#[test]
+fn released_region_is_isolated_from_its_previous_owner() {
+    let mut sys = System::case_study("artifacts").unwrap();
+    // VI3's FPU (VR2) streams into its AES region (VR3) over a wired link.
+    let before = sys.submit(3, 2, &[7u8; 64]).unwrap();
+    assert_eq!(before.path, vec!["fpu".to_string(), "aes".to_string()]);
+
+    // Mint an admission ticket against VR3's *current* epoch, as if a
+    // request were in flight at the moment of the release.
+    let old_plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 3);
+    let stale_adm = match sys.core.timing.admit_vr(1_000, 3, old_plan.epoch) {
+        Gate::Admitted(adm) => adm,
+        Gate::Busy { .. } => panic!("no window is open"),
+    };
+
+    // VI3 shrinks; a new tenant takes over the same physical region.
+    sys.lifecycle(&LifecycleOp::Release { vi: 3, vr: 3 }).unwrap();
+    let intruder = match sys.lifecycle(&LifecycleOp::CreateVi { name: "intruder".into() }) {
+        Ok(LifecycleOutcome::Vi(vi)) => vi,
+        other => panic!("expected Vi, got {other:?}"),
+    };
+    let vr = match sys.lifecycle(&LifecycleOp::Allocate { vi: intruder }) {
+        Ok(LifecycleOutcome::Vr(vr)) => vr,
+        other => panic!("expected Vr, got {other:?}"),
+    };
+    assert_eq!(vr, 3, "free pool must hand back the released region");
+    sys.lifecycle(&LifecycleOp::Program {
+        vi: intruder,
+        vr: 3,
+        design: "aes".into(),
+        dest: None,
+    })
+    .unwrap();
+
+    // 1. The new owner cannot be reached via the old owner's stream
+    //    wiring: FPU no longer chains, and the direct link is gone.
+    let plan2 = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 2);
+    assert_eq!(plan2.stream_dest, None, "stale Wrapper registers must not chain");
+    assert!(!sys.core.noc.has_direct(2, 3), "release must unwire the direct link");
+    let after = sys.submit(3, 2, &[7u8; 64]).unwrap();
+    assert_eq!(after.path, vec!["fpu".to_string()], "no cross-tenant streaming");
+    assert_eq!(after.timing.noc_cycles, 0);
+
+    // 2. The old owner is locked out at the access monitor.
+    let rejected_before = sys.metrics.rejected;
+    assert!(sys.submit(3, 3, &[1u8; 16]).is_err());
+    assert_eq!(sys.metrics.rejected, rejected_before + 1);
+
+    // 3. The stale admission ticket is rejected at the shard ingress:
+    //    epoch moved on release + re-allocate + re-program.
+    let new_plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 3);
+    assert!(new_plan.epoch > old_plan.epoch, "lifecycle must bump the epoch");
+    let mut metrics = Metrics::default();
+    let env = ShardEnv { runtime: sys.runtime.as_ref(), io_cfg: &sys.io_cfg };
+    let payload = [9u8; 32];
+    let result = serve_admitted(
+        ShardRequest { vi: intruder, payload: &payload, adm: stale_adm },
+        &new_plan,
+        &env,
+        &mut sys.core,
+        &mut metrics,
+    );
+    let err = result.err().expect("stale admission must not serve");
+    assert!(err.to_string().contains("stale admission"), "got: {err}");
+    assert_eq!(metrics.rejected, 1, "stale tickets count as rejections");
+}
+
+#[test]
+fn hot_drain_under_concurrent_load_conserves_replies() {
+    // Five tenants hammer their regions while the control plane churns
+    // VI5's region (release -> re-allocate -> re-program) repeatedly.
+    // Every call must return (Ok or Err) and every Ok must be counted.
+    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for (vi, vr) in [(1u16, 0usize), (2, 1), (3, 3), (4, 4), (5, 5)] {
+        let h = engine.handle();
+        let stop = Arc::clone(&stop);
+        clients.push(std::thread::spawn(move || {
+            let payload: Arc<[u8]> = vec![vr as u8 + 1; 64].into();
+            let mut ok = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                if h.call(vi, vr, Arc::clone(&payload)).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let ctl = engine.handle();
+    for round in 0..6 {
+        ctl.lifecycle(LifecycleOp::Release { vi: 5, vr: 5 })
+            .unwrap_or_else(|e| panic!("round {round}: release failed: {e}"));
+        let vr = match ctl.lifecycle(LifecycleOp::Allocate { vi: 5 }) {
+            Ok(LifecycleOutcome::Vr(vr)) => vr,
+            other => panic!("round {round}: expected Vr, got {other:?}"),
+        };
+        assert_eq!(vr, 5, "round {round}: the freed region is the only free one");
+        ctl.lifecycle(LifecycleOp::Program { vi: 5, vr: 5, design: "fir".into(), dest: None })
+            .unwrap_or_else(|e| panic!("round {round}: program failed: {e}"));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let ok_total: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    let metrics = engine.stop();
+    assert_eq!(metrics.requests, ok_total, "every Ok reply must be counted exactly once");
+    assert!(ok_total > 0, "clients must have been served");
+}

@@ -11,10 +11,11 @@
 //! - the batched NoC engine is cycle-for-cycle identical to the retained
 //!   fixpoint reference engine on random topologies and traffic.
 
+use fpga_mt::coordinator::design_footprint;
 use fpga_mt::device::Device;
 use fpga_mt::estimate::{router_fmax_mhz, router_power_mw, router_resources, RouterConfig};
-use fpga_mt::hypervisor::{Hypervisor, Policy, VrStatus};
-use fpga_mt::noc::{FixpointSim, NocSim, Topology};
+use fpga_mt::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
+use fpga_mt::noc::{FixpointSim, NocSim, Payload, Topology};
 use fpga_mt::placer;
 use fpga_mt::util::prop::forall;
 use fpga_mt::util::Rng;
@@ -84,7 +85,7 @@ fn access_monitor_never_leaks_foreign_packets() {
             }
             let vi = rng.below(4) as u16;
             let h = sim.header_for(vi, dst);
-            sim.send(src, h, vec![], 0);
+            sim.send(src, h, Payload::empty(), 0);
         }
         sim.drain(100_000);
         // Every delivered flit's VI must match its VR's owner.
@@ -112,14 +113,14 @@ fn per_source_fifo_order_survives_cross_traffic() {
         let n = 1 + rng.below(40) as u32;
         let h = sim.header_for(1, 5);
         for seq in 0..n {
-            sim.send(0, h, vec![], seq);
+            sim.send(0, h, Payload::empty(), seq);
             // Random cross traffic every cycle.
             for _ in 0..rng.below(3) {
                 let src = 1 + rng.index(4);
                 let dst = rng.index(6);
                 if dst != src && dst != 5 {
                     let hh = sim.header_for(1, dst);
-                    sim.send(src, hh, vec![], 0);
+                    sim.send(src, hh, Payload::empty(), 0);
                 }
             }
             sim.step();
@@ -290,7 +291,7 @@ fn saturated_network_still_conserves_and_drains() {
             let dst = rng.index(n_vrs);
             if dst != src {
                 let h = sim.header_for(1, dst);
-                sim.send(src, h, vec![], 0);
+                sim.send(src, h, Payload::empty(), 0);
                 sent += 1;
             }
         }
@@ -298,4 +299,150 @@ fn saturated_network_still_conserves_and_drains() {
     }
     assert!(sim.drain(1_000_000), "saturated network must drain once injection stops");
     assert_eq!(sim.stats.delivered + sim.stats.rejected, sent);
+}
+
+#[test]
+fn lifecycle_ops_never_double_own_or_leak_wiring() {
+    // Random streams of the full lifecycle API (create/allocate/program/
+    // grow/release) applied via `Hypervisor::apply`. After every op:
+    // - each non-free VR appears in exactly one VI's held list;
+    // - the NoC access monitor mirrors hypervisor ownership;
+    // - every wired direct link has both endpoints held (never a free VR);
+    // - free VRs carry no footprint and no committed pblock resources;
+    // - per-VR epochs never decrease.
+    let designs = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
+    forall("lifecycle ownership/wiring invariants", 32, |rng| {
+        let device = Device::vu9p();
+        let (topo, fp) = placer::case_study_floorplan(&device).unwrap();
+        let mut sim = NocSim::new(topo.clone());
+        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        let vis: Vec<u16> = (0..3).map(|i| hv.create_vi(&format!("t{i}"))).collect();
+        let mut last_epochs = vec![0u64; hv.vrs.len()];
+        for _ in 0..rng.range_u64(10, 80) {
+            let vi = vis[rng.index(vis.len())];
+            let design = designs[rng.index(designs.len())].to_string();
+            let held: Vec<usize> = hv.vis[&vi].vrs.clone();
+            let op = match rng.below(4) {
+                0 => LifecycleOp::Allocate { vi },
+                1 => {
+                    let Some(&vr) = held.first() else { continue };
+                    LifecycleOp::Program { vi, vr, design, dest: None }
+                }
+                2 => {
+                    let stream_src = held
+                        .iter()
+                        .copied()
+                        .find(|&v| matches!(hv.vrs[v].status, VrStatus::Programmed { .. }));
+                    LifecycleOp::Grow { vi, stream_src, design }
+                }
+                _ => {
+                    if held.is_empty() {
+                        continue;
+                    }
+                    LifecycleOp::Release { vi, vr: held[rng.index(held.len())] }
+                }
+            };
+            let _ = hv.apply(&op, &design_footprint, &mut sim);
+
+            // Exactly-one-owner invariant, mirrored into the NoC monitor.
+            let mut owners = vec![0u32; hv.vrs.len()];
+            for v in &vis {
+                for &vr in &hv.vis[v].vrs {
+                    owners[vr] += 1;
+                }
+            }
+            for (vr, &count) in owners.iter().enumerate() {
+                let allocated = hv.vrs[vr].status != VrStatus::Free;
+                assert_eq!(count, u32::from(allocated), "VR{vr} ownership corrupt");
+                assert_eq!(sim.vrs[vr].owner_vi.is_some(), allocated, "VR{vr} monitor");
+                if !allocated {
+                    assert!(hv.vrs[vr].footprint.is_zero(), "free VR{vr} keeps a footprint");
+                    let pb = hv.floorplan.vr_pb[vr];
+                    assert!(
+                        hv.floorplan.pblocks.get(pb).used.is_zero(),
+                        "free VR{vr} keeps committed pblock resources"
+                    );
+                }
+                assert!(hv.vrs[vr].epoch >= last_epochs[vr], "VR{vr} epoch went backwards");
+                last_epochs[vr] = hv.vrs[vr].epoch;
+            }
+            // Direct links only ever connect held regions.
+            for (src, dst) in sim.direct_links() {
+                assert_ne!(hv.vrs[src].status, VrStatus::Free, "link from free VR{src}");
+                assert_ne!(hv.vrs[dst].status, VrStatus::Free, "link into free VR{dst}");
+            }
+        }
+    });
+}
+
+#[test]
+fn adjacent_first_grows_adjacent_whenever_a_neighbor_is_free() {
+    forall("adjacent-first adjacency", 48, |rng| {
+        let device = Device::vu9p();
+        let (topo, fp) = placer::case_study_floorplan(&device).unwrap();
+        let mut sim = NocSim::new(topo.clone());
+        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        // Random pre-occupancy by another tenant.
+        let other = hv.create_vi("other");
+        for _ in 0..rng.below(4) {
+            let _ = hv.allocate_vr(other, &mut sim);
+        }
+        let vi = hv.create_vi("grower");
+        let Ok(first) = hv.allocate_vr(vi, &mut sim) else { return };
+        // Does any free VR adjacent to the tenant's region exist?
+        let neighbor_free = (0..hv.vrs.len())
+            .any(|v| hv.vrs[v].status == VrStatus::Free && hv.topo.vrs_adjacent(first, v));
+        match hv.allocate_vr(vi, &mut sim) {
+            Ok(second) => {
+                if neighbor_free {
+                    assert!(
+                        hv.topo.vrs_adjacent(first, second),
+                        "free neighbor existed but got VR{second} (first VR{first})"
+                    );
+                }
+            }
+            Err(_) => assert_eq!(hv.free_vrs(), 0, "allocation may only fail when exhausted"),
+        }
+    });
+}
+
+#[test]
+fn release_returns_vr_to_pool_with_links_unwired() {
+    forall("release unwires and frees", 48, |rng| {
+        let device = Device::vu9p();
+        let (topo, fp) = placer::case_study_floorplan(&device).unwrap();
+        let mut sim = NocSim::new(topo.clone());
+        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        let vi = hv.create_vi("t");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None },
+            &design_footprint,
+            &mut sim,
+        )
+        .unwrap();
+        let (outcome, _) = hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() },
+                &design_footprint,
+                &mut sim,
+            )
+            .unwrap();
+        let LifecycleOutcome::Vr(dst) = outcome else { panic!("grow returns Vr") };
+        assert!(sim.has_direct(src, dst));
+        // Release one of the two endpoints at random: either way, no link
+        // may survive, the region is free, and it is re-allocatable.
+        let victim = if rng.chance(0.5) { src } else { dst };
+        hv.apply(&LifecycleOp::Release { vi, vr: victim }, &design_footprint, &mut sim).unwrap();
+        assert_eq!(hv.vrs[victim].status, VrStatus::Free);
+        assert!(sim.vrs[victim].owner_vi.is_none());
+        assert!(
+            sim.direct_links().iter().all(|&(s, d)| s != victim && d != victim),
+            "released VR{victim} still wired"
+        );
+        assert!(hv.vrs[victim].footprint.is_zero());
+        let newcomer = hv.create_vi("n");
+        let got = hv.allocate_vr(newcomer, &mut sim).unwrap();
+        assert_eq!(got, victim, "AdjacentFirst hands a fresh tenant the lowest free VR");
+    });
 }
