@@ -1,0 +1,70 @@
+//! Fleet walkthrough: one scheduler over two FPGAs — placement, the
+//! cluster front-end, replica growth, and a live cross-device migration.
+//!
+//! ```sh
+//! cargo run --release --example fleet_serving
+//! ```
+
+use fpga_mt::fleet::{FleetConfig, FleetScheduler, PlacePolicy};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // Two independent devices (each its own floorplan, hypervisor, NoC,
+    // and sharded engine) behind one scheduler, spread placement.
+    let mut fleet = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(2)
+    })?;
+    println!("booted a 2-device fleet ({} free VRs per device)\n", fleet.free_vrs(0));
+
+    // Tenants arrive fleet-wide; placement spreads them.
+    let video = fleet.admit_tenant("video-pipeline", "canny")?;
+    let crypto = fleet.admit_tenant("crypto-batch", "aes")?;
+    for (name, t) in [("video", video), ("crypto", crypto)] {
+        let r = fleet.replicas(t)[0];
+        println!("{name:>8} -> device {} (VI{}, VR{}, epoch {})", r.device, r.vi, r.vr, r.epoch);
+    }
+    fleet.advance_clocks(10_000.0)?; // deployment windows elapse
+
+    // The front-end maps (tenant, request) -> device.
+    let handle = fleet.handle();
+    let payload: Arc<[u8]> = (0..=255u8).collect::<Vec<u8>>().into();
+    let resp = handle.submit(video, Arc::clone(&payload))?;
+    println!(
+        "\nvideo request: device {} ran {:?} in {:.0} µs (ingress {:.1} µs)",
+        resp.device,
+        resp.response.path,
+        resp.response.timing.total_us(800.0),
+        resp.ingress_us
+    );
+
+    // Demand grows: a second replica lands on the other device and the
+    // router balances across both.
+    let replica = fleet.grow_tenant(video)?;
+    println!("\nvideo grew a replica on device {}", replica.device);
+    let devices: Vec<usize> = (0..4)
+        .map(|_| handle.submit(video, Arc::clone(&payload)).map(|r| r.device))
+        .collect::<anyhow::Result<_>>()?;
+    println!("4 balanced requests landed on devices {devices:?}");
+
+    // Live cross-device migration: crypto moves while serving.
+    let from = fleet.replicas(crypto)[0].device;
+    let to = 1 - from;
+    let report = fleet.migrate_tenant(crypto, from, to)?;
+    println!(
+        "\nmigrated crypto {} -> {} ({} region); new epoch {}",
+        report.from, report.to, report.regions, report.replicas[0].epoch
+    );
+    let resp = handle.submit(crypto, Arc::clone(&payload))?;
+    println!("post-migration request served by device {} at epoch {}", resp.device, resp.epoch);
+
+    let migrations = fleet.migrations;
+    let metrics = fleet.stop();
+    println!(
+        "\nfleet totals: {} requests, p50 {:.0} µs, p99 {:.0} µs, {migrations} migration(s)",
+        metrics.requests,
+        metrics.latency_percentile(50.0),
+        metrics.latency_percentile(99.0),
+    );
+    Ok(())
+}

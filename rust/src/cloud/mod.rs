@@ -8,4 +8,4 @@ pub mod middleware;
 pub mod network;
 
 pub use iopath::{fig14_io_trips, IoConfig, IoTripRow, Scheme};
-pub use network::Link;
+pub use network::{Ingress, Link};

@@ -47,6 +47,49 @@ impl Link {
     }
 }
 
+/// Per-device ingress links of a modeled FPGA fleet: requests routed to
+/// device `d` by the fleet front-end pay `links[d]`'s transfer time on
+/// top of the device's own IO-trip model. Devices colocated with the
+/// front-end use [`Link::local`]; remote racks use
+/// [`Link::testbed_ethernet`] (or any custom [`Link`]).
+#[derive(Debug, Clone)]
+pub struct Ingress {
+    links: Vec<Link>,
+}
+
+impl Ingress {
+    /// The same ingress link for every device.
+    pub fn uniform(devices: usize, link: Link) -> Ingress {
+        Ingress { links: vec![link; devices] }
+    }
+
+    /// One explicit link per device.
+    pub fn with_links(links: Vec<Link>) -> Ingress {
+        Ingress { links }
+    }
+
+    /// Number of devices the ingress plan covers.
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Whether the plan covers no devices.
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// The link in front of device `device`.
+    pub fn link(&self, device: usize) -> &Link {
+        &self.links[device]
+    }
+
+    /// Modeled one-way ingress time for a `bytes`-sized request bound for
+    /// `device`, in µs.
+    pub fn ingress_us(&self, device: usize, bytes: u64) -> f64 {
+        self.links[device].transfer_us(bytes)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +115,17 @@ mod tests {
         let l = Link::testbed_ethernet();
         let g = l.stream_gbps(4 * 1024 * 1024);
         assert!(g > 2.4 && g < 3.0, "g={g}");
+    }
+
+    #[test]
+    fn ingress_links_are_per_device() {
+        let ingress =
+            Ingress::with_links(vec![Link::local(), Link::testbed_ethernet()]);
+        assert_eq!(ingress.len(), 2);
+        assert_eq!(ingress.ingress_us(0, 100 * 1024), 0.0, "local device is free");
+        assert!(ingress.ingress_us(1, 100 * 1024) > 100.0, "remote device pays the link");
+        let uniform = Ingress::uniform(3, Link::local());
+        assert_eq!(uniform.len(), 3);
+        assert_eq!(uniform.ingress_us(2, 4096), 0.0);
     }
 }

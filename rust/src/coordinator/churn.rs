@@ -125,8 +125,11 @@ pub fn generate(cfg: &ChurnConfig) -> Vec<ChurnEvent> {
             tenants.push(Tenant { vi, regions: vec![(vr, design)] });
             if rng.chance(0.75) {
                 // Land traffic inside the fresh reconfiguration window,
-                // past the backlog bound.
-                push_burst(&mut events, &mut rng, &tenants, vi, vr, 14 + rng.index(4), cfg);
+                // past the backlog bound. (The burst size is drawn before
+                // the call: a second `&mut rng` inside the argument list
+                // would be a double mutable borrow.)
+                let n = 14 + rng.index(4);
+                push_burst(&mut events, &mut rng, &tenants, vi, vr, n, cfg);
             }
         } else if roll < 0.30 && !tenants.is_empty() && hv.free_vrs() > 0 {
             // --- elastic growth, sometimes streaming from an existing
@@ -142,7 +145,8 @@ pub fn generate(cfg: &ChurnConfig) -> Vec<ChurnEvent> {
             if let Ok((LifecycleOutcome::Vr(vr), _)) = applied {
                 tenants[t].regions.push((vr, design));
                 if rng.chance(0.75) {
-                    push_burst(&mut events, &mut rng, &tenants, vi, vr, 14 + rng.index(4), cfg);
+                    let n = 14 + rng.index(4);
+                    push_burst(&mut events, &mut rng, &tenants, vi, vr, n, cfg);
                 }
             }
         } else if roll < 0.44 && !tenants.is_empty() {
@@ -172,7 +176,8 @@ pub fn generate(cfg: &ChurnConfig) -> Vec<ChurnEvent> {
             let t = rng.index(tenants.len());
             let vi = tenants[t].vi;
             let vr = tenants[t].regions[rng.index(tenants[t].regions.len())].0;
-            push_burst(&mut events, &mut rng, &tenants, vi, vr, 1 + rng.index(8), cfg);
+            let n = 1 + rng.index(8);
+            push_burst(&mut events, &mut rng, &tenants, vi, vr, n, cfg);
         }
     }
     events.truncate(cfg.events);
@@ -221,6 +226,162 @@ pub fn replay(handle: &EngineHandle, events: &[ChurnEvent]) -> Replay {
         }
     }
     Replay { responses, outcomes }
+}
+
+/// One event of a fleet-scale churn trace ([`generate_fleet`]): tenant
+/// lifecycle is expressed against the *fleet* (placement picks devices),
+/// and devices themselves churn — graceful decommission and abrupt
+/// failure are ops, and demand hot-spots push the rebalancer toward
+/// cross-device migration. Replayed by `fleet::replay_fleet`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetEvent {
+    /// A tenant arrives fleet-wide; the scheduler places its first region.
+    /// Tenant ids are assigned in admission order, so the trace refers to
+    /// tenants by their position in the `Admit` sequence.
+    Admit {
+        /// Human-readable tenant name.
+        name: String,
+        /// Design the tenant deploys (Table I registry name).
+        design: String,
+    },
+    /// The tenant adds one replica of its design (placement picks the
+    /// device; the front-end then balances its requests across replicas).
+    GrowReplica {
+        /// Trace-order tenant index (position in the `Admit` sequence).
+        tenant: u32,
+    },
+    /// The tenant departs: every replica is released, fleet-wide.
+    Retire {
+        /// Trace-order tenant index.
+        tenant: u32,
+    },
+    /// Graceful decommission: every tenant is live-migrated off the
+    /// device, then it powers down.
+    Decommission {
+        /// Device index.
+        device: usize,
+    },
+    /// Abrupt device failure: the device dies with tenants on it; the
+    /// fleet recovers by replaying their tenancy on survivors.
+    Fail {
+        /// Device index.
+        device: usize,
+    },
+    /// A demand hot-spot: `requests` back-to-back requests to one tenant,
+    /// after which the fleet runs a rebalance pass (which migrates a
+    /// tenant off the hottest device when the imbalance is real).
+    Hotspot {
+        /// Trace-order tenant index.
+        tenant: u32,
+        /// Burst size.
+        requests: u32,
+    },
+    /// One serving request.
+    Request {
+        /// Trace-order tenant index.
+        tenant: u32,
+        /// Request payload, shared zero-copy across replays.
+        payload: Arc<[u8]>,
+    },
+}
+
+/// Fleet churn generator configuration.
+#[derive(Debug, Clone)]
+pub struct FleetChurnConfig {
+    /// RNG seed; the same seed always yields the same trace.
+    pub seed: u64,
+    /// Number of events to generate.
+    pub events: usize,
+    /// Number of devices the fleet starts with.
+    pub devices: usize,
+}
+
+impl Default for FleetChurnConfig {
+    fn default() -> Self {
+        FleetChurnConfig { seed: 0xF1EE7, events: 600, devices: 2 }
+    }
+}
+
+/// VRs per modeled device (the case-study floorplan): the generator's
+/// capacity bookkeeping, so admissions mostly land on a fleet with room.
+pub const VRS_PER_DEVICE: usize = 6;
+
+/// Generate a seeded fleet-scale churn trace: tenant arrivals/growth/
+/// departures interleaved with request bursts, demand hot-spots, and
+/// device decommissions/failures (never below one alive device). The
+/// generator tracks only aggregate capacity — concrete placement is the
+/// scheduler's job at replay, and a replayer must tolerate ops the live
+/// fleet refuses (e.g. an admission racing a failure's capacity loss).
+pub fn generate_fleet(cfg: &FleetChurnConfig) -> Vec<FleetEvent> {
+    assert!(cfg.devices > 0, "a fleet needs at least one device");
+    let mut rng = Rng::new(cfg.seed);
+    let mut events: Vec<FleetEvent> = Vec::with_capacity(cfg.events + 8);
+    let mut next_tenant = 0u32;
+    let mut live: Vec<u32> = Vec::new();
+    let mut regions: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    let mut alive: Vec<usize> = (0..cfg.devices).collect();
+    let mut used = 0usize;
+    let mut fuel = cfg.events * 10 + 100;
+    while events.len() < cfg.events && fuel > 0 {
+        fuel -= 1;
+        let capacity = alive.len() * VRS_PER_DEVICE;
+        let roll = rng.next_f64();
+        if (live.is_empty() || roll < 0.16) && used < capacity {
+            // --- tenant arrival + a first burst of demand ---
+            let design = DESIGNS[rng.index(DESIGNS.len())].to_string();
+            events.push(FleetEvent::Admit { name: format!("tenant-{next_tenant}"), design });
+            live.push(next_tenant);
+            regions.insert(next_tenant, 1);
+            used += 1;
+            let n = 3 + rng.index(6);
+            push_fleet_burst(&mut events, &mut rng, next_tenant, n);
+            next_tenant += 1;
+        } else if roll < 0.26 && !live.is_empty() && used < capacity {
+            // --- replica growth (the fleet's elasticity) ---
+            let tenant = live[rng.index(live.len())];
+            events.push(FleetEvent::GrowReplica { tenant });
+            *regions.get_mut(&tenant).expect("live tenant") += 1;
+            used += 1;
+        } else if roll < 0.36 && !live.is_empty() {
+            // --- departure ---
+            let i = rng.index(live.len());
+            let tenant = live.remove(i);
+            used -= regions.remove(&tenant).expect("live tenant");
+            events.push(FleetEvent::Retire { tenant });
+        } else if roll < 0.40 && alive.len() > 1 && used <= (alive.len() - 1) * VRS_PER_DEVICE {
+            // --- device churn: decommission or abrupt failure (only when
+            //     the survivors can absorb the displaced tenancy) ---
+            let device = alive.remove(rng.index(alive.len()));
+            events.push(if rng.chance(0.5) {
+                FleetEvent::Decommission { device }
+            } else {
+                FleetEvent::Fail { device }
+            });
+        } else if roll < 0.48 && !live.is_empty() {
+            // --- demand hot-spot: forces the rebalancer's hand ---
+            let tenant = live[rng.index(live.len())];
+            events.push(FleetEvent::Hotspot {
+                tenant,
+                requests: 24 + rng.index(16) as u32,
+            });
+        } else if !live.is_empty() {
+            // --- ordinary serving burst ---
+            let tenant = live[rng.index(live.len())];
+            let n = 1 + rng.index(8);
+            push_fleet_burst(&mut events, &mut rng, tenant, n);
+        }
+    }
+    events.truncate(cfg.events);
+    events
+}
+
+/// Emit `n` requests to `tenant` with seeded random payloads.
+fn push_fleet_burst(events: &mut Vec<FleetEvent>, rng: &mut Rng, tenant: u32, n: usize) {
+    for _ in 0..n {
+        let len = 16 + rng.index(240);
+        let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        events.push(FleetEvent::Request { tenant, payload: Arc::from(payload) });
+    }
 }
 
 #[cfg(test)]
@@ -292,5 +453,78 @@ mod tests {
             }
         }
         assert!(requests > 100, "trace must carry traffic ({requests})");
+    }
+
+    #[test]
+    fn fleet_trace_is_seed_deterministic_and_covers_device_churn() {
+        let cfg = FleetChurnConfig { seed: 99, events: 900, devices: 4 };
+        let a = generate_fleet(&cfg);
+        let b = generate_fleet(&cfg);
+        assert_eq!(a.len(), 900);
+        assert_eq!(a, b, "fleet trace must be a pure function of the seed");
+        assert_ne!(a, generate_fleet(&FleetChurnConfig { seed: 100, ..cfg }));
+        let mut admits = 0;
+        let mut grows = 0;
+        let mut retires = 0;
+        let mut device_churn = 0;
+        let mut hotspots = 0;
+        let mut requests = 0;
+        for e in &a {
+            match e {
+                FleetEvent::Admit { .. } => admits += 1,
+                FleetEvent::GrowReplica { .. } => grows += 1,
+                FleetEvent::Retire { .. } => retires += 1,
+                FleetEvent::Decommission { .. } | FleetEvent::Fail { .. } => device_churn += 1,
+                FleetEvent::Hotspot { .. } => hotspots += 1,
+                FleetEvent::Request { .. } => requests += 1,
+            }
+        }
+        assert!(admits >= 5, "admits {admits}");
+        assert!(grows >= 2, "grows {grows}");
+        assert!(retires >= 2, "retires {retires}");
+        assert!(device_churn >= 1, "device churn {device_churn}");
+        assert!(hotspots >= 2, "hotspots {hotspots}");
+        assert!(requests >= 150, "requests {requests}");
+    }
+
+    #[test]
+    fn fleet_trace_never_kills_the_last_device_or_overfills_capacity() {
+        let cfg = FleetChurnConfig { seed: 5, events: 1200, devices: 3 };
+        let trace = generate_fleet(&cfg);
+        let mut alive = cfg.devices;
+        let mut used = 0usize;
+        let mut killed: Vec<usize> = Vec::new();
+        let mut regions: std::collections::HashMap<u32, usize> =
+            std::collections::HashMap::new();
+        let mut next = 0u32;
+        for e in &trace {
+            match e {
+                FleetEvent::Admit { .. } => {
+                    regions.insert(next, 1);
+                    next += 1;
+                    used += 1;
+                }
+                FleetEvent::GrowReplica { tenant } => {
+                    *regions.get_mut(tenant).expect("grow targets a live tenant") += 1;
+                    used += 1;
+                }
+                FleetEvent::Retire { tenant } => {
+                    used -= regions.remove(tenant).expect("retire targets a live tenant");
+                }
+                FleetEvent::Decommission { device } | FleetEvent::Fail { device } => {
+                    assert!(!killed.contains(device), "device {device} churned twice");
+                    killed.push(*device);
+                    alive -= 1;
+                    assert!(alive >= 1, "the last device must never be killed");
+                }
+                FleetEvent::Hotspot { tenant, .. } | FleetEvent::Request { tenant, .. } => {
+                    assert!(regions.contains_key(tenant), "traffic targets a live tenant");
+                }
+            }
+            assert!(
+                used <= alive * VRS_PER_DEVICE,
+                "trace must stay within surviving capacity ({used} regions, {alive} devices)"
+            );
+        }
     }
 }

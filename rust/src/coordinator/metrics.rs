@@ -1,6 +1,6 @@
 //! Request-path metrics.
 
-use crate::util::Summary;
+use crate::util::{QuantileSketch, Summary};
 
 /// Timing of one completed request.
 #[derive(Debug, Clone, Copy)]
@@ -44,6 +44,10 @@ pub struct Metrics {
     pub compute_us: Summary,
     /// End-to-end time distribution (µs).
     pub total_us: Summary,
+    /// Bounded end-to-end latency sketch (µs) for tail percentiles: see
+    /// [`Metrics::latency_percentile`]. Order-independent, so merged
+    /// per-shard sketches report exactly what a serial accumulator would.
+    pub latency: QuantileSketch,
     /// NoC streaming cycles distribution.
     pub noc_cycles: Summary,
     /// Total payload bytes in.
@@ -58,7 +62,9 @@ impl Metrics {
         self.requests += 1;
         self.io_us.add(t.io_us);
         self.compute_us.add(t.compute_us);
-        self.total_us.add(t.total_us(noc_clock_mhz));
+        let total = t.total_us(noc_clock_mhz);
+        self.total_us.add(total);
+        self.latency.add(total);
         self.noc_cycles.add(t.noc_cycles as f64);
         self.bytes_in += t.bytes_in as u64;
         self.bytes_out += t.bytes_out as u64;
@@ -75,9 +81,19 @@ impl Metrics {
         self.io_us.merge(&other.io_us);
         self.compute_us.merge(&other.compute_us);
         self.total_us.merge(&other.total_us);
+        self.latency.merge(&other.latency);
         self.noc_cycles.merge(&other.noc_cycles);
         self.bytes_in += other.bytes_in;
         self.bytes_out += other.bytes_out;
+    }
+
+    /// End-to-end latency percentile estimate in µs (`p` in [0, 100]):
+    /// p50/p95/p99 of the modeled request latencies, from the bounded
+    /// [`QuantileSketch`]. Deterministic across engine shapes: the sketch
+    /// is order-independent, so the sharded engine's merged shards report
+    /// the same value as a serial run of the same trace.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.percentile(p)
     }
 
     /// Modeled ingress throughput in Gb/s.
@@ -148,5 +164,15 @@ mod tests {
         assert!((merged.total_us.mean() - serial.total_us.mean()).abs() < 1e-9);
         assert!((merged.compute_us.std_dev() - serial.compute_us.std_dev()).abs() < 1e-6);
         assert_eq!(merged.noc_cycles.max(), serial.noc_cycles.max());
+        // Percentiles must survive the merge exactly (order-independent
+        // sketch), not just approximately.
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(
+                merged.latency_percentile(p),
+                serial.latency_percentile(p),
+                "p{p} diverged across merge"
+            );
+        }
+        assert!(serial.latency_percentile(50.0) > 0.0, "requests were recorded");
     }
 }

@@ -52,12 +52,57 @@ pub fn design_footprint(design: &str) -> Option<Resources> {
     crate::accel::by_name(design).map(|s| s.resources)
 }
 
+/// Window-aware control-plane validation both engines run before touching
+/// any serving state: the hypervisor's read-only [`Hypervisor::precheck`]
+/// plus the reconfiguration-window rules only the coordinator can see —
+/// a region that is still inside its partial-reconfiguration window is
+/// *draining* (its queued admissions have not executed yet), so:
+///
+/// - `Grow { stream_src }` and `Wire { src }` are refused while the
+///   source region's window is open (its Wrapper registers cannot be
+///   retargeted mid-reconfig);
+/// - `Release` — and `DestroyVi`, if *any* of the VI's regions is still
+///   inside a window — are refused while the drain is in progress
+///   (retry after the window closes, or model the wait with
+///   [`server::EngineHandle::advance_clock`]).
+///
+/// Both engines run this identically (the serial path inside
+/// [`System::lifecycle`], the sharded dispatcher before it drains any
+/// worker shard), so accept/reject decisions stay byte-for-byte equal
+/// under churn.
+pub fn precheck_op(hv: &Hypervisor, timing: &TimingCore, op: &LifecycleOp) -> Result<()> {
+    hv.precheck(op)?;
+    match op {
+        LifecycleOp::Grow { stream_src: Some(src), .. } if timing.reconfiguring(*src) => {
+            bail!("VR{src} is still reconfiguring; cannot grow-stream from it yet")
+        }
+        LifecycleOp::Release { vr, .. } if timing.reconfiguring(*vr) => {
+            bail!("VR{vr} is still draining its reconfiguration window; release must wait")
+        }
+        LifecycleOp::Wire { src, .. } if timing.reconfiguring(*src) => {
+            bail!("VR{src} is still reconfiguring; cannot rewire its stream yet")
+        }
+        LifecycleOp::DestroyVi { vi } => {
+            if let Some(rec) = hv.vis.get(vi) {
+                if let Some(&vr) = rec.vrs.iter().find(|&&vr| timing.reconfiguring(vr)) {
+                    bail!(
+                        "VI {vi}'s VR{vr} is still draining its reconfiguration window; \
+                         destroy must wait"
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
 /// The control-plane core both engines run for a lifecycle op — runtime
-/// design validation, hypervisor apply (emitting the wiring delta), and
-/// charging any reconfiguration windows to admission. Keeping it in one
-/// place is what keeps the serial and sharded engines in lockstep under
-/// churn (the equivalence tests depend on identical accept/reject
-/// decisions and identical window charging).
+/// design validation, window-aware precheck, hypervisor apply (emitting
+/// the wiring delta), and charging any reconfiguration windows to
+/// admission. Keeping it in one place is what keeps the serial and
+/// sharded engines in lockstep under churn (the equivalence tests depend
+/// on identical accept/reject decisions and identical window charging).
 pub(crate) fn apply_lifecycle(
     hv: &mut Hypervisor,
     timing: &mut TimingCore,
@@ -68,6 +113,7 @@ pub(crate) fn apply_lifecycle(
     if let LifecycleOp::Program { design, .. } | LifecycleOp::Grow { design, .. } = op {
         runtime.ensure_model(design)?;
     }
+    precheck_op(hv, timing, op)?;
     let (outcome, delta) = hv.apply(op, &design_footprint, noc)?;
     for &(vr, dur_us) in &delta.reconfig {
         timing.begin_reconfig(vr, dur_us);
@@ -110,6 +156,11 @@ pub struct Response {
     pub path: Vec<String>,
     /// Per-phase timing of the request.
     pub timing: RequestTiming,
+    /// Lifecycle epoch of the region that executed the request — the
+    /// admission ticket's epoch, validated against the shard plan at
+    /// ingress. The engine-side ground truth a router's view can be
+    /// cross-checked against (the fleet migration tests do).
+    pub epoch: u64,
 }
 
 /// A [`System`] split for sharded serving: one plan per VR plus the shared
@@ -383,6 +434,10 @@ mod tests {
         assert!(sys.core.timing.reconfiguring(vr), "programming charges a window");
         let resp = sys.submit(vi, vr, &[1u8; 64]).unwrap();
         assert_eq!(resp.path, vec!["fir".to_string()]);
+        // Release during the open window is refused (the region is still
+        // draining); once the window elapses the release goes through.
+        assert!(sys.lifecycle(&LifecycleOp::Release { vi, vr }).is_err());
+        sys.core.timing.advance_clock(10_000.0);
         sys.lifecycle(&LifecycleOp::Release { vi, vr }).unwrap();
         assert!(sys.submit(vi, vr, &[1u8; 8]).is_err(), "released region must stop serving");
         assert_eq!(sys.hv.free_vrs(), 6);

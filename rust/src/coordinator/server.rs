@@ -37,13 +37,18 @@ pub struct CtlRequest {
     pub reply: mpsc::Sender<Result<LifecycleOutcome>>,
 }
 
-/// Channel message: a request, a lifecycle (control-plane) op, or an
-/// orderly shutdown. Both serving engines (serial executor and sharded
-/// per-VR pipeline) speak this same client protocol, so one handle type
-/// serves both.
+/// Channel message: a request, a lifecycle (control-plane) op, an
+/// arrival-clock query/advance, or an orderly shutdown. Both serving
+/// engines (serial executor and sharded per-VR pipeline) speak this same
+/// client protocol, so one handle type serves both.
 pub(crate) enum Msg {
     Req(Request),
     Ctl(CtlRequest),
+    /// Read the engine's modeled arrival clock (µs).
+    Clock(mpsc::Sender<f64>),
+    /// Advance the modeled arrival clock by idle time (µs); applied at
+    /// its arrival position in the message order, like a lifecycle op.
+    Tick(f64, mpsc::Sender<()>),
     Shutdown,
 }
 
@@ -77,6 +82,26 @@ impl EngineHandle {
             .send(Msg::Ctl(CtlRequest { op, reply }))
             .map_err(|_| anyhow::anyhow!("engine stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped lifecycle op"))?
+    }
+
+    /// The engine's modeled arrival-clock value (µs). The fleet layer
+    /// uses it as the per-device makespan of a replayed demand trace
+    /// (modeled throughput = requests / makespan).
+    pub fn clock_us(&self) -> Result<f64> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Clock(reply)).map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped clock query"))
+    }
+
+    /// Advance the engine's modeled arrival clock by `dur_us` of idle
+    /// time, at this call's position in the message order. Models the
+    /// gap between tenant actions (e.g. a tenant waiting out its own
+    /// deployment, or a migration's drain phase) during which open
+    /// reconfiguration windows elapse.
+    pub fn advance_clock(&self, dur_us: f64) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Tick(dur_us, reply)).map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped clock advance"))
     }
 }
 
@@ -131,6 +156,13 @@ impl Engine {
                     Msg::Shutdown => break 'outer,
                     Msg::Ctl(ctl) => {
                         let _ = ctl.reply.send(system.lifecycle(&ctl.op));
+                    }
+                    Msg::Clock(reply) => {
+                        let _ = reply.send(system.core.timing.clock_us());
+                    }
+                    Msg::Tick(dur_us, reply) => {
+                        system.core.timing.advance_clock(dur_us);
+                        let _ = reply.send(());
                     }
                     Msg::Req(first) => {
                         let mut batch = vec![first];

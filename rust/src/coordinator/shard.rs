@@ -240,7 +240,7 @@ pub fn serve_admitted<G: CoreGate>(
         bytes_out,
     };
     metrics.record(&timing, env.io_cfg.noc_clock_mhz);
-    Ok(Response { outputs, path, timing })
+    Ok(Response { outputs, path, timing, epoch: plan.epoch })
 }
 
 /// Stream `bytes` from `src` VR to `dst` VR over the NoC: the direct link

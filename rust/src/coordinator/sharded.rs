@@ -221,7 +221,7 @@ impl Dispatch {
         if let LifecycleOp::Program { design, .. } | LifecycleOp::Grow { design, .. } = op {
             self.runtime.ensure_model(design)?;
         }
-        self.hv.precheck(op)?;
+        super::precheck_op(&self.hv, &self.timing, op)?;
         // In-flight work on affected shards must finish against the old
         // wiring before the op mutates it (the serial engine gets this
         // ordering for free from its single executor).
@@ -313,6 +313,13 @@ impl ShardedEngine {
                     Msg::Req(req) => dispatch.handle_req(req),
                     Msg::Ctl(CtlRequest { op, reply }) => {
                         let _ = reply.send(dispatch.handle_ctl(&op));
+                    }
+                    Msg::Clock(reply) => {
+                        let _ = reply.send(dispatch.timing.clock_us());
+                    }
+                    Msg::Tick(dur_us, reply) => {
+                        dispatch.timing.advance_clock(dur_us);
+                        let _ = reply.send(());
                     }
                 }
             }
@@ -428,6 +435,10 @@ mod tests {
         // (modeled) and still serves.
         let resp = h.call(vi, vr, vec![1u8; 64]).unwrap();
         assert_eq!(resp.path, vec!["fir".to_string()]);
+        // Still inside the programming window: the region is draining, so
+        // release is refused until the window elapses.
+        assert!(h.lifecycle(LifecycleOp::Release { vi, vr }).is_err());
+        h.advance_clock(10_000.0).unwrap();
         h.lifecycle(LifecycleOp::Release { vi, vr }).unwrap();
         assert!(h.call(vi, vr, vec![1u8; 16]).is_err(), "drained shard must stop serving");
         // The freed region is immediately reusable by a new tenant.
@@ -466,6 +477,12 @@ mod tests {
             .unwrap();
         let solo = h.call(vi, src, vec![5u8; 64]).unwrap();
         assert_eq!(solo.path, vec!["fpu".to_string()]);
+        // The source is still inside its programming window: growing a
+        // stream off it is refused until the window elapses.
+        assert!(h
+            .lifecycle(LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() })
+            .is_err());
+        h.advance_clock(10_000.0).unwrap();
         // Elastic growth while serving: the FPU chain appears live.
         let dst = match h
             .lifecycle(LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() })

@@ -164,6 +164,15 @@ impl TimingCore {
         }
     }
 
+    /// Advance the arrival clock by `dur_us` of modeled idle time (no
+    /// requests arrive during it). Used to model inter-burst gaps and the
+    /// drain phase of a cross-device migration; open reconfiguration
+    /// windows the clock passes are cleaned up lazily at the next
+    /// admission, exactly as if the time had elapsed under traffic.
+    pub fn advance_clock(&mut self, dur_us: f64) {
+        self.clock_us += dur_us.max(0.0);
+    }
+
     /// Current arrival-clock value (µs).
     pub fn clock_us(&self) -> f64 {
         self.clock_us
@@ -255,6 +264,19 @@ mod tests {
         }
         assert_eq!(queued, RECONFIG_BACKLOG);
         assert_eq!(busy, 4, "backlog overflow must reject");
+    }
+
+    #[test]
+    fn advancing_the_clock_closes_open_windows() {
+        let mut core = TimingCore::new(17);
+        core.begin_reconfig(2, 700.0);
+        assert!(core.reconfiguring(2));
+        core.advance_clock(1_000.0);
+        assert!(!core.reconfiguring(2), "the window elapsed during the idle gap");
+        let Gate::Admitted(adm) = core.admit_vr(0, 2, 0) else { panic!("must admit") };
+        assert!(adm.queue_wait_us < 100.0, "no residual window wait");
+        core.advance_clock(-5.0); // negative durations are clamped
+        assert!(core.clock_us() >= 1_000.0);
     }
 
     #[test]

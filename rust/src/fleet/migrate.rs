@@ -1,0 +1,393 @@
+//! Live cross-device tenant migration, decommission, failure recovery,
+//! and the hot-spot rebalancer.
+//!
+//! The migration protocol (per tenant, source → target):
+//!
+//! 1. **Export** — the source shadow's
+//!    [`Hypervisor::migration_plan`](crate::hypervisor::Hypervisor::migration_plan)
+//!    captures the tenancy in device-independent form (designs +
+//!    stream edges by position, no VR indices).
+//! 2. **Replay** — the plan replays as ordinary [`LifecycleOp`]s on the
+//!    target engine: allocate every region (the target's own policy
+//!    resolves fresh indices), program with re-resolved stream
+//!    destinations, wire direct links where the target placement landed
+//!    adjacent. The source keeps serving throughout.
+//! 3. **Flip** — the route table swaps the tenant's source-device
+//!    replicas for the target ones in one generation bump. From this
+//!    point new requests resolve to the target.
+//! 4. **Drain + release** — the source engine's clock advances by
+//!    [`MIGRATION_DRAIN_US`] (the modeled quiesce) and every source
+//!    region is released through the engines' hot-drain path (in-flight
+//!    requests finish first, workers join, metrics merge).
+//!
+//! Safety: a request that resolved the *old* route and lands on the
+//! source after release is refused at the access monitor or by the
+//! stale-epoch guard — both fire before any compute — and the front-end
+//! retries it against the flipped table (generation-gated), so every
+//! request gets exactly one reply and none executes twice. That is the
+//! conservation property `rust/tests/fleet.rs` and
+//! `benches/fleet_scaling.rs` assert.
+
+use super::placement::{self, DeviceLoad, PlacePolicy};
+use super::router::Replica;
+use super::{FleetScheduler, TenantId};
+use crate::hypervisor::{LifecycleOp, LifecycleOutcome, MigrationPlan};
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Modeled drain time of a migration's quiesce phase (µs): the source
+/// device's arrival clock advances by this much before the source
+/// regions are released, so open reconfiguration windows elapse and the
+/// release path sees a drained region.
+pub const MIGRATION_DRAIN_US: f64 = 10_000.0;
+
+/// What one cross-device migration did.
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// The migrated tenant.
+    pub tenant: TenantId,
+    /// Source device.
+    pub from: usize,
+    /// Target device.
+    pub to: usize,
+    /// Regions recreated on the target.
+    pub regions: usize,
+    /// The tenant's replicas after the flip.
+    pub replicas: Vec<Replica>,
+}
+
+impl FleetScheduler {
+    /// Recreate `plan` for a tenant on device `to`: reuse/create the VI,
+    /// allocate every region, program with re-resolved stream
+    /// destinations, and wire direct links where the target placement is
+    /// adjacent. Returns the VI and the new programmed replicas. Rolls
+    /// its own allocations back if any program is refused.
+    pub(super) fn clone_tenancy(
+        &mut self,
+        plan: &MigrationPlan,
+        name: &str,
+        vi: Option<u16>,
+        to: usize,
+    ) -> Result<(u16, Vec<Replica>)> {
+        let created_here = vi.is_none();
+        let vi = match vi {
+            Some(vi) => vi,
+            None => match self.apply_on(to, &LifecycleOp::CreateVi { name: name.into() })? {
+                LifecycleOutcome::Vi(vi) => vi,
+                other => bail!("expected Vi from CreateVi, got {other:?}"),
+            },
+        };
+        let mut new_vrs: Vec<usize> = Vec::with_capacity(plan.len());
+        let rollback = |fleet: &mut FleetScheduler, vrs: &[usize]| {
+            // Regions programmed before the failure are still inside
+            // their reconfiguration windows, and precheck_op refuses
+            // releasing/destroying a draining region: wait the windows
+            // out first, or the rollback itself would be refused and the
+            // target would leak programmed VRs a failed migration never
+            // registered anywhere.
+            let _ = fleet.devices[to].handle.advance_clock(MIGRATION_DRAIN_US);
+            if created_here {
+                // Take the VI record with it: a VI this attempt created
+                // is registered nowhere, so it must not survive.
+                let _ = fleet.apply_on(to, &LifecycleOp::DestroyVi { vi });
+            } else {
+                for &vr in vrs {
+                    let _ = fleet.apply_on(to, &LifecycleOp::Release { vi, vr });
+                }
+            }
+        };
+        for _ in &plan.regions {
+            match self.apply_on(to, &LifecycleOp::Allocate { vi }) {
+                Ok(LifecycleOutcome::Vr(vr)) => new_vrs.push(vr),
+                Ok(other) => {
+                    rollback(self, &new_vrs);
+                    bail!("expected Vr from Allocate, got {other:?}");
+                }
+                Err(e) => {
+                    rollback(self, &new_vrs);
+                    return Err(e);
+                }
+            }
+        }
+        for (i, region) in plan.regions.iter().enumerate() {
+            let Some(design) = &region.design else { continue };
+            let dest = region.streams_to.map(|j| new_vrs[j]);
+            let op = LifecycleOp::Program {
+                vi,
+                vr: new_vrs[i],
+                design: design.clone(),
+                dest,
+            };
+            if let Err(e) = self.apply_on(to, &op) {
+                rollback(self, &new_vrs);
+                return Err(e);
+            }
+        }
+        // Direct links where the target placement landed the stream
+        // edges adjacent (best-effort: a non-adjacent edge still streams,
+        // routed through the NoC). Wiring retargets a source that was
+        // just programmed, and the control plane refuses rewiring a
+        // draining region — so when there is anything to wire, wait the
+        // programming windows out first (modeled deployment time; no
+        // traffic routes here until the cutover).
+        let wires: Vec<(usize, usize)> = plan
+            .regions
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.design.is_some())
+            .filter_map(|(i, r)| r.streams_to.map(|j| (new_vrs[i], new_vrs[j])))
+            .filter(|&(s, d)| self.devices[to].shadow_hv.topo.vrs_adjacent(s, d))
+            .collect();
+        if !wires.is_empty() {
+            self.devices[to].handle.advance_clock(MIGRATION_DRAIN_US)?;
+            for (src, dst) in wires {
+                let _ = self.apply_on(to, &LifecycleOp::Wire { vi, src, dst });
+            }
+        }
+        let replicas = plan
+            .regions
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.design.is_some())
+            .map(|(i, _)| Replica {
+                device: to,
+                vi,
+                vr: new_vrs[i],
+                epoch: self.devices[to].shadow_hv.vrs[new_vrs[i]].epoch,
+            })
+            .collect();
+        Ok((vi, replicas))
+    }
+
+    /// Live cross-device migration of `tenant` from device `from` to
+    /// device `to` (see the module docs for the protocol). The tenant
+    /// serves throughout; its replicas on other devices are untouched.
+    pub fn migrate_tenant(
+        &mut self,
+        tenant: TenantId,
+        from: usize,
+        to: usize,
+    ) -> Result<MigrationReport> {
+        ensure!(from != to, "migration source and target are the same device {from}");
+        ensure!(to < self.n_devices(), "device {to} does not exist");
+        ensure!(self.device_alive(to), "target device {to} is not alive");
+        let rec = self
+            .tenants
+            .get(&tenant)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
+        let Some(&src_vi) = rec.vis.get(&from) else {
+            bail!("tenant {tenant} has no replicas on device {from}");
+        };
+        // 1. Export from the source shadow (valid even if the source
+        //    engine is already dead — the failure-recovery path).
+        let plan = self.devices[from].shadow_hv.migration_plan(src_vi)?;
+        ensure!(!plan.is_empty(), "tenant {tenant} holds no regions on device {from}");
+        ensure!(
+            self.devices[to].shadow_hv.free_vrs() >= plan.len(),
+            "device {to} lacks {} free VRs for tenant {tenant}",
+            plan.len()
+        );
+        // 2. Replay on the target, then let the target's programming
+        //    windows elapse before any traffic cuts over (the modeled
+        //    deployment wait; without it the first post-flip burst would
+        //    eat the whole reconfiguration backlog).
+        let dst_vi = rec.vis.get(&to).copied();
+        let (dst_vi, new_replicas) = self.clone_tenancy(&plan, &rec.name, dst_vi, to)?;
+        self.devices[to].handle.advance_clock(MIGRATION_DRAIN_US)?;
+        // 3. Flip the routes: drop source-device replicas, add the new
+        //    ones, one generation bump.
+        let mut replicas: Vec<Replica> = self
+            .routes
+            .replicas(tenant)
+            .into_iter()
+            .filter(|r| r.device != from)
+            .collect();
+        replicas.extend(new_replicas);
+        self.routes.set_routes(tenant, replicas.clone());
+        // 4. Drain + destroy the source VI: every source region releases
+        //    through the engine's hot-drain path and the tenant record
+        //    goes with it (no empty ViRecord left behind). Skipped when
+        //    the source already died — nothing left to release.
+        if self.devices[from].alive {
+            self.devices[from].handle.advance_clock(MIGRATION_DRAIN_US)?;
+            self.apply_on(from, &LifecycleOp::DestroyVi { vi: src_vi })?;
+        }
+        let rec = self.tenants.get_mut(&tenant).expect("checked above");
+        rec.vis.remove(&from);
+        rec.vis.insert(to, dst_vi);
+        self.migrations += 1;
+        Ok(MigrationReport { tenant, from, to, regions: plan.len(), replicas })
+    }
+
+    /// Pick a migration target for a tenancy of `regions` regions of
+    /// `design`, excluding `from`: spread placement over the devices
+    /// with enough free VRs to absorb the whole tenancy *and* a free
+    /// pblock the design's footprint fits (a roomy device whose pblocks
+    /// are too small must not be picked over a fitting one).
+    fn pick_target(&mut self, regions: usize, from: usize, design: Option<&str>) -> Option<usize> {
+        let footprint = design.and_then(crate::coordinator::design_footprint);
+        let viable: Vec<DeviceLoad> = self
+            .device_loads(footprint.as_ref())
+            .into_iter()
+            .filter(|l| l.free_vrs >= regions && l.fits_vrs >= regions)
+            .collect();
+        placement::choose(&viable, PlacePolicy::Spread, Some(from), &[])
+    }
+
+    /// Tenants holding replicas on `device`, in deterministic id order.
+    fn tenants_on(&self, device: usize) -> Vec<TenantId> {
+        self.tenants
+            .iter()
+            .filter(|(_, rec)| rec.vis.contains_key(&device))
+            .map(|(&t, _)| t)
+            .collect()
+    }
+
+    /// Gracefully decommission `device`: live-migrate every tenant off
+    /// it (placement picks each target), then stop its engine and fold
+    /// its metrics. Returns the number of migrations performed. Tenants
+    /// that cannot be placed anywhere surface as errors *before* the
+    /// device powers off — the decommission is abandoned part-done (the
+    /// already-migrated tenants stay migrated) and the device keeps
+    /// serving.
+    pub fn decommission(&mut self, device: usize) -> Result<u64> {
+        ensure!(device < self.n_devices(), "device {device} does not exist");
+        ensure!(self.device_alive(device), "device {device} is already down");
+        let mut moved = 0u64;
+        for tenant in self.tenants_on(device) {
+            let vi = self.tenants[&tenant].vis[&device];
+            let regions = self.regions_on(device, vi).len();
+            if regions == 0 {
+                // Defensive: an empty VI record on the device (no regions)
+                // is destroyed rather than left behind.
+                let _ = self.apply_on(device, &LifecycleOp::DestroyVi { vi });
+                self.tenants.get_mut(&tenant).expect("listed above").vis.remove(&device);
+                continue;
+            }
+            let design = self.tenants[&tenant].design.clone();
+            let to = self
+                .pick_target(regions, device, Some(&design))
+                .ok_or_else(|| anyhow!("no device can absorb tenant {tenant}; decommission of device {device} abandoned"))?;
+            self.migrate_tenant(tenant, device, to)?;
+            moved += 1;
+        }
+        self.power_off(device);
+        Ok(moved)
+    }
+
+    /// Abrupt device failure: the engine dies immediately (no graceful
+    /// drain), then every tenant that held replicas there is recovered
+    /// by replaying its tenancy onto a survivor. Replicas that cannot be
+    /// re-placed are dropped from routing and counted in
+    /// [`FleetScheduler::displaced`]. Returns the number of tenants
+    /// recovered.
+    pub fn fail_device(&mut self, device: usize) -> Result<u64> {
+        ensure!(device < self.n_devices(), "device {device} does not exist");
+        ensure!(self.device_alive(device), "device {device} is already down");
+        self.power_off(device);
+        let mut recovered = 0u64;
+        for tenant in self.tenants_on(device) {
+            let vi = self.tenants[&tenant].vis[&device];
+            let regions = self.regions_on(device, vi).len();
+            let design = self.tenants[&tenant].design.clone();
+            let target =
+                if regions > 0 { self.pick_target(regions, device, Some(&design)) } else { None };
+            // A mid-recovery failure (e.g. the target refuses a program)
+            // must not abort the loop: the device is already dead, and
+            // every remaining tenant still needs its routes scrubbed.
+            let recovered_here = match target {
+                Some(to) => self.migrate_tenant(tenant, device, to).is_ok(),
+                None => false,
+            };
+            if recovered_here {
+                // The source engine is gone; migrate_tenant skipped the
+                // source release and replayed from the shadow.
+                recovered += 1;
+            } else {
+                // Unplaceable (or the replay was refused): drop the dead
+                // replicas from routing so traffic fails fast instead of
+                // pointing at a stopped engine forever.
+                let replicas: Vec<Replica> = self
+                    .routes
+                    .replicas(tenant)
+                    .into_iter()
+                    .filter(|r| r.device != device)
+                    .collect();
+                self.routes.set_routes(tenant, replicas);
+                self.tenants.get_mut(&tenant).expect("listed above").vis.remove(&device);
+                self.displaced += 1;
+            }
+        }
+        Ok(recovered)
+    }
+
+    /// Stop `device`'s engine, fold its metrics, and mark it dead.
+    fn power_off(&mut self, device: usize) {
+        let node = &mut self.devices[device];
+        node.alive = false;
+        if let Some(engine) = node.engine.take() {
+            let metrics = engine.stop();
+            self.collected.merge(&metrics);
+        }
+    }
+
+    /// One hot-spot rebalance pass: when the alive device that absorbed
+    /// the most routed traffic *since the previous pass* carries more
+    /// than `factor`× the least-loaded one's interval (and the cold
+    /// device has room), migrate the hot device's deterministically-first
+    /// movable tenant over. Interval deltas, never lifetime totals — a
+    /// device that was hot last week must not look hot forever after the
+    /// demand moved. Returns `Ok(None)` when the fleet is balanced
+    /// enough.
+    pub fn rebalance(&mut self, factor: f64) -> Result<Option<MigrationReport>> {
+        ensure!(factor >= 1.0, "rebalance factor must be >= 1.0");
+        // Per-device routed demand since the last rebalance pass.
+        let deltas: Vec<u64> = {
+            let routes = &self.routes;
+            self.devices
+                .iter_mut()
+                .enumerate()
+                .map(|(d, node)| {
+                    let routed = routes.device_routed(d);
+                    let delta = routed.saturating_sub(node.rebalance_seen);
+                    node.rebalance_seen = routed;
+                    delta
+                })
+                .collect()
+        };
+        let loads = self.device_loads(None);
+        let alive: Vec<_> = loads.iter().filter(|l| l.alive).collect();
+        if alive.len() < 2 {
+            return Ok(None);
+        }
+        let hot =
+            alive.iter().max_by_key(|l| (deltas[l.device], l.device)).expect("non-empty");
+        let cold = alive
+            .iter()
+            .filter(|l| l.free_vrs > 0)
+            .min_by_key(|l| (deltas[l.device], l.device));
+        let Some(cold) = cold else { return Ok(None) };
+        if hot.device == cold.device
+            || (deltas[hot.device] as f64) <= factor * deltas[cold.device].max(1) as f64
+        {
+            return Ok(None);
+        }
+        let (hot, cold) = (hot.device, cold.device);
+        let cold_free = self.free_vrs(cold);
+        for tenant in self.tenants_on(hot) {
+            let vi = self.tenants[&tenant].vis[&hot];
+            let regions = self.regions_on(hot, vi).len();
+            if regions == 0 || regions > cold_free {
+                continue;
+            }
+            // The cold device must actually be able to host the design —
+            // the same footprint gate the other migration entry points
+            // (decommission, fail_device) apply via pick_target.
+            let design = self.tenants[&tenant].design.clone();
+            if self.device_fits(cold, &design, regions) {
+                return self.migrate_tenant(tenant, hot, cold).map(Some);
+            }
+        }
+        Ok(None)
+    }
+}

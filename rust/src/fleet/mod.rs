@@ -1,0 +1,625 @@
+//! The fleet layer: multi-FPGA scheduling, cross-device tenant
+//! migration, and a cluster-scale serving front-end.
+//!
+//! One device space-shares among tenants (the paper's claim); a cloud
+//! serves from a *fleet* of such devices behind one scheduler — the
+//! missing layer between the per-device lifecycle built in PRs 1–3 and
+//! the ROADMAP's millions-of-users north star. This module owns N fully
+//! independent [`System`]s (one per modeled device, each with its own
+//! floorplan, hypervisor, NoC, and sharded serving engine) and adds:
+//!
+//! - **placement** ([`placement`]): bin-pack vs. spread over per-device
+//!   free space, reconfiguration-cost-aware, capacity-gated by each
+//!   device's own pblock accounting — no cross-device state exists;
+//! - **a front-end router** ([`router`]): `(tenant, request)` → device,
+//!   balancing round-robin across replicas of the tenant's design, with
+//!   per-device ingress links ([`Ingress`]) modeled on top of each
+//!   device's IO trip;
+//! - **live cross-device migration** ([`migrate`]): export the tenancy
+//!   ([`Hypervisor::migration_plan`]), replay it as lifecycle ops on the
+//!   target, flip the route table, drain and release the source — the
+//!   per-VR epochs make in-flight stale tickets reject safely, and the
+//!   router's generation counter makes the retry exactly-once;
+//! - **device churn**: graceful decommission (migrate everything off)
+//!   and abrupt failure (recover displaced tenants onto survivors).
+//!
+//! ```text
+//!                  FleetHandle::submit(tenant, payload)
+//!                               │ resolve (RouteTable, generation g)
+//!                ┌──────────────┴───────────────┐
+//!                ▼ ingress link 0               ▼ ingress link 1
+//!   ┌─ device 0 ────────────────┐  ┌─ device 1 ────────────────┐
+//!   │ dispatcher ─► VR workers  │  │ dispatcher ─► VR workers  │
+//!   │ (Hypervisor, TimingCore,  │  │ (independent floorplan,   │
+//!   │  NoC — all device-local)  │  │  hypervisor, NoC)         │
+//!   └───────────────────────────┘  └───────────────────────────┘
+//!        refused + table moved past g?  → re-resolve and retry
+//! ```
+
+pub mod migrate;
+pub mod placement;
+pub mod router;
+
+pub use migrate::{MigrationReport, MIGRATION_DRAIN_US};
+pub use placement::{DeviceLoad, PlacePolicy};
+pub use router::{Replica, RouteTable, Routed};
+
+use crate::cloud::Ingress;
+use crate::coordinator::churn::FleetEvent;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sharded::{ShardedEngine, ShardedHandle};
+use crate::coordinator::timing::MEAN_GAP_US;
+use crate::coordinator::{design_footprint, Response, System};
+use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
+use crate::noc::NocSim;
+use crate::placer::case_study_floorplan;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Identifier of a fleet tenant — stable across devices, replicas, and
+/// migrations (unlike per-device VI ids, which are device-local state).
+pub type TenantId = u32;
+
+/// One device's `(free VRs, free VRs the footprint fits)` from its
+/// shadow — the single capacity computation placement, migration, and
+/// the rebalancer all share.
+fn node_capacity(node: &DeviceNode, footprint: Option<&crate::device::Resources>) -> (usize, usize) {
+    let free: Vec<usize> = (0..node.shadow_hv.vrs.len())
+        .filter(|&vr| node.shadow_hv.vrs[vr].status == VrStatus::Free)
+        .collect();
+    let fitting = placement::fitting_free_vrs(&node.shadow_hv.floorplan, &free, footprint);
+    (free.len(), fitting)
+}
+
+/// How many times the front-end re-resolves and retries a refused call
+/// before surfacing the error (each retry requires the route table to
+/// have moved since the refused resolve, so the loop cannot spin).
+const MAX_ROUTE_RETRIES: u32 = 4;
+
+/// Fleet deployment configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of modeled devices.
+    pub devices: usize,
+    /// Artifact directory each device's runtime loads from.
+    pub artifacts_dir: String,
+    /// Placement policy for admissions and replica growth.
+    pub policy: PlacePolicy,
+    /// Per-device ingress links the front-end charges per request.
+    pub ingress: Ingress,
+}
+
+impl FleetConfig {
+    /// Default fleet: `devices` devices, spread placement, free (local)
+    /// ingress links.
+    pub fn new(devices: usize) -> FleetConfig {
+        FleetConfig {
+            devices,
+            artifacts_dir: "artifacts".into(),
+            policy: PlacePolicy::Spread,
+            ingress: Ingress::uniform(devices, crate::cloud::Link::local()),
+        }
+    }
+}
+
+/// One device of the fleet: its live sharded engine plus the scheduler's
+/// shadow of its tenancy. The engine *owns* its hypervisor (lifecycle is
+/// part of its message stream); the shadow mirrors every successfully
+/// applied op so placement can read free space, footprints, and epochs
+/// without entering the engine's request path.
+struct DeviceNode {
+    engine: Option<ShardedEngine>,
+    handle: ShardedHandle,
+    shadow_hv: Hypervisor,
+    shadow_noc: NocSim,
+    alive: bool,
+    /// Requests routed here at the last load refresh.
+    routed_seen: u64,
+    /// Requests routed here at the last rebalance pass (hot/cold
+    /// classification uses the interval since then, never lifetime
+    /// totals — an old hot device must not look hot forever).
+    rebalance_seen: u64,
+    /// Outstanding reconfiguration-window debt (µs), decayed by routed
+    /// demand (each routed request stands for ~one arrival gap of
+    /// amortization).
+    reconfig_debt_us: f64,
+}
+
+/// Per-tenant fleet record.
+#[derive(Debug, Clone)]
+struct TenantRecord {
+    name: String,
+    design: String,
+    /// VI id per device currently hosting this tenant's replicas.
+    vis: BTreeMap<usize, u16>,
+}
+
+/// The fleet scheduler: owns the device pool, the tenant registry, and
+/// the shared route table. Control-plane methods take `&mut self`;
+/// serving goes through cloneable [`FleetHandle`]s.
+pub struct FleetScheduler {
+    devices: Vec<DeviceNode>,
+    tenants: BTreeMap<TenantId, TenantRecord>,
+    routes: Arc<RouteTable>,
+    policy: PlacePolicy,
+    ingress: Ingress,
+    next_tenant: TenantId,
+    /// Fleet-level latency sketch shared with every handle (device total
+    /// + ingress per served request).
+    latency: Arc<std::sync::Mutex<crate::util::QuantileSketch>>,
+    /// Completed cross-device migrations (graceful or recovery).
+    pub migrations: u64,
+    /// Replicas lost to device failures that could not be re-placed.
+    pub displaced: u64,
+    /// Metrics folded in from devices already stopped (failures,
+    /// decommissions); [`FleetScheduler::stop`] merges the rest.
+    collected: Metrics,
+}
+
+/// Client handle onto the fleet front-end: resolves the route, charges
+/// the device's ingress link, calls the device engine, and retries
+/// (bounded, generation-gated) when a migration flips the table mid-call.
+#[derive(Clone)]
+pub struct FleetHandle {
+    handles: Vec<ShardedHandle>,
+    routes: Arc<RouteTable>,
+    ingress: Ingress,
+    /// Fleet-level end-to-end latency sketch: the device's modeled total
+    /// *plus* the ingress-link time — the number a client actually
+    /// experiences, which per-device `Metrics` cannot see.
+    latency: Arc<std::sync::Mutex<crate::util::QuantileSketch>>,
+}
+
+/// One served fleet request.
+#[derive(Debug, Clone)]
+pub struct FleetResponse {
+    /// Device that executed the request.
+    pub device: usize,
+    /// Lifecycle epoch of the serving replica (post-migration requests
+    /// carry the target device's epoch).
+    pub epoch: u64,
+    /// Modeled ingress-link time for this request (µs), on top of the
+    /// device-local IO trip inside `response.timing`.
+    pub ingress_us: f64,
+    /// The device's response.
+    pub response: Response,
+}
+
+impl FleetHandle {
+    /// Submit one request for `tenant`. Exactly-once by construction:
+    /// refusals happen before any compute, and a refused call is retried
+    /// only when the route table's generation moved past the one the
+    /// route was resolved at (i.e. a migration flipped the tenant under
+    /// the call) — otherwise the error surfaces.
+    pub fn submit(&self, tenant: TenantId, payload: impl Into<Arc<[u8]>>) -> Result<FleetResponse> {
+        let payload: Arc<[u8]> = payload.into();
+        let mut attempts = 0u32;
+        loop {
+            let Some(routed) = self.routes.resolve(tenant) else {
+                bail!("tenant {tenant} has no live replica");
+            };
+            let replica = routed.replica;
+            let handle = self
+                .handles
+                .get(replica.device)
+                .ok_or_else(|| anyhow!("device {} does not exist", replica.device))?;
+            match handle.call(replica.vi, replica.vr, Arc::clone(&payload)) {
+                Ok(response) => {
+                    let ingress_us =
+                        self.ingress.ingress_us(replica.device, payload.len() as u64);
+                    // Served replies feed the load signal and the
+                    // fleet-level latency sketch (ingress included —
+                    // remote devices really are slower to reach).
+                    self.routes.note_served(replica.device);
+                    let noc_clock_mhz = crate::cloud::IoConfig::default().noc_clock_mhz;
+                    self.latency
+                        .lock()
+                        .expect("fleet latency sketch poisoned")
+                        .add(response.timing.total_us(noc_clock_mhz) + ingress_us);
+                    return Ok(FleetResponse {
+                        device: replica.device,
+                        epoch: replica.epoch,
+                        ingress_us,
+                        response,
+                    });
+                }
+                Err(e) => {
+                    attempts += 1;
+                    // Retry only when THIS tenant's routes moved under
+                    // the call (a migration or device-churn flip): the
+                    // refusal was epoch/access gating on the old
+                    // replica, fired before any compute. Unrelated
+                    // tenants churning the table must not retry a
+                    // genuine refusal — that would re-draw admission
+                    // clocks and double-count rejections.
+                    let moved = self.routes.entry_generation(tenant)
+                        != Some(routed.generation);
+                    if attempts >= MAX_ROUTE_RETRIES || !moved {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl FleetScheduler {
+    /// Boot a fleet: `cfg.devices` empty devices, each behind its own
+    /// sharded engine, with independent shadows and an empty route table.
+    pub fn start(cfg: FleetConfig) -> Result<FleetScheduler> {
+        ensure!(cfg.devices > 0, "a fleet needs at least one device");
+        ensure!(
+            cfg.ingress.len() >= cfg.devices,
+            "ingress plan covers {} devices but the fleet has {}",
+            cfg.ingress.len(),
+            cfg.devices
+        );
+        let mut devices = Vec::with_capacity(cfg.devices);
+        for _ in 0..cfg.devices {
+            let engine = ShardedEngine::start(|| System::empty(&cfg.artifacts_dir))?;
+            let device = crate::device::Device::vu9p();
+            let (topo, fp) = case_study_floorplan(&device)?;
+            let shadow_noc = NocSim::new(topo.clone());
+            let shadow_hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+            devices.push(DeviceNode {
+                handle: engine.handle(),
+                engine: Some(engine),
+                shadow_hv,
+                shadow_noc,
+                alive: true,
+                routed_seen: 0,
+                rebalance_seen: 0,
+                reconfig_debt_us: 0.0,
+            });
+        }
+        Ok(FleetScheduler {
+            routes: Arc::new(RouteTable::new(cfg.devices)),
+            devices,
+            tenants: BTreeMap::new(),
+            policy: cfg.policy,
+            ingress: cfg.ingress,
+            next_tenant: 0,
+            latency: Arc::new(std::sync::Mutex::new(crate::util::QuantileSketch::new())),
+            migrations: 0,
+            displaced: 0,
+            collected: Metrics::default(),
+        })
+    }
+
+    /// A new client handle onto the fleet front-end.
+    pub fn handle(&self) -> FleetHandle {
+        FleetHandle {
+            handles: self.devices.iter().map(|d| d.handle.clone()).collect(),
+            routes: Arc::clone(&self.routes),
+            ingress: self.ingress.clone(),
+            latency: Arc::clone(&self.latency),
+        }
+    }
+
+    /// Fleet-level end-to-end latency percentile (µs, `p` in [0, 100]):
+    /// what clients experienced — each served request's device-modeled
+    /// total plus its ingress-link time. Unlike the per-device `Metrics`
+    /// percentiles, this moves when devices sit behind slower ingress
+    /// links ([`Ingress`]).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.lock().expect("fleet latency sketch poisoned").percentile(p)
+    }
+
+    /// Number of devices (alive or not) in the fleet.
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Whether device `device` is powered and serving.
+    pub fn device_alive(&self, device: usize) -> bool {
+        self.devices.get(device).is_some_and(|d| d.alive)
+    }
+
+    /// Free VRs on device `device` (from the scheduler's shadow).
+    pub fn free_vrs(&self, device: usize) -> usize {
+        self.devices[device].shadow_hv.free_vrs()
+    }
+
+    /// Device `device`'s modeled arrival-clock value (µs) — the makespan
+    /// of the demand it has admitted so far. Errors if the device's
+    /// engine is stopped.
+    pub fn clock_us(&self, device: usize) -> Result<f64> {
+        self.devices[device].handle.clock_us()
+    }
+
+    /// Requests routed to `device` by the front-end so far.
+    pub fn routed(&self, device: usize) -> u64 {
+        self.routes.device_routed(device)
+    }
+
+    /// Advance every alive device's modeled arrival clock by `dur_us` of
+    /// idle time (e.g. the gap between a deployment wave and the traffic
+    /// that follows it — reconfiguration windows elapse during it).
+    pub fn advance_clocks(&self, dur_us: f64) -> Result<()> {
+        for node in self.devices.iter().filter(|n| n.alive) {
+            node.handle.advance_clock(dur_us)?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot of `tenant`'s current replicas (empty if retired or
+    /// displaced).
+    pub fn replicas(&self, tenant: TenantId) -> Vec<Replica> {
+        self.routes.replicas(tenant)
+    }
+
+    /// Live tenants currently registered.
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The VRs tenant-VI `vi` holds on `device`, read from the
+    /// scheduler's shadow (empty when the VI holds nothing there). The
+    /// one way every control-plane path reads a tenant's per-device
+    /// tenancy.
+    pub(crate) fn regions_on(&self, device: usize, vi: u16) -> Vec<usize> {
+        self.devices[device]
+            .shadow_hv
+            .vis
+            .get(&vi)
+            .map(|r| r.vrs.clone())
+            .unwrap_or_default()
+    }
+
+    /// Whether `device` can host `regions` regions of `design` — i.e. it
+    /// has at least that many free VRs whose pblocks the design's
+    /// footprint fits. The same gate `device_loads` feeds placement, for
+    /// callers that already fixed the device.
+    pub(crate) fn device_fits(&self, device: usize, design: &str, regions: usize) -> bool {
+        let footprint = design_footprint(design);
+        let (_, fitting) = node_capacity(&self.devices[device], footprint.as_ref());
+        fitting >= regions
+    }
+
+    /// Decay reconfiguration debt by the demand each device absorbed
+    /// since the last refresh (one routed request ≈ one arrival gap of
+    /// amortization).
+    fn refresh_debt(&mut self) {
+        for (d, node) in self.devices.iter_mut().enumerate() {
+            let routed = self.routes.device_routed(d);
+            let delta = routed.saturating_sub(node.routed_seen);
+            node.routed_seen = routed;
+            node.reconfig_debt_us = (node.reconfig_debt_us - delta as f64 * MEAN_GAP_US).max(0.0);
+        }
+    }
+
+    /// Placement's view of every device for a candidate design
+    /// footprint.
+    pub(crate) fn device_loads(
+        &mut self,
+        footprint: Option<&crate::device::Resources>,
+    ) -> Vec<DeviceLoad> {
+        self.refresh_debt();
+        self.devices
+            .iter()
+            .enumerate()
+            .map(|(device, node)| {
+                let (free_vrs, fits_vrs) = node_capacity(node, footprint);
+                DeviceLoad {
+                    device,
+                    alive: node.alive,
+                    free_vrs,
+                    fits_vrs,
+                    reconfig_debt_us: node.reconfig_debt_us,
+                }
+            })
+            .collect()
+    }
+
+    /// Apply one lifecycle op on device `device` (engine first, then the
+    /// shadow mirror). The shadow and the engine run the same
+    /// deterministic hypervisor over the same op stream, so a divergence
+    /// is a bug, not a runtime condition.
+    pub(crate) fn apply_on(&mut self, device: usize, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        let node = &mut self.devices[device];
+        ensure!(node.alive, "device {device} is not alive");
+        let outcome = node.handle.lifecycle(op.clone())?;
+        let (shadow_outcome, delta) = node
+            .shadow_hv
+            .apply(op, &design_footprint, &mut node.shadow_noc)
+            .expect("shadow hypervisor diverged from the device engine");
+        assert_eq!(outcome, shadow_outcome, "shadow outcome diverged on device {device}");
+        for &(_, dur_us) in &delta.reconfig {
+            node.reconfig_debt_us += dur_us;
+        }
+        Ok(outcome)
+    }
+
+    /// Deploy one `design` region for a tenant on `device`: the
+    /// single-region case of the migration machinery's
+    /// [`clone_tenancy`](FleetScheduler::clone_tenancy), so admission,
+    /// replica growth, and migration replay all share one
+    /// deploy-with-rollback protocol (a VI created by a failed attempt
+    /// is destroyed, an allocation without its program is released).
+    pub(crate) fn deploy_region(
+        &mut self,
+        device: usize,
+        vi: Option<u16>,
+        name: &str,
+        design: &str,
+    ) -> Result<(u16, usize, u64)> {
+        let plan = crate::hypervisor::MigrationPlan {
+            regions: vec![crate::hypervisor::RegionPlan {
+                design: Some(design.to_string()),
+                streams_to: None,
+            }],
+        };
+        let (vi, replicas) = self.clone_tenancy(&plan, name, vi, device)?;
+        let replica = replicas.first().copied().expect("one programmed region");
+        Ok((vi, replica.vr, replica.epoch))
+    }
+
+    /// Admit a tenant: place one region of `design` on the device the
+    /// policy picks, deploy it, and register the front-end route.
+    /// Returns the fleet-wide tenant id.
+    pub fn admit_tenant(&mut self, name: &str, design: &str) -> Result<TenantId> {
+        let footprint = design_footprint(design);
+        let loads = self.device_loads(footprint.as_ref());
+        let device = placement::choose(&loads, self.policy, None, &[])
+            .ok_or_else(|| anyhow!("no alive device can host '{design}' (fleet full)"))?;
+        let (vi, vr, epoch) = self.deploy_region(device, None, name, design)?;
+        let tenant = self.next_tenant;
+        self.next_tenant += 1;
+        self.tenants.insert(
+            tenant,
+            TenantRecord {
+                name: name.into(),
+                design: design.into(),
+                vis: BTreeMap::from([(device, vi)]),
+            },
+        );
+        self.routes.set_routes(tenant, vec![Replica { device, vi, vr, epoch }]);
+        Ok(tenant)
+    }
+
+    /// Grow a tenant by one replica of its design; the policy picks the
+    /// device (possibly one the tenant is not on yet), and the front-end
+    /// immediately starts balancing the tenant's requests across all of
+    /// its replicas.
+    pub fn grow_tenant(&mut self, tenant: TenantId) -> Result<Replica> {
+        let rec = self
+            .tenants
+            .get(&tenant)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
+        let footprint = design_footprint(&rec.design);
+        let loads = self.device_loads(footprint.as_ref());
+        let occupied: Vec<usize> = rec.vis.keys().copied().collect();
+        let device = placement::choose(&loads, self.policy, None, &occupied)
+            .ok_or_else(|| anyhow!("no alive device can host another '{}'", rec.design))?;
+        let vi = rec.vis.get(&device).copied();
+        let (vi, vr, epoch) = self.deploy_region(device, vi, &rec.name, &rec.design)?;
+        self.tenants.get_mut(&tenant).expect("checked above").vis.insert(device, vi);
+        let mut replicas = self.routes.replicas(tenant);
+        let replica = Replica { device, vi, vr, epoch };
+        replicas.push(replica);
+        self.routes.set_routes(tenant, replicas);
+        Ok(replica)
+    }
+
+    /// Retire a tenant: unroute it, then destroy its VI on every device
+    /// it occupies (waiting out open reconfiguration windows — the
+    /// drain), so neither regions nor empty VI records are left behind.
+    pub fn retire_tenant(&mut self, tenant: TenantId) -> Result<()> {
+        let Some(rec) = self.tenants.remove(&tenant) else { bail!("unknown tenant {tenant}") };
+        self.routes.remove(tenant);
+        for (&device, &vi) in &rec.vis {
+            if !self.devices[device].alive {
+                continue; // died earlier; nothing to release
+            }
+            self.devices[device].handle.advance_clock(MIGRATION_DRAIN_US)?;
+            self.apply_on(device, &LifecycleOp::DestroyVi { vi })?;
+        }
+        Ok(())
+    }
+
+    /// Stop every engine and return the fleet-wide merged [`Metrics`]
+    /// (including devices that already stopped via failure or
+    /// decommission).
+    pub fn stop(mut self) -> Metrics {
+        let mut total = std::mem::take(&mut self.collected);
+        for node in &mut self.devices {
+            if let Some(engine) = node.engine.take() {
+                total.merge(&engine.stop());
+            }
+        }
+        total
+    }
+}
+
+/// Outcome of replaying a fleet churn trace ([`replay_fleet`]).
+#[derive(Debug, Clone, Default)]
+pub struct FleetReplayStats {
+    /// Requests that got an `Ok` reply.
+    pub served: u64,
+    /// Requests refused (no replica, capacity, access).
+    pub refused: u64,
+    /// Tenant admissions the fleet accepted.
+    pub admitted: u64,
+    /// Admissions refused (fleet full at that trace point).
+    pub turned_away: u64,
+    /// Cross-device migrations performed (decommission, recovery,
+    /// rebalance).
+    pub migrations: u64,
+    /// Replicas lost to failures that could not be re-placed.
+    pub displaced: u64,
+    /// Summed modeled ingress-link time across served requests (µs).
+    pub ingress_us: f64,
+}
+
+/// Replay a fleet churn trace ([`FleetEvent`]s from
+/// `coordinator::churn::generate_fleet`) against a live fleet. Trace
+/// tenant indices are positions in the `Admit` sequence; admissions the
+/// fleet refuses leave their slot unmapped, and later traffic to that
+/// slot counts as refused — so the replay tolerates any divergence
+/// between the generator's capacity bookkeeping and live placement.
+pub fn replay_fleet(fleet: &mut FleetScheduler, events: &[FleetEvent]) -> FleetReplayStats {
+    let handle = fleet.handle();
+    let mut map: Vec<Option<TenantId>> = Vec::new();
+    let mut stats = FleetReplayStats::default();
+    let hotspot_payload: Arc<[u8]> = vec![0x5Au8; 64].into();
+    let submit = |fleet_stats: &mut FleetReplayStats, tenant: TenantId, payload: Arc<[u8]>| match handle
+        .submit(tenant, payload)
+    {
+        Ok(resp) => {
+            fleet_stats.served += 1;
+            fleet_stats.ingress_us += resp.ingress_us;
+        }
+        Err(_) => fleet_stats.refused += 1,
+    };
+    for event in events {
+        match event {
+            FleetEvent::Admit { name, design } => match fleet.admit_tenant(name, design) {
+                Ok(tenant) => {
+                    map.push(Some(tenant));
+                    stats.admitted += 1;
+                }
+                Err(_) => {
+                    map.push(None);
+                    stats.turned_away += 1;
+                }
+            },
+            FleetEvent::GrowReplica { tenant } => {
+                if let Some(Some(t)) = map.get(*tenant as usize) {
+                    let _ = fleet.grow_tenant(*t);
+                }
+            }
+            FleetEvent::Retire { tenant } => {
+                if let Some(slot) = map.get_mut(*tenant as usize) {
+                    if let Some(t) = slot.take() {
+                        let _ = fleet.retire_tenant(t);
+                    }
+                }
+            }
+            FleetEvent::Decommission { device } => {
+                let _ = fleet.decommission(*device);
+            }
+            FleetEvent::Fail { device } => {
+                let _ = fleet.fail_device(*device);
+            }
+            FleetEvent::Hotspot { tenant, requests } => {
+                if let Some(Some(t)) = map.get(*tenant as usize) {
+                    for _ in 0..*requests {
+                        submit(&mut stats, *t, Arc::clone(&hotspot_payload));
+                    }
+                    let _ = fleet.rebalance(2.0);
+                } else {
+                    stats.refused += u64::from(*requests);
+                }
+            }
+            FleetEvent::Request { tenant, payload } => match map.get(*tenant as usize) {
+                Some(Some(t)) => submit(&mut stats, *t, Arc::clone(payload)),
+                _ => stats.refused += 1,
+            },
+        }
+    }
+    stats.migrations = fleet.migrations;
+    stats.displaced = fleet.displaced;
+    stats
+}

@@ -1,0 +1,201 @@
+//! Fleet-level tenant placement: which device hosts the next region.
+//!
+//! Placement sees each device only through its [`DeviceLoad`] summary —
+//! free VRs, whether the design's footprint fits a free region's pblock,
+//! and the device's outstanding reconfiguration debt. There is no
+//! cross-device state: each device's hypervisor, floorplan, and NoC are
+//! fully independent, and the scheduler's per-device shadows are the
+//! *only* fleet-wide view (exactly the cloud-operator boundary the
+//! multi-tenant security literature draws between devices).
+//!
+//! Two policies, both reconfiguration-cost-aware:
+//!
+//! - **BinPack** — fill the busiest device that still fits. Consolidates
+//!   tenancy so whole devices stay free for large arrivals and for
+//!   decommissioning.
+//! - **Spread** — place on the emptiest device. Maximizes per-tenant
+//!   isolation and spreads the serving load (the scaling bench's shape).
+//!
+//! Ties break toward the device with the least pending reconfiguration
+//! debt (admissions there queue behind fewer open windows), then toward
+//! the lowest device index — keeping placement fully deterministic.
+
+use crate::device::Resources;
+use std::cmp::Ordering;
+
+/// Fleet placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Fill the busiest device that still fits (consolidation).
+    BinPack,
+    /// Place on the emptiest device (isolation / load spreading).
+    Spread,
+}
+
+/// Placement's view of one device — everything scoring may consult.
+#[derive(Debug, Clone)]
+pub struct DeviceLoad {
+    /// Device index in the fleet.
+    pub device: usize,
+    /// Whether the device is powered and serving.
+    pub alive: bool,
+    /// VRs currently in the device's free pool.
+    pub free_vrs: usize,
+    /// How many of those free VRs have a pblock the candidate footprint
+    /// fits — the capacity gate for multi-region placements (a migration
+    /// of N regions needs `fits_vrs >= N`, not merely one fitting slot).
+    pub fits_vrs: usize,
+    /// Outstanding reconfiguration-window debt (µs): window time charged
+    /// by recent lifecycle ops that demand has not yet amortized. Scoring
+    /// prefers devices with less debt — a new tenant there queues behind
+    /// fewer open windows.
+    pub reconfig_debt_us: f64,
+}
+
+impl DeviceLoad {
+    /// Whether this device can host the candidate region at all.
+    fn viable(&self) -> bool {
+        self.alive && self.fits_vrs > 0
+    }
+}
+
+/// Pick the device for a new region under `policy`, or `None` when no
+/// alive device fits. `exclude` removes a device from consideration (a
+/// migration must not re-pick its source); `occupied` lists the devices
+/// the tenant already holds replicas on — `Spread` prefers devices *not*
+/// in it (replica anti-affinity, so one device failure cannot take out
+/// every replica), `BinPack` prefers devices in it (tenant
+/// consolidation).
+pub fn choose(
+    loads: &[DeviceLoad],
+    policy: PlacePolicy,
+    exclude: Option<usize>,
+    occupied: &[usize],
+) -> Option<usize> {
+    loads
+        .iter()
+        .filter(|l| l.viable() && Some(l.device) != exclude)
+        .min_by(|a, b| score(a, b, policy, occupied))
+        .map(|l| l.device)
+}
+
+/// Total-order comparator: "smaller is better". Keys, in order: the
+/// policy's tenant affinity, occupancy in the policy's direction,
+/// reconfiguration debt, device index.
+fn score(a: &DeviceLoad, b: &DeviceLoad, policy: PlacePolicy, occupied: &[usize]) -> Ordering {
+    let (ao, bo) = (occupied.contains(&a.device), occupied.contains(&b.device));
+    let (affinity, occupancy) = match policy {
+        // BinPack: the tenant's own device first, then fewest free VRs
+        // (busiest that fits).
+        PlacePolicy::BinPack => ((!ao).cmp(&!bo), a.free_vrs.cmp(&b.free_vrs)),
+        // Spread: a device the tenant is NOT on first, then most free
+        // VRs (emptiest).
+        PlacePolicy::Spread => (ao.cmp(&bo), b.free_vrs.cmp(&a.free_vrs)),
+    };
+    affinity
+        .then(occupancy)
+        .then(
+            a.reconfig_debt_us
+                .partial_cmp(&b.reconfig_debt_us)
+                .unwrap_or(Ordering::Equal),
+        )
+        .then(a.device.cmp(&b.device))
+}
+
+/// How many of the given *free* VRs have a pblock `footprint` fits, on a
+/// device whose floorplan maps VR `vr` to pblock `vr_pb[vr]`. `None`
+/// footprints (unknown designs program empty) fit any free region. The
+/// single capacity-gate computation every placement path shares.
+pub fn fitting_free_vrs(
+    floorplan: &crate::placer::Floorplan,
+    free_vrs: &[usize],
+    footprint: Option<&Resources>,
+) -> usize {
+    let Some(r) = footprint else { return free_vrs.len() };
+    free_vrs
+        .iter()
+        .filter(|&&vr| r.fits_in(&floorplan.pblocks.get(floorplan.vr_pb[vr]).free()))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(device: usize, free: usize, debt: f64) -> DeviceLoad {
+        DeviceLoad { device, alive: true, free_vrs: free, fits_vrs: free, reconfig_debt_us: debt }
+    }
+
+    #[test]
+    fn binpack_fills_the_busiest_spread_the_emptiest() {
+        let loads = vec![load(0, 2, 0.0), load(1, 5, 0.0), load(2, 4, 0.0)];
+        assert_eq!(choose(&loads, PlacePolicy::BinPack, None, &[]), Some(0));
+        assert_eq!(choose(&loads, PlacePolicy::Spread, None, &[]), Some(1));
+    }
+
+    #[test]
+    fn ties_break_on_reconfig_debt_then_device_index() {
+        let loads = vec![load(0, 3, 900.0), load(1, 3, 100.0), load(2, 3, 100.0)];
+        assert_eq!(
+            choose(&loads, PlacePolicy::Spread, None, &[]),
+            Some(1),
+            "equal occupancy: least debt wins"
+        );
+        let even = vec![load(0, 3, 0.0), load(1, 3, 0.0)];
+        assert_eq!(
+            choose(&even, PlacePolicy::BinPack, None, &[]),
+            Some(0),
+            "index breaks dead ties"
+        );
+    }
+
+    #[test]
+    fn replica_affinity_follows_the_policy() {
+        // Spread: a replica lands on a device the tenant is NOT on, even
+        // a fuller one (anti-affinity beats occupancy).
+        let loads = vec![load(0, 5, 0.0), load(1, 3, 0.0)];
+        assert_eq!(choose(&loads, PlacePolicy::Spread, None, &[0]), Some(1));
+        // BinPack: the tenant's own device is preferred (consolidation).
+        assert_eq!(choose(&loads, PlacePolicy::BinPack, None, &[0]), Some(0));
+        // ...unless it cannot host the region at all.
+        let full = vec![load(0, 0, 0.0), load(1, 3, 0.0)];
+        assert_eq!(choose(&full, PlacePolicy::BinPack, None, &[0]), Some(1));
+    }
+
+    #[test]
+    fn dead_full_and_excluded_devices_are_never_chosen() {
+        let mut loads = vec![load(0, 0, 0.0), load(1, 6, 0.0)];
+        assert_eq!(
+            choose(&loads, PlacePolicy::BinPack, None, &[]),
+            Some(1),
+            "full device skipped"
+        );
+        loads[1].alive = false;
+        assert_eq!(choose(&loads, PlacePolicy::BinPack, None, &[]), None, "dead device skipped");
+        let loads = vec![load(0, 2, 0.0), load(1, 4, 0.0)];
+        assert_eq!(
+            choose(&loads, PlacePolicy::Spread, Some(1), &[]),
+            Some(0),
+            "a migration's source is excluded"
+        );
+    }
+
+    #[test]
+    fn footprint_gate_respects_per_device_pblock_capacity() {
+        use crate::device::Device;
+        use crate::placer::case_study_floorplan;
+        let device = Device::vu9p();
+        let (_, fp) = case_study_floorplan(&device).unwrap();
+        let free: Vec<usize> = (0..6).collect();
+        let small = crate::accel::by_name("fir").map(|s| s.resources).unwrap();
+        assert_eq!(fitting_free_vrs(&fp, &free, Some(&small)), 6);
+        assert_eq!(
+            fitting_free_vrs(&fp, &free, None),
+            6,
+            "unknown designs fit any free region"
+        );
+        let oversized = Resources { lut: 10_000_000, ..Resources::ZERO };
+        assert_eq!(fitting_free_vrs(&fp, &free, Some(&oversized)), 0);
+        assert_eq!(fitting_free_vrs(&fp, &[], Some(&small)), 0, "no free region, no fit");
+    }
+}

@@ -1,0 +1,218 @@
+//! Fleet front-end routing: `(tenant, request) -> (device, VI, VR)`.
+//!
+//! The route table is the only state the request path shares with the
+//! fleet control plane, and it is versioned: every mutation bumps a
+//! **generation** counter. A client that resolved a route, called the
+//! device, and got refused can compare generations — if the table moved
+//! under it (a migration flipped the tenant's replicas) the refusal is
+//! expected and a re-resolved retry is safe; if the table did not move,
+//! the refusal is a real error and is surfaced. Refusals happen at
+//! admission or at the access monitor, *before* any accelerator compute,
+//! so a retry can never duplicate work — which is exactly the
+//! conservation property the migration tests assert (every request gets
+//! exactly one reply, none lost, none executed twice).
+
+use super::TenantId;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+/// One replica a tenant's requests can be routed to: a programmed region
+/// on a specific device, tagged with the lifecycle epoch it was deployed
+/// at (post-migration assertions compare against it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Replica {
+    /// Device index in the fleet.
+    pub device: usize,
+    /// VI id of the tenant *on that device* (VI numbering is per-device
+    /// state; the same tenant holds unrelated VI ids on different
+    /// devices — there is no cross-device hypervisor).
+    pub vi: u16,
+    /// VR index on that device.
+    pub vr: usize,
+    /// Lifecycle epoch of the VR at deployment.
+    pub epoch: u64,
+}
+
+/// A resolved route: the replica to call plus the tenant entry's version
+/// it was read at (the retry-safety token — unrelated tenants' churn
+/// never invalidates it).
+#[derive(Debug, Clone, Copy)]
+pub struct Routed {
+    /// Replica the request should be sent to.
+    pub replica: Replica,
+    /// The tenant's entry version at resolve time.
+    pub generation: u64,
+}
+
+/// One tenant's routing entry: its replicas, a round-robin cursor, and
+/// the entry's own version (the table generation at its last write —
+/// retries key off *this tenant's* routes moving, never off unrelated
+/// tenants churning the table).
+struct Entry {
+    replicas: Vec<Replica>,
+    rr: AtomicUsize,
+    version: u64,
+}
+
+/// The versioned tenant → replicas table shared between the fleet
+/// scheduler (writer) and every [`FleetHandle`](super::FleetHandle)
+/// (readers). Reads take the lock only long enough to copy one replica;
+/// the device call happens lock-free.
+pub struct RouteTable {
+    entries: RwLock<HashMap<TenantId, Entry>>,
+    generation: AtomicU64,
+    /// Requests routed per device (load signal for the rebalancer).
+    device_routed: Vec<AtomicU64>,
+}
+
+impl RouteTable {
+    /// Empty table over a fleet of `devices` devices.
+    pub fn new(devices: usize) -> RouteTable {
+        RouteTable {
+            entries: RwLock::new(HashMap::new()),
+            generation: AtomicU64::new(0),
+            device_routed: (0..devices).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Current table generation (bumped by every mutation).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Replace `tenant`'s replicas (registering the tenant if new) and
+    /// bump the generation; the entry's version becomes the new
+    /// generation. An empty replica list unroutes the tenant but keeps
+    /// the entry (requests error until routes return).
+    pub fn set_routes(&self, tenant: TenantId, replicas: Vec<Replica>) {
+        let mut entries = self.entries.write().expect("route table poisoned");
+        let version = self.generation.fetch_add(1, Ordering::AcqRel) + 1;
+        entries.insert(tenant, Entry { replicas, rr: AtomicUsize::new(0), version });
+    }
+
+    /// Drop `tenant` from the table entirely and bump the generation.
+    pub fn remove(&self, tenant: TenantId) {
+        let mut entries = self.entries.write().expect("route table poisoned");
+        entries.remove(&tenant);
+        self.generation.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Resolve one request: pick the tenant's next replica round-robin
+    /// (load-balancing across replicas of the same design). `None` when
+    /// the tenant has no live replica. The returned generation is the
+    /// *entry's* version, so a retry triggers only when this tenant's
+    /// own routes moved. Load accounting happens separately on served
+    /// replies ([`RouteTable::note_served`]).
+    pub fn resolve(&self, tenant: TenantId) -> Option<Routed> {
+        let entries = self.entries.read().expect("route table poisoned");
+        let entry = entries.get(&tenant)?;
+        if entry.replicas.is_empty() {
+            return None;
+        }
+        let i = entry.rr.fetch_add(1, Ordering::Relaxed) % entry.replicas.len();
+        let replica = entry.replicas[i];
+        Some(Routed { replica, generation: entry.version })
+    }
+
+    /// Record one successfully served request against `device`. The
+    /// front-end calls this on `Ok` replies only — refused calls and
+    /// generation-gated retries never pollute the load signal the
+    /// rebalancer and reconfig-debt decay read.
+    pub fn note_served(&self, device: usize) {
+        if let Some(counter) = self.device_routed.get(device) {
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The version of `tenant`'s entry (its last write), if it exists.
+    pub fn entry_generation(&self, tenant: TenantId) -> Option<u64> {
+        let entries = self.entries.read().expect("route table poisoned");
+        entries.get(&tenant).map(|e| e.version)
+    }
+
+    /// Snapshot of `tenant`'s replicas (empty if unrouted/unknown).
+    pub fn replicas(&self, tenant: TenantId) -> Vec<Replica> {
+        let entries = self.entries.read().expect("route table poisoned");
+        entries.get(&tenant).map(|e| e.replicas.clone()).unwrap_or_default()
+    }
+
+    /// Requests served by `device` so far (counted on `Ok` replies).
+    pub fn device_routed(&self, device: usize) -> u64 {
+        self.device_routed.get(device).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replica(device: usize, vr: usize) -> Replica {
+        Replica { device, vi: 1, vr, epoch: 2 }
+    }
+
+    #[test]
+    fn round_robin_balances_across_replicas() {
+        let table = RouteTable::new(2);
+        table.set_routes(7, vec![replica(0, 0), replica(1, 3), replica(0, 2)]);
+        let picks: Vec<usize> = (0..6)
+            .map(|_| {
+                let routed = table.resolve(7).unwrap();
+                table.note_served(routed.replica.device);
+                routed.replica.vr
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 3, 2, 0, 3, 2], "strict round-robin over replicas");
+        assert_eq!(table.device_routed(0), 4);
+        assert_eq!(table.device_routed(1), 2);
+        // Resolves that are never served do not count as load.
+        let _ = table.resolve(7);
+        assert_eq!(table.device_routed(0) + table.device_routed(1), 6);
+    }
+
+    #[test]
+    fn generation_tracks_every_mutation() {
+        let table = RouteTable::new(1);
+        let g0 = table.generation();
+        table.set_routes(1, vec![replica(0, 0)]);
+        let resolved = table.resolve(1).unwrap();
+        assert!(resolved.generation > g0);
+        assert_eq!(table.entry_generation(1), Some(resolved.generation));
+        table.set_routes(1, vec![replica(0, 1)]);
+        assert!(
+            table.entry_generation(1).unwrap() > resolved.generation,
+            "a flip must be observable on the tenant's own entry"
+        );
+        table.remove(1);
+        assert!(table.resolve(1).is_none());
+        assert_eq!(table.entry_generation(1), None);
+        assert!(table.generation() > resolved.generation + 1);
+    }
+
+    #[test]
+    fn unrelated_tenants_do_not_invalidate_a_resolved_route() {
+        // The retry-safety token is per-entry: another tenant's admission
+        // or migration must never make a refused call look retryable.
+        let table = RouteTable::new(2);
+        table.set_routes(1, vec![replica(0, 0)]);
+        let resolved = table.resolve(1).unwrap();
+        table.set_routes(2, vec![replica(1, 0)]);
+        table.remove(2);
+        assert_eq!(
+            table.entry_generation(1),
+            Some(resolved.generation),
+            "tenant 1's entry version is untouched by tenant 2's churn"
+        );
+        table.set_routes(1, vec![replica(1, 3)]);
+        assert!(table.entry_generation(1).unwrap() > resolved.generation);
+    }
+
+    #[test]
+    fn unrouted_and_unknown_tenants_resolve_to_none() {
+        let table = RouteTable::new(1);
+        assert!(table.resolve(42).is_none(), "unknown tenant");
+        table.set_routes(42, Vec::new());
+        assert!(table.resolve(42).is_none(), "unrouted tenant");
+        assert!(table.replicas(42).is_empty());
+    }
+}

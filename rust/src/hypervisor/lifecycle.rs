@@ -27,6 +27,7 @@ use super::{Event, Hypervisor, VrStatus};
 use crate::device::Resources;
 use crate::noc::NocSim;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// A tenant lifecycle operation, applicable to a live serving system.
 ///
@@ -87,6 +88,14 @@ pub enum LifecycleOp {
         /// VR to release.
         vr: usize,
     },
+    /// Tear down a VI entirely: release every region it holds (draining
+    /// their shards first) and remove the tenant record. What a clean
+    /// departure — or the rollback of a failed multi-region deployment —
+    /// issues, so no empty `ViRecord` ever leaks.
+    DestroyVi {
+        /// VI to destroy.
+        vi: u16,
+    },
 }
 
 /// What a successfully applied [`LifecycleOp`] produced.
@@ -124,6 +133,69 @@ impl Delta {
     }
 }
 
+/// One region of a [`MigrationPlan`]: what must be replayed on the target
+/// device to recreate it. Carries no VR indices — the target device's
+/// allocator resolves those — only the design and the tenant-relative
+/// stream edge.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegionPlan {
+    /// Design programmed in the region (`None` = allocated but never
+    /// programmed; the target allocates it without programming).
+    pub design: Option<String>,
+    /// Position (index into [`MigrationPlan::regions`]) of the region
+    /// this one streams its output into, if any.
+    pub streams_to: Option<usize>,
+}
+
+/// A tenant's tenancy exported in replayable, device-independent form —
+/// the cross-device migration contract. The fleet layer replays it as
+/// [`LifecycleOp`]s on the target device (allocate everything, then
+/// program with re-resolved stream destinations), flips routing, and
+/// releases the source regions; the source's monotonically bumped epochs
+/// make any in-flight stale admission tickets reject safely.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MigrationPlan {
+    /// Regions in the tenant's allocation order.
+    pub regions: Vec<RegionPlan>,
+}
+
+impl MigrationPlan {
+    /// Number of VRs the plan needs on the target device.
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Whether the plan carries no regions.
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+}
+
+impl Hypervisor {
+    /// Export VI `vi`'s tenancy as a device-independent [`MigrationPlan`]:
+    /// region designs in allocation order plus intra-tenant stream edges
+    /// by position. Stream edges that point outside the tenant's own
+    /// regions (impossible via the lifecycle API, which checks ownership)
+    /// are dropped rather than exported.
+    pub fn migration_plan(&self, vi: u16) -> Result<MigrationPlan> {
+        let Some(rec) = self.vis.get(&vi) else { bail!("unknown VI {vi}") };
+        let pos: HashMap<usize, usize> =
+            rec.vrs.iter().enumerate().map(|(i, &vr)| (vr, i)).collect();
+        let regions = rec
+            .vrs
+            .iter()
+            .map(|&vr| RegionPlan {
+                design: match &self.vrs[vr].status {
+                    VrStatus::Programmed { design, .. } => Some(design.clone()),
+                    _ => None,
+                },
+                streams_to: self.vrs[vr].stream_dest.and_then(|d| pos.get(&d).copied()),
+            })
+            .collect();
+        Ok(MigrationPlan { regions })
+    }
+}
+
 impl Hypervisor {
     /// VRs whose in-flight work must drain *before* `op` is applied to a
     /// live engine: their serving behavior (design, stream chaining,
@@ -139,6 +211,16 @@ impl Hypervisor {
             }
             LifecycleOp::Grow { stream_src: Some(src), .. } => vec![*src],
             LifecycleOp::Wire { src, .. } => vec![*src],
+            LifecycleOp::DestroyVi { vi } => {
+                let mut s = Vec::new();
+                if let Some(rec) = self.vis.get(vi) {
+                    for &vr in &rec.vrs {
+                        s.push(vr);
+                        s.extend(self.streamers_into(vr));
+                    }
+                }
+                s
+            }
             _ => Vec::new(),
         };
         set.retain(|&v| v < self.vrs.len());
@@ -211,6 +293,12 @@ impl Hypervisor {
                 Ok(())
             }
             LifecycleOp::Release { vi, vr } => held_by(*vr, *vi),
+            LifecycleOp::DestroyVi { vi } => {
+                if !self.vis.contains_key(vi) {
+                    bail!("unknown VI {vi}");
+                }
+                Ok(())
+            }
         }
     }
 
@@ -304,6 +392,22 @@ impl Hypervisor {
                     .collect();
                 self.release_vr(*vi, *vr, sim)?;
                 delta.note_replan(*vr);
+                Ok((LifecycleOutcome::Done, delta))
+            }
+            LifecycleOp::DestroyVi { vi } => {
+                let vrs = self.vis.get(vi).map(|r| r.vrs.clone()).unwrap_or_default();
+                delta.unwired = sim
+                    .direct_links()
+                    .into_iter()
+                    .filter(|&(s, d)| vrs.contains(&s) || vrs.contains(&d))
+                    .collect();
+                for &vr in &vrs {
+                    for s in self.streamers_into(vr) {
+                        delta.note_replan(s);
+                    }
+                    delta.note_replan(vr);
+                }
+                self.destroy_vi(*vi, sim)?;
                 Ok((LifecycleOutcome::Done, delta))
             }
         }
@@ -546,6 +650,73 @@ mod tests {
             .apply(&LifecycleOp::Wire { vi, src: a, dst: far }, &footprint, &mut sim)
             .is_err());
         assert_eq!(sim.direct_links(), before, "refused wire must not unwire anything");
+    }
+
+    #[test]
+    fn destroy_vi_releases_everything_and_reports_the_delta() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("t");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        let (out, _) = hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() },
+                &footprint,
+                &mut sim,
+            )
+            .unwrap();
+        let LifecycleOutcome::Vr(dst) = out else { panic!("expected Vr") };
+        // The quiesce set covers every region the VI holds.
+        let q = hv.quiesce_set(&LifecycleOp::DestroyVi { vi });
+        assert!(q.contains(&src) && q.contains(&dst));
+        let (_, delta) =
+            hv.apply(&LifecycleOp::DestroyVi { vi }, &footprint, &mut sim).unwrap();
+        assert!(delta.replan.contains(&src) && delta.replan.contains(&dst));
+        assert!(delta.unwired.contains(&(src, dst)), "the direct link comes down");
+        assert_eq!(hv.free_vrs(), 6, "every region returns to the pool");
+        assert!(!hv.vis.contains_key(&vi), "no empty ViRecord may leak");
+        assert!(sim.direct_links().is_empty());
+        // Destroying an unknown VI is refused.
+        assert!(hv.apply(&LifecycleOp::DestroyVi { vi }, &footprint, &mut sim).is_err());
+    }
+
+    #[test]
+    fn migration_plan_exports_designs_and_stream_edges_by_position() {
+        let (mut hv, mut sim) = setup();
+        let vi = hv.create_vi("mover");
+        let src = hv.allocate_vr(vi, &mut sim).unwrap();
+        hv.apply(
+            &LifecycleOp::Program { vi, vr: src, design: "fpu".into(), dest: None },
+            &footprint,
+            &mut sim,
+        )
+        .unwrap();
+        let (out, _) = hv
+            .apply(
+                &LifecycleOp::Grow { vi, stream_src: Some(src), design: "aes".into() },
+                &footprint,
+                &mut sim,
+            )
+            .unwrap();
+        let LifecycleOutcome::Vr(_) = out else { panic!("expected Vr") };
+        // A third region, allocated but never programmed.
+        hv.apply(&LifecycleOp::Allocate { vi }, &footprint, &mut sim).unwrap();
+
+        let plan = hv.migration_plan(vi).unwrap();
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.regions[0].design.as_deref(), Some("fpu"));
+        assert_eq!(plan.regions[0].streams_to, Some(1), "edge exported by position");
+        assert_eq!(plan.regions[1].design.as_deref(), Some("aes"));
+        assert_eq!(plan.regions[1].streams_to, None);
+        assert_eq!(plan.regions[2].design, None, "unprogrammed region exports as such");
+        // The plan is device-independent: a foreign VI exports nothing.
+        assert!(hv.migration_plan(99).is_err());
+        assert!(hv.migration_plan(hv.create_vi("empty")).unwrap().is_empty());
     }
 
     #[test]

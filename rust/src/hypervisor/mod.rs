@@ -12,7 +12,7 @@
 pub mod lifecycle;
 pub mod reconfig;
 
-pub use lifecycle::{Delta, LifecycleOp, LifecycleOutcome};
+pub use lifecycle::{Delta, LifecycleOp, LifecycleOutcome, MigrationPlan, RegionPlan};
 
 use crate::device::Resources;
 use crate::noc::{NocSim, Topology};

@@ -11,6 +11,7 @@ pub mod cloud;
 pub mod coordinator;
 pub mod device;
 pub mod estimate;
+pub mod fleet;
 pub mod hypervisor;
 pub mod noc;
 pub mod placer;

@@ -5,9 +5,11 @@
 
 use anyhow::Result;
 use fpga_mt::accel::CASE_STUDY;
-use fpga_mt::cloud::{compare, fig14_io_trips, IoConfig, Link, Scheme};
+use fpga_mt::cloud::{compare, fig14_io_trips, Ingress, IoConfig, Link, Scheme};
+use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
 use fpga_mt::coordinator::System;
 use fpga_mt::device::Device;
+use fpga_mt::fleet::{replay_fleet, FleetConfig, FleetScheduler, PlacePolicy};
 use fpga_mt::estimate::{
     self, router_fmax_mhz, router_power_mw, router_resources, RouterConfig, BASELINES,
 };
@@ -29,9 +31,10 @@ fn main() -> Result<()> {
         Some("compare") => cmd_compare(),
         Some("placement") => cmd_placement(),
         Some("case-study") => cmd_case_study(&args),
+        Some("fleet") => cmd_fleet(&args),
         _ => {
             eprintln!(
-                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study> [--...]\n\
+                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet> [--...]\n\
                  \n  resources   Fig 8  router area sweep\
                  \n  power       Fig 9  router power sweep\
                  \n  fmax        Fig 10 max frequency sweep\
@@ -41,7 +44,8 @@ fn main() -> Result<()> {
                  \n  io-trip     Fig 14 IO trip multi-tenant vs directIO\
                  \n  throughput  Fig 15 streaming throughput local/remote\
                  \n  compare     Table II scheme comparison\
-                 \n  case-study  Table I end-to-end deployment (native runtime)"
+                 \n  case-study  Table I end-to-end deployment (native runtime)\
+                 \n  fleet       Multi-FPGA fleet under churn (--devices, --events, --seed, --binpack, --remote)"
             );
             Ok(())
         }
@@ -215,6 +219,62 @@ fn cmd_placement() -> Result<()> {
         CASE_STUDY.iter().map(|a| (a.vr, format!("{} (VI{})", a.display, a.vi))).collect();
     println!("{}", placer::ascii::render(&device, &fp, &labels));
     println!("NoC CLB share: {:.3}%", fp.noc_clb_fraction(&device) * 100.0);
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let devices = args.get_usize("devices", 2);
+    let events = args.get_usize("events", 600);
+    let seed = args.get_u64("seed", 0xF1EE7);
+    let policy = if args.flag("binpack") { PlacePolicy::BinPack } else { PlacePolicy::Spread };
+    let ingress = if args.flag("remote") {
+        Ingress::uniform(devices, Link::testbed_ethernet())
+    } else {
+        Ingress::uniform(devices, Link::local())
+    };
+    let trace = churn::generate_fleet(&FleetChurnConfig { seed, events, devices });
+    let mut fleet = FleetScheduler::start(FleetConfig {
+        devices,
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        policy,
+        ingress,
+    })?;
+    println!(
+        "fleet: {devices} devices, {policy:?} placement, {} events (seed {seed:#x})",
+        trace.len()
+    );
+    let stats = replay_fleet(&mut fleet, &trace);
+    let mut t = Table::new(vec!["device", "alive", "free VRs", "routed", "clock µs"]);
+    for d in 0..fleet.n_devices() {
+        let alive = fleet.device_alive(d);
+        t.row(vec![
+            format!("dev{d}"),
+            if alive { "yes" } else { "down" }.to_string(),
+            fleet.free_vrs(d).to_string(),
+            fleet.routed(d).to_string(),
+            if alive { fnum(fleet.clock_us(d)?) } else { "-".to_string() },
+        ]);
+    }
+    t.print();
+    println!(
+        "tenants admitted={} turned_away={} | requests served={} refused={} | migrations={} displaced={}",
+        stats.admitted, stats.turned_away, stats.served, stats.refused, stats.migrations, stats.displaced
+    );
+    // Fleet-level percentiles include each request's ingress-link time
+    // (`--remote` visibly shifts them); the device-side distribution
+    // excludes it.
+    let (p50, p95, p99) = (
+        fleet.latency_percentile(50.0),
+        fleet.latency_percentile(95.0),
+        fleet.latency_percentile(99.0),
+    );
+    let metrics = fleet.stop();
+    println!(
+        "client latency (incl. ingress): p50 {p50:.1} µs, p95 {p95:.1} µs, p99 {p99:.1} µs | device-side p50 {:.1} µs | mean ingress {:.1} µs | throughput {:.2} Gb/s",
+        metrics.latency_percentile(50.0),
+        stats.ingress_us / stats.served.max(1) as f64,
+        metrics.throughput_gbps()
+    );
     Ok(())
 }
 

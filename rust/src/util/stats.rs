@@ -137,6 +137,105 @@ impl Percentiles {
     }
 }
 
+/// Sub-buckets per octave of the [`QuantileSketch`]: 16 gives ≤ ~6%
+/// relative error per estimate, bounded by construction.
+const SKETCH_SUB: u64 = 16;
+
+/// Bounded, mergeable quantile estimator (log-linear buckets, HDR-style).
+///
+/// Values are bucketed by magnitude: exact unit buckets below
+/// [`SKETCH_SUB`], then 16 sub-buckets per power of two. The bucket a
+/// sample lands in is a pure function of its value, so the sketch is
+/// **order-independent**: any partition of one sample stream across
+/// accumulators merges ([`QuantileSketch::merge`]) to exactly the state a
+/// single accumulator would hold — which is what lets the sharded
+/// engine's per-shard metrics report the same p50/p95/p99 as the serial
+/// engine on the same trace, deterministically. Memory is bounded at
+/// ~1k buckets regardless of sample count.
+#[derive(Debug, Clone, Default)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    n: u64,
+}
+
+impl QuantileSketch {
+    /// Empty sketch.
+    pub fn new() -> Self {
+        QuantileSketch::default()
+    }
+
+    /// Bucket index of a sample (values < 1.0 share bucket 0; negatives
+    /// clamp to 0 — latencies are non-negative).
+    fn bucket_of(x: f64) -> usize {
+        let v = if x.is_finite() && x > 0.0 { x as u64 } else { 0 };
+        if v < SKETCH_SUB {
+            return v as usize;
+        }
+        let exp = 63 - u64::from(v.leading_zeros()); // >= 4
+        let offset = (v >> (exp - 4)) - SKETCH_SUB; // in [0, 16)
+        (SKETCH_SUB + (exp - 4) * SKETCH_SUB + offset) as usize
+    }
+
+    /// Lower bound of bucket `b` (the inverse of [`Self::bucket_of`]).
+    /// Computed in u128: the bucket *after* the top one (reachable only
+    /// as the upper edge of a saturated sample's midpoint) needs
+    /// `1 << 64`.
+    fn bucket_low(b: usize) -> f64 {
+        let b = b as u128;
+        let sub = u128::from(SKETCH_SUB);
+        if b < sub {
+            return b as f64;
+        }
+        let exp = ((b - sub) / sub + 4) as u32;
+        let offset = (b - sub) % sub;
+        ((1u128 << exp) + (offset << (exp - 4))) as f64
+    }
+
+    /// Record one sample.
+    pub fn add(&mut self, x: f64) {
+        let b = Self::bucket_of(x);
+        if b >= self.counts.len() {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.n += 1;
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Fold another sketch in (elementwise bucket-count addition; exact,
+    /// order-independent).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.n += other.n;
+    }
+
+    /// Estimate the `p`-th percentile (`p` in [0, 100]); 0 when empty.
+    /// Returns the midpoint of the bucket holding the rank-`p` sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (Self::bucket_low(b) + Self::bucket_low(b + 1)) / 2.0;
+            }
+        }
+        Self::bucket_low(self.counts.len())
+    }
+}
+
 /// Fixed-bucket histogram for latency distributions.
 #[derive(Debug, Clone)]
 pub struct Histogram {
@@ -244,5 +343,62 @@ mod tests {
         assert_eq!(s.std_dev(), 0.0);
         let mut p = Percentiles::new();
         assert_eq!(p.median(), 0.0);
+        let q = QuantileSketch::new();
+        assert_eq!(q.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn sketch_buckets_round_trip() {
+        // bucket_low(bucket_of(v)) <= v < bucket_low(bucket_of(v) + 1),
+        // and the relative bucket width stays <= 1/16.
+        for v in [0u64, 1, 7, 15, 16, 17, 31, 32, 100, 1_000, 65_535, 1 << 30] {
+            let b = QuantileSketch::bucket_of(v as f64);
+            let lo = QuantileSketch::bucket_low(b);
+            let hi = QuantileSketch::bucket_low(b + 1);
+            assert!(lo <= v as f64 && (v as f64) < hi, "v={v} lo={lo} hi={hi}");
+            if v >= SKETCH_SUB {
+                assert!((hi - lo) / lo <= 1.0 / 8.0, "v={v} width {}", hi - lo);
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_percentiles_bounded_error() {
+        let mut q = QuantileSketch::new();
+        for v in 1..=10_000u64 {
+            q.add(v as f64);
+        }
+        assert_eq!(q.count(), 10_000);
+        for (p, exact) in [(50.0, 5_000.0), (95.0, 9_500.0), (99.0, 9_900.0)] {
+            let est = q.percentile(p);
+            assert!(
+                (est - exact).abs() / exact < 0.08,
+                "p{p}: est {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_merge_is_order_independent_and_exact() {
+        // Any partition of the samples across sketches merges to exactly
+        // the single-accumulator state (the serial-vs-sharded metrics
+        // equality depends on this).
+        let xs: Vec<f64> = (0..500).map(|i| ((i * 37) % 997) as f64 + 0.5).collect();
+        let mut whole = QuantileSketch::new();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let mut parts = vec![QuantileSketch::new(), QuantileSketch::new(), QuantileSketch::new()];
+        for (i, &x) in xs.iter().enumerate() {
+            parts[i % 3].add(x);
+        }
+        let mut merged = QuantileSketch::new();
+        for part in parts.iter().rev() {
+            merged.merge(part);
+        }
+        assert_eq!(merged.count(), whole.count());
+        for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(p), whole.percentile(p), "p{p}");
+        }
     }
 }

@@ -110,6 +110,62 @@ fn churn_trace_serial_and_sharded_agree() {
 }
 
 #[test]
+fn reconfig_window_gates_grow_and_release_identically_on_both_engines() {
+    // Churn edge cases: a `Grow` whose stream source is still inside its
+    // reconfiguration window, and a `Release` against a region that is
+    // still draining that window, are both refused by the shared
+    // control-plane precheck — with the *same* accept/reject decisions on
+    // the serial and the sharded engine, at the same trace positions.
+    fn drive(h: &fpga_mt::coordinator::server::EngineHandle) -> Vec<bool> {
+        let mut decisions = Vec::new();
+        let vi = match h.lifecycle(LifecycleOp::CreateVi { name: "edge".into() }).unwrap() {
+            LifecycleOutcome::Vi(vi) => vi,
+            other => panic!("expected Vi, got {other:?}"),
+        };
+        let vr = match h.lifecycle(LifecycleOp::Allocate { vi }).unwrap() {
+            LifecycleOutcome::Vr(vr) => vr,
+            other => panic!("expected Vr, got {other:?}"),
+        };
+        // Opens VR's reconfiguration window.
+        h.lifecycle(LifecycleOp::Program { vi, vr, design: "fpu".into(), dest: None }).unwrap();
+        // 1. Grow streaming from a still-reconfiguring source: refused.
+        decisions.push(
+            h.lifecycle(LifecycleOp::Grow { vi, stream_src: Some(vr), design: "aes".into() })
+                .is_ok(),
+        );
+        // 2. Release of the still-draining region: refused.
+        decisions.push(h.lifecycle(LifecycleOp::Release { vi, vr }).is_ok());
+        // The refused ops must not have disturbed the tenancy: the region
+        // still serves its tenant.
+        decisions.push(h.call(vi, vr, vec![3u8; 64]).is_ok());
+        // Once the window elapses both ops are accepted.
+        h.advance_clock(20_000.0).unwrap();
+        decisions.push(
+            h.lifecycle(LifecycleOp::Grow { vi, stream_src: Some(vr), design: "aes".into() })
+                .is_ok(),
+        );
+        h.advance_clock(20_000.0).unwrap();
+        decisions.push(h.lifecycle(LifecycleOp::Release { vi, vr }).is_ok());
+        decisions
+    }
+
+    let serial = Engine::start(|| System::empty("artifacts")).unwrap();
+    let serial_decisions = drive(&serial.handle());
+    serial.stop();
+
+    let sharded = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+    let sharded_decisions = drive(&sharded.handle());
+    sharded.stop();
+
+    assert_eq!(
+        serial_decisions,
+        vec![false, false, true, true, true],
+        "grow-in-window and release-while-draining must be refused, then accepted"
+    );
+    assert_eq!(serial_decisions, sharded_decisions, "engines must gate identically");
+}
+
+#[test]
 fn released_region_is_isolated_from_its_previous_owner() {
     let mut sys = System::case_study("artifacts").unwrap();
     // VI3's FPU (VR2) streams into its AES region (VR3) over a wired link.
@@ -200,6 +256,9 @@ fn hot_drain_under_concurrent_load_conserves_replies() {
     }
     let ctl = engine.handle();
     for round in 0..6 {
+        // Wait out the previous round's programming window: a release
+        // against a still-draining region is refused by the control plane.
+        ctl.advance_clock(10_000.0).unwrap();
         ctl.lifecycle(LifecycleOp::Release { vi: 5, vr: 5 })
             .unwrap_or_else(|e| panic!("round {round}: release failed: {e}"));
         let vr = match ctl.lifecycle(LifecycleOp::Allocate { vi: 5 }) {

@@ -1,0 +1,261 @@
+//! Fleet-layer invariants — the PR-4 tentpole:
+//!
+//! - **Migration conservation**: every request submitted during a live
+//!   cross-device migration gets exactly one reply (none lost, none
+//!   duplicated — the engine-side `Metrics::requests` equals the count
+//!   of `Ok` replies clients observed), and post-migration requests
+//!   execute on the target device at the target's lifecycle epoch.
+//! - **Placement**: bin-pack and spread respect per-device pblock
+//!   capacity, with no cross-device state sharing (per-device VI
+//!   numbering overlaps across devices precisely because nothing is
+//!   shared).
+//! - **Device churn**: graceful decommission keeps tenants serving;
+//!   abrupt failure recovers them onto survivors.
+//! - **Modeled scaling**: the same demand over 2 devices finishes in
+//!   well under the 1-device makespan (the bench gates the full ≥1.8x).
+
+use fpga_mt::cloud::{Ingress, Link};
+use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
+use fpga_mt::fleet::{replay_fleet, FleetConfig, FleetScheduler, PlacePolicy};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn fleet(devices: usize, policy: PlacePolicy) -> FleetScheduler {
+    let cfg = FleetConfig { policy, ..FleetConfig::new(devices) };
+    FleetScheduler::start(cfg).unwrap()
+}
+
+#[test]
+fn migration_conserves_replies_and_lands_on_target_epoch() {
+    let mut fleet = fleet(2, PlacePolicy::BinPack);
+    let tenant = fleet.admit_tenant("mover", "aes").unwrap();
+    assert_eq!(fleet.replicas(tenant)[0].device, 0, "bin-pack starts on device 0");
+    // Let the deployment's reconfiguration window elapse so the client
+    // load below measures migration behavior, not admission queueing.
+    fleet.advance_clocks(10_000.0).unwrap();
+
+    // Clients hammer the tenant while the control plane migrates it.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for c in 0..3 {
+        let h = fleet.handle();
+        let stop = Arc::clone(&stop);
+        clients.push(std::thread::spawn(move || {
+            let payload: Arc<[u8]> = vec![c as u8 + 1; 64].into();
+            let (mut ok, mut err) = (0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                match h.submit(tenant, Arc::clone(&payload)) {
+                    Ok(resp) => {
+                        ok += 1;
+                        assert!(!resp.response.outputs.is_empty());
+                    }
+                    Err(_) => err += 1,
+                }
+            }
+            (ok, err)
+        }));
+    }
+    // Let traffic flow, then migrate live, then let it flow some more.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let report = fleet.migrate_tenant(tenant, 0, 1).unwrap();
+    assert_eq!(report.from, 0);
+    assert_eq!(report.to, 1);
+    assert_eq!(report.regions, 1);
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+    let mut ok_total = 0u64;
+    for c in clients {
+        let (ok, err) = c.join().unwrap();
+        ok_total += ok;
+        assert_eq!(err, 0, "a lone migration must be invisible to clients (retry covers it)");
+    }
+    assert!(ok_total > 0, "clients must have been served");
+
+    // Post-migration requests execute on the target device at its epoch.
+    let replicas = fleet.replicas(tenant);
+    assert_eq!(replicas.len(), 1);
+    assert_eq!(replicas[0].device, 1, "routes flipped to the target");
+    let h = fleet.handle();
+    let resp = h.submit(tenant, vec![9u8; 64]).unwrap();
+    assert_eq!(resp.device, 1, "post-migration requests land on the target");
+    // Engine-side ground truth: the epoch the target device actually
+    // executed at must match the route table's view of the new replica.
+    assert_eq!(
+        resp.response.epoch,
+        replicas[0].epoch,
+        "post-migration requests execute on the target device's epoch"
+    );
+    assert_eq!(resp.epoch, resp.response.epoch, "router and engine agree on the epoch");
+    assert_eq!(fleet.free_vrs(0), 6, "the source region was released");
+    assert_eq!(fleet.migrations, 1);
+
+    // Conservation: every Ok reply the clients counted was executed and
+    // recorded exactly once, fleet-wide.
+    let metrics = fleet.stop();
+    assert_eq!(
+        metrics.requests,
+        ok_total + 1,
+        "each Ok reply recorded exactly once (none lost, none duplicated)"
+    );
+}
+
+#[test]
+fn binpack_fills_devices_in_order_and_respects_capacity() {
+    let mut fleet = fleet(2, PlacePolicy::BinPack);
+    let designs = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
+    let mut tenants = Vec::new();
+    for i in 0..12 {
+        let t = fleet.admit_tenant(&format!("t{i}"), designs[i % 6]).unwrap();
+        tenants.push(t);
+        let device = fleet.replicas(t)[0].device;
+        assert_eq!(device, if i < 6 { 0 } else { 1 }, "tenant {i} must bin-pack");
+    }
+    assert_eq!(fleet.free_vrs(0), 0);
+    assert_eq!(fleet.free_vrs(1), 0);
+    // Capacity is per-device pblock accounting: a 13th tenant is refused.
+    assert!(fleet.admit_tenant("overflow", "fir").is_err());
+    // No cross-device state sharing: VI numbering restarts per device, so
+    // the first tenant on each device holds the same VI id.
+    let vi0 = fleet.replicas(tenants[0])[0].vi;
+    let vi6 = fleet.replicas(tenants[6])[0].vi;
+    assert_eq!(vi0, vi6, "independent hypervisors assign from the same id space");
+    assert_ne!(
+        fleet.replicas(tenants[0])[0].device,
+        fleet.replicas(tenants[6])[0].device
+    );
+    // Releasing a tenant frees exactly its device's region.
+    fleet.retire_tenant(tenants[0]).unwrap();
+    assert_eq!(fleet.free_vrs(0), 1);
+    assert_eq!(fleet.free_vrs(1), 0);
+    fleet.stop();
+}
+
+#[test]
+fn spread_alternates_devices_and_serves_from_both() {
+    let mut fleet = fleet(2, PlacePolicy::Spread);
+    let a = fleet.admit_tenant("a", "fir").unwrap();
+    let b = fleet.admit_tenant("b", "fft").unwrap();
+    let da = fleet.replicas(a)[0].device;
+    let db = fleet.replicas(b)[0].device;
+    assert_ne!(da, db, "spread must not colocate the first two tenants");
+    let h = fleet.handle();
+    assert_eq!(h.submit(a, vec![1u8; 64]).unwrap().device, da);
+    assert_eq!(h.submit(b, vec![2u8; 64]).unwrap().device, db);
+    // A replica grows on the emptier device; round-robin then balances
+    // the tenant's requests across devices.
+    let replica = fleet.grow_tenant(a).unwrap();
+    assert_ne!(replica.device, da, "the replica spreads to the other device");
+    let devices: Vec<usize> =
+        (0..4).map(|_| h.submit(a, vec![3u8; 32]).unwrap().device).collect();
+    assert!(devices.contains(&da) && devices.contains(&replica.device), "{devices:?}");
+    fleet.stop();
+}
+
+#[test]
+fn decommission_migrates_everything_and_failure_recovers() {
+    let mut fleet = fleet(3, PlacePolicy::Spread);
+    let designs = ["aes", "fir", "fft", "canny"];
+    let tenants: Vec<_> = designs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| fleet.admit_tenant(&format!("t{i}"), d).unwrap())
+        .collect();
+    let h = fleet.handle();
+    for &t in &tenants {
+        h.submit(t, vec![5u8; 64]).unwrap();
+    }
+    // Gracefully decommission device 0: its tenants migrate, none stop
+    // serving.
+    let on_dev0: Vec<_> = tenants
+        .iter()
+        .filter(|&&t| fleet.replicas(t).iter().any(|r| r.device == 0))
+        .copied()
+        .collect();
+    assert!(!on_dev0.is_empty(), "spread must have used device 0");
+    let moved = fleet.decommission(0).unwrap();
+    assert_eq!(moved as usize, on_dev0.len());
+    assert!(!fleet.device_alive(0));
+    for &t in &tenants {
+        let resp = h.submit(t, vec![6u8; 64]).unwrap();
+        assert_ne!(resp.device, 0, "nothing may still route to the dead device");
+    }
+    // Abrupt failure of device 1: tenants recover onto device 2.
+    if fleet.device_alive(1) {
+        fleet.fail_device(1).unwrap();
+        assert!(!fleet.device_alive(1));
+        for &t in &tenants {
+            let resp = h.submit(t, vec![7u8; 64]).unwrap();
+            assert_eq!(resp.device, 2, "all traffic lands on the last survivor");
+        }
+    }
+    assert!(fleet.migrations >= moved);
+    fleet.stop();
+}
+
+#[test]
+fn two_devices_halve_the_modeled_makespan() {
+    // The bench gates the full >=1.8x; this is the cheap regression: the
+    // same 240-request demand over 2 devices must finish in well under
+    // the 1-device makespan (modeled arrival clock = per-device demand
+    // makespan).
+    let designs = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
+    let makespan = |devices: usize| {
+        let mut fleet = fleet(devices, PlacePolicy::Spread);
+        let tenants: Vec<_> = (0..6)
+            .map(|i| fleet.admit_tenant(&format!("t{i}"), designs[i]).unwrap())
+            .collect();
+        let h = fleet.handle();
+        let payload: Arc<[u8]> = vec![3u8; 64].into();
+        for i in 0..240 {
+            h.submit(tenants[i % 6], Arc::clone(&payload)).unwrap();
+        }
+        let span = (0..devices).map(|d| fleet.clock_us(d).unwrap()).fold(0.0f64, f64::max);
+        fleet.stop();
+        span
+    };
+    let one = makespan(1);
+    let two = makespan(2);
+    assert!(
+        two < 0.65 * one,
+        "2-device fleet must parallelize the demand (makespan {two:.0}µs vs {one:.0}µs)"
+    );
+}
+
+#[test]
+fn remote_ingress_shows_up_in_client_latency() {
+    // A device behind the testbed Ethernet link: the front-end charges
+    // the transfer per request, and the fleet-level percentiles (what a
+    // client experiences) move while the device-side distribution does
+    // not include it.
+    let cfg = FleetConfig {
+        ingress: Ingress::with_links(vec![Link::testbed_ethernet()]),
+        ..FleetConfig::new(1)
+    };
+    let mut fleet = FleetScheduler::start(cfg).unwrap();
+    let tenant = fleet.admit_tenant("remote", "fir").unwrap();
+    let h = fleet.handle();
+    for _ in 0..4 {
+        let resp = h.submit(tenant, vec![1u8; 100 * 1024]).unwrap();
+        assert!(resp.ingress_us > 100.0, "remote link must charge transfer time");
+    }
+    let client_p50 = fleet.latency_percentile(50.0);
+    let metrics = fleet.stop();
+    assert!(
+        client_p50 > metrics.latency_percentile(50.0),
+        "client latency must include the ingress link ({client_p50} vs {})",
+        metrics.latency_percentile(50.0)
+    );
+}
+
+#[test]
+fn fleet_churn_replay_survives_device_and_tenant_churn() {
+    let cfg = FleetChurnConfig { seed: 0xFEE7, events: 350, devices: 3 };
+    let trace = churn::generate_fleet(&cfg);
+    let mut fleet = fleet(3, PlacePolicy::Spread);
+    let stats = replay_fleet(&mut fleet, &trace);
+    assert!(stats.admitted >= 3, "admitted {}", stats.admitted);
+    assert!(stats.served > 50, "served {}", stats.served);
+    let metrics = fleet.stop();
+    assert_eq!(metrics.requests, stats.served, "every Ok reply recorded exactly once");
+    assert!(metrics.latency_percentile(99.0) >= metrics.latency_percentile(50.0));
+}
