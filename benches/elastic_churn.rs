@@ -19,6 +19,12 @@
 //! The elastic run must beat the static baseline on both utilization and
 //! served requests — `--smoke` enforces the same checks at CI size and
 //! exits non-zero on failure.
+//!
+//! This bench deliberately drives the raw `EngineHandle` envelope rather
+//! than the session surface (`fpga_mt::api`): a churn trace interleaves
+//! lifecycle ops with requests whose targets the ops keep invalidating,
+//! and replaying it through epoch-pinned sessions would reopen a session
+//! per event — the handle is the documented trace-replay surface.
 
 use fpga_mt::bench_support::{check, finish, header, smoke_mode};
 use fpga_mt::coordinator::churn::{self, ChurnConfig, ChurnEvent};

@@ -5,39 +5,43 @@
 //! pipeline (see `benches/serving_throughput.rs` for the full A/B).
 
 use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::api::{SerialBackend, ServingBackend, Session, TenantRef};
 use fpga_mt::bench_support::{check, header};
 use fpga_mt::cloud::{IoConfig, Link, Scheme};
-use fpga_mt::coordinator::server::Engine;
-use fpga_mt::coordinator::{Response, ShardedEngine, System};
+use fpga_mt::coordinator::{ShardedEngine, System};
 use fpga_mt::runtime::SweepRunner;
 use fpga_mt::util::table::{fnum, Table};
 use std::sync::Arc;
 use std::time::Instant;
 
 /// Aggregate ingress Gb/s when every VI pushes `n_per_vi` payloads of
-/// `bytes` through one engine. The engines' handle types differ, so the
-/// caller supplies the per-VI handles and the call shim; the drive loop is
-/// shared so the serial/sharded comparison stays fair by construction.
-fn ingress_gbps<H: Send>(
-    handles: Vec<(H, u16, usize)>,
-    call: impl Fn(&H, u16, usize, Arc<[u8]>) -> anyhow::Result<Response> + Sync,
-    bytes: usize,
-    n_per_vi: usize,
-) -> f64 {
+/// `bytes` through one backend. Both backends hand over the same
+/// `(Session, region)` pairs, so the drive loop is shared and the
+/// serial/sharded comparison fair by construction.
+fn ingress_gbps(clients: Vec<(Session, usize)>, bytes: usize, n_per_vi: usize) -> f64 {
     let payload: Arc<[u8]> = vec![0xA5u8; bytes].into();
-    let n_clients = handles.len();
+    let n_clients = clients.len();
     let t0 = Instant::now();
-    SweepRunner::new(n_clients).run(handles, |(h, vi, vr)| {
+    SweepRunner::new(n_clients).run(clients, |(session, region)| {
         for _ in 0..n_per_vi {
-            call(&h, vi, vr, Arc::clone(&payload)).unwrap();
+            session.submit(region, Arc::clone(&payload)).unwrap();
         }
     });
     (bytes * n_per_vi * n_clients) as f64 * 8.0 / (t0.elapsed().as_secs_f64() * 1e9)
 }
 
-/// One (VI, VR) client pair per VI (FPU excluded: VI3 uses its AES VR).
-fn client_vrs() -> Vec<(u16, usize)> {
-    CASE_STUDY.iter().filter(|s| s.name != "fpu").map(|s| (s.vi, s.vr)).collect()
+/// One `(Session, region)` client per VI (FPU excluded: VI3 uses its AES
+/// VR), opened through the unified serving surface.
+fn clients<B: ServingBackend>(backend: &B) -> Vec<(Session, usize)> {
+    CASE_STUDY
+        .iter()
+        .filter(|s| s.name != "fpu")
+        .map(|s| {
+            let session = backend.session(TenantRef::Vi(s.vi)).expect("case-study VI");
+            let region = session.region_of_vr(s.vr).expect("case-study region");
+            (session, region)
+        })
+        .collect()
 }
 
 fn main() {
@@ -79,22 +83,12 @@ fn main() {
     let mut min_gain = f64::INFINITY;
     for kb in [64usize, 256] {
         let bytes = kb * 1024;
-        let engine = Engine::start(|| System::case_study("artifacts")).unwrap();
-        let serial = ingress_gbps(
-            client_vrs().into_iter().map(|(vi, vr)| (engine.handle(), vi, vr)).collect(),
-            |h, vi, vr, p| h.call(vi, vr, p),
-            bytes,
-            n_per_vi,
-        );
-        engine.stop();
+        let backend = SerialBackend::new(System::case_study("artifacts").unwrap());
+        let serial = ingress_gbps(clients(&backend), bytes, n_per_vi);
+        backend.shutdown();
         let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
-        let sharded = ingress_gbps(
-            client_vrs().into_iter().map(|(vi, vr)| (engine.handle(), vi, vr)).collect(),
-            |h, vi, vr, p| h.call(vi, vr, p),
-            bytes,
-            n_per_vi,
-        );
-        engine.stop();
+        let sharded = ingress_gbps(clients(&engine), bytes, n_per_vi);
+        engine.shutdown();
         min_gain = min_gain.min(sharded / serial);
         t.row(vec![kb.to_string(), fnum(serial), fnum(sharded), fnum(sharded / serial)]);
     }

@@ -22,7 +22,7 @@
 //!    including the fleet-wide p50/p95/p99 latency percentiles.
 
 use fpga_mt::bench_support::{check, finish, header, smoke_mode};
-use fpga_mt::fleet::{FleetConfig, FleetScheduler, PlacePolicy, TenantId};
+use fpga_mt::fleet::{FleetCluster, FleetConfig, PlacePolicy, TenantId};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -42,7 +42,7 @@ struct ScalingRun {
 /// across `devices` devices; modeled throughput = served / makespan of
 /// the slowest device's arrival clock.
 fn scaling_run(devices: usize, requests: usize) -> ScalingRun {
-    let mut fleet = FleetScheduler::start(FleetConfig {
+    let fleet = FleetCluster::start(FleetConfig {
         policy: PlacePolicy::Spread,
         ..FleetConfig::new(devices)
     })
@@ -50,12 +50,11 @@ fn scaling_run(devices: usize, requests: usize) -> ScalingRun {
     let tenants: Vec<TenantId> = (0..6)
         .map(|i| fleet.admit_tenant(&format!("tenant-{i}"), DESIGNS[i]).expect("admits"))
         .collect();
-    let handle = fleet.handle();
     let payload: Arc<[u8]> = vec![7u8; 64].into();
     let t0 = Instant::now();
     let mut served = 0u64;
     for i in 0..requests {
-        if handle.submit(tenants[i % tenants.len()], Arc::clone(&payload)).is_ok() {
+        if fleet.submit(tenants[i % tenants.len()], Arc::clone(&payload)).is_ok() {
             served += 1;
         }
     }
@@ -70,7 +69,7 @@ fn scaling_run(devices: usize, requests: usize) -> ScalingRun {
         fleet.latency_percentile(95.0),
         fleet.latency_percentile(99.0),
     );
-    fleet.stop();
+    fleet.stop().expect("first stop");
     ScalingRun { served, makespan_us, wall_rps: served as f64 / wall.max(1e-9), p50, p95, p99 }
 }
 
@@ -86,7 +85,7 @@ struct MigrationRun {
 /// Hammer one tenant from `clients` threads while it migrates device
 /// 0 → 1 and back; return the conservation ledger.
 fn migration_run(clients: usize, rounds: usize) -> MigrationRun {
-    let mut fleet = FleetScheduler::start(FleetConfig {
+    let fleet = FleetCluster::start(FleetConfig {
         policy: PlacePolicy::BinPack,
         ..FleetConfig::new(2)
     })
@@ -110,6 +109,8 @@ fn migration_run(clients: usize, rounds: usize) -> MigrationRun {
             (ok, err)
         }));
     }
+    // Admin over &self while the clients keep serving — the shared
+    // front-end needs no exclusive scheduler ownership for a migration.
     for round in 0..rounds {
         std::thread::sleep(std::time::Duration::from_millis(15));
         let (from, to) = if round % 2 == 0 { (0, 1) } else { (1, 0) };
@@ -126,8 +127,7 @@ fn migration_run(clients: usize, rounds: usize) -> MigrationRun {
     // One final request: it must execute on the last migration's target
     // at that replica's epoch.
     let replicas = fleet.replicas(tenant);
-    let h = fleet.handle();
-    let post = h.submit(tenant, vec![9u8; 64]).expect("post-migration request");
+    let post = fleet.submit(tenant, vec![9u8; 64]).expect("post-migration request");
     let post_device = post.device;
     // Compare the ENGINE-side epoch (stamped by the serving shard from
     // its validated admission ticket) against the route table's view —
@@ -135,8 +135,8 @@ fn migration_run(clients: usize, rounds: usize) -> MigrationRun {
     let post_epoch_ok = replicas.len() == 1
         && post.device == replicas[0].device
         && post.response.epoch == replicas[0].epoch;
-    let migrations = fleet.migrations;
-    let metrics = fleet.stop();
+    let migrations = fleet.migrations().expect("live fleet");
+    let metrics = fleet.stop().expect("first stop");
     MigrationRun {
         ok_total,
         err_total,

@@ -1,36 +1,43 @@
-//! Serving-engine A/B: the serial single-executor engine vs the sharded
-//! per-VR pipeline (the paper's space-sharing claim, measured in software).
+//! Serving-surface A/B: the serial reference backend vs the sharded
+//! per-VR pipeline, and the pipelined batch path vs per-call submission
+//! — all driven through the one `ServingBackend`/`Session` API.
 //!
-//! Three sections:
-//! 1. **Equivalence** — replays one deterministic trace through both
-//!    engines and checks byte-identical responses, identical modeled
-//!    timings, and identical merged metrics totals.
+//! Four sections:
+//! 1. **Equivalence** — replays one deterministic trace through sessions
+//!    on the serial backend and the sharded engine and checks
+//!    byte-identical responses (outputs, modeled timings, epochs) and
+//!    identical merged metrics totals.
 //! 2. **Throughput** — all 5 VIs drive their VRs concurrently (one
-//!    closed-loop client thread per VI, fanned out with
-//!    `runtime::SweepRunner`) for a fixed time window against each engine;
-//!    reports aggregate requests/sec and the sharded-over-serial speedup.
-//!    This is the paper's utilization story: on the serial engine a fast
-//!    tenant queues behind every slow tenant's compute; on the sharded
-//!    engine each VR serves at its own pace. On a multi-core host the
-//!    sharded engine must reach >= 2x.
-//! 3. **Persistence** — writes the numbers to `BENCH_serving.json` so the
-//!    perf trajectory has data across PRs.
+//!    closed-loop session per VI, fanned out with `runtime::SweepRunner`)
+//!    for a fixed time window against each backend; reports aggregate
+//!    requests/sec and the sharded-over-serial speedup. On a multi-core
+//!    host the sharded engine must reach >= 2x.
+//! 3. **Batch pipeline** — one tenant holding all six regions submits the
+//!    same round-robin demand per-call (one round trip each) and via
+//!    `Session::submit_batch` (whole arrival slices, one dispatcher
+//!    wakeup each; the shards pipeline the compute). The batch path must
+//!    beat per-call on closed-loop throughput — the win the new API's
+//!    batched submission exists for.
+//! 4. **Persistence** — writes the numbers to `BENCH_serving.json` so the
+//!    perf trajectory has data across PRs (including the `batches`
+//!    counter the CI smoke gate asserts is non-zero).
 //!
 //! `cargo bench --bench serving_throughput [-- --smoke]`: smoke mode runs
-//! CI-sized iteration counts and skips the speedup gate (CI runners may be
-//! 2-core), but still enforces every equivalence check.
+//! CI-sized iteration counts and skips the host-dependent speedup gates
+//! (CI runners may be 2-core), but still enforces every equivalence
+//! check and that the batch path was exercised.
 
 use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::api::{BatchItem, SerialBackend, ServingBackend, Session, TenancyBuilder, TenantRef};
 use fpga_mt::bench_support::{check, finish, header, smoke_mode};
-use fpga_mt::coordinator::server::Engine;
-use fpga_mt::coordinator::{Response, ShardedEngine, System};
+use fpga_mt::coordinator::{ShardedEngine, System};
 use fpga_mt::runtime::SweepRunner;
 use fpga_mt::util::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Deterministic replay trace across all six shards (no rejections, so
-/// every response can be compared field by field).
+/// every response can be compared field by field): `(vi, vr, payload)`.
 fn replay_trace(n: usize, seed: u64) -> Vec<(u16, usize, Arc<[u8]>)> {
     let mut rng = Rng::new(seed);
     let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
@@ -44,29 +51,50 @@ fn replay_trace(n: usize, seed: u64) -> Vec<(u16, usize, Arc<[u8]>)> {
         .collect()
 }
 
+/// One session per case-study VI, plus a `vr -> (session index, region)`
+/// resolver for trace replay through the session surface.
+fn case_study_sessions<B: ServingBackend>(backend: &B) -> Vec<Session> {
+    (1..=5u16).map(|vi| backend.session(TenantRef::Vi(vi)).expect("case-study VI")).collect()
+}
+
+fn replay_via_sessions<B: ServingBackend>(
+    backend: &B,
+    trace: &[(u16, usize, Arc<[u8]>)],
+) -> Vec<fpga_mt::coordinator::Response> {
+    let sessions = case_study_sessions(backend);
+    trace
+        .iter()
+        .map(|(vi, vr, p)| {
+            let session = &sessions[(*vi - 1) as usize];
+            let region = session.region_of_vr(*vr).expect("case-study region");
+            session.submit(region, Arc::clone(p)).expect("trace request serves")
+        })
+        .collect()
+}
+
 fn equivalence_section(trace_len: usize) -> bool {
     let t = replay_trace(trace_len, 0x5EED);
 
-    let serial = Engine::start(|| System::case_study("artifacts")).unwrap();
-    let sh = serial.handle();
-    let serial_resps: Vec<_> =
-        t.iter().map(|(vi, vr, p)| sh.call(*vi, *vr, Arc::clone(p)).unwrap()).collect();
-    let sm = serial.stop();
+    let serial = SerialBackend::new(System::case_study("artifacts").unwrap());
+    let serial_resps = replay_via_sessions(&serial, &t);
+    let sm = serial.shutdown();
 
     let sharded = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
-    let h = sharded.handle();
-    let sharded_resps: Vec<_> =
-        t.iter().map(|(vi, vr, p)| h.call(*vi, *vr, Arc::clone(p)).unwrap()).collect();
-    let shm = sharded.stop();
+    let sharded_resps = replay_via_sessions(&sharded, &t);
+    let shm = sharded.shutdown();
 
     let responses_identical = serial_resps.iter().zip(&sharded_resps).all(|(a, b)| {
         a.path == b.path
+            && a.epoch == b.epoch
             && a.outputs.len() == b.outputs.len()
             && a.outputs.iter().zip(&b.outputs).all(|(x, y)| x.shape == y.shape && x.data == y.data)
             && a.timing.io_us == b.timing.io_us
             && a.timing.noc_cycles == b.timing.noc_cycles
     });
-    check("responses byte-identical (outputs, path, modeled timing)", responses_identical);
+    check(
+        "responses byte-identical (outputs, path, modeled timing, epoch)",
+        responses_identical,
+    );
     check("merged requests equal serial", sm.requests == shm.requests);
     check("merged rejected equal serial", sm.rejected == shm.rejected);
     check(
@@ -83,23 +111,18 @@ fn equivalence_section(trace_len: usize) -> bool {
         && sm.bytes_out == shm.bytes_out
 }
 
-/// Closed-loop clients (one handle per VI, fanned out on `SweepRunner`)
-/// hammer one engine for `secs`; returns total requests completed. The
-/// engines' handle types differ, so the caller supplies the handles and
-/// the call shim — the drive loop itself is shared, keeping the A/B fair
-/// by construction.
-fn drive_closed_loop<H: Send>(
-    handles: Vec<(H, u16, usize)>,
-    call: impl Fn(&H, u16, usize, Arc<[u8]>) -> anyhow::Result<Response> + Sync,
-    secs: f64,
-) -> u64 {
+/// Closed-loop clients (one session per VI, fanned out on `SweepRunner`)
+/// hammer one backend for `secs`; returns total requests completed. Both
+/// backends hand over the same `(Session, region)` pairs, so the drive
+/// loop is shared and the A/B fair by construction.
+fn drive_closed_loop(clients: Vec<(Session, usize)>, secs: f64) -> u64 {
     let payload: Arc<[u8]> = (0..=255u8).collect::<Vec<u8>>().into();
     let deadline = Instant::now() + Duration::from_secs_f64(secs);
-    SweepRunner::new(handles.len())
-        .run(handles, |(h, vi, vr)| {
+    SweepRunner::new(clients.len())
+        .run(clients, |(session, region)| {
             let mut n = 0u64;
             while Instant::now() < deadline {
-                call(&h, vi, vr, Arc::clone(&payload)).unwrap();
+                session.submit(region, Arc::clone(&payload)).unwrap();
                 n += 1;
             }
             n
@@ -108,45 +131,105 @@ fn drive_closed_loop<H: Send>(
         .sum()
 }
 
+/// `(Session, region)` closed-loop clients — one VR per VI; VI3 drives
+/// its FPU chain so streaming is in the mix.
+fn throughput_clients<B: ServingBackend>(backend: &B) -> Vec<(Session, usize)> {
+    CASE_STUDY
+        .iter()
+        .filter(|s| s.name != "aes")
+        .map(|s| {
+            let session = backend.session(TenantRef::Vi(s.vi)).expect("case-study VI");
+            let region = session.region_of_vr(s.vr).expect("case-study region");
+            (session, region)
+        })
+        .collect()
+}
+
+struct BatchRun {
+    percall_rps: f64,
+    batch_rps: f64,
+    batches: u64,
+}
+
+/// One tenant holding all six regions (deployed through the
+/// `TenancyBuilder` path): submit `total` round-robin requests per-call,
+/// then the same demand as `slice`-sized batch slices, on a fresh engine
+/// each so the comparison is clean.
+fn batch_section(total: usize, slice: usize) -> BatchRun {
+    let deploy = |engine: &ShardedEngine| {
+        let plan = TenancyBuilder::new("wide")
+            .region("huffman")
+            .region("fft")
+            .region("fpu")
+            .region("aes")
+            .region("canny")
+            .region("fir")
+            .plan()
+            .unwrap();
+        let tenant = engine.deploy(&plan).unwrap();
+        engine.advance_clock(60_000.0).unwrap();
+        engine.session(tenant).unwrap()
+    };
+    let payload: Arc<[u8]> = (0..=255u8).collect::<Vec<u8>>().into();
+
+    let engine = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+    let session = deploy(&engine);
+    let regions = session.targets().len();
+    let t0 = Instant::now();
+    for i in 0..total {
+        session.submit(i % regions, Arc::clone(&payload)).unwrap();
+    }
+    let percall_rps = total as f64 / t0.elapsed().as_secs_f64();
+    engine.shutdown();
+
+    let engine = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+    let session = deploy(&engine);
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < total {
+        let n = slice.min(total - done);
+        let batch: Vec<BatchItem> =
+            (0..n).map(|i| BatchItem::new((done + i) % regions, Arc::clone(&payload))).collect();
+        for result in session.submit_batch(&batch).unwrap() {
+            result.unwrap();
+        }
+        done += n;
+    }
+    let batch_rps = total as f64 / t0.elapsed().as_secs_f64();
+    let metrics = engine.shutdown();
+    check("batch run conserves every request", metrics.requests == total as u64);
+    BatchRun { percall_rps, batch_rps, batches: metrics.batches }
+}
+
 fn main() {
     let smoke = smoke_mode();
     header(
-        "Serving throughput — serial executor vs sharded per-VR pipeline",
-        "space-sharing: independent VRs serve independent tenants concurrently (6x utilization at single-tenant-comparable QoS)",
+        "Serving throughput — one surface: serial vs sharded, per-call vs batched",
+        "space-sharing: independent VRs serve independent tenants concurrently; the batched session path pipelines one tenant across its shards",
     );
     let (trace_len, window_secs) = if smoke { (36, 0.25) } else { (120, 1.5) };
 
-    // ---- 1. A/B equivalence on a replayed trace ----
+    // ---- 1. A/B equivalence on a replayed trace (session surface) ----
     let equivalent = equivalence_section(trace_len);
 
     // ---- 2. concurrent throughput, all 5 VIs at once ----
-    // One VR per VI; VI3 drives its FPU chain so streaming is in the mix.
-    let clients: Vec<(u16, usize)> =
-        CASE_STUDY.iter().filter(|s| s.name != "aes").map(|s| (s.vi, s.vr)).collect();
-
-    let serial = Engine::start(|| System::case_study("artifacts")).unwrap();
-    let serial_handles = || clients.iter().map(|&(vi, vr)| (serial.handle(), vi, vr)).collect();
-    drive_closed_loop(serial_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs * 0.2);
+    let serial = SerialBackend::new(System::case_study("artifacts").unwrap());
+    drive_closed_loop(throughput_clients(&serial), window_secs * 0.2);
     let t0 = Instant::now();
-    let serial_requests =
-        drive_closed_loop(serial_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs);
+    let serial_requests = drive_closed_loop(throughput_clients(&serial), window_secs);
     let serial_rps = serial_requests as f64 / t0.elapsed().as_secs_f64();
-    let serial_metrics = serial.stop();
+    let serial_metrics = serial.shutdown();
 
     let sharded = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
-    let sharded_handles =
-        || clients.iter().map(|&(vi, vr)| (sharded.handle(), vi, vr)).collect();
-    drive_closed_loop(sharded_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs * 0.2);
+    drive_closed_loop(throughput_clients(&sharded), window_secs * 0.2);
     let t0 = Instant::now();
-    let sharded_requests =
-        drive_closed_loop(sharded_handles(), |h, vi, vr, p| h.call(vi, vr, p), window_secs);
+    let sharded_requests = drive_closed_loop(throughput_clients(&sharded), window_secs);
     let sharded_rps = sharded_requests as f64 / t0.elapsed().as_secs_f64();
-    let sharded_metrics = sharded.stop();
+    let sharded_metrics = sharded.shutdown();
 
     let speedup = sharded_rps / serial_rps;
     println!(
-        "\nconcurrent serving, {} VIs closed-loop for {window_secs:.2}s per engine:\n  serial   {serial_rps:>10.0} req/s ({serial_requests} served)\n  sharded  {sharded_rps:>10.0} req/s ({sharded_requests} served)\n  speedup  {speedup:>10.2}x",
-        clients.len(),
+        "\nconcurrent serving, 5 VIs closed-loop for {window_secs:.2}s per backend:\n  serial   {serial_rps:>10.0} req/s ({serial_requests} served)\n  sharded  {sharded_rps:>10.0} req/s ({sharded_requests} served)\n  speedup  {speedup:>10.2}x",
     );
     // Tail latency of the sharded run (merged per-shard sketches; the
     // sketch is order-independent, so these match a serial recording of
@@ -158,7 +241,7 @@ fn main() {
     );
     println!("  sharded latency: p50 {p50:.0} µs, p95 {p95:.0} µs, p99 {p99:.0} µs");
     check("latency percentiles populated and ordered", p50 > 0.0 && p50 <= p95 && p95 <= p99);
-    // Engine metrics also contain the warmup requests, hence `>=`.
+    // Backend metrics also contain the warmup requests, hence `>=`.
     check(
         "no request lost or rejected under concurrent load",
         serial_metrics.requests >= serial_requests
@@ -172,11 +255,29 @@ fn main() {
         check("sharded engine >= 2x serial requests/sec on this host", speedup >= 2.0);
     }
 
-    // ---- 3. persist the perf point ----
+    // ---- 3. batched submission vs per-call, one wide tenant ----
+    let (batch_total, batch_slice) = if smoke { (120, 24) } else { (720, 24) };
+    let b = batch_section(batch_total, batch_slice);
+    let batch_speedup = b.batch_rps / b.percall_rps;
+    println!(
+        "\nbatched session path, one tenant x 6 regions, {batch_total} requests:\n  per-call {:>10.0} req/s\n  batched  {:>10.0} req/s (slices of {batch_slice})\n  speedup  {batch_speedup:>10.2}x",
+        b.percall_rps, b.batch_rps,
+    );
+    check("batch path exercised (batches counter > 0)", b.batches > 0);
+    if smoke {
+        println!("(smoke mode: batch>per-call gate skipped; CI runners may be 1-core)");
+    } else {
+        check(
+            "submit_batch beats per-call submit on closed-loop throughput",
+            batch_speedup > 1.0,
+        );
+    }
+
+    // ---- 4. persist the perf point ----
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let json = format!(
-        "{{\n  \"bench\": \"serving_throughput\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"vis\": {},\n  \"window_secs\": {window_secs},\n  \"serial_rps\": {serial_rps:.1},\n  \"sharded_rps\": {sharded_rps:.1},\n  \"speedup\": {speedup:.3},\n  \"p50_us\": {p50:.1},\n  \"p95_us\": {p95:.1},\n  \"p99_us\": {p99:.1},\n  \"equivalent\": {equivalent}\n}}\n",
-        clients.len(),
+        "{{\n  \"bench\": \"serving_throughput\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"vis\": 5,\n  \"window_secs\": {window_secs},\n  \"serial_rps\": {serial_rps:.1},\n  \"sharded_rps\": {sharded_rps:.1},\n  \"speedup\": {speedup:.3},\n  \"percall_rps\": {:.1},\n  \"batch_rps\": {:.1},\n  \"batch_speedup\": {batch_speedup:.3},\n  \"batches\": {},\n  \"p50_us\": {p50:.1},\n  \"p95_us\": {p95:.1},\n  \"p99_us\": {p99:.1},\n  \"equivalent\": {equivalent}\n}}\n",
+        b.percall_rps, b.batch_rps, b.batches,
     );
     // `cargo bench` runs with cwd = the package dir (rust/); anchor the
     // output at the workspace root, where README/DESIGN document it.

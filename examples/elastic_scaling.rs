@@ -2,50 +2,65 @@
 //! later needs encryption, requests an additional VR at run-time, and the
 //! FPU's results stream into AES over the on-chip direct link — with real
 //! compute at both ends and a comparison against the middleware-copy
-//! alternative the paper argues against.
+//! alternative the paper argues against. Serving goes through the
+//! unified session surface; the release shows the session going stale.
 //!
 //! Run: `cargo run --release --example elastic_scaling`
 
+use fpga_mt::api::{SerialBackend, ServingBackend, TenantRef};
 use fpga_mt::cloud::IoConfig;
 use fpga_mt::coordinator::System;
 use fpga_mt::estimate::link_bandwidth_gbps;
-use fpga_mt::hypervisor::Event;
+use fpga_mt::hypervisor::{Event, LifecycleOp};
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let mut sys = System::case_study(&dir)?;
+    let backend = SerialBackend::new(System::case_study(&dir)?);
 
     println!("hypervisor event log (deployment):");
-    for e in &sys.hv.events {
-        println!("  {e:?}");
-    }
+    backend.with_system(|sys| {
+        for e in &sys.hv.events {
+            println!("  {e:?}");
+        }
+    });
 
-    // VI3 drives its FPU; results stream on-chip into its AES region.
+    // VI3's session: its FPU region (streaming into AES) and its AES
+    // region, epochs pinned at open.
+    let session = backend.session(TenantRef::Vi(3))?;
+    let fpu = session.region_of_vr(2).expect("VI3's FPU region");
     let payload: Vec<u8> = (0..64).map(|i| (i * 5 + 3) as u8).collect();
-    let resp = sys.submit(3, 2, &payload)?;
+    let resp = session.submit(fpu, payload)?;
     println!("\nrequest path: {:?}", resp.path);
     println!("NoC streaming cycles: {}", resp.timing.noc_cycles);
 
     // On-chip vs middleware copy (the paper's 25.6 Gbps vs ~50 µs story).
     let stream_bytes = 4096 * 4; // FPU output tensor
-    let noc_us = resp.timing.noc_cycles as f64 / sys.io_cfg.noc_clock_mhz;
+    let noc_clock_mhz = backend.with_system(|sys| sys.io_cfg.noc_clock_mhz);
+    let noc_us = resp.timing.noc_cycles as f64 / noc_clock_mhz;
     let middleware_us = 2.0 * IoConfig::default().base_os_us; // copy out + copy in
     println!("\nFPU -> AES transfer of {stream_bytes} bytes:");
     println!("  on-chip NoC:        {noc_us:.2} µs ({} Gbps link)", link_bandwidth_gbps(32, 800.0));
     println!("  middleware copy:    ~{middleware_us:.0} µs (two host IO trips)");
     println!("  speedup:            {:.0}x", middleware_us / noc_us.max(1e-9));
 
-    // Elastic release: VI3 shrinks back, the VR returns to the pool.
-    let before = sys.hv.free_vrs();
-    sys.hv.release_vr(3, 3, &mut sys.core.noc)?;
-    println!("\nreleased VR4: free VRs {} -> {}", before, sys.hv.free_vrs());
-    for e in sys.hv.events.iter().rev().take(1) {
-        println!("  {e:?}");
-    }
-    assert!(sys
-        .hv
-        .events
-        .iter()
-        .any(|e| matches!(e, Event::VrReleased { vi: 3, .. })));
+    // Elastic release: VI3 shrinks back, the VR returns to the pool —
+    // and the session that pinned the old tenancy goes stale instead of
+    // silently serving a different shape.
+    let (before, after) = backend.with_system(|sys| {
+        let before = sys.hv.free_vrs();
+        sys.core.timing.advance_clock(20_000.0); // boot windows are closed anyway
+        sys.lifecycle(&LifecycleOp::Release { vi: 3, vr: 3 })?;
+        anyhow::Ok((before, sys.hv.free_vrs()))
+    })?;
+    println!("\nreleased VR4: free VRs {before} -> {after}");
+    let aes = session.region_of_vr(3).expect("the stale session still lists VR3");
+    let stale = session.submit(aes, vec![1u8; 16]).unwrap_err();
+    println!("stale session refused as expected: {stale}");
+    backend.with_system(|sys| {
+        for e in sys.hv.events.iter().rev().take(1) {
+            println!("  {e:?}");
+        }
+        assert!(sys.hv.events.iter().any(|e| matches!(e, Event::VrReleased { vi: 3, .. })));
+    });
     Ok(())
 }

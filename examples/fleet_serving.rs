@@ -1,23 +1,27 @@
 //! Fleet walkthrough: one scheduler over two FPGAs — placement, the
-//! cluster front-end, replica growth, and a live cross-device migration.
+//! shared cluster front-end, replica growth, and a live cross-device
+//! migration, all over `&self` (admin never needs exclusive ownership of
+//! the scheduler while serving runs).
 //!
 //! ```sh
 //! cargo run --release --example fleet_serving
 //! ```
 
-use fpga_mt::fleet::{FleetConfig, FleetScheduler, PlacePolicy};
+use fpga_mt::api::{ServingBackend, TenancyBuilder};
+use fpga_mt::fleet::{FleetCluster, FleetConfig, PlacePolicy};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     // Two independent devices (each its own floorplan, hypervisor, NoC,
-    // and sharded engine) behind one scheduler, spread placement.
-    let mut fleet = FleetScheduler::start(FleetConfig {
+    // and sharded engine) behind one shared front-end, spread placement.
+    let fleet = FleetCluster::start(FleetConfig {
         policy: PlacePolicy::Spread,
         ..FleetConfig::new(2)
     })?;
-    println!("booted a 2-device fleet ({} free VRs per device)\n", fleet.free_vrs(0));
+    println!("booted a 2-device fleet ({} free VRs per device)\n", fleet.free_vrs(0)?);
 
-    // Tenants arrive fleet-wide; placement spreads them.
+    // Tenants arrive fleet-wide; placement spreads them. (`admit_tenant`
+    // is the single-region shorthand for deploying a TenancyBuilder plan.)
     let video = fleet.admit_tenant("video-pipeline", "canny")?;
     let crypto = fleet.admit_tenant("crypto-batch", "aes")?;
     for (name, t) in [("video", video), ("crypto", crypto)] {
@@ -27,9 +31,8 @@ fn main() -> anyhow::Result<()> {
     fleet.advance_clocks(10_000.0)?; // deployment windows elapse
 
     // The front-end maps (tenant, request) -> device.
-    let handle = fleet.handle();
     let payload: Arc<[u8]> = (0..=255u8).collect::<Vec<u8>>().into();
-    let resp = handle.submit(video, Arc::clone(&payload))?;
+    let resp = fleet.submit(video, Arc::clone(&payload))?;
     println!(
         "\nvideo request: device {} ran {:?} in {:.0} µs (ingress {:.1} µs)",
         resp.device,
@@ -38,14 +41,29 @@ fn main() -> anyhow::Result<()> {
         resp.ingress_us
     );
 
+    // The unified session surface works here too: a tenant-scoped
+    // session pins the replica epochs and submits region-addressed.
+    let session = fleet.session(fpga_mt::api::TenantRef::Tenant(video))?;
+    let direct = session.submit(0, Arc::clone(&payload))?;
+    println!("session request: path {:?} at epoch {}", direct.path, direct.epoch);
+
     // Demand grows: a second replica lands on the other device and the
     // router balances across both.
     let replica = fleet.grow_tenant(video)?;
     println!("\nvideo grew a replica on device {}", replica.device);
     let devices: Vec<usize> = (0..4)
-        .map(|_| handle.submit(video, Arc::clone(&payload)).map(|r| r.device))
+        .map(|_| fleet.submit(video, Arc::clone(&payload)).map(|r| r.device))
         .collect::<anyhow::Result<_>>()?;
     println!("4 balanced requests landed on devices {devices:?}");
+
+    // A multi-region streaming tenancy deploys through the same plan
+    // machinery migration replays (allocate → program → wire, rollback
+    // on failure).
+    let chain = TenancyBuilder::new("fpu-chain").region("fpu").region("aes").stream(0, 1).plan()?;
+    let chained = fleet.deploy_tenancy("fpu-chain", chain.migration())?;
+    fleet.advance_clocks(20_000.0)?;
+    let resp = fleet.submit(chained, Arc::clone(&payload))?;
+    println!("\nstreaming tenancy: path {:?} on device {}", resp.response.path, resp.device);
 
     // Live cross-device migration: crypto moves while serving.
     let from = fleet.replicas(crypto)[0].device;
@@ -55,11 +73,11 @@ fn main() -> anyhow::Result<()> {
         "\nmigrated crypto {} -> {} ({} region); new epoch {}",
         report.from, report.to, report.regions, report.replicas[0].epoch
     );
-    let resp = handle.submit(crypto, Arc::clone(&payload))?;
+    let resp = fleet.submit(crypto, Arc::clone(&payload))?;
     println!("post-migration request served by device {} at epoch {}", resp.device, resp.epoch);
 
-    let migrations = fleet.migrations;
-    let metrics = fleet.stop();
+    let migrations = fleet.migrations()?;
+    let metrics = fleet.stop()?;
     println!(
         "\nfleet totals: {} requests, p50 {:.0} µs, p99 {:.0} µs, {migrations} migration(s)",
         metrics.requests,

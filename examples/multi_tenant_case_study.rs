@@ -6,6 +6,7 @@
 //! Run: `cargo run --release --example multi_tenant_case_study`
 
 use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::api::{ServingBackend, TenantRef};
 use fpga_mt::cloud::{fig14_io_trips, IoConfig, Link, Scheme};
 use fpga_mt::coordinator::{ShardedEngine, System};
 use fpga_mt::device::Device;
@@ -30,13 +31,16 @@ fn main() -> anyhow::Result<()> {
     // ---- concurrent multi-tenant serving (real compute) ----
     // Space-shared: the sharded engine runs every VR's compute on its own
     // worker; requests to disjoint VRs never queue behind each other.
+    // Every client goes through the unified session surface: a session
+    // per tenant, pinned to the tenancy's lifecycle epochs at open.
     let dir2 = dir.clone();
     let engine = ShardedEngine::start(move || System::case_study(&dir2))?;
     let mut joins = Vec::new();
     let rounds = 12;
     for spec in CASE_STUDY.iter() {
-        let h = engine.handle();
-        let (vi, vr, name) = (spec.vi, spec.vr, spec.name);
+        let session = engine.session(TenantRef::Vi(spec.vi))?;
+        let region = session.region_of_vr(spec.vr).expect("case-study region");
+        let name = spec.name;
         joins.push(std::thread::spawn(move || {
             let payload: std::sync::Arc<[u8]> =
                 (0..256u32).map(|i| (i * 31 % 256) as u8).collect::<Vec<u8>>().into();
@@ -44,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             let mut io_us = 0.0;
             let t0 = std::time::Instant::now();
             for _ in 0..rounds {
-                let resp = h.call(vi, vr, payload.clone()).expect(name);
+                let resp = session.submit(region, payload.clone()).expect(name);
                 compute_us += resp.timing.compute_us;
                 io_us += resp.timing.io_us;
             }
@@ -61,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             fnum(wall.as_secs_f64() * 1e3),
         ]);
     }
-    let metrics = engine.stop();
+    let metrics = engine.shutdown();
     t.print();
     println!(
         "\nengine: {} requests, mean total {:.1} µs (model), ingress {:.2} Gb/s (model)\n",

@@ -1,0 +1,331 @@
+//! [`ServingBackend`] implementations for the three request paths:
+//! the serial reference system, the sharded per-VR engine, and the
+//! multi-FPGA fleet front-end.
+
+use super::plan::{replay_plan, PlanTarget, TenancyPlan};
+use super::{ServingBackend, Session, SessionInner, Target, TenantRef};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::EngineHandle;
+use crate::coordinator::{RegionInfo, ShardedEngine, System};
+use crate::fleet::FleetCluster;
+use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
+use crate::noc::Topology;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// Turn an engine-side tenancy snapshot into session targets (engine
+/// backends are single-device, so every target is device 0).
+fn engine_targets(regions: &[RegionInfo], vi: u16) -> Vec<Target> {
+    regions
+        .iter()
+        .map(|r| Target { device: 0, vi, vr: r.vr, epoch: r.epoch })
+        .collect()
+}
+
+/// The serial reference [`System`] behind the unified serving surface:
+/// one mutex serializes every submission (the serial engine's semantics,
+/// lock-shaped), which is exactly the baseline the sharded backend's
+/// speedup is measured against. Sessions share the system, so the
+/// backend can be driven from multiple client threads; after
+/// [`ServingBackend::shutdown`] the system is gone and outstanding
+/// sessions error ("engine stopped") exactly like the other backends'.
+pub struct SerialBackend {
+    sys: super::SharedSystem,
+}
+
+impl SerialBackend {
+    /// Wrap a built [`System`] (empty or case-study) as a backend.
+    pub fn new(sys: System) -> SerialBackend {
+        SerialBackend { sys: Arc::new(Mutex::new(Some(sys))) }
+    }
+
+    /// Run `f` with exclusive access to the underlying system — the
+    /// escape hatch for control-plane work the trait does not cover
+    /// (direct lifecycle ops, hypervisor introspection).
+    ///
+    /// # Panics
+    /// Panics if the backend was already shut down (the system is gone).
+    pub fn with_system<R>(&self, f: impl FnOnce(&mut System) -> R) -> R {
+        f(self
+            .sys
+            .lock()
+            .expect("serial system poisoned")
+            .as_mut()
+            .expect("serial backend already shut down"))
+    }
+}
+
+/// [`PlanTarget`] over a directly-owned serial system.
+struct SystemTarget<'a> {
+    sys: &'a mut System,
+}
+
+impl PlanTarget for SystemTarget<'_> {
+    fn apply(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        self.sys.lifecycle(op)
+    }
+
+    fn advance_clock(&mut self, dur_us: f64) -> Result<()> {
+        self.sys.core.timing.advance_clock(dur_us);
+        Ok(())
+    }
+
+    fn adjacent(&self, a: usize, b: usize) -> bool {
+        self.sys.hv.topo.vrs_adjacent(a, b)
+    }
+}
+
+impl ServingBackend for SerialBackend {
+    fn label(&self) -> &'static str {
+        "serial"
+    }
+
+    fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef> {
+        let mut guard = self.sys.lock().expect("serial system poisoned");
+        let sys = guard.as_mut().ok_or_else(|| anyhow::anyhow!("engine stopped"))?;
+        let (vi, _) =
+            replay_plan(&mut SystemTarget { sys }, plan.migration(), plan.name(), None)?;
+        Ok(TenantRef::Vi(vi))
+    }
+
+    fn session(&self, tenant: TenantRef) -> Result<Session> {
+        let TenantRef::Vi(vi) = tenant else {
+            bail!("the serial backend addresses tenants by VI id, not fleet tenant id");
+        };
+        let mut guard = self.sys.lock().expect("serial system poisoned");
+        let sys = guard.as_mut().ok_or_else(|| anyhow::anyhow!("engine stopped"))?;
+        let regions = crate::coordinator::tenant_regions(&sys.hv, vi);
+        if regions.is_empty() {
+            bail!("VI {vi} has no programmed regions (unknown VI or nothing deployed)");
+        }
+        Ok(Session::new(
+            tenant,
+            engine_targets(&regions, vi),
+            SessionInner::Serial(Arc::clone(&self.sys)),
+        ))
+    }
+
+    fn advance_clock(&self, dur_us: f64) -> Result<()> {
+        let mut guard = self.sys.lock().expect("serial system poisoned");
+        let sys = guard.as_mut().ok_or_else(|| anyhow::anyhow!("engine stopped"))?;
+        sys.core.timing.advance_clock(dur_us);
+        Ok(())
+    }
+
+    fn shutdown(self) -> Metrics {
+        // Take the system out: outstanding sessions now error ("engine
+        // stopped") exactly like calls onto a stopped engine or fleet.
+        self.sys
+            .lock()
+            .expect("serial system poisoned")
+            .take()
+            .map(|sys| sys.metrics)
+            .unwrap_or_default()
+    }
+}
+
+/// [`PlanTarget`] over an engine's message stream: ops apply at their
+/// arrival position, adjacency reads the engine's static topology.
+pub(crate) struct HandleTarget<'a> {
+    pub(crate) handle: &'a EngineHandle,
+    pub(crate) topo: &'a Topology,
+}
+
+impl PlanTarget for HandleTarget<'_> {
+    fn apply(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        self.handle.lifecycle(op.clone())
+    }
+
+    fn advance_clock(&mut self, dur_us: f64) -> Result<()> {
+        self.handle.advance_clock(dur_us)
+    }
+
+    fn adjacent(&self, a: usize, b: usize) -> bool {
+        self.topo.vrs_adjacent(a, b)
+    }
+}
+
+impl ServingBackend for ShardedEngine {
+    fn label(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef> {
+        let handle = self.handle();
+        let mut target = HandleTarget { handle: &handle, topo: self.topology() };
+        let (vi, _) = replay_plan(&mut target, plan.migration(), plan.name(), None)?;
+        Ok(TenantRef::Vi(vi))
+    }
+
+    fn session(&self, tenant: TenantRef) -> Result<Session> {
+        let TenantRef::Vi(vi) = tenant else {
+            bail!("the sharded backend addresses tenants by VI id, not fleet tenant id");
+        };
+        let regions = self.handle().describe(vi)?;
+        if regions.is_empty() {
+            bail!("VI {vi} has no programmed regions (unknown VI or nothing deployed)");
+        }
+        Ok(Session::new(
+            tenant,
+            engine_targets(&regions, vi),
+            SessionInner::Engine(self.handle()),
+        ))
+    }
+
+    fn advance_clock(&self, dur_us: f64) -> Result<()> {
+        self.handle().advance_clock(dur_us)
+    }
+
+    fn shutdown(self) -> Metrics {
+        ShardedEngine::stop(self)
+    }
+}
+
+impl ServingBackend for FleetCluster {
+    fn label(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef> {
+        Ok(TenantRef::Tenant(self.deploy_tenancy(plan.name(), plan.migration())?))
+    }
+
+    fn session(&self, tenant: TenantRef) -> Result<Session> {
+        let TenantRef::Tenant(id) = tenant else {
+            bail!("the fleet backend addresses tenants by fleet-wide tenant id, not VI");
+        };
+        let replicas = self.replicas(id);
+        if replicas.is_empty() {
+            bail!("tenant {id} has no live replica (unknown, retired, or displaced)");
+        }
+        let targets = replicas
+            .iter()
+            .map(|r| Target { device: r.device, vi: r.vi, vr: r.vr, epoch: r.epoch })
+            .collect();
+        Ok(Session::new(tenant, targets, SessionInner::Fleet(self.device_handles())))
+    }
+
+    fn advance_clock(&self, dur_us: f64) -> Result<()> {
+        self.advance_clocks(dur_us)
+    }
+
+    fn shutdown(self) -> Metrics {
+        self.stop().unwrap_or_else(|_| {
+            // Another clone already stopped the scheduler; its metrics
+            // went with it, so this clone has nothing further to add.
+            Metrics::default()
+        })
+    }
+}
+
+// Compile-time guarantee that the trait stays object-safe (callers hold
+// heterogeneous backends behind `&dyn ServingBackend`).
+#[allow(dead_code)]
+fn _assert_backend_object_safe(backend: &dyn ServingBackend) -> &'static str {
+    backend.label()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::TenancyBuilder;
+
+    #[test]
+    fn serial_backend_sessions_serve_and_pin_epochs() {
+        let backend = SerialBackend::new(System::empty("artifacts").unwrap());
+        let plan = TenancyBuilder::new("t").region("fir").plan().unwrap();
+        let tenant = backend.deploy(&plan).unwrap();
+        backend.advance_clock(20_000.0).unwrap();
+        let session = backend.session(tenant).unwrap();
+        assert_eq!(session.targets().len(), 1);
+        let resp = session.submit(0, vec![1u8; 64]).unwrap();
+        assert_eq!(resp.path, vec!["fir".to_string()]);
+        assert_eq!(resp.epoch, session.targets()[0].epoch, "response carries the pinned epoch");
+        assert!(session.submit(1, vec![0u8; 8]).is_err(), "unknown region index");
+        let metrics = backend.shutdown();
+        assert_eq!(metrics.requests, 1);
+    }
+
+    #[test]
+    fn stale_sessions_are_refused_after_the_region_moves() {
+        let backend = SerialBackend::new(System::empty("artifacts").unwrap());
+        let plan = TenancyBuilder::new("t").region("fir").plan().unwrap();
+        let TenantRef::Vi(vi) = backend.deploy(&plan).unwrap() else { unreachable!() };
+        backend.advance_clock(20_000.0).unwrap();
+        let session = backend.session(TenantRef::Vi(vi)).unwrap();
+        let vr = session.targets()[0].vr;
+        assert!(session.submit(0, vec![2u8; 32]).is_ok());
+        // The tenant reprograms its region: the epoch moves, the old
+        // session goes stale, a fresh session serves again.
+        backend.with_system(|sys| {
+            sys.lifecycle(&LifecycleOp::Program {
+                vi,
+                vr,
+                design: "fft".into(),
+                dest: None,
+            })
+            .unwrap();
+            sys.core.timing.advance_clock(20_000.0);
+        });
+        let err = session.submit(0, vec![2u8; 32]).unwrap_err();
+        assert!(err.to_string().contains("stale session"), "got: {err}");
+        let fresh = backend.session(TenantRef::Vi(vi)).unwrap();
+        assert_eq!(fresh.submit(0, vec![2u8; 64]).unwrap().path, vec!["fft".to_string()]);
+        let metrics = backend.shutdown();
+        assert_eq!(metrics.rejected, 1, "the stale submission counts as a rejection");
+        assert_eq!(metrics.requests, 2);
+    }
+
+    #[test]
+    fn failed_deploy_rolls_back_to_a_clean_pool() {
+        let backend = SerialBackend::new(System::empty("artifacts").unwrap());
+        // 7 regions on a 6-VR floorplan: allocation fails partway.
+        let mut builder = TenancyBuilder::new("greedy");
+        for _ in 0..7 {
+            builder = builder.region("fir");
+        }
+        let plan = builder.plan().unwrap();
+        assert!(backend.deploy(&plan).is_err());
+        backend.with_system(|sys| {
+            assert_eq!(sys.hv.free_vrs(), 6, "rollback must return every region");
+            assert!(sys.hv.vis.is_empty(), "rollback must destroy the created VI");
+        });
+    }
+
+    #[test]
+    fn sharded_backend_batches_and_pipelines() {
+        use crate::api::BatchItem;
+        let engine = ShardedEngine::start(|| System::empty("artifacts")).unwrap();
+        let plan = TenancyBuilder::new("pair")
+            .region("fpu")
+            .region("aes")
+            .stream(0, 1)
+            .plan()
+            .unwrap();
+        let tenant = engine.deploy(&plan).unwrap();
+        engine.advance_clock(40_000.0).unwrap();
+        let session = engine.session(tenant).unwrap();
+        assert_eq!(session.targets().len(), 2);
+        // Async pipelining: both pendings complete with the right paths.
+        let mut a = session.submit_async(0, vec![5u8; 64]).unwrap();
+        let b = session.submit_async(1, vec![6u8; 32]).unwrap();
+        while !a.poll() {
+            std::thread::yield_now();
+        }
+        let ra = a.wait().unwrap();
+        assert_eq!(ra.path, vec!["fpu".to_string(), "aes".to_string()]);
+        assert_eq!(b.wait().unwrap().path, vec!["aes".to_string()]);
+        // Batch: one message, results in slice order.
+        let batch: Vec<BatchItem> = (0..6).map(|i| BatchItem::new(i % 2, vec![7u8; 48])).collect();
+        let results = session.submit_batch(&batch).unwrap();
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            let resp = r.as_ref().unwrap();
+            let expect: &[&str] = if i % 2 == 0 { &["fpu", "aes"] } else { &["aes"] };
+            assert_eq!(resp.path, expect, "batch item {i}");
+        }
+        let metrics = engine.shutdown();
+        assert_eq!(metrics.requests, 8);
+        assert_eq!(metrics.batches, 1, "one arrival slice, one batch");
+    }
+}

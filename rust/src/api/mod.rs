@@ -1,0 +1,362 @@
+//! One serving surface: tenant-scoped sessions over a backend trait the
+//! serial system, the sharded engine, and the fleet all implement.
+//!
+//! The paper's claim is that space-shared tenants get single-tenant-like
+//! service; this module is that claim reflected in the client API. A
+//! caller never picks an engine-specific entry point — it deploys a
+//! validated [`TenancyPlan`], opens a [`Session`] scoped to that tenant,
+//! and submits work, identically whether the platform underneath is the
+//! serial reference system, the per-VR sharded pipeline, or a multi-FPGA
+//! fleet:
+//!
+//! ```text
+//!     TenancyBuilder ── plan() ──► TenancyPlan (validated, replayable)
+//!                                       │ ServingBackend::deploy
+//!                                       ▼ (allocate→program→wire as one
+//!                                          rollback-protected sequence)
+//!     ServingBackend::session(tenant) ──► Session {tenant, [(vr, epoch)]}
+//!        │ submit (sync)   │ submit_async → Pending::{poll, wait}
+//!        │ submit_batch ───┴─► whole arrival slice, one dispatcher wakeup
+//!        ▼
+//!     SerialBackend | ShardedEngine | FleetCluster   (same Response)
+//! ```
+//!
+//! A session captures the tenant identity **and the lifecycle epoch of
+//! every serving region** at open time. Every submission carries its
+//! pinned epoch, and the engines refuse a mismatch before any admission
+//! draw — so "stale handle keeps hitting whatever now occupies the
+//! region" is unrepresentable at call sites rather than merely
+//! discouraged. When the control plane moves a region (release, regrow,
+//! migration), existing sessions fail fast with a "stale session" error
+//! and the caller reopens against the current tenancy.
+//!
+//! The three backends are held equivalent by
+//! `rust/tests/backend_conformance.rs`: one seeded trace replayed
+//! through each must produce byte-identical [`Response`]s (outputs,
+//! modeled timings, epochs) and equal merged [`Metrics`].
+
+#![deny(missing_docs)]
+
+mod backends;
+mod plan;
+
+pub use backends::SerialBackend;
+pub use plan::{TenancyBuilder, TenancyPlan, DEPLOY_SETTLE_US};
+pub(crate) use plan::{replay_plan, PlanTarget};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{EngineHandle, ReplyReceiver};
+use crate::coordinator::{Response, System};
+use crate::fleet::TenantId;
+use anyhow::{anyhow, Result};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Backend-independent reference to a tenant.
+///
+/// Engine-level backends (serial, sharded) address tenants by their
+/// device-local VI id; the fleet addresses them by fleet-wide
+/// [`TenantId`] (VI numbering is per-device state that migration moves
+/// underneath the tenant). [`ServingBackend::deploy`] returns the right
+/// variant for the backend it ran on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantRef {
+    /// A device-local virtual-instance id (serial + sharded backends).
+    Vi(u16),
+    /// A fleet-wide tenant id (fleet backend).
+    Tenant(TenantId),
+}
+
+/// One serving region a session may target: its location and the
+/// lifecycle epoch the session pinned at open time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Target {
+    /// Device index (always 0 on single-device backends).
+    pub device: usize,
+    /// VI id of the tenant on that device.
+    pub vi: u16,
+    /// VR index of the region.
+    pub vr: usize,
+    /// Lifecycle epoch pinned at session open; submissions are refused
+    /// once the region moves past it.
+    pub epoch: u64,
+}
+
+/// One item of a [`Session::submit_batch`] arrival slice.
+#[derive(Debug, Clone)]
+pub struct BatchItem {
+    /// Index into the session's targets (region position in deployment
+    /// order — see [`Session::targets`]).
+    pub region: usize,
+    /// Request payload, shared zero-copy with the engine.
+    pub payload: Arc<[u8]>,
+}
+
+impl BatchItem {
+    /// Build one batch item for the session region at `region`.
+    pub fn new(region: usize, payload: impl Into<Arc<[u8]>>) -> BatchItem {
+        BatchItem { region, payload: payload.into() }
+    }
+}
+
+/// The one request path every serving shape implements: deploy a
+/// validated tenancy, open tenant-scoped sessions, advance the modeled
+/// clock, shut down for the merged metrics. Implemented by
+/// [`SerialBackend`] (the serial reference [`System`]),
+/// [`crate::coordinator::ShardedEngine`] (the per-VR parallel pipeline),
+/// and [`crate::fleet::FleetCluster`] (the multi-FPGA front-end).
+pub trait ServingBackend {
+    /// Short backend label for logs, benches, and conformance output.
+    fn label(&self) -> &'static str;
+
+    /// Deploy a validated [`TenancyPlan`] as one rollback-protected
+    /// sequence (allocate every region → program with stream
+    /// destinations → wire adjacent direct links). On any partial
+    /// failure the attempt is torn down — no region or VI record leaks —
+    /// and the error surfaces.
+    fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef>;
+
+    /// Validate `tenant`'s live tenancy and open a serving session onto
+    /// it, pinning each programmed region's lifecycle epoch in the
+    /// handle. Errors if the tenant does not exist or has nothing
+    /// programmed (nothing could serve).
+    fn session(&self, tenant: TenantRef) -> Result<Session>;
+
+    /// Advance the backend's modeled arrival clock(s) by `dur_us` of
+    /// idle time — deployment windows elapse during it, exactly as under
+    /// the engines' `advance_clock`.
+    fn advance_clock(&self, dur_us: f64) -> Result<()>;
+
+    /// Stop serving and return the merged request [`Metrics`].
+    fn shutdown(self) -> Metrics
+    where
+        Self: Sized;
+}
+
+/// The serial backend's shared system: `None` once the backend shut
+/// down, so post-shutdown submissions error exactly like a stopped
+/// engine's would.
+pub(crate) type SharedSystem = Arc<Mutex<Option<System>>>;
+
+/// Run `f` on a live shared system, or error like a stopped engine.
+fn with_serial<R>(sys: &SharedSystem, f: impl FnOnce(&mut System) -> R) -> Result<R> {
+    let mut guard = sys.lock().expect("serial system poisoned");
+    let sys = guard.as_mut().ok_or_else(|| anyhow!("engine stopped"))?;
+    Ok(f(sys))
+}
+
+/// How a session reaches its backend's request path.
+enum SessionInner {
+    /// The serial reference system, shared behind one mutex.
+    Serial(SharedSystem),
+    /// A serving engine's message stream (sharded engine).
+    Engine(EngineHandle),
+    /// Per-device engine handles of a fleet ([`Target::device`] indexes).
+    Fleet(Vec<EngineHandle>),
+}
+
+/// A tenant-scoped serving session: the only way to submit work through
+/// the unified API. Opened from a validated tenancy
+/// ([`ServingBackend::session`]), it carries the tenant reference and
+/// the `(region, epoch)` targets pinned at open time; every submission
+/// is epoch-checked by the engine before any admission draw, so a
+/// session that outlives its tenancy fails fast instead of reaching
+/// whatever now occupies the region.
+pub struct Session {
+    tenant: TenantRef,
+    targets: Vec<Target>,
+    inner: SessionInner,
+}
+
+impl Session {
+    pub(crate) fn new(tenant: TenantRef, targets: Vec<Target>, inner: SessionInner) -> Session {
+        Session { tenant, targets, inner }
+    }
+
+    /// The tenant this session is scoped to.
+    pub fn tenant(&self) -> TenantRef {
+        self.tenant
+    }
+
+    /// The serving regions pinned at open time, in deployment order.
+    /// `region` arguments to the submit family index into this slice.
+    pub fn targets(&self) -> &[Target] {
+        &self.targets
+    }
+
+    /// Index of the target serving VR `vr` (on any device), if the
+    /// session holds one — the bridge for call sites porting from the
+    /// old `(vi, vr)` addressing.
+    pub fn region_of_vr(&self, vr: usize) -> Option<usize> {
+        self.targets.iter().position(|t| t.vr == vr)
+    }
+
+    fn target(&self, region: usize) -> Result<Target> {
+        self.targets.get(region).copied().ok_or_else(|| {
+            anyhow!("session has {} region(s); no region {region}", self.targets.len())
+        })
+    }
+
+    fn device_handle<'a>(handles: &'a [EngineHandle], target: &Target) -> Result<&'a EngineHandle> {
+        handles
+            .get(target.device)
+            .ok_or_else(|| anyhow!("device {} does not exist", target.device))
+    }
+
+    /// Submit one request to the session region at `region` and wait for
+    /// the response. Refused ("stale session") if the region's lifecycle
+    /// epoch moved past the one this session pinned.
+    pub fn submit(&self, region: usize, payload: impl Into<Arc<[u8]>>) -> Result<Response> {
+        let t = self.target(region)?;
+        let payload = payload.into();
+        match &self.inner {
+            SessionInner::Serial(sys) => {
+                with_serial(sys, |sys| sys.submit_expect(t.vi, t.vr, Some(t.epoch), &payload))?
+            }
+            SessionInner::Engine(h) => h.call_scoped(t.vi, t.vr, t.epoch, payload),
+            SessionInner::Fleet(hs) => {
+                Self::device_handle(hs, &t)?.call_scoped(t.vi, t.vr, t.epoch, payload)
+            }
+        }
+    }
+
+    /// Submit without waiting: the request takes its position in the
+    /// engine's arrival order now, and the returned [`Pending`]
+    /// completes independently — overlap submissions to pipeline a
+    /// client. (On the serial backend the request executes inline and
+    /// the `Pending` is born complete; ordering is identical.)
+    pub fn submit_async(&self, region: usize, payload: impl Into<Arc<[u8]>>) -> Result<Pending> {
+        let t = self.target(region)?;
+        let payload = payload.into();
+        match &self.inner {
+            SessionInner::Serial(sys) => Ok(Pending::ready(with_serial(sys, |sys| {
+                sys.submit_expect(t.vi, t.vr, Some(t.epoch), &payload)
+            })?)),
+            SessionInner::Engine(h) => {
+                Ok(Pending::waiting(h.call_async(t.vi, t.vr, Some(t.epoch), payload)?))
+            }
+            SessionInner::Fleet(hs) => Ok(Pending::waiting(
+                Self::device_handle(hs, &t)?.call_async(t.vi, t.vr, Some(t.epoch), payload)?,
+            )),
+        }
+    }
+
+    /// Submit a whole arrival slice at once: the dispatcher receives it
+    /// as one message (one wakeup, one lock acquisition on the serial
+    /// system), admits every request in slice order, and the shards
+    /// pipeline the compute concurrently. Returns per-item results in
+    /// slice order. This is the throughput path — a closed-loop client
+    /// pays one round trip per slice instead of one per request
+    /// (`benches/serving_throughput.rs` gates the win).
+    ///
+    /// Addressing errors (a `region` index the session does not hold)
+    /// fail the whole call before anything is submitted; per-request
+    /// refusals come back in the per-item results. An empty slice is a
+    /// no-op on every backend (nothing dispatched, nothing counted).
+    pub fn submit_batch(&self, batch: &[BatchItem]) -> Result<Vec<Result<Response>>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let targets: Vec<Target> =
+            batch.iter().map(|item| self.target(item.region)).collect::<Result<_>>()?;
+        match &self.inner {
+            SessionInner::Serial(sys) => with_serial(sys, |sys| {
+                sys.metrics.batches += 1;
+                batch
+                    .iter()
+                    .zip(&targets)
+                    .map(|(item, t)| {
+                        sys.submit_expect(t.vi, t.vr, Some(t.epoch), &item.payload)
+                    })
+                    .collect()
+            }),
+            SessionInner::Engine(h) => {
+                let items = batch
+                    .iter()
+                    .zip(&targets)
+                    .map(|(item, t)| (t.vi, t.vr, Some(t.epoch), Arc::clone(&item.payload)))
+                    .collect();
+                Ok(collect_replies(h.call_batch(items)?))
+            }
+            SessionInner::Fleet(handles) => {
+                // Contiguous same-device runs go out as one batch each,
+                // so a single-device fleet behaves exactly like the
+                // sharded engine (same message count, same batch
+                // accounting) and a spread tenancy still pipelines.
+                let mut receivers = Vec::with_capacity(batch.len());
+                let mut i = 0;
+                while i < batch.len() {
+                    let device = targets[i].device;
+                    let mut items = Vec::new();
+                    while i < batch.len() && targets[i].device == device {
+                        let t = &targets[i];
+                        items.push((t.vi, t.vr, Some(t.epoch), Arc::clone(&batch[i].payload)));
+                        i += 1;
+                    }
+                    let handle = handles
+                        .get(device)
+                        .ok_or_else(|| anyhow!("device {device} does not exist"))?;
+                    receivers.extend(handle.call_batch(items)?);
+                }
+                Ok(collect_replies(receivers))
+            }
+        }
+    }
+}
+
+/// Drain batch reply channels in slice order.
+fn collect_replies(receivers: Vec<ReplyReceiver>) -> Vec<Result<Response>> {
+    receivers
+        .into_iter()
+        .map(|rx| rx.recv().unwrap_or_else(|_| Err(anyhow!("engine dropped request"))))
+        .collect()
+}
+
+/// State of a [`Pending`] submission.
+enum PendingState {
+    /// Completed; the result is held until [`Pending::wait`] takes it.
+    Ready(Result<Response>),
+    /// In flight on an engine; the reply arrives on this channel.
+    Channel(ReplyReceiver),
+}
+
+/// An in-flight [`Session::submit_async`] submission: [`Pending::poll`]
+/// checks for completion without blocking, [`Pending::wait`] blocks and
+/// takes the result.
+pub struct Pending {
+    state: PendingState,
+}
+
+impl Pending {
+    fn ready(result: Result<Response>) -> Pending {
+        Pending { state: PendingState::Ready(result) }
+    }
+
+    fn waiting(rx: ReplyReceiver) -> Pending {
+        Pending { state: PendingState::Channel(rx) }
+    }
+
+    /// Whether the response has arrived (non-blocking). Once this
+    /// returns `true`, [`Pending::wait`] returns without blocking.
+    pub fn poll(&mut self) -> bool {
+        let arrived = match &self.state {
+            PendingState::Ready(_) => return true,
+            PendingState::Channel(rx) => match rx.try_recv() {
+                Ok(result) => result,
+                Err(mpsc::TryRecvError::Empty) => return false,
+                Err(mpsc::TryRecvError::Disconnected) => Err(anyhow!("engine dropped request")),
+            },
+        };
+        self.state = PendingState::Ready(arrived);
+        true
+    }
+
+    /// Block until the response arrives and take it.
+    pub fn wait(self) -> Result<Response> {
+        match self.state {
+            PendingState::Ready(result) => result,
+            PendingState::Channel(rx) => {
+                rx.recv().unwrap_or_else(|_| Err(anyhow!("engine dropped request")))
+            }
+        }
+    }
+}

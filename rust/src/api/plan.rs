@@ -1,0 +1,296 @@
+//! Validated tenancy plans + the one deploy/rollback replay every
+//! backend runs.
+//!
+//! A [`TenancyBuilder`] describes what a tenant wants — regions by
+//! design, stream edges by position — and validates it *before* any
+//! resource is touched ([`TenancyBuilder::plan`]). The validated
+//! [`TenancyPlan`] wraps the hypervisor's device-independent
+//! [`MigrationPlan`] (the same contract cross-device migration replays),
+//! so deployment, replica growth, and migration all share one op
+//! sequence and one rollback protocol ([`replay_plan`]): create the VI,
+//! allocate every region, program with re-resolved stream destinations,
+//! wait out the programming windows, wire adjacent direct links — and on
+//! any partial failure, tear the attempt down (destroying a VI this
+//! attempt created) so no region or `ViRecord` ever leaks.
+
+use crate::hypervisor::{LifecycleOp, LifecycleOutcome, MigrationPlan, RegionPlan};
+use anyhow::{bail, ensure, Result};
+
+/// Modeled settle time (µs) a deployment waits before wiring direct
+/// links or rolling back: the programming windows the plan's `Program`
+/// ops opened must elapse first, because the control plane refuses
+/// rewiring or releasing a region that is still reconfiguring. The fleet
+/// migration drain ([`crate::fleet::MIGRATION_DRAIN_US`]) is this same
+/// constant, so engine-level and fleet-level deployments charge
+/// identical modeled time — which is what keeps the backend conformance
+/// suite's clocks in lockstep.
+pub const DEPLOY_SETTLE_US: f64 = 10_000.0;
+
+/// Builder for a multi-region tenancy: regions in deployment order,
+/// stream edges by region position. Finish with
+/// [`TenancyBuilder::plan`], which validates the whole description.
+///
+/// ```no_run
+/// use fpga_mt::api::TenancyBuilder;
+/// let plan = TenancyBuilder::new("vi3")
+///     .region("fpu")
+///     .region("aes")
+///     .stream(0, 1) // region 0's output streams into region 1
+///     .plan()?;
+/// # anyhow::Ok(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct TenancyBuilder {
+    name: String,
+    regions: Vec<RegionPlan>,
+}
+
+impl TenancyBuilder {
+    /// Start a plan for a tenant named `name`.
+    pub fn new(name: &str) -> TenancyBuilder {
+        TenancyBuilder { name: name.to_string(), regions: Vec::new() }
+    }
+
+    /// Add one region programmed with `design` (Table I registry name).
+    /// Regions are indexed in add order; [`TenancyBuilder::stream`] and
+    /// session region indices refer to these positions.
+    pub fn region(mut self, design: &str) -> TenancyBuilder {
+        self.regions.push(RegionPlan { design: Some(design.to_string()), streams_to: None });
+        self
+    }
+
+    /// Add one region that is allocated but not programmed (a reserved
+    /// slot the tenant programs later). Reserved regions cannot serve
+    /// and cannot anchor stream edges.
+    pub fn reserve(mut self) -> TenancyBuilder {
+        self.regions.push(RegionPlan { design: None, streams_to: None });
+        self
+    }
+
+    /// Declare that region `src`'s output streams on-chip into region
+    /// `dst` (both are positions in add order). The deploy replay points
+    /// `src`'s Wrapper registers at `dst` and wires a direct link when
+    /// the placement lands them adjacent.
+    pub fn stream(mut self, src: usize, dst: usize) -> TenancyBuilder {
+        if let Some(region) = self.regions.get_mut(src) {
+            region.streams_to = Some(dst);
+        } else {
+            // Recorded out of range so `plan()` reports it as an error
+            // instead of silently dropping the edge.
+            self.regions.push(RegionPlan { design: None, streams_to: Some(dst) });
+        }
+        self
+    }
+
+    /// Validate the description and freeze it into a deployable
+    /// [`TenancyPlan`]. Errors (with nothing deployed) when the plan is
+    /// empty, a design is not in the accelerator registry, or a stream
+    /// edge is out of range, self-referential, or anchored on an
+    /// unprogrammed region.
+    pub fn plan(self) -> Result<TenancyPlan> {
+        ensure!(!self.regions.is_empty(), "tenancy plan '{}' has no regions", self.name);
+        for (i, region) in self.regions.iter().enumerate() {
+            if let Some(design) = &region.design {
+                ensure!(
+                    crate::accel::by_name(design).is_some(),
+                    "region {i}: unknown design '{design}' (not in the Table I registry)"
+                );
+            }
+            if let Some(dst) = region.streams_to {
+                ensure!(dst < self.regions.len(), "region {i}: stream edge to {dst} is out of range");
+                ensure!(dst != i, "region {i}: cannot stream into itself");
+                ensure!(
+                    region.design.is_some(),
+                    "region {i}: a reserved (unprogrammed) region cannot stream"
+                );
+                ensure!(
+                    self.regions[dst].design.is_some(),
+                    "region {i}: stream destination {dst} is reserved (unprogrammed)"
+                );
+            }
+        }
+        Ok(TenancyPlan { name: self.name, plan: MigrationPlan { regions: self.regions } })
+    }
+}
+
+/// A validated tenancy, ready for [`ServingBackend::deploy`]. Internally
+/// the hypervisor's device-independent [`MigrationPlan`], so the same
+/// plan that admits a tenant also replays it across devices.
+///
+/// [`ServingBackend::deploy`]: crate::api::ServingBackend::deploy
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenancyPlan {
+    name: String,
+    plan: MigrationPlan,
+}
+
+impl TenancyPlan {
+    /// Tenant name the plan deploys under.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of regions (programmed + reserved) the plan allocates.
+    pub fn regions(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// The underlying device-independent migration plan.
+    pub fn migration(&self) -> &MigrationPlan {
+        &self.plan
+    }
+}
+
+/// What [`replay_plan`] needs from a deployment target: a lifecycle-op
+/// applier, a modeled clock, and placement adjacency. Implemented for
+/// the serial system, the engine handle, and a fleet device — the one
+/// seam through which every backend runs the same deploy sequence.
+pub(crate) trait PlanTarget {
+    /// Apply one lifecycle op.
+    fn apply(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome>;
+    /// Advance the target's modeled arrival clock by `dur_us`.
+    fn advance_clock(&mut self, dur_us: f64) -> Result<()>;
+    /// Whether VRs `a` and `b` are physically adjacent (direct-link
+    /// capable) on the target.
+    fn adjacent(&self, a: usize, b: usize) -> bool;
+}
+
+/// Tear a part-done deployment back down. Regions programmed before the
+/// failure are still inside their reconfiguration windows, and the
+/// control plane refuses releasing/destroying a draining region — so the
+/// windows are waited out first, or the rollback itself would be refused
+/// and the target would leak programmed VRs nothing registered anywhere.
+fn rollback(target: &mut dyn PlanTarget, created_here: bool, vi: u16, vrs: &[usize]) {
+    let _ = target.advance_clock(DEPLOY_SETTLE_US);
+    if created_here {
+        // Take the VI record with it: a VI this attempt created is
+        // registered nowhere, so it must not survive.
+        let _ = target.apply(&LifecycleOp::DestroyVi { vi });
+    } else {
+        for &vr in vrs {
+            let _ = target.apply(&LifecycleOp::Release { vi, vr });
+        }
+    }
+}
+
+/// Replay a tenancy plan on a deployment target as one validated
+/// sequence: reuse/create the VI, allocate every region, program with
+/// stream destinations re-resolved to the target's fresh indices, and
+/// wire direct links where the placement landed stream edges adjacent
+/// (after the programming windows elapse — no traffic routes here until
+/// the caller publishes the tenancy). Rolls its own allocations back on
+/// any partial failure. Returns the VI and the allocated VR indices in
+/// plan order.
+///
+/// This is the deploy protocol behind [`ServingBackend::deploy`] on all
+/// three backends *and* behind fleet admission/growth/migration
+/// ([`FleetScheduler::deploy_tenancy`] and the migration replay), so a
+/// rollback bug cannot exist in one path and not the others.
+///
+/// [`ServingBackend::deploy`]: crate::api::ServingBackend::deploy
+/// [`FleetScheduler::deploy_tenancy`]: crate::fleet::FleetScheduler::deploy_tenancy
+pub(crate) fn replay_plan(
+    target: &mut dyn PlanTarget,
+    plan: &MigrationPlan,
+    name: &str,
+    vi: Option<u16>,
+) -> Result<(u16, Vec<usize>)> {
+    let created_here = vi.is_none();
+    let vi = match vi {
+        Some(vi) => vi,
+        None => match target.apply(&LifecycleOp::CreateVi { name: name.into() })? {
+            LifecycleOutcome::Vi(vi) => vi,
+            other => bail!("expected Vi from CreateVi, got {other:?}"),
+        },
+    };
+    let mut new_vrs: Vec<usize> = Vec::with_capacity(plan.len());
+    for _ in &plan.regions {
+        match target.apply(&LifecycleOp::Allocate { vi }) {
+            Ok(LifecycleOutcome::Vr(vr)) => new_vrs.push(vr),
+            Ok(other) => {
+                rollback(target, created_here, vi, &new_vrs);
+                bail!("expected Vr from Allocate, got {other:?}");
+            }
+            Err(e) => {
+                rollback(target, created_here, vi, &new_vrs);
+                return Err(e);
+            }
+        }
+    }
+    for (i, region) in plan.regions.iter().enumerate() {
+        let Some(design) = &region.design else { continue };
+        let dest = region.streams_to.map(|j| new_vrs[j]);
+        let op = LifecycleOp::Program { vi, vr: new_vrs[i], design: design.clone(), dest };
+        if let Err(e) = target.apply(&op) {
+            rollback(target, created_here, vi, &new_vrs);
+            return Err(e);
+        }
+    }
+    // Direct links where the placement landed the stream edges adjacent
+    // (best-effort: a non-adjacent edge still streams, routed through
+    // the NoC). Wiring retargets a source that was just programmed, and
+    // the control plane refuses rewiring a draining region — so when
+    // there is anything to wire, wait the programming windows out first.
+    let wires: Vec<(usize, usize)> = plan
+        .regions
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.design.is_some())
+        .filter_map(|(i, r)| r.streams_to.map(|j| (new_vrs[i], new_vrs[j])))
+        .filter(|&(s, d)| target.adjacent(s, d))
+        .collect();
+    if !wires.is_empty() {
+        target.advance_clock(DEPLOY_SETTLE_US)?;
+        for (src, dst) in wires {
+            let _ = target.apply(&LifecycleOp::Wire { vi, src, dst });
+        }
+    }
+    Ok((vi, new_vrs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_designs_and_edges() {
+        assert!(TenancyBuilder::new("empty").plan().is_err(), "no regions");
+        assert!(
+            TenancyBuilder::new("bogus").region("not-a-design").plan().is_err(),
+            "unknown design"
+        );
+        assert!(
+            TenancyBuilder::new("oob").region("fir").stream(0, 7).plan().is_err(),
+            "edge out of range"
+        );
+        assert!(
+            TenancyBuilder::new("self").region("fir").stream(0, 0).plan().is_err(),
+            "self stream"
+        );
+        assert!(
+            TenancyBuilder::new("res").region("fpu").reserve().stream(0, 1).plan().is_err(),
+            "stream into a reserved region"
+        );
+        assert!(
+            TenancyBuilder::new("src").region("fir").stream(5, 0).plan().is_err(),
+            "edge from a nonexistent region"
+        );
+        let plan = TenancyBuilder::new("vi3")
+            .region("fpu")
+            .region("aes")
+            .stream(0, 1)
+            .plan()
+            .unwrap();
+        assert_eq!(plan.regions(), 2);
+        assert_eq!(plan.name(), "vi3");
+        assert_eq!(plan.migration().regions[0].streams_to, Some(1));
+        assert_eq!(plan.migration().regions[1].design.as_deref(), Some("aes"));
+    }
+
+    #[test]
+    fn reserved_regions_are_allowed_without_edges() {
+        let plan = TenancyBuilder::new("r").region("fft").reserve().plan().unwrap();
+        assert_eq!(plan.regions(), 2);
+        assert_eq!(plan.migration().regions[1].design, None);
+    }
+}

@@ -38,6 +38,16 @@ pub struct Metrics {
     /// Requests refused at admission because the target VR's
     /// reconfiguration backlog was full (bounded backpressure).
     pub backpressured: u64,
+    /// Batched submissions accepted: each non-empty [`submit_batch`]
+    /// arrival slice handed to a dispatcher in one message counts once,
+    /// regardless of how many requests it carries (empty slices are a
+    /// no-op everywhere; on a multi-device fleet each contiguous
+    /// same-device run of the slice is one message, so one count). The
+    /// CI smoke gate asserts the batch path is actually exercised
+    /// (`BENCH_serving.json` `"batches" > 0`).
+    ///
+    /// [`submit_batch`]: crate::api::Session::submit_batch
+    pub batches: u64,
     /// IO-trip time distribution (µs).
     pub io_us: Summary,
     /// Compute time distribution (µs).
@@ -78,6 +88,7 @@ impl Metrics {
         self.requests += other.requests;
         self.rejected += other.rejected;
         self.backpressured += other.backpressured;
+        self.batches += other.batches;
         self.io_us.merge(&other.io_us);
         self.compute_us.merge(&other.compute_us);
         self.total_us.merge(&other.total_us);

@@ -43,6 +43,42 @@ use anyhow::{bail, Result};
 use metrics::{Metrics, RequestTiming};
 use std::sync::Arc;
 
+/// One programmed region of a tenant, as reported by an engine's control
+/// plane (the handles' describe query and the serial equivalent). The
+/// [`api`](crate::api) layer turns these into session targets — the
+/// `(vr, epoch)` pairs a tenant-scoped session pins at open time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionInfo {
+    /// VR index of the region.
+    pub vr: usize,
+    /// Lifecycle epoch at the time of the query.
+    pub epoch: u64,
+    /// Design programmed in the region.
+    pub design: String,
+    /// VR this region streams its output into, if any.
+    pub stream_dest: Option<usize>,
+}
+
+/// The programmed regions VI `vi` currently holds, in allocation order —
+/// the tenancy snapshot a [`Session`](crate::api::Session) is validated
+/// against. Unprogrammed (merely allocated) regions are omitted: they
+/// cannot serve, so a session never targets them.
+pub fn tenant_regions(hv: &Hypervisor, vi: u16) -> Vec<RegionInfo> {
+    let Some(rec) = hv.vis.get(&vi) else { return Vec::new() };
+    rec.vrs
+        .iter()
+        .filter_map(|&vr| match &hv.vrs[vr].status {
+            VrStatus::Programmed { design, .. } => Some(RegionInfo {
+                vr,
+                epoch: hv.vrs[vr].epoch,
+                design: design.clone(),
+                stream_dest: hv.vrs[vr].stream_dest,
+            }),
+            _ => None,
+        })
+        .collect()
+}
+
 /// Resolve a design name to the resource footprint lifecycle ops commit
 /// into the region's pblock (the Table I registry; unknown designs
 /// program with an empty footprint). Pass it to
@@ -287,7 +323,29 @@ impl System {
     /// Serial reference path: snapshots the VR's shard plan fresh (so
     /// hypervisor changes between requests are honored) and runs the same
     /// [`shard::serve_admitted`] implementation as the sharded engine.
+    ///
+    /// Prefer the session surface ([`crate::api::Session::submit`], via
+    /// [`crate::api::SerialBackend`]) at call sites: sessions pin the
+    /// tenancy's epochs so a stale handle is refused instead of silently
+    /// hitting whatever now occupies the region.
     pub fn submit(&mut self, vi: u16, vr: usize, payload: &[u8]) -> Result<Response> {
+        self.submit_expect(vi, vr, None, payload)
+    }
+
+    /// [`System::submit`] with an epoch-scoped envelope: when
+    /// `expected_epoch` is `Some`, the request is refused — counted as a
+    /// rejection, before any admission draw — unless the target region is
+    /// still at exactly that lifecycle epoch. This is the session
+    /// surface's staleness guard; the sharded dispatcher runs the
+    /// identical check at the identical trace position, so the engines'
+    /// accept/reject decisions stay byte-for-byte equal.
+    pub fn submit_expect(
+        &mut self,
+        vi: u16,
+        vr: usize,
+        expected_epoch: Option<u64>,
+        payload: &[u8],
+    ) -> Result<Response> {
         let rid = self.next_rid;
         self.next_rid += 1;
         if vr >= self.hv.vrs.len() {
@@ -295,6 +353,15 @@ impl System {
         }
         let plan = ShardPlan::snapshot(&self.hv, &self.core.noc, vr);
         plan.check_access(vi, &mut self.metrics)?;
+        if let Some(expected) = expected_epoch {
+            if expected != plan.epoch {
+                self.metrics.rejected += 1;
+                bail!(
+                    "stale session for VR{vr}: region moved to epoch {} (session epoch {expected})",
+                    plan.epoch
+                );
+            }
+        }
         let adm = match self.core.timing.admit_vr(rid, vr, plan.epoch) {
             Gate::Admitted(adm) => adm,
             Gate::Busy { busy_for_us } => {

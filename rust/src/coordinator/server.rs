@@ -8,11 +8,14 @@
 //! queue in batches, amortizing dispatch — the paper's VIs "continuously
 //! write, then read from the accelerators" concurrently.
 
-use super::{metrics::Metrics, Response, System};
+use super::{metrics::Metrics, RegionInfo, Response, System};
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
 use anyhow::Result;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+
+/// Receiver half of one request's reply channel.
+pub(crate) type ReplyReceiver = mpsc::Receiver<Result<Response>>;
 
 /// A request from a VI client.
 pub struct Request {
@@ -22,6 +25,10 @@ pub struct Request {
     pub vr: usize,
     /// Raw request payload, shared zero-copy with the client.
     pub payload: Arc<[u8]>,
+    /// Epoch the caller's session pinned at open time: the engine refuses
+    /// the request ("stale session", counted as a rejection) if the
+    /// region has moved past it. `None` = unscoped legacy envelope.
+    pub expected_epoch: Option<u64>,
     /// Channel the response is sent back on.
     pub reply: mpsc::Sender<Result<Response>>,
 }
@@ -43,7 +50,15 @@ pub struct CtlRequest {
 /// client protocol, so one handle type serves both.
 pub(crate) enum Msg {
     Req(Request),
+    /// A whole arrival slice submitted as one message: the dispatcher
+    /// admits every request in slice order in a single wakeup (one
+    /// channel receive, one lock acquisition on the serial system), so a
+    /// pipelined client pays one round trip per slice instead of one per
+    /// request. Counted once in [`Metrics::batches`].
+    Batch(Vec<Request>),
     Ctl(CtlRequest),
+    /// Report VI `vi`'s programmed regions (the session-open snapshot).
+    Describe(u16, mpsc::Sender<Vec<RegionInfo>>),
     /// Read the engine's modeled arrival clock (µs).
     Clock(mpsc::Sender<f64>),
     /// Advance the modeled arrival clock by idle time (µs); applied at
@@ -60,15 +75,74 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
+    /// Enqueue one request, returning the receiver its response lands on.
+    /// The building block under [`EngineHandle::call`] and the session
+    /// surface's `submit_async` pipelining.
+    pub(crate) fn call_async(
+        &self,
+        vi: u16,
+        vr: usize,
+        expected_epoch: Option<u64>,
+        payload: Arc<[u8]>,
+    ) -> Result<ReplyReceiver> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request { vi, vr, payload, expected_epoch, reply }))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(rx)
+    }
+
+    /// Enqueue a whole arrival slice as one [`Msg::Batch`] message; the
+    /// engine admits the slice in order in a single wakeup. Returns one
+    /// receiver per item, in slice order.
+    pub(crate) fn call_batch(
+        &self,
+        items: Vec<(u16, usize, Option<u64>, Arc<[u8]>)>,
+    ) -> Result<Vec<ReplyReceiver>> {
+        let mut receivers = Vec::with_capacity(items.len());
+        let mut requests = Vec::with_capacity(items.len());
+        for (vi, vr, expected_epoch, payload) in items {
+            let (reply, rx) = mpsc::channel();
+            receivers.push(rx);
+            requests.push(Request { vi, vr, payload, expected_epoch, reply });
+        }
+        self.tx.send(Msg::Batch(requests)).map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(receivers)
+    }
+
+    /// VI `vi`'s programmed regions as the engine's control plane sees
+    /// them right now — what a session open validates against.
+    pub(crate) fn describe(&self, vi: u16) -> Result<Vec<RegionInfo>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Describe(vi, reply)).map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped describe query"))
+    }
+
     /// Submit and wait for the response. The payload is shared with the
     /// engine as an `Arc<[u8]>`: a `Vec<u8>` moves in without copying, and
     /// clients reusing one buffer across calls pay only a refcount bump.
+    ///
+    /// This is the raw, unscoped envelope (no epoch pinning) — the trace
+    /// and churn replays drive it directly. Client code should prefer a
+    /// [`Session`](crate::api::Session) opened on the engine's backend.
     pub fn call(&self, vi: u16, vr: usize, payload: impl Into<Arc<[u8]>>) -> Result<Response> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Req(Request { vi, vr, payload: payload.into(), reply }))
-            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))?
+        self.call_async(vi, vr, None, payload.into())?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request"))?
+    }
+
+    /// [`EngineHandle::call`] pinned to a session's epoch: refused as
+    /// stale (before any admission draw) if the region moved.
+    pub(crate) fn call_scoped(
+        &self,
+        vi: u16,
+        vr: usize,
+        epoch: u64,
+        payload: Arc<[u8]>,
+    ) -> Result<Response> {
+        self.call_async(vi, vr, Some(epoch), payload)?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request"))?
     }
 
     /// Apply a tenant lifecycle operation on the live engine and wait for
@@ -157,12 +231,30 @@ impl Engine {
                     Msg::Ctl(ctl) => {
                         let _ = ctl.reply.send(system.lifecycle(&ctl.op));
                     }
+                    Msg::Describe(vi, reply) => {
+                        let _ = reply.send(super::tenant_regions(&system.hv, vi));
+                    }
                     Msg::Clock(reply) => {
                         let _ = reply.send(system.core.timing.clock_us());
                     }
                     Msg::Tick(dur_us, reply) => {
                         system.core.timing.advance_clock(dur_us);
                         let _ = reply.send(());
+                    }
+                    Msg::Batch(reqs) => {
+                        // A client-submitted arrival slice: admitted in
+                        // slice order, atomically with respect to other
+                        // messages (mirroring the sharded dispatcher).
+                        system.metrics.batches += 1;
+                        for req in reqs {
+                            let resp = system.submit_expect(
+                                req.vi,
+                                req.vr,
+                                req.expected_epoch,
+                                &req.payload,
+                            );
+                            let _ = req.reply.send(resp);
+                        }
                     }
                     Msg::Req(first) => {
                         let mut batch = vec![first];
@@ -177,7 +269,12 @@ impl Engine {
                             }
                         }
                         for req in batch {
-                            let resp = system.submit(req.vi, req.vr, &req.payload);
+                            let resp = system.submit_expect(
+                                req.vi,
+                                req.vr,
+                                req.expected_epoch,
+                                &req.payload,
+                            );
                             let _ = req.reply.send(resp);
                         }
                     }

@@ -70,6 +70,10 @@ pub type ShardedHandle = EngineHandle;
 pub struct ShardedEngine {
     handle: ShardedHandle,
     dispatcher: Option<JoinHandle<Metrics>>,
+    /// NoC topology of the deployment (static for the engine's lifetime);
+    /// the deploy path reads adjacency from it without entering the
+    /// dispatcher's message stream.
+    topo: crate::noc::Topology,
 }
 
 /// One shard's worker loop: serve admitted requests FIFO, accumulate
@@ -169,10 +173,11 @@ impl Dispatch {
         }
     }
 
-    /// One client request: rid assignment, access check, deterministic
-    /// (reconfiguration-aware) admission, then hand-off to the shard.
+    /// One client request: rid assignment, access check, session-epoch
+    /// check, deterministic (reconfiguration-aware) admission, then
+    /// hand-off to the shard.
     fn handle_req(&mut self, req: Request) {
-        let Request { vi, vr, payload, reply } = req;
+        let Request { vi, vr, payload, expected_epoch, reply } = req;
         // Request ids are consumed in arrival order (even by rejected
         // requests), mirroring the serial engine, so both engines draw
         // identical per-request timing on one trace.
@@ -185,6 +190,19 @@ impl Dispatch {
         if let Err(e) = plan.check_access(vi, &mut self.metrics) {
             let _ = reply.send(Err(e));
             return;
+        }
+        // The session surface's staleness guard, at the exact trace
+        // position `System::submit_expect` runs it, so the engines'
+        // accept/reject decisions stay identical.
+        if let Some(expected) = expected_epoch {
+            if expected != plan.epoch {
+                self.metrics.rejected += 1;
+                let _ = reply.send(Err(anyhow::anyhow!(
+                    "stale session for VR{vr}: region moved to epoch {} (session epoch {expected})",
+                    plan.epoch
+                )));
+                return;
+            }
         }
         let adm = match self.timing.admit_vr(rid, vr, plan.epoch) {
             Gate::Admitted(adm) => adm,
@@ -290,6 +308,7 @@ impl ShardedEngine {
         // outright (admission is single-threaded); only the NoC — touched
         // by whichever worker streams — needs a mutex.
         let SharedCore { noc, timing } = parts.core;
+        let topo = parts.hv.topo.clone();
         let n = parts.plans.len();
         let mut dispatch = Dispatch {
             hv: parts.hv,
@@ -311,8 +330,21 @@ impl ShardedEngine {
                 match msg {
                     Msg::Shutdown => break,
                     Msg::Req(req) => dispatch.handle_req(req),
+                    Msg::Batch(reqs) => {
+                        // A whole arrival slice in one dispatcher wakeup:
+                        // rid assignment, access/epoch checks, and
+                        // admission run back-to-back in slice order, and
+                        // the shards pipeline the compute concurrently.
+                        dispatch.metrics.batches += 1;
+                        for req in reqs {
+                            dispatch.handle_req(req);
+                        }
+                    }
                     Msg::Ctl(CtlRequest { op, reply }) => {
                         let _ = reply.send(dispatch.handle_ctl(&op));
+                    }
+                    Msg::Describe(vi, reply) => {
+                        let _ = reply.send(super::tenant_regions(&dispatch.hv, vi));
                     }
                     Msg::Clock(reply) => {
                         let _ = reply.send(dispatch.timing.clock_us());
@@ -326,7 +358,12 @@ impl ShardedEngine {
             dispatch.shutdown()
         });
 
-        Ok(ShardedEngine { handle: EngineHandle { tx }, dispatcher: Some(dispatcher) })
+        Ok(ShardedEngine { handle: EngineHandle { tx }, dispatcher: Some(dispatcher), topo })
+    }
+
+    /// NoC topology of the deployment (static for the engine's lifetime).
+    pub fn topology(&self) -> &crate::noc::Topology {
+        &self.topo
     }
 
     /// A new client handle onto the engine.

@@ -1,0 +1,238 @@
+//! [`FleetCluster`]: the shared-ownership fleet front-end.
+//!
+//! [`FleetScheduler`]'s admin methods take `&mut self`, which forced an
+//! awkward split: serving went through cloneable [`FleetHandle`]s while
+//! admitting/growing/retiring a tenant needed exclusive ownership of the
+//! scheduler — so a fleet that was busy serving could not admit. The
+//! cluster closes that asymmetry: it owns the scheduler behind one
+//! mutex, is itself `Clone`, and routes **admin through `&self`** while
+//! **serving stays lock-free** (requests go through the inner
+//! [`FleetHandle`] and the versioned route table; they never touch the
+//! scheduler mutex). Any thread holding a clone can admit, grow,
+//! migrate, decommission, or rebalance while every other thread keeps
+//! submitting.
+
+use super::{
+    FleetHandle, FleetResponse, FleetScheduler, MigrationReport, Replica, TenantId,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::sharded::ShardedHandle;
+use crate::hypervisor::MigrationPlan;
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Mutex};
+
+/// Cloneable fleet front-end: lock-free serving via the inner
+/// [`FleetHandle`], `&self` admin via the scheduler mutex. See the
+/// module docs for the ownership story.
+///
+/// Two serving shapes coexist: [`FleetCluster::submit`] is the routed
+/// path (round-robin across replicas, ingress-link charging,
+/// generation-gated retry), while sessions opened through the
+/// [`ServingBackend`](crate::api::ServingBackend) surface address
+/// pinned replicas directly — engine-identical semantics for the
+/// backend conformance suite, no ingress model in between.
+#[derive(Clone)]
+pub struct FleetCluster {
+    /// `None` once stopped: later admin calls error, serving handles
+    /// fail like any call onto a stopped engine.
+    sched: Arc<Mutex<Option<FleetScheduler>>>,
+    handle: FleetHandle,
+}
+
+impl FleetCluster {
+    /// Boot a fleet (see [`FleetScheduler::start`]) behind the shared
+    /// front-end.
+    pub fn start(cfg: super::FleetConfig) -> Result<FleetCluster> {
+        Ok(Self::from_scheduler(FleetScheduler::start(cfg)?))
+    }
+
+    /// Wrap an already-running scheduler.
+    pub fn from_scheduler(sched: FleetScheduler) -> FleetCluster {
+        let handle = sched.handle();
+        FleetCluster { sched: Arc::new(Mutex::new(Some(sched))), handle }
+    }
+
+    /// Run `f` on the live scheduler (errors once stopped).
+    fn with<R>(&self, f: impl FnOnce(&mut FleetScheduler) -> R) -> Result<R> {
+        let mut guard = self.sched.lock().expect("fleet scheduler poisoned");
+        let sched = guard.as_mut().ok_or_else(|| anyhow!("fleet stopped"))?;
+        Ok(f(sched))
+    }
+
+    /// A serving handle onto the front-end (requests never take the
+    /// scheduler lock).
+    pub fn handle(&self) -> FleetHandle {
+        self.handle.clone()
+    }
+
+    /// Per-device engine handles, indexed by device — what fleet
+    /// sessions submit through.
+    pub(crate) fn device_handles(&self) -> Vec<ShardedHandle> {
+        self.handle.handles.clone()
+    }
+
+    /// Submit one request for `tenant` through the front-end (routing,
+    /// ingress charging, generation-gated retry — see
+    /// [`FleetHandle::submit`]).
+    pub fn submit(
+        &self,
+        tenant: TenantId,
+        payload: impl Into<Arc<[u8]>>,
+    ) -> Result<FleetResponse> {
+        self.handle.submit(tenant, payload)
+    }
+
+    /// Admit a tenant with one region of `design` (placement picks the
+    /// device). Admin over `&self`: serving continues concurrently.
+    pub fn admit_tenant(&self, name: &str, design: &str) -> Result<TenantId> {
+        self.with(|s| s.admit_tenant(name, design))?
+    }
+
+    /// Deploy a multi-region tenancy plan fleet-wide (see
+    /// [`FleetScheduler::deploy_tenancy`]).
+    pub fn deploy_tenancy(&self, name: &str, plan: &MigrationPlan) -> Result<TenantId> {
+        self.with(|s| s.deploy_tenancy(name, plan))?
+    }
+
+    /// Grow `tenant` by one replica (see [`FleetScheduler::grow_tenant`]).
+    pub fn grow_tenant(&self, tenant: TenantId) -> Result<Replica> {
+        self.with(|s| s.grow_tenant(tenant))?
+    }
+
+    /// Retire `tenant` fleet-wide (see [`FleetScheduler::retire_tenant`]).
+    pub fn retire_tenant(&self, tenant: TenantId) -> Result<()> {
+        self.with(|s| s.retire_tenant(tenant))?
+    }
+
+    /// Live cross-device migration (see
+    /// [`FleetScheduler::migrate_tenant`]); the tenant serves throughout.
+    pub fn migrate_tenant(
+        &self,
+        tenant: TenantId,
+        from: usize,
+        to: usize,
+    ) -> Result<MigrationReport> {
+        self.with(|s| s.migrate_tenant(tenant, from, to))?
+    }
+
+    /// Gracefully decommission a device (see
+    /// [`FleetScheduler::decommission`]).
+    pub fn decommission(&self, device: usize) -> Result<u64> {
+        self.with(|s| s.decommission(device))?
+    }
+
+    /// Abrupt device failure + recovery (see
+    /// [`FleetScheduler::fail_device`]).
+    pub fn fail_device(&self, device: usize) -> Result<u64> {
+        self.with(|s| s.fail_device(device))?
+    }
+
+    /// One hot-spot rebalance pass (see [`FleetScheduler::rebalance`]).
+    pub fn rebalance(&self, factor: f64) -> Result<Option<MigrationReport>> {
+        self.with(|s| s.rebalance(factor))?
+    }
+
+    /// Advance every alive device's modeled arrival clock.
+    pub fn advance_clocks(&self, dur_us: f64) -> Result<()> {
+        self.with(|s| s.advance_clocks(dur_us))?
+    }
+
+    /// Snapshot of `tenant`'s replicas (lock-free, from the route table).
+    pub fn replicas(&self, tenant: TenantId) -> Vec<Replica> {
+        self.handle.routes.replicas(tenant)
+    }
+
+    /// Requests served by `device` so far (lock-free, route table).
+    pub fn routed(&self, device: usize) -> u64 {
+        self.handle.routes.device_routed(device)
+    }
+
+    /// Fleet-level end-to-end latency percentile (lock-free; see
+    /// [`FleetScheduler::latency_percentile`]).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.handle.latency.lock().expect("fleet latency sketch poisoned").percentile(p)
+    }
+
+    /// Number of devices in the fleet.
+    pub fn n_devices(&self) -> Result<usize> {
+        self.with(|s| s.n_devices())
+    }
+
+    /// Whether `device` is powered and serving.
+    pub fn device_alive(&self, device: usize) -> Result<bool> {
+        self.with(|s| s.device_alive(device))
+    }
+
+    /// Free VRs on `device` (from the scheduler's shadow).
+    pub fn free_vrs(&self, device: usize) -> Result<usize> {
+        self.with(|s| s.free_vrs(device))
+    }
+
+    /// Device `device`'s modeled arrival-clock value (µs).
+    pub fn clock_us(&self, device: usize) -> Result<f64> {
+        self.with(|s| s.clock_us(device))?
+    }
+
+    /// Live tenants currently registered.
+    pub fn n_tenants(&self) -> Result<usize> {
+        self.with(|s| s.n_tenants())
+    }
+
+    /// Completed cross-device migrations so far.
+    pub fn migrations(&self) -> Result<u64> {
+        self.with(|s| s.migrations)
+    }
+
+    /// Replicas lost to device failures that could not be re-placed.
+    pub fn displaced(&self) -> Result<u64> {
+        self.with(|s| s.displaced)
+    }
+
+    /// Stop every device engine and return the fleet-wide merged
+    /// [`Metrics`]. First caller wins; later calls (from other clones)
+    /// error with "fleet already stopped".
+    pub fn stop(&self) -> Result<Metrics> {
+        let sched = self
+            .sched
+            .lock()
+            .expect("fleet scheduler poisoned")
+            .take()
+            .ok_or_else(|| anyhow!("fleet already stopped"))?;
+        Ok(sched.stop())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{FleetConfig, PlacePolicy};
+
+    #[test]
+    fn cluster_admits_and_serves_without_exclusive_ownership() {
+        let cluster = FleetCluster::start(FleetConfig {
+            policy: PlacePolicy::Spread,
+            ..FleetConfig::new(2)
+        })
+        .unwrap();
+        // Admin over &self: no `mut` binding anywhere in this test.
+        let a = cluster.admit_tenant("a", "fir").unwrap();
+        let b = cluster.admit_tenant("b", "aes").unwrap();
+        cluster.advance_clocks(20_000.0).unwrap();
+        assert_eq!(cluster.n_tenants().unwrap(), 2);
+        assert!(cluster.submit(a, vec![1u8; 64]).is_ok());
+        assert!(cluster.submit(b, vec![2u8; 64]).is_ok());
+        // A clone on another thread admits while this thread serves.
+        let clone = cluster.clone();
+        let admitter = std::thread::spawn(move || clone.admit_tenant("c", "fft").unwrap());
+        for _ in 0..8 {
+            cluster.submit(a, vec![3u8; 32]).unwrap();
+        }
+        let c = admitter.join().unwrap();
+        cluster.advance_clocks(20_000.0).unwrap();
+        assert!(cluster.submit(c, vec![4u8; 64]).is_ok());
+        let metrics = cluster.stop().unwrap();
+        assert_eq!(metrics.requests, 11);
+        assert!(cluster.stop().is_err(), "second stop must report the fleet is gone");
+        assert!(cluster.admit_tenant("late", "fir").is_err(), "admin after stop errors");
+    }
+}

@@ -31,14 +31,41 @@
 use super::placement::{self, DeviceLoad, PlacePolicy};
 use super::router::Replica;
 use super::{FleetScheduler, TenantId};
+use crate::api::PlanTarget;
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome, MigrationPlan};
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// Modeled drain time of a migration's quiesce phase (µs): the source
 /// device's arrival clock advances by this much before the source
 /// regions are released, so open reconfiguration windows elapse and the
-/// release path sees a drained region.
-pub const MIGRATION_DRAIN_US: f64 = 10_000.0;
+/// release path sees a drained region. Identical to the deploy settle
+/// time ([`crate::api::DEPLOY_SETTLE_US`]) so engine-level and
+/// fleet-level deployments charge the same modeled clock — the backend
+/// conformance suite depends on that.
+pub const MIGRATION_DRAIN_US: f64 = crate::api::DEPLOY_SETTLE_US;
+
+/// [`PlanTarget`] over one fleet device: ops go through
+/// [`FleetScheduler::apply_on`] (engine first, shadow mirror second),
+/// the clock through the device's engine handle, adjacency through the
+/// device's shadow topology.
+struct DeviceTarget<'a> {
+    fleet: &'a mut FleetScheduler,
+    device: usize,
+}
+
+impl PlanTarget for DeviceTarget<'_> {
+    fn apply(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        self.fleet.apply_on(self.device, op)
+    }
+
+    fn advance_clock(&mut self, dur_us: f64) -> Result<()> {
+        self.fleet.devices[self.device].handle.advance_clock(dur_us)
+    }
+
+    fn adjacent(&self, a: usize, b: usize) -> bool {
+        self.fleet.devices[self.device].shadow_hv.topo.vrs_adjacent(a, b)
+    }
+}
 
 /// What one cross-device migration did.
 #[derive(Debug, Clone)]
@@ -59,8 +86,12 @@ impl FleetScheduler {
     /// Recreate `plan` for a tenant on device `to`: reuse/create the VI,
     /// allocate every region, program with re-resolved stream
     /// destinations, and wire direct links where the target placement is
-    /// adjacent. Returns the VI and the new programmed replicas. Rolls
-    /// its own allocations back if any program is refused.
+    /// adjacent. Returns the VI and the new programmed replicas. The op
+    /// sequence and rollback protocol are the shared
+    /// [`replay_plan`](crate::api) machinery — the exact same code that
+    /// deploys a [`TenancyPlan`](crate::api::TenancyPlan) on the
+    /// engine-level backends, so admission, growth, and migration cannot
+    /// drift apart.
     pub(super) fn clone_tenancy(
         &mut self,
         plan: &MigrationPlan,
@@ -68,81 +99,13 @@ impl FleetScheduler {
         vi: Option<u16>,
         to: usize,
     ) -> Result<(u16, Vec<Replica>)> {
-        let created_here = vi.is_none();
-        let vi = match vi {
-            Some(vi) => vi,
-            None => match self.apply_on(to, &LifecycleOp::CreateVi { name: name.into() })? {
-                LifecycleOutcome::Vi(vi) => vi,
-                other => bail!("expected Vi from CreateVi, got {other:?}"),
-            },
-        };
-        let mut new_vrs: Vec<usize> = Vec::with_capacity(plan.len());
-        let rollback = |fleet: &mut FleetScheduler, vrs: &[usize]| {
-            // Regions programmed before the failure are still inside
-            // their reconfiguration windows, and precheck_op refuses
-            // releasing/destroying a draining region: wait the windows
-            // out first, or the rollback itself would be refused and the
-            // target would leak programmed VRs a failed migration never
-            // registered anywhere.
-            let _ = fleet.devices[to].handle.advance_clock(MIGRATION_DRAIN_US);
-            if created_here {
-                // Take the VI record with it: a VI this attempt created
-                // is registered nowhere, so it must not survive.
-                let _ = fleet.apply_on(to, &LifecycleOp::DestroyVi { vi });
-            } else {
-                for &vr in vrs {
-                    let _ = fleet.apply_on(to, &LifecycleOp::Release { vi, vr });
-                }
-            }
-        };
-        for _ in &plan.regions {
-            match self.apply_on(to, &LifecycleOp::Allocate { vi }) {
-                Ok(LifecycleOutcome::Vr(vr)) => new_vrs.push(vr),
-                Ok(other) => {
-                    rollback(self, &new_vrs);
-                    bail!("expected Vr from Allocate, got {other:?}");
-                }
-                Err(e) => {
-                    rollback(self, &new_vrs);
-                    return Err(e);
-                }
-            }
-        }
-        for (i, region) in plan.regions.iter().enumerate() {
-            let Some(design) = &region.design else { continue };
-            let dest = region.streams_to.map(|j| new_vrs[j]);
-            let op = LifecycleOp::Program {
-                vi,
-                vr: new_vrs[i],
-                design: design.clone(),
-                dest,
-            };
-            if let Err(e) = self.apply_on(to, &op) {
-                rollback(self, &new_vrs);
-                return Err(e);
-            }
-        }
-        // Direct links where the target placement landed the stream
-        // edges adjacent (best-effort: a non-adjacent edge still streams,
-        // routed through the NoC). Wiring retargets a source that was
-        // just programmed, and the control plane refuses rewiring a
-        // draining region — so when there is anything to wire, wait the
-        // programming windows out first (modeled deployment time; no
-        // traffic routes here until the cutover).
-        let wires: Vec<(usize, usize)> = plan
-            .regions
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.design.is_some())
-            .filter_map(|(i, r)| r.streams_to.map(|j| (new_vrs[i], new_vrs[j])))
-            .filter(|&(s, d)| self.devices[to].shadow_hv.topo.vrs_adjacent(s, d))
-            .collect();
-        if !wires.is_empty() {
-            self.devices[to].handle.advance_clock(MIGRATION_DRAIN_US)?;
-            for (src, dst) in wires {
-                let _ = self.apply_on(to, &LifecycleOp::Wire { vi, src, dst });
-            }
-        }
+        let (vi, new_vrs) =
+            crate::api::replay_plan(&mut DeviceTarget { fleet: self, device: to }, plan, name, vi)?;
+        // Stream destinations are listed (sessions address them by
+        // region) but not routable: a tenant-level request round-robined
+        // into one would run the downstream accelerator alone.
+        let dests: std::collections::HashSet<usize> =
+            plan.regions.iter().filter_map(|r| r.streams_to).collect();
         let replicas = plan
             .regions
             .iter()
@@ -153,6 +116,7 @@ impl FleetScheduler {
                 vi,
                 vr: new_vrs[i],
                 epoch: self.devices[to].shadow_hv.vrs[new_vrs[i]].epoch,
+                entry: !dests.contains(&i),
             })
             .collect();
         Ok((vi, replicas))

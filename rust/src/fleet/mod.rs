@@ -36,10 +36,12 @@
 //!        refused + table moved past g?  → re-resolve and retry
 //! ```
 
+pub mod cluster;
 pub mod migrate;
 pub mod placement;
 pub mod router;
 
+pub use cluster::FleetCluster;
 pub use migrate::{MigrationReport, MIGRATION_DRAIN_US};
 pub use placement::{DeviceLoad, PlacePolicy};
 pub use router::{Replica, RouteTable, Routed};
@@ -136,8 +138,10 @@ struct TenantRecord {
 }
 
 /// The fleet scheduler: owns the device pool, the tenant registry, and
-/// the shared route table. Control-plane methods take `&mut self`;
-/// serving goes through cloneable [`FleetHandle`]s.
+/// the shared route table. Control-plane methods take `&mut self` — wrap
+/// it in a [`FleetCluster`] (the recommended front-end) to drive admin
+/// through `&self` while serving continues through cloneable
+/// [`FleetHandle`]s.
 pub struct FleetScheduler {
     devices: Vec<DeviceNode>,
     tenants: BTreeMap<TenantId, TenantRecord>,
@@ -431,74 +435,125 @@ impl FleetScheduler {
         Ok(outcome)
     }
 
-    /// Deploy one `design` region for a tenant on `device`: the
-    /// single-region case of the migration machinery's
-    /// [`clone_tenancy`](FleetScheduler::clone_tenancy), so admission,
-    /// replica growth, and migration replay all share one
-    /// deploy-with-rollback protocol (a VI created by a failed attempt
-    /// is destroyed, an allocation without its program is released).
-    pub(crate) fn deploy_region(
+    /// Devices able to absorb every region of `plan`: enough free VRs
+    /// for the whole plan and, for **each distinct design** it programs,
+    /// at least as many fitting free pblocks as it needs — gating only
+    /// one design would place a plan whose larger regions cannot commit,
+    /// burning a deploy+rollback on a device a sibling could have
+    /// avoided. (Fits are counted per design, not matched jointly; an
+    /// over-optimistic pick still fails safe via the replay's rollback.)
+    /// `primary` is the design whose footprint seeds the returned
+    /// [`DeviceLoad`]s for placement scoring.
+    fn viable_for_plan(
         &mut self,
-        device: usize,
-        vi: Option<u16>,
-        name: &str,
-        design: &str,
-    ) -> Result<(u16, usize, u64)> {
+        plan: &crate::hypervisor::MigrationPlan,
+        primary: &str,
+    ) -> Vec<DeviceLoad> {
+        let mut design_counts: BTreeMap<&str, usize> = BTreeMap::new();
+        for design in plan.regions.iter().filter_map(|r| r.design.as_deref()) {
+            *design_counts.entry(design).or_insert(0) += 1;
+        }
+        let footprint = design_footprint(primary);
+        self.device_loads(footprint.as_ref())
+            .into_iter()
+            .filter(|l| l.free_vrs >= plan.len())
+            .filter(|l| {
+                design_counts.iter().all(|(design, &count)| {
+                    let fp = design_footprint(design);
+                    let (_, fitting) = node_capacity(&self.devices[l.device], fp.as_ref());
+                    fitting >= count
+                })
+            })
+            .collect()
+    }
+
+    /// Admit a tenant: place one region of `design` on the device the
+    /// policy picks, deploy it, and register the front-end route.
+    /// Returns the fleet-wide tenant id. The single-region case of
+    /// [`FleetScheduler::deploy_tenancy`].
+    pub fn admit_tenant(&mut self, name: &str, design: &str) -> Result<TenantId> {
         let plan = crate::hypervisor::MigrationPlan {
             regions: vec![crate::hypervisor::RegionPlan {
                 design: Some(design.to_string()),
                 streams_to: None,
             }],
         };
-        let (vi, replicas) = self.clone_tenancy(&plan, name, vi, device)?;
-        let replica = replicas.first().copied().expect("one programmed region");
-        Ok((vi, replica.vr, replica.epoch))
+        self.deploy_tenancy(name, &plan)
     }
 
-    /// Admit a tenant: place one region of `design` on the device the
-    /// policy picks, deploy it, and register the front-end route.
-    /// Returns the fleet-wide tenant id.
-    pub fn admit_tenant(&mut self, name: &str, design: &str) -> Result<TenantId> {
-        let footprint = design_footprint(design);
-        let loads = self.device_loads(footprint.as_ref());
-        let device = placement::choose(&loads, self.policy, None, &[])
-            .ok_or_else(|| anyhow!("no alive device can host '{design}' (fleet full)"))?;
-        let (vi, vr, epoch) = self.deploy_region(device, None, name, design)?;
+    /// Deploy a whole tenancy plan fleet-wide: placement picks one
+    /// device that can absorb every region (free-VR count and pblock-fit
+    /// gated, like a migration target), the plan replays through the
+    /// shared deploy-with-rollback protocol (`clone_tenancy` — the same
+    /// machinery migration uses), and the tenant + its front-end routes
+    /// register. The [`api`](crate::api) layer's fleet `deploy` lands
+    /// here.
+    pub fn deploy_tenancy(
+        &mut self,
+        name: &str,
+        plan: &crate::hypervisor::MigrationPlan,
+    ) -> Result<TenantId> {
+        ensure!(!plan.is_empty(), "tenancy plan '{name}' has no regions");
+        let primary = plan
+            .regions
+            .iter()
+            .find_map(|r| r.design.clone())
+            .ok_or_else(|| anyhow!("tenancy plan '{name}' programs no region"))?;
+        let viable = self.viable_for_plan(plan, &primary);
+        let device = placement::choose(&viable, self.policy, None, &[]).ok_or_else(|| {
+            anyhow!("no alive device can host '{primary}' x{} (fleet full)", plan.len())
+        })?;
+        let (vi, replicas) = self.clone_tenancy(plan, name, None, device)?;
         let tenant = self.next_tenant;
         self.next_tenant += 1;
         self.tenants.insert(
             tenant,
             TenantRecord {
                 name: name.into(),
-                design: design.into(),
+                design: primary,
                 vis: BTreeMap::from([(device, vi)]),
             },
         );
-        self.routes.set_routes(tenant, vec![Replica { device, vi, vr, epoch }]);
+        self.routes.set_routes(tenant, replicas);
         Ok(tenant)
     }
 
-    /// Grow a tenant by one replica of its design; the policy picks the
-    /// device (possibly one the tenant is not on yet), and the front-end
-    /// immediately starts balancing the tenant's requests across all of
-    /// its replicas.
+    /// Grow a tenant by one **whole-tenancy replica**: the tenant's full
+    /// plan (every region, stream edges included — exported from an
+    /// existing replica's shadow, exactly as migration exports it)
+    /// replays on the device the policy picks, so a multi-region chain
+    /// never grows as a lone first-design region the router would then
+    /// serve chainless. Returns the new replica's entry region; the
+    /// front-end immediately balances the tenant's requests across all
+    /// of its entry replicas.
     pub fn grow_tenant(&mut self, tenant: TenantId) -> Result<Replica> {
         let rec = self
             .tenants
             .get(&tenant)
             .cloned()
             .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
-        let footprint = design_footprint(&rec.design);
-        let loads = self.device_loads(footprint.as_ref());
+        let (&src_device, &src_vi) = rec
+            .vis
+            .iter()
+            .next()
+            .ok_or_else(|| anyhow!("tenant {tenant} holds no regions to replicate"))?;
+        let plan = self.devices[src_device].shadow_hv.migration_plan(src_vi)?;
+        ensure!(!plan.is_empty(), "tenant {tenant} holds no regions to replicate");
+        let viable = self.viable_for_plan(&plan, &rec.design);
         let occupied: Vec<usize> = rec.vis.keys().copied().collect();
-        let device = placement::choose(&loads, self.policy, None, &occupied)
+        let device = placement::choose(&viable, self.policy, None, &occupied)
             .ok_or_else(|| anyhow!("no alive device can host another '{}'", rec.design))?;
         let vi = rec.vis.get(&device).copied();
-        let (vi, vr, epoch) = self.deploy_region(device, vi, &rec.name, &rec.design)?;
+        let (vi, new_replicas) = self.clone_tenancy(&plan, &rec.name, vi, device)?;
+        let replica = new_replicas
+            .iter()
+            .find(|r| r.entry)
+            .or_else(|| new_replicas.first())
+            .copied()
+            .ok_or_else(|| anyhow!("tenant {tenant}'s plan programs no region"))?;
         self.tenants.get_mut(&tenant).expect("checked above").vis.insert(device, vi);
         let mut replicas = self.routes.replicas(tenant);
-        let replica = Replica { device, vi, vr, epoch };
-        replicas.push(replica);
+        replicas.extend(new_replicas);
         self.routes.set_routes(tenant, replicas);
         Ok(replica)
     }
@@ -554,12 +609,14 @@ pub struct FleetReplayStats {
 }
 
 /// Replay a fleet churn trace ([`FleetEvent`]s from
-/// `coordinator::churn::generate_fleet`) against a live fleet. Trace
+/// `coordinator::churn::generate_fleet`) against a live fleet behind its
+/// shared front-end (admin and serving both go through the
+/// [`FleetCluster`] — no exclusive scheduler ownership needed). Trace
 /// tenant indices are positions in the `Admit` sequence; admissions the
 /// fleet refuses leave their slot unmapped, and later traffic to that
 /// slot counts as refused — so the replay tolerates any divergence
 /// between the generator's capacity bookkeeping and live placement.
-pub fn replay_fleet(fleet: &mut FleetScheduler, events: &[FleetEvent]) -> FleetReplayStats {
+pub fn replay_fleet(fleet: &FleetCluster, events: &[FleetEvent]) -> FleetReplayStats {
     let handle = fleet.handle();
     let mut map: Vec<Option<TenantId>> = Vec::new();
     let mut stats = FleetReplayStats::default();
@@ -619,7 +676,7 @@ pub fn replay_fleet(fleet: &mut FleetScheduler, events: &[FleetEvent]) -> FleetR
             },
         }
     }
-    stats.migrations = fleet.migrations;
-    stats.displaced = fleet.displaced;
+    stats.migrations = fleet.migrations().unwrap_or(0);
+    stats.displaced = fleet.displaced().unwrap_or(0);
     stats
 }

@@ -32,6 +32,13 @@ pub struct Replica {
     pub vr: usize,
     /// Lifecycle epoch of the VR at deployment.
     pub epoch: u64,
+    /// Whether tenant-level requests may be routed here. A multi-region
+    /// chain's stream *destinations* (regions another region streams
+    /// into) serve only through the chain — routing a bare request at
+    /// one would execute the downstream accelerator alone — so the
+    /// front-end's round-robin covers entry regions only. Destinations
+    /// remain addressable through region-scoped sessions.
+    pub entry: bool,
 }
 
 /// A resolved route: the replica to call plus the tenant entry's version
@@ -45,14 +52,35 @@ pub struct Routed {
     pub generation: u64,
 }
 
-/// One tenant's routing entry: its replicas, a round-robin cursor, and
-/// the entry's own version (the table generation at its last write —
-/// retries key off *this tenant's* routes moving, never off unrelated
-/// tenants churning the table).
+/// One tenant's routing entry: its replicas, the precomputed routable
+/// subset, a round-robin cursor, and the entry's own version (the table
+/// generation at its last write — retries key off *this tenant's*
+/// routes moving, never off unrelated tenants churning the table).
 struct Entry {
     replicas: Vec<Replica>,
+    /// Indices into `replicas` the round-robin covers: the entry
+    /// regions, or every replica when the tenancy has none (a cyclic
+    /// chain must degrade, not blackhole). Precomputed here because
+    /// `entry` flags only change when the whole entry is replaced —
+    /// resolution on the serving hot path stays allocation-free.
+    routable: Vec<usize>,
     rr: AtomicUsize,
     version: u64,
+}
+
+impl Entry {
+    fn new(replicas: Vec<Replica>, version: u64) -> Entry {
+        let mut routable: Vec<usize> = replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.entry)
+            .map(|(i, _)| i)
+            .collect();
+        if routable.is_empty() {
+            routable = (0..replicas.len()).collect();
+        }
+        Entry { replicas, routable, rr: AtomicUsize::new(0), version }
+    }
 }
 
 /// The versioned tenant → replicas table shared between the fleet
@@ -88,7 +116,7 @@ impl RouteTable {
     pub fn set_routes(&self, tenant: TenantId, replicas: Vec<Replica>) {
         let mut entries = self.entries.write().expect("route table poisoned");
         let version = self.generation.fetch_add(1, Ordering::AcqRel) + 1;
-        entries.insert(tenant, Entry { replicas, rr: AtomicUsize::new(0), version });
+        entries.insert(tenant, Entry::new(replicas, version));
     }
 
     /// Drop `tenant` from the table entirely and bump the generation.
@@ -98,20 +126,22 @@ impl RouteTable {
         self.generation.fetch_add(1, Ordering::AcqRel);
     }
 
-    /// Resolve one request: pick the tenant's next replica round-robin
-    /// (load-balancing across replicas of the same design). `None` when
-    /// the tenant has no live replica. The returned generation is the
-    /// *entry's* version, so a retry triggers only when this tenant's
-    /// own routes moved. Load accounting happens separately on served
-    /// replies ([`RouteTable::note_served`]).
+    /// Resolve one request: pick the tenant's next routable replica
+    /// round-robin (load-balancing across entry regions of the tenant's
+    /// design; stream destinations are skipped — see
+    /// [`Replica::entry`]). `None` when the tenant has no live replica.
+    /// The returned generation is the *entry's* version, so a retry
+    /// triggers only when this tenant's own routes moved. Load
+    /// accounting happens separately on served replies
+    /// ([`RouteTable::note_served`]).
     pub fn resolve(&self, tenant: TenantId) -> Option<Routed> {
         let entries = self.entries.read().expect("route table poisoned");
         let entry = entries.get(&tenant)?;
-        if entry.replicas.is_empty() {
+        if entry.routable.is_empty() {
             return None;
         }
-        let i = entry.rr.fetch_add(1, Ordering::Relaxed) % entry.replicas.len();
-        let replica = entry.replicas[i];
+        let i = entry.rr.fetch_add(1, Ordering::Relaxed) % entry.routable.len();
+        let replica = entry.replicas[entry.routable[i]];
         Some(Routed { replica, generation: entry.version })
     }
 
@@ -148,7 +178,26 @@ mod tests {
     use super::*;
 
     fn replica(device: usize, vr: usize) -> Replica {
-        Replica { device, vi: 1, vr, epoch: 2 }
+        Replica { device, vi: 1, vr, epoch: 2, entry: true }
+    }
+
+    #[test]
+    fn stream_destinations_are_not_routed_but_stay_listed() {
+        let table = RouteTable::new(1);
+        // A 2-region chain: region 0 is the entry, region 1 the stream
+        // destination — round-robin must pin to the entry.
+        table.set_routes(
+            3,
+            vec![replica(0, 0), Replica { entry: false, ..replica(0, 1) }],
+        );
+        for _ in 0..4 {
+            assert_eq!(table.resolve(3).unwrap().replica.vr, 0, "only the entry routes");
+        }
+        assert_eq!(table.replicas(3).len(), 2, "sessions still see every region");
+        // Degenerate cyclic tenancy (no entry regions): fall back to all
+        // replicas instead of blackholing the tenant.
+        table.set_routes(4, vec![Replica { entry: false, ..replica(0, 2) }]);
+        assert_eq!(table.resolve(4).unwrap().replica.vr, 2);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 #![warn(missing_docs)]
 
 pub mod accel;
+pub mod api;
 pub mod bench_support;
 pub mod cloud;
 pub mod coordinator;

@@ -5,11 +5,12 @@
 
 use anyhow::Result;
 use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::api::{SerialBackend, ServingBackend, TenantRef};
 use fpga_mt::cloud::{compare, fig14_io_trips, Ingress, IoConfig, Link, Scheme};
 use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
 use fpga_mt::coordinator::System;
 use fpga_mt::device::Device;
-use fpga_mt::fleet::{replay_fleet, FleetConfig, FleetScheduler, PlacePolicy};
+use fpga_mt::fleet::{replay_fleet, FleetCluster, FleetConfig, PlacePolicy};
 use fpga_mt::estimate::{
     self, router_fmax_mhz, router_power_mw, router_resources, RouterConfig, BASELINES,
 };
@@ -233,7 +234,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         Ingress::uniform(devices, Link::local())
     };
     let trace = churn::generate_fleet(&FleetChurnConfig { seed, events, devices });
-    let mut fleet = FleetScheduler::start(FleetConfig {
+    let fleet = FleetCluster::start(FleetConfig {
         devices,
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         policy,
@@ -243,14 +244,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "fleet: {devices} devices, {policy:?} placement, {} events (seed {seed:#x})",
         trace.len()
     );
-    let stats = replay_fleet(&mut fleet, &trace);
+    let stats = replay_fleet(&fleet, &trace);
     let mut t = Table::new(vec!["device", "alive", "free VRs", "routed", "clock µs"]);
-    for d in 0..fleet.n_devices() {
-        let alive = fleet.device_alive(d);
+    for d in 0..fleet.n_devices()? {
+        let alive = fleet.device_alive(d)?;
         t.row(vec![
             format!("dev{d}"),
             if alive { "yes" } else { "down" }.to_string(),
-            fleet.free_vrs(d).to_string(),
+            fleet.free_vrs(d)?.to_string(),
             fleet.routed(d).to_string(),
             if alive { fnum(fleet.clock_us(d)?) } else { "-".to_string() },
         ]);
@@ -268,7 +269,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fleet.latency_percentile(95.0),
         fleet.latency_percentile(99.0),
     );
-    let metrics = fleet.stop();
+    let metrics = fleet.stop()?;
     println!(
         "client latency (incl. ingress): p50 {p50:.1} µs, p95 {p95:.1} µs, p99 {p99:.1} µs | device-side p50 {:.1} µs | mean ingress {:.1} µs | throughput {:.2} Gb/s",
         metrics.latency_percentile(50.0),
@@ -281,18 +282,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 fn cmd_case_study(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     let iters = args.get_u64("iters", 4);
-    let mut sys = System::case_study(dir)?;
-    println!(
-        "deployed: {} VRs, utilization {:.0}%",
-        sys.hv.vrs.len(),
-        sys.hv.vr_utilization() * 100.0
-    );
+    let backend = SerialBackend::new(System::case_study(dir)?);
+    backend.with_system(|sys| {
+        println!(
+            "deployed: {} VRs, utilization {:.0}%",
+            sys.hv.vrs.len(),
+            sys.hv.vr_utilization() * 100.0
+        );
+    });
     let payload: Vec<u8> = (0..=255).collect();
     let mut t = Table::new(vec!["accel", "VI", "VR", "path", "io µs", "compute µs", "noc cycles"]);
+    // One tenant-scoped session per VI — the unified serving surface.
     for spec in &CASE_STUDY {
+        let session = backend.session(TenantRef::Vi(spec.vi))?;
+        let region = session
+            .region_of_vr(spec.vr)
+            .ok_or_else(|| anyhow::anyhow!("VI{} does not serve VR{}", spec.vi, spec.vr))?;
         let mut last = None;
         for _ in 0..iters {
-            last = Some(sys.submit(spec.vi, spec.vr, &payload)?);
+            last = Some(session.submit(region, payload.clone())?);
         }
         let resp = last.unwrap();
         t.row(vec![
@@ -306,11 +314,12 @@ fn cmd_case_study(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    let metrics = backend.shutdown();
     println!(
         "requests={} mean_io={:.1}µs mean_total={:.1}µs",
-        sys.metrics.requests,
-        sys.metrics.io_us.mean(),
-        sys.metrics.total_us.mean()
+        metrics.requests,
+        metrics.io_us.mean(),
+        metrics.total_us.mean()
     );
     Ok(())
 }

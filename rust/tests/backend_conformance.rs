@@ -1,0 +1,322 @@
+//! Backend conformance suite — the tentpole invariant of the unified
+//! serving surface.
+//!
+//! One parameterized driver deploys the same tenancy plans, opens the
+//! same sessions, and replays the same seeded trace (sync submissions,
+//! an async pipelined wave, and per-session batches) through every
+//! [`ServingBackend`]: the serial reference system, the sharded per-VR
+//! engine, and a single-device fleet. The runs must agree byte for
+//! byte:
+//!
+//! - every response identical — outputs, accelerator path, modeled
+//!   timings, **and the lifecycle epoch** the serving region executed
+//!   at;
+//! - session targets identical — same VR indices, same pinned epochs;
+//! - merged [`Metrics`] equal — requests, rejections, batches, byte
+//!   counters, timing distributions, latency percentiles.
+//!
+//! This replaces the old pairwise serial-vs-sharded equivalence check:
+//! with three implementations behind one trait, equivalence is a
+//! property of the *surface*, not of one engine pair.
+
+use fpga_mt::api::{
+    BatchItem, SerialBackend, ServingBackend, Session, TenancyBuilder, TenancyPlan,
+};
+use fpga_mt::coordinator::metrics::Metrics;
+use fpga_mt::coordinator::{Response, ShardedEngine, System};
+use fpga_mt::fleet::{FleetCluster, FleetConfig};
+use fpga_mt::util::Rng;
+use std::sync::Arc;
+
+/// The tenancy every backend deploys: two single-region tenants plus the
+/// paper's streaming pair (FPU chaining into AES on-chip).
+fn plans() -> Vec<TenancyPlan> {
+    vec![
+        TenancyBuilder::new("alpha").region("fir").plan().unwrap(),
+        TenancyBuilder::new("beta").region("fft").plan().unwrap(),
+        TenancyBuilder::new("gamma").region("fpu").region("aes").stream(0, 1).plan().unwrap(),
+    ]
+}
+
+/// `(tenant, region)` pairs a request may target (region indices are
+/// positions in the tenant's deployment order).
+const TARGETS: [(usize, usize); 4] = [(0, 0), (1, 0), (2, 0), (2, 1)];
+
+fn seeded_payload(rng: &mut Rng) -> Arc<[u8]> {
+    let len = 16 + rng.index(240);
+    (0..len).map(|_| rng.below(256) as u8).collect::<Vec<u8>>().into()
+}
+
+struct Run {
+    label: &'static str,
+    /// Per-tenant session targets: `(vr, epoch)` in deployment order.
+    targets: Vec<Vec<(usize, u64)>>,
+    /// Every response, in trace order (sync wave, async wave, batches).
+    responses: Vec<anyhow::Result<Response>>,
+    metrics: Metrics,
+}
+
+/// Deploy, serve, and shut down one backend; everything seeded, so two
+/// runs of this function differ only in the backend underneath.
+fn drive<B: ServingBackend>(backend: B) -> Run {
+    let label = backend.label();
+    let tenants: Vec<_> =
+        plans().iter().map(|p| backend.deploy(p).expect("deploy")).collect();
+    // Let every deployment's reconfiguration window elapse so the trace
+    // measures serving, not admission queueing behind deployment.
+    backend.advance_clock(25_000.0).expect("advance");
+    let sessions: Vec<Session> =
+        tenants.iter().map(|&t| backend.session(t).expect("session")).collect();
+    let targets = sessions
+        .iter()
+        .map(|s| s.targets().iter().map(|t| (t.vr, t.epoch)).collect())
+        .collect();
+
+    let mut rng = Rng::new(0x0C0FE);
+    let mut responses = Vec::new();
+    // 1. Sync wave: blocking submissions in seeded order.
+    for _ in 0..48 {
+        let (tenant, region) = TARGETS[rng.index(TARGETS.len())];
+        responses.push(sessions[tenant].submit(region, seeded_payload(&mut rng)));
+    }
+    // 2. Async wave: submissions enter the arrival order immediately and
+    //    complete out of band; results are collected in submission order.
+    let mut pendings = Vec::new();
+    for _ in 0..16 {
+        let (tenant, region) = TARGETS[rng.index(TARGETS.len())];
+        pendings.push(
+            sessions[tenant]
+                .submit_async(region, seeded_payload(&mut rng))
+                .expect("submit_async"),
+        );
+    }
+    responses.extend(pendings.into_iter().map(|p| p.wait()));
+    // 3. One batch per session: a whole arrival slice in one dispatcher
+    //    wakeup, results in slice order.
+    for session in &sessions {
+        let regions = session.targets().len();
+        let batch: Vec<BatchItem> =
+            (0..8).map(|i| BatchItem::new(i % regions, seeded_payload(&mut rng))).collect();
+        responses.extend(session.submit_batch(&batch).expect("submit_batch"));
+    }
+    let metrics = backend.shutdown();
+    Run { label, targets, responses, metrics }
+}
+
+fn assert_runs_identical(a: &Run, b: &Run) {
+    let pair = format!("{} vs {}", a.label, b.label);
+    assert_eq!(a.targets, b.targets, "{pair}: session targets (vr, epoch)");
+    assert_eq!(a.responses.len(), b.responses.len(), "{pair}: trace length");
+    let mut served = 0u64;
+    for (i, (x, y)) in a.responses.iter().zip(&b.responses).enumerate() {
+        match (x, y) {
+            (Ok(x), Ok(y)) => {
+                served += 1;
+                assert_eq!(x.path, y.path, "{pair} request {i}: accelerator path");
+                assert_eq!(x.epoch, y.epoch, "{pair} request {i}: serving epoch");
+                assert_eq!(x.outputs.len(), y.outputs.len(), "{pair} request {i}");
+                for (ta, tb) in x.outputs.iter().zip(&y.outputs) {
+                    assert_eq!(ta.shape, tb.shape, "{pair} request {i}: output shape");
+                    assert_eq!(ta.data, tb.data, "{pair} request {i}: output bytes");
+                }
+                assert_eq!(x.timing.io_us, y.timing.io_us, "{pair} request {i}: io model");
+                assert_eq!(x.timing.noc_cycles, y.timing.noc_cycles, "{pair} request {i}: noc");
+                assert_eq!(x.timing.bytes_in, y.timing.bytes_in, "{pair} request {i}");
+                assert_eq!(x.timing.bytes_out, y.timing.bytes_out, "{pair} request {i}");
+            }
+            (Err(_), Err(_)) => {}
+            (x, y) => panic!(
+                "{pair} request {i}: acceptance diverged (ok={} vs ok={})",
+                x.is_ok(),
+                y.is_ok()
+            ),
+        }
+    }
+    assert!(served > 0, "{pair}: the trace must serve");
+    let (ma, mb) = (&a.metrics, &b.metrics);
+    assert_eq!(ma.requests, mb.requests, "{pair}: requests");
+    assert_eq!(ma.rejected, mb.rejected, "{pair}: rejected");
+    assert_eq!(ma.backpressured, mb.backpressured, "{pair}: backpressured");
+    assert_eq!(ma.batches, mb.batches, "{pair}: batches");
+    assert_eq!(ma.bytes_in, mb.bytes_in, "{pair}: bytes_in");
+    assert_eq!(ma.bytes_out, mb.bytes_out, "{pair}: bytes_out");
+    assert_eq!(ma.io_us.count(), mb.io_us.count(), "{pair}: io_us count");
+    assert!(
+        (ma.io_us.mean() - mb.io_us.mean()).abs() < 1e-9,
+        "{pair}: io_us mean {} vs {}",
+        ma.io_us.mean(),
+        mb.io_us.mean()
+    );
+    assert_eq!(ma.noc_cycles.max(), mb.noc_cycles.max(), "{pair}: noc_cycles max");
+    for p in [50.0, 95.0, 99.0] {
+        assert_eq!(
+            ma.latency_percentile(p),
+            mb.latency_percentile(p),
+            "{pair}: p{p} latency (the sketch is order-independent, so exact)"
+        );
+    }
+}
+
+fn serial_run() -> Run {
+    drive(SerialBackend::new(System::empty("artifacts").unwrap()))
+}
+
+fn sharded_run() -> Run {
+    drive(ShardedEngine::start(|| System::empty("artifacts")).unwrap())
+}
+
+fn fleet_run() -> Run {
+    drive(FleetCluster::start(FleetConfig::new(1)).unwrap())
+}
+
+#[test]
+fn all_three_backends_agree_on_one_trace() {
+    let serial = serial_run();
+    let sharded = sharded_run();
+    let fleet = fleet_run();
+    // The trace must exercise every surface: sync, async, and batches on
+    // every backend (3 sessions -> 3 batch slices each run).
+    assert_eq!(serial.metrics.batches, 3, "one batch per session");
+    assert_eq!(serial.metrics.requests, 48 + 16 + 3 * 8);
+    assert_runs_identical(&serial, &sharded);
+    assert_runs_identical(&serial, &fleet);
+    assert_runs_identical(&sharded, &fleet);
+}
+
+#[test]
+fn sessions_expose_identical_tenancies_across_backends() {
+    // Cheap standalone check (no serving trace): deploy-only
+    // equivalence, so a deploy-path regression is reported even when the
+    // serving trace is what breaks.
+    fn deploy_targets<B: ServingBackend>(backend: B) -> Vec<Vec<(usize, u64)>> {
+        let tenants: Vec<_> =
+            plans().iter().map(|p| backend.deploy(p).expect("deploy")).collect();
+        backend.advance_clock(25_000.0).expect("advance");
+        let targets = tenants
+            .iter()
+            .map(|&t| {
+                let session = backend.session(t).expect("session");
+                session.targets().iter().map(|x| (x.vr, x.epoch)).collect()
+            })
+            .collect();
+        backend.shutdown();
+        targets
+    }
+    let serial = deploy_targets(SerialBackend::new(System::empty("artifacts").unwrap()));
+    let fleet = deploy_targets(FleetCluster::start(FleetConfig::new(1)).unwrap());
+    assert_eq!(serial, fleet, "deploys must land identical (vr, epoch) tenancies");
+    assert_eq!(serial[2].len(), 2, "gamma holds two regions");
+}
+
+#[test]
+fn foreign_probes_reject_identically_on_serial_and_sharded() {
+    // Sessions cannot express a foreign-VI request (that is the point of
+    // the surface), so access-monitor rejection equivalence is probed at
+    // the raw envelope the engines share: the same case-study trace with
+    // 25% foreign-VI requests mixed in must get identical accept/reject
+    // decisions, identical served responses, and equal rejection counts
+    // on the serial path and the sharded dispatcher.
+    use fpga_mt::accel::CASE_STUDY;
+    let mut rng = Rng::new(0xA11CE);
+    let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
+    let trace: Vec<(u16, usize, Arc<[u8]>)> = (0..120)
+        .map(|_| {
+            let (mut vi, vr) = specs[rng.index(specs.len())];
+            if rng.chance(0.25) {
+                vi = (vi % 5) + 1; // sometimes lands on a foreign VI
+            }
+            (vi, vr, seeded_payload(&mut rng))
+        })
+        .collect();
+
+    let mut sys = System::case_study("artifacts").unwrap();
+    let serial: Vec<_> = trace.iter().map(|(vi, vr, p)| sys.submit(*vi, *vr, p)).collect();
+    let serial_metrics = sys.metrics.clone();
+
+    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let handle = engine.handle();
+    let sharded: Vec<_> =
+        trace.iter().map(|(vi, vr, p)| handle.call(*vi, *vr, Arc::clone(p))).collect();
+    let sharded_metrics = engine.shutdown();
+
+    for (i, (a, b)) in serial.iter().zip(&sharded).enumerate() {
+        match (a, b) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.path, b.path, "request {i}");
+                assert_eq!(a.timing.io_us, b.timing.io_us, "request {i}");
+                for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
+                    assert_eq!(ta.data, tb.data, "request {i}: output bytes");
+                }
+            }
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!(
+                "request {i}: engines disagree on acceptance (ok={} vs ok={})",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+    assert!(serial_metrics.rejected > 0, "the trace must contain foreign probes");
+    assert_eq!(serial_metrics.rejected, sharded_metrics.rejected);
+    assert_eq!(serial_metrics.requests, sharded_metrics.requests);
+    assert_eq!(serial_metrics.bytes_in, sharded_metrics.bytes_in);
+}
+
+#[test]
+fn stale_sessions_reject_identically_on_every_backend() {
+    // After the tenant's tenancy is torn down and a new tenant takes the
+    // same region, an old session must be refused — with the engines
+    // counting the refusal as a rejection — on every backend. (The
+    // lifecycle goes through each backend's own control-plane surface.)
+    fn stale_case<B: ServingBackend>(
+        backend: B,
+        churn: impl FnOnce(&B),
+    ) -> (String, u64, u64) {
+        let plan = TenancyBuilder::new("victim").region("fir").plan().unwrap();
+        let tenant = backend.deploy(&plan).expect("deploy");
+        backend.advance_clock(25_000.0).expect("advance");
+        let session = backend.session(tenant).expect("session");
+        assert!(session.submit(0, vec![1u8; 64]).is_ok());
+        churn(&backend);
+        let err = session.submit(0, vec![1u8; 64]).unwrap_err().to_string();
+        let metrics = backend.shutdown();
+        (err, metrics.requests, metrics.rejected)
+    }
+
+    let serial = stale_case(
+        SerialBackend::new(System::empty("artifacts").unwrap()),
+        |backend| {
+            backend.with_system(|sys| {
+                use fpga_mt::hypervisor::{LifecycleOp, LifecycleOutcome};
+                sys.core.timing.advance_clock(25_000.0);
+                sys.lifecycle(&LifecycleOp::DestroyVi { vi: 1 }).unwrap();
+                let intruder =
+                    match sys.lifecycle(&LifecycleOp::CreateVi { name: "x".into() }).unwrap() {
+                        LifecycleOutcome::Vi(vi) => vi,
+                        _ => unreachable!(),
+                    };
+                sys.lifecycle(&LifecycleOp::Allocate { vi: intruder }).unwrap();
+                sys.lifecycle(&LifecycleOp::Program {
+                    vi: intruder,
+                    vr: 0,
+                    design: "aes".into(),
+                    dest: None,
+                })
+                .unwrap();
+            });
+        },
+    );
+    let fleet = stale_case(FleetCluster::start(FleetConfig::new(1)).unwrap(), |backend| {
+        backend.advance_clocks(25_000.0).unwrap();
+        backend.retire_tenant(0).unwrap();
+        backend.admit_tenant("x", "aes").unwrap();
+    });
+    for (label, (err, requests, rejected)) in [("serial", serial), ("fleet", fleet)] {
+        assert_eq!(requests, 1, "{label}: only the pre-churn submission serves");
+        assert!(rejected >= 1, "{label}: the stale submission must count as a rejection");
+        assert!(
+            err.contains("stale session") || err.contains("does not own"),
+            "{label}: refusal must be staleness or access gating, got: {err}"
+        );
+    }
+}

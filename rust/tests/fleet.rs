@@ -1,4 +1,6 @@
-//! Fleet-layer invariants — the PR-4 tentpole:
+//! Fleet-layer invariants, driven through the shared [`FleetCluster`]
+//! front-end (admin over `&self` — serving never needs exclusive
+//! scheduler ownership):
 //!
 //! - **Migration conservation**: every request submitted during a live
 //!   cross-device migration gets exactly one reply (none lost, none
@@ -16,25 +18,26 @@
 
 use fpga_mt::cloud::{Ingress, Link};
 use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
-use fpga_mt::fleet::{replay_fleet, FleetConfig, FleetScheduler, PlacePolicy};
+use fpga_mt::fleet::{replay_fleet, FleetCluster, FleetConfig, PlacePolicy};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-fn fleet(devices: usize, policy: PlacePolicy) -> FleetScheduler {
+fn fleet(devices: usize, policy: PlacePolicy) -> FleetCluster {
     let cfg = FleetConfig { policy, ..FleetConfig::new(devices) };
-    FleetScheduler::start(cfg).unwrap()
+    FleetCluster::start(cfg).unwrap()
 }
 
 #[test]
 fn migration_conserves_replies_and_lands_on_target_epoch() {
-    let mut fleet = fleet(2, PlacePolicy::BinPack);
+    let fleet = fleet(2, PlacePolicy::BinPack);
     let tenant = fleet.admit_tenant("mover", "aes").unwrap();
     assert_eq!(fleet.replicas(tenant)[0].device, 0, "bin-pack starts on device 0");
     // Let the deployment's reconfiguration window elapse so the client
     // load below measures migration behavior, not admission queueing.
     fleet.advance_clocks(10_000.0).unwrap();
 
-    // Clients hammer the tenant while the control plane migrates it.
+    // Clients hammer the tenant while the control plane migrates it —
+    // through the SAME shared front-end, no exclusive ownership handoff.
     let stop = Arc::new(AtomicBool::new(false));
     let mut clients = Vec::new();
     for c in 0..3 {
@@ -75,8 +78,7 @@ fn migration_conserves_replies_and_lands_on_target_epoch() {
     let replicas = fleet.replicas(tenant);
     assert_eq!(replicas.len(), 1);
     assert_eq!(replicas[0].device, 1, "routes flipped to the target");
-    let h = fleet.handle();
-    let resp = h.submit(tenant, vec![9u8; 64]).unwrap();
+    let resp = fleet.submit(tenant, vec![9u8; 64]).unwrap();
     assert_eq!(resp.device, 1, "post-migration requests land on the target");
     // Engine-side ground truth: the epoch the target device actually
     // executed at must match the route table's view of the new replica.
@@ -86,12 +88,12 @@ fn migration_conserves_replies_and_lands_on_target_epoch() {
         "post-migration requests execute on the target device's epoch"
     );
     assert_eq!(resp.epoch, resp.response.epoch, "router and engine agree on the epoch");
-    assert_eq!(fleet.free_vrs(0), 6, "the source region was released");
-    assert_eq!(fleet.migrations, 1);
+    assert_eq!(fleet.free_vrs(0).unwrap(), 6, "the source region was released");
+    assert_eq!(fleet.migrations().unwrap(), 1);
 
     // Conservation: every Ok reply the clients counted was executed and
     // recorded exactly once, fleet-wide.
-    let metrics = fleet.stop();
+    let metrics = fleet.stop().unwrap();
     assert_eq!(
         metrics.requests,
         ok_total + 1,
@@ -101,7 +103,7 @@ fn migration_conserves_replies_and_lands_on_target_epoch() {
 
 #[test]
 fn binpack_fills_devices_in_order_and_respects_capacity() {
-    let mut fleet = fleet(2, PlacePolicy::BinPack);
+    let fleet = fleet(2, PlacePolicy::BinPack);
     let designs = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
     let mut tenants = Vec::new();
     for i in 0..12 {
@@ -110,8 +112,8 @@ fn binpack_fills_devices_in_order_and_respects_capacity() {
         let device = fleet.replicas(t)[0].device;
         assert_eq!(device, if i < 6 { 0 } else { 1 }, "tenant {i} must bin-pack");
     }
-    assert_eq!(fleet.free_vrs(0), 0);
-    assert_eq!(fleet.free_vrs(1), 0);
+    assert_eq!(fleet.free_vrs(0).unwrap(), 0);
+    assert_eq!(fleet.free_vrs(1).unwrap(), 0);
     // Capacity is per-device pblock accounting: a 13th tenant is refused.
     assert!(fleet.admit_tenant("overflow", "fir").is_err());
     // No cross-device state sharing: VI numbering restarts per device, so
@@ -125,44 +127,42 @@ fn binpack_fills_devices_in_order_and_respects_capacity() {
     );
     // Releasing a tenant frees exactly its device's region.
     fleet.retire_tenant(tenants[0]).unwrap();
-    assert_eq!(fleet.free_vrs(0), 1);
-    assert_eq!(fleet.free_vrs(1), 0);
-    fleet.stop();
+    assert_eq!(fleet.free_vrs(0).unwrap(), 1);
+    assert_eq!(fleet.free_vrs(1).unwrap(), 0);
+    fleet.stop().unwrap();
 }
 
 #[test]
 fn spread_alternates_devices_and_serves_from_both() {
-    let mut fleet = fleet(2, PlacePolicy::Spread);
+    let fleet = fleet(2, PlacePolicy::Spread);
     let a = fleet.admit_tenant("a", "fir").unwrap();
     let b = fleet.admit_tenant("b", "fft").unwrap();
     let da = fleet.replicas(a)[0].device;
     let db = fleet.replicas(b)[0].device;
     assert_ne!(da, db, "spread must not colocate the first two tenants");
-    let h = fleet.handle();
-    assert_eq!(h.submit(a, vec![1u8; 64]).unwrap().device, da);
-    assert_eq!(h.submit(b, vec![2u8; 64]).unwrap().device, db);
+    assert_eq!(fleet.submit(a, vec![1u8; 64]).unwrap().device, da);
+    assert_eq!(fleet.submit(b, vec![2u8; 64]).unwrap().device, db);
     // A replica grows on the emptier device; round-robin then balances
     // the tenant's requests across devices.
     let replica = fleet.grow_tenant(a).unwrap();
     assert_ne!(replica.device, da, "the replica spreads to the other device");
     let devices: Vec<usize> =
-        (0..4).map(|_| h.submit(a, vec![3u8; 32]).unwrap().device).collect();
+        (0..4).map(|_| fleet.submit(a, vec![3u8; 32]).unwrap().device).collect();
     assert!(devices.contains(&da) && devices.contains(&replica.device), "{devices:?}");
-    fleet.stop();
+    fleet.stop().unwrap();
 }
 
 #[test]
 fn decommission_migrates_everything_and_failure_recovers() {
-    let mut fleet = fleet(3, PlacePolicy::Spread);
+    let fleet = fleet(3, PlacePolicy::Spread);
     let designs = ["aes", "fir", "fft", "canny"];
     let tenants: Vec<_> = designs
         .iter()
         .enumerate()
         .map(|(i, d)| fleet.admit_tenant(&format!("t{i}"), d).unwrap())
         .collect();
-    let h = fleet.handle();
     for &t in &tenants {
-        h.submit(t, vec![5u8; 64]).unwrap();
+        fleet.submit(t, vec![5u8; 64]).unwrap();
     }
     // Gracefully decommission device 0: its tenants migrate, none stop
     // serving.
@@ -174,22 +174,22 @@ fn decommission_migrates_everything_and_failure_recovers() {
     assert!(!on_dev0.is_empty(), "spread must have used device 0");
     let moved = fleet.decommission(0).unwrap();
     assert_eq!(moved as usize, on_dev0.len());
-    assert!(!fleet.device_alive(0));
+    assert!(!fleet.device_alive(0).unwrap());
     for &t in &tenants {
-        let resp = h.submit(t, vec![6u8; 64]).unwrap();
+        let resp = fleet.submit(t, vec![6u8; 64]).unwrap();
         assert_ne!(resp.device, 0, "nothing may still route to the dead device");
     }
     // Abrupt failure of device 1: tenants recover onto device 2.
-    if fleet.device_alive(1) {
+    if fleet.device_alive(1).unwrap() {
         fleet.fail_device(1).unwrap();
-        assert!(!fleet.device_alive(1));
+        assert!(!fleet.device_alive(1).unwrap());
         for &t in &tenants {
-            let resp = h.submit(t, vec![7u8; 64]).unwrap();
+            let resp = fleet.submit(t, vec![7u8; 64]).unwrap();
             assert_eq!(resp.device, 2, "all traffic lands on the last survivor");
         }
     }
-    assert!(fleet.migrations >= moved);
-    fleet.stop();
+    assert!(fleet.migrations().unwrap() >= moved);
+    fleet.stop().unwrap();
 }
 
 #[test]
@@ -200,17 +200,16 @@ fn two_devices_halve_the_modeled_makespan() {
     // makespan).
     let designs = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
     let makespan = |devices: usize| {
-        let mut fleet = fleet(devices, PlacePolicy::Spread);
+        let fleet = fleet(devices, PlacePolicy::Spread);
         let tenants: Vec<_> = (0..6)
             .map(|i| fleet.admit_tenant(&format!("t{i}"), designs[i]).unwrap())
             .collect();
-        let h = fleet.handle();
         let payload: Arc<[u8]> = vec![3u8; 64].into();
         for i in 0..240 {
-            h.submit(tenants[i % 6], Arc::clone(&payload)).unwrap();
+            fleet.submit(tenants[i % 6], Arc::clone(&payload)).unwrap();
         }
         let span = (0..devices).map(|d| fleet.clock_us(d).unwrap()).fold(0.0f64, f64::max);
-        fleet.stop();
+        fleet.stop().unwrap();
         span
     };
     let one = makespan(1);
@@ -231,15 +230,14 @@ fn remote_ingress_shows_up_in_client_latency() {
         ingress: Ingress::with_links(vec![Link::testbed_ethernet()]),
         ..FleetConfig::new(1)
     };
-    let mut fleet = FleetScheduler::start(cfg).unwrap();
+    let fleet = FleetCluster::start(cfg).unwrap();
     let tenant = fleet.admit_tenant("remote", "fir").unwrap();
-    let h = fleet.handle();
     for _ in 0..4 {
-        let resp = h.submit(tenant, vec![1u8; 100 * 1024]).unwrap();
+        let resp = fleet.submit(tenant, vec![1u8; 100 * 1024]).unwrap();
         assert!(resp.ingress_us > 100.0, "remote link must charge transfer time");
     }
     let client_p50 = fleet.latency_percentile(50.0);
-    let metrics = fleet.stop();
+    let metrics = fleet.stop().unwrap();
     assert!(
         client_p50 > metrics.latency_percentile(50.0),
         "client latency must include the ingress link ({client_p50} vs {})",
@@ -251,11 +249,11 @@ fn remote_ingress_shows_up_in_client_latency() {
 fn fleet_churn_replay_survives_device_and_tenant_churn() {
     let cfg = FleetChurnConfig { seed: 0xFEE7, events: 350, devices: 3 };
     let trace = churn::generate_fleet(&cfg);
-    let mut fleet = fleet(3, PlacePolicy::Spread);
-    let stats = replay_fleet(&mut fleet, &trace);
+    let fleet = fleet(3, PlacePolicy::Spread);
+    let stats = replay_fleet(&fleet, &trace);
     assert!(stats.admitted >= 3, "admitted {}", stats.admitted);
     assert!(stats.served > 50, "served {}", stats.served);
-    let metrics = fleet.stop();
+    let metrics = fleet.stop().unwrap();
     assert_eq!(metrics.requests, stats.served, "every Ok reply recorded exactly once");
     assert!(metrics.latency_percentile(99.0) >= metrics.latency_percentile(50.0));
 }

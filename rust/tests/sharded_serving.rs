@@ -1,95 +1,20 @@
-//! Serial-vs-sharded serving equivalence and contention tests (the
-//! tentpole invariants of the per-VR request pipeline):
+//! Sharded-engine contention tests: concurrency invariants the backend
+//! conformance suite's single-threaded trace cannot exercise.
 //!
-//! - replaying an identical request trace through the serial engine and
-//!   the sharded engine yields identical per-request outputs, modeled
-//!   timings, and merged `Metrics` totals (requests, rejected, bytes);
+//! (Cross-backend equivalence — byte-identical responses and equal
+//! merged `Metrics` on one trace — lives in
+//! `rust/tests/backend_conformance.rs`, run against the serial system,
+//! the sharded engine, *and* the fleet through the one `ServingBackend`
+//! surface.)
+//!
 //! - >= 4 client threads per VI hammering the sharded engine concurrently
 //!   lose nothing: every request is served, counters conserve;
 //! - concurrent streaming (FPU -> AES) stays isolated from direct traffic
 //!   to the destination shard.
 
 use fpga_mt::accel::CASE_STUDY;
-use fpga_mt::coordinator::server::Engine;
 use fpga_mt::coordinator::{ShardedEngine, System};
-use fpga_mt::util::Rng;
 use std::sync::Arc;
-
-/// Deterministic request trace over the case-study tenancy:
-/// `(vi, vr, payload)` triples, optionally with foreign-VI requests mixed
-/// in (which both engines must reject identically).
-fn trace(n: usize, seed: u64, with_foreign: bool) -> Vec<(u16, usize, Arc<[u8]>)> {
-    let mut rng = Rng::new(seed);
-    let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
-    (0..n)
-        .map(|_| {
-            let (mut vi, vr) = specs[rng.index(specs.len())];
-            if with_foreign && rng.chance(0.25) {
-                vi = (vi % 5) + 1; // sometimes lands on a foreign VI
-            }
-            let len = 16 + rng.index(240);
-            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
-            (vi, vr, Arc::from(payload))
-        })
-        .collect()
-}
-
-#[test]
-fn sharded_engine_matches_serial_on_identical_trace() {
-    let t = trace(120, 0xA11CE, true);
-
-    let serial = Engine::start(|| System::case_study("artifacts")).unwrap();
-    let sh = serial.handle();
-    let serial_resps: Vec<_> =
-        t.iter().map(|(vi, vr, p)| sh.call(*vi, *vr, Arc::clone(p))).collect();
-    let serial_metrics = serial.stop();
-
-    let sharded = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
-    let h = sharded.handle();
-    let sharded_resps: Vec<_> =
-        t.iter().map(|(vi, vr, p)| h.call(*vi, *vr, Arc::clone(p))).collect();
-    let sharded_metrics = sharded.stop();
-
-    let mut served = 0u64;
-    for (i, (a, b)) in serial_resps.iter().zip(&sharded_resps).enumerate() {
-        match (a, b) {
-            (Ok(a), Ok(b)) => {
-                served += 1;
-                assert_eq!(a.path, b.path, "request {i}: accelerator path");
-                assert_eq!(a.outputs.len(), b.outputs.len(), "request {i}");
-                for (ta, tb) in a.outputs.iter().zip(&b.outputs) {
-                    assert_eq!(ta.shape, tb.shape, "request {i}: output shape");
-                    assert_eq!(ta.data, tb.data, "request {i}: outputs must be byte-identical");
-                }
-                // Modeled timings are deterministic per request id; real
-                // compute wall time is the only field allowed to differ.
-                assert_eq!(a.timing.io_us, b.timing.io_us, "request {i}: io model");
-                assert_eq!(a.timing.noc_cycles, b.timing.noc_cycles, "request {i}: noc");
-                assert_eq!(a.timing.bytes_in, b.timing.bytes_in, "request {i}");
-                assert_eq!(a.timing.bytes_out, b.timing.bytes_out, "request {i}");
-            }
-            (Err(_), Err(_)) => {}
-            (a, b) => panic!(
-                "request {i}: engines disagree on acceptance (serial ok={}, sharded ok={})",
-                a.is_ok(),
-                b.is_ok()
-            ),
-        }
-    }
-    assert!(served > 0, "trace must contain served requests");
-    assert!(serial_metrics.rejected > 0, "trace must contain rejections");
-
-    // Merged metrics totals equal the serial trace exactly.
-    assert_eq!(serial_metrics.requests, sharded_metrics.requests);
-    assert_eq!(serial_metrics.rejected, sharded_metrics.rejected);
-    assert_eq!(serial_metrics.bytes_in, sharded_metrics.bytes_in);
-    assert_eq!(serial_metrics.bytes_out, sharded_metrics.bytes_out);
-    assert_eq!(serial_metrics.requests, served);
-    // Distributions: same sample count, same mean up to merge fp noise.
-    assert_eq!(serial_metrics.io_us.count(), sharded_metrics.io_us.count());
-    assert!((serial_metrics.io_us.mean() - sharded_metrics.io_us.mean()).abs() < 1e-9);
-    assert_eq!(serial_metrics.noc_cycles.max(), sharded_metrics.noc_cycles.max());
-}
 
 #[test]
 fn contention_four_clients_per_vi_conserves_all_requests() {
