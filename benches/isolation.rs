@@ -1,0 +1,192 @@
+//! Isolation under attack — the red-team bench.
+//!
+//! One seeded hostile trace (`coordinator::redteam`: six attack classes
+//! layered on cooperative churn) replays through all three serving
+//! backends — serial, sharded, and a single-device fleet. The bench
+//! reports per-class attempt/refusal tallies, the enforcement-point
+//! counters each backend accumulated, replay throughput, and the
+//! worst-pair cross-tenant leakage proxy for the case-study floorplan.
+//!
+//! Checks (enforced in `--smoke` too, non-zero exit on failure):
+//! - the canonical replay log is byte-identical on all three backends;
+//! - every cooperative op applies; zero foreign bytes cross the boundary;
+//! - every attack class is attempted, and every class except the ingress
+//!   flood is refused outright (flood heads queue, tails backpressure);
+//! - rejected / backpressured / denied-op counters all fire;
+//! - the leakage proxy stays under its gated bound for every co-located
+//!   pairing.
+
+use fpga_mt::api::{SerialBackend, ServingBackend};
+use fpga_mt::bench_support::{check, finish, header, smoke_mode};
+use fpga_mt::coordinator::metrics::Metrics;
+use fpga_mt::coordinator::redteam::{
+    self, AttackClass, AttackSurface, RedteamConfig, RedteamEvent, RedteamReplay,
+};
+use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::estimate::{leakage_between, TenantActivity, LEAKAGE_BOUND};
+use fpga_mt::fleet::{FleetCluster, FleetConfig};
+use fpga_mt::noc::Topology;
+use std::time::Instant;
+
+struct Run {
+    label: &'static str,
+    replay: RedteamReplay,
+    metrics: Metrics,
+    events_per_sec: f64,
+}
+
+fn run_surface<B: ServingBackend + AttackSurface>(backend: B, trace: &[RedteamEvent]) -> Run {
+    let label = backend.surface_label();
+    let t0 = Instant::now();
+    let replay = redteam::replay(&backend, trace);
+    let secs = t0.elapsed().as_secs_f64();
+    let metrics = backend.shutdown();
+    Run { label, replay, metrics, events_per_sec: trace.len() as f64 / secs.max(1e-9) }
+}
+
+/// Worst cross-tenant leakage score over every ordered co-located
+/// pairing of the case-study deployment (3 two-region tenants on one
+/// physical column), at full victim duty.
+fn worst_leakage() -> f64 {
+    let topo = Topology::single_column(3);
+    let holdings: [[usize; 2]; 3] = [[0, 1], [2, 3], [4, 5]];
+    let mut worst = 0.0f64;
+    for (ai, attacker) in holdings.iter().enumerate() {
+        for (vi, victim) in holdings.iter().enumerate() {
+            if ai != vi {
+                let report = leakage_between(&topo, attacker, &TenantActivity::new(victim, 1.0));
+                worst = worst.max(report.score);
+            }
+        }
+    }
+    worst
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    header(
+        "Isolation under attack — hostile trace replay on every backend",
+        "tenancy boundary (§IV-C): access monitor, epoch tickets, ownership prechecks, and bounded ingress hold under adversarial churn",
+    );
+    let cfg = RedteamConfig {
+        seed: 0xBAD_5EED,
+        events: if smoke { 200 } else { 600 },
+        attack_rate: 0.35,
+    };
+    let trace = redteam::generate(&cfg);
+    let attacks =
+        trace.iter().filter(|e| matches!(e, RedteamEvent::Attack { .. })).count();
+    println!(
+        "trace: {} events ({} attacks), seed {:#x}, attack rate {}\n",
+        trace.len(),
+        attacks,
+        cfg.seed,
+        cfg.attack_rate
+    );
+
+    let serial = run_surface(SerialBackend::new(System::empty("artifacts").unwrap()), &trace);
+    let sharded = run_surface(ShardedEngine::start(|| System::empty("artifacts")).unwrap(), &trace);
+    let fleet = run_surface(FleetCluster::start(FleetConfig::new(1)).unwrap(), &trace);
+    let runs = [&serial, &sharded, &fleet];
+
+    println!("{:<12} {:>10} {:>10} {:>12} {:>10} {:>12}", "backend", "rejected", "backpres.", "denied ops", "foreign B", "events/s");
+    for run in runs {
+        println!(
+            "{:<12} {:>10} {:>10} {:>12} {:>10} {:>12.0}",
+            run.label,
+            run.metrics.rejected,
+            run.metrics.backpressured,
+            run.metrics.denied_ops,
+            run.replay.foreign_bytes,
+            run.events_per_sec
+        );
+    }
+    println!();
+    println!("{:<20} {:>10} {:>10}", "attack class", "attempts", "refused");
+    for class in AttackClass::ALL {
+        let tally = serial.replay.tally(class);
+        println!("{:<20} {:>10} {:>10}", class.label(), tally.attempts, tally.refused);
+    }
+    let leak = worst_leakage();
+    println!("\nworst co-located leakage score: {leak:.4} (bound {LEAKAGE_BOUND})\n");
+
+    for run in runs {
+        let label = run.label;
+        check(
+            &format!("{label}: every cooperative op applies"),
+            run.replay.coop_op_failures == 0,
+        );
+        check(
+            &format!("{label}: zero foreign bytes cross the tenancy boundary"),
+            run.replay.foreign_bytes == 0,
+        );
+        check(
+            &format!("{label}: every attack class attempted"),
+            run.replay.all_classes_attempted(),
+        );
+        for class in AttackClass::ALL {
+            let tally = run.replay.tally(class);
+            if class == AttackClass::IngressFlood {
+                check(
+                    &format!("{label}: flood tails backpressured, heads queued"),
+                    tally.refused > 0 && tally.attempts > tally.refused,
+                );
+            } else {
+                check(
+                    &format!("{label}: every {} attempt refused", class.label()),
+                    tally.refused == tally.attempts,
+                );
+            }
+        }
+        check(
+            &format!("{label}: all three enforcement counters fire"),
+            run.metrics.rejected > 0
+                && run.metrics.backpressured > 0
+                && run.metrics.denied_ops > 0,
+        );
+    }
+    for other in [&sharded, &fleet] {
+        check(
+            &format!("serial vs {}: replay logs byte-identical", other.label),
+            serial.replay.log == other.replay.log,
+        );
+        check(
+            &format!("serial vs {}: tallies and counters identical", other.label),
+            serial.replay.tallies == other.replay.tallies
+                && serial.metrics.rejected == other.metrics.rejected
+                && serial.metrics.backpressured == other.metrics.backpressured
+                && serial.metrics.denied_ops == other.metrics.denied_ops,
+        );
+    }
+    check("leakage proxy under bound for every co-located pairing", leak < LEAKAGE_BOUND);
+
+    let mut per_class = String::new();
+    for class in AttackClass::ALL {
+        let tally = serial.replay.tally(class);
+        per_class.push_str(&format!(
+            "  \"{}\": {{ \"attempts\": {}, \"refused\": {} }},\n",
+            class.label(),
+            tally.attempts,
+            tally.refused
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"isolation\",\n  \"smoke\": {smoke},\n  \"events\": {},\n  \"attacks\": {attacks},\n{per_class}  \"attacks_refused\": {},\n  \"rejected\": {},\n  \"backpressured\": {},\n  \"denied_ops\": {},\n  \"foreign_bytes\": {},\n  \"leakage_worst\": {:.4},\n  \"leakage_bound\": {LEAKAGE_BOUND},\n  \"serial_events_per_sec\": {:.1},\n  \"sharded_events_per_sec\": {:.1},\n  \"fleet_events_per_sec\": {:.1}\n}}\n",
+        trace.len(),
+        serial.replay.total_refused(),
+        serial.metrics.rejected,
+        serial.metrics.backpressured,
+        serial.metrics.denied_ops,
+        serial.replay.foreign_bytes,
+        leak,
+        serial.events_per_sec,
+        sharded.events_per_sec,
+        fleet.events_per_sec
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_isolation.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}:\n{json}", out.display()),
+        Err(e) => check(&format!("write {} ({e})", out.display()), false),
+    }
+    finish();
+}

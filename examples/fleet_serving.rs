@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     // machinery migration replays (allocate → program → wire, rollback
     // on failure).
     let chain = TenancyBuilder::new("fpu-chain").region("fpu").region("aes").stream(0, 1).plan()?;
-    let chained = fleet.deploy_tenancy("fpu-chain", chain.migration())?;
+    let chained = fleet.deploy_tenancy(&chain)?;
     fleet.advance_clocks(20_000.0)?;
     let resp = fleet.submit(chained, Arc::clone(&payload))?;
     println!("\nstreaming tenancy: path {:?} on device {}", resp.response.path, resp.device);

@@ -83,8 +83,13 @@ impl ServingBackend for SerialBackend {
     fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef> {
         let mut guard = self.sys.lock().expect("serial system poisoned");
         let sys = guard.as_mut().ok_or_else(|| anyhow::anyhow!("engine stopped"))?;
-        let (vi, _) =
-            replay_plan(&mut SystemTarget { sys }, plan.migration(), plan.name(), None)?;
+        let (vi, _) = replay_plan(
+            &mut SystemTarget { sys },
+            plan.migration(),
+            plan.name(),
+            None,
+            plan.attestation(),
+        )?;
         Ok(TenantRef::Vi(vi))
     }
 
@@ -153,7 +158,8 @@ impl ServingBackend for ShardedEngine {
     fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef> {
         let handle = self.handle();
         let mut target = HandleTarget { handle: &handle, topo: self.topology() };
-        let (vi, _) = replay_plan(&mut target, plan.migration(), plan.name(), None)?;
+        let (vi, _) =
+            replay_plan(&mut target, plan.migration(), plan.name(), None, plan.attestation())?;
         Ok(TenantRef::Vi(vi))
     }
 
@@ -187,7 +193,7 @@ impl ServingBackend for FleetCluster {
     }
 
     fn deploy(&self, plan: &TenancyPlan) -> Result<TenantRef> {
-        Ok(TenantRef::Tenant(self.deploy_tenancy(plan.name(), plan.migration())?))
+        Ok(TenantRef::Tenant(self.deploy_tenancy(plan)?))
     }
 
     fn session(&self, tenant: TenantRef) -> Result<Session> {

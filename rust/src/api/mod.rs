@@ -41,7 +41,7 @@ mod backends;
 mod plan;
 
 pub use backends::SerialBackend;
-pub use plan::{TenancyBuilder, TenancyPlan, DEPLOY_SETTLE_US};
+pub use plan::{Attestation, AttestationKey, TenancyBuilder, TenancyPlan, DEPLOY_SETTLE_US};
 pub(crate) use plan::{replay_plan, PlanTarget};
 
 use crate::coordinator::metrics::Metrics;

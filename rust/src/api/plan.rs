@@ -16,6 +16,149 @@
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome, MigrationPlan, RegionPlan};
 use anyhow::{bail, ensure, Result};
 
+/// Seed of the deployment's provisioning key — the shared secret between
+/// the tenant-side provisioning client and the hypervisor's control
+/// plane (the "trusted authority" of the cryptographically-secure
+/// provisioning scheme this models). [`TenancyBuilder::plan`] seals
+/// every plan with it, and [`replay_plan`] verifies against it before a
+/// single resource is touched. An attacker who re-signs a tampered plan
+/// with any other key ([`AttestationKey::from_seed`]) is refused.
+const PLATFORM_KEY_SEED: u64 = 0x5EA1_ED00_C0DE_F00D;
+
+/// A keyed-MAC signing key for tenancy-plan attestation.
+///
+/// The MAC is a hand-rolled 128-bit keyed hash (splitmix64-mixed sponge
+/// over the canonical plan encoding, key absorbed as both prefix and
+/// suffix) standing in for HMAC-SHA256 — the offline build carries no
+/// crypto crate; see DESIGN.md § substitutions. It is deterministic and
+/// tamper-evident, which is all the isolation gates need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttestationKey {
+    words: [u64; 4],
+}
+
+/// One round of splitmix64 — the mixer both the key schedule and the
+/// MAC sponge use.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl AttestationKey {
+    /// Derive a key from a seed (splitmix64 expansion). The platform's
+    /// own key comes from a fixed deployment secret; any other seed
+    /// models an attacker signing with a key the hypervisor never
+    /// provisioned.
+    pub fn from_seed(seed: u64) -> AttestationKey {
+        let mut words = [0u64; 4];
+        let mut s = seed;
+        for w in &mut words {
+            s = splitmix64(s);
+            *w = s;
+        }
+        AttestationKey { words }
+    }
+
+    /// The deployment's provisioning key — what [`TenancyBuilder::plan`]
+    /// seals with and [`replay_plan`] verifies against. Crate-internal:
+    /// the control plane (fleet migration/growth replays) re-attests its
+    /// own shadow-exported plans with it.
+    pub(crate) fn platform() -> AttestationKey {
+        AttestationKey::from_seed(PLATFORM_KEY_SEED)
+    }
+
+    /// Compute the keyed MAC over the canonical encoding of
+    /// `(name, plan)`.
+    pub fn seal(&self, name: &str, plan: &MigrationPlan) -> Attestation {
+        let bytes = canonical_plan_bytes(name, plan);
+        // Two-lane sponge: absorb the key, then the message (8 bytes per
+        // round, length-prefixed by the encoding), then the key again so
+        // a truncation or extension of the encoding cannot keep the tag.
+        let mut lanes = [self.words[0] ^ 0xA11C_E000_0000_0001, self.words[1] ^ 0x0B0B_5000_0000_0002];
+        let mut absorb = |lanes: &mut [u64; 2], word: u64| {
+            lanes[0] = splitmix64(lanes[0] ^ word);
+            lanes[1] = splitmix64(lanes[1].rotate_left(17) ^ word.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        };
+        for chunk in bytes.chunks(8) {
+            let mut word = [0u8; 8];
+            word[..chunk.len()].copy_from_slice(chunk);
+            absorb(&mut lanes, u64::from_le_bytes(word));
+        }
+        absorb(&mut lanes, bytes.len() as u64);
+        absorb(&mut lanes, self.words[2]);
+        absorb(&mut lanes, self.words[3]);
+        Attestation { tag: [splitmix64(lanes[0] ^ lanes[1]), splitmix64(lanes[1] ^ lanes[0].rotate_left(32))] }
+    }
+}
+
+/// A keyed MAC over the canonical encoding of a tenancy plan: the proof
+/// a [`TenancyPlan`] presents that it was produced (and not altered
+/// since) by a holder of the deployment's provisioning key.
+/// [`replay_plan`] refuses a plan whose tag does not verify — on every
+/// backend, before any resource is touched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Attestation {
+    tag: [u64; 2],
+}
+
+impl Attestation {
+    /// The 128-bit tag as hex, for logs and bench JSON.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.tag[0], self.tag[1])
+    }
+}
+
+/// Canonical byte encoding of `(name, plan)` the MAC covers: every field
+/// length-prefixed so no two distinct plans share an encoding (a design
+/// rename, a dropped region, or a rerouted stream edge all change the
+/// bytes and therefore the tag).
+fn canonical_plan_bytes(name: &str, plan: &MigrationPlan) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + name.len() + plan.len() * 16);
+    out.extend_from_slice(&(name.len() as u64).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(&(plan.regions.len() as u64).to_le_bytes());
+    for region in &plan.regions {
+        match &region.design {
+            Some(design) => {
+                out.push(1);
+                out.extend_from_slice(&(design.len() as u64).to_le_bytes());
+                out.extend_from_slice(design.as_bytes());
+            }
+            None => out.push(0),
+        }
+        match region.streams_to {
+            Some(dst) => {
+                out.push(1);
+                out.extend_from_slice(&(dst as u64).to_le_bytes());
+            }
+            None => out.push(0),
+        }
+    }
+    out
+}
+
+/// Verify `attestation` covers `(name, plan)` under the platform
+/// provisioning key. `None` (an unattested plan) and a mismatched tag
+/// (tampered content or a foreign signing key) are both refusals —
+/// the single gate [`replay_plan`] runs on every [`PlanTarget`].
+pub(crate) fn verify_attestation(
+    name: &str,
+    plan: &MigrationPlan,
+    attestation: Option<&Attestation>,
+) -> Result<()> {
+    let Some(att) = attestation else {
+        bail!("tenancy plan '{name}' refused: unattested (no provisioning signature)");
+    };
+    ensure!(
+        AttestationKey::platform().seal(name, plan) == *att,
+        "tenancy plan '{name}' refused: attestation does not verify \
+         (plan tampered after sealing, or signed with a foreign key)"
+    );
+    Ok(())
+}
+
 /// Modeled settle time (µs) a deployment waits before wiring direct
 /// links or rolling back: the programming windows the plan's `Program`
 /// ops opened must elapse first, because the control plane refuses
@@ -109,7 +252,9 @@ impl TenancyBuilder {
                 );
             }
         }
-        Ok(TenancyPlan { name: self.name, plan: MigrationPlan { regions: self.regions } })
+        let plan = MigrationPlan { regions: self.regions };
+        let attestation = AttestationKey::platform().seal(&self.name, &plan);
+        Ok(TenancyPlan { name: self.name, plan, attestation: Some(attestation) })
     }
 }
 
@@ -122,6 +267,7 @@ impl TenancyBuilder {
 pub struct TenancyPlan {
     name: String,
     plan: MigrationPlan,
+    attestation: Option<Attestation>,
 }
 
 impl TenancyPlan {
@@ -138,6 +284,31 @@ impl TenancyPlan {
     /// The underlying device-independent migration plan.
     pub fn migration(&self) -> &MigrationPlan {
         &self.plan
+    }
+
+    /// The plan's provisioning signature, if it carries one.
+    /// [`TenancyBuilder::plan`] always seals with the platform key;
+    /// `None` only arises from [`TenancyPlan::with_attestation`] — the
+    /// red-team's unattested-plan case.
+    pub fn attestation(&self) -> Option<&Attestation> {
+        self.attestation.as_ref()
+    }
+
+    /// Re-sign the plan with `key`. Signing with any key other than the
+    /// deployment's provisioning key models a forged signature:
+    /// [`replay_plan`] will refuse the plan on every backend.
+    pub fn attest(mut self, key: &AttestationKey) -> TenancyPlan {
+        self.attestation = Some(key.seal(&self.name, &self.plan));
+        self
+    }
+
+    /// Replace the plan's signature wholesale — `None` strips it
+    /// (unattested), `Some` splices an arbitrary tag in (tampered).
+    /// Red-team surface: lets a test present exactly the plan a hostile
+    /// client would.
+    pub fn with_attestation(mut self, attestation: Option<Attestation>) -> TenancyPlan {
+        self.attestation = attestation;
+        self
     }
 }
 
@@ -187,6 +358,12 @@ fn rollback(target: &mut dyn PlanTarget, created_here: bool, vi: u16, vrs: &[usi
 /// ([`FleetScheduler::deploy_tenancy`] and the migration replay), so a
 /// rollback bug cannot exist in one path and not the others.
 ///
+/// The first step on every target is attestation: the plan must carry a
+/// provisioning signature that verifies under the platform key, or the
+/// replay refuses it before creating, allocating, or programming
+/// anything. Internal control-plane replays (migration, growth) re-seal
+/// the plans they export from their own shadow state.
+///
 /// [`ServingBackend::deploy`]: crate::api::ServingBackend::deploy
 /// [`FleetScheduler::deploy_tenancy`]: crate::fleet::FleetScheduler::deploy_tenancy
 pub(crate) fn replay_plan(
@@ -194,7 +371,9 @@ pub(crate) fn replay_plan(
     plan: &MigrationPlan,
     name: &str,
     vi: Option<u16>,
+    attestation: Option<&Attestation>,
 ) -> Result<(u16, Vec<usize>)> {
+    verify_attestation(name, plan, attestation)?;
     let created_here = vi.is_none();
     let vi = match vi {
         Some(vi) => vi,
@@ -292,5 +471,52 @@ mod tests {
         let plan = TenancyBuilder::new("r").region("fft").reserve().plan().unwrap();
         assert_eq!(plan.regions(), 2);
         assert_eq!(plan.migration().regions[1].design, None);
+    }
+
+    #[test]
+    fn builder_plans_are_sealed_and_verify() {
+        let plan = TenancyBuilder::new("att").region("fir").plan().unwrap();
+        let att = plan.attestation().expect("builder seals every plan");
+        assert_eq!(att.hex().len(), 32, "128-bit tag");
+        verify_attestation(plan.name(), plan.migration(), plan.attestation())
+            .expect("platform-sealed plan verifies");
+        // Sealing is deterministic: the same description yields the same tag.
+        let again = TenancyBuilder::new("att").region("fir").plan().unwrap();
+        assert_eq!(plan.attestation(), again.attestation());
+    }
+
+    #[test]
+    fn attestation_rejects_unattested_tampered_and_foreign_keys() {
+        let plan = TenancyBuilder::new("vic").region("fpu").region("aes").stream(0, 1).plan().unwrap();
+        // Stripped signature: refused as unattested.
+        let stripped = plan.clone().with_attestation(None);
+        let err = verify_attestation(stripped.name(), stripped.migration(), stripped.attestation())
+            .unwrap_err();
+        assert!(err.to_string().contains("unattested"), "got: {err}");
+        // Tag spliced from a *different* plan: content no longer matches.
+        let other = TenancyBuilder::new("vic").region("fpu").region("canny").stream(0, 1).plan().unwrap();
+        let spliced = plan.clone().with_attestation(other.attestation().copied());
+        let err = verify_attestation(spliced.name(), spliced.migration(), spliced.attestation())
+            .unwrap_err();
+        assert!(err.to_string().contains("does not verify"), "got: {err}");
+        // Re-signed under a key the platform never provisioned.
+        let forged = plan.clone().attest(&AttestationKey::from_seed(0xDEAD_BEEF));
+        assert!(verify_attestation(forged.name(), forged.migration(), forged.attestation()).is_err());
+        // A rename invalidates the tag too: the name is inside the MAC.
+        assert!(verify_attestation("other-name", plan.migration(), plan.attestation()).is_err());
+        // And the genuine article still passes.
+        verify_attestation(plan.name(), plan.migration(), plan.attestation()).unwrap();
+    }
+
+    #[test]
+    fn canonical_encoding_separates_field_boundaries() {
+        // Length prefixes keep (name="ab", design="c") distinct from
+        // (name="a", design="bc") and reserved-vs-programmed distinct.
+        let a = TenancyBuilder::new("ab").region("fir").plan().unwrap();
+        let b = TenancyBuilder::new("a").region("fir").plan().unwrap();
+        assert_ne!(a.attestation(), b.attestation());
+        let wired = TenancyBuilder::new("w").region("fpu").region("aes").stream(0, 1).plan().unwrap();
+        let unwired = TenancyBuilder::new("w").region("fpu").region("aes").plan().unwrap();
+        assert_ne!(wired.attestation(), unwired.attestation());
     }
 }

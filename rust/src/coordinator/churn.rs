@@ -72,8 +72,9 @@ pub struct Replay {
     pub outcomes: Vec<Result<LifecycleOutcome>>,
 }
 
-/// The Table I design pool tenants deploy from.
-const DESIGNS: [&str; 6] = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
+/// The Table I design pool tenants deploy from (shared with the
+/// red-team generator, whose hostile tenants squat with the same pool).
+pub(crate) const DESIGNS: [&str; 6] = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
 
 /// Per-tenant bookkeeping inside the generator's shadow world.
 struct Tenant {

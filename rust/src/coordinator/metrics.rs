@@ -38,6 +38,15 @@ pub struct Metrics {
     /// Requests refused at admission because the target VR's
     /// reconfiguration backlog was full (bounded backpressure).
     pub backpressured: u64,
+    /// Lifecycle operations the control plane refused (bad ownership,
+    /// non-adjacent wiring, exhausted pool, open reconfiguration
+    /// window, ...). Counted at the engine's lifecycle entry point on
+    /// every backend, so a hostile control-plane op lands in the same
+    /// counter at the same trace position whether the trace replays on
+    /// the serial system, the sharded engine, or a fleet device — the
+    /// red-team conformance gate (`rust/tests/isolation.rs`) depends on
+    /// that.
+    pub denied_ops: u64,
     /// Batched submissions accepted: each non-empty [`submit_batch`]
     /// arrival slice handed to a dispatcher in one message counts once,
     /// regardless of how many requests it carries (empty slices are a
@@ -88,6 +97,7 @@ impl Metrics {
         self.requests += other.requests;
         self.rejected += other.rejected;
         self.backpressured += other.backpressured;
+        self.denied_ops += other.denied_ops;
         self.batches += other.batches;
         self.io_us.merge(&other.io_us);
         self.compute_us.merge(&other.compute_us);

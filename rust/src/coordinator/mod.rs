@@ -23,6 +23,7 @@
 
 pub mod churn;
 pub mod metrics;
+pub mod redteam;
 pub mod server;
 pub mod shard;
 pub mod sharded;
@@ -298,14 +299,24 @@ impl System {
     /// sharded engine uses it to rebuild exactly the affected shards
     /// ([`sharded::ShardedEngine`]).
     pub fn lifecycle(&mut self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
-        apply_lifecycle(
+        match apply_lifecycle(
             &mut self.hv,
             &mut self.core.timing,
             &self.runtime,
             &mut self.core.noc,
             op,
-        )
-        .map(|(outcome, _)| outcome)
+        ) {
+            Ok((outcome, _)) => Ok(outcome),
+            Err(e) => {
+                // Refused control-plane ops are part of the isolation
+                // story: a hostile tenant probing the lifecycle surface
+                // must land in the same counter on every backend (the
+                // sharded dispatcher counts its `Ctl` refusals the same
+                // way).
+                self.metrics.denied_ops += 1;
+                Err(e)
+            }
+        }
     }
 
     /// The design programmed in a VR, if any.

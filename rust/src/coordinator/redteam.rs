@@ -1,0 +1,950 @@
+//! Seeded hostile-tenant workload generator + the attack-surface replay.
+//!
+//! [`churn`](super::churn) models the paper's *cooperative* population:
+//! tenants arrive, grow, shrink, and depart, and every recorded op is
+//! legal. This module models the population the multi-tenancy argument
+//! actually has to survive — tenants that probe the isolation boundary
+//! on purpose. A [`RedteamEvent`] trace interleaves ordinary lifecycle
+//! churn with six attack classes ([`AttackClass`]), each aimed at a
+//! specific enforcement point:
+//!
+//! | attack | enforcement point |
+//! |---|---|
+//! | [`ForeignProbe`](AttackClass::ForeignProbe) | per-VR access monitor (`check_access`) |
+//! | [`StaleTicket`](AttackClass::StaleTicket) | lifecycle-epoch staleness guard |
+//! | [`RegionSquat`](AttackClass::RegionSquat) | hypervisor ownership precheck |
+//! | [`RogueWire`](AttackClass::RogueWire) | wiring ownership precheck |
+//! | [`EdgeOversubscribe`](AttackClass::EdgeOversubscribe) | direct-link adjacency precheck |
+//! | [`IngressFlood`](AttackClass::IngressFlood) | bounded reconfiguration backlog |
+//!
+//! The generator runs the same shadow hypervisor as the churn generator
+//! (so recorded indices match what a replaying engine allocates), keeps
+//! every *cooperative* op legal — including advancing the modeled clock
+//! past open reconfiguration windows before window-gated ops — and
+//! constructs every *attack* so the control plane must refuse it. A
+//! deterministic epilogue guarantees each class appears at least once
+//! regardless of seed.
+//!
+//! [`replay`] drives a trace through any [`AttackSurface`] — the serial
+//! backend, the sharded engine, or a fleet device — producing a
+//! canonical per-event log. The isolation gate
+//! (`rust/tests/isolation.rs`) requires the log to be byte-identical
+//! across all three backends, every attack to be refused, and zero
+//! foreign bytes to be delivered.
+
+use super::{design_footprint, Response, ShardedEngine};
+use crate::api::{SerialBackend, DEPLOY_SETTLE_US};
+use crate::device::Device;
+use crate::fleet::FleetCluster;
+use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy};
+use crate::noc::NocSim;
+use crate::placer::case_study_floorplan;
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// The attack classes the red-team generator emits. Order is the tally
+/// index order ([`RedteamReplay::tally`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttackClass {
+    /// Submit a request to a region another tenant owns.
+    ForeignProbe,
+    /// Replay an epoch ticket captured before the region's lifecycle
+    /// moved on (a revoked capability).
+    StaleTicket,
+    /// Program a region another tenant just released, without ever
+    /// being allocated it.
+    RegionSquat,
+    /// Wire a direct streaming link whose source the attacker does not
+    /// hold.
+    RogueWire,
+    /// Wire a direct link between two held but non-adjacent regions
+    /// (claiming streaming capacity the fabric does not have).
+    EdgeOversubscribe,
+    /// Flood a reconfiguring region's ingress past the bounded backlog.
+    IngressFlood,
+}
+
+impl AttackClass {
+    /// Every class, in tally-index order.
+    pub const ALL: [AttackClass; 6] = [
+        AttackClass::ForeignProbe,
+        AttackClass::StaleTicket,
+        AttackClass::RegionSquat,
+        AttackClass::RogueWire,
+        AttackClass::EdgeOversubscribe,
+        AttackClass::IngressFlood,
+    ];
+
+    /// Stable kebab-case label (log lines, bench JSON keys).
+    pub fn label(self) -> &'static str {
+        match self {
+            AttackClass::ForeignProbe => "foreign-probe",
+            AttackClass::StaleTicket => "stale-ticket",
+            AttackClass::RegionSquat => "region-squat",
+            AttackClass::RogueWire => "rogue-wire",
+            AttackClass::EdgeOversubscribe => "edge-oversubscribe",
+            AttackClass::IngressFlood => "ingress-flood",
+        }
+    }
+}
+
+/// The concrete hostile action an [`RedteamEvent::Attack`] carries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttackAction {
+    /// A hostile control-plane op (squatting, rogue wiring, ...).
+    Op(LifecycleOp),
+    /// A hostile request (foreign probe, stale ticket, flood traffic).
+    Request {
+        /// VI the attacker claims.
+        vi: u16,
+        /// Target VR.
+        vr: usize,
+        /// Epoch ticket presented, if the attack replays one.
+        epoch: Option<u64>,
+        /// Request payload, shared zero-copy across replays.
+        payload: Arc<[u8]>,
+    },
+}
+
+/// One event of a red-team trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RedteamEvent {
+    /// A cooperative lifecycle op (always legal at its trace position).
+    Op(LifecycleOp),
+    /// Advance the modeled arrival clock (µs) — tenants waiting out
+    /// their own reconfiguration windows, exactly like a deployment's
+    /// settle phase.
+    Advance(f64),
+    /// A cooperative serving request from a region's rightful owner.
+    Request {
+        /// Requesting (owning) VI.
+        vi: u16,
+        /// Target VR.
+        vr: usize,
+        /// Request payload, shared zero-copy across replays.
+        payload: Arc<[u8]>,
+    },
+    /// A hostile action the control plane must refuse (except
+    /// [`AttackClass::IngressFlood`], whose head-of-burst traffic is
+    /// admitted and whose tail must be backpressured).
+    Attack {
+        /// Which boundary the action attacks.
+        class: AttackClass,
+        /// The concrete hostile op or request.
+        action: AttackAction,
+    },
+}
+
+/// Red-team generator configuration.
+#[derive(Debug, Clone)]
+pub struct RedteamConfig {
+    /// RNG seed; the same seed always yields the same trace.
+    pub seed: u64,
+    /// Minimum number of main-loop events to generate (the coverage
+    /// epilogue then appends a few dozen more; traces are never
+    /// truncated, so the shadow bookkeeping stays exact).
+    pub events: usize,
+    /// Probability that an eligible step injects an attack instead of
+    /// cooperative churn.
+    pub attack_rate: f64,
+}
+
+impl Default for RedteamConfig {
+    fn default() -> Self {
+        RedteamConfig { seed: 0xBAD_5EED, events: 300, attack_rate: 0.35 }
+    }
+}
+
+/// Per-class outcome counters of one replay.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassTally {
+    /// Attack events of this class in the trace.
+    pub attempts: u64,
+    /// Attempts the control plane refused (error outcome).
+    pub refused: u64,
+}
+
+/// Result of replaying a red-team trace through one [`AttackSurface`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RedteamReplay {
+    /// Canonical per-event log: one line per trace event, including
+    /// outcome and error strings. Byte-identical across backends is the
+    /// conformance gate.
+    pub log: Vec<String>,
+    /// Per-class attack tallies, indexed like [`AttackClass::ALL`].
+    pub tallies: [ClassTally; 6],
+    /// Payload bytes delivered to attack requests that should never
+    /// serve (every class except the flood's legitimately-owned
+    /// traffic). The isolation gate requires exactly zero.
+    pub foreign_bytes: u64,
+    /// Cooperative ops the surface refused — zero by construction of
+    /// the generator; nonzero means the trace and the engine disagree
+    /// about legality.
+    pub coop_op_failures: u64,
+}
+
+impl RedteamReplay {
+    /// Tally for one attack class.
+    pub fn tally(&self, class: AttackClass) -> ClassTally {
+        self.tallies[class as usize]
+    }
+
+    /// Whether every attack class appears in the trace at least once.
+    pub fn all_classes_attempted(&self) -> bool {
+        self.tallies.iter().all(|t| t.attempts > 0)
+    }
+
+    /// Total refused attack attempts across every class.
+    pub fn total_refused(&self) -> u64 {
+        self.tallies.iter().map(|t| t.refused).sum()
+    }
+}
+
+/// The uniform surface a red-team trace replays against: lifecycle ops,
+/// epoch-scoped submission, and modeled idle time, on any backend.
+/// Implemented by [`SerialBackend`], [`ShardedEngine`], and
+/// [`FleetCluster`] (single-device fleets drive device 0), so one trace
+/// exercises the same enforcement points on all three.
+pub trait AttackSurface {
+    /// Backend label for logs and bench JSON.
+    fn surface_label(&self) -> &'static str;
+    /// Apply one lifecycle op at this call's position in the surface's
+    /// message order.
+    fn apply_op(&self, op: &LifecycleOp) -> Result<LifecycleOutcome>;
+    /// Submit one request, optionally pinned to an epoch ticket.
+    fn submit(&self, vi: u16, vr: usize, epoch: Option<u64>, payload: &Arc<[u8]>)
+        -> Result<Response>;
+    /// Advance the surface's modeled arrival clock by `dur_us`.
+    fn advance(&self, dur_us: f64) -> Result<()>;
+}
+
+impl AttackSurface for SerialBackend {
+    fn surface_label(&self) -> &'static str {
+        "serial"
+    }
+
+    fn apply_op(&self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        self.with_system(|sys| sys.lifecycle(op))
+    }
+
+    fn submit(
+        &self,
+        vi: u16,
+        vr: usize,
+        epoch: Option<u64>,
+        payload: &Arc<[u8]>,
+    ) -> Result<Response> {
+        self.with_system(|sys| sys.submit_expect(vi, vr, epoch, payload))
+    }
+
+    fn advance(&self, dur_us: f64) -> Result<()> {
+        self.with_system(|sys| sys.core.timing.advance_clock(dur_us));
+        Ok(())
+    }
+}
+
+impl AttackSurface for ShardedEngine {
+    fn surface_label(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn apply_op(&self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        self.handle().lifecycle(op.clone())
+    }
+
+    fn submit(
+        &self,
+        vi: u16,
+        vr: usize,
+        epoch: Option<u64>,
+        payload: &Arc<[u8]>,
+    ) -> Result<Response> {
+        self.handle()
+            .call_async(vi, vr, epoch, Arc::clone(payload))?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request"))?
+    }
+
+    fn advance(&self, dur_us: f64) -> Result<()> {
+        self.handle().advance_clock(dur_us)
+    }
+}
+
+impl AttackSurface for FleetCluster {
+    fn surface_label(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn apply_op(&self, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        // Device 0: red-team conformance runs single-device fleets, so
+        // the same trace lands on the same engine state as the
+        // engine-level surfaces.
+        self.apply_on(0, op)
+    }
+
+    fn submit(
+        &self,
+        vi: u16,
+        vr: usize,
+        epoch: Option<u64>,
+        payload: &Arc<[u8]>,
+    ) -> Result<Response> {
+        self.device_handles()[0]
+            .call_async(vi, vr, epoch, Arc::clone(payload))?
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request"))?
+    }
+
+    fn advance(&self, dur_us: f64) -> Result<()> {
+        self.advance_clocks(dur_us)
+    }
+}
+
+/// Per-tenant bookkeeping inside the generator's shadow world.
+struct Tenant {
+    vi: u16,
+    /// Held regions in deployment order (`(vr, design)`).
+    regions: Vec<(usize, String)>,
+}
+
+/// Shadow world the generator scripts against: the same empty
+/// case-study deployment every replaying engine starts from.
+struct Shadow {
+    hv: Hypervisor,
+    noc: NocSim,
+}
+
+impl Shadow {
+    fn new() -> Shadow {
+        let device = Device::vu9p();
+        let (topo, fp) = case_study_floorplan(&device).expect("case-study floorplan");
+        let noc = NocSim::new(topo.clone());
+        let hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        Shadow { hv, noc }
+    }
+
+    /// Record a cooperative op: apply to the shadow (it must be legal)
+    /// and append it to the trace.
+    fn coop(&mut self, events: &mut Vec<RedteamEvent>, op: LifecycleOp) -> LifecycleOutcome {
+        let (outcome, _) = self
+            .hv
+            .apply(&op, &design_footprint, &mut self.noc)
+            .unwrap_or_else(|e| panic!("generator scripted an illegal coop op {op:?}: {e}"));
+        events.push(RedteamEvent::Op(op));
+        outcome
+    }
+
+    /// Current lifecycle epoch of a VR.
+    fn epoch(&self, vr: usize) -> u64 {
+        self.hv.vrs[vr].epoch
+    }
+
+    /// First non-adjacent pair among `vrs` (the adjacency graph is
+    /// triangle-free, so any three held regions contain one).
+    fn non_adjacent_pair(&self, vrs: &[usize]) -> Option<(usize, usize)> {
+        for (i, &a) in vrs.iter().enumerate() {
+            for &b in &vrs[i + 1..] {
+                if !self.hv.topo.vrs_adjacent(a, b) {
+                    return Some((a, b));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Seeded random payload, same idiom as the churn generator.
+fn payload(rng: &mut Rng) -> Arc<[u8]> {
+    let len = 16 + rng.index(240);
+    let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+    Arc::from(bytes)
+}
+
+/// Emit `n` cooperative requests from `vi` to its region `vr`.
+fn coop_burst(events: &mut Vec<RedteamEvent>, rng: &mut Rng, vi: u16, vr: usize, n: usize) {
+    for _ in 0..n {
+        events.push(RedteamEvent::Request { vi, vr, payload: payload(rng) });
+    }
+}
+
+/// Generate a seeded hostile-tenant trace over the case-study
+/// floorplan: cooperative churn (arrivals, growth, departures, serving
+/// bursts) interleaved with attacks, plus a deterministic epilogue that
+/// covers every [`AttackClass`] at least once. The same seed always
+/// yields the same trace; replaying it from the empty deployment is
+/// legal for every cooperative op and refused for every attack.
+pub fn generate(cfg: &RedteamConfig) -> Vec<RedteamEvent> {
+    let mut shadow = Shadow::new();
+    let mut rng = Rng::new(cfg.seed);
+    let mut events: Vec<RedteamEvent> = Vec::with_capacity(cfg.events + 64);
+    let mut tenants: Vec<Tenant> = Vec::new();
+    let mut arrivals = 0u64;
+    let designs = super::churn::DESIGNS;
+
+    let mut fuel = cfg.events * 12 + 200;
+    while events.len() < cfg.events && fuel > 0 {
+        fuel -= 1;
+        let roll = rng.next_f64();
+        let attack_roll = rng.next_f64();
+        if (tenants.is_empty() || roll < 0.20) && shadow.hv.free_vrs() > 0 {
+            // --- cooperative arrival: create a VI, deploy one region ---
+            arrivals += 1;
+            let design = designs[rng.index(designs.len())].to_string();
+            let vi = match shadow
+                .coop(&mut events, LifecycleOp::CreateVi { name: format!("tenant-{arrivals}") })
+            {
+                LifecycleOutcome::Vi(vi) => vi,
+                other => unreachable!("CreateVi yields Vi, got {other:?}"),
+            };
+            let vr = match shadow.coop(&mut events, LifecycleOp::Allocate { vi }) {
+                LifecycleOutcome::Vr(vr) => vr,
+                other => unreachable!("free pool checked, got {other:?}"),
+            };
+            shadow.coop(
+                &mut events,
+                LifecycleOp::Program { vi, vr, design: design.clone(), dest: None },
+            );
+            tenants.push(Tenant { vi, regions: vec![(vr, design)] });
+            if rng.chance(0.7) {
+                // Small burst inside the fresh window: queued admissions,
+                // never past the backlog (floods are attack events).
+                let n = 1 + rng.index(5);
+                coop_burst(&mut events, &mut rng, vi, vr, n);
+            }
+        } else if attack_roll < cfg.attack_rate && !tenants.is_empty() {
+            // --- attack injection: pick a class, skip if infeasible ---
+            let class = AttackClass::ALL[rng.index(AttackClass::ALL.len())];
+            inject_attack(&mut shadow, &mut events, &mut rng, &mut tenants, class);
+        } else if roll < 0.32 && !tenants.is_empty() && shadow.hv.free_vrs() > 0 {
+            // --- cooperative growth, sometimes streaming ---
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            let design = designs[rng.index(designs.len())].to_string();
+            let stream_src = if rng.chance(0.5) { Some(tenants[t].regions[0].0) } else { None };
+            // Close any open windows first so the window-gated Grow is
+            // legal on the replaying engines (the shadow has no clock).
+            events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+            let grown = shadow
+                .coop(&mut events, LifecycleOp::Grow { vi, stream_src, design: design.clone() });
+            if let LifecycleOutcome::Vr(vr) = grown {
+                tenants[t].regions.push((vr, design));
+            }
+        } else if roll < 0.42 && !tenants.is_empty() {
+            // --- cooperative shrink or departure ---
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+            if rng.chance(0.35) {
+                while let Some((vr, _)) = tenants[t].regions.pop() {
+                    shadow.coop(&mut events, LifecycleOp::Release { vi, vr });
+                }
+                tenants.remove(t);
+            } else {
+                let (vr, _) = tenants[t].regions.pop().expect("tenants hold >= 1 region");
+                shadow.coop(&mut events, LifecycleOp::Release { vi, vr });
+                if tenants[t].regions.is_empty() {
+                    tenants.remove(t);
+                }
+            }
+        } else if !tenants.is_empty() {
+            // --- cooperative serving burst ---
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            let vr = tenants[t].regions[rng.index(tenants[t].regions.len())].0;
+            let n = 1 + rng.index(6);
+            coop_burst(&mut events, &mut rng, vi, vr, n);
+        }
+    }
+
+    epilogue(&mut shadow, &mut events, &mut rng, &mut tenants);
+    events
+}
+
+/// Inject one attack of `class` into the trace, if the shadow world
+/// currently offers the preconditions; a miss is silently skipped (the
+/// epilogue guarantees coverage).
+fn inject_attack(
+    shadow: &mut Shadow,
+    events: &mut Vec<RedteamEvent>,
+    rng: &mut Rng,
+    tenants: &mut Vec<Tenant>,
+    class: AttackClass,
+) {
+    match class {
+        AttackClass::ForeignProbe => {
+            // A VI that is not the owner probes a programmed region.
+            let t = rng.index(tenants.len());
+            let vr = tenants[t].regions[rng.index(tenants[t].regions.len())].0;
+            let attacker = if tenants.len() > 1 {
+                let mut a = rng.index(tenants.len());
+                if a == t {
+                    a = (a + 1) % tenants.len();
+                }
+                tenants[a].vi
+            } else {
+                tenants[t].vi + 101 // nobody: guaranteed foreign
+            };
+            events.push(RedteamEvent::Attack {
+                class,
+                action: AttackAction::Request {
+                    vi: attacker,
+                    vr,
+                    epoch: None,
+                    payload: payload(rng),
+                },
+            });
+        }
+        AttackClass::StaleTicket => {
+            // Capture the region's epoch, let the tenant's own growth
+            // retarget it (which bumps the epoch), replay the ticket.
+            if shadow.hv.free_vrs() == 0 {
+                return;
+            }
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            let src = tenants[t].regions[0].0;
+            let old_epoch = shadow.epoch(src);
+            let design = super::churn::DESIGNS[rng.index(6)].to_string();
+            events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+            let grown = shadow.coop(
+                events,
+                LifecycleOp::Grow { vi, stream_src: Some(src), design: design.clone() },
+            );
+            if let LifecycleOutcome::Vr(vr) = grown {
+                tenants[t].regions.push((vr, design));
+            }
+            events.push(RedteamEvent::Attack {
+                class,
+                action: AttackAction::Request {
+                    vi,
+                    vr: src,
+                    epoch: Some(old_epoch),
+                    payload: payload(rng),
+                },
+            });
+        }
+        AttackClass::RegionSquat => {
+            // Another tenant releases a region; the attacker tries to
+            // program it without an allocation.
+            if tenants.len() < 2 {
+                return;
+            }
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+            let (vr, _) = tenants[t].regions.pop().expect("tenants hold >= 1 region");
+            shadow.coop(events, LifecycleOp::Release { vi, vr });
+            if tenants[t].regions.is_empty() {
+                tenants.remove(t);
+            }
+            let attacker = tenants[rng.index(tenants.len())].vi;
+            let design = super::churn::DESIGNS[rng.index(6)].to_string();
+            events.push(RedteamEvent::Attack {
+                class,
+                action: AttackAction::Op(LifecycleOp::Program {
+                    vi: attacker,
+                    vr,
+                    design,
+                    dest: None,
+                }),
+            });
+        }
+        AttackClass::RogueWire => {
+            // Wire a link whose source belongs to someone else.
+            if tenants.len() < 2 {
+                return;
+            }
+            let v = rng.index(tenants.len());
+            let mut a = rng.index(tenants.len());
+            if a == v {
+                a = (a + 1) % tenants.len();
+            }
+            let src = tenants[v].regions[0].0;
+            let dst = tenants[a].regions[0].0;
+            events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+            events.push(RedteamEvent::Attack {
+                class,
+                action: AttackAction::Op(LifecycleOp::Wire { vi: tenants[a].vi, src, dst }),
+            });
+        }
+        AttackClass::EdgeOversubscribe => {
+            // A tenant wires two of its own regions that are not
+            // physically adjacent (the fabric has no such link).
+            let Some(t) = tenants.iter().position(|t| t.regions.len() >= 3) else {
+                return;
+            };
+            let vrs: Vec<usize> = tenants[t].regions.iter().map(|&(vr, _)| vr).collect();
+            let Some((x, y)) = shadow.non_adjacent_pair(&vrs) else { return };
+            events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+            events.push(RedteamEvent::Attack {
+                class,
+                action: AttackAction::Op(LifecycleOp::Wire { vi: tenants[t].vi, src: x, dst: y }),
+            });
+        }
+        AttackClass::IngressFlood => {
+            // Re-program a held region (opening a fresh reconfiguration
+            // window), then flood its ingress past the bounded backlog.
+            let t = rng.index(tenants.len());
+            let vi = tenants[t].vi;
+            let (vr, design) = tenants[t].regions[0].clone();
+            shadow.coop(events, LifecycleOp::Program { vi, vr, design, dest: None });
+            let n = 14 + rng.index(6);
+            for _ in 0..n {
+                events.push(RedteamEvent::Attack {
+                    class,
+                    action: AttackAction::Request {
+                        vi,
+                        vr,
+                        epoch: None,
+                        payload: payload(rng),
+                    },
+                });
+            }
+        }
+    }
+}
+
+/// Deterministic coverage epilogue: clear the device, deploy a fixed
+/// victim + attacker pair, and run one attack of every class in a fixed
+/// order, so every trace gates every enforcement point.
+fn epilogue(
+    shadow: &mut Shadow,
+    events: &mut Vec<RedteamEvent>,
+    rng: &mut Rng,
+    tenants: &mut Vec<Tenant>,
+) {
+    events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+    for t in tenants.drain(..) {
+        shadow.coop(events, LifecycleOp::DestroyVi { vi: t.vi });
+    }
+    events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+
+    // Victim: two regions, streamed where adjacency allows.
+    let vv = match shadow.coop(events, LifecycleOp::CreateVi { name: "victim".into() }) {
+        LifecycleOutcome::Vi(vi) => vi,
+        other => unreachable!("CreateVi yields Vi, got {other:?}"),
+    };
+    let a = match shadow.coop(events, LifecycleOp::Allocate { vi: vv }) {
+        LifecycleOutcome::Vr(vr) => vr,
+        other => unreachable!("empty pool has room, got {other:?}"),
+    };
+    shadow.coop(events, LifecycleOp::Program { vi: vv, vr: a, design: "fpu".into(), dest: None });
+    let b = match shadow.coop(events, LifecycleOp::Allocate { vi: vv }) {
+        LifecycleOutcome::Vr(vr) => vr,
+        other => unreachable!("empty pool has room, got {other:?}"),
+    };
+    shadow.coop(events, LifecycleOp::Program { vi: vv, vr: b, design: "aes".into(), dest: None });
+    if shadow.hv.topo.vrs_adjacent(a, b) {
+        events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+        shadow.coop(events, LifecycleOp::Wire { vi: vv, src: a, dst: b });
+    }
+
+    // Attacker: one region of its own (a real, admitted tenant — the
+    // threat model is a co-located tenant, not an outsider).
+    let av = match shadow.coop(events, LifecycleOp::CreateVi { name: "attacker".into() }) {
+        LifecycleOutcome::Vi(vi) => vi,
+        other => unreachable!("CreateVi yields Vi, got {other:?}"),
+    };
+    let c = match shadow.coop(events, LifecycleOp::Allocate { vi: av }) {
+        LifecycleOutcome::Vr(vr) => vr,
+        other => unreachable!("empty pool has room, got {other:?}"),
+    };
+    shadow.coop(events, LifecycleOp::Program { vi: av, vr: c, design: "fir".into(), dest: None });
+    events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+
+    // 1. Foreign probe: the attacker reads the victim's FPU region.
+    events.push(RedteamEvent::Attack {
+        class: AttackClass::ForeignProbe,
+        action: AttackAction::Request { vi: av, vr: a, epoch: None, payload: payload(rng) },
+    });
+
+    // 2. Stale ticket: capture an epoch, let the victim's own growth
+    //    retarget the region (epoch bump), replay the old ticket.
+    let old_epoch = shadow.epoch(a);
+    let g = match shadow.coop(
+        events,
+        LifecycleOp::Grow { vi: vv, stream_src: Some(a), design: "huffman".into() },
+    ) {
+        LifecycleOutcome::Vr(vr) => vr,
+        other => unreachable!("pool has room after teardown, got {other:?}"),
+    };
+    events.push(RedteamEvent::Attack {
+        class: AttackClass::StaleTicket,
+        action: AttackAction::Request {
+            vi: vv,
+            vr: a,
+            epoch: Some(old_epoch),
+            payload: payload(rng),
+        },
+    });
+
+    // 3. Region squat: the victim releases its grown region; the
+    //    attacker programs the freed region without an allocation.
+    events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+    shadow.coop(events, LifecycleOp::Release { vi: vv, vr: g });
+    events.push(RedteamEvent::Attack {
+        class: AttackClass::RegionSquat,
+        action: AttackAction::Op(LifecycleOp::Program {
+            vi: av,
+            vr: g,
+            design: "canny".into(),
+            dest: None,
+        }),
+    });
+
+    // 4. Rogue wire: the attacker wires a link sourced at the victim's
+    //    region.
+    events.push(RedteamEvent::Attack {
+        class: AttackClass::RogueWire,
+        action: AttackAction::Op(LifecycleOp::Wire { vi: av, src: a, dst: c }),
+    });
+
+    // 5. Edge oversubscribe: grow the victim to three regions; the
+    //    triangle-free adjacency graph guarantees a non-adjacent pair.
+    let g2 = match shadow
+        .coop(events, LifecycleOp::Grow { vi: vv, stream_src: None, design: "fft".into() })
+    {
+        LifecycleOutcome::Vr(vr) => vr,
+        other => unreachable!("pool has room after the squat release, got {other:?}"),
+    };
+    let (x, y) = shadow
+        .non_adjacent_pair(&[a, b, g2])
+        .expect("three regions always contain a non-adjacent pair");
+    events.push(RedteamEvent::Advance(DEPLOY_SETTLE_US));
+    events.push(RedteamEvent::Attack {
+        class: AttackClass::EdgeOversubscribe,
+        action: AttackAction::Op(LifecycleOp::Wire { vi: vv, src: x, dst: y }),
+    });
+
+    // 6. Ingress flood: fill the region's bounded reconfiguration
+    //    backlog, then keep pushing. Interleaving a re-Program with each
+    //    request re-arms the window (an open window extends and keeps
+    //    its queue), so the backlog provably fills regardless of how the
+    //    replay's inter-arrival draws land: after RECONFIG_BACKLOG
+    //    queued requests, every further arrival inside the window is
+    //    backpressured.
+    for _ in 0..10 {
+        shadow.coop(
+            events,
+            LifecycleOp::Program { vi: vv, vr: a, design: "fpu".into(), dest: None },
+        );
+        events.push(RedteamEvent::Attack {
+            class: AttackClass::IngressFlood,
+            action: AttackAction::Request { vi: vv, vr: a, epoch: None, payload: payload(rng) },
+        });
+    }
+    for _ in 0..8 {
+        events.push(RedteamEvent::Attack {
+            class: AttackClass::IngressFlood,
+            action: AttackAction::Request { vi: vv, vr: a, epoch: None, payload: payload(rng) },
+        });
+    }
+}
+
+/// Canonical outcome rendering for the replay log.
+fn fmt_op(outcome: &Result<LifecycleOutcome>) -> String {
+    match outcome {
+        Ok(o) => format!("ok({o:?})"),
+        Err(e) => format!("err({e})"),
+    }
+}
+
+/// Canonical response rendering: only modeled (deterministic) fields —
+/// wall-clock timing would differ across runs and backends.
+fn fmt_req(resp: &Result<Response>) -> String {
+    match resp {
+        Ok(r) => format!("ok(path={:?}, bytes={}, epoch={})", r.path, r.timing.bytes_out, r.epoch),
+        Err(e) => format!("err({e})"),
+    }
+}
+
+/// Replay a red-team trace through one [`AttackSurface`], blocking per
+/// event so the surface observes the trace in exactly the generated
+/// order. Returns the canonical log plus attack tallies; nothing here
+/// asserts — the isolation gate compares replays across backends.
+pub fn replay(surface: &dyn AttackSurface, events: &[RedteamEvent]) -> RedteamReplay {
+    let mut log = Vec::with_capacity(events.len());
+    let mut tallies = [ClassTally::default(); 6];
+    let mut foreign_bytes = 0u64;
+    let mut coop_op_failures = 0u64;
+    for (i, event) in events.iter().enumerate() {
+        let line = match event {
+            RedteamEvent::Op(op) => {
+                let outcome = surface.apply_op(op);
+                if outcome.is_err() {
+                    coop_op_failures += 1;
+                }
+                format!("{i:04} coop-op {op:?} -> {}", fmt_op(&outcome))
+            }
+            RedteamEvent::Advance(dur_us) => {
+                let _ = surface.advance(*dur_us);
+                format!("{i:04} advance {dur_us:.0}us")
+            }
+            RedteamEvent::Request { vi, vr, payload } => {
+                let resp = surface.submit(*vi, *vr, None, payload);
+                format!("{i:04} coop-req vi{vi} vr{vr} -> {}", fmt_req(&resp))
+            }
+            RedteamEvent::Attack { class, action } => {
+                let tally = &mut tallies[*class as usize];
+                tally.attempts += 1;
+                match action {
+                    AttackAction::Op(op) => {
+                        let outcome = surface.apply_op(op);
+                        if outcome.is_err() {
+                            tally.refused += 1;
+                        }
+                        format!("{i:04} attack[{}] op {op:?} -> {}", class.label(), fmt_op(&outcome))
+                    }
+                    AttackAction::Request { vi, vr, epoch, payload } => {
+                        let resp = surface.submit(*vi, *vr, *epoch, payload);
+                        match &resp {
+                            Ok(r) if *class != AttackClass::IngressFlood => {
+                                foreign_bytes += r.timing.bytes_out as u64;
+                            }
+                            Ok(_) => {}
+                            Err(_) => tally.refused += 1,
+                        }
+                        format!(
+                            "{i:04} attack[{}] req vi{vi} vr{vr} epoch{epoch:?} -> {}",
+                            class.label(),
+                            fmt_req(&resp)
+                        )
+                    }
+                }
+            }
+        };
+        log.push(line);
+    }
+    RedteamReplay { log, tallies, foreign_bytes, coop_op_failures }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::System;
+    use crate::hypervisor::VrStatus;
+
+    #[test]
+    fn same_seed_same_trace_and_full_class_coverage() {
+        let cfg = RedteamConfig { seed: 77, events: 250, attack_rate: 0.4 };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b, "trace must be a pure function of the seed");
+        assert_ne!(a, generate(&RedteamConfig { seed: 78, ..cfg.clone() }));
+        assert!(a.len() >= 250);
+        for class in AttackClass::ALL {
+            let n = a
+                .iter()
+                .filter(|e| matches!(e, RedteamEvent::Attack { class: c, .. } if *c == class))
+                .count();
+            assert!(n >= 1, "class {} missing from the trace", class.label());
+        }
+    }
+
+    #[test]
+    fn coop_ops_are_legal_and_attacks_are_doomed_in_the_shadow_world() {
+        // Replay the trace's ops on a fresh shadow hypervisor (what a
+        // replaying engine holds): every cooperative op must apply,
+        // every attack op must be refused, and every attack request
+        // must fail ownership or epoch validation at its position.
+        let trace = generate(&RedteamConfig { seed: 13, events: 300, attack_rate: 0.45 });
+        let mut shadow = Shadow::new();
+        let mut attack_reqs = 0u64;
+        for event in &trace {
+            match event {
+                RedteamEvent::Op(op) => {
+                    shadow
+                        .hv
+                        .apply(op, &design_footprint, &mut shadow.noc)
+                        .unwrap_or_else(|e| panic!("coop op must be legal: {op:?}: {e}"));
+                }
+                RedteamEvent::Advance(_) => {}
+                RedteamEvent::Request { vi, vr, .. } => {
+                    assert!(
+                        matches!(
+                            &shadow.hv.vrs[*vr].status,
+                            VrStatus::Programmed { vi: owner, .. } if owner == vi
+                        ),
+                        "coop request targets VR{vr}, which VI{vi} does not serve"
+                    );
+                }
+                RedteamEvent::Attack { class, action } => match action {
+                    AttackAction::Op(op) => {
+                        assert!(
+                            shadow.hv.apply(op, &design_footprint, &mut shadow.noc).is_err(),
+                            "attack op must be refused: {op:?} ({})",
+                            class.label()
+                        );
+                    }
+                    AttackAction::Request { vi, vr, epoch, .. } => {
+                        attack_reqs += 1;
+                        let owned = matches!(
+                            &shadow.hv.vrs[*vr].status,
+                            VrStatus::Programmed { vi: owner, .. } if owner == vi
+                        );
+                        match class {
+                            AttackClass::ForeignProbe => {
+                                assert!(!owned, "foreign probe must target a foreign region")
+                            }
+                            AttackClass::StaleTicket => {
+                                assert!(owned, "stale tickets replay against one's own region");
+                                assert_ne!(
+                                    *epoch,
+                                    Some(shadow.hv.vrs[*vr].epoch),
+                                    "ticket must be stale at its trace position"
+                                );
+                            }
+                            AttackClass::IngressFlood => {
+                                assert!(owned, "floods use the attacker's own region")
+                            }
+                            other => panic!("unexpected request attack class {other:?}"),
+                        }
+                    }
+                },
+            }
+        }
+        assert!(attack_reqs >= 3, "trace must carry request-borne attacks");
+    }
+
+    #[test]
+    fn attack_rate_zero_is_still_covered_by_the_epilogue() {
+        let trace = generate(&RedteamConfig { seed: 1, events: 60, attack_rate: 0.0 });
+        for class in AttackClass::ALL {
+            assert!(
+                trace
+                    .iter()
+                    .any(|e| matches!(e, RedteamEvent::Attack { class: c, .. } if *c == class)),
+                "epilogue must cover {}",
+                class.label()
+            );
+        }
+    }
+
+    #[test]
+    fn replay_on_the_serial_backend_refuses_every_attack() {
+        let trace = generate(&RedteamConfig { seed: 5, events: 120, attack_rate: 0.4 });
+        let backend = SerialBackend::new(System::empty("artifacts").unwrap());
+        let replay = super::replay(&backend, &trace);
+        assert_eq!(replay.coop_op_failures, 0, "every cooperative op must apply");
+        assert_eq!(replay.foreign_bytes, 0, "no foreign payload may be delivered");
+        assert!(replay.all_classes_attempted());
+        for class in AttackClass::ALL {
+            let t = replay.tally(class);
+            if class == AttackClass::IngressFlood {
+                assert!(
+                    t.refused > 0,
+                    "flood tails must be backpressured ({} attempts)",
+                    t.attempts
+                );
+            } else {
+                assert_eq!(
+                    t.refused,
+                    t.attempts,
+                    "{} must be refused every time",
+                    class.label()
+                );
+            }
+        }
+    }
+}

@@ -341,7 +341,13 @@ impl ShardedEngine {
                         }
                     }
                     Msg::Ctl(CtlRequest { op, reply }) => {
-                        let _ = reply.send(dispatch.handle_ctl(&op));
+                        let outcome = dispatch.handle_ctl(&op);
+                        if outcome.is_err() {
+                            // Mirror `System::lifecycle`: refused ops
+                            // count identically on both engines.
+                            dispatch.metrics.denied_ops += 1;
+                        }
+                        let _ = reply.send(outcome);
                     }
                     Msg::Describe(vi, reply) => {
                         let _ = reply.send(super::tenant_regions(&dispatch.hv, vi));

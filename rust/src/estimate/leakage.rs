@@ -1,0 +1,254 @@
+//! Cross-tenant side-channel proxy: what an attacker tenant can infer
+//! about a co-located victim from its own vantage point.
+//!
+//! The paper's isolation story is *logical* — the hypervisor's access
+//! monitor keeps foreign reads and writes out of a VR. But multi-tenant
+//! FPGAs also share *physical* substrate: one power-distribution
+//! network, and (here) one NoC column per physical CLB column. Remote
+//! power/voltage sensing and contention probing are the classic attacks
+//! on that substrate, so this module models the two observables a
+//! hostile tenant could actually build on-chip:
+//!
+//! - **rail draw** (`rail_mw`): a ring-oscillator-style voltage proxy.
+//!   The attacker sees the shared rail's idle floor, its own draw at
+//!   full precision, and a small capacitively-coupled fraction
+//!   ([`PDN_CROSSTALK`]) of every other tenant's draw — per-VR draw
+//!   comes from the same Fig 9 router power model the estimators use
+//!   ([`router_power_mw`]).
+//! - **column latency** (`column_latency_cycles`): a self-timed probe
+//!   over the attacker's own column segment. Foreign VRs active on the
+//!   same physical column add arbitration pressure, stretching the
+//!   probe by [`COLUMN_COUPLING`] per unit of overlapping duty; tenants
+//!   on other columns do not touch it.
+//!
+//! [`leakage_between`] runs the attacker's sensors twice — victim idle,
+//! victim active — and reports the relative shifts. The headline
+//! [`LeakageReport::score`] is the larger shift; the isolation gate
+//! (`rust/tests/isolation.rs`) requires it to stay under
+//! [`LEAKAGE_BOUND`]: observable (the substrate is shared; pretending
+//! otherwise would be dishonest), but bounded well below a
+//! request-granularity decode.
+
+use super::{router_power_mw, RouterConfig};
+use crate::noc::Topology;
+
+/// Fraction of a foreign tenant's dynamic draw that couples into the
+/// attacker's rail reading through the shared power-distribution
+/// network. Calibrated to the ~1% order remote FPGA voltage sensors
+/// resolve, not to any per-device measurement.
+pub const PDN_CROSSTALK: f64 = 0.012;
+
+/// Relative stretch of the attacker's column-latency probe per unit of
+/// foreign duty on the same physical column (one fully-active foreign
+/// VR sharing the column stretches the probe by 2%).
+pub const COLUMN_COUPLING: f64 = 0.02;
+
+/// Gate on [`LeakageReport::score`]: the worst-case relative shift a
+/// victim's activity may induce in an attacker's readings. 5% keeps the
+/// proxy honest (nonzero — the substrate is shared) while staying an
+/// order of magnitude below the attacker's own-signal precision.
+pub const LEAKAGE_BOUND: f64 = 0.05;
+
+/// Cycles the attacker's column probe takes with the column to itself.
+const BASE_COLUMN_LATENCY_CYCLES: f64 = 100.0;
+
+/// Datapath width (bits) the sensor model evaluates router draw at —
+/// the case-study deployment width.
+const SENSE_WIDTH_BITS: u32 = 32;
+
+/// One tenant's activity as the substrate sees it: which VRs it holds
+/// and the duty cycle they toggle at (0 = parked, 1 = saturated).
+#[derive(Debug, Clone)]
+pub struct TenantActivity {
+    /// VR indices the tenant holds.
+    pub vrs: Vec<usize>,
+    /// Average toggle duty across those VRs, in `[0, 1]`.
+    pub duty: f64,
+}
+
+impl TenantActivity {
+    /// Activity at `duty` on `vrs`.
+    pub fn new(vrs: &[usize], duty: f64) -> TenantActivity {
+        assert!((0.0..=1.0).contains(&duty), "duty must be in [0, 1]");
+        TenantActivity { vrs: vrs.to_vec(), duty }
+    }
+
+    /// A parked tenant: holds its VRs but toggles nothing.
+    pub fn idle(vrs: &[usize]) -> TenantActivity {
+        TenantActivity::new(vrs, 0.0)
+    }
+}
+
+/// What the attacker's on-chip sensors read at one instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SensorReading {
+    /// Shared-rail draw proxy (mW): idle floor + the attacker's own
+    /// draw + [`PDN_CROSSTALK`] of everyone else's.
+    pub rail_mw: f64,
+    /// Self-timed probe latency over the attacker's column (cycles).
+    pub column_latency_cycles: f64,
+}
+
+/// Dynamic draw (mW) one tenant's activity puts on the rail: each held
+/// VR drives its router's datapath at the tenant's duty cycle.
+fn tenant_draw_mw(topo: &Topology, t: &TenantActivity) -> f64 {
+    t.vrs
+        .iter()
+        .map(|&vr| {
+            let router = topo.router_of_vr(vr);
+            // Lone-router deployments report 2 ports; the power model is
+            // calibrated for the paper's 3/4-port points.
+            let ports = topo.ports_of(router).clamp(3, 4);
+            router_power_mw(&RouterConfig::bufferless(ports, SENSE_WIDTH_BITS)).total_mw() * t.duty
+        })
+        .sum()
+}
+
+/// Idle floor of the shared rail: clock trees and static draw keep
+/// burning with zero traffic. Modeled as 40% of every deployed router's
+/// active total, so the floor scales with the deployment instead of
+/// being a magic constant.
+fn rail_floor_mw(topo: &Topology) -> f64 {
+    topo.routers
+        .iter()
+        .map(|r| {
+            let ports = topo.ports_of(r.id).clamp(3, 4);
+            0.4 * router_power_mw(&RouterConfig::bufferless(ports, SENSE_WIDTH_BITS)).total_mw()
+        })
+        .sum()
+}
+
+/// Run the attacker's sensors once: `attacker` is the observing tenant,
+/// `others` everyone else on the device.
+pub fn observe(topo: &Topology, attacker: &TenantActivity, others: &[TenantActivity]) -> SensorReading {
+    let foreign_mw: f64 = others.iter().map(|t| tenant_draw_mw(topo, t)).sum();
+    let rail_mw =
+        rail_floor_mw(topo) + tenant_draw_mw(topo, attacker) + PDN_CROSSTALK * foreign_mw;
+    // Column pressure: foreign VRs sharing a physical column with any of
+    // the attacker's VRs, weighted by their duty.
+    let my_columns: Vec<usize> = attacker
+        .vrs
+        .iter()
+        .map(|&vr| topo.routers[topo.router_of_vr(vr) as usize].column)
+        .collect();
+    let pressure: f64 = others
+        .iter()
+        .map(|t| {
+            let overlapping = t
+                .vrs
+                .iter()
+                .filter(|&&vr| {
+                    my_columns.contains(&topo.routers[topo.router_of_vr(vr) as usize].column)
+                })
+                .count();
+            t.duty * overlapping as f64
+        })
+        .sum();
+    let column_latency_cycles = BASE_COLUMN_LATENCY_CYCLES * (1.0 + COLUMN_COUPLING * pressure);
+    SensorReading { rail_mw, column_latency_cycles }
+}
+
+/// The attacker's differential view of one victim: sensors with the
+/// victim parked vs. active, and the relative shifts between them.
+#[derive(Debug, Clone, Copy)]
+pub struct LeakageReport {
+    /// Reading with the victim idle (duty 0).
+    pub idle: SensorReading,
+    /// Reading with the victim at its stated duty.
+    pub active: SensorReading,
+    /// Relative rail-draw shift the victim's activity induced.
+    pub power_shift: f64,
+    /// Relative column-latency shift the victim's activity induced.
+    pub contention_shift: f64,
+    /// The headline leakage score: the larger of the two shifts.
+    pub score: f64,
+}
+
+impl LeakageReport {
+    /// Whether the score clears the gated bound ([`LEAKAGE_BOUND`]).
+    pub fn within_bound(&self) -> bool {
+        self.score < LEAKAGE_BOUND
+    }
+}
+
+/// Measure how much `victim`'s activity shifts an attacker's readings:
+/// observe from `attacker_vrs` (attacker running its own probe at full
+/// duty) with the victim parked, then at its stated duty, and report
+/// the relative shifts. Deterministic — a pure function of the
+/// topology and the two activity descriptions.
+pub fn leakage_between(
+    topo: &Topology,
+    attacker_vrs: &[usize],
+    victim: &TenantActivity,
+) -> LeakageReport {
+    let attacker = TenantActivity::new(attacker_vrs, 1.0);
+    let idle = observe(topo, &attacker, &[TenantActivity::idle(&victim.vrs)]);
+    let active = observe(topo, &attacker, std::slice::from_ref(victim));
+    let power_shift = (active.rail_mw - idle.rail_mw) / idle.rail_mw;
+    let contention_shift = (active.column_latency_cycles - idle.column_latency_cycles)
+        / idle.column_latency_cycles;
+    let score = power_shift.max(contention_shift);
+    LeakageReport { idle, active, power_shift, contention_shift, score }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_victim_shifts_readings_but_stays_bounded() {
+        // Case-study deployment: 3 routers, 6 VRs, one physical column.
+        let topo = Topology::single_column(3);
+        let victim = TenantActivity::new(&[2, 3], 1.0);
+        let report = leakage_between(&topo, &[0], &victim);
+        assert!(report.power_shift > 0.0, "shared rail leaks something");
+        assert!(report.contention_shift > 0.0, "shared column leaks something");
+        assert!(report.within_bound(), "score {:.4} >= bound {LEAKAGE_BOUND}", report.score);
+    }
+
+    #[test]
+    fn idle_victim_leaks_nothing() {
+        let topo = Topology::single_column(3);
+        let report = leakage_between(&topo, &[0], &TenantActivity::idle(&[2, 3]));
+        assert_eq!(report.power_shift, 0.0);
+        assert_eq!(report.contention_shift, 0.0);
+        assert_eq!(report.score, 0.0);
+    }
+
+    #[test]
+    fn leakage_grows_with_victim_duty() {
+        let topo = Topology::single_column(3);
+        let mut prev = -1.0;
+        for duty in [0.25, 0.5, 0.75, 1.0] {
+            let report = leakage_between(&topo, &[0], &TenantActivity::new(&[2, 3], duty));
+            assert!(report.score > prev, "duty {duty}: {} <= {prev}", report.score);
+            prev = report.score;
+        }
+    }
+
+    #[test]
+    fn same_column_victim_leaks_more_than_disjoint_column() {
+        // 3 physical columns, 2 routers each: routers 0-1 on column 0,
+        // 4-5 on column 2. Contention probing only sees same-column
+        // pressure, so the co-located victim dominates.
+        let topo = Topology::multi_column(6, 3);
+        let attacker = [0usize, 1];
+        let near = leakage_between(&topo, &attacker, &TenantActivity::new(&[2, 3], 1.0));
+        let far = leakage_between(&topo, &attacker, &TenantActivity::new(&[8, 9], 1.0));
+        assert!(near.contention_shift > 0.0);
+        assert_eq!(far.contention_shift, 0.0, "disjoint columns share no probe path");
+        assert!(near.score > far.score);
+        // The rail is device-wide: even the far victim leaks through it.
+        assert!(far.power_shift > 0.0);
+    }
+
+    #[test]
+    fn sensors_are_deterministic() {
+        let topo = Topology::single_column(3);
+        let victim = TenantActivity::new(&[4, 5], 0.6);
+        let a = leakage_between(&topo, &[0, 1], &victim);
+        let b = leakage_between(&topo, &[0, 1], &victim);
+        assert_eq!(a.active, b.active);
+        assert_eq!(a.idle, b.idle);
+    }
+}

@@ -15,12 +15,14 @@ pub mod area;
 pub mod bandwidth;
 pub mod baselines;
 pub mod fmax;
+pub mod leakage;
 pub mod power;
 
 pub use area::router_resources;
 pub use bandwidth::{bw_per_lut_mbps, bw_per_wire_mbps, link_bandwidth_gbps};
 pub use baselines::{baseline, Baseline, BASELINES};
 pub use fmax::router_fmax_mhz;
+pub use leakage::{leakage_between, LeakageReport, TenantActivity, LEAKAGE_BOUND};
 pub use power::{router_power_mw, PowerBreakdown};
 
 /// Static description of a router implementation point.

@@ -15,9 +15,10 @@
 use super::{
     FleetHandle, FleetResponse, FleetScheduler, MigrationReport, Replica, TenantId,
 };
+use crate::api::TenancyPlan;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sharded::ShardedHandle;
-use crate::hypervisor::MigrationPlan;
+use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
 use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex};
 
@@ -88,10 +89,19 @@ impl FleetCluster {
         self.with(|s| s.admit_tenant(name, design))?
     }
 
-    /// Deploy a multi-region tenancy plan fleet-wide (see
+    /// Deploy an attested multi-region tenancy plan fleet-wide (see
     /// [`FleetScheduler::deploy_tenancy`]).
-    pub fn deploy_tenancy(&self, name: &str, plan: &MigrationPlan) -> Result<TenantId> {
-        self.with(|s| s.deploy_tenancy(name, plan))?
+    pub fn deploy_tenancy(&self, plan: &TenancyPlan) -> Result<TenantId> {
+        self.with(|s| s.deploy_tenancy(plan))?
+    }
+
+    /// Apply one lifecycle op on device `device`'s engine (and mirror it
+    /// into the fleet shadow). Crate-internal: the red-team replay drives
+    /// hostile control-plane ops through the same entry point tenant
+    /// admission uses, so refusals land in the device's `denied_ops`
+    /// exactly as they do on the engine-level backends.
+    pub(crate) fn apply_on(&self, device: usize, op: &LifecycleOp) -> Result<LifecycleOutcome> {
+        self.with(|s| s.apply_on(device, op))?
     }
 
     /// Grow `tenant` by one replica (see [`FleetScheduler::grow_tenant`]).

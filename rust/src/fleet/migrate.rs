@@ -98,9 +98,15 @@ impl FleetScheduler {
         name: &str,
         vi: Option<u16>,
         to: usize,
+        attestation: Option<&crate::api::Attestation>,
     ) -> Result<(u16, Vec<Replica>)> {
-        let (vi, new_vrs) =
-            crate::api::replay_plan(&mut DeviceTarget { fleet: self, device: to }, plan, name, vi)?;
+        let (vi, new_vrs) = crate::api::replay_plan(
+            &mut DeviceTarget { fleet: self, device: to },
+            plan,
+            name,
+            vi,
+            attestation,
+        )?;
         // Stream destinations are listed (sessions address them by
         // region) but not routable: a tenant-level request round-robined
         // into one would run the downstream accelerator alone.
@@ -156,7 +162,11 @@ impl FleetScheduler {
         //    deployment wait; without it the first post-flip burst would
         //    eat the whole reconfiguration backlog).
         let dst_vi = rec.vis.get(&to).copied();
-        let (dst_vi, new_replicas) = self.clone_tenancy(&plan, &rec.name, dst_vi, to)?;
+        // Control-plane replay: re-attest the shadow-exported plan under
+        // the platform key (the target's replay verifies every plan).
+        let sealed = crate::api::AttestationKey::platform().seal(&rec.name, &plan);
+        let (dst_vi, new_replicas) =
+            self.clone_tenancy(&plan, &rec.name, dst_vi, to, Some(&sealed))?;
         self.devices[to].handle.advance_clock(MIGRATION_DRAIN_US)?;
         // 3. Flip the routes: drop source-device replicas, add the new
         //    ones, one generation bump.

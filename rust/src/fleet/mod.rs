@@ -470,15 +470,12 @@ impl FleetScheduler {
     /// Admit a tenant: place one region of `design` on the device the
     /// policy picks, deploy it, and register the front-end route.
     /// Returns the fleet-wide tenant id. The single-region case of
-    /// [`FleetScheduler::deploy_tenancy`].
+    /// [`FleetScheduler::deploy_tenancy`] — built through
+    /// [`TenancyBuilder`](crate::api::TenancyBuilder), so the plan
+    /// arrives platform-sealed like any client plan.
     pub fn admit_tenant(&mut self, name: &str, design: &str) -> Result<TenantId> {
-        let plan = crate::hypervisor::MigrationPlan {
-            regions: vec![crate::hypervisor::RegionPlan {
-                design: Some(design.to_string()),
-                streams_to: None,
-            }],
-        };
-        self.deploy_tenancy(name, &plan)
+        let plan = crate::api::TenancyBuilder::new(name).region(design).plan()?;
+        self.deploy_tenancy(&plan)
     }
 
     /// Deploy a whole tenancy plan fleet-wide: placement picks one
@@ -487,12 +484,13 @@ impl FleetScheduler {
     /// shared deploy-with-rollback protocol (`clone_tenancy` — the same
     /// machinery migration uses), and the tenant + its front-end routes
     /// register. The [`api`](crate::api) layer's fleet `deploy` lands
-    /// here.
-    pub fn deploy_tenancy(
-        &mut self,
-        name: &str,
-        plan: &crate::hypervisor::MigrationPlan,
-    ) -> Result<TenantId> {
+    /// here. Takes the attested [`TenancyPlan`](crate::api::TenancyPlan)
+    /// whole: the replay verifies the provisioning signature before any
+    /// device is touched, so a stripped or tampered plan is refused with
+    /// the fleet state unchanged.
+    pub fn deploy_tenancy(&mut self, tenancy: &crate::api::TenancyPlan) -> Result<TenantId> {
+        let name = tenancy.name();
+        let plan = tenancy.migration();
         ensure!(!plan.is_empty(), "tenancy plan '{name}' has no regions");
         let primary = plan
             .regions
@@ -503,7 +501,7 @@ impl FleetScheduler {
         let device = placement::choose(&viable, self.policy, None, &[]).ok_or_else(|| {
             anyhow!("no alive device can host '{primary}' x{} (fleet full)", plan.len())
         })?;
-        let (vi, replicas) = self.clone_tenancy(plan, name, None, device)?;
+        let (vi, replicas) = self.clone_tenancy(plan, name, None, device, tenancy.attestation())?;
         let tenant = self.next_tenant;
         self.next_tenant += 1;
         self.tenants.insert(
@@ -544,7 +542,11 @@ impl FleetScheduler {
         let device = placement::choose(&viable, self.policy, None, &occupied)
             .ok_or_else(|| anyhow!("no alive device can host another '{}'", rec.design))?;
         let vi = rec.vis.get(&device).copied();
-        let (vi, new_replicas) = self.clone_tenancy(&plan, &rec.name, vi, device)?;
+        // Control-plane replay: the plan came out of our own shadow
+        // state, so re-attest it under the platform key — the replay
+        // verifies every plan, internal or not.
+        let sealed = crate::api::AttestationKey::platform().seal(&rec.name, &plan);
+        let (vi, new_replicas) = self.clone_tenancy(&plan, &rec.name, vi, device, Some(&sealed))?;
         let replica = new_replicas
             .iter()
             .find(|r| r.entry)

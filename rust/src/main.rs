@@ -8,13 +8,16 @@ use fpga_mt::accel::CASE_STUDY;
 use fpga_mt::api::{SerialBackend, ServingBackend, TenantRef};
 use fpga_mt::cloud::{compare, fig14_io_trips, Ingress, IoConfig, Link, Scheme};
 use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
-use fpga_mt::coordinator::System;
+use fpga_mt::coordinator::metrics::Metrics;
+use fpga_mt::coordinator::redteam::{self, AttackClass, RedteamConfig, RedteamEvent, RedteamReplay};
+use fpga_mt::coordinator::{ShardedEngine, System};
 use fpga_mt::device::Device;
 use fpga_mt::fleet::{replay_fleet, FleetCluster, FleetConfig, PlacePolicy};
 use fpga_mt::estimate::{
-    self, router_fmax_mhz, router_power_mw, router_resources, RouterConfig, BASELINES,
+    self, leakage_between, router_fmax_mhz, router_power_mw, router_resources, RouterConfig,
+    TenantActivity, BASELINES, LEAKAGE_BOUND,
 };
-use fpga_mt::noc::traffic;
+use fpga_mt::noc::{traffic, Topology};
 use fpga_mt::placer;
 use fpga_mt::util::cli::Args;
 use fpga_mt::util::table::{fnum, Table};
@@ -33,9 +36,10 @@ fn main() -> Result<()> {
         Some("placement") => cmd_placement(),
         Some("case-study") => cmd_case_study(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("isolation") => cmd_isolation(&args),
         _ => {
             eprintln!(
-                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet> [--...]\n\
+                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation> [--...]\n\
                  \n  resources   Fig 8  router area sweep\
                  \n  power       Fig 9  router power sweep\
                  \n  fmax        Fig 10 max frequency sweep\
@@ -46,7 +50,8 @@ fn main() -> Result<()> {
                  \n  throughput  Fig 15 streaming throughput local/remote\
                  \n  compare     Table II scheme comparison\
                  \n  case-study  Table I end-to-end deployment (native runtime)\
-                 \n  fleet       Multi-FPGA fleet under churn (--devices, --events, --seed, --binpack, --remote)"
+                 \n  fleet       Multi-FPGA fleet under churn (--devices, --events, --seed, --binpack, --remote)\
+                 \n  isolation   Red-team the tenancy boundary (--backend serial|sharded|fleet, --events, --seed, --rate, --log)"
             );
             Ok(())
         }
@@ -277,6 +282,91 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         metrics.throughput_gbps()
     );
     Ok(())
+}
+
+/// Replay one seeded hostile trace on the chosen backend and report how
+/// every attack class was refused, plus the cross-tenant leakage proxy
+/// for the case-study co-location.
+fn cmd_isolation(args: &Args) -> Result<()> {
+    let cfg = RedteamConfig {
+        seed: args.get_u64("seed", 0xBAD_5EED),
+        events: args.get_usize("events", 300),
+        attack_rate: args.get_f64("rate", 0.35),
+    };
+    let trace = redteam::generate(&cfg);
+    let backend = args.get_or("backend", "serial");
+    let (replay, metrics) = replay_hostile(backend, &trace)?;
+    println!(
+        "backend {backend}: {} events replayed, seed {:#x}, attack rate {}",
+        trace.len(),
+        cfg.seed,
+        cfg.attack_rate
+    );
+    if args.flag("log") {
+        for line in &replay.log {
+            println!("{line}");
+        }
+        println!();
+    }
+    let mut t = Table::new(vec!["attack class", "attempts", "refused"]);
+    for class in AttackClass::ALL {
+        let tally = replay.tally(class);
+        t.row(vec![
+            class.label().to_string(),
+            tally.attempts.to_string(),
+            tally.refused.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "coop op failures={} foreign bytes={} | rejected={} backpressured={} denied_ops={}",
+        replay.coop_op_failures,
+        replay.foreign_bytes,
+        metrics.rejected,
+        metrics.backpressured,
+        metrics.denied_ops
+    );
+    // Leakage proxy: every ordered co-located pairing of the case-study
+    // deployment (3 two-region tenants on one column) at full duty.
+    let topo = Topology::single_column(3);
+    let holdings: [[usize; 2]; 3] = [[0, 1], [2, 3], [4, 5]];
+    let mut lt = Table::new(vec!["attacker VRs", "victim VRs", "leakage score", "bound"]);
+    for (ai, attacker) in holdings.iter().enumerate() {
+        for (vi, victim) in holdings.iter().enumerate() {
+            if ai != vi {
+                let r = leakage_between(&topo, attacker, &TenantActivity::new(victim, 1.0));
+                lt.row(vec![
+                    format!("{attacker:?}"),
+                    format!("{victim:?}"),
+                    format!("{:.4}", r.score),
+                    format!("{} ({})", LEAKAGE_BOUND, if r.within_bound() { "ok" } else { "EXCEEDED" }),
+                ]);
+            }
+        }
+    }
+    lt.print();
+    Ok(())
+}
+
+fn replay_hostile(backend: &str, trace: &[RedteamEvent]) -> Result<(RedteamReplay, Metrics)> {
+    Ok(match backend {
+        "serial" => {
+            let b = SerialBackend::new(System::empty("artifacts")?);
+            let replay = redteam::replay(&b, trace);
+            (replay, b.shutdown())
+        }
+        "sharded" => {
+            let b = ShardedEngine::start(|| System::empty("artifacts"))?;
+            let replay = redteam::replay(&b, trace);
+            (replay, b.shutdown())
+        }
+        "fleet" => {
+            let b = FleetCluster::start(FleetConfig::new(1))?;
+            let replay = redteam::replay(&b, trace);
+            (replay, b.shutdown())
+        }
+        other => anyhow::bail!("unknown backend '{other}' (expected serial|sharded|fleet)"),
+    })
 }
 
 fn cmd_case_study(args: &Args) -> Result<()> {

@@ -263,6 +263,110 @@ fn foreign_probes_reject_identically_on_serial_and_sharded() {
 }
 
 #[test]
+fn stale_ticket_replay_and_region_squat_reject_identically_on_every_backend() {
+    // Red-team conformance: a fixed hostile mini-trace driven through
+    // the uniform `AttackSurface` (the same entry points the red-team
+    // replay uses) must produce the identical accept/refuse sequence —
+    // same positions, same error strings — and identical counters on the
+    // serial backend, the sharded engine, and a single-device fleet.
+    use fpga_mt::api::DEPLOY_SETTLE_US;
+    use fpga_mt::coordinator::redteam::AttackSurface;
+    use fpga_mt::hypervisor::LifecycleOp;
+
+    fn fmt_req(r: anyhow::Result<Response>) -> String {
+        match r {
+            Ok(resp) => format!("ok(path={:?}, epoch={})", resp.path, resp.epoch),
+            Err(e) => format!("err({e})"),
+        }
+    }
+
+    fn hostile_mini_case<B: ServingBackend + AttackSurface>(backend: B) -> (Vec<String>, Metrics) {
+        let payload: Arc<[u8]> = Arc::from(vec![7u8; 64]);
+        let mut log: Vec<String> = Vec::new();
+
+        // Victim deploys one FIR region; its session pins (vr, epoch).
+        let plan = TenancyBuilder::new("victim").region("fir").plan().unwrap();
+        let tenant = backend.deploy(&plan).expect("deploy");
+        AttackSurface::advance(&backend, DEPLOY_SETTLE_US).expect("advance");
+        let session = backend.session(tenant).expect("session");
+        let (vr, epoch) = {
+            let t = &session.targets()[0];
+            (t.vr, t.epoch)
+        };
+
+        // 1. The pinned ticket is valid: the epoch-scoped submit serves.
+        log.push(fmt_req(backend.submit(1, vr, Some(epoch), &payload)));
+        // 2. The victim's own growth retargets the region (epoch bump);
+        //    replaying the captured ticket must now be refused as stale.
+        let grown = backend
+            .apply_op(&LifecycleOp::Grow { vi: 1, stream_src: Some(vr), design: "aes".into() })
+            .expect("grow");
+        log.push(fmt_req(backend.submit(1, vr, Some(epoch), &payload)));
+        // 3. The victim releases the grown region; a second tenant tries
+        //    to squat on it with a bare Program (no allocation) — the
+        //    hypervisor must refuse the op (denied_ops counter).
+        let freed = match grown {
+            fpga_mt::hypervisor::LifecycleOutcome::Vr(new_vr) => new_vr,
+            other => panic!("grow returns Vr, got {other:?}"),
+        };
+        AttackSurface::advance(&backend, DEPLOY_SETTLE_US).expect("advance");
+        backend.apply_op(&LifecycleOp::Release { vi: 1, vr: freed }).expect("release");
+        backend
+            .apply_op(&LifecycleOp::CreateVi { name: "squatter".into() })
+            .expect("create squatter");
+        let squat = backend.apply_op(&LifecycleOp::Program {
+            vi: 2,
+            vr: freed,
+            design: "fft".into(),
+            dest: None,
+        });
+        log.push(match squat {
+            Ok(o) => format!("ok({o:?})"),
+            Err(e) => format!("err({e})"),
+        });
+        // 4. The squatter probes the victim's live region directly — the
+        //    access monitor must refuse (rejected counter).
+        log.push(fmt_req(backend.submit(2, vr, None, &payload)));
+        (log, backend.shutdown())
+    }
+
+    let (serial_log, serial_metrics) =
+        hostile_mini_case(SerialBackend::new(System::empty("artifacts").unwrap()));
+    let (sharded_log, sharded_metrics) =
+        hostile_mini_case(ShardedEngine::start(|| System::empty("artifacts")).unwrap());
+    let (fleet_log, fleet_metrics) =
+        hostile_mini_case(FleetCluster::start(FleetConfig::new(1)).unwrap());
+
+    assert_eq!(serial_log, sharded_log, "serial vs sharded: hostile trace diverged");
+    assert_eq!(serial_log, fleet_log, "serial vs fleet: hostile trace diverged");
+    assert!(serial_log[0].starts_with("ok("), "the fresh ticket must serve: {}", serial_log[0]);
+    assert!(
+        serial_log[1].contains("stale session"),
+        "the replayed ticket must be refused as stale: {}",
+        serial_log[1]
+    );
+    assert!(
+        serial_log[2].contains("is not held by"),
+        "the squat must be refused by the ownership precheck: {}",
+        serial_log[2]
+    );
+    assert!(
+        serial_log[3].contains("does not own"),
+        "the foreign probe must be refused by the access monitor: {}",
+        serial_log[3]
+    );
+    for (label, m) in
+        [("serial", &serial_metrics), ("sharded", &sharded_metrics), ("fleet", &fleet_metrics)]
+    {
+        assert_eq!(m.requests, serial_metrics.requests, "{label}: requests");
+        assert_eq!(m.rejected, serial_metrics.rejected, "{label}: rejected");
+        assert_eq!(m.denied_ops, serial_metrics.denied_ops, "{label}: denied_ops");
+        assert!(m.rejected >= 2, "{label}: stale replay + foreign probe must both count");
+        assert!(m.denied_ops >= 1, "{label}: the refused squat must count");
+    }
+}
+
+#[test]
 fn stale_sessions_reject_identically_on_every_backend() {
     // After the tenant's tenancy is torn down and a new tenant takes the
     // same region, an old session must be refused — with the engines

@@ -1,0 +1,203 @@
+//! Isolation gate — the red-team counterpart of the backend conformance
+//! suite.
+//!
+//! One seeded hostile trace (six attack classes layered on cooperative
+//! churn, see `coordinator::redteam`) replays through the serial
+//! backend, the sharded engine, and a single-device fleet. The gate:
+//!
+//! - the canonical replay log is **byte-identical** on all three
+//!   backends — every attack is refused at the same position with the
+//!   same error string;
+//! - every attack class lands in the same counter everywhere: foreign
+//!   probes and stale tickets in `rejected`, hostile lifecycle ops in
+//!   `denied_ops`, flood tails in `backpressured`;
+//! - **zero foreign bytes** are delivered across the tenancy boundary;
+//! - the cross-tenant side-channel proxy stays under its gated bound
+//!   for every co-located tenant pairing of the case-study deployment;
+//! - unattested, tampered, and foreign-key tenancy plans are refused by
+//!   `deploy` on every backend, leaking no resources.
+
+use fpga_mt::api::{
+    AttestationKey, SerialBackend, ServingBackend, TenancyBuilder, TenancyPlan,
+};
+use fpga_mt::coordinator::metrics::Metrics;
+use fpga_mt::coordinator::redteam::{
+    self, AttackClass, AttackSurface, RedteamConfig, RedteamEvent, RedteamReplay,
+};
+use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::estimate::{leakage_between, TenantActivity, LEAKAGE_BOUND};
+use fpga_mt::fleet::{FleetCluster, FleetConfig};
+use fpga_mt::noc::Topology;
+
+struct GateRun {
+    label: &'static str,
+    replay: RedteamReplay,
+    metrics: Metrics,
+}
+
+/// Replay the hostile trace through one backend (every backend is both
+/// a `ServingBackend` and an `AttackSurface`), then shut it down for
+/// its merged metrics.
+fn run_surface<B: ServingBackend + AttackSurface>(backend: B, trace: &[RedteamEvent]) -> GateRun {
+    let label = backend.surface_label();
+    let replay = redteam::replay(&backend, trace);
+    let metrics = backend.shutdown();
+    GateRun { label, replay, metrics }
+}
+
+fn assert_gates(run: &GateRun) {
+    let label = run.label;
+    assert_eq!(
+        run.replay.coop_op_failures, 0,
+        "{label}: every cooperative op in the trace must apply"
+    );
+    assert_eq!(
+        run.replay.foreign_bytes, 0,
+        "{label}: no payload byte may cross the tenancy boundary"
+    );
+    assert!(run.replay.all_classes_attempted(), "{label}: trace must cover every attack class");
+    for class in AttackClass::ALL {
+        let tally = run.replay.tally(class);
+        if class == AttackClass::IngressFlood {
+            assert!(
+                tally.refused > 0,
+                "{label}: flood tails must be backpressured ({} attempts)",
+                tally.attempts
+            );
+            assert!(
+                tally.attempts > tally.refused,
+                "{label}: flood heads must queue (bounded backlog, not a closed door)"
+            );
+        } else {
+            assert_eq!(
+                tally.refused,
+                tally.attempts,
+                "{label}: every {} attempt must be refused",
+                class.label()
+            );
+        }
+    }
+    // Each enforcement point must actually fire into its own counter.
+    assert!(run.metrics.rejected > 0, "{label}: access/epoch refusals must count");
+    assert!(run.metrics.backpressured > 0, "{label}: flood backpressure must count");
+    assert!(run.metrics.denied_ops > 0, "{label}: hostile lifecycle ops must count");
+}
+
+fn assert_runs_identical(a: &GateRun, b: &GateRun) {
+    let pair = format!("{} vs {}", a.label, b.label);
+    assert_eq!(a.replay.log.len(), b.replay.log.len(), "{pair}: trace length");
+    for (i, (x, y)) in a.replay.log.iter().zip(&b.replay.log).enumerate() {
+        assert_eq!(x, y, "{pair}: replay log diverges at event {i}");
+    }
+    assert_eq!(a.replay.tallies, b.replay.tallies, "{pair}: per-class tallies");
+    assert_eq!(a.metrics.requests, b.metrics.requests, "{pair}: requests");
+    assert_eq!(a.metrics.rejected, b.metrics.rejected, "{pair}: rejected");
+    assert_eq!(a.metrics.backpressured, b.metrics.backpressured, "{pair}: backpressured");
+    assert_eq!(a.metrics.denied_ops, b.metrics.denied_ops, "{pair}: denied_ops");
+    assert_eq!(a.metrics.bytes_in, b.metrics.bytes_in, "{pair}: bytes_in");
+    assert_eq!(a.metrics.bytes_out, b.metrics.bytes_out, "{pair}: bytes_out");
+}
+
+#[test]
+fn hostile_trace_is_refused_identically_on_all_three_backends() {
+    let trace = redteam::generate(&RedteamConfig::default());
+    let serial = run_surface(SerialBackend::new(System::empty("artifacts").unwrap()), &trace);
+    let sharded = run_surface(ShardedEngine::start(|| System::empty("artifacts")).unwrap(), &trace);
+    let fleet = run_surface(FleetCluster::start(FleetConfig::new(1)).unwrap(), &trace);
+    for run in [&serial, &sharded, &fleet] {
+        assert_gates(run);
+    }
+    assert_runs_identical(&serial, &sharded);
+    assert_runs_identical(&serial, &fleet);
+    assert_runs_identical(&sharded, &fleet);
+}
+
+#[test]
+fn hostile_traces_are_seed_stable_on_one_backend() {
+    // Same seed, two independent replays on fresh serial systems: the
+    // canonical log is a pure function of (seed, backend semantics).
+    let cfg = RedteamConfig { seed: 0x5EC_0ED, events: 150, attack_rate: 0.4 };
+    let trace = redteam::generate(&cfg);
+    let a = run_surface(SerialBackend::new(System::empty("artifacts").unwrap()), &trace);
+    let b = run_surface(SerialBackend::new(System::empty("artifacts").unwrap()), &trace);
+    assert_eq!(a.replay.log, b.replay.log);
+    assert_eq!(a.metrics.requests, b.metrics.requests);
+    assert_eq!(a.metrics.rejected, b.metrics.rejected);
+}
+
+#[test]
+fn leakage_stays_bounded_for_every_co_located_pairing() {
+    // Case-study deployment: 3 routers on one physical column, 6 VRs,
+    // three two-region tenants — the densest co-location the floorplan
+    // offers. Every (attacker, victim) pairing must stay under the
+    // gated bound at full victim duty.
+    let topo = Topology::single_column(3);
+    let holdings: [[usize; 2]; 3] = [[0, 1], [2, 3], [4, 5]];
+    let mut worst = 0.0f64;
+    for (ai, attacker) in holdings.iter().enumerate() {
+        for (vi, victim) in holdings.iter().enumerate() {
+            if ai == vi {
+                continue;
+            }
+            let report = leakage_between(&topo, attacker, &TenantActivity::new(victim, 1.0));
+            assert!(
+                report.within_bound(),
+                "attacker {attacker:?} vs victim {victim:?}: score {:.4} >= {LEAKAGE_BOUND}",
+                report.score
+            );
+            assert!(report.score > 0.0, "shared substrate: the proxy must not report zero");
+            worst = worst.max(report.score);
+        }
+    }
+    assert!(worst < LEAKAGE_BOUND, "worst pairing {worst:.4} must clear the bound");
+}
+
+/// Refused deploys must leak nothing: the follow-up legitimate deploy
+/// still finds the device intact.
+fn attestation_cases<B: ServingBackend>(backend: B) {
+    let label = backend.label();
+    let good = TenancyBuilder::new("legit").region("fir").plan().unwrap();
+    backend.deploy(&good).unwrap_or_else(|e| panic!("{label}: sealed plan must deploy: {e}"));
+
+    let stripped: TenancyPlan =
+        TenancyBuilder::new("anon").region("fft").plan().unwrap().with_attestation(None);
+    let err = backend.deploy(&stripped).unwrap_err().to_string();
+    assert!(err.contains("unattested"), "{label}: stripped plan must be refused, got: {err}");
+
+    let donor = TenancyBuilder::new("donor").region("fir").plan().unwrap();
+    let spliced = TenancyBuilder::new("mallory")
+        .region("fft")
+        .plan()
+        .unwrap()
+        .with_attestation(donor.attestation().copied());
+    let err = backend.deploy(&spliced).unwrap_err().to_string();
+    assert!(
+        err.contains("does not verify"),
+        "{label}: spliced tag must be refused, got: {err}"
+    );
+
+    let foreign = TenancyBuilder::new("rogue")
+        .region("aes")
+        .plan()
+        .unwrap()
+        .attest(&AttestationKey::from_seed(0xDEAD_BEEF));
+    let err = backend.deploy(&foreign).unwrap_err().to_string();
+    assert!(
+        err.contains("does not verify"),
+        "{label}: foreign-key signature must be refused, got: {err}"
+    );
+
+    // Nothing leaked: a second sealed plan still deploys.
+    let again = TenancyBuilder::new("legit-2").region("huffman").plan().unwrap();
+    backend
+        .deploy(&again)
+        .unwrap_or_else(|e| panic!("{label}: refusals must not leak resources: {e}"));
+    backend.shutdown();
+}
+
+#[test]
+fn unattested_and_tampered_plans_are_refused_on_every_backend() {
+    attestation_cases(SerialBackend::new(System::empty("artifacts").unwrap()));
+    attestation_cases(ShardedEngine::start(|| System::empty("artifacts")).unwrap());
+    attestation_cases(FleetCluster::start(FleetConfig::new(1)).unwrap());
+}

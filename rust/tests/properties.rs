@@ -376,6 +376,146 @@ fn lifecycle_ops_never_double_own_or_leak_wiring() {
 }
 
 #[test]
+fn hostile_interleavings_never_corrupt_state_or_revive_tickets() {
+    // Red-team satellite: random interleavings of legal lifecycle churn
+    // (two cooperative tenants) and hostile ops from a third VI that was
+    // admitted but owns nothing. After every op:
+    // - every hostile op is refused AND leaves per-VR (status, epoch)
+    //   state untouched — a refusal must be side-effect free;
+    // - each non-free VR appears in exactly one VI's held list (the
+    //   hostile VI's list stays empty forever);
+    // - every wired direct link has both endpoints held;
+    // - a captured (vi, vr, epoch) admission ticket that has gone stale
+    //   once never validates again, no matter how ownership churns
+    //   afterwards (epochs are monotonic and bump on every transition).
+    let designs = ["huffman", "fft", "fpu", "aes", "canny", "fir"];
+    forall("hostile-op interleavings", 32, |rng| {
+        let device = Device::vu9p();
+        let (topo, fp) = placer::case_study_floorplan(&device).unwrap();
+        let mut sim = NocSim::new(topo.clone());
+        let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+        let vis: Vec<u16> = (0..2).map(|i| hv.create_vi(&format!("t{i}"))).collect();
+        let hostile = hv.create_vi("hostile");
+        // Captured admission tickets: (vi, vr, epoch, went_stale).
+        let mut tickets: Vec<(u16, usize, u64, bool)> = Vec::new();
+        for _ in 0..rng.range_u64(20, 100) {
+            let design = designs[rng.index(designs.len())].to_string();
+            if rng.chance(0.45) {
+                // --- hostile op: illegal by construction (the hostile VI
+                // holds nothing, so any region it names is foreign/free) ---
+                let foreign: Vec<usize> = (0..hv.vrs.len())
+                    .filter(|&vr| hv.vrs[vr].status != VrStatus::Free)
+                    .collect();
+                let op = match rng.below(4) {
+                    0 => {
+                        // Squat on any region (held by another VI, or free
+                        // and never allocated to the squatter).
+                        let vr = rng.index(hv.vrs.len());
+                        LifecycleOp::Program { vi: hostile, vr, design, dest: None }
+                    }
+                    1 => {
+                        let Some(&src) = foreign.first() else { continue };
+                        LifecycleOp::Wire {
+                            vi: hostile,
+                            src,
+                            dst: (src + 1) % hv.vrs.len(),
+                        }
+                    }
+                    2 => {
+                        let Some(&vr) = foreign.last() else { continue };
+                        LifecycleOp::Release { vi: hostile, vr }
+                    }
+                    _ => {
+                        let src = foreign
+                            .iter()
+                            .copied()
+                            .find(|&v| matches!(hv.vrs[v].status, VrStatus::Programmed { .. }));
+                        let Some(src) = src else { continue };
+                        LifecycleOp::Grow { vi: hostile, stream_src: Some(src), design }
+                    }
+                };
+                let before: Vec<(VrStatus, u64)> =
+                    hv.vrs.iter().map(|v| (v.status.clone(), v.epoch)).collect();
+                assert!(
+                    hv.apply(&op, &design_footprint, &mut sim).is_err(),
+                    "hostile op must be refused: {op:?}"
+                );
+                let after: Vec<(VrStatus, u64)> =
+                    hv.vrs.iter().map(|v| (v.status.clone(), v.epoch)).collect();
+                assert_eq!(before, after, "refused hostile op mutated region state: {op:?}");
+            } else {
+                // --- legal churn from a cooperative tenant ---
+                let vi = vis[rng.index(vis.len())];
+                let held: Vec<usize> = hv.vis[&vi].vrs.clone();
+                let op = match rng.below(4) {
+                    0 => LifecycleOp::Allocate { vi },
+                    1 => {
+                        let Some(&vr) = held.first() else { continue };
+                        LifecycleOp::Program { vi, vr, design, dest: None }
+                    }
+                    2 => {
+                        let stream_src = held
+                            .iter()
+                            .copied()
+                            .find(|&v| matches!(hv.vrs[v].status, VrStatus::Programmed { .. }));
+                        LifecycleOp::Grow { vi, stream_src, design }
+                    }
+                    _ => {
+                        if held.is_empty() {
+                            continue;
+                        }
+                        LifecycleOp::Release { vi, vr: held[rng.index(held.len())] }
+                    }
+                };
+                // Legal churn may still fail (pool exhaustion); a success
+                // that programmed a region mints a fresh admission ticket.
+                if let Ok((outcome, _)) = hv.apply(&op, &design_footprint, &mut sim) {
+                    let programmed = match (&op, outcome) {
+                        (LifecycleOp::Program { vr, .. }, _) => Some(*vr),
+                        (LifecycleOp::Grow { .. }, LifecycleOutcome::Vr(vr)) => Some(vr),
+                        _ => None,
+                    };
+                    if let Some(vr) = programmed {
+                        tickets.push((vi, vr, hv.vrs[vr].epoch, false));
+                    }
+                }
+            }
+
+            // Exactly-one-owner across all three VIs; hostile owns nothing.
+            assert!(hv.vis[&hostile].vrs.is_empty(), "hostile VI acquired a region");
+            let mut owners = vec![0u32; hv.vrs.len()];
+            for v in vis.iter().chain(std::iter::once(&hostile)) {
+                for &vr in &hv.vis[v].vrs {
+                    owners[vr] += 1;
+                }
+            }
+            for (vr, &count) in owners.iter().enumerate() {
+                let allocated = hv.vrs[vr].status != VrStatus::Free;
+                assert_eq!(count, u32::from(allocated), "VR{vr} ownership corrupt");
+                assert_eq!(sim.vrs[vr].owner_vi.is_some(), allocated, "VR{vr} monitor");
+            }
+            // No dangling stream wiring.
+            for (src, dst) in sim.direct_links() {
+                assert_ne!(hv.vrs[src].status, VrStatus::Free, "link from free VR{src}");
+                assert_ne!(hv.vrs[dst].status, VrStatus::Free, "link into free VR{dst}");
+            }
+            // Staleness is permanent: once a ticket stops validating, it
+            // never validates again.
+            for t in &mut tickets {
+                let valid = hv.vrs[t.1].epoch == t.2
+                    && matches!(&hv.vrs[t.1].status,
+                        VrStatus::Programmed { vi: o, .. } if *o == t.0);
+                if t.3 {
+                    assert!(!valid, "stale ticket for VR{} revived", t.1);
+                } else if !valid {
+                    t.3 = true;
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn adjacent_first_grows_adjacent_whenever_a_neighbor_is_free() {
     forall("adjacent-first adjacency", 48, |rng| {
         let device = Device::vu9p();
