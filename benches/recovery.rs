@@ -1,0 +1,115 @@
+//! Control-plane recovery — the event-sourcing gates and costs.
+//!
+//! 1. **Full recovery** — a journaled fleet is driven through a seeded
+//!    control churn trace (admissions, growth, retirement, migration,
+//!    device failure), then rebuilt from its journal alone. The gate is
+//!    byte-identical state ([`ControlDigest`] equality); the cost — wall
+//!    time to replay the full history — is the reported perf point.
+//! 2. **Crash sweep** — the controller is killed at *every* entry
+//!    boundary and recovered from that prefix; every boundary must
+//!    rebuild the exact digest the live controller held there. The
+//!    `recovered_ok` counter (one per verified boundary) is what CI's
+//!    sed gate asserts is positive.
+//! 3. **Compaction** — a snapshot journal synthesized from live state
+//!    ([`compacted_log`]) must recover an equivalent *serving* state
+//!    from fewer entries and bytes than the full history.
+//! 4. **Persistence** — writes `BENCH_recovery.json` (smoke runs too,
+//!    tagged, so CI uploads the trajectory as an artifact).
+//!
+//! [`ControlDigest`]: fpga_mt::control::ControlDigest
+
+use fpga_mt::bench_support::{check, finish, header, smoke_mode};
+use fpga_mt::control::{
+    compacted_log, control_trace, decode_log, drive_control_trace, recover_scheduler, CrashPlan,
+    LogStore, MemLog,
+};
+use fpga_mt::fleet::{FleetConfig, FleetScheduler, PlacePolicy};
+use std::time::Instant;
+
+/// Boot a 2-device journaled fleet (digest trace on) and drive a seeded
+/// control churn trace through it.
+fn churned_fleet(events: usize, seed: u64) -> (FleetScheduler, MemLog) {
+    let mut sched = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(2)
+    })
+    .expect("fleet boots");
+    let log = MemLog::new();
+    sched.attach_journal(Box::new(log.clone()), true).expect("journal attaches");
+    drive_control_trace(&mut sched, &control_trace(2, events, seed));
+    (sched, log)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    header(
+        "Control-plane recovery — event-sourced journal replay",
+        "every mutation journaled; crash at any boundary, recover byte-identical state",
+    );
+    let events = if smoke { 16 } else { 48 };
+
+    // ---- 1. full recovery: replay the whole history, gate on digests ----
+    let (sched, log) = churned_fleet(events, 0x5EED_F1EE);
+    let journal_bytes = log.snapshot().len();
+    let (entries, _, damage) = decode_log(&log.snapshot());
+    let journal_entries = entries.len();
+    let t0 = Instant::now();
+    let (recovered, report) =
+        recover_scheduler(Box::new(log.clone())).expect("full journal recovers");
+    let full_recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "journal: {journal_entries} entries, {journal_bytes} bytes after {events} churn events\n  full recovery: {} entries replayed in {full_recovery_ms:.1} ms",
+        report.entries,
+    );
+    check("live journal is a clean prefix (no tail damage)", damage.is_none());
+    check("full recovery replays every entry", report.entries == journal_entries);
+    check(
+        "recovered state is byte-identical to the live controller",
+        recovered.control_digest() == sched.control_digest(),
+    );
+
+    // ---- 2. crash sweep: kill the controller at every boundary ----
+    let t1 = Instant::now();
+    let plan = CrashPlan::capture(&sched).expect("crash plan captures");
+    let recovered_ok = plan.assert_all_boundaries().expect("every boundary recovers");
+    let sweep_ms = t1.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "  crash sweep: {recovered_ok}/{} boundaries recovered byte-identical in {sweep_ms:.1} ms",
+        plan.len()
+    );
+    check("crash sweep covers every journal boundary", recovered_ok == plan.len());
+    check("at least one boundary verified", recovered_ok > 0);
+
+    // ---- 3. compaction: snapshot journal beats full history ----
+    let compact = compacted_log(&sched, log.fence()).expect("compaction synthesizes");
+    let compacted_bytes = compact.snapshot().len();
+    let compacted_entries = decode_log(&compact.snapshot()).0.len();
+    let (from_compact, _) =
+        recover_scheduler(Box::new(compact)).expect("compacted journal recovers");
+    println!(
+        "  compaction: {journal_entries} entries / {journal_bytes} B -> {compacted_entries} entries / {compacted_bytes} B"
+    );
+    check(
+        "compacted journal is no larger than the full history",
+        compacted_entries <= journal_entries && compacted_bytes <= journal_bytes,
+    );
+    check(
+        "compacted recovery serves the same state (serving digest equality)",
+        from_compact.serving_digest() == sched.serving_digest(),
+    );
+    let _ = from_compact.stop();
+    let _ = recovered.stop();
+    let _ = sched.stop();
+
+    // ---- 4. persist the perf point (smoke runs too: CI uploads it) ----
+    let json = format!(
+        "{{\n  \"bench\": \"recovery\",\n  \"smoke\": {smoke},\n  \"churn_events\": {events},\n  \"journal_entries\": {journal_entries},\n  \"journal_bytes\": {journal_bytes},\n  \"recovered_ok\": {recovered_ok},\n  \"crash_points\": {},\n  \"compacted_entries\": {compacted_entries},\n  \"compacted_bytes\": {compacted_bytes},\n  \"full_recovery_ms\": {full_recovery_ms:.2},\n  \"sweep_ms\": {sweep_ms:.2}\n}}\n",
+        plan.len(),
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_recovery.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}:\n{json}", out.display()),
+        Err(e) => check(&format!("write {} ({e})", out.display()), false),
+    }
+    finish();
+}

@@ -42,7 +42,7 @@ mod plan;
 
 pub use backends::SerialBackend;
 pub use plan::{Attestation, AttestationKey, TenancyBuilder, TenancyPlan, DEPLOY_SETTLE_US};
-pub(crate) use plan::{replay_plan, PlanTarget};
+pub(crate) use plan::{replay_plan, verify_attestation, PlanTarget};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{EngineHandle, ReplyReceiver};

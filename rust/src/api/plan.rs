@@ -108,6 +108,19 @@ impl Attestation {
     pub fn hex(&self) -> String {
         format!("{:016x}{:016x}", self.tag[0], self.tag[1])
     }
+
+    /// The raw tag words. Crate-internal: the control-plane journal
+    /// records them so recovery can re-verify provenance.
+    pub(crate) fn tag_words(&self) -> [u64; 2] {
+        self.tag
+    }
+
+    /// Rebuild an attestation from journaled tag words. Crate-internal:
+    /// only recovery reconstructs tags, and only to re-run
+    /// [`verify_attestation`] against the journaled plan bytes.
+    pub(crate) fn from_tag_words(tag: [u64; 2]) -> Attestation {
+        Attestation { tag }
+    }
 }
 
 /// Canonical byte encoding of `(name, plan)` the MAC covers: every field
@@ -324,6 +337,20 @@ pub(crate) trait PlanTarget {
     /// Whether VRs `a` and `b` are physically adjacent (direct-link
     /// capable) on the target.
     fn adjacent(&self, a: usize, b: usize) -> bool;
+    /// Record a verified plan in the target's control-plane journal, if
+    /// it keeps one. Called by [`replay_plan`] right after attestation
+    /// verifies, so the journal carries the attestation bytes alongside
+    /// the op stream and recovery can re-verify provenance instead of
+    /// trusting reconstructed state. Default: no journal, no-op.
+    fn journal_plan(
+        &mut self,
+        name: &str,
+        plan: &MigrationPlan,
+        attestation: &Attestation,
+    ) -> Result<()> {
+        let _ = (name, plan, attestation);
+        Ok(())
+    }
 }
 
 /// Tear a part-done deployment back down. Regions programmed before the
@@ -374,6 +401,11 @@ pub(crate) fn replay_plan(
     attestation: Option<&Attestation>,
 ) -> Result<(u16, Vec<usize>)> {
     verify_attestation(name, plan, attestation)?;
+    // Attestation verified (so it is `Some`): give the target the chance
+    // to journal the sealed plan before any op lands.
+    if let Some(att) = attestation {
+        target.journal_plan(name, plan, att)?;
+    }
     let created_here = vi.is_none();
     let vi = match vi {
         Some(vi) => vi,

@@ -1,0 +1,41 @@
+//! Journal compaction: a synthesized snapshot stream.
+//!
+//! A long-lived fleet's journal grows with every op; recovery time grows
+//! with it. Compaction replaces the history with a synthesized stream
+//! that rebuilds the *current* state directly: per device, re-claim each
+//! VI's exact regions ([`LifecycleOp::AllocateAt`](crate::hypervisor::LifecycleOp::AllocateAt)),
+//! re-program them, re-wire the direct links, restore per-VR epochs
+//! ([`LifecycleOp::FloorEpoch`](crate::hypervisor::LifecycleOp::FloorEpoch)),
+//! and restore the modeled clock; then the tenant registry, routes, and
+//! lifetime counters. The synthesized entries carry
+//! [`EPOCH_UNCHECKED`] epoch snapshots — they synthesize state rather
+//! than re-trace history, so there is no live-run snapshot to compare —
+//! and the equality gate is the [`ServingDigest`](super::ServingDigest):
+//! a fleet recovered from the compacted log serves identically, though
+//! its VI numbering and route-table versions may differ (and a dead
+//! device's forensic shadow state is deliberately dropped).
+
+use anyhow::Result;
+
+use super::journal::{JournalEntry, MemLog, EPOCH_UNCHECKED};
+use crate::fleet::FleetScheduler;
+
+/// Synthesize a compacted journal for `sched`'s current state, as a
+/// fresh [`MemLog`] at fencing generation `fence`. The scheduler itself
+/// is untouched — callers typically recover a new controller from the
+/// returned log and verify serving equivalence before switching over.
+pub fn compacted_log(sched: &FleetScheduler, fence: u64) -> Result<MemLog> {
+    let ops = sched.snapshot_ops()?;
+    let mut bytes = Vec::new();
+    for (i, (device, op)) in ops.into_iter().enumerate() {
+        let entry = JournalEntry {
+            seq: i as u64 + 1,
+            fence,
+            device,
+            epoch: EPOCH_UNCHECKED,
+            op,
+        };
+        bytes.extend_from_slice(&entry.encode_frame());
+    }
+    Ok(MemLog::with_bytes(bytes, fence))
+}

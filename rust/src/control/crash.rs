@@ -1,0 +1,109 @@
+//! Crash-point fault injection over the journal.
+//!
+//! A controller can die between any two journal appends — including in
+//! the middle of a migration, after the route flip but before the
+//! source teardown. Because the journal is append-only and every
+//! mutation journals *immediately* after applying, the on-disk state at
+//! any crash point is exactly a prefix of the final byte stream. The
+//! harness therefore does not need to actually kill processes: it
+//! captures the finished run's journal plus the digest trace recorded
+//! after every append, then recovers from every prefix and asserts the
+//! rebuilt state is byte-identical to what the never-crashed controller
+//! held at that same point.
+
+use anyhow::{ensure, Context, Result};
+
+use super::journal::{decode_log, MemLog};
+use super::recovery::{recover_scheduler, ControlDigest, RecoveryReport};
+use crate::fleet::FleetScheduler;
+
+/// All crash points of one finished controller run: the journal bytes,
+/// the byte offset of every entry boundary, and the ground-truth digest
+/// the live controller held right after each append.
+pub struct CrashPlan {
+    bytes: Vec<u8>,
+    fence: u64,
+    /// `boundaries[i]` = byte length of the journal after entry `i+1`
+    /// was appended — i.e. the on-disk state if the controller died
+    /// right after that append (and before the next).
+    boundaries: Vec<usize>,
+    digests: Vec<ControlDigest>,
+}
+
+impl CrashPlan {
+    /// Capture the crash plan from a finished (or paused) journaled run.
+    /// The scheduler must have been journaled with digest tracing on
+    /// ([`FleetScheduler::attach_journal`] with `trace: true`) so every
+    /// boundary has its ground-truth digest.
+    pub fn capture(sched: &FleetScheduler) -> Result<CrashPlan> {
+        let bytes = sched
+            .journal_snapshot()
+            .context("crash plan needs a journaled scheduler")?;
+        let fence = sched.journal_fence().expect("journal present");
+        let (entries, clean_len, damage) = decode_log(&bytes);
+        ensure!(damage.is_none(), "crash plan over a damaged journal");
+        ensure!(clean_len == bytes.len(), "crash plan over a damaged journal");
+        let mut boundaries = Vec::with_capacity(entries.len());
+        let mut pos = 0usize;
+        for entry in &entries {
+            pos += entry.encode_frame().len();
+            boundaries.push(pos);
+        }
+        let digests = sched.digest_trace().to_vec();
+        ensure!(
+            digests.len() == boundaries.len(),
+            "digest trace ({}) does not cover every journal entry ({}) — was the \
+             journal attached with trace on, before any mutation?",
+            digests.len(),
+            boundaries.len()
+        );
+        Ok(CrashPlan { bytes, fence, boundaries, digests })
+    }
+
+    /// Number of crash points (= journal entries).
+    pub fn len(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// True when the plan has no crash points.
+    pub fn is_empty(&self) -> bool {
+        self.boundaries.is_empty()
+    }
+
+    /// Recover a fresh scheduler from the journal prefix as of crash
+    /// point `i` (the state on disk had the controller died right after
+    /// entry `i+1`'s append).
+    pub fn recover_at(&self, i: usize) -> Result<(FleetScheduler, RecoveryReport)> {
+        let prefix = self.bytes[..self.boundaries[i]].to_vec();
+        recover_scheduler(Box::new(MemLog::with_bytes(prefix, self.fence)))
+    }
+
+    /// The ground-truth digest the live controller held at crash point
+    /// `i`.
+    pub fn expected_at(&self, i: usize) -> &ControlDigest {
+        &self.digests[i]
+    }
+
+    /// Kill the controller at **every** entry boundary and assert each
+    /// recovered scheduler's state is byte-identical to the live run's
+    /// digest at that point. Returns the number of crash points checked.
+    pub fn assert_all_boundaries(&self) -> Result<usize> {
+        for i in 0..self.len() {
+            let (sched, _report) = self
+                .recover_at(i)
+                .with_context(|| format!("recovering at crash point {i}"))?;
+            let got = sched.control_digest();
+            let want = self.expected_at(i);
+            ensure!(
+                got == *want,
+                "crash point {i} (after seq {}): recovered state diverged\n\
+                 want {want:?}\n got {got:?}",
+                i + 1
+            );
+            // Fold the recovered fleet back down cleanly (joins every
+            // device engine's worker threads).
+            let _ = sched.stop();
+        }
+        Ok(self.len())
+    }
+}

@@ -1,0 +1,117 @@
+//! Active/standby controller high availability over a shared journal.
+//!
+//! The active controller journals every mutation to a [`MemLog`] both
+//! controllers can reach (clones share the stream — the modeled stand-in
+//! for replicated storage). The standby *tails* the log: it decodes new
+//! entries as they appear but holds no fleet, so takeover is a replay,
+//! not a state transfer. On [`HaFleet::fail_controller`]:
+//!
+//! 1. the store's **fencing generation** is raised — from this instant
+//!    every append stamped with the old fence is refused at the store,
+//!    so a revived stale active cannot write history it no longer owns;
+//! 2. the standby recovers a fresh scheduler from the journal
+//!    ([`recover_scheduler`]) and becomes the new active, writing under
+//!    the raised fence.
+//!
+//! The returned stale controller is kept alive by the harness precisely
+//! to prove the fence holds: its next mutating call fails with
+//! "controller fenced off" before touching the store.
+
+use anyhow::{Context, Result};
+
+use super::journal::{decode_log, JournalEntry, MemLog};
+use super::recovery::{recover_scheduler, RecoveryReport};
+use crate::fleet::{FleetConfig, FleetScheduler};
+
+/// A standby controller tailing a shared journal: decodes entries as the
+/// active appends them, holds no fleet of its own.
+pub struct Standby {
+    log: MemLog,
+    entries: Vec<JournalEntry>,
+}
+
+impl Standby {
+    /// Tail `log` (a clone sharing the active controller's stream).
+    pub fn new(log: MemLog) -> Standby {
+        Standby { log, entries: Vec::new() }
+    }
+
+    /// Pull everything the active has appended since the last catch-up.
+    /// Returns how many new entries were seen. A damaged tail is simply
+    /// not consumed yet — the next catch-up (or takeover's recovery)
+    /// deals with it.
+    pub fn catch_up(&mut self) -> usize {
+        let (entries, _, _) = decode_log(&self.log.snapshot());
+        let new = entries.len().saturating_sub(self.entries.len());
+        self.entries = entries;
+        new
+    }
+
+    /// Entries this standby has caught up to.
+    pub fn entries(&self) -> &[JournalEntry] {
+        &self.entries
+    }
+}
+
+/// An active/standby pair over one shared in-memory journal.
+pub struct HaFleet {
+    log: MemLog,
+    active: Option<FleetScheduler>,
+    standby: Standby,
+    /// Completed failovers (each one raised the fence by one).
+    failovers: u64,
+}
+
+impl HaFleet {
+    /// Start a journaled fleet as the active controller, with a standby
+    /// tailing the same log. `trace` enables the per-entry digest trace
+    /// on the active (for crash-plan capture through
+    /// [`HaFleet::active`]).
+    pub fn start(cfg: FleetConfig, trace: bool) -> Result<HaFleet> {
+        let log = MemLog::new();
+        let mut active = FleetScheduler::start(cfg)?;
+        active.attach_journal(Box::new(log.clone()), trace)?;
+        let standby = Standby::new(log.clone());
+        Ok(HaFleet { log, active: Some(active), standby, failovers: 0 })
+    }
+
+    /// The current active controller.
+    pub fn active(&mut self) -> &mut FleetScheduler {
+        self.active.as_mut().expect("HA pair always has an active controller")
+    }
+
+    /// The standby (e.g. to drive catch-up between mutations).
+    pub fn standby(&mut self) -> &mut Standby {
+        &mut self.standby
+    }
+
+    /// Completed failovers so far.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Fail the active controller and promote the standby.
+    ///
+    /// Raises the store fence (instantly fencing off the old active),
+    /// recovers a fresh scheduler from the shared journal, and installs
+    /// it as the new active. Returns the *stale* controller (still
+    /// holding its dead journal handle) so callers can prove its
+    /// appends are refused, plus the recovery report.
+    pub fn fail_controller(&mut self) -> Result<(FleetScheduler, RecoveryReport)> {
+        let stale = self.active.take().expect("HA pair always has an active controller");
+        // Fence first: from here the stale controller cannot append,
+        // even if it keeps running while the standby replays.
+        self.log.raise_fence();
+        self.standby.catch_up();
+        let (fresh, report) = recover_scheduler(Box::new(self.log.clone()))
+            .context("standby takeover: recovering from the shared journal")?;
+        self.active = Some(fresh);
+        self.failovers += 1;
+        Ok((stale, report))
+    }
+
+    /// Shut the pair down, folding the active fleet's metrics.
+    pub fn stop(mut self) -> crate::coordinator::metrics::Metrics {
+        self.active.take().expect("active present").stop()
+    }
+}

@@ -1,0 +1,982 @@
+//! The append-only control-plane op journal.
+//!
+//! Every control-plane mutation — lifecycle ops, attested plan replays,
+//! route-table flips, tenant-registry changes, device power events — is
+//! recorded as one checksummed, length-prefixed frame:
+//!
+//! ```text
+//!   [len: u32 le] [body: len bytes] [crc: u64 le]     (one frame per entry)
+//! ```
+//!
+//! The body is a [`JournalEntry`]: monotonic sequence number, the fencing
+//! generation it was written under, the device the op targets (`None` for
+//! fleet-scoped ops), an epoch snapshot taken *after* the op applied (the
+//! replay cross-check), and the [`ControlOp`] itself. The crc is a
+//! splitmix64-fold over the body; [`decode_log`] stops at the first torn or
+//! corrupt frame and reports the clean prefix length, so recovery truncates
+//! instead of trusting damage.
+//!
+//! Storage is pluggable via [`LogStore`]: [`MemLog`] (cloneable, in-memory —
+//! tests and the standby tail) and [`FileLog`] (the CLI's durable store).
+//! Both carry a **fencing generation**: an append stamped with a stale fence
+//! is refused at the store, which is what makes active/standby failover safe
+//! against a revived stale controller (see [`crate::control::ha`]).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fleet::Replica;
+use crate::hypervisor::{LifecycleOp, MigrationPlan, RegionPlan};
+
+/// Epoch-snapshot sentinel for entries whose snapshot is deliberately not
+/// checked on replay (compacted snapshot entries synthesize state rather
+/// than re-tracing history, so no live-run snapshot exists to compare).
+pub const EPOCH_UNCHECKED: u64 = u64::MAX;
+
+/// Upper bound on one frame's body, to reject garbage length prefixes
+/// without attempting a huge allocation.
+const MAX_FRAME: u32 = 1 << 20;
+
+/// `FileLog` header magic ("control journal v1").
+const FILE_MAGIC: u64 = 0x464C_4F47_0C01_0001;
+
+// ---------------------------------------------------------------------------
+// Checksum
+// ---------------------------------------------------------------------------
+
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Frame checksum: a splitmix64 fold over the body bytes, length-salted.
+/// Not cryptographic (same stand-in policy as the plan MAC, DESIGN.md
+/// § Substitutions) — it detects torn writes and bit rot, not adversaries.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xC0DE_D00D_F1EE_7001u64 ^ bytes.len() as u64;
+    for chunk in bytes.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        h = mix64(h ^ u64::from_le_bytes(w));
+    }
+    mix64(h)
+}
+
+// ---------------------------------------------------------------------------
+// Byte codec
+// ---------------------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        None => put_u8(out, 0),
+        Some(x) => {
+            put_u8(out, 1);
+            put_u64(out, x);
+        }
+    }
+}
+fn put_opt_str(out: &mut Vec<u8>, v: Option<&str>) {
+    match v {
+        None => put_u8(out, 0),
+        Some(s) => {
+            put_u8(out, 1);
+            put_str(out, s);
+        }
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cursor { b, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.b.len(), "journal entry body truncated");
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_FRAME as usize, "journal string length corrupt");
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("journal string not utf-8")?)
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.u64()?),
+        })
+    }
+    fn opt_str(&mut self) -> Result<Option<String>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.str()?),
+        })
+    }
+    fn done(&self) -> Result<()> {
+        ensure!(self.pos == self.b.len(), "journal entry has trailing bytes");
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ops
+// ---------------------------------------------------------------------------
+
+/// One control-plane mutation, as recorded in the journal.
+///
+/// Device-scoped ops ([`ControlOp::Lifecycle`], [`ControlOp::AdvanceClock`],
+/// [`ControlOp::PlanSealed`], [`ControlOp::PowerOff`]) are journaled with
+/// `device: Some(d)`; fleet-scoped ops (routes, tenant registry, counters)
+/// with `device: None`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlOp {
+    /// Journal header: the fleet configuration recovery must boot before
+    /// replaying. Always the first entry of a fleet journal.
+    Boot {
+        /// Number of devices in the fleet.
+        devices: u32,
+        /// Artifacts directory the per-device `System`s were booted with.
+        artifacts_dir: String,
+        /// `true` for bin-pack placement, `false` for spread.
+        binpack: bool,
+        /// `true` if ingress used the remote (testbed-Ethernet) link model.
+        remote: bool,
+    },
+    /// A lifecycle op that was applied (successfully) on one device.
+    Lifecycle {
+        /// The op, exactly as applied.
+        op: LifecycleOp,
+    },
+    /// One device's modeled clock advanced by `f64::from_bits(dur_us_bits)`
+    /// microseconds (bits preserve the exact f64 across the codec).
+    AdvanceClock {
+        /// `f64::to_bits` of the advance duration in microseconds.
+        dur_us_bits: u64,
+    },
+    /// An attested `TenancyPlan`/migration plan passed verification on a
+    /// device target. Recovery re-verifies the recorded tag against the
+    /// recorded plan bytes — provenance survives the crash, reconstructed
+    /// state is never trusted on faith.
+    PlanSealed {
+        /// Plan name (the attestation is keyed over it).
+        name: String,
+        /// The plan's regions (design + stream edge by position).
+        regions: Vec<RegionPlan>,
+        /// The attestation MAC tag that verified.
+        tag: [u64; 2],
+    },
+    /// The route table published a replica set for a tenant.
+    SetRoutes {
+        /// Tenant whose routes were set.
+        tenant: u32,
+        /// The full replica list published.
+        replicas: Vec<Replica>,
+    },
+    /// The route table dropped a tenant entirely.
+    RemoveRoutes {
+        /// Tenant whose routes were removed.
+        tenant: u32,
+    },
+    /// A tenant entered the registry.
+    AdmitTenant {
+        /// Assigned tenant id.
+        tenant: u32,
+        /// Tenant (VI) name.
+        name: String,
+        /// Design recorded for future growth.
+        design: String,
+    },
+    /// A tenant's replica VI on one device was recorded in the registry.
+    BindReplica {
+        /// Tenant id.
+        tenant: u32,
+        /// Device holding the replica.
+        device: u32,
+        /// VI id of the replica on that device.
+        vi: u16,
+    },
+    /// A tenant left the registry.
+    RetireTenant {
+        /// Tenant id.
+        tenant: u32,
+    },
+    /// A migration completed: the registry moved the tenant's replica
+    /// binding from `from` to `to`.
+    MigrateDone {
+        /// Tenant id.
+        tenant: u32,
+        /// Source device.
+        from: u32,
+        /// Target device.
+        to: u32,
+        /// VI id on the target.
+        vi: u16,
+    },
+    /// A tenant's replica on a failed device could not be recovered and
+    /// was scrubbed (the `displaced` counter).
+    Displaced {
+        /// Tenant id.
+        tenant: u32,
+        /// The failed device.
+        device: u32,
+    },
+    /// A tenant's replica binding on one device was dropped without
+    /// displacement accounting (the decommission path's defensive
+    /// empty-VI scrub).
+    UnbindReplica {
+        /// Tenant id.
+        tenant: u32,
+        /// Device whose binding was dropped.
+        device: u32,
+    },
+    /// A device was powered off (decommission or failure).
+    PowerOff {
+        /// Device index.
+        device: u32,
+    },
+    /// Compaction epilogue: restores scheduler counters that history-derived
+    /// replay would otherwise reconstruct (compacted journals have no
+    /// history). Only written by the compactor.
+    Counters {
+        /// Lifetime completed migrations.
+        migrations: u64,
+        /// Lifetime displaced tenants.
+        displaced: u64,
+        /// Next tenant id to assign.
+        next_tenant: u32,
+    },
+}
+
+fn put_lifecycle(out: &mut Vec<u8>, op: &LifecycleOp) {
+    match op {
+        LifecycleOp::CreateVi { name } => {
+            put_u8(out, 0);
+            put_str(out, name);
+        }
+        LifecycleOp::Allocate { vi } => {
+            put_u8(out, 1);
+            put_u16(out, *vi);
+        }
+        LifecycleOp::Program { vi, vr, design, dest } => {
+            put_u8(out, 2);
+            put_u16(out, *vi);
+            put_u64(out, *vr as u64);
+            put_str(out, design);
+            put_opt_u64(out, dest.map(|d| d as u64));
+        }
+        LifecycleOp::Grow { vi, stream_src, design } => {
+            put_u8(out, 3);
+            put_u16(out, *vi);
+            put_opt_u64(out, stream_src.map(|s| s as u64));
+            put_str(out, design);
+        }
+        LifecycleOp::Wire { vi, src, dst } => {
+            put_u8(out, 4);
+            put_u16(out, *vi);
+            put_u64(out, *src as u64);
+            put_u64(out, *dst as u64);
+        }
+        LifecycleOp::Release { vi, vr } => {
+            put_u8(out, 5);
+            put_u16(out, *vi);
+            put_u64(out, *vr as u64);
+        }
+        LifecycleOp::DestroyVi { vi } => {
+            put_u8(out, 6);
+            put_u16(out, *vi);
+        }
+        LifecycleOp::AllocateAt { vi, vr } => {
+            put_u8(out, 7);
+            put_u16(out, *vi);
+            put_u64(out, *vr as u64);
+        }
+        LifecycleOp::FloorEpoch { vr, epoch } => {
+            put_u8(out, 8);
+            put_u64(out, *vr as u64);
+            put_u64(out, *epoch);
+        }
+    }
+}
+
+fn get_lifecycle(c: &mut Cursor) -> Result<LifecycleOp> {
+    Ok(match c.u8()? {
+        0 => LifecycleOp::CreateVi { name: c.str()? },
+        1 => LifecycleOp::Allocate { vi: c.u16()? },
+        2 => LifecycleOp::Program {
+            vi: c.u16()?,
+            vr: c.u64()? as usize,
+            design: c.str()?,
+            dest: c.opt_u64()?.map(|d| d as usize),
+        },
+        3 => LifecycleOp::Grow {
+            vi: c.u16()?,
+            stream_src: c.opt_u64()?.map(|s| s as usize),
+            design: c.str()?,
+        },
+        4 => LifecycleOp::Wire { vi: c.u16()?, src: c.u64()? as usize, dst: c.u64()? as usize },
+        5 => LifecycleOp::Release { vi: c.u16()?, vr: c.u64()? as usize },
+        6 => LifecycleOp::DestroyVi { vi: c.u16()? },
+        7 => LifecycleOp::AllocateAt { vi: c.u16()?, vr: c.u64()? as usize },
+        8 => LifecycleOp::FloorEpoch { vr: c.u64()? as usize, epoch: c.u64()? },
+        t => bail!("unknown lifecycle-op tag {t}"),
+    })
+}
+
+fn put_op(out: &mut Vec<u8>, op: &ControlOp) {
+    match op {
+        ControlOp::Boot { devices, artifacts_dir, binpack, remote } => {
+            put_u8(out, 0);
+            put_u32(out, *devices);
+            put_str(out, artifacts_dir);
+            put_u8(out, u8::from(*binpack));
+            put_u8(out, u8::from(*remote));
+        }
+        ControlOp::Lifecycle { op } => {
+            put_u8(out, 1);
+            put_lifecycle(out, op);
+        }
+        ControlOp::AdvanceClock { dur_us_bits } => {
+            put_u8(out, 2);
+            put_u64(out, *dur_us_bits);
+        }
+        ControlOp::PlanSealed { name, regions, tag } => {
+            put_u8(out, 3);
+            put_str(out, name);
+            put_u32(out, regions.len() as u32);
+            for r in regions {
+                put_opt_str(out, r.design.as_deref());
+                put_opt_u64(out, r.streams_to.map(|s| s as u64));
+            }
+            put_u64(out, tag[0]);
+            put_u64(out, tag[1]);
+        }
+        ControlOp::SetRoutes { tenant, replicas } => {
+            put_u8(out, 4);
+            put_u32(out, *tenant);
+            put_u32(out, replicas.len() as u32);
+            for r in replicas {
+                put_u64(out, r.device as u64);
+                put_u16(out, r.vi);
+                put_u64(out, r.vr as u64);
+                put_u64(out, r.epoch);
+                put_u8(out, u8::from(r.entry));
+            }
+        }
+        ControlOp::RemoveRoutes { tenant } => {
+            put_u8(out, 5);
+            put_u32(out, *tenant);
+        }
+        ControlOp::AdmitTenant { tenant, name, design } => {
+            put_u8(out, 6);
+            put_u32(out, *tenant);
+            put_str(out, name);
+            put_str(out, design);
+        }
+        ControlOp::BindReplica { tenant, device, vi } => {
+            put_u8(out, 7);
+            put_u32(out, *tenant);
+            put_u32(out, *device);
+            put_u16(out, *vi);
+        }
+        ControlOp::RetireTenant { tenant } => {
+            put_u8(out, 8);
+            put_u32(out, *tenant);
+        }
+        ControlOp::MigrateDone { tenant, from, to, vi } => {
+            put_u8(out, 9);
+            put_u32(out, *tenant);
+            put_u32(out, *from);
+            put_u32(out, *to);
+            put_u16(out, *vi);
+        }
+        ControlOp::Displaced { tenant, device } => {
+            put_u8(out, 10);
+            put_u32(out, *tenant);
+            put_u32(out, *device);
+        }
+        ControlOp::PowerOff { device } => {
+            put_u8(out, 11);
+            put_u32(out, *device);
+        }
+        ControlOp::Counters { migrations, displaced, next_tenant } => {
+            put_u8(out, 12);
+            put_u64(out, *migrations);
+            put_u64(out, *displaced);
+            put_u32(out, *next_tenant);
+        }
+        ControlOp::UnbindReplica { tenant, device } => {
+            put_u8(out, 13);
+            put_u32(out, *tenant);
+            put_u32(out, *device);
+        }
+    }
+}
+
+fn get_op(c: &mut Cursor) -> Result<ControlOp> {
+    Ok(match c.u8()? {
+        0 => ControlOp::Boot {
+            devices: c.u32()?,
+            artifacts_dir: c.str()?,
+            binpack: c.u8()? != 0,
+            remote: c.u8()? != 0,
+        },
+        1 => ControlOp::Lifecycle { op: get_lifecycle(c)? },
+        2 => ControlOp::AdvanceClock { dur_us_bits: c.u64()? },
+        3 => {
+            let name = c.str()?;
+            let n = c.u32()? as usize;
+            ensure!(n <= MAX_FRAME as usize, "plan region count corrupt");
+            let mut regions = Vec::with_capacity(n);
+            for _ in 0..n {
+                regions.push(RegionPlan {
+                    design: c.opt_str()?,
+                    streams_to: c.opt_u64()?.map(|s| s as usize),
+                });
+            }
+            ControlOp::PlanSealed { name, regions, tag: [c.u64()?, c.u64()?] }
+        }
+        4 => {
+            let tenant = c.u32()?;
+            let n = c.u32()? as usize;
+            ensure!(n <= MAX_FRAME as usize, "replica count corrupt");
+            let mut replicas = Vec::with_capacity(n);
+            for _ in 0..n {
+                replicas.push(Replica {
+                    device: c.u64()? as usize,
+                    vi: c.u16()?,
+                    vr: c.u64()? as usize,
+                    epoch: c.u64()?,
+                    entry: c.u8()? != 0,
+                });
+            }
+            ControlOp::SetRoutes { tenant, replicas }
+        }
+        5 => ControlOp::RemoveRoutes { tenant: c.u32()? },
+        6 => ControlOp::AdmitTenant { tenant: c.u32()?, name: c.str()?, design: c.str()? },
+        7 => ControlOp::BindReplica { tenant: c.u32()?, device: c.u32()?, vi: c.u16()? },
+        8 => ControlOp::RetireTenant { tenant: c.u32()? },
+        9 => ControlOp::MigrateDone {
+            tenant: c.u32()?,
+            from: c.u32()?,
+            to: c.u32()?,
+            vi: c.u16()?,
+        },
+        10 => ControlOp::Displaced { tenant: c.u32()?, device: c.u32()? },
+        11 => ControlOp::PowerOff { device: c.u32()? },
+        12 => ControlOp::Counters {
+            migrations: c.u64()?,
+            displaced: c.u64()?,
+            next_tenant: c.u32()?,
+        },
+        13 => ControlOp::UnbindReplica { tenant: c.u32()?, device: c.u32()? },
+        t => bail!("unknown control-op tag {t}"),
+    })
+}
+
+impl ControlOp {
+    /// Reconstruct the migration plan a [`ControlOp::PlanSealed`] entry
+    /// recorded (for re-verification of the attestation on recovery).
+    pub fn sealed_plan(&self) -> Option<(String, MigrationPlan, [u64; 2])> {
+        match self {
+            ControlOp::PlanSealed { name, regions, tag } => {
+                Some((name.clone(), MigrationPlan { regions: regions.clone() }, *tag))
+            }
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entries and frames
+// ---------------------------------------------------------------------------
+
+/// One decoded journal entry (the frame body).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    /// Monotonic sequence number, from 1, no gaps.
+    pub seq: u64,
+    /// Fencing generation the entry was appended under.
+    pub fence: u64,
+    /// Device the op targets; `None` for fleet-scoped ops.
+    pub device: Option<usize>,
+    /// Epoch snapshot taken after the op applied: the device's shadow
+    /// VR-epoch sum for device-scoped ops, the route-table generation for
+    /// fleet-scoped ops, or [`EPOCH_UNCHECKED`].
+    pub epoch: u64,
+    /// The recorded mutation.
+    pub op: ControlOp,
+}
+
+impl JournalEntry {
+    fn encode_body(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        put_u64(&mut out, self.seq);
+        put_u64(&mut out, self.fence);
+        put_opt_u64(&mut out, self.device.map(|d| d as u64));
+        put_u64(&mut out, self.epoch);
+        put_op(&mut out, &self.op);
+        out
+    }
+
+    fn decode_body(body: &[u8]) -> Result<JournalEntry> {
+        let mut c = Cursor::new(body);
+        let e = JournalEntry {
+            seq: c.u64()?,
+            fence: c.u64()?,
+            device: c.opt_u64()?.map(|d| d as usize),
+            epoch: c.u64()?,
+            op: get_op(&mut c)?,
+        };
+        c.done()?;
+        Ok(e)
+    }
+
+    /// Encode this entry as one framed record (`[len][body][crc]`).
+    pub fn encode_frame(&self) -> Vec<u8> {
+        let body = self.encode_body();
+        let mut out = Vec::with_capacity(body.len() + 12);
+        put_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        put_u64(&mut out, checksum(&body));
+        out
+    }
+}
+
+/// Why [`decode_log`] stopped before the end of the byte stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TailDamage {
+    /// Byte offset of the first damaged frame (= the clean prefix length).
+    pub offset: usize,
+    /// Human-readable damage description (torn frame, checksum, decode…).
+    pub reason: String,
+}
+
+/// Decode a journal byte stream into entries.
+///
+/// Returns the decoded clean prefix, its byte length, and — if the stream
+/// did not decode to the end — a [`TailDamage`] describing the first torn,
+/// corrupt, or out-of-sequence frame. The clean prefix is always usable:
+/// recovery truncates the store to `clean_len` and degrades gracefully
+/// instead of refusing the whole journal.
+pub fn decode_log(bytes: &[u8]) -> (Vec<JournalEntry>, usize, Option<TailDamage>) {
+    let mut entries = Vec::new();
+    let mut pos = 0usize;
+    let mut next_seq = 1u64;
+    let mut last_fence = 0u64;
+    let damage = loop {
+        if pos == bytes.len() {
+            break None;
+        }
+        let damaged = |reason: String| Some(TailDamage { offset: pos, reason });
+        if bytes.len() - pos < 4 {
+            break damaged("torn frame: truncated length prefix".into());
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        if len > MAX_FRAME {
+            break damaged(format!("corrupt frame: implausible length {len}"));
+        }
+        let total = 4 + len as usize + 8;
+        if bytes.len() - pos < total {
+            break damaged(format!("torn frame: {} of {total} bytes", bytes.len() - pos));
+        }
+        let body = &bytes[pos + 4..pos + 4 + len as usize];
+        let crc = u64::from_le_bytes(bytes[pos + 4 + len as usize..pos + total].try_into().unwrap());
+        if crc != checksum(body) {
+            break damaged("corrupt frame: checksum mismatch".into());
+        }
+        let entry = match JournalEntry::decode_body(body) {
+            Ok(e) => e,
+            Err(e) => break damaged(format!("corrupt frame: {e}")),
+        };
+        if entry.seq != next_seq {
+            break damaged(format!("sequence gap: expected {next_seq}, found {}", entry.seq));
+        }
+        if entry.fence < last_fence {
+            break damaged(format!("fence went backwards: {} < {last_fence}", entry.fence));
+        }
+        next_seq += 1;
+        last_fence = entry.fence;
+        entries.push(entry);
+        pos += total;
+    };
+    (entries, pos, damage)
+}
+
+// ---------------------------------------------------------------------------
+// Stores
+// ---------------------------------------------------------------------------
+
+/// Pluggable journal storage: an append-only byte stream plus a fencing
+/// generation. Appends carry the writer's fence and are **refused** when it
+/// is older than the store's — the store-side half of controller fencing.
+pub trait LogStore: Send {
+    /// The full current byte stream.
+    fn snapshot(&self) -> Vec<u8>;
+    /// Append one encoded frame under the writer's fence.
+    fn append(&mut self, fence: u64, frame: &[u8]) -> Result<()>;
+    /// Truncate the stream to `len` bytes (tail repair).
+    fn truncate(&mut self, len: usize) -> Result<()>;
+    /// Current fencing generation.
+    fn fence(&self) -> u64;
+    /// Bump the fencing generation (failover); returns the new value.
+    fn raise_fence(&mut self) -> u64;
+}
+
+/// In-memory log store. Cloning shares the underlying stream — a clone is
+/// how a standby controller tails the active controller's journal.
+#[derive(Clone, Default)]
+pub struct MemLog {
+    inner: std::sync::Arc<std::sync::Mutex<MemLogInner>>,
+}
+
+#[derive(Default)]
+struct MemLogInner {
+    bytes: Vec<u8>,
+    fence: u64,
+}
+
+impl MemLog {
+    /// A fresh, empty shared log at fence 0.
+    pub fn new() -> MemLog {
+        MemLog::default()
+    }
+
+    /// A log pre-seeded with `bytes` at `fence` (crash-point harnesses
+    /// rebuild prefix stores this way).
+    pub fn with_bytes(bytes: Vec<u8>, fence: u64) -> MemLog {
+        MemLog {
+            inner: std::sync::Arc::new(std::sync::Mutex::new(MemLogInner { bytes, fence })),
+        }
+    }
+
+    /// Bytes currently in the stream (tailing without a trait object).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().bytes.len()
+    }
+
+    /// True when the stream holds no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl LogStore for MemLog {
+    fn snapshot(&self) -> Vec<u8> {
+        self.inner.lock().unwrap().bytes.clone()
+    }
+    fn append(&mut self, fence: u64, frame: &[u8]) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        ensure!(
+            fence >= g.fence,
+            "append fenced off: writer fence {fence} < store fence {} (stale controller)",
+            g.fence
+        );
+        g.bytes.extend_from_slice(frame);
+        Ok(())
+    }
+    fn truncate(&mut self, len: usize) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        ensure!(len <= g.bytes.len(), "truncate past end of log");
+        g.bytes.truncate(len);
+        Ok(())
+    }
+    fn fence(&self) -> u64 {
+        self.inner.lock().unwrap().fence
+    }
+    fn raise_fence(&mut self) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        g.fence += 1;
+        g.fence
+    }
+}
+
+/// File-backed log store for the CLI: a 16-byte header
+/// (`[magic: u64][fence: u64]`) followed by the frame stream. Reads and
+/// rewrites are whole-file — journal sizes at CLI scale make simplicity
+/// the right trade.
+pub struct FileLog {
+    path: std::path::PathBuf,
+}
+
+impl FileLog {
+    /// Open (or create empty) a file-backed journal at `path`.
+    pub fn open(path: impl Into<std::path::PathBuf>) -> Result<FileLog> {
+        let path = path.into();
+        let log = FileLog { path };
+        if !log.path.exists() {
+            log.write_parts(0, &[])?;
+        } else {
+            log.read_parts()?; // validate the header early
+        }
+        Ok(log)
+    }
+
+    fn read_parts(&self) -> Result<(u64, Vec<u8>)> {
+        let raw = std::fs::read(&self.path)
+            .with_context(|| format!("reading journal {}", self.path.display()))?;
+        ensure!(raw.len() >= 16, "journal file too short for its header");
+        let magic = u64::from_le_bytes(raw[0..8].try_into().unwrap());
+        ensure!(magic == FILE_MAGIC, "not a control journal (bad magic)");
+        let fence = u64::from_le_bytes(raw[8..16].try_into().unwrap());
+        Ok((fence, raw[16..].to_vec()))
+    }
+
+    fn write_parts(&self, fence: u64, bytes: &[u8]) -> Result<()> {
+        let mut raw = Vec::with_capacity(16 + bytes.len());
+        raw.extend_from_slice(&FILE_MAGIC.to_le_bytes());
+        raw.extend_from_slice(&fence.to_le_bytes());
+        raw.extend_from_slice(bytes);
+        std::fs::write(&self.path, raw)
+            .with_context(|| format!("writing journal {}", self.path.display()))
+    }
+}
+
+impl LogStore for FileLog {
+    fn snapshot(&self) -> Vec<u8> {
+        self.read_parts().map(|(_, b)| b).unwrap_or_default()
+    }
+    fn append(&mut self, fence: u64, frame: &[u8]) -> Result<()> {
+        let (stored, mut bytes) = self.read_parts()?;
+        ensure!(
+            fence >= stored,
+            "append fenced off: writer fence {fence} < store fence {stored} (stale controller)"
+        );
+        bytes.extend_from_slice(frame);
+        self.write_parts(stored, &bytes)
+    }
+    fn truncate(&mut self, len: usize) -> Result<()> {
+        let (stored, mut bytes) = self.read_parts()?;
+        ensure!(len <= bytes.len(), "truncate past end of log");
+        bytes.truncate(len);
+        self.write_parts(stored, &bytes)
+    }
+    fn fence(&self) -> u64 {
+        self.read_parts().map(|(f, _)| f).unwrap_or(0)
+    }
+    fn raise_fence(&mut self) -> u64 {
+        let (stored, bytes) = self.read_parts().unwrap_or((0, Vec::new()));
+        let _ = self.write_parts(stored + 1, &bytes);
+        stored + 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal
+// ---------------------------------------------------------------------------
+
+/// The writer handle over a [`LogStore`]: assigns sequence numbers, stamps
+/// the fencing generation it was opened under, and refuses to write once
+/// the store's fence has moved past it ([`Journal::ensure_leader`]).
+pub struct Journal {
+    store: Box<dyn LogStore>,
+    next_seq: u64,
+    fence: u64,
+}
+
+impl Journal {
+    /// Open a journal over `store`, continuing after any entries already
+    /// present (the clean prefix; a damaged tail is an error here — run
+    /// recovery first, which repairs it).
+    pub fn open(store: Box<dyn LogStore>) -> Result<Journal> {
+        let bytes = store.snapshot();
+        let (entries, _, damage) = decode_log(&bytes);
+        if let Some(d) = damage {
+            bail!("journal tail damaged at byte {}: {} (recover first)", d.offset, d.reason);
+        }
+        let fence = store.fence();
+        Ok(Journal { store, next_seq: entries.len() as u64 + 1, fence })
+    }
+
+    /// Append one op. `device`/`epoch` follow the [`JournalEntry`] contract.
+    /// Refused (without writing) when this writer has been fenced off.
+    pub fn append(&mut self, device: Option<usize>, epoch: u64, op: ControlOp) -> Result<u64> {
+        self.ensure_leader()?;
+        let entry = JournalEntry { seq: self.next_seq, fence: self.fence, device, epoch, op };
+        self.store.append(self.fence, &entry.encode_frame())?;
+        self.next_seq += 1;
+        Ok(entry.seq)
+    }
+
+    /// Fail fast when the store's fencing generation has moved past the one
+    /// this journal was opened under — i.e. another controller took over.
+    pub fn ensure_leader(&self) -> Result<()> {
+        let store_fence = self.store.fence();
+        ensure!(
+            self.fence >= store_fence,
+            "controller fenced off: journal fence {} < store fence {store_fence} \
+             (a newer controller took over)",
+            self.fence
+        );
+        Ok(())
+    }
+
+    /// The store's full byte stream.
+    pub fn snapshot(&self) -> Vec<u8> {
+        self.store.snapshot()
+    }
+
+    /// Decode the store's clean prefix (damaged tails are ignored here;
+    /// recovery repairs them).
+    pub fn entries(&self) -> Vec<JournalEntry> {
+        decode_log(&self.store.snapshot()).0
+    }
+
+    /// The fencing generation this writer holds.
+    pub fn fence(&self) -> u64 {
+        self.fence
+    }
+
+    /// Number of entries written (clean prefix length at open + appends).
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Journal")
+            .field("next_seq", &self.next_seq)
+            .field("fence", &self.fence)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(seq: u64, op: ControlOp) -> JournalEntry {
+        JournalEntry { seq, fence: 0, device: Some(0), epoch: seq * 10, op }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let ops = vec![
+            ControlOp::Boot { devices: 2, artifacts_dir: "a".into(), binpack: true, remote: false },
+            ControlOp::Lifecycle { op: LifecycleOp::CreateVi { name: "t0".into() } },
+            ControlOp::Lifecycle {
+                op: LifecycleOp::Program { vi: 1, vr: 3, design: "fft".into(), dest: Some(4) },
+            },
+            ControlOp::AdvanceClock { dur_us_bits: 10_000.0f64.to_bits() },
+            ControlOp::SetRoutes {
+                tenant: 7,
+                replicas: vec![Replica { device: 1, vi: 2, vr: 3, epoch: 4, entry: true }],
+            },
+            ControlOp::PlanSealed {
+                name: "t7".into(),
+                regions: vec![
+                    RegionPlan { design: Some("fpu".into()), streams_to: Some(1) },
+                    RegionPlan { design: Some("aes".into()), streams_to: None },
+                ],
+                tag: [0xDEAD, 0xBEEF],
+            },
+            ControlOp::Counters { migrations: 3, displaced: 1, next_tenant: 9 },
+        ];
+        let mut bytes = Vec::new();
+        for (i, op) in ops.iter().enumerate() {
+            bytes.extend_from_slice(&entry(i as u64 + 1, op.clone()).encode_frame());
+        }
+        let (decoded, clean, damage) = decode_log(&bytes);
+        assert!(damage.is_none(), "{damage:?}");
+        assert_eq!(clean, bytes.len());
+        assert_eq!(decoded.len(), ops.len());
+        for (d, op) in decoded.iter().zip(&ops) {
+            assert_eq!(&d.op, op);
+        }
+    }
+
+    #[test]
+    fn torn_tail_yields_clean_prefix() {
+        let mut bytes = Vec::new();
+        for i in 0..3u64 {
+            bytes.extend_from_slice(
+                &entry(i + 1, ControlOp::RemoveRoutes { tenant: i as u32 }).encode_frame(),
+            );
+        }
+        let clean = bytes.len();
+        bytes.extend_from_slice(&[9, 0, 0]); // torn length prefix
+        let (decoded, len, damage) = decode_log(&bytes);
+        assert_eq!(decoded.len(), 3);
+        assert_eq!(len, clean);
+        assert!(damage.unwrap().reason.contains("torn"));
+    }
+
+    #[test]
+    fn corrupt_crc_stops_the_decode() {
+        let mut bytes = Vec::new();
+        for i in 0..3u64 {
+            bytes.extend_from_slice(
+                &entry(i + 1, ControlOp::RetireTenant { tenant: i as u32 }).encode_frame(),
+            );
+        }
+        let frame = entry(1, ControlOp::RemoveRoutes { tenant: 0 }).encode_frame();
+        let first = frame.len();
+        // Flip one body byte of the first frame.
+        bytes[6] ^= 0xFF;
+        let (decoded, len, damage) = decode_log(&bytes);
+        assert!(decoded.is_empty());
+        assert_eq!(len, 0);
+        assert!(damage.unwrap().reason.contains("checksum"));
+        let _ = first;
+    }
+
+    #[test]
+    fn memlog_fencing_refuses_stale_appends() {
+        let mut log = MemLog::new();
+        let frame = entry(1, ControlOp::PowerOff { device: 0 }).encode_frame();
+        log.append(0, &frame).unwrap();
+        let new_fence = log.raise_fence();
+        assert!(log.append(0, &frame).is_err(), "stale fence must be refused");
+        log.append(new_fence, &frame).unwrap();
+    }
+
+    #[test]
+    fn journal_open_continues_sequence() {
+        let mem = MemLog::new();
+        let mut j = Journal::open(Box::new(mem.clone())).unwrap();
+        j.append(None, 0, ControlOp::RemoveRoutes { tenant: 1 }).unwrap();
+        j.append(None, 0, ControlOp::RemoveRoutes { tenant: 2 }).unwrap();
+        drop(j);
+        let mut j2 = Journal::open(Box::new(mem.clone())).unwrap();
+        assert_eq!(j2.next_seq(), 3);
+        let seq = j2.append(None, 0, ControlOp::RemoveRoutes { tenant: 3 }).unwrap();
+        assert_eq!(seq, 3);
+        let (entries, _, damage) = decode_log(&mem.snapshot());
+        assert!(damage.is_none());
+        assert_eq!(entries.len(), 3);
+    }
+}

@@ -1,0 +1,129 @@
+//! The event-sourced control plane.
+//!
+//! Every control-plane mutation — per-device lifecycle ops, attested
+//! tenancy-plan replays, route-table flips, tenant-registry changes,
+//! device power events — is recorded in an append-only, checksummed
+//! journal ([`journal`]) the moment it lands. The journal is the
+//! durable truth; the in-memory scheduler is a cache of its replay:
+//!
+//! - **[`recovery`]** rebuilds a [`FleetScheduler`](crate::fleet::FleetScheduler)
+//!   from the journal by deterministic replay, cross-checking each
+//!   entry's epoch snapshot, and rebuilds a *dead* device's shadow for
+//!   failure recovery;
+//! - **[`crash`]** kills the controller at every entry boundary —
+//!   including mid-migration, between route-flip and source teardown —
+//!   and asserts the recovered state is byte-identical to the
+//!   never-crashed run;
+//! - **[`ha`]** runs an active/standby pair over a shared log with a
+//!   fencing generation, so a revived stale controller's appends are
+//!   refused at the store;
+//! - **[`compact`]** synthesizes a snapshot stream that recovers the
+//!   same *serving* state in O(state) entries instead of O(history).
+//!
+//! ```text
+//!   mutate ──apply──► live state ──append──► [len][body][crc] … journal
+//!                                               │
+//!            recover_scheduler ◄──replay────────┘   (truncate torn tail,
+//!                                                    verify epochs + plans)
+//! ```
+
+pub mod compact;
+pub mod crash;
+pub mod ha;
+pub mod journal;
+pub mod recovery;
+
+pub use compact::compacted_log;
+pub use crash::CrashPlan;
+pub use ha::{HaFleet, Standby};
+pub use journal::{
+    checksum, decode_log, ControlOp, FileLog, Journal, JournalEntry, LogStore, MemLog,
+    TailDamage, EPOCH_UNCHECKED,
+};
+pub use recovery::{
+    rebuild_device_shadow, recover_scheduler, ControlDigest, RecoveryReport, ServingDigest,
+};
+
+use crate::coordinator::churn::{generate_fleet, FleetChurnConfig, FleetEvent};
+use crate::fleet::{FleetScheduler, TenantId};
+
+/// A seeded control-plane churn trace: the fleet churn generator's
+/// admissions, growths, retirements, decommissions, and failures, with
+/// the *serving* events (requests, hot-spots) filtered out. Control-only
+/// traces keep every journaled quantity deterministic — route-table
+/// round-robin counters and reconfiguration-debt decay never move — so
+/// a replayed journal reproduces the live run byte-for-byte, which is
+/// what the crash-point harness asserts.
+pub fn control_trace(devices: usize, events: usize, seed: u64) -> Vec<FleetEvent> {
+    generate_fleet(&FleetChurnConfig { seed, events, devices })
+        .into_iter()
+        .filter(|e| !matches!(e, FleetEvent::Request { .. } | FleetEvent::Hotspot { .. }))
+        .collect()
+}
+
+/// Outcome counts from [`drive_control_trace`].
+#[derive(Debug, Clone, Default)]
+pub struct ControlTraceStats {
+    /// Admissions the scheduler accepted.
+    pub admitted: u64,
+    /// Admissions refused (fleet full at that trace point).
+    pub turned_away: u64,
+    /// Ops (grow/retire/decommission/fail) the scheduler refused.
+    pub refused_ops: u64,
+}
+
+/// Drive a control-only trace against a scheduler, mapping trace tenant
+/// indices (positions in the `Admit` sequence) to live [`TenantId`]s the
+/// same way [`replay_fleet`](crate::fleet::replay_fleet) does: refused
+/// admissions leave their slot unmapped and later ops on that slot are
+/// skipped, so the trace tolerates divergence between the generator's
+/// capacity bookkeeping and live placement.
+pub fn drive_control_trace(
+    sched: &mut FleetScheduler,
+    events: &[FleetEvent],
+) -> ControlTraceStats {
+    let mut map: Vec<Option<TenantId>> = Vec::new();
+    let mut stats = ControlTraceStats::default();
+    for event in events {
+        match event {
+            FleetEvent::Admit { name, design } => match sched.admit_tenant(name, design) {
+                Ok(tenant) => {
+                    map.push(Some(tenant));
+                    stats.admitted += 1;
+                }
+                Err(_) => {
+                    map.push(None);
+                    stats.turned_away += 1;
+                }
+            },
+            FleetEvent::GrowReplica { tenant } => {
+                if let Some(Some(t)) = map.get(*tenant as usize) {
+                    if sched.grow_tenant(*t).is_err() {
+                        stats.refused_ops += 1;
+                    }
+                }
+            }
+            FleetEvent::Retire { tenant } => {
+                if let Some(slot) = map.get_mut(*tenant as usize) {
+                    if let Some(t) = slot.take() {
+                        if sched.retire_tenant(t).is_err() {
+                            stats.refused_ops += 1;
+                        }
+                    }
+                }
+            }
+            FleetEvent::Decommission { device } => {
+                if sched.decommission(*device).is_err() {
+                    stats.refused_ops += 1;
+                }
+            }
+            FleetEvent::Fail { device } => {
+                if sched.fail_device(*device).is_err() {
+                    stats.refused_ops += 1;
+                }
+            }
+            FleetEvent::Hotspot { .. } | FleetEvent::Request { .. } => {}
+        }
+    }
+    stats
+}

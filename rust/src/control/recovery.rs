@@ -1,0 +1,158 @@
+//! Deterministic recovery: rebuild a [`FleetScheduler`] by replaying its
+//! journal.
+//!
+//! Recovery is a pure function of the journal bytes: decode the clean
+//! prefix (truncating any torn or corrupt tail), boot a fresh fleet from
+//! the `Boot` header, replay every entry through the *live* mutation
+//! paths with the journal detached, and cross-check each entry's epoch
+//! snapshot against the replayed state — a divergence means the journal
+//! and the replay logic disagree, and recovery refuses to hand over a
+//! fleet it cannot prove equivalent. The recovered scheduler re-attaches
+//! the (repaired) store and continues appending where the journal left
+//! off.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::journal::{decode_log, ControlOp, JournalEntry, LogStore, TailDamage, EPOCH_UNCHECKED};
+use crate::cloud::{Ingress, Link};
+use crate::device::Device;
+use crate::fleet::{FleetConfig, FleetScheduler, PlacePolicy};
+use crate::hypervisor::{Hypervisor, Policy};
+use crate::noc::NocSim;
+use crate::placer::case_study_floorplan;
+
+/// Byte-exact digest of a scheduler's control-plane state (shadow
+/// tenancy, clocks, registry, routes, counters). Equality is the
+/// crash-point harness's recovered-state gate; see
+/// [`FleetScheduler::control_digest`].
+#[derive(Clone, PartialEq, Eq)]
+pub struct ControlDigest {
+    /// One canonical line per state element, in fixed order.
+    pub lines: Vec<String>,
+}
+
+impl std::fmt::Debug for ControlDigest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // One element per line so a failed equality assert diffs readably.
+        writeln!(f, "ControlDigest [")?;
+        for line in &self.lines {
+            writeln!(f, "  {line}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Digest of what a *client* can observe through the serving front-end —
+/// VI numbering and route-table version counters deliberately excluded,
+/// so a compacted journal (which renumbers VIs and collapses route
+/// history) can still prove serving equivalence. See
+/// [`FleetScheduler::serving_digest`].
+#[derive(Clone, PartialEq, Eq)]
+pub struct ServingDigest {
+    /// One canonical line per observable element, in fixed order.
+    pub lines: Vec<String>,
+}
+
+impl std::fmt::Debug for ServingDigest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "ServingDigest [")?;
+        for line in &self.lines {
+            writeln!(f, "  {line}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// What one recovery pass did.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Journal entries replayed (including the `Boot` header).
+    pub entries: usize,
+    /// Tail damage found (and truncated away), if any.
+    pub truncated: Option<TailDamage>,
+    /// Fencing generation the recovered controller writes under.
+    pub fence: u64,
+}
+
+/// Rebuild a [`FleetScheduler`] from a journal store by deterministic
+/// replay.
+///
+/// A damaged tail is truncated to the clean prefix first (reported in
+/// the [`RecoveryReport`], not an error — a torn last frame is exactly
+/// what a crash leaves behind). Each replayed entry's epoch snapshot is
+/// cross-checked against the rebuilt state; a mismatch aborts recovery
+/// rather than handing over a fleet that diverged from the record. The
+/// store is re-attached to the recovered scheduler, which continues
+/// appending at the journal's next sequence number under the store's
+/// current fence.
+pub fn recover_scheduler(
+    mut store: Box<dyn LogStore>,
+) -> Result<(FleetScheduler, RecoveryReport)> {
+    let bytes = store.snapshot();
+    let (entries, clean_len, damage) = decode_log(&bytes);
+    if damage.is_some() {
+        store.truncate(clean_len)?;
+    }
+    ensure!(!entries.is_empty(), "journal holds no entries (nothing to recover)");
+    let ControlOp::Boot { devices, artifacts_dir, binpack, remote } = &entries[0].op else {
+        bail!("journal does not start with a Boot header (seq 1 is {:?})", entries[0].op);
+    };
+    let cfg = FleetConfig {
+        devices: *devices as usize,
+        artifacts_dir: artifacts_dir.clone(),
+        policy: if *binpack { PlacePolicy::BinPack } else { PlacePolicy::Spread },
+        ingress: Ingress::uniform(
+            *devices as usize,
+            if *remote { Link::testbed_ethernet() } else { Link::local() },
+        ),
+    };
+    let mut sched = FleetScheduler::start(cfg)?;
+    for entry in &entries[1..] {
+        sched
+            .replay_control(entry)
+            .with_context(|| format!("replaying journal entry seq {}", entry.seq))?;
+        if entry.epoch != EPOCH_UNCHECKED {
+            let got = match entry.device {
+                Some(d) => sched.device_epoch_sum(d),
+                None => sched.route_generation(),
+            };
+            ensure!(
+                got == entry.epoch,
+                "replay diverged at seq {}: journal snapshot epoch {} but replay produced {got}",
+                entry.seq,
+                entry.epoch
+            );
+        }
+    }
+    let fence = store.fence();
+    sched.attach_journal(store, false)?;
+    Ok((sched, RecoveryReport { entries: entries.len(), truncated: damage, fence }))
+}
+
+/// Rebuild one device's shadow hypervisor (and NoC) as of the journal's
+/// record, by replaying only that device's lifecycle entries onto a
+/// fresh case-study floorplan.
+///
+/// This is what device-failure recovery exports migration plans from:
+/// the *durable* record of the dead device's tenancy, instead of the
+/// live in-memory shadow of a device that just failed.
+pub fn rebuild_device_shadow(
+    entries: &[JournalEntry],
+    device: usize,
+) -> Result<(Hypervisor, NocSim)> {
+    let dev = Device::vu9p();
+    let (topo, fp) = case_study_floorplan(&dev)?;
+    let mut noc = NocSim::new(topo.clone());
+    let mut hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
+    for entry in entries {
+        if entry.device != Some(device) {
+            continue;
+        }
+        if let ControlOp::Lifecycle { op } = &entry.op {
+            hv.apply(op, &crate::coordinator::design_footprint, &mut noc).with_context(
+                || format!("rebuilding device {device} shadow at journal seq {}", entry.seq),
+            )?;
+        }
+    }
+    Ok((hv, noc))
+}

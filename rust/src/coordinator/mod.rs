@@ -182,6 +182,10 @@ pub struct System {
     /// Aggregated request metrics.
     pub metrics: Metrics,
     next_rid: u64,
+    /// Optional control-plane journal: when attached, every *successful*
+    /// lifecycle op is recorded (apply-then-journal) so the tenancy can
+    /// be rebuilt by replay after a crash.
+    journal: Option<crate::control::Journal>,
 }
 
 /// Response of one request.
@@ -239,7 +243,47 @@ impl System {
             io_cfg: IoConfig::default(),
             metrics: Metrics::default(),
             next_rid: 0,
+            journal: None,
         })
+    }
+
+    /// Attach a control-plane journal: from here every successful
+    /// lifecycle op is appended (device 0, epoch = the hypervisor's
+    /// VR-epoch sum), continuing after any entries already in the store.
+    /// A single-device journal is headerless — no fleet `Boot` entry —
+    /// and is replayed with [`System::replay_journal`].
+    pub fn attach_journal(
+        &mut self,
+        store: Box<dyn crate::control::LogStore>,
+    ) -> Result<()> {
+        self.journal = Some(crate::control::Journal::open(store)?);
+        Ok(())
+    }
+
+    /// Replay a single-device journal's lifecycle entries onto this
+    /// system (typically [`System::empty`]), rebuilding the recorded
+    /// tenancy. Each entry's epoch snapshot is cross-checked against the
+    /// replayed hypervisor; op count on success.
+    pub fn replay_journal(&mut self, entries: &[crate::control::JournalEntry]) -> Result<usize> {
+        let mut applied = 0usize;
+        for entry in entries {
+            let crate::control::ControlOp::Lifecycle { op } = &entry.op else {
+                anyhow::bail!("system journal holds a non-lifecycle entry at seq {}", entry.seq);
+            };
+            self.lifecycle(op)
+                .map_err(|e| anyhow::anyhow!("replaying seq {}: {e}", entry.seq))?;
+            if entry.epoch != crate::control::EPOCH_UNCHECKED {
+                let got: u64 = self.hv.vrs.iter().map(|r| r.epoch).sum();
+                anyhow::ensure!(
+                    got == entry.epoch,
+                    "replay diverged at seq {}: journal snapshot epoch {} but replay produced {got}",
+                    entry.seq,
+                    entry.epoch
+                );
+            }
+            applied += 1;
+        }
+        Ok(applied)
     }
 
     /// Build the paper's case-study deployment: 5 VIs, 6 VRs, 6 compiled
@@ -306,7 +350,20 @@ impl System {
             &mut self.core.noc,
             op,
         ) {
-            Ok((outcome, _)) => Ok(outcome),
+            Ok((outcome, _)) => {
+                if let Some(journal) = &mut self.journal {
+                    // Apply-then-journal: only ops that landed are
+                    // recorded; refused probes (below) never enter the
+                    // durable history.
+                    let epoch: u64 = self.hv.vrs.iter().map(|r| r.epoch).sum();
+                    journal.append(
+                        Some(0),
+                        epoch,
+                        crate::control::ControlOp::Lifecycle { op: op.clone() },
+                    )?;
+                }
+                Ok(outcome)
+            }
             Err(e) => {
                 // Refused control-plane ops are part of the isolation
                 // story: a hostile tenant probing the lifecycle surface

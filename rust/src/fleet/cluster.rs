@@ -47,6 +47,21 @@ impl FleetCluster {
         Ok(Self::from_scheduler(FleetScheduler::start(cfg)?))
     }
 
+    /// Boot a fleet with an event-sourced journal attached (see
+    /// [`FleetScheduler::attach_journal`]) behind the shared front-end.
+    /// Every control-plane mutation driven through this cluster is
+    /// journaled to `store`; `trace` enables the per-entry digest trace
+    /// for crash-point harnesses.
+    pub fn start_journaled(
+        cfg: super::FleetConfig,
+        store: Box<dyn crate::control::LogStore>,
+        trace: bool,
+    ) -> Result<FleetCluster> {
+        let mut sched = FleetScheduler::start(cfg)?;
+        sched.attach_journal(store, trace)?;
+        Ok(Self::from_scheduler(sched))
+    }
+
     /// Wrap an already-running scheduler.
     pub fn from_scheduler(sched: FleetScheduler) -> FleetCluster {
         let handle = sched.handle();

@@ -32,6 +32,7 @@ use super::placement::{self, DeviceLoad, PlacePolicy};
 use super::router::Replica;
 use super::{FleetScheduler, TenantId};
 use crate::api::PlanTarget;
+use crate::control::{rebuild_device_shadow, ControlOp, JournalEntry};
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome, MigrationPlan};
 use anyhow::{anyhow, bail, ensure, Result};
 
@@ -59,11 +60,30 @@ impl PlanTarget for DeviceTarget<'_> {
     }
 
     fn advance_clock(&mut self, dur_us: f64) -> Result<()> {
-        self.fleet.devices[self.device].handle.advance_clock(dur_us)
+        self.fleet.advance_device_clock(self.device, dur_us)
     }
 
     fn adjacent(&self, a: usize, b: usize) -> bool {
         self.fleet.devices[self.device].shadow_hv.topo.vrs_adjacent(a, b)
+    }
+
+    fn journal_plan(
+        &mut self,
+        name: &str,
+        plan: &MigrationPlan,
+        attestation: &crate::api::Attestation,
+    ) -> Result<()> {
+        // The journal carries the verified plan *with* its MAC tag, so
+        // recovery re-verifies provenance instead of trusting the
+        // reconstructed op stream.
+        self.fleet.journal_op(
+            Some(self.device),
+            ControlOp::PlanSealed {
+                name: name.into(),
+                regions: plan.regions.clone(),
+                tag: attestation.tag_words(),
+            },
+        )
     }
 }
 
@@ -137,6 +157,7 @@ impl FleetScheduler {
         from: usize,
         to: usize,
     ) -> Result<MigrationReport> {
+        self.ensure_leader()?;
         ensure!(from != to, "migration source and target are the same device {from}");
         ensure!(to < self.n_devices(), "device {to} does not exist");
         ensure!(self.device_alive(to), "target device {to} is not alive");
@@ -151,6 +172,29 @@ impl FleetScheduler {
         // 1. Export from the source shadow (valid even if the source
         //    engine is already dead — the failure-recovery path).
         let plan = self.devices[from].shadow_hv.migration_plan(src_vi)?;
+        self.migrate_with_plan(tenant, from, to, plan)
+    }
+
+    /// Steps 2–4 of the migration protocol, from an already-exported
+    /// plan. Split from [`FleetScheduler::migrate_tenant`] so failure
+    /// recovery can feed a plan rebuilt *from the journal* (the dead
+    /// device's shadow as of its last journaled op) through the exact
+    /// same replay/flip/release path.
+    pub(super) fn migrate_with_plan(
+        &mut self,
+        tenant: TenantId,
+        from: usize,
+        to: usize,
+        plan: MigrationPlan,
+    ) -> Result<MigrationReport> {
+        let rec = self
+            .tenants
+            .get(&tenant)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
+        let Some(&src_vi) = rec.vis.get(&from) else {
+            bail!("tenant {tenant} has no replicas on device {from}");
+        };
         ensure!(!plan.is_empty(), "tenant {tenant} holds no regions on device {from}");
         ensure!(
             self.devices[to].shadow_hv.free_vrs() >= plan.len(),
@@ -167,9 +211,13 @@ impl FleetScheduler {
         let sealed = crate::api::AttestationKey::platform().seal(&rec.name, &plan);
         let (dst_vi, new_replicas) =
             self.clone_tenancy(&plan, &rec.name, dst_vi, to, Some(&sealed))?;
-        self.devices[to].handle.advance_clock(MIGRATION_DRAIN_US)?;
+        self.advance_device_clock(to, MIGRATION_DRAIN_US)?;
         // 3. Flip the routes: drop source-device replicas, add the new
-        //    ones, one generation bump.
+        //    ones, one generation bump. A crash in the window between
+        //    this flip and the source release below recovers with the
+        //    table already pointing at the target and the source VI
+        //    still present — replay reproduces exactly that state, and
+        //    re-issuing the migration (or a retire) cleans the source.
         let mut replicas: Vec<Replica> = self
             .routes
             .replicas(tenant)
@@ -177,19 +225,23 @@ impl FleetScheduler {
             .filter(|r| r.device != from)
             .collect();
         replicas.extend(new_replicas);
-        self.routes.set_routes(tenant, replicas.clone());
+        self.publish_routes(tenant, replicas.clone())?;
         // 4. Drain + destroy the source VI: every source region releases
         //    through the engine's hot-drain path and the tenant record
         //    goes with it (no empty ViRecord left behind). Skipped when
         //    the source already died — nothing left to release.
         if self.devices[from].alive {
-            self.devices[from].handle.advance_clock(MIGRATION_DRAIN_US)?;
+            self.advance_device_clock(from, MIGRATION_DRAIN_US)?;
             self.apply_on(from, &LifecycleOp::DestroyVi { vi: src_vi })?;
         }
         let rec = self.tenants.get_mut(&tenant).expect("checked above");
         rec.vis.remove(&from);
         rec.vis.insert(to, dst_vi);
         self.migrations += 1;
+        self.journal_op(
+            None,
+            ControlOp::MigrateDone { tenant, from: from as u32, to: to as u32, vi: dst_vi },
+        )?;
         Ok(MigrationReport { tenant, from, to, regions: plan.len(), replicas })
     }
 
@@ -225,6 +277,7 @@ impl FleetScheduler {
     /// already-migrated tenants stay migrated) and the device keeps
     /// serving.
     pub fn decommission(&mut self, device: usize) -> Result<u64> {
+        self.ensure_leader()?;
         ensure!(device < self.n_devices(), "device {device} does not exist");
         ensure!(self.device_alive(device), "device {device} is already down");
         let mut moved = 0u64;
@@ -236,6 +289,10 @@ impl FleetScheduler {
                 // is destroyed rather than left behind.
                 let _ = self.apply_on(device, &LifecycleOp::DestroyVi { vi });
                 self.tenants.get_mut(&tenant).expect("listed above").vis.remove(&device);
+                self.journal_op(
+                    None,
+                    ControlOp::UnbindReplica { tenant, device: device as u32 },
+                )?;
                 continue;
             }
             let design = self.tenants[&tenant].design.clone();
@@ -245,7 +302,7 @@ impl FleetScheduler {
             self.migrate_tenant(tenant, device, to)?;
             moved += 1;
         }
-        self.power_off(device);
+        self.power_off(device)?;
         Ok(moved)
     }
 
@@ -256,9 +313,16 @@ impl FleetScheduler {
     /// [`FleetScheduler::displaced`]. Returns the number of tenants
     /// recovered.
     pub fn fail_device(&mut self, device: usize) -> Result<u64> {
+        self.ensure_leader()?;
         ensure!(device < self.n_devices(), "device {device} does not exist");
         ensure!(self.device_alive(device), "device {device} is already down");
-        self.power_off(device);
+        // Snapshot the journal *before* the power-off lands in it: the
+        // entries up to here reconstruct the dead device's shadow as of
+        // its last journaled op — the durable record recovery exports
+        // tenancies from, instead of trusting the live in-memory shadow
+        // of a device that just failed.
+        let history: Option<Vec<JournalEntry>> = self.journal.as_ref().map(|j| j.entries());
+        self.power_off(device)?;
         let mut recovered = 0u64;
         for tenant in self.tenants_on(device) {
             let vi = self.tenants[&tenant].vis[&device];
@@ -270,12 +334,25 @@ impl FleetScheduler {
             // must not abort the loop: the device is already dead, and
             // every remaining tenant still needs its routes scrubbed.
             let recovered_here = match target {
-                Some(to) => self.migrate_tenant(tenant, device, to).is_ok(),
+                Some(to) => {
+                    // Journaled fleets export from the journal-rebuilt
+                    // shadow; un-journaled ones fall back to the live
+                    // (forensic) shadow, as before.
+                    let plan = match &history {
+                        Some(entries) => rebuild_device_shadow(entries, device)
+                            .and_then(|(hv, _)| hv.migration_plan(vi)),
+                        None => self.devices[device].shadow_hv.migration_plan(vi),
+                    };
+                    match plan {
+                        Ok(plan) => self.migrate_with_plan(tenant, device, to, plan).is_ok(),
+                        Err(_) => false,
+                    }
+                }
                 None => false,
             };
             if recovered_here {
-                // The source engine is gone; migrate_tenant skipped the
-                // source release and replayed from the shadow.
+                // The source engine is gone; migrate_with_plan skipped
+                // the source release and replayed from the journal.
                 recovered += 1;
             } else {
                 // Unplaceable (or the replay was refused): drop the dead
@@ -287,22 +364,28 @@ impl FleetScheduler {
                     .into_iter()
                     .filter(|r| r.device != device)
                     .collect();
-                self.routes.set_routes(tenant, replicas);
+                self.publish_routes(tenant, replicas)?;
                 self.tenants.get_mut(&tenant).expect("listed above").vis.remove(&device);
                 self.displaced += 1;
+                self.journal_op(
+                    None,
+                    ControlOp::Displaced { tenant, device: device as u32 },
+                )?;
             }
         }
         Ok(recovered)
     }
 
-    /// Stop `device`'s engine, fold its metrics, and mark it dead.
-    fn power_off(&mut self, device: usize) {
+    /// Stop `device`'s engine, fold its metrics, mark it dead, and
+    /// journal the power-off.
+    pub(crate) fn power_off(&mut self, device: usize) -> Result<()> {
         let node = &mut self.devices[device];
         node.alive = false;
         if let Some(engine) = node.engine.take() {
             let metrics = engine.stop();
             self.collected.merge(&metrics);
         }
+        self.journal_op(Some(device), ControlOp::PowerOff { device: device as u32 })
     }
 
     /// One hot-spot rebalance pass: when the alive device that absorbed
@@ -314,6 +397,7 @@ impl FleetScheduler {
     /// demand moved. Returns `Ok(None)` when the fleet is balanced
     /// enough.
     pub fn rebalance(&mut self, factor: f64) -> Result<Option<MigrationReport>> {
+        self.ensure_leader()?;
         ensure!(factor >= 1.0, "rebalance factor must be >= 1.0");
         // Per-device routed demand since the last rebalance pass.
         let deltas: Vec<u64> = {

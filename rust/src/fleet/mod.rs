@@ -47,6 +47,7 @@ pub use placement::{DeviceLoad, PlacePolicy};
 pub use router::{Replica, RouteTable, Routed};
 
 use crate::cloud::Ingress;
+use crate::control::{ControlDigest, ControlOp, Journal, JournalEntry, LogStore, ServingDigest};
 use crate::coordinator::churn::FleetEvent;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::sharded::{ShardedEngine, ShardedHandle};
@@ -78,6 +79,32 @@ fn node_capacity(node: &DeviceNode, footprint: Option<&crate::device::Resources>
 /// before surfacing the error (each retry requires the route table to
 /// have moved since the refused resolve, so the loop cannot spin).
 const MAX_ROUTE_RETRIES: u32 = 4;
+
+/// Terminal front-end routing error: the tenant has no live replica to
+/// send the request to — either its routes were scrubbed (retired, or
+/// displaced by a device failure), or the table kept moving under the
+/// call until the bounded retry budget ran out. A client that sees this
+/// should fail fast, not spin: no amount of immediate retrying will
+/// conjure a replica.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouteUnavailable {
+    /// The tenant the request was addressed to.
+    pub tenant: TenantId,
+    /// Resolve/retry attempts made before giving up.
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for RouteUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant {} has no live replica (gave up after {} route attempts)",
+            self.tenant, self.attempts
+        )
+    }
+}
+
+impl std::error::Error for RouteUnavailable {}
 
 /// Fleet deployment configuration.
 #[derive(Debug, Clone)]
@@ -159,6 +186,20 @@ pub struct FleetScheduler {
     /// Metrics folded in from devices already stopped (failures,
     /// decommissions); [`FleetScheduler::stop`] merges the rest.
     collected: Metrics,
+    /// Artifacts directory the fleet booted with (recorded in the
+    /// journal's `Boot` header so recovery can reboot the same fleet).
+    artifacts_dir: String,
+    /// The event-sourced control-plane journal, when attached: every
+    /// successful control-plane mutation appends one entry *after* it
+    /// applied (so a crash between apply and append loses at most the
+    /// tail op — the journal is always a consistent prefix).
+    journal: Option<Journal>,
+    /// When true, a [`ControlDigest`] of the live state is captured after
+    /// every journal append (the crash-point harness's ground truth).
+    trace_digests: bool,
+    /// Digest after each journal entry: `digests[i]` is the state right
+    /// after entry `seq == i + 1` was appended.
+    digests: Vec<ControlDigest>,
 }
 
 /// Client handle onto the fleet front-end: resolves the route, charges
@@ -195,13 +236,16 @@ impl FleetHandle {
     /// refusals happen before any compute, and a refused call is retried
     /// only when the route table's generation moved past the one the
     /// route was resolved at (i.e. a migration flipped the tenant under
-    /// the call) — otherwise the error surfaces.
+    /// the call) — otherwise the error surfaces. The retry loop is
+    /// bounded: a tenant whose routes are permanently scrubbed — or kept
+    /// moving past [`MAX_ROUTE_RETRIES`] re-resolves — fails fast with a
+    /// terminal [`RouteUnavailable`] instead of spinning.
     pub fn submit(&self, tenant: TenantId, payload: impl Into<Arc<[u8]>>) -> Result<FleetResponse> {
         let payload: Arc<[u8]> = payload.into();
         let mut attempts = 0u32;
         loop {
             let Some(routed) = self.routes.resolve(tenant) else {
-                bail!("tenant {tenant} has no live replica");
+                return Err(RouteUnavailable { tenant, attempts }.into());
             };
             let replica = routed.replica;
             let handle = self
@@ -239,8 +283,13 @@ impl FleetHandle {
                     // clocks and double-count rejections.
                     let moved = self.routes.entry_generation(tenant)
                         != Some(routed.generation);
-                    if attempts >= MAX_ROUTE_RETRIES || !moved {
+                    if !moved {
                         return Err(e);
+                    }
+                    if attempts >= MAX_ROUTE_RETRIES {
+                        // The table kept moving under the call until the
+                        // retry budget ran out — terminal, not retryable.
+                        return Err(RouteUnavailable { tenant, attempts }.into());
                     }
                 }
             }
@@ -288,6 +337,10 @@ impl FleetScheduler {
             migrations: 0,
             displaced: 0,
             collected: Metrics::default(),
+            artifacts_dir: cfg.artifacts_dir,
+            journal: None,
+            trace_digests: false,
+            digests: Vec::new(),
         })
     }
 
@@ -340,9 +393,13 @@ impl FleetScheduler {
     /// Advance every alive device's modeled arrival clock by `dur_us` of
     /// idle time (e.g. the gap between a deployment wave and the traffic
     /// that follows it — reconfiguration windows elapse during it).
-    pub fn advance_clocks(&self, dur_us: f64) -> Result<()> {
-        for node in self.devices.iter().filter(|n| n.alive) {
-            node.handle.advance_clock(dur_us)?;
+    /// Journaled per device, like every control-plane mutation.
+    pub fn advance_clocks(&mut self, dur_us: f64) -> Result<()> {
+        self.ensure_leader()?;
+        let alive: Vec<usize> =
+            (0..self.devices.len()).filter(|&d| self.devices[d].alive).collect();
+        for d in alive {
+            self.advance_device_clock(d, dur_us)?;
         }
         Ok(())
     }
@@ -432,6 +489,10 @@ impl FleetScheduler {
         for &(_, dur_us) in &delta.reconfig {
             node.reconfig_debt_us += dur_us;
         }
+        // Apply-then-journal: only ops that actually landed are recorded,
+        // so a crash between the two loses at most this one op and the
+        // journal stays a consistent prefix of history.
+        self.journal_op(Some(device), ControlOp::Lifecycle { op: op.clone() })?;
         Ok(outcome)
     }
 
@@ -489,6 +550,7 @@ impl FleetScheduler {
     /// device is touched, so a stripped or tampered plan is refused with
     /// the fleet state unchanged.
     pub fn deploy_tenancy(&mut self, tenancy: &crate::api::TenancyPlan) -> Result<TenantId> {
+        self.ensure_leader()?;
         let name = tenancy.name();
         let plan = tenancy.migration();
         ensure!(!plan.is_empty(), "tenancy plan '{name}' has no regions");
@@ -506,13 +568,18 @@ impl FleetScheduler {
         self.next_tenant += 1;
         self.tenants.insert(
             tenant,
-            TenantRecord {
-                name: name.into(),
-                design: primary,
-                vis: BTreeMap::from([(device, vi)]),
-            },
+            TenantRecord { name: name.into(), design: primary.clone(), vis: BTreeMap::new() },
         );
-        self.routes.set_routes(tenant, replicas);
+        self.journal_op(
+            None,
+            ControlOp::AdmitTenant { tenant, name: name.into(), design: primary },
+        )?;
+        self.tenants.get_mut(&tenant).expect("inserted above").vis.insert(device, vi);
+        self.journal_op(
+            None,
+            ControlOp::BindReplica { tenant, device: device as u32, vi },
+        )?;
+        self.publish_routes(tenant, replicas)?;
         Ok(tenant)
     }
 
@@ -525,6 +592,7 @@ impl FleetScheduler {
     /// front-end immediately balances the tenant's requests across all
     /// of its entry replicas.
     pub fn grow_tenant(&mut self, tenant: TenantId) -> Result<Replica> {
+        self.ensure_leader()?;
         let rec = self
             .tenants
             .get(&tenant)
@@ -554,9 +622,10 @@ impl FleetScheduler {
             .copied()
             .ok_or_else(|| anyhow!("tenant {tenant}'s plan programs no region"))?;
         self.tenants.get_mut(&tenant).expect("checked above").vis.insert(device, vi);
+        self.journal_op(None, ControlOp::BindReplica { tenant, device: device as u32, vi })?;
         let mut replicas = self.routes.replicas(tenant);
         replicas.extend(new_replicas);
-        self.routes.set_routes(tenant, replicas);
+        self.publish_routes(tenant, replicas)?;
         Ok(replica)
     }
 
@@ -564,13 +633,15 @@ impl FleetScheduler {
     /// it occupies (waiting out open reconfiguration windows — the
     /// drain), so neither regions nor empty VI records are left behind.
     pub fn retire_tenant(&mut self, tenant: TenantId) -> Result<()> {
+        self.ensure_leader()?;
         let Some(rec) = self.tenants.remove(&tenant) else { bail!("unknown tenant {tenant}") };
-        self.routes.remove(tenant);
+        self.journal_op(None, ControlOp::RetireTenant { tenant })?;
+        self.unpublish_routes(tenant)?;
         for (&device, &vi) in &rec.vis {
             if !self.devices[device].alive {
                 continue; // died earlier; nothing to release
             }
-            self.devices[device].handle.advance_clock(MIGRATION_DRAIN_US)?;
+            self.advance_device_clock(device, MIGRATION_DRAIN_US)?;
             self.apply_on(device, &LifecycleOp::DestroyVi { vi })?;
         }
         Ok(())
@@ -587,6 +658,482 @@ impl FleetScheduler {
             }
         }
         total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-sourced control plane: journaling, replay, snapshots
+// ---------------------------------------------------------------------------
+
+impl FleetScheduler {
+    /// Attach an event-sourced journal to this scheduler. A fresh (empty)
+    /// store gets the `Boot` header describing this fleet's configuration
+    /// — recovery reboots from it — so attach on a freshly started
+    /// scheduler before any tenancy exists; a store that already holds a
+    /// clean journal is continued (the recovery path re-attaches this
+    /// way). With `trace` set, a [`ControlDigest`] of the live state is
+    /// captured after every entry — the crash-point harness's per-boundary
+    /// ground truth.
+    pub fn attach_journal(&mut self, store: Box<dyn LogStore>, trace: bool) -> Result<()> {
+        let mut journal = Journal::open(store)?;
+        self.trace_digests = trace;
+        if journal.next_seq() == 1 {
+            let boot = ControlOp::Boot {
+                devices: self.devices.len() as u32,
+                artifacts_dir: self.artifacts_dir.clone(),
+                binpack: matches!(self.policy, PlacePolicy::BinPack),
+                remote: self.remote_ingress(),
+            };
+            journal.append(None, self.routes.generation(), boot)?;
+        }
+        self.journal = Some(journal);
+        if trace {
+            let digest = self.control_digest();
+            self.digests.push(digest);
+        }
+        Ok(())
+    }
+
+    /// Whether the fleet's ingress links are the remote (testbed-Ethernet)
+    /// model rather than free local links — derived from the charge for a
+    /// probe request, so the `Boot` header can reproduce the ingress plan.
+    fn remote_ingress(&self) -> bool {
+        self.ingress.ingress_us(0, 1024) > 0.0
+    }
+
+    /// The attached journal's full byte stream (`None` when un-journaled).
+    pub fn journal_snapshot(&self) -> Option<Vec<u8>> {
+        self.journal.as_ref().map(|j| j.snapshot())
+    }
+
+    /// The fencing generation the attached journal writes under.
+    pub fn journal_fence(&self) -> Option<u64> {
+        self.journal.as_ref().map(|j| j.fence())
+    }
+
+    /// The per-entry digest trace captured when the journal was attached
+    /// with tracing on: `[i]` is the state right after entry `seq == i+1`.
+    pub fn digest_trace(&self) -> &[ControlDigest] {
+        &self.digests
+    }
+
+    /// Sum of the device's shadow per-VR lifecycle epochs — the epoch
+    /// snapshot stamped on device-scoped journal entries (recovery
+    /// re-computes it after replaying each entry and refuses to continue
+    /// past a divergence).
+    pub(crate) fn device_epoch_sum(&self, device: usize) -> u64 {
+        self.devices[device].shadow_hv.vrs.iter().map(|r| r.epoch).sum()
+    }
+
+    /// The route table's generation counter (the epoch snapshot for
+    /// fleet-scoped journal entries).
+    pub(crate) fn route_generation(&self) -> u64 {
+        self.routes.generation()
+    }
+
+    /// Fail fast when another controller has fenced this one off (the
+    /// store's fencing generation moved past the attached journal's).
+    /// Un-journaled schedulers are always leaders. Every public mutating
+    /// control-plane method runs this before touching any state.
+    fn ensure_leader(&self) -> Result<()> {
+        match &self.journal {
+            Some(j) => j.ensure_leader(),
+            None => Ok(()),
+        }
+    }
+
+    /// Append one op to the journal (no-op when un-journaled — recovery
+    /// replays through the same mutation paths with the journal detached,
+    /// which is exactly what keeps replay from re-journaling history).
+    /// The epoch snapshot is taken *after* the op applied: the device's
+    /// shadow epoch sum for device-scoped entries, the route-table
+    /// generation for fleet-scoped ones.
+    pub(crate) fn journal_op(&mut self, device: Option<usize>, op: ControlOp) -> Result<()> {
+        if self.journal.is_none() {
+            return Ok(());
+        }
+        let epoch = match device {
+            Some(d) => self.device_epoch_sum(d),
+            None => self.routes.generation(),
+        };
+        self.journal.as_mut().expect("checked above").append(device, epoch, op)?;
+        if self.trace_digests {
+            let digest = self.control_digest();
+            self.digests.push(digest);
+        }
+        Ok(())
+    }
+
+    /// Advance one device's modeled arrival clock and journal the advance
+    /// — the single clock path every control-plane flow (deploy settle,
+    /// migration drain, idle-gap advance) goes through.
+    pub(crate) fn advance_device_clock(&mut self, device: usize, dur_us: f64) -> Result<()> {
+        self.devices[device].handle.advance_clock(dur_us)?;
+        self.journal_op(Some(device), ControlOp::AdvanceClock { dur_us_bits: dur_us.to_bits() })
+    }
+
+    /// Publish a tenant's replica set to the route table and journal the
+    /// flip (the only `set_routes` call site on the live control plane).
+    pub(crate) fn publish_routes(&mut self, tenant: TenantId, replicas: Vec<Replica>) -> Result<()> {
+        self.routes.set_routes(tenant, replicas.clone());
+        self.journal_op(None, ControlOp::SetRoutes { tenant, replicas })
+    }
+
+    /// Drop a tenant from the route table and journal the removal.
+    fn unpublish_routes(&mut self, tenant: TenantId) -> Result<()> {
+        self.routes.remove(tenant);
+        self.journal_op(None, ControlOp::RemoveRoutes { tenant })
+    }
+
+    /// Apply one journal entry to this scheduler (deterministic recovery's
+    /// inner step). The journal must be detached while replaying — the
+    /// mutation paths below are the live ones, and with a journal present
+    /// they would re-journal history.
+    pub(crate) fn replay_control(&mut self, entry: &JournalEntry) -> Result<()> {
+        match &entry.op {
+            // The Boot header is consumed by `recover_scheduler` (it
+            // determines the fleet configuration before any scheduler
+            // exists); replaying it onto a booted fleet is a no-op.
+            ControlOp::Boot { .. } => Ok(()),
+            ControlOp::Lifecycle { op } => {
+                let device = entry
+                    .device
+                    .ok_or_else(|| anyhow!("journal: lifecycle entry without a device"))?;
+                self.apply_on(device, op).map(|_| ())
+            }
+            ControlOp::AdvanceClock { dur_us_bits } => {
+                let device = entry
+                    .device
+                    .ok_or_else(|| anyhow!("journal: clock entry without a device"))?;
+                self.devices[device].handle.advance_clock(f64::from_bits(*dur_us_bits))
+            }
+            ControlOp::PlanSealed { .. } => {
+                // Re-verify the recorded attestation against the recorded
+                // plan bytes: provenance survives the crash; tampered
+                // journals are refused here instead of silently trusted.
+                let (name, plan, tag) = entry.op.sealed_plan().expect("matched PlanSealed");
+                crate::api::verify_attestation(
+                    &name,
+                    &plan,
+                    Some(&crate::api::Attestation::from_tag_words(tag)),
+                )
+            }
+            ControlOp::SetRoutes { tenant, replicas } => {
+                self.routes.set_routes(*tenant, replicas.clone());
+                Ok(())
+            }
+            ControlOp::RemoveRoutes { tenant } => {
+                self.routes.remove(*tenant);
+                Ok(())
+            }
+            ControlOp::AdmitTenant { tenant, name, design } => {
+                self.next_tenant = self.next_tenant.max(tenant + 1);
+                self.tenants.insert(
+                    *tenant,
+                    TenantRecord {
+                        name: name.clone(),
+                        design: design.clone(),
+                        vis: BTreeMap::new(),
+                    },
+                );
+                Ok(())
+            }
+            ControlOp::BindReplica { tenant, device, vi } => {
+                self.tenants
+                    .get_mut(tenant)
+                    .ok_or_else(|| anyhow!("journal: bind for unknown tenant {tenant}"))?
+                    .vis
+                    .insert(*device as usize, *vi);
+                Ok(())
+            }
+            ControlOp::UnbindReplica { tenant, device } => {
+                if let Some(rec) = self.tenants.get_mut(tenant) {
+                    rec.vis.remove(&(*device as usize));
+                }
+                Ok(())
+            }
+            ControlOp::RetireTenant { tenant } => {
+                self.tenants.remove(tenant);
+                Ok(())
+            }
+            ControlOp::MigrateDone { tenant, from, to, vi } => {
+                let rec = self
+                    .tenants
+                    .get_mut(tenant)
+                    .ok_or_else(|| anyhow!("journal: migration for unknown tenant {tenant}"))?;
+                rec.vis.remove(&(*from as usize));
+                rec.vis.insert(*to as usize, *vi);
+                self.migrations += 1;
+                Ok(())
+            }
+            ControlOp::Displaced { tenant, device } => {
+                if let Some(rec) = self.tenants.get_mut(tenant) {
+                    rec.vis.remove(&(*device as usize));
+                }
+                self.displaced += 1;
+                Ok(())
+            }
+            ControlOp::PowerOff { device } => self.power_off(*device as usize),
+            ControlOp::Counters { migrations, displaced, next_tenant } => {
+                self.migrations = *migrations;
+                self.displaced = *displaced;
+                self.next_tenant = *next_tenant;
+                Ok(())
+            }
+        }
+    }
+
+    /// Byte-exact digest of the control-plane state: per-device shadow
+    /// tenancy (VR statuses, epochs, footprints, stream destinations, VI
+    /// records), modeled clocks and reconfiguration debt, the tenant
+    /// registry, every tenant's routes and entry version, the table
+    /// generation, and the fleet counters. Two schedulers with equal
+    /// digests serve control-only traces identically — the crash-point
+    /// harness's equality gate.
+    pub fn control_digest(&self) -> ControlDigest {
+        let mut lines = Vec::new();
+        for (d, node) in self.devices.iter().enumerate() {
+            let clock_bits = if node.alive {
+                node.handle.clock_us().map(f64::to_bits).unwrap_or(0)
+            } else {
+                0
+            };
+            lines.push(format!(
+                "device {d} alive={} clock={clock_bits:016x} debt={:016x}",
+                node.alive,
+                node.reconfig_debt_us.to_bits()
+            ));
+            for (vr, rec) in node.shadow_hv.vrs.iter().enumerate() {
+                lines.push(format!(
+                    "  d{d} vr{vr} status={:?} epoch={} dest={:?} fp={:?}",
+                    rec.status, rec.epoch, rec.stream_dest, rec.footprint
+                ));
+            }
+            let mut vi_ids: Vec<u16> = node.shadow_hv.vis.keys().copied().collect();
+            vi_ids.sort_unstable();
+            for vi in vi_ids {
+                let rec = &node.shadow_hv.vis[&vi];
+                lines.push(format!("  d{d} vi{vi} name={} vrs={:?}", rec.name, rec.vrs));
+            }
+        }
+        for (t, rec) in &self.tenants {
+            lines.push(format!(
+                "tenant {t} name={} design={} vis={:?} routes={:?} gen={:?}",
+                rec.name,
+                rec.design,
+                rec.vis,
+                self.routes.replicas(*t),
+                self.routes.entry_generation(*t)
+            ));
+        }
+        lines.push(format!(
+            "routes gen={} next_tenant={} migrations={} displaced={}",
+            self.routes.generation(),
+            self.next_tenant,
+            self.migrations,
+            self.displaced
+        ));
+        ControlDigest { lines }
+    }
+
+    /// Serving-equivalence digest: what a client can observe through the
+    /// front-end — alive devices' programmed regions (design, epoch,
+    /// footprint, stream destination), wired direct links, the tenant
+    /// registry by device set, and each tenant's routable replicas. VI
+    /// numbering and route-table versions are deliberately excluded: a
+    /// compacted journal renumbers VIs and collapses route history, but
+    /// must reproduce a fleet that *serves* identically.
+    pub fn serving_digest(&self) -> ServingDigest {
+        let mut lines = Vec::new();
+        for (d, node) in self.devices.iter().enumerate() {
+            lines.push(format!("device {d} alive={}", node.alive));
+            if !node.alive {
+                continue;
+            }
+            for (vr, rec) in node.shadow_hv.vrs.iter().enumerate() {
+                let kind = match &rec.status {
+                    VrStatus::Free => "free".to_string(),
+                    VrStatus::Allocated { .. } => "allocated".to_string(),
+                    VrStatus::Programmed { design, .. } => format!("programmed:{design}"),
+                };
+                lines.push(format!(
+                    "  d{d} vr{vr} {kind} epoch={} dest={:?} fp={:?}",
+                    rec.epoch, rec.stream_dest, rec.footprint
+                ));
+            }
+            let n = node.shadow_hv.vrs.len();
+            for a in 0..n {
+                for b in 0..n {
+                    if a != b && node.shadow_noc.has_direct(a, b) {
+                        lines.push(format!("  d{d} link {a}->{b}"));
+                    }
+                }
+            }
+        }
+        for (t, rec) in &self.tenants {
+            let devs: Vec<usize> = rec.vis.keys().copied().collect();
+            let mut reps: Vec<String> = self
+                .routes
+                .replicas(*t)
+                .iter()
+                .map(|r| {
+                    format!("dev{} vr{} epoch{} entry={}", r.device, r.vr, r.epoch, r.entry)
+                })
+                .collect();
+            reps.sort();
+            lines.push(format!(
+                "tenant {t} name={} design={} devices={devs:?} replicas={reps:?}",
+                rec.name, rec.design
+            ));
+        }
+        lines.push(format!(
+            "next_tenant={} migrations={} displaced={}",
+            self.next_tenant, self.migrations, self.displaced
+        ));
+        ServingDigest { lines }
+    }
+
+    /// Synthesize the compacted-snapshot op stream for the current state:
+    /// the `(device, op)` pairs a fresh journal needs to reproduce this
+    /// fleet's *serving* state without replaying its history. Per alive
+    /// device, VIs are renumbered sequentially (engine `CreateVi` ids are
+    /// deterministic), regions re-claimed at their exact VRs
+    /// ([`LifecycleOp::AllocateAt`]), programmed with their stream
+    /// destinations, direct links re-wired after one settle advance, and
+    /// per-VR epochs restored exactly ([`LifecycleOp::FloorEpoch`]).
+    /// Dead devices are powered off without their forensic shadow state
+    /// (a compacted journal cannot re-export a dead device's tenancy —
+    /// that history is exactly what compaction discards). The registry,
+    /// routes (VI-renumbered), and lifetime counters close the stream.
+    pub(crate) fn snapshot_ops(&self) -> Result<Vec<(Option<usize>, ControlOp)>> {
+        let mut ops: Vec<(Option<usize>, ControlOp)> = Vec::new();
+        ops.push((
+            None,
+            ControlOp::Boot {
+                devices: self.devices.len() as u32,
+                artifacts_dir: self.artifacts_dir.clone(),
+                binpack: matches!(self.policy, PlacePolicy::BinPack),
+                remote: self.remote_ingress(),
+            },
+        ));
+        let mut vi_map: BTreeMap<(usize, u16), u16> = BTreeMap::new();
+        for (d, node) in self.devices.iter().enumerate() {
+            if !node.alive {
+                ops.push((Some(d), ControlOp::PowerOff { device: d as u32 }));
+                continue;
+            }
+            let hv = &node.shadow_hv;
+            let mut vi_ids: Vec<u16> = hv.vis.keys().copied().collect();
+            vi_ids.sort_unstable();
+            for (i, &old) in vi_ids.iter().enumerate() {
+                let nv = (i + 1) as u16;
+                vi_map.insert((d, old), nv);
+                let rec = &hv.vis[&old];
+                ops.push((
+                    Some(d),
+                    ControlOp::Lifecycle { op: LifecycleOp::CreateVi { name: rec.name.clone() } },
+                ));
+                for &vr in &rec.vrs {
+                    ops.push((
+                        Some(d),
+                        ControlOp::Lifecycle { op: LifecycleOp::AllocateAt { vi: nv, vr } },
+                    ));
+                }
+            }
+            let mut programmed = false;
+            for &old in &vi_ids {
+                let nv = vi_map[&(d, old)];
+                for &vr in &hv.vis[&old].vrs {
+                    if let VrStatus::Programmed { design, .. } = &hv.vrs[vr].status {
+                        programmed = true;
+                        ops.push((
+                            Some(d),
+                            ControlOp::Lifecycle {
+                                op: LifecycleOp::Program {
+                                    vi: nv,
+                                    vr,
+                                    design: design.clone(),
+                                    dest: hv.vrs[vr].stream_dest,
+                                },
+                            },
+                        ));
+                    }
+                }
+            }
+            let mut settle = 0.0f64;
+            if programmed {
+                // One settle advance closes every programming window so
+                // the wires below pass the reconfiguring-source precheck.
+                settle = crate::api::DEPLOY_SETTLE_US;
+                ops.push((Some(d), ControlOp::AdvanceClock { dur_us_bits: settle.to_bits() }));
+                for &old in &vi_ids {
+                    let nv = vi_map[&(d, old)];
+                    let rec = &hv.vis[&old];
+                    for &src in &rec.vrs {
+                        if let Some(dst) = hv.vrs[src].stream_dest {
+                            if rec.vrs.contains(&dst) && node.shadow_noc.has_direct(src, dst) {
+                                ops.push((
+                                    Some(d),
+                                    ControlOp::Lifecycle {
+                                        op: LifecycleOp::Wire { vi: nv, src, dst },
+                                    },
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            for (vr, rec) in hv.vrs.iter().enumerate() {
+                if rec.epoch > 0 {
+                    ops.push((
+                        Some(d),
+                        ControlOp::Lifecycle {
+                            op: LifecycleOp::FloorEpoch { vr, epoch: rec.epoch },
+                        },
+                    ));
+                }
+            }
+            let clock = node.handle.clock_us()?;
+            let remaining = clock - settle;
+            if remaining > 0.0 {
+                ops.push((Some(d), ControlOp::AdvanceClock { dur_us_bits: remaining.to_bits() }));
+            }
+        }
+        for (&t, rec) in &self.tenants {
+            ops.push((
+                None,
+                ControlOp::AdmitTenant {
+                    tenant: t,
+                    name: rec.name.clone(),
+                    design: rec.design.clone(),
+                },
+            ));
+            for (&dev, &old_vi) in &rec.vis {
+                let nv = vi_map.get(&(dev, old_vi)).copied().unwrap_or(old_vi);
+                ops.push((None, ControlOp::BindReplica { tenant: t, device: dev as u32, vi: nv }));
+            }
+            let replicas: Vec<Replica> = self
+                .routes
+                .replicas(t)
+                .into_iter()
+                .map(|mut r| {
+                    if let Some(&nv) = vi_map.get(&(r.device, r.vi)) {
+                        r.vi = nv;
+                    }
+                    r
+                })
+                .collect();
+            ops.push((None, ControlOp::SetRoutes { tenant: t, replicas }));
+        }
+        ops.push((
+            None,
+            ControlOp::Counters {
+                migrations: self.migrations,
+                displaced: self.displaced,
+                next_tenant: self.next_tenant,
+            },
+        ));
+        Ok(ops)
     }
 }
 

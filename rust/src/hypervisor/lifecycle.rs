@@ -96,6 +96,27 @@ pub enum LifecycleOp {
         /// VI to destroy.
         vi: u16,
     },
+    /// Allocate one *specific* free VR to a VI, bypassing the placement
+    /// policy. Emitted only by journal compaction (`control::compact`),
+    /// which must recreate the exact region indices a historical run
+    /// arrived at; policy-driven allocation could land elsewhere.
+    AllocateAt {
+        /// Requesting VI.
+        vi: u16,
+        /// The exact VR to claim (must be free).
+        vr: usize,
+    },
+    /// Raise a VR's lifecycle epoch to at least `epoch` (monotonic: a
+    /// lower target is a no-op). Emitted only by journal compaction to
+    /// restore exact historical epochs — route-table replicas pin epochs,
+    /// so a compacted recovery must reproduce them or every pinned
+    /// session/route would reject as stale.
+    FloorEpoch {
+        /// Target VR (any status).
+        vr: usize,
+        /// Epoch floor to impose.
+        epoch: u64,
+    },
 }
 
 /// What a successfully applied [`LifecycleOp`] produced.
@@ -299,6 +320,24 @@ impl Hypervisor {
                 }
                 Ok(())
             }
+            LifecycleOp::AllocateAt { vi, vr } => {
+                if !self.vis.contains_key(vi) {
+                    bail!("unknown VI {vi}");
+                }
+                if *vr >= self.vrs.len() {
+                    bail!("VR{vr} does not exist");
+                }
+                if self.vrs[*vr].status != VrStatus::Free {
+                    bail!("VR{vr} is not free");
+                }
+                Ok(())
+            }
+            LifecycleOp::FloorEpoch { vr, .. } => {
+                if *vr >= self.vrs.len() {
+                    bail!("VR{vr} does not exist");
+                }
+                Ok(())
+            }
         }
     }
 
@@ -408,6 +447,26 @@ impl Hypervisor {
                     delta.note_replan(vr);
                 }
                 self.destroy_vi(*vi, sim)?;
+                Ok((LifecycleOutcome::Done, delta))
+            }
+            LifecycleOp::AllocateAt { vi, vr } => {
+                // `precheck` established the VI exists and the VR is free;
+                // this is `allocate_vr` with the policy's pick pinned.
+                self.vrs[*vr].status = VrStatus::Allocated { vi: *vi };
+                self.vrs[*vr].registers.vi_id = *vi;
+                self.vrs[*vr].epoch += 1;
+                self.vis.get_mut(vi).unwrap().vrs.push(*vr);
+                sim.assign_vr(*vr, *vi);
+                self.events.push(Event::VrAllocated { vi: *vi, vr: *vr });
+                delta.note_replan(*vr);
+                Ok((LifecycleOutcome::Vr(*vr), delta))
+            }
+            LifecycleOp::FloorEpoch { vr, epoch } => {
+                if self.vrs[*vr].epoch < *epoch {
+                    self.vrs[*vr].epoch = *epoch;
+                    // Pinned-epoch snapshots of the region are now stale.
+                    delta.note_replan(*vr);
+                }
                 Ok((LifecycleOutcome::Done, delta))
             }
         }

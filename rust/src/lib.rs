@@ -9,6 +9,7 @@ pub mod accel;
 pub mod api;
 pub mod bench_support;
 pub mod cloud;
+pub mod control;
 pub mod coordinator;
 pub mod device;
 pub mod estimate;

@@ -7,6 +7,9 @@ use anyhow::Result;
 use fpga_mt::accel::CASE_STUDY;
 use fpga_mt::api::{SerialBackend, ServingBackend, TenantRef};
 use fpga_mt::cloud::{compare, fig14_io_trips, Ingress, IoConfig, Link, Scheme};
+use fpga_mt::control::{
+    control_trace, decode_log, drive_control_trace, recover_scheduler, FileLog, HaFleet, LogStore,
+};
 use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
 use fpga_mt::coordinator::metrics::Metrics;
 use fpga_mt::coordinator::redteam::{self, AttackClass, RedteamConfig, RedteamEvent, RedteamReplay};
@@ -37,9 +40,10 @@ fn main() -> Result<()> {
         Some("case-study") => cmd_case_study(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("isolation") => cmd_isolation(&args),
+        Some("journal") => cmd_journal(&args),
         _ => {
             eprintln!(
-                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation> [--...]\n\
+                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation|journal> [--...]\n\
                  \n  resources   Fig 8  router area sweep\
                  \n  power       Fig 9  router power sweep\
                  \n  fmax        Fig 10 max frequency sweep\
@@ -51,7 +55,8 @@ fn main() -> Result<()> {
                  \n  compare     Table II scheme comparison\
                  \n  case-study  Table I end-to-end deployment (native runtime)\
                  \n  fleet       Multi-FPGA fleet under churn (--devices, --events, --seed, --binpack, --remote)\
-                 \n  isolation   Red-team the tenancy boundary (--backend serial|sharded|fleet, --events, --seed, --rate, --log)"
+                 \n  isolation   Red-team the tenancy boundary (--backend serial|sharded|fleet, --events, --seed, --rate, --log)\
+                 \n  journal     Event-sourced control plane: journal dump|recover|failover (--file, --devices, --events, --seed)"
             );
             Ok(())
         }
@@ -346,6 +351,136 @@ fn cmd_isolation(args: &Args) -> Result<()> {
     }
     lt.print();
     Ok(())
+}
+
+/// The event-sourced control plane, end to end from the CLI:
+///
+/// - `journal recover` drives a seeded control-only churn trace into a
+///   file-backed journal (fresh file) or picks up an existing one, then
+///   rebuilds a scheduler by deterministic replay and proves the rebuilt
+///   state digest-identical to the journaled run;
+/// - `journal dump` decodes and prints a journal file entry by entry;
+/// - `journal failover` runs the active/standby pair in memory: half the
+///   trace, controller failure, standby takeover, fencing check, rest of
+///   the trace.
+fn cmd_journal(args: &Args) -> Result<()> {
+    let action = args.positional().get(1).map(String::as_str).unwrap_or("recover");
+    let file = args.get_or("file", "JOURNAL.bin");
+    let devices = args.get_usize("devices", 2);
+    let events = args.get_usize("events", 120);
+    let seed = args.get_u64("seed", 0xF1EE7);
+    match action {
+        "dump" => {
+            let store = FileLog::open(file)?;
+            let bytes = store.snapshot();
+            let (entries, clean_len, damage) = decode_log(&bytes);
+            let mut t = Table::new(vec!["seq", "fence", "device", "epoch", "op"]);
+            for e in &entries {
+                t.row(vec![
+                    e.seq.to_string(),
+                    e.fence.to_string(),
+                    e.device.map(|d| format!("dev{d}")).unwrap_or_else(|| "fleet".into()),
+                    if e.epoch == u64::MAX { "-".into() } else { e.epoch.to_string() },
+                    format!("{:?}", e.op),
+                ]);
+            }
+            t.print();
+            println!(
+                "{} entries, {clean_len} clean bytes of {} (fence {})",
+                entries.len(),
+                bytes.len(),
+                store.fence()
+            );
+            if let Some(d) = damage {
+                println!("tail damage at byte {}: {}", d.offset, d.reason);
+            }
+            Ok(())
+        }
+        "recover" => {
+            let store = FileLog::open(file)?;
+            if decode_log(&store.snapshot()).0.is_empty() {
+                // Fresh journal: record a seeded control-plane run first.
+                let mut sched = fpga_mt::fleet::FleetScheduler::start(FleetConfig {
+                    devices,
+                    artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+                    policy: PlacePolicy::Spread,
+                    ingress: Ingress::uniform(devices, Link::local()),
+                })?;
+                sched.attach_journal(Box::new(FileLog::open(file)?), false)?;
+                let trace = control_trace(devices, events, seed);
+                let stats = drive_control_trace(&mut sched, &trace);
+                let digest = sched.control_digest();
+                let entries = sched.journal_snapshot().expect("journaled").len();
+                sched.stop();
+                println!(
+                    "journaled {} control events to {file} ({entries} bytes): admitted={} turned_away={} refused_ops={}",
+                    trace.len(),
+                    stats.admitted,
+                    stats.turned_away,
+                    stats.refused_ops
+                );
+                let (recovered, report) =
+                    recover_scheduler(Box::new(FileLog::open(file)?))?;
+                let same = recovered.control_digest() == digest;
+                println!(
+                    "recovered {} entries (fence {}): state {}",
+                    report.entries,
+                    report.fence,
+                    if same { "byte-identical to the live run" } else { "DIVERGED" }
+                );
+                recovered.stop();
+                anyhow::ensure!(same, "recovered state diverged from the live run");
+            } else {
+                let (recovered, report) = recover_scheduler(Box::new(store))?;
+                println!(
+                    "recovered {} entries from {file} (fence {}){}",
+                    report.entries,
+                    report.fence,
+                    report
+                        .truncated
+                        .map(|d| format!(", truncated damaged tail at byte {}: {}", d.offset, d.reason))
+                        .unwrap_or_default()
+                );
+                recovered.stop();
+            }
+            Ok(())
+        }
+        "failover" => {
+            let mut ha = HaFleet::start(
+                FleetConfig {
+                    devices,
+                    artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+                    policy: PlacePolicy::Spread,
+                    ingress: Ingress::uniform(devices, Link::local()),
+                },
+                false,
+            )?;
+            let trace = control_trace(devices, events, seed);
+            let half = trace.len() / 2;
+            let before = drive_control_trace(ha.active(), &trace[..half]);
+            let digest_at_failure = ha.active().control_digest();
+            let (mut stale, report) = ha.fail_controller()?;
+            let fenced = stale.admit_tenant("stale-writer", "fir").is_err();
+            let same = ha.active().control_digest() == digest_at_failure;
+            let after = drive_control_trace(ha.active(), &trace[half..]);
+            println!(
+                "active served {} events (admitted={}), then failed; standby replayed {} entries (fence {})",
+                half, before.admitted, report.entries, report.fence
+            );
+            println!(
+                "takeover state {} | stale controller append {} | {} more events on the new active (admitted={})",
+                if same { "byte-identical" } else { "DIVERGED" },
+                if fenced { "refused (fenced)" } else { "ACCEPTED (fencing broken)" },
+                trace.len() - half,
+                after.admitted
+            );
+            stale.stop();
+            ha.stop();
+            anyhow::ensure!(same && fenced, "failover invariants violated");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown journal action '{other}' (expected dump|recover|failover)"),
+    }
 }
 
 fn replay_hostile(backend: &str, trace: &[RedteamEvent]) -> Result<(RedteamReplay, Metrics)> {

@@ -1,0 +1,388 @@
+//! Event-sourced control plane: crash-point recovery, tail repair, and
+//! active/standby failover — the PR 7 robustness gates.
+//!
+//! The journal is the durable truth and the scheduler is a cache of its
+//! replay, so the tests here all have the same shape: run a live
+//! controller, then prove the journal alone reconstructs it.
+//!
+//! - **Crash at every boundary**: the controller can die between any two
+//!   appends — including mid-migration, after the route flip but before
+//!   the source teardown — and recovery from that prefix must be
+//!   byte-identical to what the live controller held at that point.
+//! - **Tail repair**: a torn last frame (crash mid-write) or a corrupt
+//!   entry (bit rot) truncates to the clean prefix; `Journal::open`
+//!   refuses a damaged store outright until recovery repairs it.
+//! - **Attested plans**: a tampered `PlanSealed` tag is refused at
+//!   replay even when the frame checksums are re-computed to match.
+//! - **Fencing**: after failover the stale controller's next mutation is
+//!   refused before it touches any state, and the promoted standby holds
+//!   byte-identical state and keeps serving.
+//! - **Serving equivalence**: a recovered fleet answers requests with
+//!   the same modeled timings, outputs, and epochs as the live run.
+
+use fpga_mt::control::{
+    compacted_log, control_trace, decode_log, drive_control_trace, recover_scheduler, ControlOp,
+    CrashPlan, HaFleet, Journal, LogStore, MemLog,
+};
+use fpga_mt::coordinator::System;
+use fpga_mt::fleet::{FleetConfig, FleetScheduler, PlacePolicy, RouteUnavailable, TenantId};
+use fpga_mt::hypervisor::{LifecycleOp, LifecycleOutcome};
+
+/// Boot a journaled fleet (digest trace on) and drive a seeded
+/// control-only churn trace through it.
+fn journaled_fleet(devices: usize, events: usize, seed: u64) -> (FleetScheduler, MemLog) {
+    let mut sched = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(devices)
+    })
+    .expect("fleet boots");
+    let log = MemLog::new();
+    sched.attach_journal(Box::new(log.clone()), true).expect("journal attaches");
+    drive_control_trace(&mut sched, &control_trace(devices, events, seed));
+    (sched, log)
+}
+
+/// The device a tenant's replica was last bound to, per the journal.
+fn device_of(log: &MemLog, tenant: TenantId) -> usize {
+    let (entries, _, _) = decode_log(&log.snapshot());
+    entries
+        .iter()
+        .rev()
+        .find_map(|e| match &e.op {
+            ControlOp::BindReplica { tenant: t, device, .. } if *t == tenant => {
+                Some(*device as usize)
+            }
+            _ => None,
+        })
+        .expect("tenant has a journaled binding")
+}
+
+#[test]
+fn crash_at_every_boundary_recovers_byte_identical_state() {
+    let mut sched = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(2)
+    })
+    .expect("fleet boots");
+    let log = MemLog::new();
+    sched.attach_journal(Box::new(log.clone()), true).expect("journal attaches");
+
+    // An explicit migration guarantees the journal contains the
+    // mid-migration crash window: the route flip (`SetRoutes`) lands
+    // entries before the source teardown and the `MigrateDone` record,
+    // so the sweep below kills the controller inside the migration.
+    let mover = sched.admit_tenant("mover", "aes").expect("admits");
+    sched.advance_clocks(10_000.0).expect("clocks advance");
+    let from = device_of(&log, mover);
+    sched.migrate_tenant(mover, from, 1 - from).expect("live migration");
+
+    // Seeded control churn for breadth: admissions, replica growth,
+    // retirement, decommission, and device failure (whose recovery path
+    // itself replays the dead device's tenancy from this journal).
+    let stats = drive_control_trace(&mut sched, &control_trace(2, 14, 0xF1EE7));
+    assert!(stats.admitted > 0, "churn trace admitted no tenants");
+
+    let (entries, _, damage) = decode_log(&log.snapshot());
+    assert!(damage.is_none(), "live journal must be clean: {damage:?}");
+    assert!(
+        entries.iter().any(|e| matches!(e.op, ControlOp::MigrateDone { .. })),
+        "journal records no completed migration"
+    );
+    assert!(
+        entries.iter().any(|e| matches!(e.op, ControlOp::PlanSealed { .. })),
+        "journal records no attested plan"
+    );
+
+    let plan = CrashPlan::capture(&sched).expect("crash plan captures");
+    assert!(plan.len() > 20, "crash surface too small: {} entries", plan.len());
+    let checked = plan.assert_all_boundaries().expect("every boundary recovers");
+    assert_eq!(checked, plan.len());
+    let _ = sched.stop();
+}
+
+#[test]
+fn recovered_fleet_serves_identically_to_the_live_run() {
+    let mut live = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(2)
+    })
+    .expect("fleet boots");
+    live.attach_journal(Box::new(MemLog::new()), true).expect("journal attaches");
+    let a = live.admit_tenant("a", "fir").expect("admits a");
+    let b = live.admit_tenant("b", "huffman").expect("admits b");
+    live.advance_clocks(20_000.0).expect("deploy windows elapse");
+    let from = live
+        .migrate_tenant(a, 0, 1)
+        .map(|_| ())
+        .or_else(|_| live.migrate_tenant(a, 1, 0).map(|_| ()));
+    from.expect("one migration direction succeeds");
+
+    let plan = CrashPlan::capture(&live).expect("crash plan captures");
+    let (recovered, report) = plan.recover_at(plan.len() - 1).expect("final boundary recovers");
+    assert!(report.truncated.is_none());
+    assert_eq!(recovered.control_digest(), live.control_digest());
+
+    // The recovered fleet must answer like the live one: same devices,
+    // same epochs, same outputs, same *modeled* timing parts (IO trip,
+    // NoC cycles, ingress) — compute wall time is real time and is the
+    // only field allowed to differ.
+    let (lh, rh) = (live.handle(), recovered.handle());
+    for i in 0..4u8 {
+        for &t in &[a, b] {
+            let x = lh.submit(t, vec![i + 1; 96]).expect("live serve");
+            let y = rh.submit(t, vec![i + 1; 96]).expect("recovered serve");
+            assert_eq!(x.device, y.device, "request routed to a different device");
+            assert_eq!(x.epoch, y.epoch, "replica epoch diverged");
+            assert_eq!(x.ingress_us.to_bits(), y.ingress_us.to_bits());
+            assert_eq!(x.response.outputs, y.response.outputs, "payload outputs diverged");
+            assert_eq!(x.response.path, y.response.path, "accelerator path diverged");
+            assert_eq!(x.response.epoch, y.response.epoch);
+            assert_eq!(x.response.timing.io_us.to_bits(), y.response.timing.io_us.to_bits());
+            assert_eq!(x.response.timing.noc_cycles, y.response.timing.noc_cycles);
+        }
+    }
+    let _ = live.stop();
+    let _ = recovered.stop();
+}
+
+#[test]
+fn torn_tail_is_truncated_and_recovery_matches_the_clean_prefix() {
+    let (sched, log) = journaled_fleet(2, 10, 0xBADC0FFE);
+    let full = log.snapshot();
+    let clean_entries = decode_log(&full).0.len();
+    let digest = sched.control_digest();
+
+    // A crash mid-append leaves a torn frame: here, half a length prefix.
+    let mut torn = full.clone();
+    torn.extend_from_slice(&[0x55, 0x01]);
+    let (rec, report) =
+        recover_scheduler(Box::new(MemLog::with_bytes(torn, 0))).expect("torn tail recovers");
+    let damage = report.truncated.expect("tail damage reported");
+    assert_eq!(damage.offset, full.len(), "damage offset must be the clean prefix length");
+    assert!(damage.reason.contains("torn"), "unexpected reason: {}", damage.reason);
+    assert_eq!(report.entries, clean_entries);
+    assert_eq!(rec.control_digest(), digest, "clean-prefix recovery diverged");
+    let _ = rec.stop();
+    let _ = sched.stop();
+}
+
+#[test]
+fn corrupt_tail_entry_is_truncated_and_direct_reopen_refuses() {
+    let (sched, log) = journaled_fleet(2, 10, 0xDEAD5EED);
+    let full = log.snapshot();
+    let (entries, _, _) = decode_log(&full);
+    let n = entries.len();
+
+    // Flip one byte inside the last frame's body: the checksum catches
+    // it and the whole entry is amputated.
+    let last_len = entries.last().expect("non-empty journal").encode_frame().len();
+    let mut corrupt = full.clone();
+    let body_off = full.len() - last_len + 4;
+    corrupt[body_off] ^= 0xFF;
+
+    // Journal::open refuses a damaged store outright — only recovery,
+    // which repairs the tail, may open it.
+    let err = match Journal::open(Box::new(MemLog::with_bytes(corrupt.clone(), 0))) {
+        Ok(_) => panic!("damaged journal must not open directly"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("recover first"), "unexpected error: {err}");
+
+    let (mut rec, report) =
+        recover_scheduler(Box::new(MemLog::with_bytes(corrupt, 0))).expect("corruption recovers");
+    let damage = report.truncated.expect("corruption reported");
+    assert!(damage.reason.contains("checksum"), "unexpected reason: {}", damage.reason);
+    assert_eq!(report.entries, n - 1, "exactly the corrupt entry is lost");
+    // The store was repaired in place: the recovered controller appends
+    // where the clean prefix ends.
+    rec.advance_clocks(100.0).expect("recovered controller keeps journaling");
+    let _ = rec.stop();
+    let _ = sched.stop();
+}
+
+#[test]
+fn tampered_plan_attestation_is_refused_on_replay() {
+    let mut sched = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(2)
+    })
+    .expect("fleet boots");
+    let log = MemLog::new();
+    sched.attach_journal(Box::new(log.clone()), false).expect("journal attaches");
+    let mover = sched.admit_tenant("mover", "fft").expect("admits");
+    sched.advance_clocks(10_000.0).expect("clocks advance");
+    let from = device_of(&log, mover);
+    sched.migrate_tenant(mover, from, 1 - from).expect("migration seals a plan");
+
+    // Re-encode the journal with one attestation tag bit flipped. Every
+    // frame checksum is recomputed over the tampered body, so nothing
+    // short of the replay-time attestation check can catch it.
+    let (entries, _, _) = decode_log(&log.snapshot());
+    let mut bytes = Vec::new();
+    let mut tampered = false;
+    for mut e in entries {
+        if let ControlOp::PlanSealed { tag, .. } = &mut e.op {
+            tag[0] ^= 1;
+            tampered = true;
+        }
+        bytes.extend_from_slice(&e.encode_frame());
+    }
+    assert!(tampered, "journal holds no sealed plan to tamper with");
+    let err = match recover_scheduler(Box::new(MemLog::with_bytes(bytes, 0))) {
+        Ok(_) => panic!("tampered attestation must abort recovery"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("replaying journal entry seq"), "unexpected error: {msg}");
+    let _ = sched.stop();
+}
+
+#[test]
+fn failover_fences_the_stale_controller_and_preserves_state() {
+    let mut ha = HaFleet::start(FleetConfig::new(2), false).expect("HA pair boots");
+    let t = ha.active().admit_tenant("ha-tenant", "canny").expect("admits");
+    ha.active().advance_clocks(20_000.0).expect("clocks advance");
+    assert!(ha.standby().catch_up() > 0, "standby saw no entries");
+
+    let (mut stale, report) = ha.fail_controller().expect("standby takes over");
+    assert_eq!(ha.failovers(), 1);
+    assert_eq!(report.fence, 1, "takeover writes under the raised fence");
+    assert!(report.truncated.is_none());
+
+    // The stale controller's next mutation is refused at the fence,
+    // before any state is touched…
+    let err = stale.admit_tenant("late", "fir").expect_err("stale controller must be fenced");
+    assert!(err.to_string().contains("fenced"), "unexpected error: {err}");
+    // …so its state still equals what the standby rebuilt from the log.
+    assert_eq!(ha.active().control_digest(), stale.control_digest());
+
+    // The promoted standby keeps admitting and serving under the new
+    // fence.
+    let t2 = ha.active().admit_tenant("post-failover", "fir").expect("new active admits");
+    ha.active().advance_clocks(20_000.0).expect("clocks advance");
+    let handle = ha.active().handle();
+    assert!(handle.submit(t, vec![3u8; 64]).is_ok(), "pre-failover tenant still serves");
+    assert!(handle.submit(t2, vec![4u8; 64]).is_ok(), "post-failover tenant serves");
+    let _ = stale.stop();
+    let _ = ha.stop();
+}
+
+#[test]
+fn standby_tails_the_journal_incrementally() {
+    let mut ha = HaFleet::start(FleetConfig::new(1), false).expect("HA pair boots");
+    // Catch-up right after boot sees exactly the Boot header.
+    assert_eq!(ha.standby().catch_up(), 1);
+    ha.active().admit_tenant("one", "fir").expect("admits");
+    let first = ha.standby().catch_up();
+    assert!(first > 0, "standby missed the admission's entries");
+    assert_eq!(ha.standby().catch_up(), 0, "no new entries, no new count");
+    ha.active().advance_clocks(1_000.0).expect("clocks advance");
+    assert_eq!(ha.standby().catch_up(), 1, "one clock entry on the single device");
+    assert_eq!(ha.standby().entries().len(), first + 2);
+    let _ = ha.stop();
+}
+
+#[test]
+fn retired_tenant_fails_fast_with_route_unavailable() {
+    let mut sched = FleetScheduler::start(FleetConfig::new(1)).expect("fleet boots");
+    let t = sched.admit_tenant("ephemeral", "fir").expect("admits");
+    sched.advance_clocks(20_000.0).expect("clocks advance");
+    let handle = sched.handle();
+    assert!(handle.submit(t, vec![1u8; 64]).is_ok(), "serves while routed");
+    sched.retire_tenant(t).expect("retires");
+    // The front-end fails fast with the terminal typed error — no
+    // spinning on a tenant whose routes are permanently gone.
+    let err = handle.submit(t, vec![2u8; 64]).expect_err("retired tenant must not serve");
+    let route = err
+        .downcast_ref::<RouteUnavailable>()
+        .expect("terminal routing error is typed RouteUnavailable");
+    assert_eq!(route.tenant, t);
+    assert_eq!(route.attempts, 0, "scrubbed routes must not be retried");
+    let _ = sched.stop();
+}
+
+#[test]
+fn compacted_journal_recovers_equivalent_serving_state() {
+    // Long history, small state: three admissions, two retirements, one
+    // growth, one migration. Compaction must rebuild the same *serving*
+    // state from O(state) entries instead of O(history).
+    let mut sched = FleetScheduler::start(FleetConfig {
+        policy: PlacePolicy::Spread,
+        ..FleetConfig::new(2)
+    })
+    .expect("fleet boots");
+    let log = MemLog::new();
+    sched.attach_journal(Box::new(log.clone()), false).expect("journal attaches");
+    let a = sched.admit_tenant("a", "fir").expect("admits a");
+    let b = sched.admit_tenant("b", "aes").expect("admits b");
+    let c = sched.admit_tenant("c", "fft").expect("admits c");
+    sched.advance_clocks(20_000.0).expect("clocks advance");
+    sched.grow_tenant(b).expect("grows b");
+    sched.retire_tenant(a).expect("retires a");
+    sched.retire_tenant(c).expect("retires c");
+    let from = device_of(&log, b);
+    // b has replicas on both devices after the grow; migration may be
+    // refused (target already holds one) — either way the history is
+    // long and the live state is small.
+    let _ = sched.migrate_tenant(b, from, 1 - from);
+
+    let full_entries = decode_log(&log.snapshot()).0.len();
+    let compact = compacted_log(&sched, log.fence()).expect("compaction synthesizes");
+    let compact_entries = decode_log(&compact.snapshot()).0.len();
+    assert!(
+        compact_entries < full_entries,
+        "compaction must shrink the journal: {compact_entries} >= {full_entries}"
+    );
+
+    let (recovered, report) =
+        recover_scheduler(Box::new(compact)).expect("compacted journal recovers");
+    assert!(report.truncated.is_none());
+    // VI numbering and route versions may differ; everything a client
+    // can observe must not.
+    assert_eq!(recovered.serving_digest(), sched.serving_digest());
+    // And it actually serves: the surviving tenant answers requests.
+    let handle = recovered.handle();
+    assert!(handle.submit(b, vec![5u8; 64]).is_ok(), "recovered fleet serves");
+    let _ = recovered.stop();
+    let _ = sched.stop();
+}
+
+#[test]
+fn system_journal_replays_a_single_device_tenancy() {
+    let log = MemLog::new();
+    let mut sys = System::empty("artifacts").expect("system boots");
+    sys.attach_journal(Box::new(log.clone())).expect("journal attaches");
+
+    let LifecycleOutcome::Vi(vi) = sys
+        .lifecycle(&LifecycleOp::CreateVi { name: "t0".into() })
+        .expect("create vi")
+    else {
+        panic!("CreateVi returns a Vi outcome");
+    };
+    let LifecycleOutcome::Vr(vr) =
+        sys.lifecycle(&LifecycleOp::Allocate { vi }).expect("allocate")
+    else {
+        panic!("Allocate returns a Vr outcome");
+    };
+    sys.lifecycle(&LifecycleOp::Program { vi, vr, design: "fpu".into(), dest: None })
+        .expect("program");
+    let before = decode_log(&log.snapshot()).0.len();
+    // A refused op must never enter the durable history (apply-then-
+    // journal): programming a VR the VI does not hold is denied.
+    let foreign = (vr + 1) % sys.hv.vrs.len();
+    assert!(sys
+        .lifecycle(&LifecycleOp::Program { vi, vr: foreign, design: "aes".into(), dest: None })
+        .is_err());
+    let (entries, _, damage) = decode_log(&log.snapshot());
+    assert!(damage.is_none());
+    assert_eq!(entries.len(), before, "a refused op was journaled");
+
+    // Replay onto a fresh empty system rebuilds the exact tenancy.
+    let mut rebuilt = System::empty("artifacts").expect("fresh system boots");
+    let applied = rebuilt.replay_journal(&entries).expect("journal replays");
+    assert_eq!(applied, entries.len());
+    let live: Vec<_> = sys.hv.vrs.iter().map(|r| (r.status.clone(), r.epoch)).collect();
+    let replayed: Vec<_> = rebuilt.hv.vrs.iter().map(|r| (r.status.clone(), r.epoch)).collect();
+    assert_eq!(live, replayed, "replayed tenancy diverged");
+    assert_eq!(sys.hv.vis[&vi].vrs, rebuilt.hv.vis[&vi].vrs);
+}
