@@ -7,11 +7,21 @@
 //! ([`NocSim`]); the two must agree on every statistic **and** on the
 //! fixpoint pass count (cycle-for-cycle identity), and the batched engine
 //! must be measurably faster.
+//!
+//! A second A/B compares the serving gates: one `Mutex<NocSim>` over the
+//! whole network vs the per-column [`PartitionedNoc`], with one thread
+//! per column streaming intra-column hops. The hops must be cycle- and
+//! byte-identical across the gates, and (non-smoke, multi-core) the
+//! partitioned gate must win.
 
 use fpga_mt::bench_support::{bench, check, finish, header, smoke_mode, speedup};
-use fpga_mt::noc::{FixpointSim, NocSim, NocStats, Payload, Topology};
+use fpga_mt::noc::{
+    collect_delivered, lock_noc, stream_hop, FixpointSim, NocSim, NocStats, PartitionedNoc,
+    Payload, Topology,
+};
 use fpga_mt::runtime::{Runtime, Tensor};
 use fpga_mt::util::Rng;
+use std::sync::Mutex;
 
 /// Drive one engine through the standard uniform-load workload; both
 /// engines expose the same send/step API so the closure bodies stay in
@@ -124,6 +134,88 @@ fn main() {
         }
         std::hint::black_box(sim.cycle());
     });
+
+    // ---- lock partitioning: per-column cells vs one mutex ----
+    // One thread per physical column streams routed intra-column hops.
+    // Under the single lock every hop convoys on every other column's;
+    // the partitioned gate serializes only within a column.
+    let mtopo = Topology::multi_column(12, 4);
+    let columns = 4usize;
+    // Column c owns routers 3c..3c+2: hop router-(3c) east VR to
+    // router-(3c+2) west VR — routed (not adjacent), never leaves c.
+    let hop_of = |c: usize| (6 * c + 1, 6 * c + 4);
+    let assigned = |topo: &Topology| {
+        let mut sim = NocSim::new(topo.clone());
+        for vr in 0..topo.n_vrs() {
+            sim.assign_vr(vr, 1);
+        }
+        sim
+    };
+    let payload = Payload::from(vec![0xA5u8; 256]);
+
+    // Equivalence first: each column's hop must be cycle- and
+    // byte-identical across the two gates.
+    {
+        let mut whole = assigned(&mtopo);
+        let part = PartitionedNoc::from_sim(assigned(&mtopo));
+        let mut identical = true;
+        for c in 0..columns {
+            let (src, dst) = hop_of(c);
+            let cycles = stream_hop(&mut whole, 1, src, dst, &payload).unwrap();
+            let bytes = collect_delivered(&mut whole, dst);
+            let (pcycles, pbytes) = part.stream(1, src, dst, &payload).unwrap();
+            identical &= pcycles == cycles && pbytes == bytes;
+        }
+        check("partitioned gate cycle- and byte-identical per column", identical);
+        let (ps, ws) = (part.stats(), whole.stats);
+        check(
+            "partitioned stats identical after the sweep",
+            ps.delivered == ws.delivered
+                && ps.rejected == ws.rejected
+                && ps.latency.count() == ws.latency.count()
+                && ps.latency.max() == ws.latency.max(),
+        );
+    }
+
+    let hops_per_col: u64 = if smoke { 40 } else { 400 };
+    let s_single = bench("single-lock gate: 4 columns contending", warm, iters, || {
+        let shared = Mutex::new(assigned(&mtopo));
+        std::thread::scope(|scope| {
+            for c in 0..columns {
+                let shared = &shared;
+                let payload = &payload;
+                scope.spawn(move || {
+                    let (src, dst) = hop_of(c);
+                    for _ in 0..hops_per_col {
+                        let mut noc = lock_noc(shared);
+                        stream_hop(&mut noc, 1, src, dst, payload).unwrap();
+                        std::hint::black_box(collect_delivered(&mut noc, dst));
+                    }
+                });
+            }
+        });
+    });
+    let s_part = bench("partitioned gate:  4 columns in parallel", warm, iters, || {
+        let part = PartitionedNoc::from_sim(assigned(&mtopo));
+        std::thread::scope(|scope| {
+            for c in 0..columns {
+                let part = &part;
+                let payload = &payload;
+                scope.spawn(move || {
+                    let (src, dst) = hop_of(c);
+                    for _ in 0..hops_per_col {
+                        std::hint::black_box(part.stream(1, src, dst, payload).unwrap());
+                    }
+                });
+            }
+        });
+    });
+    let part_ratio = speedup("partitioned vs single lock (4 columns)", &s_single, &s_part);
+    if smoke {
+        println!("(smoke mode: partitioning speedup gate skipped; may be core-limited)");
+    } else {
+        check("per-column partitioning beats the single lock", part_ratio > 1.0);
+    }
 
     // ---- accelerator dispatch (native runtime backend) ----
     // Smoke mode stops here: the dispatch micro-benches carry no

@@ -18,9 +18,15 @@
 //!    wakeup each; the shards pipeline the compute). The batch path must
 //!    beat per-call on closed-loop throughput — the win the new API's
 //!    batched submission exists for.
-//! 4. **Persistence** — writes the numbers to `BENCH_serving.json` so the
+//! 4. **NoC contention** — a streaming-heavy multi-column deployment
+//!    (12 two-region fpu->aes tenants on `multi_column(12, 4)`, every
+//!    request crossing the gated NoC section) runs once on the
+//!    single-lock gate and once on the per-column partitioned gate
+//!    (`ShardedEngine::start_with_gate`). Reports
+//!    `partitioned_speedup`; non-smoke, the partitioned gate must win.
+//! 5. **Persistence** — writes the numbers to `BENCH_serving.json` so the
 //!    perf trajectory has data across PRs (including the `batches`
-//!    counter the CI smoke gate asserts is non-zero).
+//!    counter and the `partitioned_speedup` the CI smoke gates assert).
 //!
 //! `cargo bench --bench serving_throughput [-- --smoke]`: smoke mode runs
 //! CI-sized iteration counts and skips the host-dependent speedup gates
@@ -30,7 +36,8 @@
 use fpga_mt::accel::CASE_STUDY;
 use fpga_mt::api::{BatchItem, SerialBackend, ServingBackend, Session, TenancyBuilder, TenantRef};
 use fpga_mt::bench_support::{check, finish, header, smoke_mode};
-use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::coordinator::{GateMode, ShardedEngine, System};
+use fpga_mt::noc::Topology;
 use fpga_mt::runtime::SweepRunner;
 use fpga_mt::util::Rng;
 use std::sync::Arc;
@@ -201,6 +208,46 @@ fn batch_section(total: usize, slice: usize) -> BatchRun {
     BatchRun { percall_rps, batch_rps, batches: metrics.batches }
 }
 
+/// Streaming-heavy contention drive over the NoC gate: 12 two-region
+/// `fpu -> aes` tenants on a 4-column device (adjacent-first allocation
+/// lands 3 tenants per column), every request streaming its result
+/// across the wired direct link inside the gated NoC section. The same
+/// deployment and closed-loop drive run once per [`GateMode`]; only the
+/// gate differs, so the ratio isolates the lock structure.
+fn contention_rps(mode: GateMode, secs: f64) -> f64 {
+    let engine = ShardedEngine::start_with_gate(
+        || System::empty_on(Topology::multi_column(12, 4), "artifacts"),
+        mode,
+    )
+    .unwrap();
+    let tenants: Vec<TenantRef> = (0..12)
+        .map(|t| {
+            let plan = TenancyBuilder::new(&format!("stream{t}"))
+                .region("fpu")
+                .region("aes")
+                .stream(0, 1)
+                .plan()
+                .unwrap();
+            let tenant = engine.deploy(&plan).unwrap();
+            engine.advance_clock(60_000.0).unwrap();
+            tenant
+        })
+        .collect();
+    let clients = || -> Vec<(Session, usize)> {
+        tenants.iter().map(|&t| (engine.session(t).unwrap(), 0usize)).collect()
+    };
+    drive_closed_loop(clients(), secs * 0.2);
+    let t0 = Instant::now();
+    let served = drive_closed_loop(clients(), secs);
+    let rps = served as f64 / t0.elapsed().as_secs_f64();
+    let metrics = engine.shutdown();
+    check(
+        "contention run loses no request",
+        metrics.rejected == 0 && metrics.requests >= served,
+    );
+    rps
+}
+
 fn main() {
     let smoke = smoke_mode();
     header(
@@ -273,10 +320,27 @@ fn main() {
         );
     }
 
-    // ---- 4. persist the perf point ----
+    // ---- 4. NoC contention: single lock vs per-column partitioned ----
+    let contention_secs = window_secs * 0.5;
+    let single_lock_rps = contention_rps(GateMode::SingleLock, contention_secs);
+    let partitioned_rps = contention_rps(GateMode::Partitioned, contention_secs);
+    let partitioned_speedup = partitioned_rps / single_lock_rps;
+    println!(
+        "\nNoC gate contention, 12 streaming tenants across 4 columns for {contention_secs:.2}s per gate:\n  single-lock  {single_lock_rps:>10.0} req/s\n  partitioned  {partitioned_rps:>10.0} req/s\n  speedup      {partitioned_speedup:>10.2}x",
+    );
+    if smoke {
+        println!("(smoke mode: partitioning gate skipped; CI runners may be core-limited)");
+    } else {
+        check(
+            "per-column partitioned gate beats the single lock on streaming load",
+            partitioned_speedup > 1.0,
+        );
+    }
+
+    // ---- 5. persist the perf point ----
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let json = format!(
-        "{{\n  \"bench\": \"serving_throughput\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"vis\": 5,\n  \"window_secs\": {window_secs},\n  \"serial_rps\": {serial_rps:.1},\n  \"sharded_rps\": {sharded_rps:.1},\n  \"speedup\": {speedup:.3},\n  \"percall_rps\": {:.1},\n  \"batch_rps\": {:.1},\n  \"batch_speedup\": {batch_speedup:.3},\n  \"batches\": {},\n  \"p50_us\": {p50:.1},\n  \"p95_us\": {p95:.1},\n  \"p99_us\": {p99:.1},\n  \"equivalent\": {equivalent}\n}}\n",
+        "{{\n  \"bench\": \"serving_throughput\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"vis\": 5,\n  \"window_secs\": {window_secs},\n  \"serial_rps\": {serial_rps:.1},\n  \"sharded_rps\": {sharded_rps:.1},\n  \"speedup\": {speedup:.3},\n  \"percall_rps\": {:.1},\n  \"batch_rps\": {:.1},\n  \"batch_speedup\": {batch_speedup:.3},\n  \"batches\": {},\n  \"single_lock_rps\": {single_lock_rps:.1},\n  \"partitioned_rps\": {partitioned_rps:.1},\n  \"partitioned_speedup\": {partitioned_speedup:.3},\n  \"p50_us\": {p50:.1},\n  \"p95_us\": {p95:.1},\n  \"p99_us\": {p99:.1},\n  \"equivalent\": {equivalent}\n}}\n",
         b.percall_rps, b.batch_rps, b.batches,
     );
     // `cargo bench` runs with cwd = the package dir (rust/); anchor the

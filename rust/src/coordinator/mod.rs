@@ -30,15 +30,15 @@ pub mod sharded;
 pub mod timing;
 
 pub use shard::{CoreGate, ShardEnv, ShardPlan, ShardRequest, SharedCore};
-pub use sharded::{ShardedEngine, ShardedHandle};
+pub use sharded::{GateMode, NocShared, ShardedEngine, ShardedHandle};
 pub use timing::{Admission, Gate, TimingCore};
 
 use crate::accel::CASE_STUDY;
 use crate::cloud::IoConfig;
 use crate::device::{Device, Resources};
 use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
-use crate::noc::NocSim;
-use crate::placer::case_study_floorplan;
+use crate::noc::{NocControl, NocSim, Topology};
+use crate::placer::{case_study_floorplan, place};
 use crate::runtime::{Runtime, Tensor};
 use anyhow::{bail, Result};
 use metrics::{Metrics, RequestTiming};
@@ -144,7 +144,7 @@ pub(crate) fn apply_lifecycle(
     hv: &mut Hypervisor,
     timing: &mut TimingCore,
     runtime: &Runtime,
-    noc: &mut NocSim,
+    noc: &mut dyn NocControl,
     op: &LifecycleOp,
 ) -> Result<(LifecycleOutcome, crate::hypervisor::Delta)> {
     if let LifecycleOp::Program { design, .. } | LifecycleOp::Grow { design, .. } = op {
@@ -158,8 +158,8 @@ pub(crate) fn apply_lifecycle(
     Ok((outcome, delta))
 }
 
-/// Bytes carried per 32-bit flit.
-pub const FLIT_PAYLOAD_BYTES: usize = 4;
+/// Bytes carried per 32-bit flit (defined with the NoC's packet framing).
+pub use crate::noc::FLIT_PAYLOAD_BYTES;
 
 /// A deployed system.
 ///
@@ -232,6 +232,26 @@ impl System {
     pub fn empty(artifacts_dir: &str) -> Result<System> {
         let device = Device::vu9p();
         let (topo, fp) = case_study_floorplan(&device)?;
+        Self::assemble(device, topo, fp, artifacts_dir)
+    }
+
+    /// An empty deployment on an arbitrary topology, placed with the
+    /// case-study VR pblock shape (19 x 59 CLBs per region). This is how
+    /// the multi-column contention workloads get a system whose NoC spans
+    /// several physical columns — `Topology::multi_column(12, 4)` fits a
+    /// VU9P with room to spare.
+    pub fn empty_on(topo: Topology, artifacts_dir: &str) -> Result<System> {
+        let device = Device::vu9p();
+        let fp = place(&device, &topo, 19, 59)?;
+        Self::assemble(device, topo, fp, artifacts_dir)
+    }
+
+    fn assemble(
+        device: Device,
+        topo: Topology,
+        fp: crate::placer::Floorplan,
+        artifacts_dir: &str,
+    ) -> Result<System> {
         let noc = NocSim::new(topo.clone());
         let hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
         let runtime = Runtime::load_shared(artifacts_dir)?;
@@ -419,7 +439,7 @@ impl System {
         if vr >= self.hv.vrs.len() {
             bail!("VR{vr} does not exist");
         }
-        let plan = ShardPlan::snapshot(&self.hv, &self.core.noc, vr);
+        let plan = ShardPlan::snapshot(&self.hv, vr);
         plan.check_access(vi, &mut self.metrics)?;
         if let Some(expected) = expected_epoch {
             if expected != plan.epoch {
@@ -454,7 +474,7 @@ impl System {
     /// worker shards as regions are programmed and released.
     pub fn into_shards(self) -> ShardedParts {
         let plans = (0..self.hv.vrs.len())
-            .map(|vr| ShardPlan::snapshot(&self.hv, &self.core.noc, vr))
+            .map(|vr| ShardPlan::snapshot(&self.hv, vr))
             .collect();
         ShardedParts {
             plans,

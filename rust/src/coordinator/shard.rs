@@ -14,11 +14,15 @@
 //!   never touches the NoC; streaming never touches timing), so the
 //!   sharded engine keeps the timing core *unlocked* inside its single
 //!   dispatcher thread and guards only the NoC with a mutex.
-//! - [`CoreGate`] — how an engine hands the shared NoC to the request
-//!   path: the serial engine passes its `SharedCore` straight through,
-//!   the sharded engine's workers lock `Mutex<NocSim>` only inside the
-//!   gate (i.e. only for on-chip streaming hops, FPU -> AES in the case
-//!   study).
+//! - [`CoreGate`] — how an engine performs a streaming hop against the
+//!   shared NoC: the serial engine streams on its own `SharedCore`; the
+//!   sharded engine's workers go through [`super::sharded::NocShared`] —
+//!   either the single-lock `Mutex<NocSim>` baseline or the per-column
+//!   [`PartitionedNoc`](crate::noc::PartitionedNoc) (the default), both
+//!   entered only for on-chip streaming hops (FPU -> AES in the case
+//!   study). Every mutex acquisition recovers from poison
+//!   ([`crate::noc::lock_noc`]), so one worker's panic degrades to its
+//!   own requests erroring instead of cascading across shards.
 //!
 //! [`serve_admitted`] is the single request-path implementation both the
 //! serial [`super::server::Engine`] and the sharded
@@ -28,14 +32,16 @@
 
 use super::metrics::{Metrics, RequestTiming};
 use super::timing::{Admission, TimingCore};
-use super::{Response, FLIT_PAYLOAD_BYTES};
+use super::Response;
 use crate::accel;
 use crate::cloud::{IoConfig, Scheme};
 use crate::hypervisor::{Delta, Hypervisor, VrStatus};
-use crate::noc::{hop_count, segment_message, NocSim, Payload};
+use crate::noc::{hop_count, lock_noc, Header, NocSim, Payload};
 use crate::runtime::Runtime;
 use anyhow::{bail, Result};
 use std::sync::Mutex;
+
+pub use crate::noc::{collect_delivered, stream_hop};
 
 /// The shared half of a serving engine: arrival clock + entry point + NoC.
 /// Everything else on the request path is per-shard and runs concurrently.
@@ -48,24 +54,47 @@ pub struct SharedCore {
     pub timing: TimingCore,
 }
 
-/// How the request path reaches the shared NoC for a streaming hop. The
-/// serial engine owns the [`SharedCore`] outright and passes its NoC
-/// through; the sharded engine's workers lock a `Mutex<NocSim>` only
-/// inside the gate.
+/// How the request path performs an on-chip streaming hop against the
+/// shared NoC. The serial engine owns the [`SharedCore`] outright and
+/// streams on it directly; the sharded engine's workers synchronize —
+/// one whole-NoC mutex, or the partitioned NoC's per-column locks —
+/// only inside this single call.
 pub trait CoreGate {
-    /// Run `f` with exclusive access to the shared NoC.
-    fn with_noc<R, F: FnOnce(&mut NocSim) -> R>(&mut self, f: F) -> R;
+    /// Stream `bytes` from `src` VR to `dst` VR on behalf of `vi` and
+    /// return `(noc cycles, delivered bytes)`.
+    fn stream(&mut self, vi: u16, src: usize, dst: usize, bytes: &Payload)
+        -> Result<(u64, Vec<u8>)>;
 }
 
 impl CoreGate for SharedCore {
-    fn with_noc<R, F: FnOnce(&mut NocSim) -> R>(&mut self, f: F) -> R {
-        f(&mut self.noc)
+    fn stream(
+        &mut self,
+        vi: u16,
+        src: usize,
+        dst: usize,
+        bytes: &Payload,
+    ) -> Result<(u64, Vec<u8>)> {
+        let cycles = stream_hop(&mut self.noc, vi, src, dst, bytes)?;
+        Ok((cycles, collect_delivered(&mut self.noc, dst)))
     }
 }
 
+/// The single-lock gate: the pre-partitioning baseline, kept for A/B
+/// benchmarking ([`super::sharded::GateMode::SingleLock`]). Poison is
+/// recovered, not propagated: a worker that panicked mid-hop leaves the
+/// simulator to be quarantined by the next acquirer, so its shard's
+/// requests error while sibling shards keep serving.
 impl CoreGate for &Mutex<NocSim> {
-    fn with_noc<R, F: FnOnce(&mut NocSim) -> R>(&mut self, f: F) -> R {
-        f(&mut self.lock().expect("shared NoC poisoned"))
+    fn stream(
+        &mut self,
+        vi: u16,
+        src: usize,
+        dst: usize,
+        bytes: &Payload,
+    ) -> Result<(u64, Vec<u8>)> {
+        let mut noc = lock_noc(self);
+        let cycles = stream_hop(&mut noc, vi, src, dst, bytes)?;
+        Ok((cycles, collect_delivered(&mut noc, dst)))
     }
 }
 
@@ -95,8 +124,10 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
-    /// Snapshot VR `vr`'s shard from the hypervisor + NoC state.
-    pub fn snapshot(hv: &Hypervisor, noc: &NocSim, vr: usize) -> ShardPlan {
+    /// Snapshot VR `vr`'s shard from the hypervisor. Plans are pure
+    /// hypervisor state (the hop count derives from the topology alone),
+    /// so rebuilding them never takes a NoC lock.
+    pub fn snapshot(hv: &Hypervisor, vr: usize) -> ShardPlan {
         let design_of = |v: usize| match &hv.vrs[v].status {
             VrStatus::Programmed { design, .. } => Some(design.clone()),
             _ => None,
@@ -120,7 +151,10 @@ impl ShardPlan {
             stream_dest,
             dest_design: stream_dest.and_then(design_of),
             // Hop count depends only on the VR's router, not the VI.
-            hops: hop_count(&noc.header_for(0, vr), 0),
+            hops: hop_count(
+                &Header::new(0, hv.topo.router_of_vr(vr), hv.topo.side_of_vr(vr)),
+                0,
+            ),
             epoch: hv.vrs[vr].epoch,
         }
     }
@@ -128,10 +162,10 @@ impl ShardPlan {
     /// Rebuild the plan snapshots a lifecycle [`Delta`] marked stale, in
     /// place. Out-of-range indices (a delta from an op that named a
     /// nonexistent VR) are ignored.
-    pub fn apply_delta(plans: &mut [ShardPlan], delta: &Delta, hv: &Hypervisor, noc: &NocSim) {
+    pub fn apply_delta(plans: &mut [ShardPlan], delta: &Delta, hv: &Hypervisor) {
         for &vr in &delta.replan {
             if vr < plans.len() {
-                plans[vr] = ShardPlan::snapshot(hv, noc, vr);
+                plans[vr] = ShardPlan::snapshot(hv, vr);
             }
         }
     }
@@ -219,10 +253,7 @@ pub fn serve_admitted<G: CoreGate>(
     // --- optional on-chip streaming hop (enters the shared NoC) ---
     if let (Some(dst), Some(dst_design)) = (plan.stream_dest, plan.dest_design.as_deref()) {
         let stream_bytes = Payload::from(outputs[0].to_bytes());
-        let (cycles, received) = gate.with_noc(|noc| -> Result<(u64, Vec<u8>)> {
-            let cycles = stream_hop(noc, vi, plan.vr, dst, &stream_bytes)?;
-            Ok((cycles, collect_delivered(noc, dst)))
-        })?;
+        let (cycles, received) = gate.stream(vi, plan.vr, dst, &stream_bytes)?;
         noc_cycles = cycles;
         let t1 = std::time::Instant::now();
         let ins = accel::inputs_from_payload(dst_design, &received)?;
@@ -243,43 +274,6 @@ pub fn serve_admitted<G: CoreGate>(
     Ok(Response { outputs, path, timing, epoch: plan.epoch })
 }
 
-/// Stream `bytes` from `src` VR to `dst` VR over the NoC: the direct link
-/// if one was actually wired via [`NocSim::wire_direct`], else routed
-/// flits. The flits are zero-copy windows into `bytes`. Returns cycles
-/// taken to drain.
-pub fn stream_hop(
-    noc: &mut NocSim,
-    vi: u16,
-    src: usize,
-    dst: usize,
-    bytes: &Payload,
-) -> Result<u64> {
-    let header = noc.header_for(vi, dst);
-    let flits = segment_message(header, bytes.clone(), FLIT_PAYLOAD_BYTES, 0);
-    let start = noc.cycle();
-    let direct = noc.has_direct(src, dst);
-    for f in flits {
-        if direct {
-            noc.send_direct(src, header, f.payload, f.seq);
-        } else {
-            noc.send(src, header, f.payload, f.seq);
-        }
-    }
-    if !noc.drain(1_000_000) {
-        bail!("NoC failed to drain while streaming {src}->{dst}");
-    }
-    Ok(noc.cycle() - start)
-}
-
-/// Pop all delivered payload bytes at a VR (in order).
-pub fn collect_delivered(noc: &mut NocSim, vr: usize) -> Vec<u8> {
-    let mut out = Vec::new();
-    while let Some(f) = noc.vrs[vr].delivered.pop_front() {
-        out.extend_from_slice(&f.payload);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,7 +284,7 @@ mod tests {
     fn plans_snapshot_the_case_study() {
         let sys = System::case_study("artifacts").unwrap();
         let plans: Vec<ShardPlan> = (0..sys.hv.vrs.len())
-            .map(|vr| ShardPlan::snapshot(&sys.hv, &sys.core.noc, vr))
+            .map(|vr| ShardPlan::snapshot(&sys.hv, vr))
             .collect();
         assert_eq!(plans.len(), 6);
         assert!(plans.iter().all(|p| p.design.is_some()));
@@ -308,7 +302,7 @@ mod tests {
     #[test]
     fn check_access_counts_only_foreign_rejections() {
         let sys = System::case_study("artifacts").unwrap();
-        let plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 3); // AES, VI3
+        let plan = ShardPlan::snapshot(&sys.hv, 3); // AES, VI3
         let mut m = Metrics::default();
         assert!(plan.check_access(3, &mut m).is_ok());
         assert_eq!(m.rejected, 0);
@@ -336,7 +330,7 @@ mod tests {
         // the direct link must be unwired so a future tenant in VR3 can
         // never be streamed to.
         sys.hv.release_vr(3, 3, &mut sys.core.noc).unwrap();
-        let plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 2);
+        let plan = ShardPlan::snapshot(&sys.hv, 2);
         assert_eq!(plan.stream_dest, None);
         assert_eq!(plan.dest_design, None);
         assert!(!sys.core.noc.has_direct(2, 3), "release must unwire the direct link");
@@ -355,7 +349,7 @@ mod tests {
         assert_eq!(vr, 3, "free pool must hand back the released region");
         sys.hv.program_vr(intruder, 3, "aes", None).unwrap();
         // FPU's stale stream_dest points at a foreign owner: no chaining.
-        let plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 2);
+        let plan = ShardPlan::snapshot(&sys.hv, 2);
         assert_eq!(plan.stream_dest, None, "must not stream into a foreign VR");
         let resp = sys.submit(3, 2, &[1u8; 32]).unwrap();
         assert_eq!(resp.path, vec!["fpu".to_string()]);
@@ -379,5 +373,41 @@ mod tests {
         assert_eq!(noc.stats.direct_delivered, 16, "routed path must not use the link");
         assert_eq!(noc.stats.delivered, 16, "reverse stream must take the routed path");
         assert!(routed_cycles >= direct_cycles, "router traversal adds pipeline stages");
+    }
+
+    #[test]
+    fn poisoned_gate_degrades_instead_of_cascading() {
+        // Regression for the poisoned-lock cascade: a worker that panics
+        // while holding the shared NoC must not take every sibling shard
+        // down with it. The next gate entry quarantines the interrupted
+        // hop and keeps serving.
+        use std::sync::Arc;
+        let noc = Arc::new(Mutex::new(NocSim::new(Topology::single_column(3))));
+        {
+            let mut g = noc.lock().unwrap();
+            for vr in 0..6 {
+                g.assign_vr(vr, 3);
+            }
+            g.wire_direct(2, 3).unwrap();
+        }
+        let poisoner = Arc::clone(&noc);
+        std::thread::spawn(move || {
+            let mut g = poisoner.lock().unwrap();
+            let header = g.header_for(3, 3);
+            g.send_direct(2, header, vec![0u8; 4], 0);
+            panic!("worker dies mid-hop");
+        })
+        .join()
+        .unwrap_err();
+        assert!(noc.is_poisoned());
+        // A sibling shard streams through the same gate and succeeds.
+        let mut gate = &*noc;
+        let bytes = Payload::from(vec![5u8; 16]);
+        let (cycles, got) = gate.stream(3, 2, 3, &bytes).unwrap();
+        assert!(cycles > 0);
+        assert_eq!(got, vec![5u8; 16]);
+        // The orphaned flit of the interrupted hop was dropped as rejected.
+        assert_eq!(lock_noc(&noc).stats.rejected, 1);
+        assert_eq!(lock_noc(&noc).in_flight(), 0);
     }
 }

@@ -11,7 +11,9 @@
 //!              + admission  └─► VR5 queue ─► worker 5 (compute) ─┘
 //!   lifecycle  (TimingCore,                      │
 //!      ops ──►  Hypervisor)     (streaming hops only)
-//!                                          Mutex<NocSim>
+//!                                 NocShared (default: per-column
+//!                                 PartitionedNoc; single Mutex<NocSim>
+//!                                 kept for A/B via GateMode)
 //! ```
 //!
 //! - The **dispatcher** assigns request ids in arrival order, runs the
@@ -41,16 +43,58 @@
 
 use super::metrics::Metrics;
 use super::server::{CtlRequest, EngineHandle, Msg, Request};
-use super::shard::{serve_admitted, ShardEnv, ShardPlan, ShardRequest, SharedCore};
+use super::shard::{serve_admitted, CoreGate, ShardEnv, ShardPlan, ShardRequest, SharedCore};
 use super::timing::{Admission, Gate, TimingCore};
 use super::{Response, System};
 use crate::cloud::IoConfig;
 use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome};
-use crate::noc::NocSim;
+use crate::noc::{lock_noc, NocSim, PartitionedNoc, Payload};
 use crate::runtime::Runtime;
 use anyhow::Result;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// Which synchronization the engine hands its workers for streaming hops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateMode {
+    /// One mutex over the whole NoC — the pre-partitioning baseline,
+    /// kept for A/B benchmarking (`benches/serving_throughput.rs`).
+    SingleLock,
+    /// Per-column mutexes + fold-link boundary region
+    /// ([`PartitionedNoc`]) — the default: hops in different columns
+    /// stop convoying on each other.
+    Partitioned,
+}
+
+/// The shared NoC as handed to shard workers and the dispatcher. Cloning
+/// is an `Arc` bump; both variants implement [`CoreGate`] for the
+/// streaming hop and expose a [`NocControl`](crate::noc::NocControl)
+/// surface for lifecycle ops.
+#[derive(Clone)]
+pub enum NocShared {
+    /// Single-lock baseline ([`GateMode::SingleLock`]).
+    Single(Arc<Mutex<NocSim>>),
+    /// Per-column partitioned NoC ([`GateMode::Partitioned`]).
+    Partitioned(Arc<PartitionedNoc>),
+}
+
+impl CoreGate for NocShared {
+    fn stream(
+        &mut self,
+        vi: u16,
+        src: usize,
+        dst: usize,
+        bytes: &Payload,
+    ) -> Result<(u64, Vec<u8>)> {
+        match self {
+            NocShared::Single(noc) => {
+                let mut gate: &Mutex<NocSim> = noc;
+                gate.stream(vi, src, dst, bytes)
+            }
+            NocShared::Partitioned(part) => part.stream(vi, src, dst, bytes),
+        }
+    }
+}
 
 /// A request bound for a shard worker, access-checked and admitted.
 struct Work {
@@ -82,13 +126,13 @@ pub struct ShardedEngine {
 fn spawn_worker(
     plan: ShardPlan,
     wrx: mpsc::Receiver<Work>,
-    noc: Arc<Mutex<NocSim>>,
+    noc: NocShared,
     runtime: Arc<Runtime>,
     io_cfg: IoConfig,
 ) -> JoinHandle<Metrics> {
     std::thread::spawn(move || {
         let mut metrics = Metrics::default();
-        let mut gate = &*noc;
+        let mut gate = noc;
         let env = ShardEnv { runtime: runtime.as_ref(), io_cfg: &io_cfg };
         while let Ok(w) = wrx.recv() {
             let resp = serve_admitted(
@@ -111,7 +155,7 @@ struct Dispatch {
     hv: Hypervisor,
     timing: TimingCore,
     plans: Vec<ShardPlan>,
-    noc: Arc<Mutex<NocSim>>,
+    noc: NocShared,
     runtime: Arc<Runtime>,
     io_cfg: IoConfig,
     shard_txs: Vec<Option<mpsc::Sender<Work>>>,
@@ -129,7 +173,7 @@ impl Dispatch {
         self.workers[vr] = Some(spawn_worker(
             self.plans[vr].clone(),
             wrx,
-            Arc::clone(&self.noc),
+            self.noc.clone(),
             Arc::clone(&self.runtime),
             self.io_cfg,
         ));
@@ -161,10 +205,8 @@ impl Dispatch {
     /// partial effects carry no delta), draining any live worker whose
     /// plan changed under it.
     fn resnapshot_all(&mut self) {
-        let fresh: Vec<ShardPlan> = {
-            let noc = self.noc.lock().expect("shared NoC poisoned");
-            (0..self.plans.len()).map(|vr| ShardPlan::snapshot(&self.hv, &noc, vr)).collect()
-        };
+        let fresh: Vec<ShardPlan> =
+            (0..self.plans.len()).map(|vr| ShardPlan::snapshot(&self.hv, vr)).collect();
         for (vr, plan) in fresh.into_iter().enumerate() {
             if plan != self.plans[vr] && self.workers[vr].is_some() {
                 self.drain_shard(vr);
@@ -247,22 +289,42 @@ impl Dispatch {
         for &vr in &quiesced {
             self.drain_shard(vr);
         }
-        let applied = {
-            let mut noc = self.noc.lock().expect("shared NoC poisoned");
-            super::apply_lifecycle(&mut self.hv, &mut self.timing, &self.runtime, &mut *noc, op)
+        let noc = self.noc.clone();
+        let applied = match &noc {
+            NocShared::Single(noc) => {
+                let mut guard = lock_noc(noc);
+                super::apply_lifecycle(
+                    &mut self.hv,
+                    &mut self.timing,
+                    &self.runtime,
+                    &mut *guard,
+                    op,
+                )
+            }
+            NocShared::Partitioned(part) => {
+                // Lifecycle ops go through the control view: each wiring
+                // edit locks only the column(s) it touches.
+                let mut view = part.control();
+                super::apply_lifecycle(
+                    &mut self.hv,
+                    &mut self.timing,
+                    &self.runtime,
+                    &mut view,
+                    op,
+                )
+            }
         };
         let outcome = match applied {
             Ok((outcome, delta)) => {
-                {
-                    let noc = self.noc.lock().expect("shared NoC poisoned");
-                    ShardPlan::apply_delta(&mut self.plans, &delta, &self.hv, &noc);
-                    // Quiesced-but-unlisted shards (e.g. a Wire op's
-                    // source) keep their plan; refresh them anyway so a
-                    // respawned worker never holds a stale snapshot.
-                    for &vr in &quiesced {
-                        if !delta.replan.contains(&vr) {
-                            self.plans[vr] = ShardPlan::snapshot(&self.hv, &noc, vr);
-                        }
+                // Plans are pure hypervisor state now — rebuilding them
+                // takes no NoC lock.
+                ShardPlan::apply_delta(&mut self.plans, &delta, &self.hv);
+                // Quiesced-but-unlisted shards (e.g. a Wire op's
+                // source) keep their plan; refresh them anyway so a
+                // respawned worker never holds a stale snapshot.
+                for &vr in &quiesced {
+                    if !delta.replan.contains(&vr) {
+                        self.plans[vr] = ShardPlan::snapshot(&self.hv, vr);
                     }
                 }
                 Ok(outcome)
@@ -303,18 +365,34 @@ impl ShardedEngine {
     where
         F: FnOnce() -> Result<System>,
     {
+        Self::start_with_gate(builder, GateMode::Partitioned)
+    }
+
+    /// [`ShardedEngine::start`] with an explicit [`GateMode`] — the A/B
+    /// hook the contention benchmarks use to measure the partitioned NoC
+    /// against the single-lock baseline on identical workloads.
+    pub fn start_with_gate<F>(builder: F, gate: GateMode) -> Result<ShardedEngine>
+    where
+        F: FnOnce() -> Result<System>,
+    {
         let parts = builder()?.into_shards();
         // Split the shared core: the dispatcher owns the timing half
         // outright (admission is single-threaded); only the NoC — touched
-        // by whichever worker streams — needs a mutex.
+        // by whichever worker streams — needs synchronization.
         let SharedCore { noc, timing } = parts.core;
+        let noc = match gate {
+            GateMode::SingleLock => NocShared::Single(Arc::new(Mutex::new(noc))),
+            GateMode::Partitioned => {
+                NocShared::Partitioned(Arc::new(PartitionedNoc::from_sim(noc)))
+            }
+        };
         let topo = parts.hv.topo.clone();
         let n = parts.plans.len();
         let mut dispatch = Dispatch {
             hv: parts.hv,
             timing,
             plans: parts.plans,
-            noc: Arc::new(Mutex::new(noc)),
+            noc,
             runtime: parts.runtime,
             io_cfg: parts.io_cfg,
             shard_txs: (0..n).map(|_| None).collect(),

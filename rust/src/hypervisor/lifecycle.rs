@@ -25,7 +25,7 @@
 
 use super::{Event, Hypervisor, VrStatus};
 use crate::device::Resources;
-use crate::noc::NocSim;
+use crate::noc::NocControl;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -350,7 +350,7 @@ impl Hypervisor {
         &mut self,
         op: &LifecycleOp,
         footprint_of: &dyn Fn(&str) -> Option<Resources>,
-        sim: &mut NocSim,
+        sim: &mut dyn NocControl,
     ) -> Result<(LifecycleOutcome, Delta)> {
         self.precheck(op)?;
         let mut delta = Delta::default();
@@ -511,6 +511,7 @@ mod tests {
     use crate::accel;
     use crate::device::Device;
     use crate::hypervisor::Policy;
+    use crate::noc::NocSim;
     use crate::placer::case_study_floorplan;
 
     fn setup() -> (Hypervisor, NocSim) {

@@ -15,7 +15,7 @@ pub mod reconfig;
 pub use lifecycle::{Delta, LifecycleOp, LifecycleOutcome, MigrationPlan, RegionPlan};
 
 use crate::device::Resources;
-use crate::noc::{NocSim, Topology};
+use crate::noc::{NocControl, Topology};
 use crate::placer::Floorplan;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -193,7 +193,7 @@ impl Hypervisor {
 
     /// Allocate one VR to a VI ("select FPGA unit of virtualization").
     /// Configures the NoC access monitor for that region.
-    pub fn allocate_vr(&mut self, vi: u16, sim: &mut NocSim) -> Result<usize> {
+    pub fn allocate_vr(&mut self, vi: u16, sim: &mut dyn NocControl) -> Result<usize> {
         if !self.vis.contains_key(&vi) {
             bail!("unknown VI {vi}");
         }
@@ -256,7 +256,7 @@ impl Hypervisor {
         &mut self,
         vi: u16,
         stream_src: Option<usize>,
-        sim: &mut NocSim,
+        sim: &mut dyn NocControl,
     ) -> Result<usize> {
         let vr = self.allocate_vr(vi, sim)?;
         if let Some(src) = stream_src {
@@ -272,7 +272,7 @@ impl Hypervisor {
     /// floorplan, clear registers/stream wiring, bump the epoch (stale
     /// admission tickets must stay detectable), and close the NoC access
     /// monitor + unwire any direct links touching it.
-    fn free_vr(&mut self, vr: usize, sim: &mut NocSim) {
+    fn free_vr(&mut self, vr: usize, sim: &mut dyn NocControl) {
         let footprint = self.vrs[vr].footprint;
         self.floorplan.uncommit_vr(vr, &footprint);
         self.vrs[vr] = VrRecord {
@@ -287,7 +287,7 @@ impl Hypervisor {
 
     /// Release a VR back to the pool (rapid elasticity: resources are
     /// "provisioned and released").
-    pub fn release_vr(&mut self, vi: u16, vr: usize, sim: &mut NocSim) -> Result<()> {
+    pub fn release_vr(&mut self, vi: u16, vr: usize, sim: &mut dyn NocControl) -> Result<()> {
         if vr >= self.vrs.len() {
             bail!("VR{vr} does not exist");
         }
@@ -304,7 +304,7 @@ impl Hypervisor {
     }
 
     /// Tear down a VI, releasing all its VRs.
-    pub fn destroy_vi(&mut self, vi: u16, sim: &mut NocSim) -> Result<()> {
+    pub fn destroy_vi(&mut self, vi: u16, sim: &mut dyn NocControl) -> Result<()> {
         let Some(rec) = self.vis.remove(&vi) else { bail!("unknown VI {vi}") };
         for vr in rec.vrs {
             self.free_vr(vr, sim);
@@ -367,6 +367,7 @@ impl Hypervisor {
 mod tests {
     use super::*;
     use crate::device::Device;
+    use crate::noc::NocSim;
     use crate::placer::case_study_floorplan;
 
     fn setup(policy: Policy) -> (Hypervisor, NocSim) {

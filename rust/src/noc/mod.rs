@@ -6,10 +6,14 @@
 //! batched flat-state engine used everywhere, and
 //! [`fixpoint::FixpointSim`], the original fixpoint implementation kept as
 //! the behavioral oracle (see `benches/noc_hotpath.rs` and the
-//! engine-equivalence property tests).
+//! engine-equivalence property tests). [`partition::PartitionedNoc`]
+//! shards the batched engine by physical column (one lock per column plus
+//! a fold-link boundary region) so concurrent serving shards stop
+//! convoying on unrelated columns.
 
 pub mod fixpoint;
 pub mod packet;
+pub mod partition;
 pub mod router;
 pub mod routing;
 pub mod sim;
@@ -18,6 +22,12 @@ pub mod traffic;
 
 pub use fixpoint::FixpointSim;
 pub use packet::{segment_message, Flit, Header, Payload, VrSide};
+pub use partition::{
+    collect_delivered, lock_noc, stream_hop, ControlView, NocControl, PartitionedNoc,
+};
 pub use routing::{hop_count, route, OutPort};
 pub use sim::{NocSim, NocStats, VrState};
 pub use topology::{Flavor, Topology};
+
+/// Bytes carried per 32-bit flit.
+pub const FLIT_PAYLOAD_BYTES: usize = 4;

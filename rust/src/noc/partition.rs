@@ -1,0 +1,517 @@
+//! Per-column lock partitioning of the shared NoC.
+//!
+//! The paper's NoC is column-parallel by construction: routers form one
+//! logical line that snakes column by column (§IV-A), VR-to-VR direct
+//! links never leave a column, and routing is monotonic along the line.
+//! [`Topology::build`](super::topology::Topology) therefore gives every
+//! physical column a *contiguous* range of router ids — which is exactly
+//! the property that makes lock partitioning sound: a streaming hop whose
+//! source and destination share a column touches only that column's
+//! routers, so it can run under that column's lock alone, concurrently
+//! with hops in other columns.
+//!
+//! [`PartitionedNoc`] realizes this: one [`Mutex<NocSim>`] per physical
+//! column (each cell simulates its column's [`Topology::subrange`], which
+//! is cycle-identical to the same routers inside the full topology), plus
+//! a fold-link **boundary region** (`Mutex<NocStats>`) that aggregates the
+//! statistics of cross-column hops.
+//!
+//! # Lock ordering (deadlock-free by construction)
+//!
+//! ```text
+//!   cell[0] < cell[1] < ... < cell[C-1] < boundary
+//! ```
+//!
+//! - An intra-column hop locks exactly one cell.
+//! - A cross-column (fold-link) hop locks the cells of every column its
+//!   route traverses in **ascending column order**, simulates the hop on a
+//!   scratch engine spanning those columns, releases the cells, and only
+//!   then locks the boundary region to merge the hop's statistics.
+//! - No thread ever acquires a lower-ordered lock while holding a
+//!   higher-ordered one, so a cycle in the wait-for graph is impossible.
+//!
+//! # Equivalence to the single-lock engine
+//!
+//! Every serving hop is atomic (send, drain, collect — the network is
+//! empty between hops), has a single source streaming to a single
+//! destination (so at most one requester per output port per cycle and
+//! the round-robin allocator state is irrelevant), and all latency /
+//! waiting statistics are relative to the hop's own start cycle. A hop
+//! simulated on a column slice is therefore cycle-identical and
+//! byte-identical to the same hop on the full simulator; only the *merge
+//! order* of the aggregate [`Summary`](crate::util::Summary) means can
+//! differ, by floating-point ulps. The property tests in
+//! `rust/tests/properties.rs` replay seeded multi-column traces through
+//! both gates and assert exactly this.
+//!
+//! # Poison recovery
+//!
+//! Every lock in this module is acquired through [`lock_noc`] /
+//! [`lock_stats`]: a worker that panicked mid-hop poisons its mutex, and
+//! the next acquirer recovers the inner state ([`NocSim::quarantine`]
+//! drops the interrupted hop's in-flight flits as rejected) instead of
+//! propagating the panic. One shard's failure degrades to that shard's
+//! requests erroring; sibling columns keep serving.
+
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{bail, Result};
+
+use super::fixpoint::FixpointSim;
+use super::packet::Payload;
+use super::sim::{NocSim, NocStats};
+use super::topology::Topology;
+use super::FLIT_PAYLOAD_BYTES;
+
+/// The control surface lifecycle operations need from a NoC: access
+/// monitors and direct-link wiring. Implemented by the single-lock
+/// [`NocSim`], the oracle [`FixpointSim`], and the partitioned NoC's
+/// [`ControlView`], so the hypervisor drives all three through
+/// `&mut dyn NocControl` without caring how the network is locked.
+pub trait NocControl {
+    /// Assign VR `vr` to VI `vi` (configures its access monitor).
+    fn assign_vr(&mut self, vr: usize, vi: u16);
+    /// Release a VR: reject everything again, unwire stale direct links.
+    fn release_vr(&mut self, vr: usize);
+    /// Wire a direct VR->VR streaming link (must be physically adjacent).
+    fn wire_direct(&mut self, src: usize, dst: usize) -> Result<()>;
+    /// Unwire the direct link leaving `src`; returns the old destination.
+    fn unwire_direct(&mut self, src: usize) -> Option<usize>;
+    /// All currently wired direct links, sorted `(src, dst)`.
+    fn direct_links(&self) -> Vec<(usize, usize)>;
+}
+
+impl NocControl for NocSim {
+    fn assign_vr(&mut self, vr: usize, vi: u16) {
+        NocSim::assign_vr(self, vr, vi);
+    }
+    fn release_vr(&mut self, vr: usize) {
+        NocSim::release_vr(self, vr);
+    }
+    fn wire_direct(&mut self, src: usize, dst: usize) -> Result<()> {
+        NocSim::wire_direct(self, src, dst)
+    }
+    fn unwire_direct(&mut self, src: usize) -> Option<usize> {
+        NocSim::unwire_direct(self, src)
+    }
+    fn direct_links(&self) -> Vec<(usize, usize)> {
+        NocSim::direct_links(self)
+    }
+}
+
+impl NocControl for FixpointSim {
+    fn assign_vr(&mut self, vr: usize, vi: u16) {
+        FixpointSim::assign_vr(self, vr, vi);
+    }
+    fn release_vr(&mut self, vr: usize) {
+        FixpointSim::release_vr(self, vr);
+    }
+    fn wire_direct(&mut self, src: usize, dst: usize) -> Result<()> {
+        FixpointSim::wire_direct(self, src, dst)
+    }
+    fn unwire_direct(&mut self, src: usize) -> Option<usize> {
+        FixpointSim::unwire_direct(self, src)
+    }
+    fn direct_links(&self) -> Vec<(usize, usize)> {
+        FixpointSim::direct_links(self)
+    }
+}
+
+/// Acquire a NoC mutex, recovering from poison: if a worker panicked
+/// while holding the lock, the interrupted hop's flits are quarantined
+/// (dropped as rejected, [`NocSim::quarantine`]) and the simulator is
+/// handed out in a consistent state. The mutex stays poisoned, so the
+/// (idempotent) quarantine re-runs on each subsequent acquisition.
+pub fn lock_noc(mutex: &Mutex<NocSim>) -> MutexGuard<'_, NocSim> {
+    match mutex.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            let mut guard = poisoned.into_inner();
+            guard.quarantine();
+            guard
+        }
+    }
+}
+
+/// Acquire a stats mutex, shrugging off poison (plain counters cannot be
+/// left inconsistent by a panic between updates).
+pub fn lock_stats(mutex: &Mutex<NocStats>) -> MutexGuard<'_, NocStats> {
+    mutex.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Stream `bytes` from `src` VR to `dst` VR over the NoC: the direct link
+/// if one was actually wired via [`NocSim::wire_direct`], else routed
+/// flits. The flits are zero-copy windows into `bytes`. Returns cycles
+/// taken to drain.
+pub fn stream_hop(
+    noc: &mut NocSim,
+    vi: u16,
+    src: usize,
+    dst: usize,
+    bytes: &Payload,
+) -> Result<u64> {
+    let header = noc.header_for(vi, dst);
+    let flits = super::segment_message(header, bytes.clone(), FLIT_PAYLOAD_BYTES, 0);
+    let start = noc.cycle();
+    let direct = noc.has_direct(src, dst);
+    for f in flits {
+        if direct {
+            noc.send_direct(src, header, f.payload, f.seq);
+        } else {
+            noc.send(src, header, f.payload, f.seq);
+        }
+    }
+    if !noc.drain(1_000_000) {
+        bail!("NoC failed to drain while streaming {src}->{dst}");
+    }
+    Ok(noc.cycle() - start)
+}
+
+/// Pop all delivered payload bytes at a VR (in order).
+pub fn collect_delivered(noc: &mut NocSim, vr: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    while let Some(f) = noc.vrs[vr].delivered.pop_front() {
+        out.extend_from_slice(&f.payload);
+    }
+    out
+}
+
+/// The shared NoC partitioned by physical column: one mutex per column
+/// plus the fold-link boundary region. See the module docs for the lock
+/// ordering and the equivalence argument.
+pub struct PartitionedNoc {
+    /// Full topology (columns are contiguous router-id ranges of it).
+    topo: Topology,
+    /// `(first_router, n_routers)` per column, ascending.
+    ranges: Vec<(usize, usize)>,
+    /// One independently locked simulator per column, each over
+    /// [`Topology::subrange`] of its routers.
+    cells: Vec<Mutex<NocSim>>,
+    /// Fold-link boundary region: statistics of cross-column hops.
+    /// Ordered *after* every cell — always locked last.
+    boundary: Mutex<NocStats>,
+}
+
+impl PartitionedNoc {
+    /// Partition an idle simulator by column, carrying over access-monitor
+    /// assignments, per-VR rejection counters, direct links (always
+    /// intra-column), and accumulated statistics (into the boundary
+    /// region). The network must be empty — engines only partition
+    /// between hops.
+    pub fn from_sim(sim: NocSim) -> PartitionedNoc {
+        debug_assert_eq!(sim.in_flight(), 0, "partitioning requires an empty network");
+        let topo = sim.topo.clone();
+        let ranges = topo.column_ranges();
+        let mut cells: Vec<NocSim> = ranges
+            .iter()
+            .map(|&(lo, len)| {
+                let mut cell = NocSim::new(topo.subrange(lo, lo + len - 1));
+                for local in 0..cell.topo.n_vrs() {
+                    let global = &sim.vrs[2 * lo + local];
+                    if let Some(vi) = global.owner_vi {
+                        cell.assign_vr(local, vi);
+                    }
+                    cell.vrs[local].rejected = global.rejected;
+                }
+                cell
+            })
+            .collect();
+        for (src, dst) in sim.direct_links() {
+            let col = topo.routers[topo.router_of_vr(src) as usize].column;
+            let lo = ranges[col].0;
+            cells[col]
+                .wire_direct(src - 2 * lo, dst - 2 * lo)
+                .expect("direct links never cross a column");
+        }
+        PartitionedNoc {
+            topo,
+            ranges,
+            cells: cells.into_iter().map(Mutex::new).collect(),
+            boundary: Mutex::new(sim.stats),
+        }
+    }
+
+    /// The full topology this partitioned network simulates.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Number of independently locked column cells.
+    pub fn columns(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// `(column, local_vr)` of a global VR index.
+    fn locate_vr(&self, vr: usize) -> (usize, usize) {
+        let col = self.topo.routers[self.topo.router_of_vr(vr) as usize].column;
+        (col, vr - 2 * self.ranges[col].0)
+    }
+
+    /// A [`NocControl`] view for lifecycle ops: each call locks only the
+    /// column(s) it touches.
+    pub fn control(&self) -> ControlView<'_> {
+        ControlView { part: self }
+    }
+
+    /// Aggregate statistics: per-column cells (ascending) then the
+    /// fold-link boundary region, merged with [`NocStats::merge`].
+    pub fn stats(&self) -> NocStats {
+        let mut total = NocStats::default();
+        for cell in &self.cells {
+            total.merge(&lock_noc(cell).stats);
+        }
+        total.merge(&lock_stats(&self.boundary));
+        total
+    }
+
+    /// Whether a direct streaming link `src` -> `dst` is wired. Direct
+    /// links never cross a column, so only `src`'s cell is consulted.
+    pub fn has_direct(&self, src: usize, dst: usize) -> bool {
+        let (cs, lsrc) = self.locate_vr(src);
+        let (cd, ldst) = self.locate_vr(dst);
+        cs == cd && lock_noc(&self.cells[cs]).has_direct(lsrc, ldst)
+    }
+
+    /// All currently wired direct links, in global indices, sorted.
+    pub fn direct_links(&self) -> Vec<(usize, usize)> {
+        let mut links = Vec::new();
+        for (col, cell) in self.cells.iter().enumerate() {
+            let lo = self.ranges[col].0;
+            for (s, d) in lock_noc(cell).direct_links() {
+                links.push((s + 2 * lo, d + 2 * lo));
+            }
+        }
+        links.sort_unstable();
+        links
+    }
+
+    /// Stream one hop under the partition's locks and return
+    /// `(cycles, delivered bytes)` — the partitioned equivalent of
+    /// locking the whole NoC and running [`stream_hop`] +
+    /// [`collect_delivered`].
+    pub fn stream(&self, vi: u16, src: usize, dst: usize, bytes: &Payload) -> Result<(u64, Vec<u8>)> {
+        let (cs, lsrc) = self.locate_vr(src);
+        let (cd, ldst) = self.locate_vr(dst);
+        if cs == cd {
+            // Intra-column: the hop's whole route lives in one cell.
+            let mut cell = lock_noc(&self.cells[cs]);
+            let cycles = stream_hop(&mut cell, vi, lsrc, ldst, bytes)?;
+            let out = collect_delivered(&mut cell, ldst);
+            return Ok((cycles, out));
+        }
+        // Fold-link hop: the route physically occupies every column from
+        // min to max, so acquire exactly those cells — ascending column
+        // order, the global ordering rule that makes this deadlock-free.
+        let (ca, cb) = (cs.min(cd), cs.max(cd));
+        let mut guards: Vec<MutexGuard<'_, NocSim>> =
+            (ca..=cb).map(|c| lock_noc(&self.cells[c])).collect();
+        let lo_r = self.ranges[ca].0;
+        let hi_r = self.ranges[cb].0 + self.ranges[cb].1 - 1;
+        // Simulate on a scratch engine spanning the locked columns; the
+        // slice keeps fold-link relay stages, so the hop is
+        // cycle-identical to the full simulator (see module docs).
+        let mut scratch = NocSim::new(self.topo.subrange(lo_r, hi_r));
+        let (ssrc, sdst) = (src - 2 * lo_r, dst - 2 * lo_r);
+        if let Some(owner) = guards[cd - ca].vrs[ldst].owner_vi {
+            // Carry the destination's access monitor so rejection
+            // behavior matches the single-lock engine exactly.
+            scratch.assign_vr(sdst, owner);
+        }
+        let cycles = stream_hop(&mut scratch, vi, ssrc, sdst, bytes)?;
+        let out = collect_delivered(&mut scratch, sdst);
+        // Propagate per-VR rejection bookkeeping into the destination's
+        // cell, release the cells, then merge the hop's aggregate stats
+        // into the boundary region (always locked last).
+        let rejected = scratch.vrs[sdst].rejected;
+        if rejected > 0 {
+            guards[cd - ca].vrs[ldst].rejected += rejected;
+        }
+        drop(guards);
+        lock_stats(&self.boundary).merge(&scratch.stats);
+        Ok((cycles, out))
+    }
+}
+
+/// Borrowed [`NocControl`] implementation over a [`PartitionedNoc`]:
+/// every operation locks only the column(s) it names. Adjacency is
+/// checked against the full topology first so error messages carry
+/// global VR indices, byte-identical to [`NocSim::wire_direct`].
+pub struct ControlView<'a> {
+    part: &'a PartitionedNoc,
+}
+
+impl NocControl for ControlView<'_> {
+    fn assign_vr(&mut self, vr: usize, vi: u16) {
+        let (col, local) = self.part.locate_vr(vr);
+        lock_noc(&self.part.cells[col]).assign_vr(local, vi);
+    }
+
+    fn release_vr(&mut self, vr: usize) {
+        let (col, local) = self.part.locate_vr(vr);
+        lock_noc(&self.part.cells[col]).release_vr(local);
+    }
+
+    fn wire_direct(&mut self, src: usize, dst: usize) -> Result<()> {
+        if !self.part.topo.vrs_adjacent(src, dst) {
+            bail!("VR{src} and VR{dst} are not adjacent; cannot wire a direct link");
+        }
+        let (col, lsrc) = self.part.locate_vr(src);
+        let (_, ldst) = self.part.locate_vr(dst);
+        lock_noc(&self.part.cells[col]).wire_direct(lsrc, ldst)
+    }
+
+    fn unwire_direct(&mut self, src: usize) -> Option<usize> {
+        let (col, lsrc) = self.part.locate_vr(src);
+        let lo = self.part.ranges[col].0;
+        lock_noc(&self.part.cells[col]).unwire_direct(lsrc).map(|ldst| ldst + 2 * lo)
+    }
+
+    fn direct_links(&self) -> Vec<(usize, usize)> {
+        self.part.direct_links()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assigned(topo: Topology) -> NocSim {
+        let mut sim = NocSim::new(topo);
+        for vr in 0..sim.topo.n_vrs() {
+            sim.assign_vr(vr, vr as u16);
+        }
+        sim
+    }
+
+    #[test]
+    fn column_ranges_are_contiguous_and_cover() {
+        let topo = Topology::multi_column(10, 3);
+        let ranges = topo.column_ranges();
+        assert_eq!(ranges, vec![(0, 4), (4, 4), (8, 2)]);
+        let topo = Topology::single_column(3);
+        assert_eq!(topo.column_ranges(), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn subrange_preserves_rows_relays_and_adjacency() {
+        let topo = Topology::multi_column(8, 2);
+        let sub = topo.subrange(2, 5); // spans the fold between 3 and 4
+        assert_eq!(sub.n_routers(), 4);
+        assert_eq!(sub.link_relay, vec![0, 1, 0]);
+        // Adjacency of the sliced VRs matches the full topology.
+        for a in 0..sub.n_vrs() {
+            for b in 0..sub.n_vrs() {
+                assert_eq!(sub.vrs_adjacent(a, b), topo.vrs_adjacent(a + 4, b + 4), "{a} {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn intra_column_hop_matches_single_lock() {
+        let topo = Topology::multi_column(8, 2);
+        let mut whole = assigned(topo.clone());
+        let part = PartitionedNoc::from_sim(assigned(topo));
+        let bytes = Payload::from(vec![9u8; 64]);
+        // Router 1 east VR (3) -> router 2 west VR (4): same column.
+        let cycles = stream_hop(&mut whole, 4, 3, 4, &bytes).unwrap();
+        let got = collect_delivered(&mut whole, 4);
+        let (pcycles, pgot) = part.stream(4, 3, 4, &bytes).unwrap();
+        assert_eq!(pcycles, cycles);
+        assert_eq!(pgot, got);
+        let stats = part.stats();
+        assert_eq!(stats.delivered, whole.stats.delivered);
+        assert_eq!(stats.rejected, whole.stats.rejected);
+        assert_eq!(stats.latency.mean(), whole.stats.latency.mean());
+    }
+
+    #[test]
+    fn fold_link_hop_matches_single_lock() {
+        let topo = Topology::multi_column(8, 2);
+        let mut whole = assigned(topo.clone());
+        let part = PartitionedNoc::from_sim(assigned(topo));
+        let bytes = Payload::from(vec![3u8; 32]);
+        // VR2 (router 1, column 0) -> VR11 (router 5, column 1).
+        let cycles = stream_hop(&mut whole, 11, 2, 11, &bytes).unwrap();
+        let got = collect_delivered(&mut whole, 11);
+        let (pcycles, pgot) = part.stream(11, 2, 11, &bytes).unwrap();
+        assert_eq!(pcycles, cycles, "fold-link hop must be cycle-identical");
+        assert_eq!(pgot, got);
+        let stats = part.stats();
+        assert_eq!(stats.delivered, whole.stats.delivered);
+        assert_eq!(stats.latency.max(), whole.stats.latency.max());
+    }
+
+    #[test]
+    fn cross_column_rejection_lands_in_destination_cell() {
+        let topo = Topology::multi_column(8, 2);
+        let mut sim = assigned(topo);
+        sim.release_vr(11); // unassigned: rejects everything
+        let part = PartitionedNoc::from_sim(sim);
+        let bytes = Payload::from(vec![1u8; 16]);
+        let (_, got) = part.stream(11, 2, 11, &bytes).unwrap();
+        assert!(got.is_empty());
+        let stats = part.stats();
+        assert_eq!(stats.rejected, 4); // 16 B / 4 B-per-flit
+        assert_eq!(stats.delivered, 0);
+    }
+
+    #[test]
+    fn control_view_wires_and_releases_like_the_full_sim() {
+        let topo = Topology::multi_column(8, 2);
+        let part = PartitionedNoc::from_sim(assigned(topo.clone()));
+        let mut view = part.control();
+        // VR8/VR9 hang off router 4 (column 1): adjacent, wire succeeds.
+        view.wire_direct(8, 9).unwrap();
+        assert!(part.has_direct(8, 9));
+        assert_eq!(part.direct_links(), vec![(8, 9)]);
+        // Cross-column pairs are refused with the full-sim error message.
+        let err = view.wire_direct(7, 8).unwrap_err().to_string();
+        let mut whole = assigned(topo);
+        let expect = NocControl::wire_direct(&mut whole, 7, 8).unwrap_err().to_string();
+        assert_eq!(err, expect);
+        // Release unwires through the cell, reported in global indices.
+        let mut view = part.control();
+        assert_eq!(view.unwire_direct(8), Some(9));
+        assert_eq!(part.direct_links(), vec![]);
+    }
+
+    #[test]
+    fn from_sim_carries_owners_links_and_stats() {
+        let topo = Topology::multi_column(8, 2);
+        let mut sim = assigned(topo);
+        sim.wire_direct(8, 9).unwrap();
+        let bytes = Payload::from(vec![7u8; 24]);
+        stream_hop(&mut sim, 5, 4, 5, &bytes).unwrap();
+        collect_delivered(&mut sim, 5);
+        let delivered_before = sim.stats.delivered;
+        let part = PartitionedNoc::from_sim(sim);
+        assert!(part.has_direct(8, 9));
+        assert_eq!(part.stats().delivered, delivered_before);
+        // The carried owner still gates delivery in the cell.
+        let (_, got) = part.stream(5, 4, 5, &bytes).unwrap();
+        assert_eq!(got, vec![7u8; 24]);
+    }
+
+    #[test]
+    fn quarantine_recovers_a_poisoned_cell() {
+        let topo = Topology::single_column(3);
+        let part = std::sync::Arc::new(PartitionedNoc::from_sim(assigned(topo)));
+        // Poison cell 0 while a hop is mid-flight.
+        let poisoner = std::sync::Arc::clone(&part);
+        std::thread::spawn(move || {
+            let mut cell = lock_noc(&poisoner.cells[0]);
+            let header = cell.header_for(1, 1);
+            cell.send(0, header, vec![1u8; 4], 0);
+            panic!("worker dies holding the cell lock");
+        })
+        .join()
+        .unwrap_err();
+        assert!(part.cells[0].is_poisoned());
+        // The next hop through the cell quarantines the orphaned flit and
+        // serves normally.
+        let bytes = Payload::from(vec![2u8; 8]);
+        let (_, got) = part.stream(1, 0, 1, &bytes).unwrap();
+        assert_eq!(got, vec![2u8; 8]);
+        assert_eq!(part.stats().rejected, 1, "orphaned flit dropped as rejected");
+    }
+}

@@ -119,6 +119,21 @@ pub struct NocStats {
     pub waiting: Summary,
 }
 
+impl NocStats {
+    /// Fold another region's statistics in (counts add; distributions use
+    /// the numerically stable parallel [`Summary::merge`]). The partitioned
+    /// NoC aggregates per-column cells plus the fold-link boundary region
+    /// through this; the counts and extrema are exact, the merged means can
+    /// differ from a serially accumulated run by floating-point ulps.
+    pub fn merge(&mut self, other: &NocStats) {
+        self.delivered += other.delivered;
+        self.rejected += other.rejected;
+        self.direct_delivered += other.direct_delivered;
+        self.latency.merge(&other.latency);
+        self.waiting.merge(&other.waiting);
+    }
+}
+
 /// The network simulator.
 pub struct NocSim {
     /// Topology being simulated.
@@ -625,6 +640,34 @@ impl NocSim {
             left -= 1;
         }
         self.in_flight() == 0
+    }
+
+    /// Recover from an interrupted streaming hop (a worker panicked while
+    /// holding this simulator's lock): drop every in-flight flit as
+    /// rejected, clear undelivered output (stale partial deliveries must
+    /// not leak into the next tenant's collect), and leave the simulator
+    /// consistent so sibling shards keep serving. Idempotent — a poisoned
+    /// `Mutex` re-runs this on every subsequent lock, and on an already
+    /// clean simulator it is a no-op.
+    pub fn quarantine(&mut self) {
+        let mut dropped = 0u64;
+        for vr in self.vrs.iter_mut() {
+            let d = (vr.out_queue.len() + vr.direct_out.len()) as u64;
+            vr.out_queue.clear();
+            vr.direct_out.clear();
+            // Delivered-but-uncollected flits were counted as delivered;
+            // discard them uncounted so the next hop starts clean.
+            vr.delivered.clear();
+            vr.rejected += d;
+            dropped += d;
+        }
+        for slot in self.slots.iter_mut() {
+            if slot.take().is_some() {
+                dropped += 1;
+            }
+        }
+        self.stats.rejected += dropped;
+        self.active = 0;
     }
 }
 

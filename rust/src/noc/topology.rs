@@ -139,6 +139,43 @@ impl Topology {
         if vr % 2 == 0 { super::packet::VrSide::West } else { super::packet::VrSide::East }
     }
 
+    /// Contiguous router ranges per physical column, ascending:
+    /// `column_ranges()[c] = (first_router, n_routers)` of column `c`.
+    /// Router ids within a column are contiguous by construction (the
+    /// logical line snakes column by column), which is what makes
+    /// per-column lock partitioning sound.
+    pub fn column_ranges(&self) -> Vec<(usize, usize)> {
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        for (i, r) in self.routers.iter().enumerate() {
+            match ranges.last_mut() {
+                Some(range) if r.column == self.routers[range.0].column => range.1 += 1,
+                _ => ranges.push((i, 1)),
+            }
+        }
+        ranges
+    }
+
+    /// Slice routers `lo..=hi` into a standalone topology with ids
+    /// renumbered from 0. Rows and relative columns are preserved, so
+    /// `vrs_adjacent` and the sliced `link_relay` (fold links inside the
+    /// range keep their relay stage) behave exactly as in the parent:
+    /// routing is 1-D over router ids, so a hop simulated on the slice is
+    /// cycle-identical to the same hop on the full topology.
+    pub fn subrange(&self, lo: usize, hi: usize) -> Topology {
+        assert!(lo <= hi && hi < self.routers.len());
+        let base_col = self.routers[lo].column;
+        let routers: Vec<RouterNode> = (lo..=hi)
+            .map(|i| RouterNode {
+                id: (i - lo) as u8,
+                column: self.routers[i].column - base_col,
+                row: self.routers[i].row,
+            })
+            .collect();
+        let n_cols = routers.last().map(|r| r.column + 1).unwrap_or(1);
+        let flavor = if n_cols == 1 { Flavor::SingleColumn } else { Flavor::MultiColumn(n_cols) };
+        Topology { flavor, routers, link_relay: self.link_relay[lo..hi].to_vec() }
+    }
+
     /// Are two VRs physically adjacent (same router, or vertically adjacent
     /// on the same side of the same column)? Those pairs can be wired with
     /// the direct VR-to-VR streaming links of Fig 3b.

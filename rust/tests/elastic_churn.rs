@@ -174,7 +174,7 @@ fn released_region_is_isolated_from_its_previous_owner() {
 
     // Mint an admission ticket against VR3's *current* epoch, as if a
     // request were in flight at the moment of the release.
-    let old_plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 3);
+    let old_plan = ShardPlan::snapshot(&sys.hv, 3);
     let stale_adm = match sys.core.timing.admit_vr(1_000, 3, old_plan.epoch) {
         Gate::Admitted(adm) => adm,
         Gate::Busy { .. } => panic!("no window is open"),
@@ -201,7 +201,7 @@ fn released_region_is_isolated_from_its_previous_owner() {
 
     // 1. The new owner cannot be reached via the old owner's stream
     //    wiring: FPU no longer chains, and the direct link is gone.
-    let plan2 = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 2);
+    let plan2 = ShardPlan::snapshot(&sys.hv, 2);
     assert_eq!(plan2.stream_dest, None, "stale Wrapper registers must not chain");
     assert!(!sys.core.noc.has_direct(2, 3), "release must unwire the direct link");
     let after = sys.submit(3, 2, &[7u8; 64]).unwrap();
@@ -215,7 +215,7 @@ fn released_region_is_isolated_from_its_previous_owner() {
 
     // 3. The stale admission ticket is rejected at the shard ingress:
     //    epoch moved on release + re-allocate + re-program.
-    let new_plan = ShardPlan::snapshot(&sys.hv, &sys.core.noc, 3);
+    let new_plan = ShardPlan::snapshot(&sys.hv, 3);
     assert!(new_plan.epoch > old_plan.epoch, "lifecycle must bump the epoch");
     let mut metrics = Metrics::default();
     let env = ShardEnv { runtime: sys.runtime.as_ref(), io_cfg: &sys.io_cfg };

@@ -9,7 +9,10 @@
 //!   after exhaustion/release churn;
 //! - estimate models are monotone in width and radix;
 //! - the batched NoC engine is cycle-for-cycle identical to the retained
-//!   fixpoint reference engine on random topologies and traffic.
+//!   fixpoint reference engine on random topologies and traffic;
+//! - the per-column partitioned NoC gate streams cycle- and
+//!   byte-identically to the single-lock gate (and the fixpoint oracle)
+//!   on seeded multi-column hop traces, across partition configs.
 
 use fpga_mt::coordinator::design_footprint;
 use fpga_mt::device::Device;
@@ -271,6 +274,101 @@ fn batched_engine_matches_fixpoint_reference() {
             let b: Vec<u64> = ref_sim.vrs[vr].delivered.iter().map(|f| f.id).collect();
             assert_eq!(a, b, "VR{vr} delivery order diverged");
             assert_eq!(new_sim.vrs[vr].rejected, ref_sim.vrs[vr].rejected);
+        }
+    });
+}
+
+#[test]
+fn partitioned_gate_matches_single_lock_and_fixpoint_on_hop_traces() {
+    // The lock-partitioning invariant: replaying one seeded trace of
+    // serving hops (the atomic send-drain-collect unit the engines use)
+    // through the single-lock gate (`&Mutex<NocSim>`, the pre-partition
+    // worker gate), the per-column [`PartitionedNoc`], and a per-hop
+    // replica on the fixpoint oracle yields identical per-hop cycle
+    // counts, byte-identical delivered payloads (which pins per-VR
+    // delivery order), and matching final statistics — counts and extrema
+    // exactly, aggregate means to FP-merge-order tolerance. Random column
+    // counts sweep the partition configs (1 column = degenerate single
+    // cell, n columns = one router per cell).
+    use fpga_mt::coordinator::shard::CoreGate;
+    use fpga_mt::noc::{segment_message, PartitionedNoc, FLIT_PAYLOAD_BYTES};
+    use std::sync::Mutex;
+
+    forall("partitioned gate equivalence", 48, |rng| {
+        let n = 4 + rng.below(9) as usize;
+        let cols = 1 + rng.below(n as u64) as usize;
+        let topo = Topology::multi_column(n, cols);
+        let n_vrs = topo.n_vrs();
+        let n_vis = 1 + rng.below(4) as u16;
+        let mut single = NocSim::new(topo.clone());
+        let mut oracle = FixpointSim::new(topo.clone());
+        let mut part_src = NocSim::new(topo.clone());
+        for vr in 0..n_vrs {
+            let vi = rng.below(n_vis as u64) as u16;
+            single.assign_vr(vr, vi);
+            oracle.assign_vr(vr, vi);
+            part_src.assign_vr(vr, vi);
+        }
+        // Wire the router-0 VR pair directly half the time, so traces
+        // cover the direct-link fast path as well as routed flits.
+        if rng.chance(0.5) {
+            single.wire_direct(0, 1).unwrap();
+            oracle.wire_direct(0, 1).unwrap();
+            part_src.wire_direct(0, 1).unwrap();
+        }
+        let single = Mutex::new(single);
+        let part = PartitionedNoc::from_sim(part_src);
+        for _ in 0..rng.range_u64(5, 40) {
+            let src = rng.index(n_vrs);
+            let dst = rng.index(n_vrs);
+            if dst == src {
+                continue;
+            }
+            // Sometimes a foreign VI: the hop must reject identically.
+            let vi = rng.below(n_vis as u64) as u16;
+            let bytes = Payload::from(vec![rng.below(256) as u8; 1 + rng.below(96) as usize]);
+
+            let mut gate: &Mutex<NocSim> = &single;
+            let (sc, sb) = gate.stream(vi, src, dst, &bytes).unwrap();
+            let (pc, pb) = part.stream(vi, src, dst, &bytes).unwrap();
+
+            // Per-hop replica on the fixpoint oracle, mirroring
+            // `stream_hop` + `collect_delivered` flit for flit.
+            let header = oracle.header_for(vi, dst);
+            let start = oracle.cycle();
+            let direct = oracle.has_direct(src, dst);
+            for f in segment_message(header, bytes.clone(), FLIT_PAYLOAD_BYTES, 0) {
+                if direct {
+                    oracle.send_direct(src, header, f.payload, f.seq);
+                } else {
+                    oracle.send(src, header, f.payload, f.seq);
+                }
+            }
+            assert!(oracle.drain(1_000_000), "oracle failed to drain");
+            let oc = oracle.cycle() - start;
+            let mut ob = Vec::new();
+            while let Some(f) = oracle.vrs[dst].delivered.pop_front() {
+                ob.extend_from_slice(&f.payload);
+            }
+
+            assert_eq!(pc, sc, "hop {src}->{dst}: partitioned cycles diverged");
+            assert_eq!(pb, sb, "hop {src}->{dst}: partitioned bytes diverged");
+            assert_eq!(oc, sc, "hop {src}->{dst}: oracle cycles diverged");
+            assert_eq!(ob, sb, "hop {src}->{dst}: oracle bytes diverged");
+        }
+        let s = single.into_inner().unwrap();
+        let p = part.stats();
+        assert_eq!(p.delivered, s.stats.delivered);
+        assert_eq!(p.rejected, s.stats.rejected);
+        assert_eq!(p.direct_delivered, s.stats.direct_delivered);
+        assert_eq!(p.latency.count(), s.stats.latency.count());
+        assert_eq!(p.latency.max(), s.stats.latency.max());
+        assert_eq!(p.waiting.max(), s.stats.waiting.max());
+        if p.latency.count() > 0 {
+            // Merged per-column means may differ from the single
+            // accumulator by FP merge order only.
+            assert!((p.latency.mean() - s.stats.latency.mean()).abs() < 1e-9);
+            assert!((p.waiting.mean() - s.stats.waiting.mean()).abs() < 1e-9);
         }
     });
 }
