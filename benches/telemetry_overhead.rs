@@ -1,0 +1,165 @@
+//! Tracing-overhead A/B and the per-tenant telemetry report.
+//!
+//! Three sections:
+//! 1. **Overhead** — the same seeded session-surface replay drives the
+//!    sharded engine twice: telemetry enabled (the default) and disabled
+//!    (`FPGA_MT_TELEMETRY=off`, read at engine construction). Each mode
+//!    runs several timed windows and keeps its best, so the comparison
+//!    measures the instrumentation, not scheduler noise. Tracing must
+//!    cost < 10% closed-loop throughput — the gate this bench exists
+//!    for; the CI smoke step re-asserts the JSON field.
+//! 2. **Registry** — the tracing-on run's `telemetry_snapshot()` must
+//!    cover every case-study tenant (per-tenant p50/p95/p99 modeled
+//!    latency from the registry sketches), render every serving-path
+//!    phase in the span log, and export through both the
+//!    Prometheus-style and JSON exporters; the tracing-off run must
+//!    snapshot empty.
+//! 3. **Persistence** — writes `BENCH_telemetry.json` (including
+//!    `tracing_overhead_pct`, which CI gates) so the observability cost
+//!    has a trajectory across PRs.
+//!
+//! `cargo bench --bench telemetry_overhead [-- --smoke]`: smoke mode
+//! runs CI-sized windows; every telemetry-content check and the
+//! overhead gate stay enforced.
+
+use fpga_mt::accel::CASE_STUDY;
+use fpga_mt::api::{ServingBackend, Session, TenantRef};
+use fpga_mt::bench_support::{check, finish, header, smoke_mode};
+use fpga_mt::coordinator::{ShardedEngine, System};
+use fpga_mt::telemetry::TelemetrySnapshot;
+use fpga_mt::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Deterministic replay trace across all six case-study shards (no
+/// rejections, every request serves): `(vi, vr, payload)`.
+fn replay_trace(n: usize, seed: u64) -> Vec<(u16, usize, Arc<[u8]>)> {
+    let mut rng = Rng::new(seed);
+    let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
+    (0..n)
+        .map(|_| {
+            let (vi, vr) = specs[rng.index(specs.len())];
+            let len = 32 + rng.index(224);
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            (vi, vr, Arc::from(payload))
+        })
+        .collect()
+}
+
+/// Replay the whole trace once through per-VI sessions; returns elapsed
+/// seconds. Sessions are opened once by the caller so repeated windows
+/// measure serving, not session setup.
+fn timed_replay(sessions: &[Session], trace: &[(u16, usize, Arc<[u8]>)]) -> f64 {
+    let t0 = Instant::now();
+    for (vi, vr, p) in trace {
+        let session = &sessions[(*vi - 1) as usize];
+        let region = session.region_of_vr(*vr).expect("case-study region");
+        session.submit(region, Arc::clone(p)).expect("trace request serves");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Drive one engine: warmup window + `windows` timed windows, keeping
+/// the best. Returns `(best_rps, telemetry snapshot, requests driven)`.
+fn drive(
+    engine: &ShardedEngine,
+    trace: &[(u16, usize, Arc<[u8]>)],
+    windows: usize,
+) -> (f64, TelemetrySnapshot, u64) {
+    let sessions: Vec<Session> =
+        (1..=5u16).map(|vi| engine.session(TenantRef::Vi(vi)).expect("case-study VI")).collect();
+    timed_replay(&sessions, trace); // warmup
+    let mut best_secs = f64::INFINITY;
+    for _ in 0..windows {
+        best_secs = best_secs.min(timed_replay(&sessions, trace));
+    }
+    let snapshot = engine.telemetry_snapshot().expect("telemetry snapshot");
+    (trace.len() as f64 / best_secs, snapshot, ((windows + 1) * trace.len()) as u64)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    header(
+        "Telemetry overhead — request tracing on vs off on the sharded engine",
+        "observability must not tax the serving path: spans + per-tenant registry cost < 10% closed-loop throughput",
+    );
+    let (n, windows) = if smoke { (400, 3) } else { (4000, 5) };
+    let trace = replay_trace(n, 0x7E1E);
+
+    // ---- 1a. tracing on (the default) ----
+    std::env::remove_var("FPGA_MT_TELEMETRY");
+    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let (on_rps, snapshot, driven) = drive(&engine, &trace, windows);
+    let on_metrics = engine.shutdown();
+
+    // ---- 1b. tracing off (env knob read at Telemetry construction) ----
+    std::env::set_var("FPGA_MT_TELEMETRY", "off");
+    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    let (off_rps, off_snapshot, _) = drive(&engine, &trace, windows);
+    let off_metrics = engine.shutdown();
+    std::env::remove_var("FPGA_MT_TELEMETRY");
+
+    let overhead_pct = ((off_rps - on_rps) / off_rps * 100.0).max(0.0);
+    println!(
+        "\nreplay of {n} requests x {windows} windows (best window kept):\n  tracing on   {on_rps:>10.0} req/s\n  tracing off  {off_rps:>10.0} req/s\n  overhead     {overhead_pct:>9.2}%",
+    );
+    check("tracing costs < 10% closed-loop throughput", overhead_pct < 10.0);
+    check(
+        "both modes served the identical demand",
+        on_metrics.requests == off_metrics.requests && on_metrics.rejected == 0,
+    );
+    check("disabled telemetry snapshots empty", off_snapshot == TelemetrySnapshot::default());
+
+    // ---- 2. registry content from the tracing-on run ----
+    let covered = (1..=5u16).all(|vi| snapshot.tenants.contains_key(&vi));
+    check("registry covers every case-study tenant (VIs 1-5)", covered);
+    let served: u64 = snapshot.tenants.values().map(|t| t.served).sum();
+    check("registry served total equals requests driven", served == driven);
+    let log = snapshot.span_log();
+    let phases_present = ["admit-wait", "io-trip", "compute", "noc-stream"]
+        .iter()
+        .all(|phase| log.contains(phase));
+    check("span log renders every serving-path phase (streaming included)", phases_present);
+    check(
+        "exporters render the registry",
+        snapshot.prometheus_lines().contains("fpga_mt_tenant_served")
+            && snapshot.to_json().contains("\"tenants\""),
+    );
+    let mut tenant_rows = String::new();
+    println!();
+    for (vi, stats) in &snapshot.tenants {
+        let (p50, p95, p99) = (
+            stats.latency.percentile(50.0),
+            stats.latency.percentile(95.0),
+            stats.latency.percentile(99.0),
+        );
+        println!(
+            "  tenant vi={vi}: served {:>6}, modeled latency p50 {p50:.1} µs, p95 {p95:.1} µs, p99 {p99:.1} µs",
+            stats.served,
+        );
+        check(
+            &format!("tenant {vi} percentiles populated and ordered"),
+            p50 > 0.0 && p50 <= p95 && p95 <= p99,
+        );
+        if !tenant_rows.is_empty() {
+            tenant_rows.push_str(",\n");
+        }
+        tenant_rows.push_str(&format!(
+            "    \"{vi}\": {{ \"served\": {}, \"p50_us\": {p50:.1}, \"p95_us\": {p95:.1}, \"p99_us\": {p99:.1} }}",
+            stats.served,
+        ));
+    }
+
+    // ---- 3. persist the perf point ----
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let json = format!(
+        "{{\n  \"bench\": \"telemetry_overhead\",\n  \"smoke\": {smoke},\n  \"host_cores\": {cores},\n  \"requests_per_window\": {n},\n  \"windows\": {windows},\n  \"tracing_on_rps\": {on_rps:.1},\n  \"tracing_off_rps\": {off_rps:.1},\n  \"tracing_overhead_pct\": {overhead_pct:.3},\n  \"tenants\": {{\n{tenant_rows}\n  }}\n}}\n",
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_telemetry.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}:\n{json}", out.display()),
+        Err(e) => check(&format!("write {} ({e})", out.display()), false),
+    }
+
+    finish();
+}

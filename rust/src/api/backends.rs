@@ -10,6 +10,7 @@ use crate::coordinator::{RegionInfo, ShardedEngine, System};
 use crate::fleet::FleetCluster;
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
 use crate::noc::Topology;
+use crate::telemetry::TelemetrySnapshot;
 use anyhow::{bail, Result};
 use std::sync::{Arc, Mutex};
 
@@ -117,6 +118,12 @@ impl ServingBackend for SerialBackend {
         Ok(())
     }
 
+    fn telemetry_snapshot(&self) -> Result<TelemetrySnapshot> {
+        let guard = self.sys.lock().expect("serial system poisoned");
+        let sys = guard.as_ref().ok_or_else(|| anyhow::anyhow!("engine stopped"))?;
+        Ok(sys.telemetry.snapshot())
+    }
+
     fn shutdown(self) -> Metrics {
         // Take the system out: outstanding sessions now error ("engine
         // stopped") exactly like calls onto a stopped engine or fleet.
@@ -182,6 +189,10 @@ impl ServingBackend for ShardedEngine {
         self.handle().advance_clock(dur_us)
     }
 
+    fn telemetry_snapshot(&self) -> Result<TelemetrySnapshot> {
+        self.handle().telemetry_snapshot()
+    }
+
     fn shutdown(self) -> Metrics {
         ShardedEngine::stop(self)
     }
@@ -213,6 +224,18 @@ impl ServingBackend for FleetCluster {
 
     fn advance_clock(&self, dur_us: f64) -> Result<()> {
         self.advance_clocks(dur_us)
+    }
+
+    fn telemetry_snapshot(&self) -> Result<TelemetrySnapshot> {
+        // Merge the live devices' snapshots. A failed device's engine is
+        // gone from the fleet — its final telemetry was captured as an
+        // `Incident` by `fail_device`, not lost — so dead devices are
+        // skipped here rather than erroring the whole collection.
+        let mut merged = TelemetrySnapshot::default();
+        for snap in self.device_telemetry()? {
+            merged.merge(&snap);
+        }
+        Ok(merged)
     }
 
     fn shutdown(self) -> Metrics {

@@ -48,6 +48,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{EngineHandle, ReplyReceiver};
 use crate::coordinator::{Response, System};
 use crate::fleet::TenantId;
+use crate::telemetry::TelemetrySnapshot;
 use anyhow::{anyhow, Result};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -125,6 +126,13 @@ pub trait ServingBackend {
     /// idle time — deployment windows elapse during it, exactly as under
     /// the engines' `advance_clock`.
     fn advance_clock(&self, dur_us: f64) -> Result<()>;
+
+    /// Collect the backend's merged telemetry snapshot: the per-tenant
+    /// registry, the recent request traces, and the flight-recorder
+    /// events. Deterministic for a seeded trace — the conformance suite
+    /// holds the span log byte-identical and the registry equal across
+    /// all three backends.
+    fn telemetry_snapshot(&self) -> Result<TelemetrySnapshot>;
 
     /// Stop serving and return the merged request [`Metrics`].
     fn shutdown(self) -> Metrics

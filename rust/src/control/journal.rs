@@ -864,6 +864,14 @@ impl Journal {
     pub fn next_seq(&self) -> u64 {
         self.next_seq
     }
+
+    /// Sequence number of the last entry written (`None` while the
+    /// journal is empty) — what a flight-recorder incident cross-links
+    /// to, so a dumped incident names the exact journal prefix that
+    /// reconstructs the dead device's control-plane state.
+    pub fn last_seq(&self) -> Option<u64> {
+        (self.next_seq > 1).then(|| self.next_seq - 1)
+    }
 }
 
 impl std::fmt::Debug for Journal {

@@ -150,6 +150,75 @@ mod tests {
     }
 
     #[test]
+    fn merge_adds_every_field_of_two_nontrivial_accumulators() {
+        // Two accumulators with every counter non-zero and disjoint,
+        // non-trivial distributions: merge must add each field exactly.
+        // This is the audit the conformance gate leans on — a field
+        // silently dropped from `merge` would make the sharded engine
+        // under-report it relative to serial.
+        let mut a = Metrics::default();
+        for i in 0..5u64 {
+            a.record(
+                &RequestTiming {
+                    io_us: 20.0 + i as f64,
+                    noc_cycles: 512 * i,
+                    compute_us: 40.0 + 3.0 * i as f64,
+                    bytes_in: 256,
+                    bytes_out: 128,
+                },
+                800.0,
+            );
+        }
+        a.rejected = 3;
+        a.backpressured = 1;
+        a.denied_ops = 4;
+        a.batches = 2;
+
+        let mut b = Metrics::default();
+        for i in 0..7u64 {
+            b.record(
+                &RequestTiming {
+                    io_us: 90.0 + 2.0 * i as f64,
+                    noc_cycles: 100 + i,
+                    compute_us: 500.0,
+                    bytes_in: 1000 + i as usize,
+                    bytes_out: 9 * i as usize,
+                },
+                800.0,
+            );
+        }
+        b.rejected = 10;
+        b.backpressured = 20;
+        b.denied_ops = 30;
+        b.batches = 40;
+
+        let mut merged = a.clone();
+        merged.merge(&b);
+
+        assert_eq!(merged.requests, a.requests + b.requests);
+        assert_eq!(merged.rejected, a.rejected + b.rejected);
+        assert_eq!(merged.backpressured, a.backpressured + b.backpressured);
+        assert_eq!(merged.denied_ops, a.denied_ops + b.denied_ops);
+        assert_eq!(merged.batches, a.batches + b.batches);
+        assert_eq!(merged.bytes_in, a.bytes_in + b.bytes_in);
+        assert_eq!(merged.bytes_out, a.bytes_out + b.bytes_out);
+        assert_eq!(merged.io_us.count(), a.io_us.count() + b.io_us.count());
+        assert_eq!(merged.compute_us.count(), a.compute_us.count() + b.compute_us.count());
+        assert_eq!(merged.total_us.count(), a.total_us.count() + b.total_us.count());
+        assert_eq!(merged.noc_cycles.count(), a.noc_cycles.count() + b.noc_cycles.count());
+        assert_eq!(merged.latency.count(), a.latency.count() + b.latency.count());
+        // Distribution contents, not just counts: sums add, extrema take
+        // the wider envelope, and the merged sketch equals a sketch that
+        // saw both streams (order-independence).
+        let sum = |s: &Summary| s.mean() * s.count() as f64;
+        assert!((sum(&merged.io_us) - (sum(&a.io_us) + sum(&b.io_us))).abs() < 1e-9);
+        assert_eq!(merged.noc_cycles.max(), b.noc_cycles.max().max(a.noc_cycles.max()));
+        let mut both = a.latency.clone();
+        both.merge(&b.latency);
+        assert_eq!(merged.latency, both);
+    }
+
+    #[test]
     fn sharded_merge_equals_serial_record() {
         // The same 12 requests recorded serially vs split over 3 "shards"
         // and merged: counters identical, distributions equal to fp noise.

@@ -40,6 +40,7 @@ use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrSta
 use crate::noc::{NocControl, NocSim, Topology};
 use crate::placer::{case_study_floorplan, place};
 use crate::runtime::{Runtime, Tensor};
+use crate::telemetry::{Phase, Telemetry, TraceCtx};
 use anyhow::{bail, Result};
 use metrics::{Metrics, RequestTiming};
 use std::sync::Arc;
@@ -181,6 +182,10 @@ pub struct System {
     pub io_cfg: IoConfig,
     /// Aggregated request metrics.
     pub metrics: Metrics,
+    /// Deterministic telemetry core: per-tenant registry, per-VR trace
+    /// rings, and the control-plane flight recorder. Shared (`Arc`) so
+    /// [`System::into_shards`] hands the same core to every worker.
+    pub telemetry: Arc<Telemetry>,
     next_rid: u64,
     /// Optional control-plane journal: when attached, every *successful*
     /// lifecycle op is recorded (apply-then-journal) so the tenancy can
@@ -222,6 +227,9 @@ pub struct ShardedParts {
     pub io_cfg: IoConfig,
     /// Metrics accumulated before the split (usually empty).
     pub metrics: Metrics,
+    /// Telemetry core, carried across the split so traces and registry
+    /// entries recorded before sharding survive it.
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl System {
@@ -255,6 +263,7 @@ impl System {
         let noc = NocSim::new(topo.clone());
         let hv = Hypervisor::new(topo, fp, Policy::AdjacentFirst);
         let runtime = Runtime::load_shared(artifacts_dir)?;
+        let telemetry = Arc::new(Telemetry::new(hv.vrs.len()));
         Ok(System {
             device,
             hv,
@@ -262,6 +271,7 @@ impl System {
             runtime,
             io_cfg: IoConfig::default(),
             metrics: Metrics::default(),
+            telemetry,
             next_rid: 0,
             journal: None,
         })
@@ -371,17 +381,21 @@ impl System {
             op,
         ) {
             Ok((outcome, _)) => {
+                let epoch: u64 = self.hv.vrs.iter().map(|r| r.epoch).sum();
+                let mut seq = None;
                 if let Some(journal) = &mut self.journal {
                     // Apply-then-journal: only ops that landed are
                     // recorded; refused probes (below) never enter the
                     // durable history.
-                    let epoch: u64 = self.hv.vrs.iter().map(|r| r.epoch).sum();
-                    journal.append(
+                    seq = Some(journal.append(
                         Some(0),
                         epoch,
                         crate::control::ControlOp::Lifecycle { op: op.clone() },
-                    )?;
+                    )?);
                 }
+                // Flight-record the applied op, cross-linked to the
+                // journal seq it landed at (if journaled).
+                self.telemetry.lifecycle_event(op, seq, epoch, true);
                 Ok(outcome)
             }
             Err(e) => {
@@ -391,6 +405,8 @@ impl System {
                 // sharded dispatcher counts its `Ctl` refusals the same
                 // way).
                 self.metrics.denied_ops += 1;
+                let epoch: u64 = self.hv.vrs.iter().map(|r| r.epoch).sum();
+                self.telemetry.lifecycle_event(op, None, epoch, false);
                 Err(e)
             }
         }
@@ -440,10 +456,20 @@ impl System {
             bail!("VR{vr} does not exist");
         }
         let plan = ShardPlan::snapshot(&self.hv, vr);
-        plan.check_access(vi, &mut self.metrics)?;
+        let rejected_before = self.metrics.rejected;
+        if let Err(e) = plan.check_access(vi, &mut self.metrics) {
+            // Only the access monitor's foreign-VI refusal counts as a
+            // rejection (an unprogrammed region errors uncounted);
+            // telemetry attributes exactly what `Metrics` counted.
+            if self.metrics.rejected > rejected_before {
+                self.telemetry.note_rejected(vr, vi);
+            }
+            return Err(e);
+        }
         if let Some(expected) = expected_epoch {
             if expected != plan.epoch {
                 self.metrics.rejected += 1;
+                self.telemetry.note_rejected(vr, vi);
                 bail!(
                     "stale session for VR{vr}: region moved to epoch {} (session epoch {expected})",
                     plan.epoch
@@ -454,12 +480,17 @@ impl System {
             Gate::Admitted(adm) => adm,
             Gate::Busy { busy_for_us } => {
                 self.metrics.backpressured += 1;
+                self.telemetry.note_backpressured(vr, vi);
                 bail!("VR{vr} is reconfiguring (backlog full, busy another {busy_for_us:.0} µs)");
             }
         };
-        let env = ShardEnv { runtime: self.runtime.as_ref(), io_cfg: &self.io_cfg };
+        let mut trace = TraceCtx::new(rid, vi, vr, plan.epoch);
+        trace.span(Phase::AdmitWait, adm.entry_wait_us);
+        trace.span(Phase::ReconfigWait, (adm.queue_wait_us - adm.entry_wait_us).max(0.0));
+        let env =
+            ShardEnv { runtime: self.runtime.as_ref(), io_cfg: &self.io_cfg, tel: &self.telemetry };
         shard::serve_admitted(
-            ShardRequest { vi, payload, adm },
+            ShardRequest { vi, payload, adm, trace },
             &plan,
             &env,
             &mut self.core,
@@ -483,6 +514,7 @@ impl System {
             runtime: self.runtime,
             io_cfg: self.io_cfg,
             metrics: self.metrics,
+            telemetry: self.telemetry,
         }
     }
 }

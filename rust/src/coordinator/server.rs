@@ -10,6 +10,7 @@
 
 use super::{metrics::Metrics, RegionInfo, Response, System};
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome};
+use crate::telemetry::TelemetrySnapshot;
 use anyhow::Result;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -64,6 +65,9 @@ pub(crate) enum Msg {
     /// Advance the modeled arrival clock by idle time (µs); applied at
     /// its arrival position in the message order, like a lifecycle op.
     Tick(f64, mpsc::Sender<()>),
+    /// Collect the engine's telemetry snapshot (per-tenant registry,
+    /// recent traces, control-plane events) at this message position.
+    Telemetry(mpsc::Sender<TelemetrySnapshot>),
     Shutdown,
 }
 
@@ -177,6 +181,15 @@ impl EngineHandle {
         self.tx.send(Msg::Tick(dur_us, reply)).map_err(|_| anyhow::anyhow!("engine stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped clock advance"))
     }
+
+    /// The engine's merged telemetry snapshot (per-tenant registry,
+    /// recent traces, flight-recorder events), collected at this call's
+    /// position in the message order.
+    pub fn telemetry_snapshot(&self) -> Result<TelemetrySnapshot> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Msg::Telemetry(reply)).map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped telemetry query"))
+    }
 }
 
 /// The engine: executor thread + handle factory.
@@ -240,6 +253,9 @@ impl Engine {
                     Msg::Tick(dur_us, reply) => {
                         system.core.timing.advance_clock(dur_us);
                         let _ = reply.send(());
+                    }
+                    Msg::Telemetry(reply) => {
+                        let _ = reply.send(system.telemetry.snapshot());
                     }
                     Msg::Batch(reqs) => {
                         // A client-submitted arrival slice: admitted in

@@ -38,6 +38,7 @@ use crate::cloud::{IoConfig, Scheme};
 use crate::hypervisor::{Delta, Hypervisor, VrStatus};
 use crate::noc::{hop_count, lock_noc, Header, NocSim, Payload};
 use crate::runtime::Runtime;
+use crate::telemetry::{Phase, Telemetry, TraceCtx};
 use anyhow::{bail, Result};
 use std::sync::Mutex;
 
@@ -192,6 +193,9 @@ pub struct ShardEnv<'a> {
     pub runtime: &'a Runtime,
     /// IO-path timing model configuration.
     pub io_cfg: &'a IoConfig,
+    /// Telemetry core the shard records into (per-tenant registry +
+    /// per-VR trace ring; no-ops when tracing is disabled).
+    pub tel: &'a Telemetry,
 }
 
 /// An admitted request as handed to a shard.
@@ -202,6 +206,9 @@ pub struct ShardRequest<'a> {
     pub payload: &'a [u8],
     /// Admission ticket from the shared timing core.
     pub adm: Admission,
+    /// Request trace, carrying the admission spans recorded by the
+    /// dispatcher; the shard appends the serving-phase spans.
+    pub trace: TraceCtx,
 }
 
 /// Serve an already access-checked, already admitted request on its shard.
@@ -218,12 +225,13 @@ pub fn serve_admitted<G: CoreGate>(
     gate: &mut G,
     metrics: &mut Metrics,
 ) -> Result<Response> {
-    let ShardRequest { vi, payload, mut adm } = req;
+    let ShardRequest { vi, payload, mut adm, mut trace } = req;
     // Stale-admission guard: a ticket minted before a reconfiguration of
     // this region (release, re-program, retarget) must never execute —
     // the region may belong to a different tenant by now.
     if adm.epoch != plan.epoch {
         metrics.rejected += 1;
+        env.tel.note_rejected(plan.vr, vi);
         bail!(
             "stale admission for VR{}: ticket epoch {} but region is at epoch {}",
             plan.vr,
@@ -238,6 +246,7 @@ pub fn serve_admitted<G: CoreGate>(
     // --- modeled host->FPGA IO trip (Fig 14 path), per-request RNG ---
     let io_us =
         env.io_cfg.io_trip_us(Scheme::MultiTenant, plan.hops, adm.queue_wait_us, &mut adm.rng);
+    trace.span(Phase::IoTrip, io_us);
 
     // --- real compute on the shard's accelerator ---
     // `compute_us` times only accelerator execution: the gated section
@@ -254,6 +263,12 @@ pub fn serve_admitted<G: CoreGate>(
     if let (Some(dst), Some(dst_design)) = (plan.stream_dest, plan.dest_design.as_deref()) {
         let stream_bytes = Payload::from(outputs[0].to_bytes());
         let (cycles, received) = gate.stream(vi, plan.vr, dst, &stream_bytes)?;
+        trace.span_full(
+            Phase::NocStream,
+            cycles as f64 / env.io_cfg.noc_clock_mhz,
+            cycles,
+            stream_bytes.len() as u64,
+        );
         noc_cycles = cycles;
         let t1 = std::time::Instant::now();
         let ins = accel::inputs_from_payload(dst_design, &received)?;
@@ -263,6 +278,9 @@ pub fn serve_admitted<G: CoreGate>(
     }
 
     let bytes_out = outputs.iter().map(|t| t.data.len() * 4).sum();
+    // Compute is real wall time, which differs run to run — the span
+    // carries the byte count only, per the telemetry determinism rule.
+    trace.span_full(Phase::Compute, 0.0, 0, bytes_out as u64);
     let timing = RequestTiming {
         io_us,
         noc_cycles,
@@ -271,6 +289,7 @@ pub fn serve_admitted<G: CoreGate>(
         bytes_out,
     };
     metrics.record(&timing, env.io_cfg.noc_clock_mhz);
+    env.tel.record_request(plan.vr, trace, &timing, env.io_cfg.noc_clock_mhz);
     Ok(Response { outputs, path, timing, epoch: plan.epoch })
 }
 

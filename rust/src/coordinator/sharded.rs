@@ -50,6 +50,7 @@ use crate::cloud::IoConfig;
 use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome};
 use crate::noc::{lock_noc, NocSim, PartitionedNoc, Payload};
 use crate::runtime::Runtime;
+use crate::telemetry::{Phase, Telemetry, TraceCtx};
 use anyhow::Result;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -101,6 +102,7 @@ struct Work {
     vi: u16,
     payload: Arc<[u8]>,
     adm: Admission,
+    trace: TraceCtx,
     reply: mpsc::Sender<Result<Response>>,
 }
 
@@ -129,14 +131,15 @@ fn spawn_worker(
     noc: NocShared,
     runtime: Arc<Runtime>,
     io_cfg: IoConfig,
+    tel: Arc<Telemetry>,
 ) -> JoinHandle<Metrics> {
     std::thread::spawn(move || {
         let mut metrics = Metrics::default();
         let mut gate = noc;
-        let env = ShardEnv { runtime: runtime.as_ref(), io_cfg: &io_cfg };
+        let env = ShardEnv { runtime: runtime.as_ref(), io_cfg: &io_cfg, tel: tel.as_ref() };
         while let Ok(w) = wrx.recv() {
             let resp = serve_admitted(
-                ShardRequest { vi: w.vi, payload: &w.payload, adm: w.adm },
+                ShardRequest { vi: w.vi, payload: &w.payload, adm: w.adm, trace: w.trace },
                 &plan,
                 &env,
                 &mut gate,
@@ -161,6 +164,7 @@ struct Dispatch {
     shard_txs: Vec<Option<mpsc::Sender<Work>>>,
     workers: Vec<Option<JoinHandle<Metrics>>>,
     metrics: Metrics,
+    telemetry: Arc<Telemetry>,
     next_rid: u64,
 }
 
@@ -176,6 +180,7 @@ impl Dispatch {
             self.noc.clone(),
             Arc::clone(&self.runtime),
             self.io_cfg,
+            Arc::clone(&self.telemetry),
         ));
     }
 
@@ -229,7 +234,14 @@ impl Dispatch {
             let _ = reply.send(Err(anyhow::anyhow!("VR{vr} does not exist")));
             return;
         };
+        let rejected_before = self.metrics.rejected;
         if let Err(e) = plan.check_access(vi, &mut self.metrics) {
+            // Telemetry attributes exactly what `Metrics` counted: the
+            // access monitor's foreign-VI refusal, not the unprogrammed-
+            // region error (same rule as `System::submit_expect`).
+            if self.metrics.rejected > rejected_before {
+                self.telemetry.note_rejected(vr, vi);
+            }
             let _ = reply.send(Err(e));
             return;
         }
@@ -239,6 +251,7 @@ impl Dispatch {
         if let Some(expected) = expected_epoch {
             if expected != plan.epoch {
                 self.metrics.rejected += 1;
+                self.telemetry.note_rejected(vr, vi);
                 let _ = reply.send(Err(anyhow::anyhow!(
                     "stale session for VR{vr}: region moved to epoch {} (session epoch {expected})",
                     plan.epoch
@@ -250,15 +263,22 @@ impl Dispatch {
             Gate::Admitted(adm) => adm,
             Gate::Busy { busy_for_us } => {
                 self.metrics.backpressured += 1;
+                self.telemetry.note_backpressured(vr, vi);
                 let _ = reply.send(Err(anyhow::anyhow!(
                     "VR{vr} is reconfiguring (backlog full, busy another {busy_for_us:.0} µs)"
                 )));
                 return;
             }
         };
+        // The admission spans are recorded at the dispatcher (the only
+        // place that knows the waits); the shard worker appends the
+        // serving-phase spans. Same positions as the serial path.
+        let mut trace = TraceCtx::new(rid, vi, vr, plan.epoch);
+        trace.span(Phase::AdmitWait, adm.entry_wait_us);
+        trace.span(Phase::ReconfigWait, (adm.queue_wait_us - adm.entry_wait_us).max(0.0));
         match &self.shard_txs[vr] {
             Some(tx) => {
-                let _ = tx.send(Work { vi, payload, adm, reply });
+                let _ = tx.send(Work { vi, payload, adm, trace, reply });
             }
             // Unreachable while the access check requires a programmed
             // design, but never panic the dispatcher on an inconsistency.
@@ -398,6 +418,7 @@ impl ShardedEngine {
             shard_txs: (0..n).map(|_| None).collect(),
             workers: (0..n).map(|_| None).collect(),
             metrics: parts.metrics,
+            telemetry: parts.telemetry,
             next_rid: 0,
         };
         dispatch.reconcile_workers();
@@ -425,6 +446,10 @@ impl ShardedEngine {
                             // count identically on both engines.
                             dispatch.metrics.denied_ops += 1;
                         }
+                        // Flight-record the op exactly as the serial
+                        // engine does (seq `None`: no journal here).
+                        let epoch: u64 = dispatch.hv.vrs.iter().map(|r| r.epoch).sum();
+                        dispatch.telemetry.lifecycle_event(&op, None, epoch, outcome.is_ok());
                         let _ = reply.send(outcome);
                     }
                     Msg::Describe(vi, reply) => {
@@ -436,6 +461,9 @@ impl ShardedEngine {
                     Msg::Tick(dur_us, reply) => {
                         dispatch.timing.advance_clock(dur_us);
                         let _ = reply.send(());
+                    }
+                    Msg::Telemetry(reply) => {
+                        let _ = reply.send(dispatch.telemetry.snapshot());
                     }
                 }
             }

@@ -67,6 +67,11 @@ pub struct Admission {
     /// Time spent at the shared entry point (µs, queueing + service),
     /// including any wait behind an open reconfiguration window.
     pub queue_wait_us: f64,
+    /// The entry-point share of `queue_wait_us` alone (µs) — what the
+    /// wait would have been with no reconfiguration window open. The
+    /// telemetry layer splits the admit-wait span (this) from the
+    /// reconfig-wait span (`queue_wait_us - entry_wait_us`).
+    pub entry_wait_us: f64,
     /// Request-private RNG seeded from the request id.
     pub rng: Rng,
     /// Lifecycle epoch of the target VR this ticket was minted against.
@@ -149,6 +154,7 @@ impl TimingCore {
         let admitted = self.entry.admit(self.clock_us);
         Gate::Admitted(Admission {
             queue_wait_us: admitted.max(region_ready_us) - self.clock_us,
+            entry_wait_us: admitted - self.clock_us,
             rng,
             epoch,
         })

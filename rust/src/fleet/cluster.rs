@@ -175,7 +175,34 @@ impl FleetCluster {
     /// Fleet-level end-to-end latency percentile (lock-free; see
     /// [`FleetScheduler::latency_percentile`]).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        self.handle.latency.lock().expect("fleet latency sketch poisoned").percentile(p)
+        self.handle.latency.percentile(p)
+    }
+
+    /// Per-device telemetry snapshots, indexed by alive device order:
+    /// each alive device's engine-side registry, recent traces, and
+    /// control events. Devices whose engine has stopped (failed or
+    /// decommissioned) are skipped — their final telemetry lives in
+    /// [`FleetCluster::incidents`].
+    pub fn device_telemetry(&self) -> Result<Vec<crate::telemetry::TelemetrySnapshot>> {
+        Ok(self
+            .device_handles()
+            .iter()
+            .filter_map(|h| h.telemetry_snapshot().ok())
+            .collect())
+    }
+
+    /// Front-end ingress telemetry (see
+    /// [`FleetScheduler::ingress_snapshot`]): routed-path traces keyed by
+    /// fleet tenant id. Lock-free — read straight off the shared handle,
+    /// not through the scheduler mutex.
+    pub fn ingress_snapshot(&self) -> crate::telemetry::TelemetrySnapshot {
+        self.handle.tel.snapshot()
+    }
+
+    /// Flight-recorder incidents captured so far (one per abrupt device
+    /// failure; see [`FleetScheduler::incidents`]).
+    pub fn incidents(&self) -> Result<Vec<crate::telemetry::Incident>> {
+        self.with(|s| s.incidents().to_vec())
     }
 
     /// Number of devices in the fleet.

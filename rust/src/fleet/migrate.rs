@@ -34,6 +34,7 @@ use super::{FleetScheduler, TenantId};
 use crate::api::PlanTarget;
 use crate::control::{rebuild_device_shadow, ControlOp, JournalEntry};
 use crate::hypervisor::{LifecycleOp, LifecycleOutcome, MigrationPlan};
+use crate::telemetry::Incident;
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// Modeled drain time of a migration's quiesce phase (µs): the source
@@ -322,6 +323,17 @@ impl FleetScheduler {
         // tenancies from, instead of trusting the live in-memory shadow
         // of a device that just failed.
         let history: Option<Vec<JournalEntry>> = self.journal.as_ref().map(|j| j.entries());
+        // Flight recorder: grab the dying device's telemetry *before* the
+        // engine stops — its span rings and per-tenant registry are gone
+        // after power-off. The incident cross-links the last journal seq,
+        // naming the exact prefix that reconstructs the device's
+        // control-plane state (the same prefix recovery replays below).
+        let snapshot = self.devices[device].handle.telemetry_snapshot().unwrap_or_default();
+        self.incidents.push(Incident {
+            device,
+            journal_seq: self.journal.as_ref().and_then(|j| j.last_seq()),
+            snapshot,
+        });
         self.power_off(device)?;
         let mut recovered = 0u64;
         for tenant in self.tenants_on(device) {

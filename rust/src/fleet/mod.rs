@@ -56,8 +56,11 @@ use crate::coordinator::{design_footprint, Response, System};
 use crate::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
 use crate::noc::NocSim;
 use crate::placer::case_study_floorplan;
+use crate::telemetry::{Incident, Phase, Telemetry, TelemetrySnapshot, TraceCtx};
+use crate::util::ShardedSketch;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Identifier of a fleet tenant — stable across devices, replicas, and
@@ -177,8 +180,21 @@ pub struct FleetScheduler {
     ingress: Ingress,
     next_tenant: TenantId,
     /// Fleet-level latency sketch shared with every handle (device total
-    /// + ingress per served request).
-    latency: Arc<std::sync::Mutex<crate::util::QuantileSketch>>,
+    /// + ingress per served request). Sharded so concurrent submitters
+    /// never serialize on one mutex in the hot path; merged at read.
+    latency: Arc<ShardedSketch>,
+    /// Front-end telemetry: ingress spans + a per-tenant registry for
+    /// requests that went through the routed path ([`FleetHandle::submit`]).
+    /// Keyed by fleet [`TenantId`], unlike the per-device registries,
+    /// which key by device-local VI.
+    front_tel: Arc<Telemetry>,
+    /// Request-id counter for front-end traces (shared with every handle
+    /// so rids stay unique across clones).
+    next_rid: Arc<AtomicU64>,
+    /// Flight-recorder incidents: one per abrupt device failure, holding
+    /// the dead device's final telemetry snapshot and the journal seq it
+    /// cross-links to (see [`FleetScheduler::fail_device`]).
+    incidents: Vec<Incident>,
     /// Completed cross-device migrations (graceful or recovery).
     pub migrations: u64,
     /// Replicas lost to device failures that could not be re-placed.
@@ -212,8 +228,13 @@ pub struct FleetHandle {
     ingress: Ingress,
     /// Fleet-level end-to-end latency sketch: the device's modeled total
     /// *plus* the ingress-link time — the number a client actually
-    /// experiences, which per-device `Metrics` cannot see.
-    latency: Arc<std::sync::Mutex<crate::util::QuantileSketch>>,
+    /// experiences, which per-device `Metrics` cannot see. Sharded: the
+    /// submit hot path writes one shard lock-cheaply; reads merge.
+    latency: Arc<ShardedSketch>,
+    /// Front-end telemetry the routed path records ingress spans into.
+    tel: Arc<Telemetry>,
+    /// Front-end trace request-id counter (unique across handle clones).
+    next_rid: Arc<AtomicU64>,
 }
 
 /// One served fleet request.
@@ -261,10 +282,17 @@ impl FleetHandle {
                     // remote devices really are slower to reach).
                     self.routes.note_served(replica.device);
                     let noc_clock_mhz = crate::cloud::IoConfig::default().noc_clock_mhz;
-                    self.latency
-                        .lock()
-                        .expect("fleet latency sketch poisoned")
-                        .add(response.timing.total_us(noc_clock_mhz) + ingress_us);
+                    self.latency.add(response.timing.total_us(noc_clock_mhz) + ingress_us);
+                    // Front-end trace: the routed path's ingress hop,
+                    // keyed by fleet tenant id (the `vr` field carries
+                    // the device index — there is no front-end VR).
+                    if self.tel.enabled() {
+                        let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
+                        let mut trace =
+                            TraceCtx::new(rid, tenant as u16, replica.device, replica.epoch);
+                        trace.span_full(Phase::Ingress, ingress_us, 0, payload.len() as u64);
+                        self.tel.record_request(0, trace, &response.timing, noc_clock_mhz);
+                    }
                     return Ok(FleetResponse {
                         device: replica.device,
                         epoch: replica.epoch,
@@ -333,7 +361,13 @@ impl FleetScheduler {
             policy: cfg.policy,
             ingress: cfg.ingress,
             next_tenant: 0,
-            latency: Arc::new(std::sync::Mutex::new(crate::util::QuantileSketch::new())),
+            // Eight shards comfortably cover the handle-clone counts the
+            // fleet tests and benches drive; the sketch merges exactly,
+            // so the count is a contention knob, not a correctness one.
+            latency: Arc::new(ShardedSketch::new(8)),
+            front_tel: Arc::new(Telemetry::new(1)),
+            next_rid: Arc::new(AtomicU64::new(0)),
+            incidents: Vec::new(),
             migrations: 0,
             displaced: 0,
             collected: Metrics::default(),
@@ -351,6 +385,8 @@ impl FleetScheduler {
             routes: Arc::clone(&self.routes),
             ingress: self.ingress.clone(),
             latency: Arc::clone(&self.latency),
+            tel: Arc::clone(&self.front_tel),
+            next_rid: Arc::clone(&self.next_rid),
         }
     }
 
@@ -360,7 +396,25 @@ impl FleetScheduler {
     /// percentiles, this moves when devices sit behind slower ingress
     /// links ([`Ingress`]).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        self.latency.lock().expect("fleet latency sketch poisoned").percentile(p)
+        self.latency.percentile(p)
+    }
+
+    /// Snapshot of the front-end telemetry: ingress-hop traces and the
+    /// per-[`TenantId`] registry for requests served through the routed
+    /// path ([`FleetHandle::submit`]). Per-device serving telemetry lives
+    /// on each device's engine
+    /// ([`EngineHandle::telemetry_snapshot`](crate::coordinator::server::EngineHandle::telemetry_snapshot));
+    /// this is only the hop in front of it.
+    pub fn ingress_snapshot(&self) -> TelemetrySnapshot {
+        self.front_tel.snapshot()
+    }
+
+    /// Flight-recorder incidents captured so far: one per abrupt device
+    /// failure, each holding the dead device's final per-tenant registry
+    /// and recent traces plus the journal seq that reconstructs its
+    /// control-plane state (see [`FleetScheduler::fail_device`]).
+    pub fn incidents(&self) -> &[Incident] {
+        &self.incidents
     }
 
     /// Number of devices (alive or not) in the fleet.

@@ -171,6 +171,13 @@ impl RouteTable {
     pub fn device_routed(&self, device: usize) -> u64 {
         self.device_routed.get(device).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
     }
+
+    /// The whole per-device served-request load vector in one read,
+    /// indexed by device (the `telemetry` CLI prints it next to each
+    /// device's registry so routing skew is visible at a glance).
+    pub fn routed_per_device(&self) -> Vec<u64> {
+        self.device_routed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -214,6 +221,7 @@ mod tests {
         assert_eq!(picks, vec![0, 3, 2, 0, 3, 2], "strict round-robin over replicas");
         assert_eq!(table.device_routed(0), 4);
         assert_eq!(table.device_routed(1), 2);
+        assert_eq!(table.routed_per_device(), vec![4, 2]);
         // Resolves that are never served do not count as load.
         let _ = table.resolve(7);
         assert_eq!(table.device_routed(0) + table.device_routed(1), 6);

@@ -18,4 +18,5 @@ pub mod hypervisor;
 pub mod noc;
 pub mod placer;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;

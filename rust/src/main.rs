@@ -5,10 +5,11 @@
 
 use anyhow::Result;
 use fpga_mt::accel::CASE_STUDY;
-use fpga_mt::api::{SerialBackend, ServingBackend, TenantRef};
+use fpga_mt::api::{SerialBackend, ServingBackend, Session, TenantRef};
 use fpga_mt::cloud::{compare, fig14_io_trips, Ingress, IoConfig, Link, Scheme};
 use fpga_mt::control::{
     control_trace, decode_log, drive_control_trace, recover_scheduler, FileLog, HaFleet, LogStore,
+    MemLog,
 };
 use fpga_mt::coordinator::churn::{self, FleetChurnConfig};
 use fpga_mt::coordinator::metrics::Metrics;
@@ -22,8 +23,10 @@ use fpga_mt::estimate::{
 };
 use fpga_mt::noc::{traffic, Topology};
 use fpga_mt::placer;
+use fpga_mt::telemetry::TelemetrySnapshot;
 use fpga_mt::util::cli::Args;
 use fpga_mt::util::table::{fnum, Table};
+use fpga_mt::util::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -41,9 +44,10 @@ fn main() -> Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("isolation") => cmd_isolation(&args),
         Some("journal") => cmd_journal(&args),
+        Some("telemetry") => cmd_telemetry(&args),
         _ => {
             eprintln!(
-                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation|journal> [--...]\n\
+                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation|journal|telemetry> [--...]\n\
                  \n  resources   Fig 8  router area sweep\
                  \n  power       Fig 9  router power sweep\
                  \n  fmax        Fig 10 max frequency sweep\
@@ -56,7 +60,8 @@ fn main() -> Result<()> {
                  \n  case-study  Table I end-to-end deployment (native runtime)\
                  \n  fleet       Multi-FPGA fleet under churn (--devices, --events, --seed, --binpack, --remote)\
                  \n  isolation   Red-team the tenancy boundary (--backend serial|sharded|fleet, --events, --seed, --rate, --log)\
-                 \n  journal     Event-sourced control plane: journal dump|recover|failover (--file, --devices, --events, --seed)"
+                 \n  journal     Event-sourced control plane: journal dump|recover|failover (--file, --devices, --events, --seed)\
+                 \n  telemetry   Telemetry layer: telemetry snapshot|trace|flight (--backend serial|sharded, --requests, --seed, --devices, --events, --prom, --json)"
             );
             Ok(())
         }
@@ -481,6 +486,183 @@ fn cmd_journal(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown journal action '{other}' (expected dump|recover|failover)"),
     }
+}
+
+/// The deterministic telemetry layer, end to end from the CLI:
+///
+/// - `telemetry snapshot` drives a seeded case-study replay on the
+///   chosen backend and prints the per-tenant registry (add `--prom` /
+///   `--json` for the exporter renderings);
+/// - `telemetry trace` prints the span log of the same replay — one
+///   line per request, modeled time only, byte-identical across
+///   backends for the same seed;
+/// - `telemetry flight` replays fleet churn with a journaled control
+///   plane, forces a device failure if the churn did not produce one,
+///   and dumps the flight recorder's incidents: the failed device's
+///   telemetry at failure time, cross-linked to the journal sequence.
+fn cmd_telemetry(args: &Args) -> Result<()> {
+    let action = args.positional().get(1).map(String::as_str).unwrap_or("snapshot");
+    let requests = args.get_usize("requests", 60);
+    let seed = args.get_u64("seed", 0x7E1E);
+    let dir = args.get_or("artifacts", "artifacts");
+    match action {
+        "snapshot" | "trace" => {
+            let backend = args.get_or("backend", "sharded");
+            let snapshot = match backend {
+                "serial" => {
+                    let b = SerialBackend::new(System::case_study(dir)?);
+                    let snap = drive_telemetry(&b, requests, seed)?;
+                    b.shutdown();
+                    snap
+                }
+                "sharded" => {
+                    let b = ShardedEngine::start(|| System::case_study(dir))?;
+                    let snap = drive_telemetry(&b, requests, seed)?;
+                    b.shutdown();
+                    snap
+                }
+                other => anyhow::bail!(
+                    "unknown backend '{other}' (expected serial|sharded; `telemetry flight` covers the fleet)"
+                ),
+            };
+            if action == "trace" {
+                let log = snapshot.span_log();
+                if !log.is_empty() {
+                    println!("{log}");
+                }
+                println!(
+                    "{} traces, {} control events (seed {seed:#x}, backend {backend})",
+                    snapshot.traces.len(),
+                    snapshot.events.len()
+                );
+                return Ok(());
+            }
+            println!("backend {backend}: {requests} seeded requests (seed {seed:#x})");
+            print_registry(&snapshot);
+            if args.flag("prom") {
+                print!("\n{}", snapshot.prometheus_lines());
+            }
+            if args.flag("json") {
+                println!("\n{}", snapshot.to_json());
+            }
+            Ok(())
+        }
+        "flight" => {
+            let devices = args.get_usize("devices", 2);
+            let events = args.get_usize("events", 200);
+            let fleet = FleetCluster::start_journaled(
+                FleetConfig {
+                    devices,
+                    artifacts_dir: dir.to_string(),
+                    policy: PlacePolicy::Spread,
+                    ingress: Ingress::uniform(devices, Link::local()),
+                },
+                Box::new(MemLog::new()),
+                false,
+            )?;
+            let trace = churn::generate_fleet(&FleetChurnConfig { seed, events, devices });
+            let stats = replay_fleet(&fleet, &trace);
+            println!(
+                "fleet: {devices} devices, {} churn events (seed {seed:#x}): served={} refused={}",
+                trace.len(),
+                stats.served,
+                stats.refused
+            );
+            if fleet.incidents()?.is_empty() {
+                // The seeded churn kept every device healthy — force the
+                // failure this action exists to demonstrate.
+                if let Some(d) = (0..devices).find(|&d| fleet.device_alive(d).unwrap_or(false)) {
+                    let displaced = fleet.fail_device(d)?;
+                    println!("forced failure of dev{d}: {displaced} tenants displaced");
+                }
+            }
+            let ingress = fleet.ingress_snapshot();
+            println!(
+                "ingress front-end: {} traces across {} tenants",
+                ingress.traces.len(),
+                ingress.tenants.len()
+            );
+            let incidents = fleet.incidents()?;
+            for inc in &incidents {
+                println!(
+                    "\nincident: dev{} failed at journal seq {}",
+                    inc.device,
+                    inc.journal_seq.map(|s| s.to_string()).unwrap_or_else(|| "-".into())
+                );
+                print_registry(&inc.snapshot);
+                let log = inc.snapshot.span_log();
+                let tail: Vec<&str> = log.lines().rev().take(3).collect();
+                if !tail.is_empty() {
+                    println!("  last spans before failure:");
+                    for line in tail.iter().rev() {
+                        println!("    {line}");
+                    }
+                }
+            }
+            fleet.stop()?;
+            anyhow::ensure!(
+                !incidents.is_empty(),
+                "no incident recorded (no device could be failed)"
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown action '{other}' (expected snapshot|trace|flight)"),
+    }
+}
+
+/// Drive a seeded case-study replay through tenant-scoped sessions and
+/// return the backend's telemetry snapshot (captured before shutdown,
+/// same order as the conformance suite).
+fn drive_telemetry<B: ServingBackend>(
+    backend: &B,
+    requests: usize,
+    seed: u64,
+) -> Result<TelemetrySnapshot> {
+    let mut rng = Rng::new(seed);
+    let specs: Vec<(u16, usize)> = CASE_STUDY.iter().map(|s| (s.vi, s.vr)).collect();
+    let sessions: Vec<Session> =
+        (1..=5u16).map(|vi| backend.session(TenantRef::Vi(vi))).collect::<Result<Vec<_>>>()?;
+    for _ in 0..requests {
+        let (vi, vr) = specs[rng.index(specs.len())];
+        let session = &sessions[(vi - 1) as usize];
+        let region = session
+            .region_of_vr(vr)
+            .ok_or_else(|| anyhow::anyhow!("VI{vi} does not serve VR{vr}"))?;
+        let len = 32 + rng.index(224);
+        let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        session.submit(region, payload)?;
+    }
+    backend.telemetry_snapshot()
+}
+
+/// Per-tenant registry table shared by `telemetry snapshot` and the
+/// flight-recorder incident dump.
+fn print_registry(snapshot: &TelemetrySnapshot) {
+    let mut t = Table::new(vec![
+        "tenant",
+        "served",
+        "rejected",
+        "backpressured",
+        "denied ops",
+        "bytes in",
+        "p50 µs",
+        "p95 µs",
+        "p99 µs",
+    ]);
+    for (vi, s) in &snapshot.tenants {
+        t.row(vec![
+            format!("VI{vi}"),
+            s.served.to_string(),
+            s.rejected.to_string(),
+            s.backpressured.to_string(),
+            s.denied_ops.to_string(),
+            s.bytes_in.to_string(),
+            fnum(s.latency.percentile(50.0)),
+            fnum(s.latency.percentile(95.0)),
+            fnum(s.latency.percentile(99.0)),
+        ]);
+    }
+    t.print();
 }
 
 fn replay_hostile(backend: &str, trace: &[RedteamEvent]) -> Result<(RedteamReplay, Metrics)> {

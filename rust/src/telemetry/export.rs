@@ -1,0 +1,134 @@
+//! Snapshot exporters: Prometheus-style text lines and machine JSON.
+//!
+//! Both renderings are deterministic: the registry is a `BTreeMap`, so
+//! tenants emit in VI order, and every number is either an integer
+//! counter or a fixed-precision modeled quantile.
+
+use super::TelemetrySnapshot;
+use std::fmt::Write;
+
+/// Quantiles exported per tenant, as (label, percentile) pairs.
+const QUANTILES: [(&str, f64); 3] = [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)];
+
+impl TelemetrySnapshot {
+    /// Render the per-tenant registry as Prometheus-style exposition
+    /// lines (`fpga_mt_tenant_*{vi="..."}` counters plus latency
+    /// quantile gauges), followed by ring-occupancy gauges.
+    pub fn prometheus_lines(&self) -> String {
+        let mut out = String::new();
+        for (vi, t) in &self.tenants {
+            let counters = [
+                ("served", t.served),
+                ("rejected", t.rejected),
+                ("backpressured", t.backpressured),
+                ("denied_ops", t.denied_ops),
+                ("bytes_in", t.bytes_in),
+                ("bytes_out", t.bytes_out),
+            ];
+            for (name, value) in counters {
+                writeln!(out, "fpga_mt_tenant_{name}{{vi=\"{vi}\"}} {value}")
+                    .expect("write to String");
+            }
+            if t.latency.count() > 0 {
+                for (label, p) in QUANTILES {
+                    writeln!(
+                        out,
+                        "fpga_mt_tenant_latency_us{{vi=\"{vi}\",quantile=\"{label}\"}} {:.3}",
+                        t.latency.percentile(p)
+                    )
+                    .expect("write to String");
+                }
+            }
+        }
+        writeln!(out, "fpga_mt_traces_recent {}", self.traces.len()).expect("write to String");
+        writeln!(out, "fpga_mt_control_events {}", self.events.len()).expect("write to String");
+        out
+    }
+
+    /// Render the snapshot as machine JSON: the per-tenant registry
+    /// (counters + latency quantiles) and the ring occupancies. Spans
+    /// themselves are exported by [`TelemetrySnapshot::span_log`].
+    pub fn to_json(&self) -> String {
+        let mut tenants = String::new();
+        for (i, (vi, t)) in self.tenants.iter().enumerate() {
+            if i > 0 {
+                tenants.push(',');
+            }
+            let (p50, p95, p99) = if t.latency.count() > 0 {
+                (
+                    t.latency.percentile(50.0),
+                    t.latency.percentile(95.0),
+                    t.latency.percentile(99.0),
+                )
+            } else {
+                (0.0, 0.0, 0.0)
+            };
+            write!(
+                tenants,
+                concat!(
+                    "\"{}\":{{\"served\":{},\"rejected\":{},\"backpressured\":{},",
+                    "\"denied_ops\":{},\"bytes_in\":{},\"bytes_out\":{},",
+                    "\"p50_us\":{:.3},\"p95_us\":{:.3},\"p99_us\":{:.3}}}"
+                ),
+                vi,
+                t.served,
+                t.rejected,
+                t.backpressured,
+                t.denied_ops,
+                t.bytes_in,
+                t.bytes_out,
+                p50,
+                p95,
+                p99
+            )
+            .expect("write to String");
+        }
+        format!(
+            "{{\"tenants\":{{{tenants}}},\"traces_recent\":{},\"control_events\":{}}}",
+            self.traces.len(),
+            self.events.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TenantStats, TraceCtx};
+    use super::*;
+
+    fn snapshot() -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::default();
+        let mut t = TenantStats { served: 4, bytes_in: 256, bytes_out: 128, ..Default::default() };
+        t.latency.add(10.0);
+        t.latency.add(40.0);
+        snap.tenants.insert(2, t);
+        snap.tenants.insert(1, TenantStats { rejected: 3, ..Default::default() });
+        snap.traces.push(TraceCtx::new(0, 2, 0, 1));
+        snap
+    }
+
+    #[test]
+    fn prometheus_lines_emit_tenants_in_vi_order() {
+        let text = snapshot().prometheus_lines();
+        let vi1 = text.find("fpga_mt_tenant_rejected{vi=\"1\"} 3").expect("vi=1 counter");
+        let vi2 = text.find("fpga_mt_tenant_served{vi=\"2\"} 4").expect("vi=2 counter");
+        assert!(vi1 < vi2, "BTreeMap order: vi=1 before vi=2");
+        assert!(text.contains("fpga_mt_tenant_latency_us{vi=\"2\",quantile=\"0.95\"}"));
+        assert!(
+            !text.contains("latency_us{vi=\"1\""),
+            "no quantiles for a tenant with an empty sketch"
+        );
+        assert!(text.contains("fpga_mt_traces_recent 1"));
+    }
+
+    #[test]
+    fn json_is_deterministic_and_self_consistent() {
+        let a = snapshot().to_json();
+        let b = snapshot().to_json();
+        assert_eq!(a, b);
+        assert!(a.starts_with("{\"tenants\":{\"1\":{"), "{a}");
+        assert!(a.contains("\"served\":4"), "{a}");
+        assert!(a.contains("\"p50_us\":"), "{a}");
+        assert!(a.contains("\"traces_recent\":1"), "{a}");
+    }
+}

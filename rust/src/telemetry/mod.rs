@@ -1,0 +1,345 @@
+//! Deterministic telemetry: request-path tracing, a per-tenant metrics
+//! registry, and a flight recorder for incident debugging.
+//!
+//! Three pieces, one determinism rule:
+//!
+//! 1. **Request spans** ([`TraceCtx`]/[`Span`]) — every request carries a
+//!    trace through [`serve_admitted`](crate::coordinator::shard::serve_admitted);
+//!    the serving path records phase spans (admit-wait, reconfig-wait,
+//!    io-trip, noc-stream, compute, fleet ingress) stamped with *modeled*
+//!    time only — `clock_us`-derived waits, the Fig 14 `io_us` model, NoC
+//!    cycles — never wall time. A replayed seeded trace therefore renders
+//!    a byte-identical span log on the serial, sharded, and fleet
+//!    backends (`rust/tests/backend_conformance.rs` gates it exactly
+//!    like responses).
+//! 2. **Per-tenant registry** ([`TenantStats`]) — lock-cheap accumulators
+//!    sharded one per VR (the same per-shard-then-merge idiom as
+//!    [`Metrics::merge`](crate::coordinator::metrics::Metrics::merge)),
+//!    keyed by tenant VI: served / rejected / backpressured / denied_ops
+//!    counters, byte totals, and a modeled-latency
+//!    [`QuantileSketch`](crate::util::QuantileSketch) per tenant.
+//!    Collected via [`ServingBackend::telemetry_snapshot`](crate::api::ServingBackend::telemetry_snapshot)
+//!    and exported as Prometheus-style lines or machine JSON (`export`).
+//! 3. **Flight recorder** ([`ControlEvent`]/[`Incident`]) — bounded rings
+//!    of recent traces (per VR slot) and control-plane events (per
+//!    device), cross-linked to journal sequence numbers, captured on
+//!    device failure for time-travel incident debugging.
+//!
+//! Tracing can be disabled (the `FPGA_MT_TELEMETRY=off` environment
+//! variable at construction, or [`Telemetry::set_enabled`] at runtime);
+//! `benches/telemetry_overhead.rs` gates the tracing-on overhead.
+
+pub mod export;
+mod recorder;
+mod registry;
+mod span;
+
+pub use recorder::{ControlEvent, Incident};
+pub use registry::TenantStats;
+pub use span::{Phase, Span, TraceCtx};
+
+use crate::coordinator::metrics::RequestTiming;
+use crate::hypervisor::LifecycleOp;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Recent-trace ring capacity per VR slot. Eviction is deterministic:
+/// within one VR, requests complete in admission (rid) order on every
+/// engine shape, so the surviving window is the same across backends.
+pub const TRACE_RING_CAP: usize = 1024;
+
+/// Control-plane event ring capacity per device.
+pub const EVENT_RING_CAP: usize = 256;
+
+/// One VR's telemetry shard: its tenants' accumulators plus the recent
+/// request traces. Each slot has its own lock and exactly one writer on
+/// the sharded engine (the VR's worker), so the serving hot path never
+/// contends — the same reason per-shard [`Metrics`](crate::coordinator::metrics::Metrics)
+/// accumulators exist.
+#[derive(Debug, Default)]
+struct TelemetrySlot {
+    tenants: BTreeMap<u16, TenantStats>,
+    recent: VecDeque<TraceCtx>,
+}
+
+/// A merged, comparable view of one backend's telemetry: the per-tenant
+/// registry, the recent traces (rid order), and the control-plane event
+/// ring. [`PartialEq`] so conformance can assert snapshot equality
+/// across backends directly.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    /// Per-tenant registry, merged across VR slots (BTreeMap: stable,
+    /// deterministic iteration order for the exporters).
+    pub tenants: BTreeMap<u16, TenantStats>,
+    /// Recent request traces in rid order.
+    pub traces: Vec<TraceCtx>,
+    /// Recent control-plane events in recording order.
+    pub events: Vec<ControlEvent>,
+}
+
+impl TelemetrySnapshot {
+    /// Fold another snapshot in (a fleet merges its devices' snapshots).
+    /// Tenant stats merge exactly; traces interleave by rid (stable, so
+    /// same-rid traces from different devices keep device order).
+    pub fn merge(&mut self, other: &TelemetrySnapshot) {
+        for (vi, stats) in &other.tenants {
+            self.tenants.entry(*vi).or_default().merge(stats);
+        }
+        self.traces.extend(other.traces.iter().cloned());
+        self.traces.sort_by_key(|t| t.rid);
+        self.events.extend(other.events.iter().cloned());
+    }
+
+    /// The deterministic span log: one rendered line per recent trace,
+    /// in rid order. This is the byte string the conformance suite
+    /// compares across backends.
+    pub fn span_log(&self) -> String {
+        let lines: Vec<String> = self.traces.iter().map(TraceCtx::render).collect();
+        lines.join("\n")
+    }
+}
+
+/// The telemetry core one engine owns: per-VR slots (registry shards +
+/// trace rings), the control-plane event ring, per-tenant denied-op
+/// attribution, and the runtime enable toggle.
+#[derive(Debug)]
+pub struct Telemetry {
+    slots: Vec<Mutex<TelemetrySlot>>,
+    /// Control-plane ops refused while naming a VI, attributed here
+    /// (refusals happen before any VR is resolved, so they are not
+    /// slot-scoped).
+    denied: Mutex<BTreeMap<u16, u64>>,
+    events: Mutex<VecDeque<ControlEvent>>,
+    enabled: AtomicBool,
+}
+
+impl Telemetry {
+    /// Telemetry over `n_slots` VR slots (one per region of the
+    /// floorplan). Starts enabled unless the `FPGA_MT_TELEMETRY`
+    /// environment variable is `off` or `0` — the tracing-overhead
+    /// bench's A/B knob.
+    pub fn new(n_slots: usize) -> Telemetry {
+        let off = std::env::var("FPGA_MT_TELEMETRY")
+            .map(|v| v == "off" || v == "0")
+            .unwrap_or(false);
+        Telemetry {
+            slots: (0..n_slots.max(1)).map(|_| Mutex::new(TelemetrySlot::default())).collect(),
+            denied: Mutex::new(BTreeMap::new()),
+            events: Mutex::new(VecDeque::new()),
+            enabled: AtomicBool::new(!off),
+        }
+    }
+
+    /// Whether recording is currently enabled.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Enable or disable recording at runtime (the A/B toggle; disabled
+    /// telemetry records nothing and snapshots empty).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    fn slot(&self, slot: usize) -> std::sync::MutexGuard<'_, TelemetrySlot> {
+        // Out-of-range slots (front-end instances size a single slot)
+        // clamp by modulo rather than panic; engine callers always pass
+        // the request's VR index, which is in range by construction.
+        self.slots[slot % self.slots.len()]
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Record one served request: fold its counters into the tenant's
+    /// registry entry (modeled latency = IO trip + NoC cycles at the
+    /// system clock — never wall compute) and push the completed trace
+    /// into the slot's recent-trace ring.
+    pub fn record_request(
+        &self,
+        slot: usize,
+        trace: TraceCtx,
+        timing: &RequestTiming,
+        noc_clock_mhz: f64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut guard = self.slot(slot);
+        let stats = guard.tenants.entry(trace.vi).or_default();
+        stats.served += 1;
+        stats.bytes_in += timing.bytes_in as u64;
+        stats.bytes_out += timing.bytes_out as u64;
+        stats.latency.add(timing.io_us + timing.noc_cycles as f64 / noc_clock_mhz);
+        if guard.recent.len() == TRACE_RING_CAP {
+            guard.recent.pop_front();
+        }
+        guard.recent.push_back(trace);
+    }
+
+    /// Attribute one rejected request (access monitor, staleness guard)
+    /// to `vi` on `slot` — mirrors `Metrics::rejected` exactly.
+    pub fn note_rejected(&self, slot: usize, vi: u16) {
+        if self.enabled() {
+            self.slot(slot).tenants.entry(vi).or_default().rejected += 1;
+        }
+    }
+
+    /// Attribute one backpressured request (reconfiguration backlog
+    /// full) to `vi` on `slot` — mirrors `Metrics::backpressured`.
+    pub fn note_backpressured(&self, slot: usize, vi: u16) {
+        if self.enabled() {
+            self.slot(slot).tenants.entry(vi).or_default().backpressured += 1;
+        }
+    }
+
+    /// Record one lifecycle op into the flight recorder (and, when the
+    /// op was refused and names a tenant, attribute the denial to it).
+    /// Both engines call this at their lifecycle entry point with the
+    /// same arguments at the same trace position, so event streams and
+    /// denied attribution stay equal across backends.
+    pub fn lifecycle_event(&self, op: &LifecycleOp, seq: Option<u64>, epoch: u64, ok: bool) {
+        if !self.enabled() {
+            return;
+        }
+        if !ok {
+            if let Some(vi) = op_tenant(op) {
+                *self
+                    .denied
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                    .entry(vi)
+                    .or_default() += 1;
+            }
+        }
+        let mut events = self.events.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if events.len() == EVENT_RING_CAP {
+            events.pop_front();
+        }
+        events.push_back(ControlEvent { seq, epoch, ok, what: format!("{op:?}") });
+    }
+
+    /// Merge every slot (registry shards + trace rings), the denied-op
+    /// attribution, and the event ring into one comparable snapshot.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::default();
+        for i in 0..self.slots.len() {
+            let guard = self.slot(i);
+            for (vi, stats) in &guard.tenants {
+                snap.tenants.entry(*vi).or_default().merge(stats);
+            }
+            snap.traces.extend(guard.recent.iter().cloned());
+        }
+        snap.traces.sort_by_key(|t| t.rid);
+        for (vi, n) in
+            self.denied.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).iter()
+        {
+            snap.tenants.entry(*vi).or_default().denied_ops += n;
+        }
+        snap.events.extend(
+            self.events.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).iter().cloned(),
+        );
+        snap
+    }
+}
+
+/// The tenant a lifecycle op names, if any (denied-op attribution).
+pub fn op_tenant(op: &LifecycleOp) -> Option<u16> {
+    match op {
+        LifecycleOp::Allocate { vi }
+        | LifecycleOp::AllocateAt { vi, .. }
+        | LifecycleOp::Program { vi, .. }
+        | LifecycleOp::Grow { vi, .. }
+        | LifecycleOp::Wire { vi, .. }
+        | LifecycleOp::Release { vi, .. }
+        | LifecycleOp::DestroyVi { vi } => Some(*vi),
+        LifecycleOp::CreateVi { .. } | LifecycleOp::FloorEpoch { .. } => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(io_us: f64, cycles: u64, bytes_in: usize, bytes_out: usize) -> RequestTiming {
+        RequestTiming { io_us, noc_cycles: cycles, compute_us: 123.0, bytes_in, bytes_out }
+    }
+
+    #[test]
+    fn sharded_slots_merge_to_the_serial_registry() {
+        // The same requests recorded through one slot vs spread across
+        // three slots snapshot to the same registry — the Metrics::merge
+        // idiom carried over.
+        let one = Telemetry::new(1);
+        let three = Telemetry::new(3);
+        for rid in 0..30u64 {
+            let vi = (rid % 2) as u16 + 1;
+            let t = timing(20.0 + rid as f64, rid * 10, 64, 32);
+            one.record_request(0, TraceCtx::new(rid, vi, rid as usize % 3, 1), &t, 800.0);
+            three.record_request(
+                rid as usize % 3,
+                TraceCtx::new(rid, vi, rid as usize % 3, 1),
+                &t,
+                800.0,
+            );
+        }
+        let a = one.snapshot();
+        let b = three.snapshot();
+        assert_eq!(a.tenants, b.tenants);
+        assert_eq!(a.traces, b.traces, "rid-sorted traces are identical");
+        assert_eq!(a.tenants[&1].served, 15);
+        assert!(a.tenants[&1].latency.percentile(50.0) > 0.0);
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let tel = Telemetry::new(2);
+        tel.set_enabled(false);
+        tel.record_request(0, TraceCtx::new(0, 1, 0, 1), &timing(10.0, 0, 8, 8), 800.0);
+        tel.note_rejected(1, 2);
+        tel.lifecycle_event(&LifecycleOp::CreateVi { name: "t".into() }, None, 0, true);
+        assert_eq!(tel.snapshot(), TelemetrySnapshot::default());
+        tel.set_enabled(true);
+        tel.note_rejected(1, 2);
+        assert_eq!(tel.snapshot().tenants[&2].rejected, 1);
+    }
+
+    #[test]
+    fn trace_ring_evicts_oldest_first() {
+        let tel = Telemetry::new(1);
+        for rid in 0..(TRACE_RING_CAP as u64 + 5) {
+            tel.record_request(0, TraceCtx::new(rid, 1, 0, 1), &timing(1.0, 0, 1, 1), 800.0);
+        }
+        let snap = tel.snapshot();
+        assert_eq!(snap.traces.len(), TRACE_RING_CAP);
+        assert_eq!(snap.traces[0].rid, 5, "oldest traces evicted");
+        assert_eq!(snap.tenants[&1].served, TRACE_RING_CAP as u64 + 5, "registry never evicts");
+    }
+
+    #[test]
+    fn denied_ops_attribute_to_the_named_tenant() {
+        let tel = Telemetry::new(1);
+        let op = LifecycleOp::Release { vi: 4, vr: 0 };
+        tel.lifecycle_event(&op, None, 7, false);
+        tel.lifecycle_event(&LifecycleOp::CreateVi { name: "x".into() }, Some(3), 7, true);
+        let snap = tel.snapshot();
+        assert_eq!(snap.tenants[&4].denied_ops, 1);
+        assert_eq!(snap.events.len(), 2);
+        assert!(!snap.events[0].ok);
+        assert_eq!(snap.events[1].seq, Some(3));
+        assert_eq!(op_tenant(&LifecycleOp::CreateVi { name: "x".into() }), None);
+    }
+
+    #[test]
+    fn snapshot_merge_interleaves_by_rid() {
+        let a = Telemetry::new(1);
+        let b = Telemetry::new(1);
+        a.record_request(0, TraceCtx::new(2, 1, 0, 1), &timing(1.0, 0, 1, 1), 800.0);
+        b.record_request(0, TraceCtx::new(1, 2, 0, 1), &timing(2.0, 0, 2, 2), 800.0);
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let rids: Vec<u64> = merged.traces.iter().map(|t| t.rid).collect();
+        assert_eq!(rids, vec![1, 2]);
+        assert_eq!(merged.tenants.len(), 2);
+    }
+}

@@ -1,0 +1,69 @@
+//! Flight-recorder types: control-plane events and captured incidents.
+//!
+//! The flight recorder is a bounded ring of recent request traces plus
+//! recent control-plane events, kept per device. When a device fails
+//! ([`FleetScheduler::fail_device`](crate::fleet::FleetScheduler::fail_device))
+//! its final telemetry snapshot is captured as an [`Incident`], tagged
+//! with the fleet journal's last sequence number — so an operator can
+//! line the dead device's recent spans up against the journaled control
+//! history and time-travel the incident.
+
+use super::TelemetrySnapshot;
+
+/// One control-plane event in the flight-recorder ring: what the
+/// lifecycle surface did (or refused), at which epoch, and — when the
+/// op was journaled — the journal sequence number it landed at. The
+/// `seq` is the cross-link into `journal dump` output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlEvent {
+    /// Journal sequence the op was recorded at (`None` when the engine
+    /// runs without a journal, or for refused ops — refusals are never
+    /// journaled).
+    pub seq: Option<u64>,
+    /// Hypervisor epoch sum at the time of the event.
+    pub epoch: u64,
+    /// Whether the op was applied (`true`) or refused (`false`).
+    pub ok: bool,
+    /// Deterministic rendering of the op.
+    pub what: String,
+}
+
+impl ControlEvent {
+    /// Render the event as one log line (`seq=-` when un-journaled).
+    pub fn render(&self) -> String {
+        let seq = match self.seq {
+            Some(s) => s.to_string(),
+            None => "-".into(),
+        };
+        let verdict = if self.ok { "ok" } else { "refused" };
+        format!("seq={seq} epoch={} {verdict} {}", self.epoch, self.what)
+    }
+}
+
+/// A captured device incident: the failed device's final telemetry
+/// snapshot (recent spans, per-tenant registry, control events), plus
+/// the fleet journal position at capture time.
+#[derive(Debug, Clone)]
+pub struct Incident {
+    /// The device that failed.
+    pub device: usize,
+    /// Last fleet-journal sequence written before the capture, if the
+    /// fleet journals — the anchor for time-travel debugging against
+    /// `journal dump`.
+    pub journal_seq: Option<u64>,
+    /// The device's telemetry at failure time.
+    pub snapshot: TelemetrySnapshot,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_render_with_and_without_a_seq() {
+        let e = ControlEvent { seq: Some(4), epoch: 9, ok: true, what: "Allocate".into() };
+        assert_eq!(e.render(), "seq=4 epoch=9 ok Allocate");
+        let e = ControlEvent { seq: None, epoch: 0, ok: false, what: "Wire".into() };
+        assert_eq!(e.render(), "seq=- epoch=0 refused Wire");
+    }
+}

@@ -1,0 +1,75 @@
+//! Per-tenant accounting: the registry's value type and its merge.
+//!
+//! The registry follows the [`Metrics::merge`](crate::coordinator::metrics::Metrics::merge)
+//! idiom — per-shard accumulators that fold together at collection time.
+//! Counters add exactly; the latency sketch is the order-independent
+//! [`QuantileSketch`], so any partition of one request stream across
+//! shards merges to exactly the state a serial accumulator would hold.
+
+use crate::util::QuantileSketch;
+
+/// Per-tenant (VI-keyed) serving counters plus a modeled-latency sketch.
+///
+/// `latency` records the request's **modeled** service time only
+/// (`io_us` + NoC cycles at the system clock) — wall-clock compute is
+/// excluded so the per-tenant percentiles are deterministic across
+/// backends and hosts, per the telemetry determinism rule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantStats {
+    /// Requests served to completion.
+    pub served: u64,
+    /// Requests refused by access control or the staleness guards.
+    pub rejected: u64,
+    /// Requests refused at admission (reconfiguration backlog full).
+    pub backpressured: u64,
+    /// Control-plane ops refused while naming this tenant's VI.
+    pub denied_ops: u64,
+    /// Payload bytes in across served requests.
+    pub bytes_in: u64,
+    /// Response bytes out across served requests.
+    pub bytes_out: u64,
+    /// Modeled per-request service time (µs): IO trip + NoC streaming.
+    pub latency: QuantileSketch,
+}
+
+impl TenantStats {
+    /// Fold another accumulator for the same tenant in (exact: counters
+    /// add, the sketch merges order-independently).
+    pub fn merge(&mut self, other: &TenantStats) {
+        self.served += other.served;
+        self.rejected += other.rejected;
+        self.backpressured += other.backpressured;
+        self.denied_ops += other.denied_ops;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.latency.merge(&other.latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_every_counter_and_the_sketch() {
+        let mut a = TenantStats::default();
+        a.served = 3;
+        a.rejected = 1;
+        a.bytes_in = 100;
+        a.latency.add(10.0);
+        let mut b = TenantStats::default();
+        b.served = 2;
+        b.backpressured = 4;
+        b.denied_ops = 5;
+        b.bytes_out = 7;
+        b.latency.add(500.0);
+        a.merge(&b);
+        assert_eq!(a.served, 5);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.backpressured, 4);
+        assert_eq!(a.denied_ops, 5);
+        assert_eq!(a.bytes_in, 100);
+        assert_eq!(a.bytes_out, 7);
+        assert_eq!(a.latency.count(), 2);
+    }
+}

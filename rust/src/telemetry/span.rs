@@ -1,0 +1,139 @@
+//! Request-path phase spans — the deterministic trace a request carries.
+//!
+//! Every span is stamped with **modeled** time only (`clock_us`-derived
+//! waits, the Fig 14 `io_us` model, NoC `noc_cycles`), never wall time:
+//! wall-clock compute differs run to run and host to host, so it would
+//! break the conformance property that one seeded trace renders a
+//! byte-identical span log on the serial, sharded, and fleet backends.
+//! The compute phase therefore carries only its byte count.
+
+/// Phase of a request's modeled life, in serving order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Wait behind the middleware entry point (arrival-process queueing).
+    AdmitWait,
+    /// Additional wait for the target VR's reconfiguration window.
+    ReconfigWait,
+    /// Host->FPGA IO trip (the Fig 14 calibrated model).
+    IoTrip,
+    /// On-chip inter-VR streaming over the (possibly partitioned) NoC.
+    NocStream,
+    /// Accelerator compute. Wall time is real and host-dependent, so the
+    /// span carries bytes only — see the module docs' determinism rule.
+    Compute,
+    /// Fleet front-end ingress hop (route-path requests only; the
+    /// session path calls device engines directly and never records it).
+    Ingress,
+}
+
+impl Phase {
+    /// Stable lowercase name used in span logs and exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::AdmitWait => "admit-wait",
+            Phase::ReconfigWait => "reconfig-wait",
+            Phase::IoTrip => "io-trip",
+            Phase::NocStream => "noc-stream",
+            Phase::Compute => "compute",
+            Phase::Ingress => "ingress",
+        }
+    }
+}
+
+/// One phase span: modeled time, NoC cycles, and bytes moved. Fields a
+/// phase does not model are zero (e.g. waits carry no bytes, compute
+/// carries no modeled time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Which phase this span covers.
+    pub phase: Phase,
+    /// Modeled duration in µs (0 for phases modeled in cycles or bytes).
+    pub modeled_us: f64,
+    /// NoC cycles spent (streaming spans only).
+    pub cycles: u64,
+    /// Bytes moved through the phase (streaming and compute spans).
+    pub bytes: u64,
+}
+
+/// The trace context one request carries through the serving path: its
+/// identity (rid in engine arrival order, tenant VI, target VR, the
+/// lifecycle epoch it was admitted under) plus the phase spans recorded
+/// along the way. Byte-identical across backends for the same seeded
+/// trace — `rust/tests/backend_conformance.rs` gates exactly that.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceCtx {
+    /// Request id in the engine's arrival order.
+    pub rid: u64,
+    /// Submitting tenant's VI.
+    pub vi: u16,
+    /// Target VR.
+    pub vr: usize,
+    /// Lifecycle epoch the request was admitted under.
+    pub epoch: u64,
+    /// Phase spans in recording order.
+    pub spans: Vec<Span>,
+}
+
+impl TraceCtx {
+    /// Fresh trace for one admitted request.
+    pub fn new(rid: u64, vi: u16, vr: usize, epoch: u64) -> TraceCtx {
+        TraceCtx { rid, vi, vr, epoch, spans: Vec::new() }
+    }
+
+    /// Record a time-only span.
+    pub fn span(&mut self, phase: Phase, modeled_us: f64) {
+        self.spans.push(Span { phase, modeled_us, cycles: 0, bytes: 0 });
+    }
+
+    /// Record a span with cycles and bytes (streaming, compute).
+    pub fn span_full(&mut self, phase: Phase, modeled_us: f64, cycles: u64, bytes: u64) {
+        self.spans.push(Span { phase, modeled_us, cycles, bytes });
+    }
+
+    /// Render the trace as one deterministic log line. Modeled times are
+    /// printed at fixed precision, so identical f64 values (which the
+    /// conformance suite guarantees) render to identical bytes.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut line = format!(
+            "rid={} vi={} vr={} epoch={}",
+            self.rid, self.vi, self.vr, self.epoch
+        );
+        for s in &self.spans {
+            write!(line, " | {} {:.3}us", s.phase.name(), s.modeled_us).expect("write to String");
+            if s.cycles > 0 {
+                write!(line, " {}cyc", s.cycles).expect("write to String");
+            }
+            if s.bytes > 0 {
+                write!(line, " {}B", s.bytes).expect("write to String");
+            }
+        }
+        line
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_deterministic_and_ordered() {
+        let mut t = TraceCtx::new(7, 3, 2, 11);
+        t.span(Phase::AdmitWait, 12.5);
+        t.span(Phase::ReconfigWait, 0.0);
+        t.span(Phase::IoTrip, 30.25);
+        t.span_full(Phase::NocStream, 1.5, 1200, 64);
+        t.span_full(Phase::Compute, 0.0, 0, 1024);
+        let a = t.render();
+        let b = t.clone().render();
+        assert_eq!(a, b);
+        assert!(a.starts_with("rid=7 vi=3 vr=2 epoch=11"), "{a}");
+        assert!(a.contains("admit-wait 12.500us"), "{a}");
+        assert!(a.contains("noc-stream 1.500us 1200cyc 64B"), "{a}");
+        assert!(a.contains("compute 0.000us 1024B"), "{a}");
+        let admit = a.find("admit-wait").unwrap();
+        let io = a.find("io-trip").unwrap();
+        let noc = a.find("noc-stream").unwrap();
+        assert!(admit < io && io < noc, "spans render in recording order");
+    }
+}

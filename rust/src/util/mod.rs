@@ -11,4 +11,4 @@ pub mod stats;
 pub mod table;
 
 pub use rng::Rng;
-pub use stats::{Histogram, Percentiles, QuantileSketch, Summary};
+pub use stats::{Histogram, Percentiles, QuantileSketch, ShardedSketch, Summary};

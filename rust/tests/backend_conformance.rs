@@ -25,6 +25,7 @@ use fpga_mt::api::{
 use fpga_mt::coordinator::metrics::Metrics;
 use fpga_mt::coordinator::{Response, ShardedEngine, System};
 use fpga_mt::fleet::{FleetCluster, FleetConfig};
+use fpga_mt::telemetry::TelemetrySnapshot;
 use fpga_mt::util::Rng;
 use std::sync::Arc;
 
@@ -54,6 +55,10 @@ struct Run {
     /// Every response, in trace order (sync wave, async wave, batches).
     responses: Vec<anyhow::Result<Response>>,
     metrics: Metrics,
+    /// Request-path telemetry captured just before shutdown: span logs
+    /// and per-tenant registries are conformance-gated exactly like the
+    /// responses above.
+    telemetry: TelemetrySnapshot,
 }
 
 /// Deploy, serve, and shut down one backend; everything seeded, so two
@@ -99,8 +104,9 @@ fn drive<B: ServingBackend>(backend: B) -> Run {
             (0..8).map(|i| BatchItem::new(i % regions, seeded_payload(&mut rng))).collect();
         responses.extend(session.submit_batch(&batch).expect("submit_batch"));
     }
+    let telemetry = backend.telemetry_snapshot().expect("telemetry snapshot");
     let metrics = backend.shutdown();
-    Run { label, targets, responses, metrics }
+    Run { label, targets, responses, metrics, telemetry }
 }
 
 fn assert_runs_identical(a: &Run, b: &Run) {
@@ -137,6 +143,7 @@ fn assert_runs_identical(a: &Run, b: &Run) {
     assert_eq!(ma.requests, mb.requests, "{pair}: requests");
     assert_eq!(ma.rejected, mb.rejected, "{pair}: rejected");
     assert_eq!(ma.backpressured, mb.backpressured, "{pair}: backpressured");
+    assert_eq!(ma.denied_ops, mb.denied_ops, "{pair}: denied_ops");
     assert_eq!(ma.batches, mb.batches, "{pair}: batches");
     assert_eq!(ma.bytes_in, mb.bytes_in, "{pair}: bytes_in");
     assert_eq!(ma.bytes_out, mb.bytes_out, "{pair}: bytes_out");
@@ -155,6 +162,19 @@ fn assert_runs_identical(a: &Run, b: &Run) {
             "{pair}: p{p} latency (the sketch is order-independent, so exact)"
         );
     }
+    // Telemetry conformance: spans carry *modeled* time only, so a
+    // replayed trace's span log is byte-identical across engine shapes —
+    // one wall-clock reading leaking into a span breaks this instantly.
+    assert_eq!(
+        a.telemetry.span_log(),
+        b.telemetry.span_log(),
+        "{pair}: request-path span logs must be byte-identical"
+    );
+    // And the per-tenant registries (counters + latency sketches) must
+    // merge to the same state whether one thread or N shards recorded
+    // them. Control events are engine-shape-specific (journal seqs exist
+    // only where a journal does) and are deliberately not compared.
+    assert_eq!(a.telemetry.tenants, b.telemetry.tenants, "{pair}: per-tenant registries");
 }
 
 fn serial_run() -> Run {
@@ -181,6 +201,18 @@ fn all_three_backends_agree_on_one_trace() {
     assert_runs_identical(&serial, &sharded);
     assert_runs_identical(&serial, &fleet);
     assert_runs_identical(&sharded, &fleet);
+    // Telemetry content sanity on the shared trace (equality across
+    // backends is asserted above): every served request left exactly one
+    // trace, the registry's served total matches the engine metrics, and
+    // the span log carries every serving-path phase.
+    let served: u64 = serial.telemetry.tenants.values().map(|t| t.served).sum();
+    assert_eq!(served, serial.metrics.requests, "registry served == metrics requests");
+    assert_eq!(serial.telemetry.traces.len() as u64, serial.metrics.requests);
+    let log = serial.telemetry.span_log();
+    for phase in ["admit-wait", "reconfig-wait", "io-trip", "compute"] {
+        assert!(log.contains(phase), "span log must carry {phase} spans");
+    }
+    assert!(log.contains("noc-stream"), "gamma's streaming chain must record NoC spans");
 }
 
 #[test]
@@ -280,7 +312,9 @@ fn stale_ticket_replay_and_region_squat_reject_identically_on_every_backend() {
         }
     }
 
-    fn hostile_mini_case<B: ServingBackend + AttackSurface>(backend: B) -> (Vec<String>, Metrics) {
+    fn hostile_mini_case<B: ServingBackend + AttackSurface>(
+        backend: B,
+    ) -> (Vec<String>, Metrics, TelemetrySnapshot) {
         let payload: Arc<[u8]> = Arc::from(vec![7u8; 64]);
         let mut log: Vec<String> = Vec::new();
 
@@ -327,14 +361,15 @@ fn stale_ticket_replay_and_region_squat_reject_identically_on_every_backend() {
         // 4. The squatter probes the victim's live region directly — the
         //    access monitor must refuse (rejected counter).
         log.push(fmt_req(backend.submit(2, vr, None, &payload)));
-        (log, backend.shutdown())
+        let telemetry = backend.telemetry_snapshot().expect("telemetry snapshot");
+        (log, backend.shutdown(), telemetry)
     }
 
-    let (serial_log, serial_metrics) =
+    let (serial_log, serial_metrics, serial_tel) =
         hostile_mini_case(SerialBackend::new(System::empty("artifacts").unwrap()));
-    let (sharded_log, sharded_metrics) =
+    let (sharded_log, sharded_metrics, sharded_tel) =
         hostile_mini_case(ShardedEngine::start(|| System::empty("artifacts")).unwrap());
-    let (fleet_log, fleet_metrics) =
+    let (fleet_log, fleet_metrics, fleet_tel) =
         hostile_mini_case(FleetCluster::start(FleetConfig::new(1)).unwrap());
 
     assert_eq!(serial_log, sharded_log, "serial vs sharded: hostile trace diverged");
@@ -364,6 +399,16 @@ fn stale_ticket_replay_and_region_squat_reject_identically_on_every_backend() {
         assert!(m.rejected >= 2, "{label}: stale replay + foreign probe must both count");
         assert!(m.denied_ops >= 1, "{label}: the refused squat must count");
     }
+    // Telemetry attribution under hostility: the refusals land under the
+    // *attacking* tenant in every backend's registry — the refused squat
+    // under the squatter's denied_ops, the foreign probe under its
+    // rejected — and the registries agree across engine shapes.
+    assert_eq!(serial_tel.tenants, sharded_tel.tenants, "serial vs sharded: registries");
+    assert_eq!(serial_tel.tenants, fleet_tel.tenants, "serial vs fleet: registries");
+    let squatter = &serial_tel.tenants[&2];
+    assert_eq!(squatter.denied_ops, 1, "the refused squat attributes to the squatter");
+    assert!(squatter.rejected >= 1, "the foreign probe attributes to the prober");
+    assert!(serial_tel.tenants[&1].rejected >= 1, "the stale replay attributes to tenant 1");
 }
 
 #[test]

@@ -218,10 +218,15 @@ fn released_region_is_isolated_from_its_previous_owner() {
     let new_plan = ShardPlan::snapshot(&sys.hv, 3);
     assert!(new_plan.epoch > old_plan.epoch, "lifecycle must bump the epoch");
     let mut metrics = Metrics::default();
-    let env = ShardEnv { runtime: sys.runtime.as_ref(), io_cfg: &sys.io_cfg };
+    let env = ShardEnv {
+        runtime: sys.runtime.as_ref(),
+        io_cfg: &sys.io_cfg,
+        tel: &sys.telemetry,
+    };
     let payload = [9u8; 32];
+    let trace = fpga_mt::telemetry::TraceCtx::new(0, intruder, 3, stale_adm.epoch);
     let result = serve_admitted(
-        ShardRequest { vi: intruder, payload: &payload, adm: stale_adm },
+        ShardRequest { vi: intruder, payload: &payload, adm: stale_adm, trace },
         &new_plan,
         &env,
         &mut sys.core,
