@@ -25,6 +25,11 @@
 //! lifecycle ops with requests whose targets the ops keep invalidating,
 //! and replaying it through epoch-pinned sessions would reopen a session
 //! per event — the handle is the documented trace-replay surface.
+//!
+//! Request payloads are drawn from `workload::arrivals` (the open-loop
+//! SLO bench's heavy-tailed size distribution), so churn and SLO benches
+//! share one seeded source of truth for demand; the churn *event*
+//! sequence itself is untouched.
 
 use fpga_mt::bench_support::{check, finish, header, smoke_mode};
 use fpga_mt::coordinator::churn::{self, ChurnConfig, ChurnEvent};
@@ -34,6 +39,7 @@ use fpga_mt::device::Device;
 use fpga_mt::hypervisor::{Hypervisor, LifecycleOp, LifecycleOutcome, Policy, VrStatus};
 use fpga_mt::noc::NocSim;
 use fpga_mt::placer::case_study_floorplan;
+use fpga_mt::workload::arrivals::{payload_pool, PayloadDist};
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::Instant;
@@ -198,6 +204,22 @@ fn main() {
     let events = churn::generate(&cfg);
     let requests_total =
         events.iter().filter(|e| matches!(e, ChurnEvent::Request { .. })).count() as u64;
+    // Remap request payloads onto the workload layer's seeded
+    // heavy-tailed pool *before* deriving the static baseline, so both
+    // worlds replay byte-identical demand.
+    let pool = payload_pool(cfg.seed, requests_total as usize, &PayloadDist::heavy_tailed());
+    let mut next_payload = 0usize;
+    let events: Vec<ChurnEvent> = events
+        .into_iter()
+        .map(|e| match e {
+            ChurnEvent::Request { vi, vr, .. } => {
+                let payload = Arc::clone(&pool[next_payload]);
+                next_payload += 1;
+                ChurnEvent::Request { vi, vr, payload }
+            }
+            op => op,
+        })
+        .collect();
     let elastic_aligned: Vec<Option<ChurnEvent>> = events.iter().cloned().map(Some).collect();
     let static_aligned = static_baseline(&events);
 

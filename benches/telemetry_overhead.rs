@@ -87,17 +87,22 @@ fn main() {
     let trace = replay_trace(n, 0x7E1E);
 
     // ---- 1a. tracing on (the default) ----
-    std::env::remove_var("FPGA_MT_TELEMETRY");
     let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
     let (on_rps, snapshot, driven) = drive(&engine, &trace, windows);
     let on_metrics = engine.shutdown();
 
-    // ---- 1b. tracing off (env knob read at Telemetry construction) ----
-    std::env::set_var("FPGA_MT_TELEMETRY", "off");
-    let engine = ShardedEngine::start(|| System::case_study("artifacts")).unwrap();
+    // ---- 1b. tracing off, via the runtime switch inside the engine
+    // builder (process-global env mutation is unsound with threads and
+    // deprecated on newer toolchains; `set_enabled` flips the same
+    // atomic the FPGA_MT_TELEMETRY knob initializes) ----
+    let engine = ShardedEngine::start(|| {
+        let sys = System::case_study("artifacts")?;
+        sys.telemetry.set_enabled(false);
+        Ok(sys)
+    })
+    .unwrap();
     let (off_rps, off_snapshot, _) = drive(&engine, &trace, windows);
     let off_metrics = engine.shutdown();
-    std::env::remove_var("FPGA_MT_TELEMETRY");
 
     let overhead_pct = ((off_rps - on_rps) / off_rps * 100.0).max(0.0);
     println!(

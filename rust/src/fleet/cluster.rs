@@ -124,6 +124,12 @@ impl FleetCluster {
         self.with(|s| s.grow_tenant(tenant))?
     }
 
+    /// Shrink `tenant` by one replica (see
+    /// [`FleetScheduler::shrink_tenant`]); returns the device released.
+    pub fn shrink_tenant(&self, tenant: TenantId) -> Result<usize> {
+        self.with(|s| s.shrink_tenant(tenant))?
+    }
+
     /// Retire `tenant` fleet-wide (see [`FleetScheduler::retire_tenant`]).
     pub fn retire_tenant(&self, tenant: TenantId) -> Result<()> {
         self.with(|s| s.retire_tenant(tenant))?

@@ -683,6 +683,51 @@ impl FleetScheduler {
         Ok(replica)
     }
 
+    /// Shrink a tenant by one whole-tenancy replica — the elasticity
+    /// controller's scale-down hook, the inverse of
+    /// [`FleetScheduler::grow_tenant`]. The victim is the replica on
+    /// the highest-numbered device the tenant occupies (deterministic,
+    /// and the most recently grown device under spread placement).
+    /// Routes are republished without the victim *first* — no new
+    /// requests land on it — then the device drains and the VI is
+    /// destroyed, so the regions return to the pool. Refuses to shrink
+    /// a single-replica tenant (retire instead) or to drop the last
+    /// entry replica. Returns the device the replica was released from.
+    ///
+    /// Journaled as `SetRoutes` + the `DestroyVi` lifecycle op + an
+    /// `UnbindReplica` — all ops recovery already replays, so a crash
+    /// mid-shrink reconstructs consistently.
+    pub fn shrink_tenant(&mut self, tenant: TenantId) -> Result<usize> {
+        self.ensure_leader()?;
+        let rec = self
+            .tenants
+            .get(&tenant)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown tenant {tenant}"))?;
+        ensure!(
+            rec.vis.len() > 1,
+            "tenant {tenant} has a single replica (retire it instead of shrinking)"
+        );
+        let (&device, &vi) = rec.vis.iter().next_back().expect("len checked above");
+        ensure!(self.devices[device].alive, "tenant {tenant}'s shrink victim device is down");
+        let keep: Vec<Replica> = self
+            .routes
+            .replicas(tenant)
+            .into_iter()
+            .filter(|r| r.device != device)
+            .collect();
+        ensure!(
+            keep.iter().any(|r| r.entry),
+            "shrinking tenant {tenant} would drop its last entry replica"
+        );
+        self.publish_routes(tenant, keep)?;
+        self.advance_device_clock(device, MIGRATION_DRAIN_US)?;
+        self.apply_on(device, &LifecycleOp::DestroyVi { vi })?;
+        self.tenants.get_mut(&tenant).expect("cloned above").vis.remove(&device);
+        self.journal_op(None, ControlOp::UnbindReplica { tenant, device: device as u32 })?;
+        Ok(device)
+    }
+
     /// Retire a tenant: unroute it, then destroy its VI on every device
     /// it occupies (waiting out open reconfiguration windows — the
     /// drain), so neither regions nor empty VI records are left behind.

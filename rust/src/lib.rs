@@ -20,3 +20,4 @@ pub mod placer;
 pub mod runtime;
 pub mod telemetry;
 pub mod util;
+pub mod workload;

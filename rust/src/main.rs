@@ -45,9 +45,10 @@ fn main() -> Result<()> {
         Some("isolation") => cmd_isolation(&args),
         Some("journal") => cmd_journal(&args),
         Some("telemetry") => cmd_telemetry(&args),
+        Some("workload") => cmd_workload(&args),
         _ => {
             eprintln!(
-                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation|journal|telemetry> [--...]\n\
+                "usage: fpga-mt <resources|fmax|power|bandwidth|latency|io-trip|throughput|compare|placement|case-study|fleet|isolation|journal|telemetry|workload> [--...]\n\
                  \n  resources   Fig 8  router area sweep\
                  \n  power       Fig 9  router power sweep\
                  \n  fmax        Fig 10 max frequency sweep\
@@ -61,7 +62,8 @@ fn main() -> Result<()> {
                  \n  fleet       Multi-FPGA fleet under churn (--devices, --events, --seed, --binpack, --remote)\
                  \n  isolation   Red-team the tenancy boundary (--backend serial|sharded|fleet, --events, --seed, --rate, --log)\
                  \n  journal     Event-sourced control plane: journal dump|recover|failover (--file, --devices, --events, --seed)\
-                 \n  telemetry   Telemetry layer: telemetry snapshot|trace|flight (--backend serial|sharded, --requests, --seed, --devices, --events, --prom, --json)"
+                 \n  telemetry   Telemetry layer: telemetry snapshot|trace|flight (--backend serial|sharded, --requests, --seed, --devices, --events, --prom, --json)\
+                 \n  workload    Open-loop SLO scenarios (--scenario steady-state|diurnal|flash-crowd|hotspot-skew, --mode static|reactive|predictive, --seed, --smoke, --list)"
             );
             Ok(())
         }
@@ -728,5 +730,86 @@ fn cmd_case_study(args: &Args) -> Result<()> {
         metrics.io_us.mean(),
         metrics.total_us.mean()
     );
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    use fpga_mt::workload::{scenario, ControlMode, Decision};
+    if args.flag("list") {
+        let mut t = Table::new(vec!["scenario", "devices", "tenants", "horizon ms", "description"]);
+        for s in scenario::Scenario::library() {
+            t.row(vec![
+                s.name.to_string(),
+                s.devices.to_string(),
+                s.tenants.len().to_string(),
+                format!("{:.0}", s.horizon_us / 1000.0),
+                s.blurb.to_string(),
+            ]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let name = args.get_or("scenario", "flash-crowd");
+    let mut sc = scenario::Scenario::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario '{name}' (try --list)"))?;
+    if args.flag("smoke") {
+        sc = sc.smoke();
+    }
+    let mode = ControlMode::parse(args.get_or("mode", "predictive"))
+        .ok_or_else(|| anyhow::anyhow!("mode must be static|reactive|predictive"))?;
+    let seed = args.get_u64("seed", 0x510AD);
+    println!(
+        "workload '{}' ({}): {} devices, horizon {:.0} ms, window {:.0} ms, mode {}, seed {seed:#x}",
+        sc.name,
+        sc.blurb,
+        sc.devices,
+        sc.horizon_us / 1000.0,
+        sc.window_us / 1000.0,
+        mode.label()
+    );
+    let out = scenario::run(&sc, mode, seed)?;
+    let mut t = Table::new(vec![
+        "tenant", "design", "arrivals", "served", "refused", "shed", "replicas", "svc µs",
+        "p99 µs", "target", "avail", "burn", "verdict",
+    ]);
+    for (i, slo) in out.report.tenants.iter().enumerate() {
+        let flow = &out.flows[i];
+        t.row(vec![
+            sc.tenants[i].name.to_string(),
+            sc.tenants[i].design.to_string(),
+            flow.arrivals.to_string(),
+            flow.served.to_string(),
+            flow.refused.to_string(),
+            flow.shed.to_string(),
+            out.final_replicas[i].to_string(),
+            fnum(out.service_probe_us[i]),
+            fnum(slo.observed_p99_us),
+            fnum(slo.target.p99_us),
+            format!("{:.4}", slo.observed_availability),
+            format!("{:.2}", slo.burn_rate),
+            if slo.attained() { "met" } else { "MISSED" }.to_string(),
+        ]);
+    }
+    t.print();
+    let sheds = out
+        .decisions
+        .iter()
+        .filter(|(_, d)| matches!(d, Decision::Shed { fraction, .. } if *fraction > 0.0))
+        .count();
+    println!(
+        "controller: {} grows ({} refused), {} shrinks, {} shed activations, {} migrations | SLO attainment {:.0}%",
+        out.grows_ok,
+        out.grows_refused,
+        out.shrinks_ok,
+        sheds,
+        out.migrations,
+        out.report.attainment() * 100.0
+    );
+    for (t_us, d) in out.decisions.iter().take(12) {
+        println!("  t={:>8.1} ms  {d:?}", t_us / 1000.0);
+    }
+    if out.decisions.len() > 12 {
+        println!("  ... {} more decisions", out.decisions.len() - 12);
+    }
     Ok(())
 }

@@ -1,0 +1,427 @@
+//! Seeded open-loop arrival processes.
+//!
+//! Everything here is **virtual-time** and **deterministic from a
+//! seed**: an arrival process is an intensity function `λ(t)` (requests
+//! per µs of modeled time), and [`ArrivalGen`] turns it into an event
+//! stream via Lewis–Shedler thinning — draw candidate gaps at the peak
+//! rate from the seeded [`Rng`], keep each candidate with probability
+//! `λ(t)/λ_peak`. The stream never consults the wall clock and never
+//! waits for replies: timestamps are a property of *demand*, not of the
+//! backend, which is what makes the serving harness open-loop (see
+//! [`super::driver`]).
+//!
+//! Processes compose: [`Overlay`] sums intensities, [`Scaled`]
+//! multiplies one, so a diurnal baseline with a flash-crowd spike on
+//! top is `Overlay(vec![diurnal, flash])`. Payload sizes come from a
+//! bounded-Pareto [`PayloadDist`] — heavy-tailed like real RPC bodies,
+//! hard-capped so a tail draw cannot model an unbounded transfer.
+//!
+//! Streams are generated lazily (an [`ArrivalStream`] is an infinite
+//! iterator, O(tenants) memory), so modeling millions of sessions costs
+//! only the events actually consumed.
+
+use crate::util::Rng;
+
+/// An open-loop arrival intensity over virtual time.
+///
+/// Implementors describe *demand*, not serving: the intensity at `t`
+/// is what clients would send whether or not the backend keeps up.
+pub trait ArrivalProcess {
+    /// Instantaneous arrival intensity at `t_us`, in requests per µs.
+    fn rate_per_us(&self, t_us: f64) -> f64;
+    /// A bound `λ_peak >= λ(t)` for all `t` — the thinning envelope.
+    fn peak_rate_per_us(&self) -> f64;
+    /// Short human label for reports ("poisson", "diurnal", ...).
+    fn label(&self) -> String;
+}
+
+impl ArrivalProcess for Box<dyn ArrivalProcess> {
+    fn rate_per_us(&self, t_us: f64) -> f64 {
+        (**self).rate_per_us(t_us)
+    }
+    fn peak_rate_per_us(&self) -> f64 {
+        (**self).peak_rate_per_us()
+    }
+    fn label(&self) -> String {
+        (**self).label()
+    }
+}
+
+/// Homogeneous Poisson arrivals at a constant rate.
+#[derive(Debug, Clone, Copy)]
+pub struct Poisson {
+    /// Mean arrival rate, requests per second of virtual time.
+    pub rate_per_s: f64,
+}
+
+impl ArrivalProcess for Poisson {
+    fn rate_per_us(&self, _t_us: f64) -> f64 {
+        self.rate_per_s / 1e6
+    }
+    fn peak_rate_per_us(&self) -> f64 {
+        self.rate_per_s / 1e6
+    }
+    fn label(&self) -> String {
+        format!("poisson({:.0}/s)", self.rate_per_s)
+    }
+}
+
+/// Diurnal sinusoid: `λ(t) = base · (1 + swing · sin(2πt/period + φ))`.
+///
+/// The classic day/night demand curve compressed into virtual time —
+/// `period_us` is "one day" of the model, `swing` in `[0, 1)` is the
+/// peak-to-mean excursion.
+#[derive(Debug, Clone, Copy)]
+pub struct Diurnal {
+    /// Mean arrival rate, requests per second of virtual time.
+    pub base_per_s: f64,
+    /// Fractional swing around the mean (`0.6` = ±60%).
+    pub swing: f64,
+    /// One modeled "day" in µs of virtual time.
+    pub period_us: f64,
+    /// Phase offset in radians (`-π/2` starts at the trough).
+    pub phase: f64,
+}
+
+impl ArrivalProcess for Diurnal {
+    fn rate_per_us(&self, t_us: f64) -> f64 {
+        let cycle = (std::f64::consts::TAU * t_us / self.period_us + self.phase).sin();
+        (self.base_per_s / 1e6) * (1.0 + self.swing * cycle).max(0.0)
+    }
+    fn peak_rate_per_us(&self) -> f64 {
+        (self.base_per_s / 1e6) * (1.0 + self.swing.abs())
+    }
+    fn label(&self) -> String {
+        format!("diurnal({:.0}/s ±{:.0}%)", self.base_per_s, self.swing * 100.0)
+    }
+}
+
+/// Flash crowd: a baseline rate with a multiplicative spike that ramps
+/// up linearly, holds at `multiplier` × base, and ramps back down.
+///
+/// The ramp is the point: demand forecastable a few windows ahead is
+/// what separates a *predictive* controller (grows during the ramp,
+/// while there is still headroom to pay the reconfiguration window)
+/// from a reactive one (grows after the tail has already blown).
+#[derive(Debug, Clone, Copy)]
+pub struct FlashCrowd {
+    /// Baseline arrival rate, requests per second of virtual time.
+    pub base_per_s: f64,
+    /// Virtual time the ramp-up starts (µs).
+    pub spike_start_us: f64,
+    /// Ramp-up / ramp-down duration (µs).
+    pub ramp_us: f64,
+    /// Duration the spike holds at full multiplier (µs).
+    pub hold_us: f64,
+    /// Peak intensity as a multiple of `base_per_s` (`>= 1`).
+    pub multiplier: f64,
+}
+
+impl FlashCrowd {
+    /// Spike envelope in `[0, 1]`: 0 at baseline, 1 at full multiplier.
+    fn envelope(&self, t_us: f64) -> f64 {
+        let t = t_us - self.spike_start_us;
+        if t < 0.0 {
+            0.0
+        } else if t < self.ramp_us {
+            t / self.ramp_us
+        } else if t < self.ramp_us + self.hold_us {
+            1.0
+        } else if t < 2.0 * self.ramp_us + self.hold_us {
+            1.0 - (t - self.ramp_us - self.hold_us) / self.ramp_us
+        } else {
+            0.0
+        }
+    }
+}
+
+impl ArrivalProcess for FlashCrowd {
+    fn rate_per_us(&self, t_us: f64) -> f64 {
+        let boost = 1.0 + (self.multiplier - 1.0) * self.envelope(t_us);
+        (self.base_per_s / 1e6) * boost
+    }
+    fn peak_rate_per_us(&self) -> f64 {
+        (self.base_per_s / 1e6) * self.multiplier.max(1.0)
+    }
+    fn label(&self) -> String {
+        format!("flash({:.0}/s x{:.0})", self.base_per_s, self.multiplier)
+    }
+}
+
+/// Sum of component intensities — arrivals of independent sub-flows.
+pub struct Overlay(pub Vec<Box<dyn ArrivalProcess>>);
+
+impl ArrivalProcess for Overlay {
+    fn rate_per_us(&self, t_us: f64) -> f64 {
+        self.0.iter().map(|p| p.rate_per_us(t_us)).sum()
+    }
+    fn peak_rate_per_us(&self) -> f64 {
+        self.0.iter().map(|p| p.peak_rate_per_us()).sum()
+    }
+    fn label(&self) -> String {
+        let parts: Vec<String> = self.0.iter().map(|p| p.label()).collect();
+        format!("overlay({})", parts.join("+"))
+    }
+}
+
+/// A component intensity scaled by a constant factor.
+pub struct Scaled {
+    /// The process being scaled.
+    pub inner: Box<dyn ArrivalProcess>,
+    /// Multiplicative intensity factor (`>= 0`).
+    pub factor: f64,
+}
+
+impl ArrivalProcess for Scaled {
+    fn rate_per_us(&self, t_us: f64) -> f64 {
+        self.inner.rate_per_us(t_us) * self.factor
+    }
+    fn peak_rate_per_us(&self) -> f64 {
+        self.inner.peak_rate_per_us() * self.factor
+    }
+    fn label(&self) -> String {
+        format!("{:.2}x {}", self.factor, self.inner.label())
+    }
+}
+
+/// Bounded-Pareto payload-size distribution (heavy-tailed, hard-capped).
+///
+/// `P(X > x) ∝ x^-α` between `min_bytes` and `max_bytes`; lower `alpha`
+/// means a heavier tail. Sampled by inverse CDF from one `f64` draw, so
+/// a size costs exactly one RNG step and the stream stays reproducible.
+#[derive(Debug, Clone, Copy)]
+pub struct PayloadDist {
+    /// Smallest payload (bytes).
+    pub min_bytes: usize,
+    /// Hard cap (bytes) — the truncation that keeps the tail bounded.
+    pub max_bytes: usize,
+    /// Pareto shape; `1.0 < alpha < 2.0` is the heavy-tailed regime.
+    pub alpha: f64,
+}
+
+impl PayloadDist {
+    /// The default serving-payload distribution: 32 B .. 2 KiB, α=1.2 —
+    /// mostly small RPC bodies with an occasional multi-KiB transfer.
+    pub fn heavy_tailed() -> PayloadDist {
+        PayloadDist { min_bytes: 32, max_bytes: 2048, alpha: 1.2 }
+    }
+
+    /// Draw one payload size.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let (l, h, a) = (self.min_bytes as f64, self.max_bytes as f64, self.alpha);
+        let u = rng.next_f64();
+        // Inverse CDF of the bounded Pareto: F(x) = (1-(L/x)^α)/(1-(L/H)^α).
+        let x = l / (1.0 - u * (1.0 - (l / h).powf(a))).powf(1.0 / a);
+        (x as usize).clamp(self.min_bytes, self.max_bytes)
+    }
+}
+
+/// One demand event: at virtual time `t_us`, scenario-tenant `tenant`
+/// sends a request of `bytes` bytes. Departure is unconditional — open
+/// loop — so `t_us` never depends on how the backend is doing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    /// Virtual timestamp (µs).
+    pub t_us: f64,
+    /// Index into the scenario's tenant list.
+    pub tenant: usize,
+    /// Payload size (bytes).
+    pub bytes: usize,
+}
+
+/// Thinning-based event generator for one [`ArrivalProcess`].
+pub struct ArrivalGen<P: ArrivalProcess> {
+    process: P,
+    rng: Rng,
+    now_us: f64,
+}
+
+impl<P: ArrivalProcess> ArrivalGen<P> {
+    /// A generator at virtual time 0 with its own seeded RNG.
+    pub fn new(process: P, seed: u64) -> ArrivalGen<P> {
+        ArrivalGen { process, rng: Rng::new(seed), now_us: 0.0 }
+    }
+
+    /// Timestamp (µs) of the next arrival, by Lewis–Shedler thinning:
+    /// candidate gaps are exponential at the peak rate; a candidate at
+    /// `t` survives with probability `λ(t)/λ_peak`.
+    pub fn next_arrival(&mut self) -> f64 {
+        let peak = self.process.peak_rate_per_us();
+        assert!(peak > 0.0, "arrival process '{}' has zero peak rate", self.process.label());
+        loop {
+            self.now_us += self.rng.exponential(1.0 / peak);
+            if self.rng.next_f64() * peak <= self.process.rate_per_us(self.now_us) {
+                return self.now_us;
+            }
+        }
+    }
+
+    /// Draw a payload size from `dist` using this generator's RNG — one
+    /// seeded source per tenant for both timing and sizing.
+    pub fn payload_bytes(&mut self, dist: &PayloadDist) -> usize {
+        dist.sample(&mut self.rng)
+    }
+
+    /// The process's report label.
+    pub fn label(&self) -> String {
+        self.process.label()
+    }
+}
+
+/// One tenant's demand description: an intensity plus a size law.
+pub struct TenantSource {
+    /// Arrival intensity over virtual time.
+    pub process: Box<dyn ArrivalProcess>,
+    /// Payload-size distribution.
+    pub payload: PayloadDist,
+}
+
+/// Time-ordered merge of per-tenant arrival streams — an infinite,
+/// lazily generated iterator of [`Arrival`]s, deterministic from
+/// `seed` (each tenant's generator is seeded with a SplitMix64 step of
+/// the stream seed, so tenants stay decorrelated but reproducible).
+pub struct ArrivalStream {
+    lanes: Vec<Lane>,
+}
+
+struct Lane {
+    gen: ArrivalGen<Box<dyn ArrivalProcess>>,
+    payload: PayloadDist,
+    pending: Arrival,
+}
+
+/// SplitMix64 — used only to derive per-tenant sub-seeds.
+fn split_seed(seed: u64, lane: u64) -> u64 {
+    let mut z = seed.wrapping_add(lane.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl ArrivalStream {
+    /// Build a merged stream over `sources`, deterministic from `seed`.
+    pub fn new(sources: Vec<TenantSource>, seed: u64) -> ArrivalStream {
+        let lanes = sources
+            .into_iter()
+            .enumerate()
+            .map(|(tenant, src)| {
+                let mut gen = ArrivalGen::new(src.process, split_seed(seed, tenant as u64));
+                let t_us = gen.next_arrival();
+                let bytes = gen.payload_bytes(&src.payload);
+                Lane { gen, payload: src.payload, pending: Arrival { t_us, tenant, bytes } }
+            })
+            .collect();
+        ArrivalStream { lanes }
+    }
+
+    /// The next event in global time order (ties break on tenant index,
+    /// so the merge itself is deterministic too).
+    pub fn next_event(&mut self) -> Arrival {
+        let lane = self
+            .lanes
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.pending.t_us.partial_cmp(&b.pending.t_us).expect("arrival time is never NaN")
+            })
+            .map(|(i, _)| i)
+            .expect("an arrival stream needs at least one tenant source");
+        let lane = &mut self.lanes[lane];
+        let out = lane.pending.clone();
+        let t_us = lane.gen.next_arrival();
+        let bytes = lane.gen.payload_bytes(&lane.payload);
+        lane.pending = Arrival { t_us, tenant: out.tenant, bytes };
+        out
+    }
+
+    /// Drain every event with `t_us < horizon_us` (the window helper the
+    /// scenario runner uses). The first event past the horizon stays
+    /// pending — nothing is lost between windows.
+    pub fn events_until(&mut self, horizon_us: f64) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        while self.peek_t_us() < horizon_us {
+            out.push(self.next_event());
+        }
+        out
+    }
+
+    /// Timestamp of the next pending event (µs) without consuming it.
+    pub fn peek_t_us(&self) -> f64 {
+        self.lanes
+            .iter()
+            .map(|l| l.pending.t_us)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Arrival;
+    fn next(&mut self) -> Option<Arrival> {
+        Some(self.next_event())
+    }
+}
+
+/// Deterministic payload pool: `n` buffers with bounded-Pareto sizes and
+/// seeded contents. The shared demand-side source the churn bench draws
+/// its request bodies from, so churn and SLO benches model the same
+/// payload population from one seed.
+pub fn payload_pool(seed: u64, n: usize, dist: &PayloadDist) -> Vec<std::sync::Arc<[u8]>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = dist.sample(&mut rng);
+            let buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            std::sync::Arc::from(buf)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thinning_respects_the_envelope() {
+        let p = FlashCrowd {
+            base_per_s: 1000.0,
+            spike_start_us: 1000.0,
+            ramp_us: 500.0,
+            hold_us: 1000.0,
+            multiplier: 4.0,
+        };
+        assert!(p.rate_per_us(0.0) <= p.peak_rate_per_us());
+        assert!((p.rate_per_us(2000.0) - p.peak_rate_per_us()).abs() < 1e-12);
+        assert!(p.rate_per_us(10_000.0) <= p.rate_per_us(2000.0));
+    }
+
+    #[test]
+    fn payload_sizes_stay_bounded() {
+        let dist = PayloadDist::heavy_tailed();
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let s = dist.sample(&mut rng);
+            assert!(s >= dist.min_bytes && s <= dist.max_bytes);
+        }
+    }
+
+    #[test]
+    fn merged_stream_is_time_ordered() {
+        let sources = vec![
+            TenantSource {
+                process: Box::new(Poisson { rate_per_s: 5000.0 }),
+                payload: PayloadDist::heavy_tailed(),
+            },
+            TenantSource {
+                process: Box::new(Poisson { rate_per_s: 2000.0 }),
+                payload: PayloadDist::heavy_tailed(),
+            },
+        ];
+        let mut stream = ArrivalStream::new(sources, 42);
+        let mut last = 0.0;
+        for _ in 0..2000 {
+            let a = stream.next_event();
+            assert!(a.t_us >= last, "stream went backwards in time");
+            last = a.t_us;
+        }
+    }
+}

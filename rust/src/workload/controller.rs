@@ -1,0 +1,324 @@
+//! SLO-aware admission + predictive elasticity controller.
+//!
+//! The controller closes the loop between demand and capacity at window
+//! granularity: each window it receives per-tenant [`WindowObs`]
+//! (arrival counts, window p99, service-time EWMA, replica count) and
+//! emits [`Decision`]s the scenario runner executes through the fleet
+//! lifecycle API ([`grow_tenant`](crate::fleet::FleetCluster::grow_tenant),
+//! [`shrink_tenant`](crate::fleet::FleetCluster::shrink_tenant)).
+//!
+//! Three modes, A/B-able on identical demand:
+//!
+//! * **Static** — never acts; whatever was provisioned at admit time is
+//!   all the tenant ever gets (the baseline the paper's elasticity
+//!   argument is made against).
+//! * **Reactive** — grows only after the observed window p99 has
+//!   already broken the target: the violation *is* the trigger, so the
+//!   reconfiguration window lands on top of an already-blown tail.
+//! * **Predictive** — forecasts next-window demand with an EWMA over
+//!   windowed arrival counts and grows when forecast utilization
+//!   crosses the grow threshold — *before* saturation, so the reconfig
+//!   window is paid while there is still headroom. Shrinks on sustained
+//!   low utilization, and when a tenant's error budget is burning above
+//!   the configured rate while overloaded, sheds the overload fraction
+//!   as typed refusals (executed by the driver **before** the backend,
+//!   so shed requests never reach `admit_vr`).
+
+use super::driver::WindowObs;
+use super::slo::{burn_rate, SloTarget};
+
+/// Which control policy is active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlMode {
+    /// Fixed allocation; the controller never acts.
+    Static,
+    /// Grow only after an observed p99 violation.
+    Reactive,
+    /// EWMA demand forecast; grow ahead of saturation, shrink on slack,
+    /// shed on exhausted error budget.
+    Predictive,
+}
+
+impl ControlMode {
+    /// Parse a CLI/bench mode name.
+    pub fn parse(s: &str) -> Option<ControlMode> {
+        match s {
+            "static" => Some(ControlMode::Static),
+            "reactive" => Some(ControlMode::Reactive),
+            "predictive" => Some(ControlMode::Predictive),
+            _ => None,
+        }
+    }
+
+    /// The mode's report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ControlMode::Static => "static",
+            ControlMode::Reactive => "reactive",
+            ControlMode::Predictive => "predictive",
+        }
+    }
+}
+
+/// Controller tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerConfig {
+    /// Active policy.
+    pub mode: ControlMode,
+    /// Window length (µs of virtual time).
+    pub window_us: f64,
+    /// EWMA smoothing for the demand forecast (`0 < α <= 1`; higher
+    /// tracks faster, lower smooths harder).
+    pub ewma_alpha: f64,
+    /// Predictive grow trigger: forecast per-replica utilization above
+    /// this grows by one replica.
+    pub grow_utilization: f64,
+    /// Predictive shrink trigger: forecast utilization below this (with
+    /// more than one replica) releases one replica.
+    pub shrink_utilization: f64,
+    /// Replica ceiling per tenant (placement may refuse earlier).
+    pub max_replicas: usize,
+    /// Shed trigger: windowed error-budget burn rate above this, while
+    /// forecast utilization exceeds 1.0, sheds the overload fraction.
+    pub shed_burn_rate: f64,
+}
+
+impl ControllerConfig {
+    /// Defaults tuned for the scenario library: 50 ms windows, fast
+    /// EWMA, grow at 70% forecast utilization, shrink under 25%.
+    pub fn new(mode: ControlMode) -> ControllerConfig {
+        ControllerConfig {
+            mode,
+            window_us: 50_000.0,
+            ewma_alpha: 0.5,
+            grow_utilization: 0.70,
+            shrink_utilization: 0.25,
+            max_replicas: 4,
+            shed_burn_rate: 1.0,
+        }
+    }
+}
+
+/// One control action, tagged with the tenant it applies to. The runner
+/// executes Grow/Shrink through the fleet lifecycle API; Shed is pushed
+/// into the driver (where it refuses arrivals before the backend).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Add one replica for the tenant.
+    Grow {
+        /// Scenario-tenant index.
+        tenant: usize,
+    },
+    /// Release one replica of the tenant.
+    Shrink {
+        /// Scenario-tenant index.
+        tenant: usize,
+    },
+    /// Set the tenant's shed fraction (0.0 stops shedding).
+    Shed {
+        /// Scenario-tenant index.
+        tenant: usize,
+        /// Fraction of arrivals to refuse before the backend.
+        fraction: f64,
+    },
+    /// Run one fleet hot/cold rebalance pass (the migrate hook) —
+    /// emitted when a tenant needs capacity but its grow path is
+    /// already at `max_replicas`, so moving load is the remaining lever.
+    Rebalance {
+        /// Hot/cold classification factor forwarded to
+        /// [`rebalance`](crate::fleet::FleetCluster::rebalance).
+        factor: f64,
+    },
+}
+
+/// Per-tenant forecast state.
+#[derive(Debug, Clone, Copy)]
+struct Demand {
+    /// EWMA of windowed arrival rate (requests per µs).
+    ewma_rate_per_us: f64,
+    /// Currently shedding at this fraction (0 = not shedding).
+    shed_fraction: f64,
+}
+
+/// The windowed elasticity controller. Feed it one
+/// [`WindowObs`] slate per window via [`Controller::end_window`];
+/// execute what it returns.
+pub struct Controller {
+    cfg: ControllerConfig,
+    targets: Vec<SloTarget>,
+    demand: Vec<Demand>,
+    /// Audit log: every decision with the virtual time it was made.
+    pub decisions: Vec<(f64, Decision)>,
+}
+
+impl Controller {
+    /// A controller for tenants with the given SLO targets.
+    pub fn new(cfg: ControllerConfig, targets: Vec<SloTarget>) -> Controller {
+        let demand = targets
+            .iter()
+            .map(|_| Demand { ewma_rate_per_us: 0.0, shed_fraction: 0.0 })
+            .collect();
+        Controller { cfg, targets, demand, decisions: Vec::new() }
+    }
+
+    /// Forecast utilization for tenant state: predicted arrival rate ×
+    /// service time / replica count — the fraction of the pool's
+    /// service capacity next window's demand is expected to consume.
+    fn forecast_utilization(&self, d: &Demand, obs: &WindowObs) -> f64 {
+        if obs.service_ewma_us <= 0.0 || obs.replicas == 0 {
+            return 0.0;
+        }
+        d.ewma_rate_per_us * obs.service_ewma_us / obs.replicas as f64
+    }
+
+    /// Close a window: update forecasts from `obs` and emit decisions.
+    /// `now_us` is the window-close virtual time (audit-log timestamp).
+    pub fn end_window(&mut self, now_us: f64, obs: &[WindowObs]) -> Vec<Decision> {
+        let mut out = Vec::new();
+        for o in obs {
+            let rate = o.arrivals as f64 / self.cfg.window_us;
+            let d = &mut self.demand[o.tenant];
+            d.ewma_rate_per_us = if d.ewma_rate_per_us == 0.0 {
+                rate
+            } else {
+                self.cfg.ewma_alpha * rate + (1.0 - self.cfg.ewma_alpha) * d.ewma_rate_per_us
+            };
+        }
+        if self.cfg.mode == ControlMode::Static {
+            return out;
+        }
+        for o in obs {
+            let target = self.targets[o.tenant];
+            let d = self.demand[o.tenant];
+            let rho = self.forecast_utilization(&d, o);
+            match self.cfg.mode {
+                ControlMode::Static => unreachable!("returned above"),
+                ControlMode::Reactive => {
+                    // Lagging trigger: the tail must already be blown.
+                    if o.p99_us > target.p99_us && o.replicas < self.cfg.max_replicas {
+                        out.push(Decision::Grow { tenant: o.tenant });
+                    }
+                }
+                ControlMode::Predictive => {
+                    if rho >= self.cfg.grow_utilization && o.replicas < self.cfg.max_replicas {
+                        out.push(Decision::Grow { tenant: o.tenant });
+                    } else if rho >= self.cfg.grow_utilization {
+                        // Out of replicas: migrating load off the hot
+                        // devices is the remaining lever.
+                        if !out.iter().any(|d| matches!(d, Decision::Rebalance { .. })) {
+                            out.push(Decision::Rebalance { factor: 2.0 });
+                        }
+                    } else if rho <= self.cfg.shrink_utilization
+                        && o.replicas > 1
+                        && o.backlog_us <= 0.0
+                    {
+                        out.push(Decision::Shrink { tenant: o.tenant });
+                    }
+                    // Admission control: budget burning above the
+                    // configured rate while demand exceeds capacity —
+                    // shed the overload fraction so admitted requests
+                    // keep their latency SLO; stop as soon as either
+                    // condition clears.
+                    let burn = burn_rate(o.availability, target.availability);
+                    let overloaded = rho > 1.0;
+                    let want = if burn > self.cfg.shed_burn_rate && overloaded {
+                        (1.0 - 1.0 / rho).clamp(0.0, 0.9)
+                    } else {
+                        0.0
+                    };
+                    if (want - d.shed_fraction).abs() > 1e-9 {
+                        self.demand[o.tenant].shed_fraction = want;
+                        out.push(Decision::Shed { tenant: o.tenant, fraction: want });
+                    }
+                }
+            }
+        }
+        for d in &out {
+            self.decisions.push((now_us, *d));
+        }
+        out
+    }
+
+    /// Grows issued so far (audit-log convenience).
+    pub fn grows(&self) -> usize {
+        self.decisions.iter().filter(|(_, d)| matches!(d, Decision::Grow { .. })).count()
+    }
+
+    /// Shrinks issued so far.
+    pub fn shrinks(&self) -> usize {
+        self.decisions.iter().filter(|(_, d)| matches!(d, Decision::Shrink { .. })).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(tenant: usize, arrivals: u64, p99: f64, avail: f64, svc: f64, reps: usize) -> WindowObs {
+        WindowObs {
+            tenant,
+            arrivals,
+            p99_us: p99,
+            availability: avail,
+            service_ewma_us: svc,
+            replicas: reps,
+            backlog_us: 0.0,
+        }
+    }
+
+    fn cfg(mode: ControlMode) -> ControllerConfig {
+        ControllerConfig { window_us: 10_000.0, ..ControllerConfig::new(mode) }
+    }
+
+    #[test]
+    fn static_mode_never_acts() {
+        let target = SloTarget { p99_us: 100.0, availability: 0.99 };
+        let mut c = Controller::new(cfg(ControlMode::Static), vec![target]);
+        let d = c.end_window(10_000.0, &[obs(0, 5000, 1e9, 0.5, 200.0, 1)]);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn reactive_waits_for_the_violation() {
+        let target = SloTarget { p99_us: 500.0, availability: 0.99 };
+        let mut c = Controller::new(cfg(ControlMode::Reactive), vec![target]);
+        // Heavy forecast load but a healthy tail: reactive does nothing.
+        assert!(c.end_window(10_000.0, &[obs(0, 500, 400.0, 1.0, 100.0, 1)]).is_empty());
+        // Tail blows: now it grows.
+        let d = c.end_window(20_000.0, &[obs(0, 500, 5000.0, 1.0, 100.0, 1)]);
+        assert_eq!(d, vec![Decision::Grow { tenant: 0 }]);
+    }
+
+    #[test]
+    fn predictive_grows_before_the_violation() {
+        let target = SloTarget { p99_us: 500.0, availability: 0.99 };
+        let mut c = Controller::new(cfg(ControlMode::Predictive), vec![target]);
+        // 500 arrivals / 10 ms at 100 µs service = forecast rho 5.0 on
+        // one replica — grows even though the observed tail is healthy.
+        let d = c.end_window(10_000.0, &[obs(0, 500, 200.0, 1.0, 100.0, 1)]);
+        assert!(d.contains(&Decision::Grow { tenant: 0 }));
+    }
+
+    #[test]
+    fn predictive_sheds_only_on_burn_plus_overload() {
+        let target = SloTarget { p99_us: 500.0, availability: 0.99 };
+        let mut c = Controller::new(
+            ControllerConfig { max_replicas: 1, ..cfg(ControlMode::Predictive) },
+            vec![target],
+        );
+        // Overloaded but budget intact: no shed.
+        let d = c.end_window(10_000.0, &[obs(0, 500, 200.0, 1.0, 100.0, 1)]);
+        assert!(!d.iter().any(|x| matches!(x, Decision::Shed { .. })));
+        // Overloaded and burning: shed the overload fraction.
+        let d = c.end_window(20_000.0, &[obs(0, 500, 200.0, 0.90, 100.0, 1)]);
+        let shed = d.iter().find_map(|x| match x {
+            Decision::Shed { fraction, .. } => Some(*fraction),
+            _ => None,
+        });
+        let f = shed.expect("must shed under burn + overload");
+        assert!(f > 0.0 && f <= 0.9);
+        // Recovery clears the shed.
+        let d = c.end_window(30_000.0, &[obs(0, 10, 100.0, 1.0, 100.0, 1)]);
+        assert!(d.contains(&Decision::Shed { tenant: 0, fraction: 0.0 }));
+    }
+}

@@ -1,0 +1,431 @@
+//! The open-loop serving driver.
+//!
+//! Closed-loop harnesses (everything before this module) submit a
+//! request, wait for the reply, submit the next — so an overloaded
+//! backend silently slows the *offered* load down and the measured tail
+//! flatters the system. This driver breaks that feedback: arrivals
+//! depart on the schedule the [`arrivals`](super::arrivals) stream
+//! dictates, whether or not earlier replies have returned. Lateness
+//! lands in the latency sketch, never in the arrival clock.
+//!
+//! Mechanically the driver layers a virtual-time multi-server queue
+//! over any transport: each tenant has one modeled server per replica
+//! with a `free_at` timestamp; an arrival at `t` starts at
+//! `max(t, earliest free_at)`, runs for the modeled service time the
+//! transport reports, and its recorded latency is `completion - t` —
+//! queueing wait plus service. Under overload `free_at` runs away from
+//! the arrival clock and the recorded tail grows without bound, which
+//! is exactly the behavior the SLO scenarios must be able to see.
+//!
+//! Shedding happens **in the driver, before the transport**: a shed
+//! request is counted as a typed per-tenant refusal and never reaches
+//! the backend — no admission clock is drawn for it (`admit_vr` never
+//! runs), no partial work happens. The shed decision itself comes from
+//! the [controller](super::controller).
+
+use crate::api::{ServingBackend, Session};
+use crate::cloud::IoConfig;
+use crate::fleet::{FleetCluster, TenantId};
+use crate::util::QuantileSketch;
+use anyhow::Result;
+
+use super::arrivals::Arrival;
+
+/// How the driver hands one admitted request to a backend.
+///
+/// `serve` returns the **modeled service time** (µs) for the request —
+/// the time one replica-server is busy with it in the virtual-queue
+/// model. Errors are backend refusals and count against availability.
+pub trait ServeTransport {
+    /// Execute one request for scenario-tenant `tenant` with a payload
+    /// of `bytes` bytes; returns modeled service µs.
+    fn serve(&mut self, tenant: usize, bytes: usize) -> Result<f64>;
+}
+
+/// Fixed-service-time transport — the analytic harness for tests: no
+/// backend at all, every request takes exactly `service_us`. With it
+/// the driver is a pure deterministic G/D/c queue, so open-loop
+/// properties (unbounded backlog under overload, on-schedule arrivals)
+/// can be asserted exactly.
+pub struct ModelTransport {
+    /// Modeled service time per request (µs).
+    pub service_us: f64,
+    /// Requests the transport has been handed (shed requests never
+    /// appear here — the property tests pivot on this counter).
+    pub served: u64,
+}
+
+impl ModelTransport {
+    /// A transport serving every request in `service_us`.
+    pub fn new(service_us: f64) -> ModelTransport {
+        ModelTransport { service_us, served: 0 }
+    }
+}
+
+impl ServeTransport for ModelTransport {
+    fn serve(&mut self, _tenant: usize, _bytes: usize) -> Result<f64> {
+        self.served += 1;
+        Ok(self.service_us)
+    }
+}
+
+/// Session transport over any [`ServingBackend`]: one session per
+/// scenario tenant, requests round-robined across the session's entry
+/// targets. Service time is the backend's modeled end-to-end request
+/// time (`RequestTiming::total_us`).
+pub struct SessionTransport {
+    sessions: Vec<Session>,
+    cursors: Vec<usize>,
+    noc_clock_mhz: f64,
+}
+
+impl SessionTransport {
+    /// Open one session per tenant ref on `backend`.
+    pub fn open(
+        backend: &dyn ServingBackend,
+        tenants: &[crate::api::TenantRef],
+    ) -> Result<SessionTransport> {
+        let sessions = tenants
+            .iter()
+            .map(|&t| backend.session(t))
+            .collect::<Result<Vec<_>>>()?;
+        let cursors = vec![0; sessions.len()];
+        Ok(SessionTransport {
+            sessions,
+            cursors,
+            noc_clock_mhz: IoConfig::default().noc_clock_mhz,
+        })
+    }
+}
+
+impl ServeTransport for SessionTransport {
+    fn serve(&mut self, tenant: usize, bytes: usize) -> Result<f64> {
+        let session = &self.sessions[tenant];
+        let n = session.targets().len().max(1);
+        let region = self.cursors[tenant] % n;
+        self.cursors[tenant] = (self.cursors[tenant] + 1) % n;
+        let payload = vec![tenant as u8; bytes.max(1)];
+        let resp = session.submit(region, payload)?;
+        Ok(resp.timing.total_us(self.noc_clock_mhz))
+    }
+}
+
+/// Fleet transport: requests go through [`FleetCluster::submit`] — the
+/// routed front-end path (round-robin across replicas, ingress-link
+/// charging, generation-gated retry) — so replicas the controller grows
+/// mid-run start absorbing demand immediately. Service time is the
+/// device total plus the ingress hop.
+pub struct FleetTransport<'a> {
+    cluster: &'a FleetCluster,
+    ids: Vec<TenantId>,
+    noc_clock_mhz: f64,
+}
+
+impl<'a> FleetTransport<'a> {
+    /// A transport submitting tenant `i`'s requests to fleet id `ids[i]`.
+    pub fn new(cluster: &'a FleetCluster, ids: Vec<TenantId>) -> FleetTransport<'a> {
+        FleetTransport { cluster, ids, noc_clock_mhz: IoConfig::default().noc_clock_mhz }
+    }
+}
+
+impl ServeTransport for FleetTransport<'_> {
+    fn serve(&mut self, tenant: usize, bytes: usize) -> Result<f64> {
+        let payload = vec![tenant as u8; bytes.max(1)];
+        let resp = self.cluster.submit(self.ids[tenant], payload)?;
+        Ok(resp.response.timing.total_us(self.noc_clock_mhz) + resp.ingress_us)
+    }
+}
+
+/// What became of one offered arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Disposition {
+    /// Served; open-loop latency (queue wait + service), µs.
+    Served {
+        /// Completion minus scheduled arrival, µs.
+        latency_us: f64,
+    },
+    /// Shed by the controller before reaching the backend — the typed
+    /// per-tenant refusal the error-budget policy emits.
+    Shed,
+    /// Refused by the backend (admission/routing) after being offered.
+    Refused,
+}
+
+/// One tenant's open-loop flow accounting.
+#[derive(Debug, Clone)]
+pub struct TenantFlow {
+    /// Cumulative open-loop latency sketch (served requests only).
+    pub latency: QuantileSketch,
+    /// Current-window latency sketch (reset by [`OpenLoop::end_window`]).
+    pub window_latency: QuantileSketch,
+    /// Arrivals offered (served + refused + shed).
+    pub arrivals: u64,
+    /// Arrivals in the current window.
+    pub window_arrivals: u64,
+    /// Requests served.
+    pub served: u64,
+    /// Backend refusals.
+    pub refused: u64,
+    /// Controller sheds (never reached the backend).
+    pub shed: u64,
+    /// Timestamp of the last arrival offered (µs) — stays on the
+    /// demand schedule no matter how far serving falls behind.
+    pub last_arrival_us: f64,
+    /// EWMA of modeled service time (µs), fed back to the controller's
+    /// capacity estimate.
+    pub service_ewma_us: f64,
+    /// Fraction of arrivals to shed (set by the controller; 0 = none).
+    shed_fraction: f64,
+    /// Deterministic shed accumulator (error-diffusion, no RNG).
+    shed_acc: f64,
+}
+
+impl TenantFlow {
+    fn new() -> TenantFlow {
+        TenantFlow {
+            latency: QuantileSketch::new(),
+            window_latency: QuantileSketch::new(),
+            arrivals: 0,
+            window_arrivals: 0,
+            served: 0,
+            refused: 0,
+            shed: 0,
+            last_arrival_us: 0.0,
+            service_ewma_us: 0.0,
+            shed_fraction: 0.0,
+            shed_acc: 0.0,
+        }
+    }
+
+    /// Observed availability so far: served / offered (1.0 unoffered).
+    pub fn availability(&self) -> f64 {
+        if self.arrivals == 0 {
+            1.0
+        } else {
+            self.served as f64 / self.arrivals as f64
+        }
+    }
+}
+
+/// Per-window observation handed to the controller at window close.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowObs {
+    /// Scenario-tenant index.
+    pub tenant: usize,
+    /// Arrivals offered this window.
+    pub arrivals: u64,
+    /// p99 open-loop latency this window (µs; 0 if nothing served).
+    pub p99_us: f64,
+    /// Availability over the whole run so far.
+    pub availability: f64,
+    /// Service-time EWMA (µs).
+    pub service_ewma_us: f64,
+    /// Modeled servers currently backing this tenant.
+    pub replicas: usize,
+    /// Backlog at window close: how far the earliest-free server is
+    /// past the arrival clock (µs; 0 when idle).
+    pub backlog_us: f64,
+}
+
+/// The open-loop driver state: per-tenant virtual server pools + flows.
+pub struct OpenLoop {
+    /// Per-tenant modeled servers: each entry is a replica's `free_at`.
+    free_at: Vec<Vec<f64>>,
+    /// Per-tenant flow accounting.
+    pub flows: Vec<TenantFlow>,
+}
+
+impl OpenLoop {
+    /// A driver for `tenants` tenants, each starting with
+    /// `replicas[i]` modeled servers (use 1 for single-replica admits).
+    pub fn new(replicas: &[usize]) -> OpenLoop {
+        OpenLoop {
+            free_at: replicas.iter().map(|&n| vec![0.0; n.max(1)]).collect(),
+            flows: replicas.iter().map(|_| TenantFlow::new()).collect(),
+        }
+    }
+
+    /// Resize tenant `t`'s server pool to `n` (a controller grow or
+    /// shrink landing). New servers become free at `now_us` — a grown
+    /// replica cannot retroactively absorb the past.
+    pub fn set_replicas(&mut self, tenant: usize, n: usize, now_us: f64) {
+        let pool = &mut self.free_at[tenant];
+        let n = n.max(1);
+        while pool.len() > n {
+            // Drop the most-backlogged server: its queue drains to the rest.
+            let worst = pool
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).expect("free_at is never NaN"))
+                .map(|(i, _)| i)
+                .expect("pool never empty");
+            pool.swap_remove(worst);
+        }
+        while pool.len() < n {
+            pool.push(now_us);
+        }
+    }
+
+    /// Current server count for tenant `t`.
+    pub fn replicas(&self, tenant: usize) -> usize {
+        self.free_at[tenant].len()
+    }
+
+    /// Set the controller's shed fraction for tenant `t` (0 disables).
+    pub fn set_shed_fraction(&mut self, tenant: usize, fraction: f64) {
+        let flow = &mut self.flows[tenant];
+        flow.shed_fraction = fraction.clamp(0.0, 1.0);
+        if flow.shed_fraction == 0.0 {
+            flow.shed_acc = 0.0;
+        }
+    }
+
+    /// Backlog of tenant `t` at `now_us`: how far its earliest-free
+    /// server trails the arrival clock (0 when it is keeping up).
+    pub fn backlog_us(&self, tenant: usize, now_us: f64) -> f64 {
+        let earliest = self.free_at[tenant]
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+        (earliest - now_us).max(0.0)
+    }
+
+    /// Offer one arrival. Shedding is decided here — before the
+    /// transport — so a shed request never reaches the backend (and so
+    /// never draws an admission clock). Served requests are charged
+    /// queue wait + modeled service against the scheduled arrival time.
+    pub fn offer(&mut self, a: &Arrival, transport: &mut dyn ServeTransport) -> Disposition {
+        let flow = &mut self.flows[a.tenant];
+        flow.arrivals += 1;
+        flow.window_arrivals += 1;
+        flow.last_arrival_us = a.t_us;
+        if flow.shed_fraction > 0.0 {
+            flow.shed_acc += flow.shed_fraction;
+            if flow.shed_acc >= 1.0 {
+                flow.shed_acc -= 1.0;
+                flow.shed += 1;
+                return Disposition::Shed;
+            }
+        }
+        match transport.serve(a.tenant, a.bytes) {
+            Err(_) => {
+                flow.refused += 1;
+                Disposition::Refused
+            }
+            Ok(service_us) => {
+                flow.service_ewma_us = if flow.service_ewma_us == 0.0 {
+                    service_us
+                } else {
+                    0.2 * service_us + 0.8 * flow.service_ewma_us
+                };
+                let pool = &mut self.free_at[a.tenant];
+                let (idx, free) = pool
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).expect("free_at is never NaN"))
+                    .expect("pool never empty");
+                let start = free.max(a.t_us);
+                let done = start + service_us;
+                pool[idx] = done;
+                let latency_us = done - a.t_us;
+                flow.latency.add(latency_us);
+                flow.window_latency.add(latency_us);
+                flow.served += 1;
+                Disposition::Served { latency_us }
+            }
+        }
+    }
+
+    /// Close the current window: return one [`WindowObs`] per tenant
+    /// and reset the window accumulators.
+    pub fn end_window(&mut self, now_us: f64) -> Vec<WindowObs> {
+        (0..self.flows.len())
+            .map(|t| {
+                let backlog = self.backlog_us(t, now_us);
+                let replicas = self.free_at[t].len();
+                let flow = &mut self.flows[t];
+                let obs = WindowObs {
+                    tenant: t,
+                    arrivals: flow.window_arrivals,
+                    p99_us: if flow.window_latency.count() == 0 {
+                        0.0
+                    } else {
+                        flow.window_latency.percentile(99.0)
+                    },
+                    availability: flow.availability(),
+                    service_ewma_us: flow.service_ewma_us,
+                    replicas,
+                    backlog_us: backlog,
+                };
+                flow.window_arrivals = 0;
+                flow.window_latency = QuantileSketch::new();
+                obs
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrival(t_us: f64, tenant: usize) -> Arrival {
+        Arrival { t_us, tenant, bytes: 64 }
+    }
+
+    #[test]
+    fn underprovisioned_backlog_grows_while_arrivals_stay_on_schedule() {
+        // One server, 100 µs service, arrivals every 50 µs: offered load
+        // 2x capacity. Open loop: every arrival departs on schedule and
+        // the recorded latency grows linearly with the backlog.
+        let mut driver = OpenLoop::new(&[1]);
+        let mut transport = ModelTransport::new(100.0);
+        let mut last_latency = 0.0;
+        for i in 0..1000u64 {
+            let t = i as f64 * 50.0;
+            match driver.offer(&arrival(t, 0), &mut transport) {
+                Disposition::Served { latency_us } => {
+                    assert!(latency_us >= last_latency, "backlog must be monotone here");
+                    last_latency = latency_us;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Arrival clock on schedule: the last arrival left at exactly
+        // its scheduled instant regardless of the ~50 ms backlog.
+        assert_eq!(driver.flows[0].last_arrival_us, 999.0 * 50.0);
+        assert!(last_latency > 40_000.0, "2x overload for 50 ms must queue ~50 ms");
+    }
+
+    #[test]
+    fn extra_servers_bound_the_queue() {
+        let mut driver = OpenLoop::new(&[2]);
+        let mut transport = ModelTransport::new(100.0);
+        let mut worst: f64 = 0.0;
+        for i in 0..1000u64 {
+            let t = i as f64 * 50.0; // exactly capacity with 2 servers
+            if let Disposition::Served { latency_us } =
+                driver.offer(&arrival(t, 0), &mut transport)
+            {
+                worst = worst.max(latency_us);
+            }
+        }
+        assert!(worst <= 200.0, "at capacity the queue must stay bounded, saw {worst}");
+    }
+
+    #[test]
+    fn shed_requests_never_reach_the_transport() {
+        let mut driver = OpenLoop::new(&[1]);
+        let mut transport = ModelTransport::new(10.0);
+        driver.set_shed_fraction(0, 0.5);
+        for i in 0..100u64 {
+            driver.offer(&arrival(i as f64 * 100.0, 0), &mut transport);
+        }
+        let flow = &driver.flows[0];
+        assert_eq!(flow.shed, 50);
+        assert_eq!(flow.served, 50);
+        assert_eq!(transport.served, 50, "transport saw only the admitted half");
+        assert_eq!(flow.arrivals, transport.served + flow.shed);
+    }
+}

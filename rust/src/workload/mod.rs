@@ -1,0 +1,43 @@
+//! Open-loop workload layer: arrival processes, per-tenant SLOs, and a
+//! predictive elasticity controller.
+//!
+//! Everything below this layer is closed-loop — a harness submits,
+//! waits, submits again — which means an overloaded backend quietly
+//! throttles its own offered load and the measured tail flatters the
+//! system. Real cloud demand does not wait. This layer models that:
+//!
+//! * [`arrivals`] — seeded virtual-time arrival processes (Poisson,
+//!   diurnal sinusoid, ramped flash crowd, composable via a trait) with
+//!   heavy-tailed bounded-Pareto payload sizes; deterministic from a
+//!   seed, generated lazily so streams can span millions of modeled
+//!   sessions.
+//! * [`slo`] — per-tenant SLO targets (p99 µs + availability) scored
+//!   against the stack's existing sensors
+//!   ([`QuantileSketch`](crate::util::QuantileSketch) /
+//!   [`TenantStats`](crate::telemetry::TenantStats)) into an
+//!   [`SloReport`](slo::SloReport) with error-budget burn rates.
+//! * [`controller`] — windowed admission + elasticity control in three
+//!   A/B-able modes (static / reactive / predictive): EWMA demand
+//!   forecasts drive `grow`/`shrink`/`rebalance` through the fleet
+//!   lifecycle API *before* reconfiguration windows blow the tail, and
+//!   exhausted error budgets shed load as typed refusals.
+//! * [`driver`] — the open-loop serving driver: arrivals depart on
+//!   schedule whether or not earlier replies returned; lateness lands
+//!   in the latency sketch, never in the arrival clock. Sheds happen
+//!   here, before the backend, so a shed request never draws an
+//!   admission clock.
+//! * [`scenario`] — the scenario library (steady-state, diurnal,
+//!   flash-crowd, hotspot-skew), each pairing an arrival mix with a
+//!   fleet topology; runnable via `fpga-mt workload`.
+
+pub mod arrivals;
+pub mod controller;
+pub mod driver;
+pub mod scenario;
+pub mod slo;
+
+pub use arrivals::{Arrival, ArrivalProcess, ArrivalStream, PayloadDist};
+pub use controller::{ControlMode, Controller, ControllerConfig, Decision};
+pub use driver::{Disposition, OpenLoop, ServeTransport};
+pub use scenario::{Scenario, ScenarioOutcome};
+pub use slo::{SloReport, SloTarget, TenantSlo};

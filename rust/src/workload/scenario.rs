@@ -1,0 +1,426 @@
+//! Scenario library: arrival mixes paired with fleet topologies.
+//!
+//! A [`Scenario`] names a fleet size, a virtual-time horizon, and a set
+//! of tenants, each with a design, an arrival shape, a payload law, and
+//! an SLO. Four canonical shapes cover the serving regimes the paper's
+//! utilization argument has to survive: **steady-state** (baseline),
+//! **diurnal** (slow swings the controller should track with
+//! grow/shrink), **flash-crowd** (a ramped spike — the predictive vs
+//! reactive showdown), and **hotspot-skew** (one tenant dominating, the
+//! rebalance/migrate trigger).
+//!
+//! Rates are specified in **per-replica utilization units** (`rho`),
+//! not absolute requests/s: at run start the runner probes each
+//! tenant's modeled service time and converts `rho` into an arrival
+//! rate, so a scenario says "this tenant offers 0.3 of one replica's
+//! capacity, spiking to 6x" and means it regardless of how expensive
+//! the design's compute model happens to be. Spike timings are
+//! fractions of the horizon for the same reason — smoke runs shrink the
+//! horizon without reshaping the scenario.
+
+use super::arrivals::{
+    ArrivalProcess, ArrivalStream, Diurnal, FlashCrowd, PayloadDist, Poisson, TenantSource,
+};
+use super::controller::{ControlMode, Controller, ControllerConfig, Decision};
+use super::driver::{FleetTransport, OpenLoop, ServeTransport, TenantFlow};
+use super::slo::{score_sketch, SloReport, SloTarget};
+use crate::fleet::{FleetCluster, FleetConfig, TenantId};
+use anyhow::Result;
+
+/// Arrival shape in utilization units (see module docs): `rho` is the
+/// fraction of one replica's service capacity the tenant offers.
+#[derive(Debug, Clone, Copy)]
+pub enum ProcessSpec {
+    /// Constant-rate Poisson demand.
+    Steady {
+        /// Offered load as a fraction of one replica's capacity.
+        rho: f64,
+    },
+    /// Diurnal sinusoid.
+    DiurnalWave {
+        /// Mean offered load (utilization units).
+        rho: f64,
+        /// Fractional swing around the mean.
+        swing: f64,
+        /// One modeled "day" as a fraction of the horizon.
+        period_frac: f64,
+    },
+    /// Ramped flash-crowd spike on a Poisson baseline.
+    Flash {
+        /// Baseline offered load (utilization units).
+        rho: f64,
+        /// Peak intensity as a multiple of the baseline.
+        multiplier: f64,
+        /// Spike ramp-up start, as a fraction of the horizon.
+        start_frac: f64,
+        /// Ramp duration (up and down), as a fraction of the horizon.
+        ramp_frac: f64,
+        /// Full-multiplier hold, as a fraction of the horizon.
+        hold_frac: f64,
+    },
+}
+
+impl ProcessSpec {
+    /// Materialize the process: `service_us` converts utilization units
+    /// into an absolute rate, `horizon_us` pins the fractional timings.
+    pub fn build(&self, service_us: f64, horizon_us: f64) -> Box<dyn ArrivalProcess> {
+        let per_s = |rho: f64| rho * 1e6 / service_us.max(1e-9);
+        match *self {
+            ProcessSpec::Steady { rho } => Box::new(Poisson { rate_per_s: per_s(rho) }),
+            ProcessSpec::DiurnalWave { rho, swing, period_frac } => Box::new(Diurnal {
+                base_per_s: per_s(rho),
+                swing,
+                period_us: period_frac * horizon_us,
+                phase: -std::f64::consts::FRAC_PI_2,
+            }),
+            ProcessSpec::Flash { rho, multiplier, start_frac, ramp_frac, hold_frac } => {
+                Box::new(FlashCrowd {
+                    base_per_s: per_s(rho),
+                    spike_start_us: start_frac * horizon_us,
+                    ramp_us: ramp_frac * horizon_us,
+                    hold_us: hold_frac * horizon_us,
+                    multiplier,
+                })
+            }
+        }
+    }
+}
+
+/// One scenario tenant: who they are, what they run, how they arrive,
+/// and what they were promised.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    /// Tenant name (becomes the fleet VI name).
+    pub name: &'static str,
+    /// Accelerator design the tenant deploys.
+    pub design: &'static str,
+    /// Arrival shape.
+    pub process: ProcessSpec,
+    /// Payload-size law.
+    pub payload: PayloadDist,
+    /// p99 SLO as a multiple of the tenant's probed service time (the
+    /// absolute µs bound is fixed at run start).
+    pub slo_p99_factor: f64,
+    /// Availability floor.
+    pub slo_availability: f64,
+}
+
+/// A runnable scenario: fleet topology + tenant mix + horizon.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (`fpga-mt workload --scenario <name>`).
+    pub name: &'static str,
+    /// One-line description for reports.
+    pub blurb: &'static str,
+    /// Fleet size (devices).
+    pub devices: usize,
+    /// Virtual-time horizon (µs).
+    pub horizon_us: f64,
+    /// Controller window (µs).
+    pub window_us: f64,
+    /// The tenant mix.
+    pub tenants: Vec<TenantSpec>,
+}
+
+fn spec(
+    name: &'static str,
+    design: &'static str,
+    process: ProcessSpec,
+    p99_factor: f64,
+    availability: f64,
+) -> TenantSpec {
+    TenantSpec {
+        name,
+        design,
+        process,
+        payload: PayloadDist::heavy_tailed(),
+        slo_p99_factor: p99_factor,
+        slo_availability: availability,
+    }
+}
+
+impl Scenario {
+    /// Baseline: three well-behaved Poisson tenants, comfortable
+    /// utilization — every mode should attain every SLO here.
+    pub fn steady_state() -> Scenario {
+        Scenario {
+            name: "steady-state",
+            blurb: "three Poisson tenants at comfortable utilization",
+            devices: 2,
+            horizon_us: 1_000_000.0,
+            window_us: 50_000.0,
+            tenants: vec![
+                spec("ss-huffman", "huffman", ProcessSpec::Steady { rho: 0.30 }, 12.0, 0.99),
+                spec("ss-aes", "aes", ProcessSpec::Steady { rho: 0.25 }, 12.0, 0.99),
+                spec("ss-fir", "fir", ProcessSpec::Steady { rho: 0.20 }, 12.0, 0.99),
+            ],
+        }
+    }
+
+    /// Slow day/night swings: demand forecastable many windows ahead —
+    /// grow on the morning ramp, shrink overnight.
+    pub fn diurnal() -> Scenario {
+        Scenario {
+            name: "diurnal",
+            blurb: "sinusoidal day/night demand, two modeled days",
+            devices: 3,
+            horizon_us: 2_000_000.0,
+            window_us: 50_000.0,
+            tenants: vec![
+                spec(
+                    "dn-huffman",
+                    "huffman",
+                    ProcessSpec::DiurnalWave { rho: 0.55, swing: 0.8, period_frac: 0.5 },
+                    14.0,
+                    0.98,
+                ),
+                spec(
+                    "dn-fft",
+                    "fft",
+                    ProcessSpec::DiurnalWave { rho: 0.35, swing: 0.6, period_frac: 0.5 },
+                    14.0,
+                    0.98,
+                ),
+                spec("dn-fir", "fir", ProcessSpec::Steady { rho: 0.20 }, 14.0, 0.99),
+            ],
+        }
+    }
+
+    /// The predictive-vs-reactive showdown: one tenant's demand ramps
+    /// to 6x baseline and holds. Static stays underprovisioned through
+    /// the spike (unbounded queueing — the open-loop signature);
+    /// predictive grows during the ramp, before the tail blows.
+    pub fn flash_crowd() -> Scenario {
+        Scenario {
+            name: "flash-crowd",
+            blurb: "ramped 6x spike on one tenant over a steady background",
+            devices: 3,
+            horizon_us: 2_000_000.0,
+            window_us: 50_000.0,
+            tenants: vec![
+                spec(
+                    "fc-spike",
+                    "huffman",
+                    ProcessSpec::Flash {
+                        rho: 0.30,
+                        multiplier: 6.0,
+                        start_frac: 0.25,
+                        ramp_frac: 0.10,
+                        hold_frac: 0.30,
+                    },
+                    10.0,
+                    0.97,
+                ),
+                spec("fc-aes", "aes", ProcessSpec::Steady { rho: 0.25 }, 12.0, 0.99),
+                spec("fc-fir", "fir", ProcessSpec::Steady { rho: 0.20 }, 12.0, 0.99),
+            ],
+        }
+    }
+
+    /// One tenant dominating the fleet: the grow path saturates
+    /// `max_replicas` and the controller falls back to rebalancing.
+    pub fn hotspot_skew() -> Scenario {
+        Scenario {
+            name: "hotspot-skew",
+            blurb: "one hot tenant takes most of the offered load",
+            devices: 3,
+            horizon_us: 1_500_000.0,
+            window_us: 50_000.0,
+            tenants: vec![
+                spec("hot-fft", "fft", ProcessSpec::Steady { rho: 0.85 }, 14.0, 0.97),
+                spec("cold-fir", "fir", ProcessSpec::Steady { rho: 0.15 }, 12.0, 0.99),
+                spec("cold-aes", "aes", ProcessSpec::Steady { rho: 0.12 }, 12.0, 0.99),
+                spec("cold-canny", "canny", ProcessSpec::Steady { rho: 0.10 }, 12.0, 0.99),
+            ],
+        }
+    }
+
+    /// The full library, in CLI/report order.
+    pub fn library() -> Vec<Scenario> {
+        vec![
+            Scenario::steady_state(),
+            Scenario::diurnal(),
+            Scenario::flash_crowd(),
+            Scenario::hotspot_skew(),
+        ]
+    }
+
+    /// Look a scenario up by its CLI name.
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Scenario::library().into_iter().find(|s| s.name == name)
+    }
+
+    /// Shrink the horizon for CI smoke runs (fractional timings keep
+    /// the scenario's shape; windows shrink with it, floor 10 ms).
+    pub fn smoke(mut self) -> Scenario {
+        self.horizon_us /= 4.0;
+        self.window_us = (self.horizon_us / 40.0).max(10_000.0);
+        self
+    }
+}
+
+/// Everything a scenario run produces.
+pub struct ScenarioOutcome {
+    /// Scenario name.
+    pub scenario: &'static str,
+    /// Controller mode the run used.
+    pub mode: ControlMode,
+    /// Per-tenant SLO scorecards (open-loop latency, sheds counted
+    /// against availability).
+    pub report: SloReport,
+    /// Per-tenant open-loop flow accounting.
+    pub flows: Vec<TenantFlow>,
+    /// The controller's full decision log (virtual time, decision).
+    pub decisions: Vec<(f64, Decision)>,
+    /// Grows that landed / were refused by placement.
+    pub grows_ok: u64,
+    /// Grows the fleet refused (no viable device).
+    pub grows_refused: u64,
+    /// Shrinks that landed.
+    pub shrinks_ok: u64,
+    /// Completed cross-device migrations (rebalance decisions).
+    pub migrations: u64,
+    /// Entry-replica count per tenant at run end.
+    pub final_replicas: Vec<usize>,
+    /// Probed per-tenant service time (µs) — the calibration the
+    /// scenario's utilization units were converted with.
+    pub service_probe_us: Vec<f64>,
+    /// Total arrivals offered across tenants.
+    pub arrivals_total: u64,
+}
+
+/// Count a tenant's routable entry replicas (what the driver models).
+fn entry_replicas(cluster: &FleetCluster, id: TenantId) -> usize {
+    cluster.replicas(id).iter().filter(|r| r.entry).count().max(1)
+}
+
+/// Run `scenario` under `mode` with the given demand seed: boot the
+/// fleet, admit the tenants, probe service times, then serve the
+/// open-loop arrival stream window by window, executing controller
+/// decisions through the fleet lifecycle API between windows.
+pub fn run(scenario: &Scenario, mode: ControlMode, seed: u64) -> Result<ScenarioOutcome> {
+    let cluster = FleetCluster::start(FleetConfig::new(scenario.devices))?;
+    let ids: Vec<TenantId> = scenario
+        .tenants
+        .iter()
+        .map(|t| cluster.admit_tenant(t.name, t.design))
+        .collect::<Result<Vec<_>>>()?;
+    cluster.advance_clocks(50_000.0)?;
+
+    // Calibration probe: a handful of closed-loop requests per tenant
+    // fixes the modeled service time, which converts the scenario's
+    // utilization-unit rates and p99 factors into absolute numbers.
+    let mut transport = FleetTransport::new(&cluster, ids.clone());
+    let mut service_probe_us = Vec::with_capacity(ids.len());
+    for (t, tenant) in scenario.tenants.iter().enumerate() {
+        const PROBES: usize = 16;
+        let mut acc = 0.0;
+        for _ in 0..PROBES {
+            acc += transport.serve(t, tenant.payload.min_bytes.max(128))?;
+        }
+        service_probe_us.push(acc / PROBES as f64);
+    }
+    cluster.advance_clocks(50_000.0)?;
+
+    let targets: Vec<SloTarget> = scenario
+        .tenants
+        .iter()
+        .zip(&service_probe_us)
+        .map(|(t, &svc)| SloTarget {
+            p99_us: t.slo_p99_factor * svc,
+            availability: t.slo_availability,
+        })
+        .collect();
+    let sources: Vec<TenantSource> = scenario
+        .tenants
+        .iter()
+        .zip(&service_probe_us)
+        .map(|(t, &svc)| TenantSource {
+            process: t.process.build(svc, scenario.horizon_us),
+            payload: t.payload,
+        })
+        .collect();
+    let mut stream = ArrivalStream::new(sources, seed);
+    let mut driver = OpenLoop::new(&vec![1; ids.len()]);
+    let cfg = ControllerConfig {
+        window_us: scenario.window_us,
+        max_replicas: scenario.devices,
+        ..ControllerConfig::new(mode)
+    };
+    let mut controller = Controller::new(cfg, targets.clone());
+
+    let (mut grows_ok, mut grows_refused, mut shrinks_ok) = (0u64, 0u64, 0u64);
+    let mut now_us = 0.0;
+    while now_us < scenario.horizon_us {
+        now_us += scenario.window_us;
+        for a in stream.events_until(now_us.min(scenario.horizon_us)) {
+            driver.offer(&a, &mut transport);
+        }
+        cluster.advance_clocks(scenario.window_us)?;
+        let obs = driver.end_window(now_us);
+        for decision in controller.end_window(now_us, &obs) {
+            match decision {
+                Decision::Grow { tenant } => match cluster.grow_tenant(ids[tenant]) {
+                    Ok(_) => {
+                        grows_ok += 1;
+                        driver.set_replicas(tenant, entry_replicas(&cluster, ids[tenant]), now_us);
+                    }
+                    Err(_) => grows_refused += 1,
+                },
+                Decision::Shrink { tenant } => {
+                    if cluster.shrink_tenant(ids[tenant]).is_ok() {
+                        shrinks_ok += 1;
+                        driver.set_replicas(tenant, entry_replicas(&cluster, ids[tenant]), now_us);
+                    }
+                }
+                Decision::Shed { tenant, fraction } => {
+                    driver.set_shed_fraction(tenant, fraction);
+                }
+                Decision::Rebalance { factor } => {
+                    // The migrate hook: one hot/cold rebalance pass when
+                    // the grow path is out of replicas.
+                    let _ = cluster.rebalance(factor);
+                }
+            }
+        }
+    }
+
+    let report = SloReport {
+        tenants: scenario
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, _)| {
+                let flow = &driver.flows[t];
+                score_sketch(
+                    t,
+                    targets[t],
+                    &flow.latency,
+                    flow.served,
+                    flow.refused + flow.shed,
+                )
+            })
+            .collect(),
+    };
+    let final_replicas: Vec<usize> =
+        ids.iter().map(|&id| entry_replicas(&cluster, id)).collect();
+    let migrations = cluster.migrations().unwrap_or(0);
+    let arrivals_total = driver.flows.iter().map(|f| f.arrivals).sum();
+    let decisions = controller.decisions.clone();
+    let flows = driver.flows;
+    let _ = cluster.stop();
+    Ok(ScenarioOutcome {
+        scenario: scenario.name,
+        mode,
+        report,
+        flows,
+        decisions,
+        grows_ok,
+        grows_refused,
+        shrinks_ok,
+        migrations,
+        final_replicas,
+        service_probe_us,
+        arrivals_total,
+    })
+}

@@ -1,0 +1,201 @@
+//! Per-tenant SLO targets and scoring.
+//!
+//! An SLO here is the pair cloud serving actually contracts on: a p99
+//! latency bound (µs of modeled time) and an availability floor (the
+//! fraction of offered requests that must be served). Scoring reads the
+//! sensors the stack already has — a latency [`QuantileSketch`] (the
+//! same structure [`TenantStats`] carries) plus served/refused counts —
+//! and produces a [`TenantSlo`] scorecard with an **error-budget burn
+//! rate**: how fast observed unavailability is consuming the budget the
+//! availability target leaves. Burn 1.0 = spending exactly the budget;
+//! above 1.0 the budget exhausts before the period ends, which is the
+//! signal the [controller](super::controller) sheds load on.
+
+use crate::telemetry::TenantStats;
+use crate::util::QuantileSketch;
+use std::collections::BTreeMap;
+
+/// A tenant's service-level objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// p99 modeled latency bound, µs (open-loop: queueing wait included).
+    pub p99_us: f64,
+    /// Availability floor in `(0, 1]` — served / offered.
+    pub availability: f64,
+}
+
+impl SloTarget {
+    /// The availability error budget: the fraction of offered requests
+    /// the tenant is allowed to lose (`1 - availability`).
+    pub fn error_budget(&self) -> f64 {
+        (1.0 - self.availability).max(0.0)
+    }
+}
+
+/// Burn rate of the availability error budget: observed unavailability
+/// over budgeted unavailability. `1.0` = on budget, `> 1.0` = the
+/// budget exhausts early, `infinity` = losses against a zero budget.
+pub fn burn_rate(observed_availability: f64, target_availability: f64) -> f64 {
+    let burned = (1.0 - observed_availability).max(0.0);
+    let budget = (1.0 - target_availability).max(0.0);
+    if budget <= 0.0 {
+        if burned <= 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        burned / budget
+    }
+}
+
+/// One tenant's SLO scorecard.
+#[derive(Debug, Clone)]
+pub struct TenantSlo {
+    /// Scenario-tenant index (or VI id when scored from a registry).
+    pub tenant: usize,
+    /// The target being scored against.
+    pub target: SloTarget,
+    /// Observed p99 latency, µs.
+    pub observed_p99_us: f64,
+    /// Observed availability: served / (served + refused).
+    pub observed_availability: f64,
+    /// Requests served.
+    pub served: u64,
+    /// Requests offered but not served (refusals + shed load).
+    pub refused: u64,
+    /// Whether the p99 bound held.
+    pub p99_met: bool,
+    /// Whether the availability floor held.
+    pub availability_met: bool,
+    /// Error-budget burn rate (see [`burn_rate`]).
+    pub burn_rate: f64,
+}
+
+impl TenantSlo {
+    /// Both halves of the SLO held.
+    pub fn attained(&self) -> bool {
+        self.p99_met && self.availability_met
+    }
+}
+
+/// Score one tenant from a latency sketch plus offered-traffic counts.
+///
+/// This is the core scorer; the registry and driver paths both funnel
+/// here. A tenant that was offered no traffic scores as attained (there
+/// is nothing to miss) with zero burn.
+pub fn score_sketch(
+    tenant: usize,
+    target: SloTarget,
+    latency: &QuantileSketch,
+    served: u64,
+    refused: u64,
+) -> TenantSlo {
+    let offered = served + refused;
+    let observed_availability =
+        if offered == 0 { 1.0 } else { served as f64 / offered as f64 };
+    let observed_p99_us = if latency.count() == 0 { 0.0 } else { latency.percentile(99.0) };
+    let burn = burn_rate(observed_availability, target.availability);
+    TenantSlo {
+        tenant,
+        target,
+        observed_p99_us,
+        observed_availability,
+        served,
+        refused,
+        p99_met: observed_p99_us <= target.p99_us,
+        availability_met: observed_availability >= target.availability,
+        burn_rate: burn,
+    }
+}
+
+/// Score a per-tenant telemetry registry (the closed-loop sensor path):
+/// each `(vi, target)` is scored against that VI's [`TenantStats`] —
+/// its latency sketch, with rejections and backpressure counting
+/// against availability. VIs missing from the registry score as
+/// unoffered tenants.
+pub fn score_registry(
+    targets: &[(u16, SloTarget)],
+    registry: &BTreeMap<u16, TenantStats>,
+) -> SloReport {
+    let empty = QuantileSketch::new();
+    let tenants = targets
+        .iter()
+        .map(|&(vi, target)| match registry.get(&vi) {
+            Some(stats) => score_sketch(
+                vi as usize,
+                target,
+                &stats.latency,
+                stats.served,
+                stats.rejected + stats.backpressured,
+            ),
+            None => score_sketch(vi as usize, target, &empty, 0, 0),
+        })
+        .collect();
+    SloReport { tenants }
+}
+
+/// Fleet-wide SLO report: every tenant's scorecard.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    /// Per-tenant scorecards, in target order.
+    pub tenants: Vec<TenantSlo>,
+}
+
+impl SloReport {
+    /// Fraction of tenants whose full SLO (p99 and availability) held.
+    pub fn attainment(&self) -> f64 {
+        if self.tenants.is_empty() {
+            return 1.0;
+        }
+        let met = self.tenants.iter().filter(|t| t.attained()).count();
+        met as f64 / self.tenants.len() as f64
+    }
+
+    /// Render the report as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "tenant      p99 obs/target (µs)    avail obs/target      burn   verdict\n",
+        );
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "{:<6} {:>12.1} / {:<9.1} {:>8.4} / {:<8.4} {:>8.2}   {}\n",
+                t.tenant,
+                t.observed_p99_us,
+                t.target.p99_us,
+                t.observed_availability,
+                t.target.availability,
+                t.burn_rate,
+                if t.attained() { "met" } else { "MISSED" },
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burn_rate_edges() {
+        assert_eq!(burn_rate(1.0, 0.999), 0.0);
+        assert!((burn_rate(0.999, 0.999) - 1.0).abs() < 1e-9);
+        assert!(burn_rate(0.99, 0.999) > 9.0);
+        assert_eq!(burn_rate(1.0, 1.0), 0.0);
+        assert!(burn_rate(0.5, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn unoffered_tenant_attains() {
+        let slo = score_sketch(
+            0,
+            SloTarget { p99_us: 100.0, availability: 0.999 },
+            &QuantileSketch::new(),
+            0,
+            0,
+        );
+        assert!(slo.attained());
+        assert_eq!(slo.burn_rate, 0.0);
+    }
+}
